@@ -1,0 +1,36 @@
+//! E1 demo — the §3.1 controller-bottleneck scenario with real bytes:
+//! multimodal rollouts routed through one controller vs sharded across
+//! parallel controllers.  Prints the E1 table plus the paper's 2k-image
+//! extrapolation (1024 samples × 32 images × 2k² → hundreds of GB on a
+//! single controller; per-controller residency shrinks linearly with N).
+//!
+//!     cargo run --release --example multimodal_controllers
+//!     GCORE_E1_FULL=1 cargo run --release --example multimodal_controllers
+
+use gcore::data::payload::PayloadSpec;
+use gcore::experiments;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("GCORE_E1_FULL").is_err();
+
+    let paper = PayloadSpec::paper_2k();
+    println!("paper §3.1 arithmetic check:");
+    println!(
+        "  one sample  = {} images × {}×{} px = {:.2} GB",
+        paper.images_per_sample,
+        paper.width,
+        paper.height,
+        paper.bytes_per_sample() as f64 / 1e9
+    );
+    println!(
+        "  1024-sample rollout = {:.0} GB on ONE controller (the paper's ≥768 GB wall)",
+        paper.rollout_bytes(1024) as f64 / 1e9
+    );
+
+    let t = experiments::e1_controller_scaling(quick);
+    t.print();
+
+    println!("\n(real bytes moved through real threads; scaled image size, \
+              with the @paper-2k column extrapolating per-controller residency)");
+    Ok(())
+}

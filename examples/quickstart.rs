@@ -1,0 +1,83 @@
+//! Quickstart: the smallest end-to-end tour of the G-Core reproduction.
+//!
+//! Loads the `tiny` artifact set (run `make artifacts` first), warm-starts
+//! the policy with a few SFT steps, generates some responses, scores them,
+//! and takes one GRPO step — all through the public API.
+//!
+//!     cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use gcore::config::RunConfig;
+use gcore::coordinator::collective::Collective;
+use gcore::coordinator::controller::Controller;
+use gcore::data::tokenizer;
+use gcore::reward::Rewarder;
+use gcore::runtime::{init_policy, Engine};
+
+fn main() -> anyhow::Result<()> {
+    // 1. load the AOT artifact set (JAX/Pallas → HLO text → PJRT)
+    let engine = Arc::new(Engine::load("tiny")?);
+    let dims = engine.manifest().dims.clone();
+    println!(
+        "loaded '{}': {:.2}M-param byte-transformer, batch={}, seq={}",
+        dims.name,
+        engine.manifest().param_count as f64 / 1e6,
+        dims.batch,
+        dims.max_seq
+    );
+
+    // 2. one controller, ground-truth rewards
+    let cfg = RunConfig {
+        steps: 5,
+        sft_steps: 500,
+        temperature: 0.5,
+        tasks: vec!["copy".into()],
+        ..RunConfig::default()
+    };
+    let policy = init_policy(&engine, cfg.seed as u32)?;
+    let mut controller = Controller::new(
+        0,
+        engine.clone(),
+        Collective::new(1),
+        cfg,
+        policy,
+        Rewarder::ground_truth(),
+    )?;
+
+    // 3. SFT warm-start on task demonstrations
+    print!("SFT warm-start: ");
+    for step in 0..500 {
+        let loss = controller.sft_step()?;
+        if step % 100 == 0 {
+            print!("{loss:.3} ");
+        }
+    }
+    println!();
+    controller.freeze_reference();
+
+    // 4. a rollout: generate + ground-truth reward
+    let batch = controller.collect_rollout()?;
+    println!("\nsample rollouts:");
+    for i in 0..3.min(batch.gen.rows.len()) {
+        let prompt = batch.tasks[i].prompt.clone();
+        let response = tokenizer::extract_response(&batch.gen.rows[i], dims.prompt_len);
+        println!(
+            "  '{prompt}' -> '{response}'  (want '{}', reward {})",
+            batch.tasks[i].answer, batch.rewards[i]
+        );
+    }
+
+    // 5. GRPO steps
+    println!("\nRLHF (GRPO, ground-truth reward):");
+    for step in 0..5 {
+        let s = controller.rlhf_step(step)?;
+        println!(
+            "  step {step}: loss {:+.4}  reward {:.3}  accuracy {:.3}  gen_len {:.1}",
+            s.loss, s.mean_reward, s.accuracy, s.mean_gen_len
+        );
+    }
+
+    println!("\nstage timers:\n{}", controller.timers.report());
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! E10 — the end-to-end validation run (DESIGN.md §4): train a byte-level
+//! transformer policy with the full G-Core stack — SFT warm-start, then
+//! GRPO with ground-truth rewards across parallel controllers — and log
+//! the loss/reward/accuracy curves recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example rlhf_e2e                 # quickstart set
+//!     RLHF_CONFIG=e2e RLHF_STEPS=200 cargo run --release --example rlhf_e2e
+//!
+//! Environment knobs: RLHF_CONFIG (artifact set), RLHF_STEPS, RLHF_SFT,
+//! RLHF_WORLD, RLHF_DAPO=1, RLHF_CKPT_DIR.
+
+use gcore::config::RunConfig;
+use gcore::launch;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = RunConfig {
+        artifacts: std::env::var("RLHF_CONFIG").unwrap_or_else(|_| "tiny".into()),
+        world: env_usize("RLHF_WORLD", 2),
+        steps: env_usize("RLHF_STEPS", 150),
+        sft_steps: env_usize("RLHF_SFT", 260),
+        sft_lr: 1.5e-3,
+        group_size: 4,
+        lr: env_usize("RLHF_LR_E6", 200) as f32 * 1e-6,
+        kl_coef: 0.05,
+        temperature: env_usize("RLHF_TEMP_E2", 50) as f32 / 100.0,
+        top_k: 16,
+        dynamic_sampling: std::env::var("RLHF_DAPO").is_ok(),
+        max_resample_rounds: 3,
+        tasks: std::env::var("RLHF_TASKS")
+            .unwrap_or_else(|_| "copy".into())
+            .split(',')
+            .map(String::from)
+            .collect(),
+        checkpoint_dir: std::env::var("RLHF_CKPT_DIR").ok(),
+        checkpoint_every: 20,
+        ..RunConfig::default()
+    };
+    println!(
+        "[rlhf_e2e] artifacts={} world={} sft={} steps={} dapo={}",
+        cfg.artifacts, cfg.world, cfg.sft_steps, cfg.steps, cfg.dynamic_sampling
+    );
+
+    let t0 = std::time::Instant::now();
+    let report = launch::run_training(&cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n## E10 — end-to-end RLHF training curve\n");
+    println!("SFT loss: first {:.3} → last {:.3} over {} steps",
+        report.sft_losses.first().unwrap_or(&f32::NAN),
+        report.sft_losses.last().unwrap_or(&f32::NAN),
+        report.sft_losses.len());
+    println!("\n| step | loss | kl | entropy | clipfrac | reward | accuracy | gen_len | rounds |");
+    println!("|---|---|---|---|---|---|---|---|---|");
+    let stride = (report.steps.len() / 20).max(1);
+    for s in report.steps.iter().step_by(stride) {
+        println!(
+            "| {} | {:+.4} | {:.4} | {:.3} | {:.3} | {:.3} | {:.3} | {:.1} | {:.1} |",
+            s.step, s.loss, s.kl, s.entropy, s.clipfrac, s.mean_reward, s.accuracy,
+            s.mean_gen_len, s.gen_rounds
+        );
+    }
+    if let Some(last) = report.steps.last() {
+        if stride > 1 {
+            println!(
+                "| {} | {:+.4} | {:.4} | {:.3} | {:.3} | {:.3} | {:.3} | {:.1} | {:.1} |",
+                last.step, last.loss, last.kl, last.entropy, last.clipfrac,
+                last.mean_reward, last.accuracy, last.mean_gen_len, last.gen_rounds
+            );
+        }
+    }
+
+    let first_r = report.steps.first().map(|s| s.mean_reward).unwrap_or(0.0);
+    let last_r = report.steps.last().map(|s| s.mean_reward).unwrap_or(0.0);
+    println!("\ntrain reward: {first_r:.3} → {last_r:.3}");
+    println!(
+        "held-out greedy accuracy: {:.3} (post-SFT) → {:.3} (post-RLHF)",
+        report.eval_before, report.eval_after
+    );
+    println!("total wallclock: {wall:.0}s\n\nstage timers:\n{}", report.timers_markdown);
+
+    if last_r <= first_r {
+        eprintln!("WARNING: reward did not improve — inspect the curve above");
+    }
+    Ok(())
+}

@@ -1,0 +1,271 @@
+"""AOT lowering: JAX entry points → HLO **text** artifacts + JSON manifest.
+
+This is the only bridge between the Python build path and the Rust runtime.
+Each entry point in `model.py` is jitted, lowered to StableHLO, converted to
+an XlaComputation and dumped as HLO *text* — NOT ``.serialize()``: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+The manifest records, for every artifact, the exact flat order / shapes /
+dtypes of HLO parameters and tuple outputs (jax flattens arguments in
+pytree order, which for dicts is sorted-key order — deterministic), plus
+the policy/scalar parameter trees so the Rust side can checkpoint, shard
+and all-reduce parameter and gradient lists without ever reconstructing a
+pytree.
+
+Usage:  python -m compile.aot --config tiny --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .config import ModelConfig, PRESETS, load_config
+from .kernels.attention import (
+    flash_attention,
+    vmem_footprint_bytes,
+    mxu_utilization_estimate,
+    attention_flops,
+)
+
+_DTYPE_NAMES = {
+    jnp.dtype("float32"): "f32",
+    jnp.dtype("int32"): "i32",
+    jnp.dtype("uint32"): "u32",
+    jnp.dtype("bfloat16"): "bf16",
+}
+
+
+def _spec(x) -> dict:
+    return {"shape": list(x.shape), "dtype": _DTYPE_NAMES[jnp.dtype(x.dtype)]}
+
+
+def _flatten_with_names(tree, prefix: str) -> list[tuple[str, object]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = prefix + "".join(
+            f"/{p.key}" if hasattr(p, "key") else f"/{p.idx}" for p in path
+        )
+        out.append((name, leaf))
+    return out
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_entry_points(cfg: ModelConfig) -> dict:
+    """name -> (fn, example_args: tuple of pytrees, arg_names)."""
+    B, S, P, V = cfg.batch, cfg.max_seq, cfg.prompt_len, cfg.vocab
+    L, H, Dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+
+    policy = jax.eval_shape(
+        lambda s: model.init_params(cfg, s, scalar_head=False),
+        _sds((), jnp.uint32),
+    )
+    scalar = jax.eval_shape(
+        lambda s: model.init_params(cfg, s, scalar_head=True),
+        _sds((), jnp.uint32),
+    )
+    cache = _sds((L, B, H, S, Dh))
+    tok_bs = _sds((B, S), jnp.int32)
+    f_bs = _sds((B, S))
+    f0 = _sds(())
+    i_b = _sds((B,), jnp.int32)
+
+    eps = {}
+
+    def ep(name, fn, args, arg_names):
+        eps[name] = (fn, args, arg_names)
+
+    ep("init_policy",
+       lambda seed: model.init_params(cfg, seed, scalar_head=False),
+       (_sds((), jnp.uint32),), ["seed"])
+    ep("init_scalar",
+       lambda seed: model.init_params(cfg, seed, scalar_head=True),
+       (_sds((), jnp.uint32),), ["seed"])
+    ep("fwd_logits",
+       lambda p, t: model.logits_fn(cfg, p, t),
+       (policy, tok_bs), ["params", "tokens"])
+    ep("logprob",
+       lambda p, t: model.logprob_fn(cfg, p, t),
+       (policy, tok_bs), ["params", "tokens"])
+    ep("prefill",
+       lambda p, t: model.prefill(cfg, p, t),
+       (policy, _sds((B, P), jnp.int32)), ["params", "tokens"])
+    ep("decode_step",
+       lambda p, ck, cv, tok, pos: model.decode_step(cfg, p, ck, cv, tok, pos),
+       (policy, cache, cache, i_b, _sds((), jnp.int32)),
+       ["params", "cache_k", "cache_v", "token", "pos"])
+    ep("generate_rollout",
+       lambda p, pr, seed, temp: model.generate_rollout(cfg, p, pr, seed, temp),
+       (policy, _sds((B, P), jnp.int32), _sds((), jnp.uint32), _sds(())),
+       ["params", "prompts", "seed", "temperature"])
+    ep("value_score",
+       lambda p, t: model.values_fn(cfg, p, t),
+       (scalar, tok_bs), ["params", "tokens"])
+    ep("reward_score",
+       lambda p, t, i: model.reward_score(cfg, p, t, i),
+       (scalar, tok_bs, i_b), ["params", "tokens", "last_idx"])
+    ep("policy_grad",
+       lambda p, t, m, a, ol, rl, ce, kc, ec: model.policy_grad(
+           cfg, p, t, m, a, ol, rl, ce, kc, ec),
+       (policy, tok_bs, f_bs, f_bs, f_bs, f_bs, f0, f0, f0),
+       ["params", "tokens", "mask", "adv", "old_logp", "ref_logp",
+        "clip_eps", "kl_coef", "ent_coef"])
+    ep("sft_grad",
+       lambda p, t, m: model.sft_grad(cfg, p, t, m),
+       (policy, tok_bs, f_bs), ["params", "tokens", "mask"])
+    ep("critic_grad",
+       lambda p, t, m, r: model.critic_grad(cfg, p, t, m, r),
+       (scalar, tok_bs, f_bs, f_bs), ["params", "tokens", "mask", "returns"])
+    ep("bt_grad",
+       lambda p, c, r, ci, ri: model.bt_grad(cfg, p, c, r, ci, ri),
+       (scalar, tok_bs, tok_bs, i_b, i_b),
+       ["params", "chosen", "rejected", "chosen_idx", "rejected_idx"])
+    ep("adam_policy",
+       lambda p, m, v, g, st, lr: model.adam_apply(cfg, p, m, v, g, st, lr),
+       (policy, policy, policy, policy, f0, f0),
+       ["params", "m", "v", "grads", "step", "lr"])
+    ep("adam_scalar",
+       lambda p, m, v, g, st, lr: model.adam_apply(cfg, p, m, v, g, st, lr),
+       (scalar, scalar, scalar, scalar, f0, f0),
+       ["params", "m", "v", "grads", "step", "lr"])
+    ep("train_step",
+       lambda p, m, v, t, mk, a, ol, rl, st, lr, ce, kc, ec: model.train_step(
+           cfg, p, m, v, t, mk, a, ol, rl, st, lr, ce, kc, ec),
+       (policy, policy, policy, tok_bs, f_bs, f_bs, f_bs, f_bs,
+        f0, f0, f0, f0, f0),
+       ["params", "m", "v", "tokens", "mask", "adv", "old_logp", "ref_logp",
+        "step", "lr", "clip_eps", "kl_coef", "ent_coef"])
+    ep("attn_micro",
+       lambda q, k, v: flash_attention(
+           q, k, v, causal=True, block_q=cfg.block_q, block_k=cfg.block_k),
+       (_sds((B, H, S, Dh)), _sds((B, H, S, Dh)), _sds((B, H, S, Dh))),
+       ["q", "k", "v"])
+    return eps
+
+
+def lower_all(cfg: ModelConfig, out_dir: str, *, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    eps = build_entry_points(cfg)
+    artifacts = {}
+    for name, (fn, args, arg_names) in eps.items():
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        # flat input/output specs in HLO parameter order
+        inputs = []
+        for arg_name, arg in zip(arg_names, args):
+            for leaf_name, leaf in _flatten_with_names(arg, arg_name):
+                inputs.append({"name": leaf_name, **_spec(leaf)})
+        out_shape = jax.eval_shape(fn, *args)
+        outputs = [
+            {"name": n, **_spec(leaf)}
+            for n, leaf in _flatten_with_names(out_shape, "out")
+        ]
+        artifacts[name] = {
+            "file": fname,
+            "inputs": inputs,
+            "outputs": outputs,
+            "hlo_sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "hlo_bytes": len(text),
+        }
+        if verbose:
+            print(
+                f"  {name:<14} {len(inputs):>4} in / {len(outputs):>3} out "
+                f"{len(text) / 1e6:6.2f} MB HLO  ({time.time() - t0:.1f}s)"
+            )
+    return artifacts
+
+
+def build_manifest(cfg: ModelConfig, artifacts: dict) -> dict:
+    policy = jax.eval_shape(
+        lambda s: model.init_params(cfg, s, scalar_head=False),
+        _sds((), jnp.uint32),
+    )
+    scalar = jax.eval_shape(
+        lambda s: model.init_params(cfg, s, scalar_head=True),
+        _sds((), jnp.uint32),
+    )
+    policy_tree = [
+        {"path": n, **_spec(leaf)} for n, leaf in _flatten_with_names(policy, "p")
+    ]
+    scalar_tree = [
+        {"path": n, **_spec(leaf)} for n, leaf in _flatten_with_names(scalar, "p")
+    ]
+    S, Dh = cfg.max_seq, cfg.d_head
+    return {
+        "format_version": 1,
+        "config": cfg.to_json(),
+        "param_count": cfg.param_count(),
+        "scalar_param_count": cfg.scalar_param_count(),
+        "policy_tree": policy_tree,
+        "scalar_tree": scalar_tree,
+        "artifacts": artifacts,
+        "perf_estimates": {
+            "attn_vmem_bytes_per_grid_step": vmem_footprint_bytes(
+                cfg.block_q, cfg.block_k, Dh
+            ),
+            "attn_mxu_utilization": mxu_utilization_estimate(
+                S, Dh, cfg.block_q, cfg.block_k, causal=True
+            ),
+            "attn_flops_causal": attention_flops(
+                cfg.batch, cfg.n_heads, S, Dh, causal=True
+            ),
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default="tiny",
+                    help=f"preset ({', '.join(PRESETS)}) or JSON path")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower attention through the jnp path instead of "
+                         "the Pallas kernel (faster CPU execution; same math)")
+    args = ap.parse_args()
+
+    cfg = load_config(args.config)
+    if args.no_pallas:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, use_pallas=False)
+    out_dir = os.path.join(args.out_dir, cfg.name)
+    print(f"[aot] lowering config '{cfg.name}' "
+          f"({cfg.param_count() / 1e6:.2f}M params, pallas={cfg.use_pallas}) "
+          f"-> {out_dir}")
+    t0 = time.time()
+    artifacts = lower_all(cfg, out_dir)
+    manifest = build_manifest(cfg, artifacts)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(artifacts)} artifacts + manifest in "
+          f"{time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Model / artifact-set configuration for the G-Core reproduction.
+
+A ``ModelConfig`` fully determines the shapes of every AOT artifact emitted
+by ``aot.py``: the transformer dimensions, the rollout batch size, the
+maximum sequence length, and whether the attention hot-spot is lowered
+through the Pallas kernel (L1) or the pure-jnp reference path (same math,
+verified equal by the pytest suite).
+
+The Rust coordinator (L3) never sees this file — it reads the JSON manifest
+emitted next to the HLO artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Shape/config record for one artifact set."""
+
+    name: str = "tiny"
+    # -- transformer dims --------------------------------------------------
+    vocab: int = 256          # byte-level vocabulary
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    d_ff: int = 256
+    max_seq: int = 64         # S: full sequence length (prompt + response)
+    prompt_len: int = 16      # P: fixed prompt length (left-padded by L3)
+    # -- batch shape baked into artifacts ----------------------------------
+    batch: int = 4            # B: rollout / train micro-batch
+    # -- kernel selection ---------------------------------------------------
+    use_pallas: bool = True   # lower attention through the L1 Pallas kernel
+    block_q: int = 32         # Pallas q-tile
+    block_k: int = 32         # Pallas kv-tile
+    # -- optimiser constants baked into adam_apply --------------------------
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    adam_eps: float = 1.0e-8
+    weight_decay: float = 0.0
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def gen_len(self) -> int:
+        """Maximum number of generated tokens."""
+        return self.max_seq - self.prompt_len
+
+    def param_count(self) -> int:
+        """Exact parameter count of the policy (LM-head) model."""
+        d, v, s, f, l = self.d_model, self.vocab, self.max_seq, self.d_ff, self.n_layers
+        per_block = (
+            2 * d          # ln1 g,b
+            + 4 * d * d    # wq wk wv wo
+            + 2 * d        # ln2 g,b
+            + d * f + f    # w1 b1
+            + f * d + d    # w2 b2
+        )
+        return v * d + s * d + l * per_block + 2 * d + d * v
+
+    def scalar_param_count(self) -> int:
+        """Parameter count of the scalar-head (critic / BT-reward) model."""
+        d, v = self.d_model, self.vocab
+        return self.param_count() - d * v + d
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "ModelConfig":
+        fields = {f.name for f in dataclasses.fields(ModelConfig)}
+        return ModelConfig(**{k: v for k, v in d.items() if k in fields})
+
+
+# ---------------------------------------------------------------------------
+# Presets. `tiny` is the pytest / cargo-test set; `quickstart` the example
+# set; `e2e` the end-to-end training run (EXPERIMENTS.md §E10); `e2e100m`
+# is the paper-scale config documented but not built by default (CPU cost).
+# ---------------------------------------------------------------------------
+PRESETS: dict[str, ModelConfig] = {
+    "tiny": ModelConfig(
+        name="tiny", d_model=64, n_layers=2, n_heads=2, d_ff=256,
+        max_seq=64, prompt_len=16, batch=4, block_q=16, block_k=16,
+    ),
+    "quickstart": ModelConfig(
+        name="quickstart", d_model=128, n_layers=4, n_heads=4, d_ff=512,
+        max_seq=96, prompt_len=24, batch=8, block_q=16, block_k=16,
+    ),
+    "e2e": ModelConfig(
+        name="e2e", d_model=256, n_layers=6, n_heads=8, d_ff=1024,
+        max_seq=128, prompt_len=32, batch=16, block_q=32, block_k=32,
+    ),
+    "e2e100m": ModelConfig(
+        name="e2e100m", d_model=768, n_layers=12, n_heads=12, d_ff=3072,
+        max_seq=256, prompt_len=64, batch=8, block_q=64, block_k=64,
+    ),
+}
+
+
+def load_config(name_or_path: str) -> ModelConfig:
+    """Load a preset by name, or a JSON config file by path."""
+    if name_or_path in PRESETS:
+        return PRESETS[name_or_path]
+    with open(name_or_path) as f:
+        return ModelConfig.from_json(json.load(f))

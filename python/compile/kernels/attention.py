@@ -1,0 +1,268 @@
+"""L1 — Pallas head-chunked blocked flash attention.
+
+This is the single-chip, TPU-style re-think of G-Core's distributed
+attention (paper §4.5).  The paper all-gathers K/V across context-parallel
+ranks and processes **a subset of attention heads at a time**, overlapping
+KV communication with attention compute, to make 1M-token contexts
+trainable.  On the Pallas/TPU model that becomes:
+
+* the "subset of heads at a time" is a **grid axis over heads** — each grid
+  step's working set is one head's (q-tile, kv-tile), so the VMEM footprint
+  is independent of both the head count and the sequence length;
+* the "all-gathered KV streamed per head" becomes **HBM-resident K/V with
+  BlockSpec-scheduled VMEM tiles** — the HBM→VMEM schedule replaces the
+  paper's NIC→HBM schedule;
+* the "overlap comm with compute" becomes the classic **online-softmax
+  accumulation** across kv-tiles (running max / denominator in VMEM
+  scratch), which is exactly the structure Mosaic double-buffers.
+
+Causal masking is applied block-wise; kv-tiles strictly above the diagonal
+skip their matmuls entirely (``pl.when``), halving the causal FLOPs.
+
+The kernel MUST be lowered with ``interpret=True`` here: the CPU PJRT
+plugin cannot execute Mosaic custom-calls.  Numerics are validated against
+``ref.attention_ref`` by ``python/tests/test_kernel.py`` (hypothesis sweep
+over shapes/dtypes); TPU performance is *estimated* from the VMEM/MXU
+arithmetic in ``vmem_footprint_bytes`` / ``mxu_utilization_estimate``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 32
+DEFAULT_BLOCK_K = 32
+
+NEG_INF = -1.0e30  # finite -inf stand-in: keeps bf16/f32 masking NaN-free
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, block_q: int, block_k: int,
+):
+    """One (batch, head, q-tile, kv-tile) grid step of online-softmax."""
+    iq = pl.program_id(2)
+    ikv = pl.program_id(3)
+    nkv = pl.num_programs(3)
+
+    @pl.when(ikv == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = ikv * block_k
+
+    # Causal block-level skip: if every kv position in this tile is strictly
+    # in the future of every q position, the tile contributes nothing.
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [block_q, block_k]
+        if causal:
+            # element-level mask for tiles straddling the diagonal
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    if causal:
+        # tile is live iff its first kv position <= last q position
+        pl.when(k_start <= q_start + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ikv == nkv - 1)
+    def _finalize():
+        # masked-out rows (fully-masked q rows cannot occur under causal
+        # self-attention, but guard the denominator anyway)
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def _pick_block(seq: int, requested: int) -> int:
+    """Largest divisor of `seq` that is <= requested (tiles must tile S)."""
+    b = min(requested, seq)
+    while seq % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "scale")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    scale: float | None = None,
+) -> jax.Array:
+    """Blocked flash attention over ``[B, H, S, D]`` tensors.
+
+    Grid = (B, H, S/block_q, S/block_k); one head-tile pair resident in
+    VMEM per step (the G-Core head-chunking discipline).
+    """
+    B, H, S, D = q.shape
+    assert k.shape == (B, H, S, D) and v.shape == (B, H, S, D)
+    bq = _pick_block(S, block_q)
+    bk = _pick_block(S, block_k)
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=bq, block_k=bk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, S // bq, S // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),   # output accumulator
+            pltpu.VMEM((bq,), jnp.float32),     # running max
+            pltpu.VMEM((bq,), jnp.float32),     # running denominator
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Autodiff: the Pallas kernel owns the forward hot path; the backward pass
+# recomputes through the jnp reference (identical math — asserted by tests)
+# and takes its VJP.  This is the standard "flash forward, recompute
+# backward" memory/compute trade; a dedicated Pallas backward kernel is a
+# listed extension in DESIGN.md.
+# ---------------------------------------------------------------------------
+
+_VJP_CACHE: dict = {}
+
+
+def flash_attention_diff(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+):
+    """Differentiable flash attention (Pallas fwd, recompute-ref bwd)."""
+    key = (causal, block_q, block_k)
+    if key not in _VJP_CACHE:
+        from . import ref as _ref  # local import: avoid cycle at module load
+
+        @jax.custom_vjp
+        def f(q, k, v):
+            return flash_attention(
+                q, k, v, causal=causal, block_q=block_q, block_k=block_k
+            )
+
+        def fwd(q, k, v):
+            return f(q, k, v), (q, k, v)
+
+        def bwd(res, g):
+            q, k, v = res
+            _, vjp = jax.vjp(
+                lambda q, k, v: _ref.attention_ref(q, k, v, causal=causal),
+                q, k, v,
+            )
+            return vjp(g)
+
+        f.defvjp(fwd, bwd)
+        _VJP_CACHE[key] = f
+    return _VJP_CACHE[key](q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# TPU perf estimation (DESIGN.md §8).  interpret=True wallclock is NOT a TPU
+# proxy; these closed-form estimates are what EXPERIMENTS.md §Perf reports.
+# ---------------------------------------------------------------------------
+
+def vmem_footprint_bytes(
+    block_q: int, block_k: int, d_head: int, dtype_bytes: int = 4
+) -> int:
+    """Resident VMEM bytes for one grid step (tiles + scratch).
+
+    q tile + k tile + v tile + o tile (dtype) and f32 scratch
+    (acc[bq,D] + m[bq] + l[bq]); Mosaic double-buffers the input tiles,
+    so count those twice.
+    """
+    tiles = (block_q * d_head) + 2 * (block_k * d_head) + (block_q * d_head)
+    double_buffered = tiles * 2 * dtype_bytes
+    scratch = (block_q * d_head + 2 * block_q) * 4
+    return double_buffered + scratch
+
+
+def attention_flops(batch: int, heads: int, seq: int, d_head: int, causal: bool) -> int:
+    """Useful FLOPs of the attention (2 matmuls, halved if causal)."""
+    full = 2 * 2 * batch * heads * seq * seq * d_head
+    return full // 2 if causal else full
+
+
+def mxu_utilization_estimate(
+    seq: int, d_head: int, block_q: int, block_k: int, causal: bool = True,
+    mxu_tile: int = 128,
+) -> float:
+    """Fraction of issued MXU tile-FLOPs that are useful.
+
+    Tiles are padded up to the 128x128 systolic array in each matmul dim;
+    causal block-skipping removes strictly-above-diagonal tiles.
+    """
+    nq, nk = seq // block_q, seq // block_k
+
+    def pad(x: int) -> int:
+        return mxu_tile * math.ceil(x / mxu_tile)
+
+    # per (q,k) tile pair: s = q@k^T  and  acc += p@v
+    issued_pair = pad(block_q) * pad(block_k) * pad(d_head) + pad(block_q) * pad(
+        d_head
+    ) * pad(block_k)
+    useful_pair = block_q * block_k * d_head * 2
+    if causal:
+        live = sum(
+            1
+            for iq in range(nq)
+            for ik in range(nk)
+            if ik * block_k <= iq * block_q + block_q - 1
+        )
+        # within live diagonal tiles roughly half the elements are masked
+        diag = sum(
+            1
+            for iq in range(nq)
+            for ik in range(nk)
+            if ik * block_k <= iq * block_q + block_q - 1
+            and ik * block_k + block_k - 1 > iq * block_q
+        )
+        useful = useful_pair * (live - diag) + useful_pair * diag * 0.5
+        issued = issued_pair * live
+    else:
+        useful = useful_pair * nq * nk
+        issued = issued_pair * nq * nk
+    return useful / issued

@@ -1,0 +1,165 @@
+"""Pure-jnp oracles for the L1 kernel and the L2 losses.
+
+Everything the Pallas kernel and the fused train-step artifacts compute is
+re-derived here with plain jax.numpy (no pallas, no custom control flow) so
+the pytest suite can assert bit-level agreement-within-tolerance.  These
+oracles are the CORE correctness signal of the Python side.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """Naive softmax attention over [B, H, S, D]."""
+    B, H, S, D = q.shape
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+        s = jnp.where(mask, s, -1.0e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def token_logprob_ref(logits: jax.Array, tokens: jax.Array) -> jax.Array:
+    """logp[:, t] = log p(tokens[t] | tokens[<t]);  logp[:, 0] = 0.
+
+    logits[b, t] are the model's next-token logits AFTER consuming
+    tokens[b, :t+1]; so tokens[b, t] is scored by logits[b, t-1].
+    """
+    logp_all = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    # score tokens[:, 1:] with logits[:, :-1]
+    scored = jnp.take_along_axis(
+        logp_all[:, :-1, :], tokens[:, 1:, None], axis=-1
+    )[..., 0]
+    zeros = jnp.zeros_like(scored[:, :1])
+    return jnp.concatenate([zeros, scored], axis=1)
+
+
+def entropy_ref(logits: jax.Array) -> jax.Array:
+    """Per-position categorical entropy, [B, S]."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -(jnp.exp(logp) * logp).sum(-1)
+
+
+def masked_mean(x: jax.Array, mask: jax.Array) -> jax.Array:
+    m = mask.astype(jnp.float32)
+    return (x * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def kl_k3_ref(logp: jax.Array, ref_logp: jax.Array) -> jax.Array:
+    """Schulman k3 KL estimator (the GRPO/DAPO standard), per token."""
+    log_ratio = ref_logp - logp
+    return jnp.exp(log_ratio) - log_ratio - 1.0
+
+
+def ppo_loss_ref(
+    logp: jax.Array,
+    old_logp: jax.Array,
+    ref_logp: jax.Array,
+    adv: jax.Array,
+    mask: jax.Array,
+    entropy: jax.Array,
+    *,
+    clip_eps: float,
+    kl_coef: float,
+    ent_coef: float,
+) -> tuple[jax.Array, dict]:
+    """Token-level PPO-clip with k3 KL penalty and entropy bonus.
+
+    `adv` is per-token [B, S] (GAE for PPO; broadcast sequence advantage
+    for GRPO).  Returns (scalar loss, aux dict).
+    """
+    ratio = jnp.exp(logp - old_logp)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    pg = -jnp.minimum(unclipped, clipped)
+    kl = kl_k3_ref(logp, ref_logp)
+    loss = (
+        masked_mean(pg, mask)
+        + kl_coef * masked_mean(kl, mask)
+        - ent_coef * masked_mean(entropy, mask)
+    )
+    clipfrac = masked_mean((jnp.abs(ratio - 1.0) > clip_eps).astype(jnp.float32), mask)
+    aux = {
+        "pg_loss": masked_mean(pg, mask),
+        "kl": masked_mean(kl, mask),
+        "entropy": masked_mean(entropy, mask),
+        "clipfrac": clipfrac,
+    }
+    return loss, aux
+
+
+def grpo_advantage_ref(rewards: jax.Array, group_size: int) -> jax.Array:
+    """Group-relative advantages: (r - mean_group) / (std_group + eps).
+
+    rewards: [B] where B = n_groups * group_size, groups contiguous.
+    This oracle mirrors `coordinator/sampling.rs::grpo_advantages` on the
+    Rust side (checked numerically by the integration test fixtures).
+    """
+    g = rewards.reshape(-1, group_size)
+    mean = g.mean(axis=1, keepdims=True)
+    std = g.std(axis=1, keepdims=True)
+    return ((g - mean) / (std + 1e-6)).reshape(-1)
+
+
+def sft_loss_ref(logits: jax.Array, tokens: jax.Array, mask: jax.Array) -> jax.Array:
+    """Masked next-token cross-entropy."""
+    logp = token_logprob_ref(logits, tokens)
+    return -masked_mean(logp, mask)
+
+
+def bt_loss_ref(score_chosen: jax.Array, score_rejected: jax.Array) -> jax.Array:
+    """Bradley-Terry pairwise loss: -log sigmoid(s_c - s_r), mean."""
+    return -jax.nn.log_sigmoid(score_chosen - score_rejected).mean()
+
+
+def gae_ref(
+    rewards: jax.Array, values: jax.Array, mask: jax.Array,
+    *, gamma: float, lam: float,
+) -> tuple[jax.Array, jax.Array]:
+    """Generalised advantage estimation over [B, S] token sequences.
+
+    `rewards[b, t]` is the per-token reward (terminal reward placed on the
+    last unmasked token by the caller); `values[b, t]` the critic value.
+    Mirrors `coordinator/sampling.rs::gae` on the Rust side.
+    Returns (advantages, returns) both [B, S].
+    """
+    B, S = rewards.shape
+    m = mask.astype(jnp.float32)
+
+    def step(carry, xs):
+        next_adv, next_value = carry
+        r, v, mk = xs
+        delta = r + gamma * next_value * mk - v
+        adv = delta + gamma * lam * next_adv * mk
+        return (adv, v), adv
+
+    xs = (rewards[:, ::-1].T, values[:, ::-1].T, m[:, ::-1].T)
+    (_, _), advs = jax.lax.scan(
+        step, (jnp.zeros(B), jnp.zeros(B)), xs
+    )
+    adv = advs.T[:, ::-1]
+    returns = adv + values
+    return adv * m, returns * m
+
+
+def adam_update_ref(p, m, v, g, step, lr, b1, b2, eps, wd=0.0):
+    """Single-tensor AdamW reference (bias-corrected)."""
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mhat = m / (1 - b1**step)
+    vhat = v / (1 - b2**step)
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    return p, m, v

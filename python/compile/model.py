@@ -1,0 +1,372 @@
+"""L2 — the G-Core model zoo as pure JAX, built once at AOT time.
+
+Implements every network the RLHF workflow needs (paper §2.2): the actor
+(policy LM), the reference policy (same artifact, frozen params held by the
+Rust side), the critic (scalar-head value model), the Bradley-Terry reward
+model (scalar head) and the generative verifier (policy-shaped LM used as a
+reward model via generation + regex matching, paper §3.2).
+
+Everything is expressed as pure functions over explicit parameter pytrees so
+``aot.py`` can lower each entry point to a standalone HLO module.  The Rust
+coordinator never imports Python — it loads the HLO text artifacts and the
+JSON manifest and marshals flat parameter lists.
+
+Structure notes (the L2 perf targets from DESIGN.md §8):
+
+* blocks are **stacked** (`[L, ...]` leading axis) and traversed with
+  ``lax.scan`` so the lowered HLO stays O(1) in depth;
+* the attention hot-spot routes through the L1 Pallas kernel
+  (``kernels.attention.flash_attention``) when ``cfg.use_pallas`` — the
+  pure-jnp path (``kernels.ref.attention_ref``) computes identical math and
+  the pytest suite asserts they agree;
+* the fused ``train_step`` (grad + AdamW in one module) exists for the
+  single-controller fast path; multi-controller runs use ``policy_grad`` +
+  Rust-side gradient all-reduce + ``adam_apply``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels.attention import flash_attention_diff
+from .kernels import ref
+
+Params = dict[str, Any]
+
+
+# ===========================================================================
+# Initialisation
+# ===========================================================================
+
+def init_params(cfg: ModelConfig, seed: jax.Array, *, scalar_head: bool) -> Params:
+    """GPT-2-style init: N(0, 0.02), residual projections scaled by depth."""
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    d, f, l, v, s = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab, cfg.max_seq
+    ks = jax.random.split(key, 10)
+    std = 0.02
+    res_std = std / jnp.sqrt(2.0 * l)
+
+    def n(k, shape, sd=std):
+        return (jax.random.normal(k, shape) * sd).astype(jnp.float32)
+
+    head_dim = 1 if scalar_head else v
+    return {
+        "tok_emb": n(ks[0], (v, d)),
+        "pos_emb": n(ks[1], (s, d), 0.01),
+        "blk": {
+            "ln1_g": jnp.ones((l, d)),
+            "ln1_b": jnp.zeros((l, d)),
+            "wq": n(ks[2], (l, d, d)),
+            "wk": n(ks[3], (l, d, d)),
+            "wv": n(ks[4], (l, d, d)),
+            "wo": n(ks[5], (l, d, d), res_std),
+            "ln2_g": jnp.ones((l, d)),
+            "ln2_b": jnp.zeros((l, d)),
+            "w1": n(ks[6], (l, d, f)),
+            "b1": jnp.zeros((l, f)),
+            "w2": n(ks[7], (l, f, d), res_std),
+            "b2": jnp.zeros((l, d)),
+        },
+        "lnf_g": jnp.ones((d,)),
+        "lnf_b": jnp.zeros((d,)),
+        "head": n(ks[8], (d, head_dim)),
+    }
+
+
+def zeros_like_params(params: Params) -> Params:
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+# ===========================================================================
+# Transformer forward
+# ===========================================================================
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _split_heads(x, n_heads):  # [B,S,D] -> [B,H,S,Dh]
+    B, S, D = x.shape
+    return x.reshape(B, S, n_heads, D // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):  # [B,H,S,Dh] -> [B,S,D]
+    B, H, S, Dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, S, H * Dh)
+
+
+def _block(cfg: ModelConfig, h: jax.Array, p: Params) -> jax.Array:
+    """One pre-LN transformer block over [B, S, D] (full causal)."""
+    x = _layernorm(h, p["ln1_g"], p["ln1_b"])
+    q = _split_heads(x @ p["wq"], cfg.n_heads)
+    k = _split_heads(x @ p["wk"], cfg.n_heads)
+    v = _split_heads(x @ p["wv"], cfg.n_heads)
+    if cfg.use_pallas:
+        attn = flash_attention_diff(
+            q, k, v, causal=True, block_q=cfg.block_q, block_k=cfg.block_k
+        )
+    else:
+        attn = ref.attention_ref(q, k, v, causal=True)
+    h = h + _merge_heads(attn) @ p["wo"]
+    x = _layernorm(h, p["ln2_g"], p["ln2_b"])
+    x = jax.nn.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+    return h + x
+
+
+def trunk(cfg: ModelConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    """Embed + L blocks + final LN.  tokens [B, S] -> hidden [B, S, D]."""
+    B, S = tokens.shape
+    h = params["tok_emb"][tokens] + params["pos_emb"][:S][None]
+
+    def body(h, blk_p):
+        return _block(cfg, h, blk_p), None
+
+    h, _ = jax.lax.scan(body, h, params["blk"])
+    return _layernorm(h, params["lnf_g"], params["lnf_b"])
+
+
+def logits_fn(cfg: ModelConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    return trunk(cfg, params, tokens) @ params["head"]
+
+
+def values_fn(cfg: ModelConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    """Scalar-head model: per-token value/score [B, S]."""
+    return (trunk(cfg, params, tokens) @ params["head"])[..., 0]
+
+
+# ===========================================================================
+# KV-cached generation (prefill + decode_step)
+# ===========================================================================
+# The generation engine the L3 coordinator schedules.  Cache layout:
+#   cache_k, cache_v: [L, B, H, Smax, Dh]
+# Cached attention runs on the jnp path (rectangular, position-masked);
+# the Pallas kernel owns the square causal training forward.
+
+def _cached_block(cfg, h, blk_p, ck, cv, start_pos):
+    """Block forward for T new tokens at positions [start, start+T).
+
+    h: [B, T, D]; ck/cv: [B, H, Smax, Dh] (this layer's cache).
+    Returns (h', ck', cv').
+    """
+    B, T, D = h.shape
+    Smax = ck.shape[2]
+    x = _layernorm(h, blk_p["ln1_g"], blk_p["ln1_b"])
+    q = _split_heads(x @ blk_p["wq"], cfg.n_heads)   # [B,H,T,Dh]
+    k = _split_heads(x @ blk_p["wk"], cfg.n_heads)
+    v = _split_heads(x @ blk_p["wv"], cfg.n_heads)
+    ck = jax.lax.dynamic_update_slice(ck, k, (0, 0, start_pos, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v, (0, 0, start_pos, 0))
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.d_head))
+    s = jnp.einsum("bhtd,bhkd->bhtk", q, ck) * scale  # [B,H,T,Smax]
+    kpos = jnp.arange(Smax)[None, None, None, :]
+    qpos = (start_pos + jnp.arange(T))[None, None, :, None]
+    s = jnp.where(kpos <= qpos, s, -1.0e30)
+    attn = jax.nn.softmax(s, axis=-1) @ cv            # [B,H,T,Dh]
+    h = h + _merge_heads(attn) @ blk_p["wo"]
+    x = _layernorm(h, blk_p["ln2_g"], blk_p["ln2_b"])
+    x = jax.nn.gelu(x @ blk_p["w1"] + blk_p["b1"]) @ blk_p["w2"] + blk_p["b2"]
+    return h + x, ck, cv
+
+
+def forward_cached(cfg, params, tokens, cache_k, cache_v, start_pos):
+    """tokens [B,T] at positions [start, start+T) -> (last logits, caches)."""
+    B, T = tokens.shape
+    pos_emb = jax.lax.dynamic_slice(
+        params["pos_emb"], (start_pos, 0), (T, cfg.d_model)
+    )
+    h = params["tok_emb"][tokens] + pos_emb[None]
+
+    def body(h, xs):
+        blk_p, ck, cv = xs
+        h, ck, cv = _cached_block(cfg, h, blk_p, ck, cv, start_pos)
+        return h, (ck, cv)
+
+    h, (cache_k, cache_v) = jax.lax.scan(
+        body, h, (params["blk"], cache_k, cache_v)
+    )
+    h = _layernorm(h[:, -1], params["lnf_g"], params["lnf_b"])
+    return h @ params["head"], cache_k, cache_v
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array):
+    """Consume the [B, P] prompt; return (last logits [B,V], caches)."""
+    B = tokens.shape[0]
+    shape = (cfg.n_layers, B, cfg.n_heads, cfg.max_seq, cfg.d_head)
+    ck = jnp.zeros(shape, jnp.float32)
+    cv = jnp.zeros(shape, jnp.float32)
+    return forward_cached(cfg, params, tokens, ck, cv, 0)
+
+
+def decode_step(cfg, params, cache_k, cache_v, token, pos):
+    """One autoregressive step: token [B] at scalar position `pos`."""
+    return forward_cached(cfg, params, token[:, None], cache_k, cache_v, pos)
+
+
+def generate_rollout(cfg: ModelConfig, params: Params, prompts: jax.Array,
+                     seed: jax.Array, temperature: jax.Array) -> jax.Array:
+    """Whole-rollout generation fused into ONE module: prefill + scan over
+    decode steps with in-graph top-k temperature sampling.
+
+    This is the generation-engine hot path (§Perf, EXPERIMENTS.md): the
+    per-token artifact (`decode_step`) costs a host↔device round-trip of
+    the full KV cache per token; here the cache never leaves the device.
+    The L3 coordinator passes sampling params (seed, temperature) like a
+    client calling vLLM; top-k is baked from the config.
+
+    prompts: [B, P] int32; returns rows [B, S] (prompt + generated; PAD
+    after each row's EOS, matching the Rust sampler's contract).
+    """
+    B = prompts.shape[0]
+    P, S, V = cfg.prompt_len, cfg.max_seq, cfg.vocab
+    EOS, PAD = 10, 0
+    top_k = 16  # matches SamplerConfig::default on the Rust side
+
+    logits, ck, cv = forward_cached(
+        cfg, params,
+        prompts,
+        jnp.zeros((cfg.n_layers, B, cfg.n_heads, S, cfg.d_head), jnp.float32),
+        jnp.zeros((cfg.n_layers, B, cfg.n_heads, S, cfg.d_head), jnp.float32),
+        0,
+    )
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    temp = jnp.maximum(temperature, 1e-4)
+
+    def sample(logits, key):
+        # top-k mask then temperature categorical.  NB: use sort, not
+        # lax.top_k — the xla_extension 0.5.1 HLO-text parser rejects the
+        # TopK op's `largest` attribute.
+        kth = jnp.sort(logits, axis=-1)[:, V - top_k][:, None]
+        masked = jnp.where(logits >= kth, logits, -1e30)
+        return jax.random.categorical(key, masked / temp, axis=-1)
+
+    def step(carry, xs):
+        logits, ck, cv, done = carry
+        pos, key = xs
+        tok = sample(logits, key)
+        tok = jnp.where(done, PAD, tok).astype(jnp.int32)
+        done = done | (tok == EOS)
+        logits, ck, cv = forward_cached(cfg, params, tok[:, None], ck, cv, pos)
+        return (logits, ck, cv, done), tok
+
+    positions = jnp.arange(P, S)
+    keys = jax.random.split(key, S - P)
+    (_, _, _, _), toks = jax.lax.scan(
+        step, (logits, ck, cv, jnp.zeros(B, bool)), (positions, keys)
+    )
+    return jnp.concatenate([prompts, toks.T], axis=1)
+
+
+# ===========================================================================
+# Losses / gradients
+# ===========================================================================
+
+def logprob_fn(cfg, params, tokens):
+    return ref.token_logprob_ref(logits_fn(cfg, params, tokens), tokens)
+
+
+def policy_loss(
+    cfg, params, tokens, mask, adv, old_logp, ref_logp, clip_eps, kl_coef, ent_coef
+):
+    logits = logits_fn(cfg, params, tokens)
+    logp = ref.token_logprob_ref(logits, tokens)
+    entropy = ref.entropy_ref(logits)
+    loss, aux = ref.ppo_loss_ref(
+        logp, old_logp, ref_logp, adv, mask, entropy,
+        clip_eps=clip_eps, kl_coef=kl_coef, ent_coef=ent_coef,
+    )
+    return loss, aux
+
+
+def policy_grad(cfg, params, tokens, mask, adv, old_logp, ref_logp,
+                clip_eps, kl_coef, ent_coef):
+    """Grad of the clipped policy objective.  Serves PPO and GRPO:
+    for GRPO the L3 coordinator broadcasts the group-relative sequence
+    advantage across tokens before the call."""
+    (loss, aux), grads = jax.value_and_grad(
+        lambda p: policy_loss(
+            cfg, p, tokens, mask, adv, old_logp, ref_logp,
+            clip_eps, kl_coef, ent_coef,
+        ),
+        has_aux=True,
+    )(params)
+    return grads, loss, aux["kl"], aux["entropy"], aux["clipfrac"]
+
+
+def sft_grad(cfg, params, tokens, mask):
+    """Supervised next-token cross-entropy (verifier / policy warm-start)."""
+    def loss_fn(p):
+        return ref.sft_loss_ref(logits_fn(cfg, p, tokens), tokens, mask)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    return grads, loss
+
+
+def critic_grad(cfg, params, tokens, mask, returns):
+    """Masked MSE between critic values and returns."""
+    def loss_fn(p):
+        v = values_fn(cfg, p, tokens)
+        return ref.masked_mean((v - returns) ** 2, mask)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    return grads, loss
+
+
+def reward_score(cfg, params, tokens, last_idx):
+    """BT reward: value at the final real token of each sequence, [B]."""
+    v = values_fn(cfg, params, tokens)
+    return jnp.take_along_axis(v, last_idx[:, None], axis=1)[:, 0]
+
+
+def bt_grad(cfg, params, chosen, rejected, c_idx, r_idx):
+    """Bradley-Terry pairwise grad: -log sigmoid(s_chosen - s_rejected)."""
+    def loss_fn(p):
+        sc = reward_score(cfg, p, chosen, c_idx)
+        sr = reward_score(cfg, p, rejected, r_idx)
+        return ref.bt_loss_ref(sc, sr), (sc > sr).astype(jnp.float32).mean()
+
+    (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    return grads, loss, acc
+
+
+# ===========================================================================
+# Optimiser
+# ===========================================================================
+
+def adam_apply(cfg: ModelConfig, params, m, v, grads, step, lr):
+    """Fused AdamW over the whole tree (betas/eps/wd baked from cfg)."""
+    b1, b2, eps, wd = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps, cfg.weight_decay
+    c1 = 1.0 - b1**step
+    c2 = 1.0 - b2**step
+
+    def upd(p, mm, vv, g):
+        mm = b1 * mm + (1 - b1) * g
+        vv = b2 * vv + (1 - b2) * g * g
+        p = p - lr * ((mm / c1) / (jnp.sqrt(vv / c2) + eps) + wd * p)
+        return p, mm, vv
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_m = jax.tree.leaves(m)
+    flat_v = jax.tree.leaves(v)
+    flat_g = jax.tree.leaves(grads)
+    out = [upd(*t) for t in zip(flat_p, flat_m, flat_v, flat_g)]
+    params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return params, m, v
+
+
+def train_step(cfg, params, m, v, tokens, mask, adv, old_logp, ref_logp,
+               step, lr, clip_eps, kl_coef, ent_coef):
+    """Fused grad+AdamW — the single-controller (dp=1) fast path."""
+    grads, loss, kl, entropy, clipfrac = policy_grad(
+        cfg, params, tokens, mask, adv, old_logp, ref_logp,
+        clip_eps, kl_coef, ent_coef,
+    )
+    params, m, v = adam_apply(cfg, params, m, v, grads, step, lr)
+    return params, m, v, loss, kl, entropy, clipfrac

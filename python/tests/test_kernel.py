@@ -1,0 +1,146 @@
+"""L1 correctness: Pallas flash attention vs the pure-jnp oracle.
+
+The hypothesis sweep is the CORE kernel signal: shapes x dtypes x block
+sizes x causal flags, asserting allclose against ``ref.attention_ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import (
+    flash_attention,
+    flash_attention_diff,
+    vmem_footprint_bytes,
+    mxu_utilization_estimate,
+    attention_flops,
+)
+from compile.kernels import ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return {"atol": 2e-2, "rtol": 2e-2} if dtype == jnp.bfloat16 else {
+        "atol": 2e-5, "rtol": 2e-5}
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref_basic(causal, dtype):
+    B, H, S, D = 2, 3, 64, 16
+    q, k, v = (_rand(i, (B, H, S, D), dtype) for i in range(3))
+    out = flash_attention(q, k, v, causal=causal, block_q=16, block_k=16)
+    expected = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expected.astype(jnp.float32), **_tol(dtype)
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    s_blocks=st.integers(1, 4),
+    d=st.sampled_from([8, 16, 32]),
+    bq=st.sampled_from([8, 16, 32]),
+    bk=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_matches_ref_hypothesis(b, h, s_blocks, d, bq, bk, causal, dtype, seed):
+    s = max(bq, bk) * s_blocks
+    q = _rand(seed, (b, h, s, d), dtype)
+    k = _rand(seed + 1, (b, h, s, d), dtype)
+    v = _rand(seed + 2, (b, h, s, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    expected = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expected.astype(jnp.float32), **_tol(dtype)
+    )
+
+
+def test_block_size_not_dividing_seq():
+    """_pick_block must fall back to a divisor of S."""
+    B, H, S, D = 1, 2, 48, 16  # 48 not divisible by default 32
+    q, k, v = (_rand(i, (B, H, S, D), jnp.float32) for i in range(3))
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    expected = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, expected, atol=2e-5, rtol=2e-5)
+
+
+def test_scale_override():
+    B, H, S, D = 1, 1, 32, 8
+    q, k, v = (_rand(i, (B, H, S, D), jnp.float32) for i in range(3))
+    out = flash_attention(q, k, v, causal=True, block_q=8, block_k=8, scale=0.5)
+    expected = ref.attention_ref(q, k, v, causal=True, scale=0.5)
+    np.testing.assert_allclose(out, expected, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_gradients_match_ref(causal):
+    """VJP of the Pallas path (recompute-ref backward) == autodiff of ref."""
+    B, H, S, D = 2, 2, 32, 16
+    q, k, v = (_rand(i, (B, H, S, D), jnp.float32) for i in range(3))
+    w = jnp.sin(jnp.arange(B * H * S * D, dtype=jnp.float32)).reshape(B, H, S, D)
+
+    def loss_pallas(q, k, v):
+        o = flash_attention_diff(q, k, v, causal=causal, block_q=16, block_k=16)
+        return (o * w).sum()
+
+    def loss_ref(q, k, v):
+        o = ref.attention_ref(q, k, v, causal=causal)
+        return (o * w).sum()
+
+    g1 = jax.grad(loss_pallas, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+def test_numerical_stability_large_logits():
+    """Online softmax must survive logits far outside exp() range."""
+    B, H, S, D = 1, 1, 32, 16
+    q = _rand(0, (B, H, S, D), jnp.float32) * 100.0
+    k = _rand(1, (B, H, S, D), jnp.float32) * 100.0
+    v = _rand(2, (B, H, S, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=8, block_k=8)
+    assert bool(jnp.isfinite(out).all())
+    expected = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, expected, atol=1e-4, rtol=1e-4)
+
+
+def test_single_kv_block_degenerate():
+    """block_k == S: init and finalize land on the same grid step."""
+    B, H, S, D = 1, 1, 16, 8
+    q, k, v = (_rand(i, (B, H, S, D), jnp.float32) for i in range(3))
+    out = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    expected = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, expected, atol=2e-5, rtol=2e-5)
+
+
+# -- perf-estimate arithmetic (DESIGN.md §8) --------------------------------
+
+def test_vmem_footprint_within_budget():
+    # the e2e100m config tiles must sit far below a 16 MB VMEM budget
+    assert vmem_footprint_bytes(64, 64, 64) < 16 * 2**20
+    assert vmem_footprint_bytes(128, 128, 128) < 16 * 2**20
+
+
+def test_mxu_utilization_bounds():
+    u = mxu_utilization_estimate(1024, 128, 128, 128, causal=True)
+    assert 0.0 < u <= 1.0
+    u_nc = mxu_utilization_estimate(1024, 128, 128, 128, causal=False)
+    assert 0.0 < u_nc <= 1.0
+
+
+def test_attention_flops_causal_half():
+    full = attention_flops(2, 4, 256, 64, causal=False)
+    half = attention_flops(2, 4, 256, 64, causal=True)
+    assert half * 2 == full

@@ -1,0 +1,141 @@
+"""Loss-oracle unit tests: PPO/GRPO/GAE/BT math on hand-checkable cases."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def test_masked_mean_ignores_masked():
+    x = jnp.array([[1.0, 2.0, 100.0]])
+    m = jnp.array([[1.0, 1.0, 0.0]])
+    assert float(ref.masked_mean(x, m)) == pytest.approx(1.5)
+
+
+def test_masked_mean_empty_mask_is_zero():
+    x = jnp.ones((2, 3))
+    m = jnp.zeros((2, 3))
+    assert float(ref.masked_mean(x, m)) == 0.0
+
+
+def test_kl_k3_properties():
+    lp = jnp.array([-1.0, -2.0, -0.5])
+    # identical distributions -> 0
+    np.testing.assert_allclose(ref.kl_k3_ref(lp, lp), 0.0, atol=1e-7)
+    # k3 estimator is non-negative for any log-ratio
+    rlp = jnp.array([-1.5, -1.0, -3.0])
+    assert bool((ref.kl_k3_ref(lp, rlp) >= 0).all())
+
+
+def test_ppo_clip_blocks_large_ratio_gain():
+    """Once ratio > 1+eps with positive advantage, the objective must stop
+    improving (the clipped branch wins)."""
+    old = jnp.array([[-1.0]])
+    adv = jnp.array([[1.0]])
+    mask = jnp.ones((1, 1))
+    ent = jnp.zeros((1, 1))
+
+    def pg(new_lp):
+        loss, _ = ref.ppo_loss_ref(
+            jnp.array([[new_lp]]), old, old, adv, mask, ent,
+            clip_eps=0.2, kl_coef=0.0, ent_coef=0.0,
+        )
+        return float(loss)
+
+    # inside the clip: improving logprob reduces the loss
+    assert pg(-0.95) < pg(-1.0)
+    # outside the clip: loss is flat at -(1+eps)*adv
+    assert pg(-0.5) == pytest.approx(pg(-0.2), abs=1e-6)
+    assert pg(-0.5) == pytest.approx(-1.2, abs=1e-6)
+
+
+def test_ppo_clipfrac_counts_clipped_tokens():
+    old = jnp.zeros((1, 4))
+    new = jnp.array([[0.0, 0.5, -0.5, 0.05]])  # ratios 1, 1.65, 0.61, 1.05
+    mask = jnp.ones((1, 4))
+    _, aux = ref.ppo_loss_ref(
+        new, old, old, jnp.ones((1, 4)), mask, jnp.zeros((1, 4)),
+        clip_eps=0.2, kl_coef=0.0, ent_coef=0.0,
+    )
+    assert float(aux["clipfrac"]) == pytest.approx(0.5)
+
+
+def test_grpo_advantage_zero_mean_unit_std():
+    r = jnp.array([1.0, 2.0, 3.0, 4.0, 10.0, 10.0, 10.0, 14.0])
+    adv = ref.grpo_advantage_ref(r, group_size=4)
+    g = np.asarray(adv).reshape(2, 4)
+    np.testing.assert_allclose(g.mean(axis=1), 0.0, atol=1e-6)
+    np.testing.assert_allclose(g.std(axis=1), 1.0, atol=1e-3)
+
+
+def test_grpo_advantage_constant_group_is_zero():
+    """All-same rewards (the DAPO filter case) give ~zero advantage."""
+    r = jnp.array([5.0, 5.0, 5.0, 5.0])
+    adv = ref.grpo_advantage_ref(r, group_size=4)
+    np.testing.assert_allclose(adv, 0.0, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_groups=st.integers(1, 4),
+    gsize=st.integers(2, 8),
+    seed=st.integers(0, 1000),
+)
+def test_grpo_advantage_hypothesis(n_groups, gsize, seed):
+    r = jax.random.normal(jax.random.PRNGKey(seed), (n_groups * gsize,)) * 3
+    adv = ref.grpo_advantage_ref(r, gsize)
+    g = np.asarray(adv).reshape(n_groups, gsize)
+    np.testing.assert_allclose(g.mean(axis=1), 0.0, atol=1e-5)
+
+
+def test_gae_terminal_only_reward():
+    """Single terminal reward, zero values: adv[t] = (gamma*lam)^(T-1-t) * r."""
+    B, S = 1, 5
+    gamma, lam = 0.9, 0.8
+    rewards = jnp.zeros((B, S)).at[0, S - 1].set(1.0)
+    values = jnp.zeros((B, S))
+    mask = jnp.ones((B, S))
+    adv, ret = ref.gae_ref(rewards, values, mask, gamma=gamma, lam=lam)
+    expected = [(gamma * lam) ** (S - 1 - t) for t in range(S)]
+    np.testing.assert_allclose(adv[0], expected, rtol=1e-5)
+    np.testing.assert_allclose(ret, adv, rtol=1e-6)  # values are zero
+
+
+def test_gae_perfect_critic_zero_advantage():
+    """If values exactly equal discounted returns, advantages vanish."""
+    B, S = 1, 4
+    gamma, lam = 1.0, 1.0
+    rewards = jnp.array([[0.0, 0.0, 0.0, 2.0]])
+    values = jnp.array([[2.0, 2.0, 2.0, 2.0]])  # true return-to-go
+    mask = jnp.ones((B, S))
+    adv, _ = ref.gae_ref(rewards, values, mask, gamma=gamma, lam=lam)
+    np.testing.assert_allclose(adv, 0.0, atol=1e-6)
+
+
+def test_bt_loss_ordering():
+    lo = ref.bt_loss_ref(jnp.array([2.0]), jnp.array([0.0]))
+    hi = ref.bt_loss_ref(jnp.array([0.0]), jnp.array([2.0]))
+    eq = ref.bt_loss_ref(jnp.array([1.0]), jnp.array([1.0]))
+    assert float(lo) < float(eq) < float(hi)
+    assert float(eq) == pytest.approx(np.log(2.0), rel=1e-5)
+
+
+def test_sft_loss_uniform_model():
+    """Uniform logits -> loss == log(V)."""
+    B, S, V = 2, 8, 256
+    logits = jnp.zeros((B, S, V))
+    tokens = jnp.zeros((B, S), jnp.int32)
+    mask = jnp.ones((B, S)).at[:, 0].set(0.0)  # position 0 is never scored
+    loss = ref.sft_loss_ref(logits, tokens, mask)
+    assert float(loss) == pytest.approx(np.log(V), rel=1e-5)
+
+
+def test_entropy_uniform_and_peaked():
+    V = 256
+    uni = ref.entropy_ref(jnp.zeros((1, 1, V)))
+    assert float(uni[0, 0]) == pytest.approx(np.log(V), rel=1e-5)
+    peak = ref.entropy_ref(jnp.zeros((1, 1, V)).at[0, 0, 0].set(100.0))
+    assert float(peak[0, 0]) < 1e-3

@@ -1,0 +1,22 @@
+//! E1 bench: controller data-plane scaling (paper §3.1, Fig. 1).
+//! Regenerates the E1 table and times the routing hot path.
+use gcore::coordinator::single::{route_parallel, route_single};
+use gcore::data::payload::PayloadSpec;
+use gcore::util::bench;
+
+fn main() {
+    let t = gcore::experiments::e1_controller_scaling(true);
+    t.print();
+    // timing: per-configuration routing wallclock
+    let spec = PayloadSpec::paper_2k().scaled(32);
+    let mut results = Vec::new();
+    results.push(bench::bench_n("route_single x16", 5, || {
+        bench::black_box(route_single(&spec, 16, usize::MAX, 1).unwrap());
+    }));
+    for n in [2usize, 4, 8] {
+        results.push(bench::bench_n(&format!("route_parallel x16/{n}"), 5, || {
+            bench::black_box(route_parallel(&spec, 16, n, 1).unwrap());
+        }));
+    }
+    bench::print_table("E1 routing latency", &results);
+}

@@ -1,0 +1,18 @@
+//! E2 bench: placement strategies under plain GRPO vs dynamic sampling.
+use gcore::placement::{run_colocate, run_dynamic, PlacementSpec};
+use gcore::util::bench;
+
+fn main() {
+    let t = gcore::experiments::e2_placement(false);
+    t.print();
+    let spec = PlacementSpec::paper_like();
+    let results = vec![
+        bench::bench_n("sim colocate 64dev x20steps", 10, || {
+            bench::black_box(run_colocate(&spec));
+        }),
+        bench::bench_n("sim dynamic 64dev x20steps", 10, || {
+            bench::black_box(run_dynamic(&spec));
+        }),
+    ];
+    bench::print_table("E2 simulator throughput", &results);
+}

@@ -1,0 +1,4 @@
+//! E3 bench: long-tail amplification table.
+fn main() {
+    gcore::experiments::e3_longtail(false).print();
+}

@@ -1,0 +1,24 @@
+//! E4 bench: workload-balancing waste + balancer hot-path timing (§4.4).
+use gcore::balance::{assign_balanced, assign_naive};
+use gcore::cluster::workload::GenLenModel;
+use gcore::util::bench;
+use gcore::util::rng::Rng;
+
+fn main() {
+    gcore::experiments::e4_balance(false).print();
+    // hot path: assignment of one 1024-seq global batch across 32 ranks
+    let glm = GenLenModel::reasoning_default();
+    let mut rng = Rng::new(1);
+    let lens = glm.sample_batch(&mut rng, 0, 1024);
+    let costs: Vec<f64> = lens.iter().map(|&l| l as f64).collect();
+    let batch: Vec<usize> = (0..1024).collect();
+    let results = vec![
+        bench::bench("assign_naive 1024/32", 50, std::time::Duration::from_millis(300), || {
+            bench::black_box(assign_naive(&batch, 32, &mut rng));
+        }),
+        bench::bench("assign_balanced 1024/32", 50, std::time::Duration::from_millis(300), || {
+            bench::black_box(assign_balanced(&batch, &costs, 32));
+        }),
+    ];
+    bench::print_table("E4 balancer hot path", &results);
+}

@@ -1,0 +1,25 @@
+//! E5 bench: context-parallel attention feasibility table + the Pallas
+//! attention micro-artifact timing (interpret-mode CPU; structure-level
+//! perf estimates live in the manifest).
+use gcore::runtime::{Engine, Tensor};
+use gcore::util::bench;
+
+fn main() {
+    gcore::experiments::e5_attention(false).print();
+    if let Ok(e) = Engine::load("tiny") {
+        let d = e.manifest().dims.clone();
+        let n = d.batch * d.n_heads * d.max_seq * d.d_head();
+        let mk = |s: usize| {
+            Tensor::f32(
+                vec![d.batch, d.n_heads, d.max_seq, d.d_head()],
+                (0..n).map(|i| ((i + s) % 13) as f32 / 13.0).collect(),
+            )
+        };
+        let (q, k, v) = (mk(0), mk(3), mk(7));
+        e.run("attn_micro", &[q.clone(), k.clone(), v.clone()]).unwrap();
+        let r = bench::bench_n("attn_micro (pallas interpret, tiny)", 20, || {
+            bench::black_box(e.run("attn_micro", &[q.clone(), k.clone(), v.clone()]).unwrap());
+        });
+        bench::print_table("E5 kernel micro (CPU interpret — not a TPU proxy)", &[r]);
+    }
+}

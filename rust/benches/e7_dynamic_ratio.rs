@@ -1,0 +1,4 @@
+//! E7 bench: dynamic placement ratio adaptation under length drift.
+fn main() {
+    gcore::experiments::e7_dynamic_ratio(false).print();
+}

@@ -1,0 +1,25 @@
+//! E8 bench: exactly-once RPC under fault injection + transport latency.
+use std::sync::Arc;
+use gcore::rpc::client::RpcClient;
+use gcore::rpc::server::RpcServer;
+use gcore::rpc::transport::{InProcTransport, TcpRpcHost, TcpTransport};
+use gcore::util::bench;
+
+fn main() {
+    gcore::experiments::e8_rpc(false).print();
+    // transport latency micro
+    let server = Arc::new(RpcServer::new(|_: &str, p: &[u8]| Ok(p.to_vec())));
+    let inproc = RpcClient::new(InProcTransport::new(server.clone()));
+    let host = TcpRpcHost::spawn(server.clone()).unwrap();
+    let tcp = RpcClient::new(TcpTransport::connect(host.addr));
+    let payload = vec![0u8; 4096];
+    let results = vec![
+        bench::bench("inproc 4KB call", 100, std::time::Duration::from_millis(400), || {
+            bench::black_box(inproc.call("echo", payload.clone()).unwrap());
+        }),
+        bench::bench("tcp 4KB call", 100, std::time::Duration::from_millis(400), || {
+            bench::black_box(tcp.call("echo", payload.clone()).unwrap());
+        }),
+    ];
+    bench::print_table("E8 RPC latency", &results);
+}

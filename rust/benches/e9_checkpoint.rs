@@ -1,0 +1,4 @@
+//! E9 bench: checkpointing latency + elasticity.
+fn main() {
+    gcore::experiments::e9_checkpoint(false).print();
+}

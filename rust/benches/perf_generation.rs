@@ -1,0 +1,45 @@
+//! §Perf microbench (EXPERIMENTS.md): fused `generate_rollout` vs the
+//! per-token `prefill`/`decode_step` generation path, per artifact set.
+use std::sync::Arc;
+use gcore::coordinator::generation::{generate, SamplerConfig};
+use gcore::data::tasks::{TaskGen, TaskKind};
+use gcore::runtime::{init_policy, Engine};
+use gcore::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    for set in ["tiny", "quickstart"] {
+        let Ok(e) = Engine::load(set) else {
+            eprintln!("skipping {set}: artifacts not built");
+            continue;
+        };
+        let e = Arc::new(e);
+        let d = e.manifest().dims.clone();
+        let params = init_policy(&e, 0)?;
+        let mut tg = TaskGen::new(vec![TaskKind::Copy], 1);
+        let prompts: Vec<Vec<i32>> = tg
+            .sample_n(d.batch)
+            .iter()
+            .map(|t| t.prompt_tokens(d.prompt_len).unwrap())
+            .collect();
+        let mut rng = Rng::new(2);
+        let fused_cfg = SamplerConfig::default(); // top_k 16 → fused path
+        let step_cfg = SamplerConfig { top_k: 15, ..SamplerConfig::default() };
+        generate(&e, &params, &prompts, &fused_cfg, &mut rng)?; // compile
+        generate(&e, &params, &prompts, &step_cfg, &mut rng)?;
+        for (label, cfg) in [("fused", &fused_cfg), ("stepwise", &step_cfg)] {
+            let t0 = std::time::Instant::now();
+            let n = 8;
+            for _ in 0..n {
+                std::hint::black_box(generate(&e, &params, &prompts, cfg, &mut rng)?);
+            }
+            let per = t0.elapsed().as_secs_f64() / n as f64;
+            println!(
+                "{set:>10} {label:>9}: {:6.1} ms/rollout ({} seqs × {} gen tokens)",
+                per * 1e3,
+                d.batch,
+                d.gen_len()
+            );
+        }
+    }
+    Ok(())
+}

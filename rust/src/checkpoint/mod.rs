@@ -1,0 +1,357 @@
+//! Checkpointing (paper §4.3): asynchronous, on-demand with a deadline,
+//! distributed (per-shard), elastic across cluster sizes.
+//!
+//! * **Async** — `save_async` snapshots state in-memory and writes on a
+//!   background thread; training continues immediately.
+//! * **On-demand with deadline** — when online services reclaim resources,
+//!   `save_with_deadline` attempts a checkpoint but abandons it (removing
+//!   the partial file) if the deadline passes: "If the checkpoint cannot be
+//!   completed within the specified time, we abandon the current progress
+//!   and release resources."
+//! * **Distributed / elastic** — each controller writes its own shard file;
+//!   the dataloader state is global (storage::dataloader), so a checkpoint
+//!   taken at world size W resumes at any divisor world size.
+//!
+//! Layout: `<dir>/step_<N>/meta.json` + `shard_<r>.bin` (+ `.tmp` during
+//! write; atomic rename on completion — a crash never corrupts the latest
+//! complete checkpoint).
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::params::ParamSet;
+use crate::runtime::tensor::Tensor;
+use crate::storage::dataloader::LoaderState;
+use crate::util::codec::{Reader, Writer};
+use crate::util::json::Json;
+
+/// Everything one controller shard persists.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardState {
+    pub rank: usize,
+    /// named parameter sets: policy, ref, reward, adam m/v, ...
+    pub params: Vec<(String, ParamSet)>,
+    pub rng_seed: u64,
+}
+
+impl ShardState {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u64(self.rank as u64);
+        w.u64(self.rng_seed);
+        w.u32(self.params.len() as u32);
+        for (name, set) in &self.params {
+            w.str(name);
+            w.tensors(&set.tensors);
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<ShardState> {
+        let mut r = Reader::new(bytes);
+        let rank = r.u64()? as usize;
+        let rng_seed = r.u64()?;
+        let n = r.u32()? as usize;
+        let mut params = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = r.str()?;
+            let tensors: Vec<Tensor> = r.tensors()?;
+            params.push((name, ParamSet::new(tensors)));
+        }
+        r.expect_end()?;
+        Ok(ShardState { rank, params, rng_seed })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CheckpointMeta {
+    pub step: u64,
+    pub world_size: usize,
+    pub loader: LoaderState,
+}
+
+pub struct CheckpointManager {
+    dir: PathBuf,
+    /// keep at most this many complete checkpoints
+    pub max_keep: usize,
+}
+
+impl CheckpointManager {
+    pub fn new(dir: impl AsRef<Path>) -> CheckpointManager {
+        CheckpointManager { dir: dir.as_ref().to_path_buf(), max_keep: 3 }
+    }
+
+    fn step_dir(&self, step: u64) -> PathBuf {
+        self.dir.join(format!("step_{step:010}"))
+    }
+
+    /// Synchronous save of one shard + (rank-0 only) the meta.
+    pub fn save_shard(&self, step: u64, meta: &CheckpointMeta, shard: &ShardState) -> Result<()> {
+        let dir = self.step_dir(step);
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("shard_{}.bin", shard.rank));
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, shard.encode())?;
+        std::fs::rename(&tmp, &path)?;
+        if shard.rank == 0 {
+            let meta_json = Json::obj(vec![
+                ("step", Json::from(step as i64)),
+                ("world_size", Json::from(meta.world_size)),
+                ("loader_seed", Json::from(meta.loader.seed as i64)),
+                ("loader_epoch", Json::from(meta.loader.epoch as i64)),
+                ("loader_cursor", Json::from(meta.loader.cursor)),
+            ]);
+            let mpath = dir.join("meta.json");
+            let mtmp = mpath.with_extension("tmp");
+            std::fs::write(&mtmp, meta_json.to_string_pretty())?;
+            std::fs::rename(&mtmp, &mpath)?;
+        }
+        self.gc()?;
+        Ok(())
+    }
+
+    /// Asynchronous save: state is moved to a writer thread; returns a
+    /// handle that reports completion.  Training proceeds immediately.
+    pub fn save_async(
+        &self,
+        step: u64,
+        meta: CheckpointMeta,
+        shard: ShardState,
+    ) -> AsyncSaveHandle {
+        let mgr = CheckpointManager { dir: self.dir.clone(), max_keep: self.max_keep };
+        let (tx, rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            let result = mgr.save_shard(step, &meta, &shard);
+            tx.send(result).ok();
+        });
+        AsyncSaveHandle { rx, thread: Some(handle) }
+    }
+
+    /// On-demand checkpoint with a deadline.  Writes in bounded chunks,
+    /// checking the clock; on overrun the partial output is removed and
+    /// `Err` is returned (the caller releases resources immediately).
+    pub fn save_with_deadline(
+        &self,
+        step: u64,
+        meta: &CheckpointMeta,
+        shard: &ShardState,
+        deadline: Duration,
+    ) -> Result<()> {
+        use std::io::Write;
+        let start = Instant::now();
+        let dir = self.step_dir(step);
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("shard_{}.bin", shard.rank));
+        let tmp = path.with_extension("tmp");
+        let bytes = shard.encode();
+        let mut f = std::fs::File::create(&tmp)?;
+        const CHUNK: usize = 1 << 20;
+        for chunk in bytes.chunks(CHUNK) {
+            if start.elapsed() > deadline {
+                drop(f);
+                std::fs::remove_file(&tmp).ok();
+                bail!(
+                    "checkpoint abandoned: deadline {:?} exceeded after {:?}",
+                    deadline,
+                    start.elapsed()
+                );
+            }
+            f.write_all(chunk)?;
+        }
+        f.sync_all().ok();
+        drop(f);
+        std::fs::rename(&tmp, &path)?;
+        if shard.rank == 0 {
+            self.save_shard(step, meta, shard)?; // re-writes meta atomically
+        }
+        Ok(())
+    }
+
+    /// Latest step with a complete meta.json.
+    pub fn latest_step(&self) -> Option<u64> {
+        let entries = std::fs::read_dir(&self.dir).ok()?;
+        let mut steps: Vec<u64> = entries
+            .flatten()
+            .filter_map(|e| {
+                let name = e.file_name().into_string().ok()?;
+                let step: u64 = name.strip_prefix("step_")?.parse().ok()?;
+                e.path().join("meta.json").exists().then_some(step)
+            })
+            .collect();
+        steps.sort_unstable();
+        steps.pop()
+    }
+
+    pub fn load_meta(&self, step: u64) -> Result<CheckpointMeta> {
+        let path = self.step_dir(step).join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let j = Json::parse(&text)?;
+        Ok(CheckpointMeta {
+            step: j.req("step")?.as_i64().context("step")? as u64,
+            world_size: j.req("world_size")?.as_usize().context("world")?,
+            loader: LoaderState {
+                seed: j.req("loader_seed")?.as_i64().context("seed")? as u64,
+                epoch: j.req("loader_epoch")?.as_i64().context("epoch")? as u64,
+                cursor: j.req("loader_cursor")?.as_usize().context("cursor")?,
+            },
+        })
+    }
+
+    pub fn load_shard(&self, step: u64, rank: usize) -> Result<ShardState> {
+        let path = self.step_dir(step).join(format!("shard_{rank}.bin"));
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        ShardState::decode(&bytes)
+    }
+
+    fn gc(&self) -> Result<()> {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else { return Ok(()) };
+        let mut steps: Vec<(u64, PathBuf)> = entries
+            .flatten()
+            .filter_map(|e| {
+                let name = e.file_name().into_string().ok()?;
+                let step: u64 = name.strip_prefix("step_")?.parse().ok()?;
+                Some((step, e.path()))
+            })
+            .collect();
+        steps.sort_unstable_by_key(|(s, _)| *s);
+        while steps.len() > self.max_keep {
+            let (_, path) = steps.remove(0);
+            std::fs::remove_dir_all(path).ok();
+        }
+        Ok(())
+    }
+}
+
+pub struct AsyncSaveHandle {
+    rx: mpsc::Receiver<Result<()>>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl AsyncSaveHandle {
+    /// Block until the background write finishes.
+    pub fn wait(mut self) -> Result<()> {
+        let result = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("checkpoint writer thread died"))?;
+        if let Some(t) = self.thread.take() {
+            t.join().ok();
+        }
+        result
+    }
+
+    /// Non-blocking completion probe.
+    pub fn is_done(&self) -> bool {
+        match self.rx.try_recv() {
+            Ok(_) | Err(mpsc::TryRecvError::Disconnected) => true,
+            Err(mpsc::TryRecvError::Empty) => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join("gcore_ckpt_tests")
+            .join(format!("{name}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn shard(rank: usize, n: usize) -> ShardState {
+        ShardState {
+            rank,
+            params: vec![(
+                "policy".into(),
+                ParamSet::new(vec![Tensor::f32(vec![n], (0..n).map(|i| i as f32).collect())]),
+            )],
+            rng_seed: 42,
+        }
+    }
+
+    fn meta(step: u64) -> CheckpointMeta {
+        CheckpointMeta {
+            step,
+            world_size: 2,
+            loader: LoaderState { seed: 1, epoch: 2, cursor: 30 },
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mgr = CheckpointManager::new(tmpdir("roundtrip"));
+        let s = shard(0, 100);
+        mgr.save_shard(5, &meta(5), &s).unwrap();
+        assert_eq!(mgr.latest_step(), Some(5));
+        let m = mgr.load_meta(5).unwrap();
+        assert_eq!(m.world_size, 2);
+        assert_eq!(m.loader.cursor, 30);
+        assert_eq!(mgr.load_shard(5, 0).unwrap(), s);
+    }
+
+    #[test]
+    fn async_save_completes() {
+        let mgr = CheckpointManager::new(tmpdir("async"));
+        let h = mgr.save_async(7, meta(7), shard(0, 50_000));
+        h.wait().unwrap();
+        assert_eq!(mgr.latest_step(), Some(7));
+        assert_eq!(mgr.load_shard(7, 0).unwrap().params[0].1.num_elements(), 50_000);
+    }
+
+    #[test]
+    fn deadline_zero_abandons_cleanly() {
+        let mgr = CheckpointManager::new(tmpdir("deadline"));
+        let s = shard(0, 2_000_000);
+        let err = mgr
+            .save_with_deadline(9, &meta(9), &s, Duration::from_nanos(1))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("abandoned"), "{err}");
+        // no partial files left behind
+        assert_eq!(mgr.latest_step(), None);
+        let step_dir = mgr.step_dir(9);
+        if step_dir.exists() {
+            let leftovers: Vec<_> = std::fs::read_dir(step_dir).unwrap().flatten().collect();
+            assert!(leftovers.is_empty(), "{leftovers:?}");
+        }
+    }
+
+    #[test]
+    fn generous_deadline_succeeds() {
+        let mgr = CheckpointManager::new(tmpdir("deadline_ok"));
+        mgr.save_with_deadline(3, &meta(3), &shard(0, 1000), Duration::from_secs(30))
+            .unwrap();
+        assert_eq!(mgr.latest_step(), Some(3));
+    }
+
+    #[test]
+    fn gc_keeps_max_checkpoints() {
+        let mgr = CheckpointManager::new(tmpdir("gc"));
+        for step in 1..=6 {
+            mgr.save_shard(step, &meta(step), &shard(0, 10)).unwrap();
+        }
+        assert_eq!(mgr.latest_step(), Some(6));
+        assert!(mgr.load_shard(1, 0).is_err(), "old checkpoints pruned");
+        assert!(mgr.load_shard(6, 0).is_ok());
+    }
+
+    #[test]
+    fn multi_shard_checkpoint() {
+        let mgr = CheckpointManager::new(tmpdir("shards"));
+        for rank in 0..4 {
+            mgr.save_shard(2, &meta(2), &shard(rank, 10 + rank)).unwrap();
+        }
+        for rank in 0..4 {
+            assert_eq!(mgr.load_shard(2, rank).unwrap().rank, rank);
+        }
+    }
+}

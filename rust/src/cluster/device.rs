@@ -1,0 +1,168 @@
+//! Simulated GPU devices: HBM memory ledger + model residency.
+//!
+//! The paper's placement claims (§2.3, §3.2) are about *memory and time
+//! accounting* — which models fit where, what swapping costs, when OOM
+//! hits.  `Device` tracks exactly that; the actual numerics run elsewhere
+//! (runtime::Engine on PJRT-CPU).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct DeviceId(pub usize);
+
+/// The RLHF roles a device can host (paper §2.2's model zoo).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ModelRole {
+    /// Actor weights in the training framework layout.
+    PolicyTrain,
+    /// Actor weights in the inference-engine layout (vLLM/SGLang analogue).
+    PolicyGen,
+    /// Generative reward model (verifier LM) in inference layout.
+    RewardGen,
+    /// Bradley-Terry reward model.
+    RewardModel,
+    Reference,
+    Critic,
+}
+
+impl ModelRole {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelRole::PolicyTrain => "policy_train",
+            ModelRole::PolicyGen => "policy_gen",
+            ModelRole::RewardGen => "reward_gen",
+            ModelRole::RewardModel => "reward_model",
+            ModelRole::Reference => "reference",
+            ModelRole::Critic => "critic",
+        }
+    }
+}
+
+/// One simulated GPU: capacity + resident allocations (GB granularity).
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub id: DeviceId,
+    pub hbm_gb: f64,
+    resident: BTreeMap<ModelRole, f64>,
+    /// transient allocations (activations, KV cache) by tag
+    transient: BTreeMap<String, f64>,
+}
+
+impl Device {
+    pub fn new(id: DeviceId, hbm_gb: f64) -> Device {
+        Device { id, hbm_gb, resident: BTreeMap::new(), transient: BTreeMap::new() }
+    }
+
+    pub fn used_gb(&self) -> f64 {
+        self.resident.values().sum::<f64>() + self.transient.values().sum::<f64>()
+    }
+
+    pub fn free_gb(&self) -> f64 {
+        self.hbm_gb - self.used_gb()
+    }
+
+    pub fn hosts(&self, role: ModelRole) -> bool {
+        self.resident.contains_key(&role)
+    }
+
+    pub fn resident_roles(&self) -> Vec<ModelRole> {
+        self.resident.keys().copied().collect()
+    }
+
+    /// Load a model's shard onto this device; OOM if it does not fit.
+    pub fn load(&mut self, role: ModelRole, gb: f64) -> Result<()> {
+        if self.hosts(role) {
+            bail!("device {:?} already hosts {}", self.id, role.name());
+        }
+        if gb > self.free_gb() + 1e-9 {
+            bail!(
+                "OOM on device {:?}: loading {} needs {:.1} GB, {:.1} GB free \
+                 (resident: {:?})",
+                self.id,
+                role.name(),
+                gb,
+                self.free_gb(),
+                self.resident
+            );
+        }
+        self.resident.insert(role, gb);
+        Ok(())
+    }
+
+    /// Unload (swap out) a model shard.
+    pub fn unload(&mut self, role: ModelRole) -> Result<f64> {
+        match self.resident.remove(&role) {
+            Some(gb) => Ok(gb),
+            None => bail!("device {:?} does not host {}", self.id, role.name()),
+        }
+    }
+
+    /// Reserve transient memory (KV cache, activations, comm buffers).
+    pub fn reserve(&mut self, tag: &str, gb: f64) -> Result<()> {
+        if gb > self.free_gb() + 1e-9 {
+            bail!(
+                "OOM on device {:?}: transient '{}' needs {:.1} GB, {:.1} free",
+                self.id,
+                tag,
+                gb,
+                self.free_gb()
+            );
+        }
+        *self.transient.entry(tag.to_string()).or_insert(0.0) += gb;
+        Ok(())
+    }
+
+    pub fn release(&mut self, tag: &str) -> f64 {
+        self.transient.remove(tag).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_unload_ledger() {
+        let mut d = Device::new(DeviceId(0), 96.0);
+        d.load(ModelRole::PolicyGen, 64.0).unwrap();
+        assert!(d.hosts(ModelRole::PolicyGen));
+        assert!((d.free_gb() - 32.0).abs() < 1e-9);
+        assert_eq!(d.unload(ModelRole::PolicyGen).unwrap(), 64.0);
+        assert_eq!(d.free_gb(), 96.0);
+    }
+
+    #[test]
+    fn oom_rejected_with_context() {
+        let mut d = Device::new(DeviceId(1), 96.0);
+        d.load(ModelRole::PolicyGen, 64.0).unwrap();
+        let err = d.load(ModelRole::RewardGen, 64.0).unwrap_err().to_string();
+        assert!(err.contains("OOM"), "{err}");
+        // co-locating both 64GB models on one 96GB card is exactly the
+        // paper's motivation for time-sharing (§2.3)
+    }
+
+    #[test]
+    fn double_load_rejected() {
+        let mut d = Device::new(DeviceId(2), 96.0);
+        d.load(ModelRole::Critic, 10.0).unwrap();
+        assert!(d.load(ModelRole::Critic, 10.0).is_err());
+    }
+
+    #[test]
+    fn transient_reservations() {
+        let mut d = Device::new(DeviceId(3), 96.0);
+        d.load(ModelRole::PolicyGen, 64.0).unwrap();
+        d.reserve("kv_cache", 20.0).unwrap();
+        assert!(d.reserve("activations", 20.0).is_err()); // 84 + 20 > 96
+        assert_eq!(d.release("kv_cache"), 20.0);
+        d.reserve("activations", 20.0).unwrap();
+    }
+
+    #[test]
+    fn unload_missing_errors() {
+        let mut d = Device::new(DeviceId(4), 96.0);
+        assert!(d.unload(ModelRole::Reference).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Simulated GPU-cluster substrate (paper §5 testbed analogue).
+//!
+//! The paper evaluates on 8×8 H20-96GB with NVLink/RDMA; this module
+//! provides the memory/time/topology accounting those experiments need —
+//! the numerics themselves run through `runtime::Engine` (PJRT-CPU).
+//! See DESIGN.md §1 for the substitution argument.
+
+pub mod device;
+pub mod sim;
+pub mod swap;
+pub mod topology;
+pub mod workload;
+
+pub use device::{Device, DeviceId, ModelRole};
+pub use sim::{Sim, SimReport, WorkKind};
+pub use swap::{model_weights_gb, SwapCostModel};
+pub use topology::Topology;
+pub use workload::{AcceptanceModel, GenLenModel, GenTimeModel, TrainTimeModel};

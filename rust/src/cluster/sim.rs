@@ -1,0 +1,263 @@
+//! Discrete-event cluster timeline: device busy/idle/swap accounting.
+//!
+//! The placement engines (placement::*) schedule stage work onto device
+//! groups through this simulator; it tracks, per device, busy time by work
+//! kind — the raw signal behind every utilization/bubble number in
+//! EXPERIMENTS.md (E2/E3/E7).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::device::DeviceId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum WorkKind {
+    Generate,
+    Reward,
+    Prepare,
+    Train,
+    Swap,
+    WeightSync,
+    Comm,
+}
+
+impl WorkKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkKind::Generate => "generate",
+            WorkKind::Reward => "reward",
+            WorkKind::Prepare => "prepare",
+            WorkKind::Train => "train",
+            WorkKind::Swap => "swap",
+            WorkKind::WeightSync => "weight_sync",
+            WorkKind::Comm => "comm",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct DeviceTimeline {
+    busy_until: f64,
+    busy_by_kind: BTreeMap<WorkKind, f64>,
+}
+
+/// The simulated cluster timeline.
+#[derive(Debug, Clone)]
+pub struct Sim {
+    devices: Vec<DeviceTimeline>,
+}
+
+impl Sim {
+    pub fn new(n_devices: usize) -> Sim {
+        Sim { devices: vec![DeviceTimeline::default(); n_devices] }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Earliest time every device in `group` is free.
+    pub fn group_ready(&self, group: &[DeviceId]) -> f64 {
+        group
+            .iter()
+            .map(|d| self.devices[d.0].busy_until)
+            .fold(0.0, f64::max)
+    }
+
+    /// Schedule `duration` seconds of `kind` work on every device of the
+    /// group, starting when the whole group is free (synchronous stage,
+    /// the co-location pattern).  Returns (start, end).
+    pub fn run_group(
+        &mut self,
+        group: &[DeviceId],
+        kind: WorkKind,
+        duration: f64,
+    ) -> (f64, f64) {
+        let start = self.group_ready(group);
+        let end = start + duration;
+        for d in group {
+            let t = &mut self.devices[d.0];
+            t.busy_until = end;
+            *t.busy_by_kind.entry(kind).or_insert(0.0) += duration;
+        }
+        (start, end)
+    }
+
+    /// Schedule work on a single device starting as soon as it is free
+    /// (asynchronous / co-exist pattern).  Returns (start, end).
+    pub fn run_one(&mut self, d: DeviceId, kind: WorkKind, duration: f64) -> (f64, f64) {
+        let t = &mut self.devices[d.0];
+        let start = t.busy_until;
+        let end = start + duration;
+        t.busy_until = end;
+        *t.busy_by_kind.entry(kind).or_insert(0.0) += duration;
+        (start, end)
+    }
+
+    /// Schedule work on a device starting no earlier than `not_before`
+    /// (models a data dependency on another role's output).
+    pub fn run_one_after(
+        &mut self,
+        d: DeviceId,
+        not_before: f64,
+        kind: WorkKind,
+        duration: f64,
+    ) -> (f64, f64) {
+        let t = &mut self.devices[d.0];
+        let start = t.busy_until.max(not_before);
+        let end = start + duration;
+        t.busy_until = end;
+        *t.busy_by_kind.entry(kind).or_insert(0.0) += duration;
+        (start, end)
+    }
+
+    /// Force all devices idle-forward to `time` (barrier).
+    pub fn barrier(&mut self, time: f64) {
+        for d in &mut self.devices {
+            d.busy_until = d.busy_until.max(time);
+        }
+    }
+
+    pub fn makespan(&self) -> f64 {
+        self.devices.iter().map(|d| d.busy_until).fold(0.0, f64::max)
+    }
+
+    pub fn device_busy(&self, d: DeviceId) -> f64 {
+        self.devices[d.0].busy_by_kind.values().sum()
+    }
+
+    /// Busy seconds by kind, summed over all devices.
+    pub fn busy_by_kind(&self) -> BTreeMap<WorkKind, f64> {
+        let mut out = BTreeMap::new();
+        for d in &self.devices {
+            for (k, v) in &d.busy_by_kind {
+                *out.entry(*k).or_insert(0.0) += v;
+            }
+        }
+        out
+    }
+
+    /// Cluster utilization: busy device-seconds (excluding swap, which is
+    /// overhead, not useful work) / (makespan × n_devices).
+    pub fn utilization(&self) -> f64 {
+        let makespan = self.makespan();
+        if makespan == 0.0 {
+            return 0.0;
+        }
+        let useful: f64 = self
+            .busy_by_kind()
+            .iter()
+            .filter(|(k, _)| !matches!(k, WorkKind::Swap | WorkKind::WeightSync))
+            .map(|(_, v)| v)
+            .sum();
+        useful / (makespan * self.devices.len() as f64)
+    }
+
+    /// Total idle (bubble) device-seconds up to the makespan.
+    pub fn bubble_seconds(&self) -> f64 {
+        let makespan = self.makespan();
+        let busy: f64 = self.busy_by_kind().values().sum();
+        makespan * self.devices.len() as f64 - busy
+    }
+
+    /// Swap-overhead device-seconds.
+    pub fn swap_seconds(&self) -> f64 {
+        self.busy_by_kind().get(&WorkKind::Swap).copied().unwrap_or(0.0)
+            + self
+                .busy_by_kind()
+                .get(&WorkKind::WeightSync)
+                .copied()
+                .unwrap_or(0.0)
+    }
+}
+
+/// Summary for a placement run (one row of the E2/E3/E7 tables).
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub makespan_s: f64,
+    pub utilization: f64,
+    pub bubble_s: f64,
+    pub swap_s: f64,
+    pub samples: usize,
+}
+
+impl SimReport {
+    pub fn from_sim(sim: &Sim, samples: usize) -> SimReport {
+        SimReport {
+            makespan_s: sim.makespan(),
+            utilization: sim.utilization(),
+            bubble_s: sim.bubble_seconds(),
+            swap_s: sim.swap_seconds(),
+            samples,
+        }
+    }
+
+    pub fn samples_per_hour(&self) -> f64 {
+        if self.makespan_s == 0.0 {
+            return 0.0;
+        }
+        self.samples as f64 * 3600.0 / self.makespan_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(v: std::ops::Range<usize>) -> Vec<DeviceId> {
+        v.map(DeviceId).collect()
+    }
+
+    #[test]
+    fn group_runs_synchronously() {
+        let mut sim = Sim::new(4);
+        sim.run_one(DeviceId(0), WorkKind::Generate, 10.0);
+        // group waits for slowest member
+        let (start, end) = sim.run_group(&ids(0..4), WorkKind::Train, 5.0);
+        assert_eq!(start, 10.0);
+        assert_eq!(end, 15.0);
+        assert_eq!(sim.makespan(), 15.0);
+    }
+
+    #[test]
+    fn utilization_excludes_swap() {
+        let mut sim = Sim::new(2);
+        sim.run_group(&ids(0..2), WorkKind::Generate, 10.0);
+        sim.run_group(&ids(0..2), WorkKind::Swap, 10.0);
+        // 20s makespan, 10s useful per device
+        assert!((sim.utilization() - 0.5).abs() < 1e-9);
+        assert_eq!(sim.swap_seconds(), 20.0);
+    }
+
+    #[test]
+    fn bubbles_counted() {
+        let mut sim = Sim::new(2);
+        sim.run_one(DeviceId(0), WorkKind::Generate, 10.0);
+        // device 1 idle for the whole 10s
+        assert!((sim.bubble_seconds() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_one_after_respects_dependency() {
+        let mut sim = Sim::new(2);
+        let (_, gen_end) = sim.run_one(DeviceId(0), WorkKind::Generate, 7.0);
+        let (start, _) = sim.run_one_after(DeviceId(1), gen_end, WorkKind::Reward, 3.0);
+        assert_eq!(start, 7.0);
+    }
+
+    #[test]
+    fn independent_devices_overlap() {
+        let mut sim = Sim::new(2);
+        sim.run_one(DeviceId(0), WorkKind::Generate, 10.0);
+        sim.run_one(DeviceId(1), WorkKind::Reward, 10.0);
+        assert_eq!(sim.makespan(), 10.0); // parallel, not 20
+        assert!((sim.utilization() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_samples_per_hour() {
+        let mut sim = Sim::new(1);
+        sim.run_one(DeviceId(0), WorkKind::Generate, 3600.0);
+        let r = SimReport::from_sim(&sim, 100);
+        assert!((r.samples_per_hour() - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,126 @@
+//! Cluster topology: nodes × GPUs, NVLink intra-node / RDMA inter-node.
+//!
+//! Mirrors the paper's testbed (§5): 8 machines × 8 H20-96GB, NVLink
+//! intra-node, 200 Gbps RDMA inter-node.  Used for collective-time and
+//! weight-broadcast estimates, and for the paper's "form communication
+//! groups according to the GPU switch topology" placement rule (§4.2).
+
+use crate::cluster::device::DeviceId;
+
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// intra-node (NVLink) bandwidth per GPU, GB/s
+    pub nvlink_gbps: f64,
+    /// inter-node (RDMA) bandwidth per node, GB/s (200 Gbps ≈ 25 GB/s)
+    pub rdma_gbps: f64,
+}
+
+impl Topology {
+    /// The paper's evaluation cluster: 8×8 H20, NVLink ~400 GB/s, 200 Gbps RDMA.
+    pub fn paper_testbed() -> Topology {
+        Topology { nodes: 8, gpus_per_node: 8, nvlink_gbps: 400.0, rdma_gbps: 25.0 }
+    }
+
+    pub fn new(nodes: usize, gpus_per_node: usize) -> Topology {
+        Topology { nodes, gpus_per_node, ..Topology::paper_testbed() }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    pub fn node_of(&self, d: DeviceId) -> usize {
+        d.0 / self.gpus_per_node
+    }
+
+    pub fn same_node(&self, a: DeviceId, b: DeviceId) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Devices of one node — the topology-aligned communication group the
+    /// paper prefers (§4.2).
+    pub fn node_devices(&self, node: usize) -> Vec<DeviceId> {
+        let base = node * self.gpus_per_node;
+        (base..base + self.gpus_per_node).map(DeviceId).collect()
+    }
+
+    /// Ring all-reduce time for `bytes` over `n` ranks: 2(n-1)/n × bytes /
+    /// bottleneck-bandwidth.  If the group spans nodes, RDMA is the
+    /// bottleneck; otherwise NVLink.
+    pub fn allreduce_time(&self, group: &[DeviceId], bytes: f64) -> f64 {
+        let n = group.len().max(1) as f64;
+        if n == 1.0 {
+            return 0.0;
+        }
+        let spans_nodes = group
+            .windows(2)
+            .any(|w| !self.same_node(w[0], w[1]));
+        let bw = if spans_nodes { self.rdma_gbps } else { self.nvlink_gbps } * 1e9;
+        2.0 * (n - 1.0) / n * bytes / bw
+    }
+
+    /// All-gather time for `bytes` per rank over the group.
+    pub fn allgather_time(&self, group: &[DeviceId], bytes_per_rank: f64) -> f64 {
+        let n = group.len().max(1) as f64;
+        if n == 1.0 {
+            return 0.0;
+        }
+        let spans_nodes = group.windows(2).any(|w| !self.same_node(w[0], w[1]));
+        let bw = if spans_nodes { self.rdma_gbps } else { self.nvlink_gbps } * 1e9;
+        (n - 1.0) * bytes_per_rank / bw
+    }
+
+    /// Point-to-point transfer time (weight broadcast hop).
+    pub fn p2p_time(&self, a: DeviceId, b: DeviceId, bytes: f64) -> f64 {
+        let bw = if self.same_node(a, b) { self.nvlink_gbps } else { self.rdma_gbps };
+        bytes / (bw * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_shape() {
+        let t = Topology::paper_testbed();
+        assert_eq!(t.total_gpus(), 64);
+        assert_eq!(t.node_of(DeviceId(0)), 0);
+        assert_eq!(t.node_of(DeviceId(63)), 7);
+        assert!(t.same_node(DeviceId(8), DeviceId(15)));
+        assert!(!t.same_node(DeviceId(7), DeviceId(8)));
+    }
+
+    #[test]
+    fn node_groups_are_topology_aligned() {
+        let t = Topology::paper_testbed();
+        let g = t.node_devices(2);
+        assert_eq!(g.len(), 8);
+        assert!(g.windows(2).all(|w| t.same_node(w[0], w[1])));
+    }
+
+    #[test]
+    fn intra_node_allreduce_faster_than_inter() {
+        let t = Topology::paper_testbed();
+        let intra = t.node_devices(0);
+        let inter: Vec<DeviceId> = (0..8).map(|i| DeviceId(i * 8)).collect();
+        let bytes = 1e9;
+        assert!(t.allreduce_time(&intra, bytes) < t.allreduce_time(&inter, bytes));
+    }
+
+    #[test]
+    fn single_rank_collectives_free() {
+        let t = Topology::paper_testbed();
+        assert_eq!(t.allreduce_time(&[DeviceId(0)], 1e9), 0.0);
+        assert_eq!(t.allgather_time(&[DeviceId(0)], 1e9), 0.0);
+    }
+
+    #[test]
+    fn allreduce_scales_with_bytes() {
+        let t = Topology::paper_testbed();
+        let g = t.node_devices(0);
+        assert!(t.allreduce_time(&g, 2e9) > 1.9 * t.allreduce_time(&g, 1e9));
+    }
+}

@@ -1,0 +1,225 @@
+//! Workload models: long-tail generation lengths, response-length growth
+//! over RL training, dynamic-sampling acceptance decay, and stage time
+//! models.  These drive the placement experiments (E2/E3/E7).
+//!
+//! The paper observes (§3.2): generation produces long-tail outputs that
+//! amplify co-location bubbles; response length *grows* during RL training
+//! (R1-style "thinking time"), so static placement ratios go stale; and the
+//! DAPO acceptance rate *decays* as the policy improves, multiplying swap
+//! rounds.
+
+use crate::util::rng::Rng;
+
+/// Long-tail generation-length distribution with training-time drift.
+#[derive(Debug, Clone)]
+pub struct GenLenModel {
+    /// lognormal location at step 0 (ln tokens)
+    pub mu0: f64,
+    /// lognormal scale (tail heaviness)
+    pub sigma: f64,
+    /// per-step drift of mu — the R1-style length growth
+    pub growth_per_step: f64,
+    /// hard cap (max_new_tokens)
+    pub max_len: usize,
+}
+
+impl GenLenModel {
+    /// Defaults shaped like reasoning-RL traces: median ~350 tokens at
+    /// step 0, heavy tail, doubling time of a few hundred steps.
+    pub fn reasoning_default() -> GenLenModel {
+        GenLenModel { mu0: 5.86, sigma: 0.7, growth_per_step: 0.002, max_len: 8192 }
+    }
+
+    pub fn mu_at(&self, step: usize) -> f64 {
+        self.mu0 + self.growth_per_step * step as f64
+    }
+
+    /// Median length at a training step (closed form for tests/benches).
+    pub fn median_at(&self, step: usize) -> f64 {
+        self.mu_at(step).exp().min(self.max_len as f64)
+    }
+
+    pub fn sample(&self, rng: &mut Rng, step: usize) -> usize {
+        let len = rng.lognormal(self.mu_at(step), self.sigma);
+        (len.round() as usize).clamp(1, self.max_len)
+    }
+
+    /// A batch of per-sequence lengths.
+    pub fn sample_batch(&self, rng: &mut Rng, step: usize, n: usize) -> Vec<usize> {
+        (0..n).map(|_| self.sample(rng, step)).collect()
+    }
+}
+
+/// DAPO dynamic-sampling acceptance model: the probability that a prompt
+/// group survives the "not all-correct / not all-wrong" filter decays as
+/// training sharpens the policy (paper §3.2 item 1).
+#[derive(Debug, Clone)]
+pub struct AcceptanceModel {
+    pub p0: f64,
+    /// exponential decay rate per step
+    pub decay: f64,
+    /// floor (some prompts always stay informative)
+    pub floor: f64,
+}
+
+impl AcceptanceModel {
+    pub fn default_decay() -> AcceptanceModel {
+        AcceptanceModel { p0: 0.9, decay: 0.004, floor: 0.25 }
+    }
+
+    pub fn accept_prob(&self, step: usize) -> f64 {
+        self.floor + (self.p0 - self.floor) * (-self.decay * step as f64).exp()
+    }
+
+    /// Expected number of generation rounds to fill a batch at `step`
+    /// (geometric: each round keeps `p` of its groups).
+    pub fn expected_rounds(&self, step: usize) -> f64 {
+        1.0 / self.accept_prob(step)
+    }
+
+    /// Sample whether one prompt group is accepted.
+    pub fn sample(&self, rng: &mut Rng, step: usize) -> bool {
+        rng.bool(self.accept_prob(step))
+    }
+}
+
+/// Time model for auto-regressive generation on one device group.
+#[derive(Debug, Clone)]
+pub struct GenTimeModel {
+    /// seconds per generated token per sequence at batch=1
+    pub s_per_token: f64,
+    /// batching efficiency: tokens of concurrent sequences overlap; a batch
+    /// of B sequences runs at B^(1-batch_eff) × single-stream speed
+    /// (batch_eff = 1 → perfect batching)
+    pub batch_eff: f64,
+}
+
+impl GenTimeModel {
+    pub fn vllm_like() -> GenTimeModel {
+        GenTimeModel { s_per_token: 0.05, batch_eff: 0.9 }
+    }
+
+    /// Continuous-batching completion time of a batch: each sequence i
+    /// finishes after (len_i / throughput_share) — approximated as the
+    /// longest sequence bounding the batch, with shorter ones freeing
+    /// capacity (the long-tail bubble source).
+    ///
+    /// Returns (makespan_s, useful_s): makespan = wallclock to drain the
+    /// batch, useful = device-seconds of actual work.  The difference is
+    /// the long-tail bubble.
+    pub fn batch_times(&self, lens: &[usize]) -> (f64, f64) {
+        if lens.is_empty() {
+            return (0.0, 0.0);
+        }
+        let b = lens.len() as f64;
+        let per_tok = self.s_per_token / b.powf(self.batch_eff);
+        let max_len = *lens.iter().max().unwrap() as f64;
+        let sum_len: f64 = lens.iter().map(|&l| l as f64).sum();
+        let makespan = max_len * per_tok * b; // drained at batch rate until the longest finishes
+        let useful = sum_len * per_tok * b;
+        (makespan, useful.min(makespan * b))
+    }
+
+    /// Bubble fraction of a batch: idle device-time / total device-time.
+    pub fn bubble_fraction(&self, lens: &[usize]) -> f64 {
+        if lens.is_empty() {
+            return 0.0;
+        }
+        let max_len = *lens.iter().max().unwrap() as f64;
+        let sum_len: f64 = lens.iter().map(|&l| l as f64).sum();
+        1.0 - sum_len / (max_len * lens.len() as f64)
+    }
+}
+
+/// Time model for training forward+backward over packed sequences.
+/// Attention is quadratic in sequence length; MLP linear (paper §4.4).
+#[derive(Debug, Clone)]
+pub struct TrainTimeModel {
+    /// seconds per token (linear part: MLP + projections)
+    pub s_per_token: f64,
+    /// seconds per token² (attention part)
+    pub s_per_token2: f64,
+}
+
+impl TrainTimeModel {
+    pub fn default_7b() -> TrainTimeModel {
+        TrainTimeModel { s_per_token: 2e-5, s_per_token2: 4e-9 }
+    }
+
+    /// Cost of one sequence of length `s`: linear + quadratic terms.
+    pub fn seq_cost(&self, s: usize) -> f64 {
+        self.s_per_token * s as f64 + self.s_per_token2 * (s as f64) * (s as f64)
+    }
+
+    /// Cost of one microbatch on one rank = sum of its sequence costs.
+    pub fn micro_cost(&self, lens: &[usize]) -> f64 {
+        lens.iter().map(|&l| self.seq_cost(l)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn genlen_grows_with_steps() {
+        let m = GenLenModel::reasoning_default();
+        assert!(m.median_at(500) > 1.5 * m.median_at(0));
+        let mut rng = Rng::new(1);
+        let early: usize = m.sample_batch(&mut rng, 0, 512).iter().sum();
+        let late: usize = m.sample_batch(&mut rng, 500, 512).iter().sum();
+        assert!(late > early);
+    }
+
+    #[test]
+    fn genlen_respects_cap() {
+        let m = GenLenModel { max_len: 100, ..GenLenModel::reasoning_default() };
+        let mut rng = Rng::new(2);
+        assert!(m.sample_batch(&mut rng, 1000, 1000).iter().all(|&l| l <= 100 && l >= 1));
+    }
+
+    #[test]
+    fn genlen_has_long_tail() {
+        let m = GenLenModel::reasoning_default();
+        let mut rng = Rng::new(3);
+        let mut lens = m.sample_batch(&mut rng, 0, 4000);
+        lens.sort_unstable();
+        let p50 = lens[2000] as f64;
+        let p99 = lens[3960] as f64;
+        assert!(p99 > 3.0 * p50, "p50={p50} p99={p99}");
+    }
+
+    #[test]
+    fn acceptance_decays_to_floor() {
+        let a = AcceptanceModel::default_decay();
+        assert!(a.accept_prob(0) > 0.85);
+        assert!(a.accept_prob(2000) < 0.3);
+        assert!(a.accept_prob(100_000) >= a.floor - 1e-9);
+        assert!(a.expected_rounds(2000) > a.expected_rounds(0));
+    }
+
+    #[test]
+    fn bubble_fraction_zero_for_uniform() {
+        let g = GenTimeModel::vllm_like();
+        assert!(g.bubble_fraction(&[100, 100, 100]) < 1e-12);
+        let frac = g.bubble_fraction(&[100, 100, 1000]);
+        assert!(frac > 0.5, "{frac}");
+    }
+
+    #[test]
+    fn batch_times_useful_le_makespan_times_b() {
+        let g = GenTimeModel::vllm_like();
+        let (mk, useful) = g.batch_times(&[50, 500, 200]);
+        assert!(mk > 0.0 && useful > 0.0);
+        assert!(useful <= mk * 3.0 + 1e-9);
+    }
+
+    #[test]
+    fn train_cost_quadratic_dominates_long_seqs() {
+        let t = TrainTimeModel::default_7b();
+        // one 2s-long sequence costs more than two s-long ones (paper §4.4)
+        let one = t.seq_cost(8192);
+        let two = 2.0 * t.seq_cost(4096);
+        assert!(one > 1.3 * two, "one={one} two={two}");
+    }
+}

@@ -1,0 +1,228 @@
+//! Run configuration: JSON config files + presets for the `gcore` launcher,
+//! examples and benches.  (The offline vendor set has no TOML crate, so
+//! configs are JSON — same composability, zero extra dependencies.)
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::reward::{RewardKind, VerdictMode};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// artifact set name (tiny / quickstart / e2e / path)
+    pub artifacts: String,
+    /// number of parallel controllers
+    pub world: usize,
+    pub steps: usize,
+    /// GRPO group size (must divide the artifact batch)
+    pub group_size: usize,
+    // -- optimisation -------------------------------------------------------
+    pub lr: f32,
+    /// learning rate for the SFT warm-start (decoupled from the RL lr)
+    pub sft_lr: f32,
+    pub clip_eps: f32,
+    pub kl_coef: f32,
+    pub ent_coef: f32,
+    // -- sampling -----------------------------------------------------------
+    pub temperature: f32,
+    pub top_k: usize,
+    // -- rewarding ----------------------------------------------------------
+    pub reward: RewardKind,
+    pub verdict_mode: VerdictMode,
+    // -- dynamic sampling (DAPO) --------------------------------------------
+    pub dynamic_sampling: bool,
+    pub max_resample_rounds: usize,
+    // -- warm starts ---------------------------------------------------------
+    pub sft_steps: usize,
+    pub verifier_sft_steps: usize,
+    pub bt_train_steps: usize,
+    // -- infra ---------------------------------------------------------------
+    pub seed: u64,
+    pub checkpoint_dir: Option<String>,
+    pub checkpoint_every: usize,
+    pub tasks: Vec<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts: "tiny".into(),
+            world: 1,
+            steps: 20,
+            group_size: 4,
+            lr: 1e-3,
+            sft_lr: 1.5e-3,
+            clip_eps: 0.2,
+            kl_coef: 0.02,
+            ent_coef: 0.0,
+            temperature: 0.8,
+            top_k: 16,
+            reward: RewardKind::GroundTruth,
+            verdict_mode: VerdictMode::Logit,
+            dynamic_sampling: false,
+            max_resample_rounds: 4,
+            sft_steps: 30,
+            verifier_sft_steps: 60,
+            bt_train_steps: 40,
+            seed: 17,
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            tasks: vec!["add".into(), "max".into(), "copy".into()],
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        let obj = j.as_obj().context("config must be a JSON object")?;
+        for (key, val) in obj {
+            match key.as_str() {
+                "artifacts" => cfg.artifacts = req_str(val, key)?,
+                "world" => cfg.world = req_usize(val, key)?,
+                "steps" => cfg.steps = req_usize(val, key)?,
+                "group_size" => cfg.group_size = req_usize(val, key)?,
+                "lr" => cfg.lr = req_f32(val, key)?,
+                "sft_lr" => cfg.sft_lr = req_f32(val, key)?,
+                "clip_eps" => cfg.clip_eps = req_f32(val, key)?,
+                "kl_coef" => cfg.kl_coef = req_f32(val, key)?,
+                "ent_coef" => cfg.ent_coef = req_f32(val, key)?,
+                "temperature" => cfg.temperature = req_f32(val, key)?,
+                "top_k" => cfg.top_k = req_usize(val, key)?,
+                "reward" => {
+                    cfg.reward = match req_str(val, key)?.as_str() {
+                        "ground_truth" => RewardKind::GroundTruth,
+                        "bradley_terry" | "bt" => RewardKind::BradleyTerry,
+                        "generative" | "genrm" => RewardKind::Generative,
+                        other => bail!("unknown reward kind '{other}'"),
+                    }
+                }
+                "verdict_mode" => {
+                    cfg.verdict_mode = match req_str(val, key)?.as_str() {
+                        "logit" => VerdictMode::Logit,
+                        "regex" => VerdictMode::Regex,
+                        other => bail!("unknown verdict mode '{other}'"),
+                    }
+                }
+                "dynamic_sampling" => {
+                    cfg.dynamic_sampling = val.as_bool().context("bool")?
+                }
+                "max_resample_rounds" => cfg.max_resample_rounds = req_usize(val, key)?,
+                "sft_steps" => cfg.sft_steps = req_usize(val, key)?,
+                "verifier_sft_steps" => cfg.verifier_sft_steps = req_usize(val, key)?,
+                "bt_train_steps" => cfg.bt_train_steps = req_usize(val, key)?,
+                "seed" => cfg.seed = req_usize(val, key)? as u64,
+                "checkpoint_dir" => cfg.checkpoint_dir = Some(req_str(val, key)?),
+                "checkpoint_every" => cfg.checkpoint_every = req_usize(val, key)?,
+                "tasks" => {
+                    cfg.tasks = val
+                        .as_arr()
+                        .context("tasks must be an array")?
+                        .iter()
+                        .map(|t| t.as_str().map(String::from).context("task name"))
+                        .collect::<Result<_>>()?
+                }
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.world == 0 {
+            bail!("world must be >= 1");
+        }
+        if self.group_size == 0 {
+            bail!("group_size must be >= 1");
+        }
+        if self.tasks.is_empty() {
+            bail!("at least one task kind required");
+        }
+        Ok(())
+    }
+
+    pub fn task_kinds(&self) -> Result<Vec<crate::data::tasks::TaskKind>> {
+        use crate::data::tasks::TaskKind;
+        self.tasks
+            .iter()
+            .map(|t| {
+                Ok(match t.as_str() {
+                    "add" => TaskKind::Add,
+                    "max" => TaskKind::Max,
+                    "copy" => TaskKind::Copy,
+                    "rev" => TaskKind::Rev,
+                    other => bail!("unknown task '{other}'"),
+                })
+            })
+            .collect()
+    }
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String> {
+    v.as_str().map(String::from).with_context(|| format!("'{key}' must be string"))
+}
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    v.as_usize().with_context(|| format!("'{key}' must be integer"))
+}
+fn req_f32(v: &Json, key: &str) -> Result<f32> {
+    v.as_f64().map(|f| f as f32).with_context(|| format!("'{key}' must be number"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let j = Json::parse(
+            r#"{"artifacts":"quickstart","world":2,"steps":100,"group_size":8,
+                "lr":0.0005,"reward":"generative","verdict_mode":"regex",
+                "dynamic_sampling":true,"tasks":["add","rev"]}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.world, 2);
+        assert_eq!(cfg.reward, RewardKind::Generative);
+        assert_eq!(cfg.verdict_mode, VerdictMode::Regex);
+        assert!(cfg.dynamic_sampling);
+        assert_eq!(cfg.task_kinds().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let j = Json::parse(r#"{"wrld":2}"#).unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("wrld"), "{err}");
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        for bad in [
+            r#"{"world":0}"#,
+            r#"{"reward":"magic"}"#,
+            r#"{"tasks":[]}"#,
+            r#"{"tasks":["frobnicate"]}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            let cfg = RunConfig::from_json(&j);
+            assert!(
+                cfg.is_err() || cfg.unwrap().task_kinds().is_err(),
+                "should reject {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+}

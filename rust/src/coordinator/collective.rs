@@ -1,0 +1,219 @@
+//! Inter-controller collectives (paper §3.1): "we further decompose the
+//! top-level controller and use collective communication to coordinate
+//! among controllers."
+//!
+//! `Rendezvous<T>` is the primitive: `exchange(rank, value)` blocks until
+//! every controller of the group has contributed, then returns all values
+//! to all ranks (all-gather semantics).  All-reduce, broadcast and barrier
+//! are built on it.  Controllers are threads in-process; the same call
+//! pattern maps onto the RPC transport for multi-process launches.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::runtime::params::ParamSet;
+
+struct Slots<T> {
+    generation: u64,
+    values: Vec<Option<T>>,
+    /// completed generation's result, kept until every rank has taken it
+    result: Option<(u64, Arc<Vec<T>>, usize)>,
+}
+
+/// N-way rendezvous usable repeatedly (lockstep rounds).
+pub struct Rendezvous<T> {
+    n: usize,
+    slots: Mutex<Slots<T>>,
+    cv: Condvar,
+}
+
+impl<T: Clone + Send> Rendezvous<T> {
+    pub fn new(n: usize) -> Arc<Rendezvous<T>> {
+        Arc::new(Rendezvous {
+            n,
+            slots: Mutex::new(Slots {
+                generation: 0,
+                values: (0..n).map(|_| None).collect(),
+                result: None,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.n
+    }
+
+    /// Contribute `value` for this round; returns every rank's value
+    /// (indexed by rank) once all have arrived.
+    pub fn exchange(&self, rank: usize, value: T) -> Vec<T> {
+        assert!(rank < self.n, "rank {rank} out of range {}", self.n);
+        let mut slots = self.slots.lock().unwrap();
+        // wait for the previous round's result to be fully drained
+        while slots.result.is_some() && slots.values[rank].is_some() {
+            slots = self.cv.wait(slots).unwrap();
+        }
+        // if a completed result is pending and we already contributed to it,
+        // the loop above handles it; otherwise contribute to current round
+        assert!(slots.values[rank].is_none(), "rank {rank} double-contributed");
+        slots.values[rank] = Some(value);
+        let filled = slots.values.iter().filter(|v| v.is_some()).count();
+        if filled == self.n {
+            // last arriver publishes the result
+            let gen = slots.generation;
+            let vals: Vec<T> = slots.values.iter_mut().map(|v| v.take().unwrap()).collect();
+            slots.result = Some((gen, Arc::new(vals), 0));
+            slots.generation += 1;
+            self.cv.notify_all();
+        }
+        // wait for this round's result
+        let my_gen = {
+            match &slots.result {
+                Some((g, _, _)) if slots.values[rank].is_none() => *g,
+                _ => slots.generation, // our round not yet complete
+            }
+        };
+        loop {
+            if let Some((g, vals, taken)) = &mut slots.result {
+                if *g == my_gen {
+                    let out = vals.as_ref().clone();
+                    *taken += 1;
+                    if *taken == self.n {
+                        slots.result = None;
+                        self.cv.notify_all();
+                    }
+                    return out;
+                }
+            }
+            slots = self.cv.wait(slots).unwrap();
+        }
+    }
+}
+
+/// The full collective set one controller group shares.
+pub struct Collective {
+    pub params: Arc<Rendezvous<ParamSet>>,
+    pub scalars: Arc<Rendezvous<Vec<f64>>>,
+    pub bytes: Arc<Rendezvous<Vec<u8>>>,
+    pub tokens: Arc<Rendezvous<Vec<Vec<i32>>>>,
+}
+
+impl Collective {
+    pub fn new(world: usize) -> Arc<Collective> {
+        Arc::new(Collective {
+            params: Rendezvous::new(world),
+            scalars: Rendezvous::new(world),
+            bytes: Rendezvous::new(world),
+            tokens: Rendezvous::new(world),
+        })
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.params.world_size()
+    }
+
+    /// Mean-reduce a parameter/gradient set across controllers.
+    pub fn all_reduce_mean(&self, rank: usize, set: &ParamSet) -> Result<ParamSet> {
+        let all = self.params.exchange(rank, set.clone());
+        let refs: Vec<&ParamSet> = all.iter().collect();
+        ParamSet::average(&refs)
+    }
+
+    /// Mean of per-rank scalar vectors (loss/metric aggregation).
+    pub fn mean_scalars(&self, rank: usize, vals: Vec<f64>) -> Vec<f64> {
+        let all = self.scalars.exchange(rank, vals);
+        let n = all.len() as f64;
+        let len = all[0].len();
+        (0..len)
+            .map(|i| all.iter().map(|v| v[i]).sum::<f64>() / n)
+            .collect()
+    }
+
+    /// Gather every rank's token rows (sample exchange across controllers).
+    pub fn gather_tokens(&self, rank: usize, rows: Vec<Vec<i32>>) -> Vec<Vec<Vec<i32>>> {
+        self.tokens.exchange(rank, rows)
+    }
+
+    pub fn barrier(&self, rank: usize) {
+        self.bytes.exchange(rank, Vec::new());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::tensor::Tensor;
+
+    #[test]
+    fn exchange_returns_all_values() {
+        let rdv = Rendezvous::<usize>::new(4);
+        let handles: Vec<_> = (0..4)
+            .map(|rank| {
+                let rdv = rdv.clone();
+                std::thread::spawn(move || rdv.exchange(rank, rank * 10))
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![0, 10, 20, 30]);
+        }
+    }
+
+    #[test]
+    fn repeated_rounds_stay_in_lockstep() {
+        let rdv = Rendezvous::<u64>::new(3);
+        let handles: Vec<_> = (0..3)
+            .map(|rank| {
+                let rdv = rdv.clone();
+                std::thread::spawn(move || {
+                    let mut sums = Vec::new();
+                    for round in 0..50u64 {
+                        let vals = rdv.exchange(rank, round * 100 + rank as u64);
+                        sums.push(vals.iter().sum::<u64>());
+                    }
+                    sums
+                })
+            })
+            .collect();
+        let results: Vec<Vec<u64>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // every rank saw identical, round-consistent sums
+        assert_eq!(results[0], results[1]);
+        assert_eq!(results[1], results[2]);
+        for (round, sum) in results[0].iter().enumerate() {
+            assert_eq!(*sum, (round as u64) * 300 + 3);
+        }
+    }
+
+    #[test]
+    fn all_reduce_mean_matches_sequential() {
+        let col = Collective::new(2);
+        let a = ParamSet::new(vec![Tensor::f32(vec![2], vec![1.0, 2.0])]);
+        let b = ParamSet::new(vec![Tensor::f32(vec![2], vec![3.0, 6.0])]);
+        let col2 = col.clone();
+        let h = std::thread::spawn(move || col2.all_reduce_mean(1, &b).unwrap());
+        let r0 = col.all_reduce_mean(0, &a).unwrap();
+        let r1 = h.join().unwrap();
+        assert_eq!(r0, r1);
+        assert_eq!(r0.tensors[0].as_f32().unwrap(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn world_of_one_is_identity() {
+        let col = Collective::new(1);
+        let a = ParamSet::new(vec![Tensor::f32(vec![1], vec![5.0])]);
+        let r = col.all_reduce_mean(0, &a).unwrap();
+        assert_eq!(r, a);
+        col.barrier(0);
+    }
+
+    #[test]
+    fn mean_scalars_aggregates_metrics() {
+        let col = Collective::new(2);
+        let col2 = col.clone();
+        let h = std::thread::spawn(move || col2.mean_scalars(1, vec![2.0, 20.0]));
+        let r0 = col.mean_scalars(0, vec![4.0, 40.0]);
+        let r1 = h.join().unwrap();
+        assert_eq!(r0, vec![3.0, 30.0]);
+        assert_eq!(r0, r1);
+    }
+}

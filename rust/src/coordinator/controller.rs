@@ -1,0 +1,420 @@
+//! The parallel controller (paper §3.1) — the core system contribution.
+//!
+//! Each controller is one SPMD rank: it owns a shard of the data stream
+//! and drives the full 4-stage RLHF workflow (§2.2) over its shard —
+//! Generation → Rewarding → Preparation → Training — coordinating with its
+//! peers only through collectives (gradient all-reduce, metric reduction).
+//! There is **no central data plane**: rollouts, rewards and multimodal
+//! payloads never leave their controller, which is exactly what removes
+//! the single-controller memory/bandwidth wall (E1).
+//!
+//! Local state transitions (§3.1's motivation): because each controller
+//! owns its shard end-to-end, a controller can loop Generation↔Rewarding
+//! rounds for DAPO dynamic sampling *locally* while peers do the same,
+//! without a global stage barrier — the collectives only appear at the
+//! Training stage.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::collective::Collective;
+use crate::coordinator::generation::{self, GenOutput, SamplerConfig};
+use crate::coordinator::sampling;
+use crate::data::tasks::{Task, TaskGen};
+use crate::data::tokenizer;
+use crate::metrics::StageTimers;
+use crate::reward::Rewarder;
+use crate::runtime::engine::Engine;
+use crate::runtime::params::{ParamSet, TrainState};
+use crate::runtime::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Per-step telemetry (mean-reduced across controllers).
+#[derive(Debug, Clone, Default)]
+pub struct StepStats {
+    pub step: usize,
+    pub loss: f64,
+    pub kl: f64,
+    pub entropy: f64,
+    pub clipfrac: f64,
+    pub mean_reward: f64,
+    /// ground-truth accuracy of the policy's responses
+    pub accuracy: f64,
+    pub mean_gen_len: f64,
+    /// generation rounds used this step (dynamic sampling > 1)
+    pub gen_rounds: f64,
+}
+
+/// One accepted rollout batch, ready for preparation/training.
+pub struct RolloutBatch {
+    pub tasks: Vec<Task>,
+    pub gen: GenOutput,
+    pub rewards: Vec<f32>,
+    pub rounds: usize,
+}
+
+pub struct Controller {
+    pub rank: usize,
+    pub engine: Arc<Engine>,
+    pub collective: Arc<Collective>,
+    pub cfg: RunConfig,
+    pub state: TrainState,
+    pub ref_params: ParamSet,
+    pub rewarder: Rewarder,
+    pub taskgen: TaskGen,
+    pub rng: Rng,
+    pub timers: Arc<StageTimers>,
+}
+
+impl Controller {
+    pub fn new(
+        rank: usize,
+        engine: Arc<Engine>,
+        collective: Arc<Collective>,
+        cfg: RunConfig,
+        policy: ParamSet,
+        rewarder: Rewarder,
+    ) -> Result<Controller> {
+        let dims = engine.manifest().dims.clone();
+        if dims.batch % cfg.group_size != 0 {
+            bail!(
+                "group_size {} must divide artifact batch {}",
+                cfg.group_size,
+                dims.batch
+            );
+        }
+        let tree = engine.manifest().policy_tree.clone();
+        let mut root = Rng::new(cfg.seed);
+        let rng = root.fork(rank as u64 + 1);
+        let taskgen = TaskGen::new(
+            cfg.task_kinds()?,
+            cfg.seed ^ (rank as u64).wrapping_mul(0x9E3779B97F4A7C15),
+        );
+        Ok(Controller {
+            rank,
+            ref_params: policy.clone(),
+            state: TrainState::new(policy, &tree),
+            engine,
+            collective,
+            cfg,
+            rewarder,
+            taskgen,
+            rng,
+            timers: Arc::new(StageTimers::new()),
+        })
+    }
+
+    fn sampler_cfg(&self) -> SamplerConfig {
+        SamplerConfig {
+            temperature: self.cfg.temperature,
+            top_k: self.cfg.top_k,
+            stop_at_eos: true,
+        }
+    }
+
+    /// Freeze the current policy as the KL reference (post-SFT).
+    pub fn freeze_reference(&mut self) {
+        self.ref_params = self.state.params.clone();
+    }
+
+    // -----------------------------------------------------------------
+    // SFT warm-start (demonstrations → cross-entropy)
+    // -----------------------------------------------------------------
+
+    pub fn sft_step(&mut self) -> Result<f32> {
+        let dims = self.engine.manifest().dims.clone();
+        let (b, s, p) = (dims.batch, dims.max_seq, dims.prompt_len);
+        let mut rows = Vec::with_capacity(b);
+        let mut masks = Vec::with_capacity(b);
+        for _ in 0..b {
+            let task = self.taskgen.sample();
+            let (row, mask) = task.demonstration(p, s)?;
+            rows.push(row);
+            masks.push(mask);
+        }
+        let rows_t = generation::rows_tensor(&rows);
+        let masks_t = generation::masks_tensor(&masks);
+        let mut inputs: Vec<&Tensor> = self.state.params.tensors.iter().collect();
+        inputs.push(&rows_t);
+        inputs.push(&masks_t);
+        let mut out = self.engine.run_refs("sft_grad", &inputs)?;
+        let loss = out.pop().unwrap().scalar_value_f32()?;
+        let grads = ParamSet::new(out);
+        let grads = if self.collective.world_size() > 1 {
+            self.collective.all_reduce_mean(self.rank, &grads)?
+        } else {
+            grads
+        };
+        self.state
+            .apply_grads(&self.engine, "adam_policy", &grads, self.cfg.sft_lr)?;
+        Ok(loss)
+    }
+
+    // -----------------------------------------------------------------
+    // Stages 1+2: generation + rewarding (with local DAPO resampling)
+    // -----------------------------------------------------------------
+
+    /// One generation+rewarding round over a fresh prompt batch.
+    fn rollout_round(&mut self) -> Result<(Vec<Task>, GenOutput, Vec<f32>)> {
+        let dims = self.engine.manifest().dims.clone();
+        let (b, p, g) = (dims.batch, dims.prompt_len, self.cfg.group_size);
+        // B/g distinct prompts, each repeated g times (GRPO groups)
+        let n_groups = b / g;
+        let mut tasks = Vec::with_capacity(b);
+        for _ in 0..n_groups {
+            let t = self.taskgen.sample();
+            for _ in 0..g {
+                tasks.push(t.clone());
+            }
+        }
+        let prompts: Vec<Vec<i32>> = tasks
+            .iter()
+            .map(|t| t.prompt_tokens(p))
+            .collect::<Result<_>>()?;
+        let engine = self.engine.clone();
+        let scfg = self.sampler_cfg();
+        let gen = self.timers.time("1_generation", || {
+            generation::generate(&engine, &self.state.params, &prompts, &scfg, &mut self.rng)
+        })?;
+        let rewards = self.timers.time("2_rewarding", || {
+            self.rewarder.score(&engine, &tasks, &gen)
+        })?;
+        Ok((tasks, gen, rewards))
+    }
+
+    /// Stages 1-2 with DAPO dynamic sampling: locally regenerate until a
+    /// full batch of informative groups is collected (paper §3.2) or the
+    /// round budget is exhausted (then pad with the freshest groups).
+    pub fn collect_rollout(&mut self) -> Result<RolloutBatch> {
+        let dims = self.engine.manifest().dims.clone();
+        let (b, g) = (dims.batch, self.cfg.group_size);
+
+        if !self.cfg.dynamic_sampling {
+            let (tasks, gen, rewards) = self.rollout_round()?;
+            return Ok(RolloutBatch { tasks, gen, rewards, rounds: 1 });
+        }
+
+        let mut acc_tasks: Vec<Task> = Vec::new();
+        let mut acc_rows: Vec<Vec<i32>> = Vec::new();
+        let mut acc_masks: Vec<Vec<f32>> = Vec::new();
+        let mut acc_lens: Vec<usize> = Vec::new();
+        let mut acc_rewards: Vec<f32> = Vec::new();
+        let mut last_round: Option<(Vec<Task>, GenOutput, Vec<f32>)> = None;
+        let mut rounds = 0;
+
+        while acc_tasks.len() < b && rounds < self.cfg.max_resample_rounds {
+            rounds += 1;
+            let (tasks, gen, rewards) = self.rollout_round()?;
+            let keep = sampling::dapo_filter(&rewards, g)?;
+            for &gi in &keep {
+                if acc_tasks.len() >= b {
+                    break;
+                }
+                let lo = gi * g;
+                for i in lo..lo + g {
+                    acc_tasks.push(tasks[i].clone());
+                    acc_rows.push(gen.rows[i].clone());
+                    acc_masks.push(gen.masks[i].clone());
+                    acc_lens.push(gen.gen_lens[i]);
+                    acc_rewards.push(rewards[i]);
+                }
+            }
+            last_round = Some((tasks, gen, rewards));
+        }
+
+        // pad with (possibly uninformative) groups from the last round so
+        // the fixed-shape batch is always full
+        if acc_tasks.len() < b {
+            let (tasks, gen, rewards) = last_round.context("no rollout rounds ran")?;
+            let mut gi = 0;
+            while acc_tasks.len() < b {
+                let lo = gi * g;
+                for i in lo..lo + g {
+                    acc_tasks.push(tasks[i].clone());
+                    acc_rows.push(gen.rows[i].clone());
+                    acc_masks.push(gen.masks[i].clone());
+                    acc_lens.push(gen.gen_lens[i]);
+                    acc_rewards.push(rewards[i]);
+                }
+                gi += 1;
+            }
+        }
+        acc_tasks.truncate(b);
+        acc_rows.truncate(b);
+        acc_masks.truncate(b);
+        acc_lens.truncate(b);
+        acc_rewards.truncate(b);
+
+        Ok(RolloutBatch {
+            tasks: acc_tasks,
+            gen: GenOutput { rows: acc_rows, gen_lens: acc_lens, masks: acc_masks },
+            rewards: acc_rewards,
+            rounds,
+        })
+    }
+
+    // -----------------------------------------------------------------
+    // Stages 3+4: preparation + training
+    // -----------------------------------------------------------------
+
+    fn logprob(&self, params: &ParamSet, tokens: &Tensor) -> Result<Tensor> {
+        let mut inputs: Vec<&Tensor> = params.tensors.iter().collect();
+        inputs.push(tokens);
+        Ok(self.engine.run_refs("logprob", &inputs)?.remove(0))
+    }
+
+    /// One full RLHF step.  Returns stats mean-reduced across controllers.
+    pub fn rlhf_step(&mut self, step: usize) -> Result<StepStats> {
+        let dims = self.engine.manifest().dims.clone();
+        let (b, s) = (dims.batch, dims.max_seq);
+        let batch = self.collect_rollout()?;
+
+        // ---- Stage 3: preparation ------------------------------------
+        let tokens = generation::rows_tensor(&batch.gen.rows);
+        let mask = generation::masks_tensor(&batch.gen.masks);
+        let (old_logp, ref_logp) = self.timers.time("3_preparation", || {
+            let old = self.logprob(&self.state.params, &tokens)?;
+            let rf = self.logprob(&self.ref_params, &tokens)?;
+            anyhow::Ok((old, rf))
+        })?;
+        let adv_seq = sampling::grpo_advantages(&batch.rewards, self.cfg.group_size)?;
+        let adv_rows = sampling::broadcast_advantages(&adv_seq, &batch.gen.masks);
+        let adv = Tensor::f32(vec![b, s], adv_rows.iter().flatten().copied().collect());
+
+        // ---- Stage 4: training ---------------------------------------
+        let timers = self.timers.clone();
+        let (loss, kl, entropy, clipfrac) = timers.time("4_training", || {
+            self.train_on(&tokens, &mask, &adv, &old_logp, &ref_logp)
+        })?;
+
+        // ---- telemetry (reduced) ---------------------------------------
+        let responses: Vec<String> = batch
+            .gen
+            .rows
+            .iter()
+            .map(|r| tokenizer::extract_response(r, dims.prompt_len))
+            .collect();
+        let correct = batch
+            .tasks
+            .iter()
+            .zip(&responses)
+            .filter(|(t, r)| t.check(r))
+            .count() as f64;
+        let local = vec![
+            loss as f64,
+            kl as f64,
+            entropy as f64,
+            clipfrac as f64,
+            batch.rewards.iter().map(|&r| r as f64).sum::<f64>() / b as f64,
+            correct / b as f64,
+            batch.gen.gen_lens.iter().sum::<usize>() as f64 / b as f64,
+            batch.rounds as f64,
+        ];
+        let reduced = if self.collective.world_size() > 1 {
+            self.collective.mean_scalars(self.rank, local)
+        } else {
+            local
+        };
+        Ok(StepStats {
+            step,
+            loss: reduced[0],
+            kl: reduced[1],
+            entropy: reduced[2],
+            clipfrac: reduced[3],
+            mean_reward: reduced[4],
+            accuracy: reduced[5],
+            mean_gen_len: reduced[6],
+            gen_rounds: reduced[7],
+        })
+    }
+
+    /// Stage-4 body: fused fast path at world=1, grad + all-reduce + adam
+    /// otherwise (verified equivalent in runtime_integration tests).
+    fn train_on(
+        &mut self,
+        tokens: &Tensor,
+        mask: &Tensor,
+        adv: &Tensor,
+        old_logp: &Tensor,
+        ref_logp: &Tensor,
+    ) -> Result<(f32, f32, f32, f32)> {
+        let n = self.state.params.tensors.len();
+        if self.collective.world_size() == 1 {
+            self.state.step += 1;
+            let step_t = Tensor::scalar_f32(self.state.step as f32);
+            let lr_t = Tensor::scalar_f32(self.cfg.lr);
+            let clip_t = Tensor::scalar_f32(self.cfg.clip_eps);
+            let kl_t = Tensor::scalar_f32(self.cfg.kl_coef);
+            let ent_t = Tensor::scalar_f32(self.cfg.ent_coef);
+            let mut inputs: Vec<&Tensor> = Vec::with_capacity(3 * n + 10);
+            inputs.extend(self.state.params.tensors.iter());
+            inputs.extend(self.state.m.tensors.iter());
+            inputs.extend(self.state.v.tensors.iter());
+            inputs.extend([tokens, mask, adv, old_logp, ref_logp]);
+            inputs.extend([&step_t, &lr_t, &clip_t, &kl_t, &ent_t]);
+            let mut out = self.engine.run_refs("train_step", &inputs)?;
+            let clipfrac = out.pop().unwrap().scalar_value_f32()?;
+            let entropy = out.pop().unwrap().scalar_value_f32()?;
+            let kl = out.pop().unwrap().scalar_value_f32()?;
+            let loss = out.pop().unwrap().scalar_value_f32()?;
+            let v = out.split_off(2 * n);
+            let m = out.split_off(n);
+            self.state.params = ParamSet::new(out);
+            self.state.m = ParamSet::new(m);
+            self.state.v = ParamSet::new(v);
+            Ok((loss, kl, entropy, clipfrac))
+        } else {
+            let clip_t = Tensor::scalar_f32(self.cfg.clip_eps);
+            let kl_t = Tensor::scalar_f32(self.cfg.kl_coef);
+            let ent_t = Tensor::scalar_f32(self.cfg.ent_coef);
+            let mut inputs: Vec<&Tensor> = self.state.params.tensors.iter().collect();
+            inputs.extend([tokens, mask, adv, old_logp, ref_logp]);
+            inputs.extend([&clip_t, &kl_t, &ent_t]);
+            let mut out = self.engine.run_refs("policy_grad", &inputs)?;
+            let clipfrac = out.pop().unwrap().scalar_value_f32()?;
+            let entropy = out.pop().unwrap().scalar_value_f32()?;
+            let kl = out.pop().unwrap().scalar_value_f32()?;
+            let loss = out.pop().unwrap().scalar_value_f32()?;
+            let grads = ParamSet::new(out);
+            let grads = self.timers.time("4_grad_allreduce", || {
+                self.collective.all_reduce_mean(self.rank, &grads)
+            })?;
+            self.state
+                .apply_grads(&self.engine, "adam_policy", &grads, self.cfg.lr)?;
+            Ok((loss, kl, entropy, clipfrac))
+        }
+    }
+
+    /// Greedy-decoded accuracy on held-out tasks (evaluation).
+    pub fn evaluate(&mut self, n_batches: usize) -> Result<f64> {
+        let dims = self.engine.manifest().dims.clone();
+        let scfg = SamplerConfig { temperature: 0.0, top_k: 1, stop_at_eos: true };
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut eval_gen = TaskGen::new(self.cfg.task_kinds()?, 0xEAA1 + self.rank as u64);
+        for _ in 0..n_batches {
+            let tasks: Vec<Task> = eval_gen.sample_n(dims.batch);
+            let prompts: Vec<Vec<i32>> = tasks
+                .iter()
+                .map(|t| t.prompt_tokens(dims.prompt_len))
+                .collect::<Result<_>>()?;
+            let gen = generation::generate(
+                &self.engine,
+                &self.state.params,
+                &prompts,
+                &scfg,
+                &mut self.rng,
+            )?;
+            for (t, row) in tasks.iter().zip(&gen.rows) {
+                let resp = tokenizer::extract_response(row, dims.prompt_len);
+                if t.check(&resp) {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+}

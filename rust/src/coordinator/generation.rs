@@ -1,0 +1,231 @@
+//! Stage-1 generation engine (paper §2.2): batched auto-regressive
+//! sampling over the KV-cached `prefill`/`decode_step` artifacts — the
+//! vLLM/SGLang analogue the coordinator schedules.
+//!
+//! The whole batch decodes in lockstep (fixed artifact shapes); finished
+//! rows keep feeding PAD but their sampled tokens are ignored.  Per-row
+//! generation lengths come back alongside the padded token matrix — the
+//! long-tail signal the placement experiments consume.
+
+use anyhow::{bail, Result};
+
+use crate::data::tokenizer::{EOS, PAD};
+use crate::runtime::engine::Engine;
+use crate::runtime::params::ParamSet;
+use crate::runtime::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct SamplerConfig {
+    pub temperature: f32,
+    pub top_k: usize,
+    /// stop decoding a row at EOS
+    pub stop_at_eos: bool,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        SamplerConfig { temperature: 0.8, top_k: 16, stop_at_eos: true }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GenOutput {
+    /// [B][S] full rows: prompt + generated + PAD
+    pub rows: Vec<Vec<i32>>,
+    /// per-row generated token count (incl. EOS when present)
+    pub gen_lens: Vec<usize>,
+    /// per-row loss mask over [S]: 1.0 on generated tokens
+    pub masks: Vec<Vec<f32>>,
+}
+
+/// Generate responses for a batch of fixed-width prompts.
+/// `prompts` must be exactly [batch][prompt_len] (the artifact contract).
+///
+/// Fast path: when the artifact set carries `generate_rollout` (the fused
+/// prefill+scan+sample module — see EXPERIMENTS.md §Perf) and the sampler
+/// is stochastic with the baked top-k, the whole rollout is ONE engine
+/// call with no per-token KV-cache round-trips.  Greedy eval and custom
+/// top-k fall back to the per-token `prefill`/`decode_step` path.
+pub fn generate(
+    engine: &Engine,
+    params: &ParamSet,
+    prompts: &[Vec<i32>],
+    cfg: &SamplerConfig,
+    rng: &mut Rng,
+) -> Result<GenOutput> {
+    let fused_ok = cfg.temperature > 0.0
+        && cfg.top_k == 16 // the top-k baked into the artifact
+        && cfg.stop_at_eos
+        && engine.manifest().artifacts.contains_key("generate_rollout");
+    if fused_ok {
+        return generate_fused(engine, params, prompts, cfg, rng);
+    }
+    generate_stepwise(engine, params, prompts, cfg, rng)
+}
+
+/// One-call rollout via the fused `generate_rollout` artifact.
+fn generate_fused(
+    engine: &Engine,
+    params: &ParamSet,
+    prompts: &[Vec<i32>],
+    cfg: &SamplerConfig,
+    rng: &mut Rng,
+) -> Result<GenOutput> {
+    let dims = engine.manifest().dims.clone();
+    let (b, p, s) = (dims.batch, dims.prompt_len, dims.max_seq);
+    if prompts.len() != b || prompts.iter().any(|r| r.len() != p) {
+        bail!("prompts must be [{b}][{p}]");
+    }
+    let flat: Vec<i32> = prompts.iter().flatten().copied().collect();
+    let prompts_t = Tensor::i32(vec![b, p], flat);
+    let seed_t = Tensor::scalar_u32(rng.next_u64() as u32);
+    let temp_t = Tensor::scalar_f32(cfg.temperature);
+    let mut inputs: Vec<&Tensor> = params.tensors.iter().collect();
+    inputs.extend([&prompts_t, &seed_t, &temp_t]);
+    let rows_t = engine.run_refs("generate_rollout", &inputs)?.remove(0);
+    let data = rows_t.as_i32()?;
+    let mut rows = Vec::with_capacity(b);
+    let mut gen_lens = Vec::with_capacity(b);
+    let mut masks = Vec::with_capacity(b);
+    for row_i in 0..b {
+        let mut row = data[row_i * s..(row_i + 1) * s].to_vec();
+        // gen length = up to and including the first EOS; the artifact
+        // emits PAD after EOS by construction
+        let gen = &row[p..];
+        let glen = match gen.iter().position(|&t| t == EOS) {
+            Some(i) => i + 1,
+            None => s - p,
+        };
+        for x in row[p + glen..].iter_mut() {
+            *x = PAD;
+        }
+        let mut m = vec![0.0f32; s];
+        for x in m.iter_mut().skip(p).take(glen) {
+            *x = 1.0;
+        }
+        rows.push(row);
+        gen_lens.push(glen);
+        masks.push(m);
+    }
+    Ok(GenOutput { rows, gen_lens, masks })
+}
+
+/// Per-token decode loop (`prefill` + `decode_step`) — the flexible path.
+fn generate_stepwise(
+    engine: &Engine,
+    params: &ParamSet,
+    prompts: &[Vec<i32>],
+    cfg: &SamplerConfig,
+    rng: &mut Rng,
+) -> Result<GenOutput> {
+    let dims = engine.manifest().dims.clone();
+    let (b, p, s, v) = (dims.batch, dims.prompt_len, dims.max_seq, dims.vocab);
+    if prompts.len() != b || prompts.iter().any(|r| r.len() != p) {
+        bail!(
+            "prompts must be [{b}][{p}], got [{}][{}]",
+            prompts.len(),
+            prompts.first().map(|r| r.len()).unwrap_or(0)
+        );
+    }
+
+    // prefill
+    let flat: Vec<i32> = prompts.iter().flatten().copied().collect();
+    let mut inputs = params.tensors.clone();
+    inputs.push(Tensor::i32(vec![b, p], flat));
+    let mut out = engine.run("prefill", &inputs)?;
+    let mut logits = out.remove(0);
+    let mut ck = out.remove(0);
+    let mut cv = out.remove(0);
+
+    let mut rows: Vec<Vec<i32>> = prompts.to_vec();
+    let mut done = vec![false; b];
+    let mut gen_lens = vec![0usize; b];
+
+    for pos in p..s {
+        // sample next token per row from `logits` [B, V]
+        let ld = logits.as_f32()?;
+        let mut step_tokens = Vec::with_capacity(b);
+        for row in 0..b {
+            let tok = if done[row] {
+                PAD
+            } else {
+                let slice = &ld[row * v..(row + 1) * v];
+                let t = rng.sample_logits(slice, cfg.temperature, cfg.top_k) as i32;
+                gen_lens[row] += 1;
+                if cfg.stop_at_eos && t == EOS {
+                    done[row] = true;
+                }
+                t
+            };
+            rows[row].push(tok);
+            step_tokens.push(tok);
+        }
+        if done.iter().all(|&d| d) || pos == s - 1 {
+            // pad the remaining columns
+            for row in rows.iter_mut() {
+                row.resize(s, PAD);
+            }
+            break;
+        }
+        // decode next position
+        let mut inputs = params.tensors.clone();
+        inputs.push(ck);
+        inputs.push(cv);
+        inputs.push(Tensor::i32(vec![b], step_tokens));
+        inputs.push(Tensor::scalar_i32(pos as i32));
+        let mut out = engine.run("decode_step", &inputs)?;
+        logits = out.remove(0);
+        ck = out.remove(0);
+        cv = out.remove(0);
+    }
+
+    // loss masks over generated spans
+    let masks = rows
+        .iter()
+        .zip(&gen_lens)
+        .map(|(_, &glen)| {
+            let mut m = vec![0.0f32; s];
+            for x in m.iter_mut().skip(p).take(glen) {
+                *x = 1.0;
+            }
+            m
+        })
+        .collect();
+
+    Ok(GenOutput { rows, gen_lens, masks })
+}
+
+/// Tokens matrix [B,S] as a Tensor (training input layout).
+pub fn rows_tensor(rows: &[Vec<i32>]) -> Tensor {
+    let b = rows.len();
+    let s = rows[0].len();
+    Tensor::i32(vec![b, s], rows.iter().flatten().copied().collect())
+}
+
+pub fn masks_tensor(masks: &[Vec<f32>]) -> Tensor {
+    let b = masks.len();
+    let s = masks[0].len();
+    Tensor::f32(vec![b, s], masks.iter().flatten().copied().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_tensor_layout() {
+        let t = rows_tensor(&[vec![1, 2], vec![3, 4]]);
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(t.as_i32().unwrap(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn masks_tensor_layout() {
+        let t = masks_tensor(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(t.as_f32().unwrap(), &[0.0, 1.0, 1.0, 0.0]);
+    }
+
+    // engine-backed generation tests live in rust/tests/coordinator_integration.rs
+}

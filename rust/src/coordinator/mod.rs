@@ -1,0 +1,21 @@
+//! Layer-3 coordinator: the paper's system contribution.
+//!
+//! * `controller` — the SPMD parallel controller (§3.1);
+//! * `single` — the single-controller baseline data plane (§2.2/§3.1);
+//! * `collective` — inter-controller collectives (§3.1);
+//! * `generation` — the stage-1 generation engine (KV-cached sampling);
+//! * `sampling` — GRPO/GAE advantages + DAPO dynamic-sampling filter (§3.2);
+//! * `pretrain` — BT-reward and generative-verifier pre-training (§5);
+//! * `workflow` — the 4-stage RLHF workflow definition (§2.2).
+
+pub mod collective;
+pub mod controller;
+pub mod generation;
+pub mod pretrain;
+pub mod sampling;
+pub mod single;
+pub mod workflow;
+
+pub use collective::{Collective, Rendezvous};
+pub use controller::{Controller, RolloutBatch, StepStats};
+pub use generation::{generate, GenOutput, SamplerConfig};

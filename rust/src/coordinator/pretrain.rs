@@ -1,0 +1,157 @@
+//! Reward-model pre-training utilities (single-engine, used before the
+//! RLHF loop starts):
+//!
+//! * `train_bt` — Bradley-Terry reward model on synthetic preference pairs
+//!   (the paper's "traditional Bradley-Terry reward model" baseline, §5);
+//! * `train_verifier` — generative verifier SFT on labelled verification
+//!   strings (the paper's generative-reward path, §3.2 / [48]).
+
+use anyhow::Result;
+
+use crate::coordinator::generation;
+use crate::data::tasks::{preference_pair, verifier_example, TaskGen, TaskKind};
+use crate::runtime::engine::Engine;
+use crate::runtime::params::{init_policy, init_scalar, ParamSet, TrainState};
+use crate::runtime::tensor::Tensor;
+
+pub struct PretrainReport {
+    pub losses: Vec<f32>,
+    /// final training-batch metric: pairwise accuracy (BT) or label
+    /// accuracy (verifier)
+    pub final_metric: f32,
+}
+
+/// Train a Bradley-Terry reward model.  Returns (params, report).
+pub fn train_bt(
+    engine: &Engine,
+    kinds: Vec<TaskKind>,
+    steps: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<(ParamSet, PretrainReport)> {
+    let dims = engine.manifest().dims.clone();
+    let (b, s, p) = (dims.batch, dims.max_seq, dims.prompt_len);
+    let tree = engine.manifest().scalar_tree.clone();
+    let mut state = TrainState::new(init_scalar(engine, seed as u32)?, &tree);
+    let mut gen = TaskGen::new(kinds, seed);
+    let mut losses = Vec::with_capacity(steps);
+    let mut acc = 0.0f32;
+    let n = state.params.tensors.len();
+    for _ in 0..steps {
+        let mut chosen = Vec::with_capacity(b * s);
+        let mut rejected = Vec::with_capacity(b * s);
+        let mut cidx = Vec::with_capacity(b);
+        let mut ridx = Vec::with_capacity(b);
+        for _ in 0..b {
+            let pair = preference_pair(&mut gen, p, s)?;
+            chosen.extend(pair.chosen);
+            rejected.extend(pair.rejected);
+            cidx.push(pair.chosen_idx as i32);
+            ridx.push(pair.rejected_idx as i32);
+        }
+        let mut inputs = state.params.tensors.clone();
+        inputs.push(Tensor::i32(vec![b, s], chosen));
+        inputs.push(Tensor::i32(vec![b, s], rejected));
+        inputs.push(Tensor::i32(vec![b], cidx));
+        inputs.push(Tensor::i32(vec![b], ridx));
+        let mut out = engine.run("bt_grad", &inputs)?;
+        acc = out.pop().unwrap().scalar_value_f32()?;
+        let loss = out.pop().unwrap().scalar_value_f32()?;
+        out.truncate(n);
+        let grads = ParamSet::new(out);
+        state.apply_grads(engine, "adam_scalar", &grads, lr)?;
+        losses.push(loss);
+    }
+    Ok((state.params, PretrainReport { losses, final_metric: acc }))
+}
+
+/// SFT-train a generative verifier LM.  Returns (params, report).
+pub fn train_verifier(
+    engine: &Engine,
+    kinds: Vec<TaskKind>,
+    steps: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<(ParamSet, PretrainReport)> {
+    let dims = engine.manifest().dims.clone();
+    let (b, s, p) = (dims.batch, dims.max_seq, dims.prompt_len);
+    let tree = engine.manifest().policy_tree.clone();
+    let mut state = TrainState::new(init_policy(engine, seed as u32)?, &tree);
+    let mut gen = TaskGen::new(kinds.clone(), seed);
+    let mut losses = Vec::with_capacity(steps);
+    let n = state.params.tensors.len();
+    for _ in 0..steps {
+        let mut rows = Vec::with_capacity(b);
+        let mut masks = Vec::with_capacity(b);
+        for _ in 0..b {
+            let (row, mask, _correct) = verifier_example(&mut gen, p, s)?;
+            rows.push(row);
+            masks.push(mask);
+        }
+        let mut inputs = state.params.tensors.clone();
+        inputs.push(generation::rows_tensor(&rows));
+        inputs.push(generation::masks_tensor(&masks));
+        let mut out = engine.run("sft_grad", &inputs)?;
+        let loss = out.pop().unwrap().scalar_value_f32()?;
+        out.truncate(n);
+        let grads = ParamSet::new(out);
+        state.apply_grads(engine, "adam_policy", &grads, lr)?;
+        losses.push(loss);
+    }
+    // measure verdict accuracy on fresh labelled examples
+    let metric = verifier_accuracy(engine, &state.params, kinds, seed + 1)?;
+    Ok((state.params, PretrainReport { losses, final_metric: metric }))
+}
+
+/// Label accuracy of a verifier on fresh (task, answer, label) examples
+/// using the single-token y/n decision.
+pub fn verifier_accuracy(
+    engine: &Engine,
+    params: &ParamSet,
+    kinds: Vec<TaskKind>,
+    seed: u64,
+) -> Result<f32> {
+    let dims = engine.manifest().dims.clone();
+    let (b, s, p, v) = (dims.batch, dims.max_seq, dims.prompt_len, dims.vocab);
+    let mut gen = TaskGen::new(kinds, seed);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for _ in 0..4 {
+        let mut rows = Vec::with_capacity(b);
+        let mut qends = Vec::with_capacity(b);
+        let mut labels = Vec::with_capacity(b);
+        for _ in 0..b {
+            let (row, mask, label) = verifier_example(&mut gen, p, s)?;
+            // the verdict starts where the mask starts; q end is one before
+            let vstart = mask.iter().position(|&m| m == 1.0).unwrap();
+            rows.push(row);
+            qends.push(vstart - 1);
+            labels.push(label);
+        }
+        // blank out each row's verdict tokens so the model can't copy them
+        let blanked: Vec<Vec<i32>> = rows
+            .iter()
+            .zip(&qends)
+            .map(|(r, &q)| {
+                let mut r = r.clone();
+                for x in r.iter_mut().skip(q + 1) {
+                    *x = 0;
+                }
+                r
+            })
+            .collect();
+        let mut inputs = params.tensors.clone();
+        inputs.push(generation::rows_tensor(&blanked));
+        let logits = engine.run("fwd_logits", &inputs)?.remove(0);
+        let ld = logits.as_f32()?;
+        for i in 0..b {
+            let base = i * s * v + qends[i] * v;
+            let yes = ld[base + b'y' as usize] > ld[base + b'n' as usize];
+            if yes == labels[i] {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(correct as f32 / total as f32)
+}

@@ -1,0 +1,208 @@
+//! Advantage estimation + DAPO dynamic sampling (paper §3.2).
+//!
+//! * `grpo_advantages` — group-relative normalisation (mirrors the Python
+//!   oracle `kernels/ref.py::grpo_advantage_ref`; cross-checked in tests).
+//! * `gae` — generalised advantage estimation for the PPO/critic path
+//!   (mirrors `gae_ref`).
+//! * `dapo_filter` — "[39] proposes to filter out prompts with the accuracy
+//!   equal to 1 and 0 ... and trigger re-sampling": groups whose rewards
+//!   are all-max or all-min carry no gradient signal under GRPO and are
+//!   dropped; the workflow regenerates until the batch is full.
+
+use anyhow::{bail, Result};
+
+/// Group-relative advantages: (r - mean) / (std + eps) within contiguous
+/// groups of `group_size`.  Returns per-sequence advantages.
+pub fn grpo_advantages(rewards: &[f32], group_size: usize) -> Result<Vec<f32>> {
+    if group_size == 0 || rewards.len() % group_size != 0 {
+        bail!("rewards len {} not divisible by group {group_size}", rewards.len());
+    }
+    let mut out = Vec::with_capacity(rewards.len());
+    for group in rewards.chunks(group_size) {
+        let n = group.len() as f32;
+        let mean: f32 = group.iter().sum::<f32>() / n;
+        let var: f32 = group.iter().map(|r| (r - mean) * (r - mean)).sum::<f32>() / n;
+        let std = var.sqrt();
+        for &r in group {
+            out.push((r - mean) / (std + 1e-6));
+        }
+    }
+    Ok(out)
+}
+
+/// Broadcast per-sequence advantages over the generated-token mask:
+/// adv_token[b][t] = adv_seq[b] * mask[b][t].
+pub fn broadcast_advantages(adv_seq: &[f32], masks: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    adv_seq
+        .iter()
+        .zip(masks)
+        .map(|(&a, m)| m.iter().map(|&mk| a * mk).collect())
+        .collect()
+}
+
+/// GAE over [B][S] token rewards/values (PPO path).
+/// Returns (advantages, returns).
+pub fn gae(
+    rewards: &[Vec<f32>],
+    values: &[Vec<f32>],
+    masks: &[Vec<f32>],
+    gamma: f32,
+    lam: f32,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let mut advs = Vec::with_capacity(rewards.len());
+    let mut rets = Vec::with_capacity(rewards.len());
+    for ((r, v), m) in rewards.iter().zip(values).zip(masks) {
+        let s = r.len();
+        let mut adv = vec![0.0f32; s];
+        let mut next_adv = 0.0f32;
+        let mut next_val = 0.0f32;
+        for t in (0..s).rev() {
+            let delta = r[t] + gamma * next_val * m[t] - v[t];
+            next_adv = delta + gamma * lam * next_adv * m[t];
+            adv[t] = next_adv;
+            next_val = v[t];
+        }
+        let ret: Vec<f32> = adv
+            .iter()
+            .zip(v)
+            .zip(m)
+            .map(|((a, vv), mm)| (a + vv) * mm)
+            .collect();
+        let adv: Vec<f32> = adv.iter().zip(m).map(|(a, mm)| a * mm).collect();
+        advs.push(adv);
+        rets.push(ret);
+    }
+    (advs, rets)
+}
+
+/// DAPO group filter: indices of groups that carry signal (not all-equal
+/// reward — covers both "accuracy 1" and "accuracy 0" on binary rewards).
+pub fn dapo_filter(rewards: &[f32], group_size: usize) -> Result<Vec<usize>> {
+    if group_size == 0 || rewards.len() % group_size != 0 {
+        bail!("rewards len {} not divisible by group {group_size}", rewards.len());
+    }
+    Ok(rewards
+        .chunks(group_size)
+        .enumerate()
+        .filter(|(_, g)| {
+            let first = g[0];
+            g.iter().any(|&r| (r - first).abs() > 1e-6)
+        })
+        .map(|(i, _)| i)
+        .collect())
+}
+
+/// Whiten advantages batch-wide (optional PPO stabiliser).
+pub fn whiten(adv: &mut [f32]) {
+    let n = adv.len() as f32;
+    if n < 2.0 {
+        return;
+    }
+    let mean: f32 = adv.iter().sum::<f32>() / n;
+    let var: f32 = adv.iter().map(|a| (a - mean) * (a - mean)).sum::<f32>() / n;
+    let std = var.sqrt() + 1e-8;
+    for a in adv {
+        *a = (*a - mean) / std;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn grpo_matches_python_oracle_case() {
+        // mirrored in python/tests/test_losses.py::test_grpo_advantage_zero_mean_unit_std
+        let r = [1.0, 2.0, 3.0, 4.0, 10.0, 10.0, 10.0, 14.0];
+        let adv = grpo_advantages(&r, 4).unwrap();
+        for g in adv.chunks(4) {
+            let mean: f32 = g.iter().sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5);
+        }
+        // exact value check against numpy: group1 std = sqrt(1.25)
+        let expected0 = (1.0f32 - 2.5) / (1.25f32.sqrt() + 1e-6);
+        assert!((adv[0] - expected0).abs() < 1e-5, "{} vs {expected0}", adv[0]);
+    }
+
+    #[test]
+    fn grpo_constant_group_zero() {
+        let adv = grpo_advantages(&[5.0; 4], 4).unwrap();
+        assert!(adv.iter().all(|a| a.abs() < 1e-3));
+    }
+
+    #[test]
+    fn grpo_properties() {
+        prop::check("grpo-zero-mean", |rng| {
+            let gs = 2 + rng.below(6);
+            let ngroups = 1 + rng.below(4);
+            let rewards: Vec<f32> = (0..gs * ngroups)
+                .map(|_| rng.range(-5.0, 5.0) as f32)
+                .collect();
+            let adv = grpo_advantages(&rewards, gs).unwrap();
+            for g in adv.chunks(gs) {
+                let mean: f32 = g.iter().sum::<f32>() / gs as f32;
+                crate::prop_assert!(mean.abs() < 1e-4, "group mean {mean}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn broadcast_respects_mask() {
+        let adv = broadcast_advantages(&[2.0, -1.0], &[vec![0.0, 1.0], vec![1.0, 1.0]]);
+        assert_eq!(adv, vec![vec![0.0, 2.0], vec![-1.0, -1.0]]);
+    }
+
+    #[test]
+    fn gae_terminal_reward_decays() {
+        // mirrors python test_gae_terminal_only_reward
+        let (gamma, lam) = (0.9f32, 0.8f32);
+        let rewards = vec![vec![0.0, 0.0, 0.0, 0.0, 1.0]];
+        let values = vec![vec![0.0; 5]];
+        let masks = vec![vec![1.0; 5]];
+        let (adv, ret) = gae(&rewards, &values, &masks, gamma, lam);
+        for t in 0..5 {
+            let expected = (gamma * lam).powi((4 - t) as i32);
+            assert!((adv[0][t] - expected).abs() < 1e-5, "t={t}");
+        }
+        assert_eq!(adv, ret);
+    }
+
+    #[test]
+    fn gae_perfect_critic_zero_adv() {
+        let rewards = vec![vec![0.0, 0.0, 0.0, 2.0]];
+        let values = vec![vec![2.0; 4]];
+        let masks = vec![vec![1.0; 4]];
+        let (adv, _) = gae(&rewards, &values, &masks, 1.0, 1.0);
+        assert!(adv[0].iter().all(|a| a.abs() < 1e-5), "{adv:?}");
+    }
+
+    #[test]
+    fn dapo_drops_uninformative_groups() {
+        // groups: mixed, all-correct, all-wrong, mixed
+        let rewards = [1.0, 0.0, 1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0];
+        let keep = dapo_filter(&rewards, 3).unwrap();
+        assert_eq!(keep, vec![0, 3]);
+    }
+
+    #[test]
+    fn dapo_all_informative_keeps_all() {
+        let rewards = [1.0, 0.0, 0.0, 1.0];
+        assert_eq!(dapo_filter(&rewards, 2).unwrap(), vec![0, 1]);
+    }
+
+    #[test]
+    fn whiten_normalises() {
+        let mut a = vec![1.0, 2.0, 3.0, 4.0];
+        whiten(&mut a);
+        let mean: f32 = a.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+    }
+
+    #[test]
+    fn invalid_group_sizes_rejected() {
+        assert!(grpo_advantages(&[1.0; 5], 2).is_err());
+        assert!(dapo_filter(&[1.0; 5], 0).is_err());
+    }
+}

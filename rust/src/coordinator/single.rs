@@ -1,0 +1,208 @@
+//! Single-controller data plane — the baseline the parallel-controller
+//! architecture exists to beat (paper §3.1, Fig. 1).
+//!
+//! In the hybrid/single-controller design, every rollout's data (including
+//! multimodal payloads) flows through ONE controller process: its memory
+//! must hold the whole rollout and its RPC link must move every byte.  The
+//! parallel design shards payloads across N controllers, each touching
+//! only its slice.  `route_single` / `route_parallel` move **real bytes
+//! through real threads and channels** so E1 measures actual memory and
+//! wallclock, not a model.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::data::payload::{Payload, PayloadSpec};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct RouteReport {
+    pub controllers: usize,
+    pub samples: usize,
+    pub total_bytes: usize,
+    /// max bytes resident in any single controller at once
+    pub peak_bytes_per_controller: usize,
+    pub wall_secs: f64,
+    pub throughput_gbps: f64,
+}
+
+/// Process one payload "in the controller": checksum every image buffer
+/// (stands in for the controller-side packing/copy work §3.1 describes).
+fn controller_work(p: &Payload) -> u64 {
+    let mut acc = 0u64;
+    for img in &p.images {
+        // touch every 64th byte — bandwidth-bound, like a copy
+        let mut i = 0;
+        while i < img.len() {
+            acc = acc.wrapping_add(img[i] as u64);
+            i += 64;
+        }
+    }
+    acc
+}
+
+/// Centralised routing: workers produce payloads, ONE controller receives,
+/// holds and processes the entire rollout before releasing it downstream.
+/// Errors with OOM when the resident set would exceed `mem_limit_bytes`.
+pub fn route_single(
+    spec: &PayloadSpec,
+    samples: usize,
+    mem_limit_bytes: usize,
+    seed: u64,
+) -> Result<RouteReport> {
+    let (tx, rx) = mpsc::sync_channel::<Payload>(4);
+    let spec2 = spec.clone();
+    let producer = std::thread::spawn(move || {
+        let mut rng = Rng::new(seed);
+        for i in 0..samples {
+            if tx.send(spec2.generate(i as u64, &mut rng)).is_err() {
+                break;
+            }
+        }
+    });
+
+    let t0 = Instant::now();
+    let mut held: Vec<Payload> = Vec::with_capacity(samples);
+    let mut resident = 0usize;
+    let mut peak = 0usize;
+    let mut checksum = 0u64;
+    let mut oom = false;
+    for p in rx {
+        resident += p.size_bytes();
+        peak = peak.max(resident);
+        if resident > mem_limit_bytes {
+            oom = true;
+            break; // drops the receiver; producer unblocks on send error
+        }
+        checksum = checksum.wrapping_add(controller_work(&p));
+        // the single controller must HOLD the whole rollout until the stage
+        // transition (the §3.1 memory wall)
+        held.push(p);
+    }
+    producer.join().ok();
+    if oom {
+        bail!(
+            "single controller OOM: resident {:.1} GB exceeds limit {:.1} GB \
+             after {} samples (paper §3.1)",
+            resident as f64 / 1e9,
+            mem_limit_bytes as f64 / 1e9,
+            held.len()
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total: usize = held.iter().map(|p| p.size_bytes()).sum();
+    std::hint::black_box(checksum);
+    Ok(RouteReport {
+        controllers: 1,
+        samples,
+        total_bytes: total,
+        peak_bytes_per_controller: peak,
+        wall_secs: wall,
+        throughput_gbps: total as f64 / 1e9 / wall.max(1e-9),
+    })
+}
+
+/// Parallel-controller routing: N controllers each own `samples / n`
+/// samples end-to-end.  Peak residency per controller is its shard only.
+pub fn route_parallel(
+    spec: &PayloadSpec,
+    samples: usize,
+    n_controllers: usize,
+    seed: u64,
+) -> Result<RouteReport> {
+    if n_controllers == 0 || samples % n_controllers != 0 {
+        bail!("samples {samples} must divide across {n_controllers} controllers");
+    }
+    let per = samples / n_controllers;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_controllers)
+        .map(|rank| {
+            let spec = spec.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(seed ^ (rank as u64) << 32);
+                let mut held = Vec::with_capacity(per);
+                let mut resident = 0usize;
+                let mut peak = 0usize;
+                let mut checksum = 0u64;
+                for i in 0..per {
+                    let p = spec.generate((rank * per + i) as u64, &mut rng);
+                    resident += p.size_bytes();
+                    peak = peak.max(resident);
+                    checksum = checksum.wrapping_add(controller_work(&p));
+                    held.push(p);
+                }
+                std::hint::black_box(checksum);
+                let total: usize = held.iter().map(|p| p.size_bytes()).sum();
+                (peak, total)
+            })
+        })
+        .collect();
+    let mut peak = 0usize;
+    let mut total = 0usize;
+    for h in handles {
+        let (p, t) = h.join().expect("controller thread panicked");
+        peak = peak.max(p);
+        total += t;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(RouteReport {
+        controllers: n_controllers,
+        samples,
+        total_bytes: total,
+        peak_bytes_per_controller: peak,
+        wall_secs: wall,
+        throughput_gbps: total as f64 / 1e9 / wall.max(1e-9),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> PayloadSpec {
+        // 32 × 64×64×3 ≈ 390 KB per sample — fast enough for unit tests
+        PayloadSpec::paper_2k().scaled(32)
+    }
+
+    #[test]
+    fn parallel_peak_is_sharded() {
+        let spec = small_spec();
+        let single = route_single(&spec, 16, usize::MAX, 1).unwrap();
+        let par = route_parallel(&spec, 16, 4, 1).unwrap();
+        assert_eq!(single.total_bytes, par.total_bytes);
+        // each of 4 controllers holds ~1/4 of the rollout
+        assert!(
+            par.peak_bytes_per_controller <= single.peak_bytes_per_controller / 3,
+            "par {} vs single {}",
+            par.peak_bytes_per_controller,
+            single.peak_bytes_per_controller
+        );
+    }
+
+    #[test]
+    fn single_controller_ooms_at_limit() {
+        let spec = small_spec();
+        let limit = spec.bytes_per_sample() * 4; // only 4 samples fit
+        let err = route_single(&spec, 16, limit, 2).unwrap_err().to_string();
+        assert!(err.contains("OOM"), "{err}");
+        // while 4 parallel controllers with the same per-controller budget fit
+        let par = route_parallel(&spec, 16, 4, 2).unwrap();
+        assert!(par.peak_bytes_per_controller <= limit);
+    }
+
+    #[test]
+    fn reports_are_consistent() {
+        let spec = small_spec();
+        let r = route_parallel(&spec, 8, 2, 3).unwrap();
+        assert_eq!(r.samples, 8);
+        assert_eq!(r.total_bytes, spec.bytes_per_sample() * 8);
+        assert!(r.wall_secs > 0.0 && r.throughput_gbps > 0.0);
+    }
+
+    #[test]
+    fn indivisible_shard_rejected() {
+        assert!(route_parallel(&small_spec(), 10, 3, 0).is_err());
+    }
+}

@@ -1,0 +1,123 @@
+//! The 4-stage RLHF workflow (paper §2.2) as an explicit state machine.
+//!
+//! The workflow definition is shared by the real training loop
+//! (`launch::run_training`) and the placement simulators (`placement::*`):
+//! stages, their model roles, and the legal transitions — including the
+//! *local* Generation↔Rewarding loop dynamic sampling needs (§3.1's "local
+//! state transitions").
+
+use crate::cluster::device::ModelRole;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Generation,
+    Rewarding,
+    Preparation,
+    Training,
+}
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Generation => "generation",
+            Stage::Rewarding => "rewarding",
+            Stage::Preparation => "preparation",
+            Stage::Training => "training",
+        }
+    }
+
+    /// Roles that must be resident for this stage.
+    pub fn roles(&self) -> &'static [ModelRole] {
+        match self {
+            Stage::Generation => &[ModelRole::PolicyGen],
+            Stage::Rewarding => &[ModelRole::RewardGen],
+            Stage::Preparation => &[ModelRole::PolicyTrain, ModelRole::Reference],
+            Stage::Training => &[ModelRole::PolicyTrain],
+        }
+    }
+
+    /// Legal successors.  Rewarding → Generation is the DAPO resample loop.
+    pub fn next(&self) -> &'static [Stage] {
+        match self {
+            Stage::Generation => &[Stage::Rewarding],
+            Stage::Rewarding => &[Stage::Generation, Stage::Preparation],
+            Stage::Preparation => &[Stage::Training],
+            Stage::Training => &[Stage::Generation],
+        }
+    }
+
+    pub fn can_transition(&self, to: Stage) -> bool {
+        self.next().contains(&to)
+    }
+}
+
+/// Tracks a controller's stage + transition counts (telemetry / invariants).
+#[derive(Debug, Clone)]
+pub struct WorkflowState {
+    pub stage: Stage,
+    pub resample_loops: u64,
+    pub steps_completed: u64,
+}
+
+impl Default for WorkflowState {
+    fn default() -> Self {
+        WorkflowState { stage: Stage::Training, resample_loops: 0, steps_completed: 0 }
+    }
+}
+
+impl WorkflowState {
+    pub fn transition(&mut self, to: Stage) -> anyhow::Result<()> {
+        if !self.stage.can_transition(to) {
+            anyhow::bail!("illegal transition {:?} -> {to:?}", self.stage);
+        }
+        if self.stage == Stage::Rewarding && to == Stage::Generation {
+            self.resample_loops += 1;
+        }
+        if to == Stage::Training {
+            self.steps_completed += 1;
+        }
+        self.stage = to;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_cycle_is_legal() {
+        let mut w = WorkflowState::default();
+        for s in [Stage::Generation, Stage::Rewarding, Stage::Preparation, Stage::Training] {
+            w.transition(s).unwrap();
+        }
+        assert_eq!(w.steps_completed, 1);
+        assert_eq!(w.resample_loops, 0);
+    }
+
+    #[test]
+    fn dapo_loop_counts_resamples() {
+        let mut w = WorkflowState::default();
+        w.transition(Stage::Generation).unwrap();
+        w.transition(Stage::Rewarding).unwrap();
+        w.transition(Stage::Generation).unwrap(); // resample
+        w.transition(Stage::Rewarding).unwrap();
+        w.transition(Stage::Preparation).unwrap();
+        assert_eq!(w.resample_loops, 1);
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        let mut w = WorkflowState::default();
+        assert!(w.transition(Stage::Preparation).is_err());
+        w.transition(Stage::Generation).unwrap();
+        assert!(w.transition(Stage::Training).is_err());
+    }
+
+    #[test]
+    fn stage_roles_cover_workflow() {
+        assert!(Stage::Generation.roles().contains(&ModelRole::PolicyGen));
+        assert!(Stage::Rewarding.roles().contains(&ModelRole::RewardGen));
+        assert!(Stage::Training.roles().contains(&ModelRole::PolicyTrain));
+    }
+}

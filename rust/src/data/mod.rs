@@ -1,0 +1,10 @@
+//! Synthetic data substrate: byte tokenizer, ground-truth reasoning tasks,
+//! preference pairs, verifier SFT data, and multimodal payloads.
+//! See DESIGN.md §1 for the paper-data → synthetic-data substitution.
+
+pub mod payload;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use payload::{Payload, PayloadSpec};
+pub use tasks::{preference_pair, verifier_example, verifier_query, PreferencePair, Task, TaskGen, TaskKind};

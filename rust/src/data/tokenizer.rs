@@ -1,0 +1,93 @@
+//! Byte-level tokenizer: vocab = 256 raw bytes.
+//!
+//! Simple by design — the models are byte-level transformers, so encode/
+//! decode are identity maps with padding helpers.  Token 0 (NUL) doubles
+//! as padding; '\n' (10) is the end-of-response marker the sampler stops
+//! on and the reward extractors split on.
+
+pub const VOCAB: usize = 256;
+pub const PAD: i32 = 0;
+pub const EOS: i32 = b'\n' as i32;
+
+pub fn encode(s: &str) -> Vec<i32> {
+    s.bytes().map(|b| b as i32).collect()
+}
+
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| (0..256).contains(&t) && t != PAD)
+        .map(|&t| t as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).to_string()
+}
+
+/// Left-pad with spaces to exactly `width` bytes (the fixed-prompt-length
+/// contract the prefill artifact bakes in).  Errors if the text is longer.
+pub fn pad_prompt(s: &str, width: usize) -> anyhow::Result<Vec<i32>> {
+    let toks = encode(s);
+    if toks.len() > width {
+        anyhow::bail!("prompt '{s}' is {} bytes > prompt_len {width}", toks.len());
+    }
+    let mut out = vec![b' ' as i32; width - toks.len()];
+    out.extend(toks);
+    Ok(out)
+}
+
+/// The response part of a generated row: tokens after the prompt, cut at
+/// the first EOS (exclusive).
+pub fn extract_response(row: &[i32], prompt_len: usize) -> String {
+    let gen = &row[prompt_len.min(row.len())..];
+    let end = gen.iter().position(|&t| t == EOS).unwrap_or(gen.len());
+    decode(&gen[..end])
+}
+
+/// Index of the last meaningful token of a row (EOS if present) — the
+/// position the BT reward head scores.
+pub fn last_token_index(row: &[i32], prompt_len: usize) -> usize {
+    let gen = &row[prompt_len.min(row.len())..];
+    match gen.iter().position(|&t| t == EOS) {
+        Some(i) => prompt_len + i,
+        None => row.len() - 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = "12+34=46\n";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn pad_prompt_left_aligns() {
+        let p = pad_prompt("3+4=", 8).unwrap();
+        assert_eq!(p.len(), 8);
+        assert_eq!(decode(&p), "    3+4=");
+        assert!(pad_prompt("very long prompt", 8).is_err());
+    }
+
+    #[test]
+    fn extract_response_stops_at_eos() {
+        let mut row = pad_prompt("3+4=", 8).unwrap();
+        row.extend(encode("7\njunk"));
+        assert_eq!(extract_response(&row, 8), "7");
+        assert_eq!(last_token_index(&row, 8), 9); // the EOS position
+    }
+
+    #[test]
+    fn no_eos_takes_whole_tail() {
+        let mut row = pad_prompt("q=", 4).unwrap();
+        row.extend(encode("123"));
+        assert_eq!(extract_response(&row, 4), "123");
+        assert_eq!(last_token_index(&row, 4), row.len() - 1);
+    }
+
+    #[test]
+    fn decode_skips_padding() {
+        assert_eq!(decode(&[PAD, 65, PAD, 66]), "AB");
+    }
+}

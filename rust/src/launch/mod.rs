@@ -1,0 +1,172 @@
+//! Launcher: bootstraps a parallel-controller training job (paper §4.2's
+//! "launch tasks via [the] job scheduling system" analogue — here, one
+//! thread per controller sharing a PJRT engine and in-proc collectives;
+//! the same controller code runs over the TCP RPC transport for
+//! multi-process launches).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::{CheckpointManager, CheckpointMeta, ShardState};
+use crate::config::RunConfig;
+use crate::coordinator::collective::Collective;
+use crate::coordinator::controller::{Controller, StepStats};
+use crate::coordinator::pretrain;
+use crate::reward::{RewardKind, Rewarder};
+use crate::runtime::engine::Engine;
+use crate::runtime::params::init_policy;
+use crate::storage::dataloader::LoaderState;
+
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    pub sft_losses: Vec<f32>,
+    pub steps: Vec<StepStats>,
+    pub eval_before: f64,
+    pub eval_after: f64,
+    pub reward_model_metric: f32,
+    pub timers_markdown: String,
+}
+
+/// Build the configured rewarder, pre-training reward models as needed.
+pub fn build_rewarder(engine: &Engine, cfg: &RunConfig) -> Result<(Rewarder, f32)> {
+    match cfg.reward {
+        RewardKind::GroundTruth => Ok((Rewarder::ground_truth(), 1.0)),
+        RewardKind::BradleyTerry => {
+            let (params, rep) = pretrain::train_bt(
+                engine,
+                cfg.task_kinds()?,
+                cfg.bt_train_steps,
+                3e-3,
+                cfg.seed + 101,
+            )?;
+            Ok((Rewarder::bradley_terry(params), rep.final_metric))
+        }
+        RewardKind::Generative => {
+            let (params, rep) = pretrain::train_verifier(
+                engine,
+                cfg.task_kinds()?,
+                cfg.verifier_sft_steps,
+                2e-3,
+                cfg.seed + 202,
+            )?;
+            Ok((
+                Rewarder::generative(params, cfg.verdict_mode),
+                rep.final_metric,
+            ))
+        }
+    }
+}
+
+fn clone_rewarder(r: &Rewarder) -> Rewarder {
+    Rewarder {
+        kind: r.kind,
+        bt_params: r.bt_params.clone(),
+        verifier_params: r.verifier_params.clone(),
+        verdict_mode: r.verdict_mode,
+    }
+}
+
+/// Run a full RLHF training job: SFT warm-start → (optional) reward-model
+/// pre-training → `cfg.steps` RLHF steps across `cfg.world` controllers.
+pub fn run_training(cfg: &RunConfig) -> Result<TrainReport> {
+    let engine = Arc::new(Engine::load(&cfg.artifacts)?);
+    let (rewarder, rm_metric) = build_rewarder(&engine, cfg)?;
+
+    // identical initial policy on every controller (SPMD)
+    let policy = init_policy(&engine, cfg.seed as u32)?;
+    let collective = Collective::new(cfg.world);
+
+    let ckpt = cfg
+        .checkpoint_dir
+        .as_ref()
+        .map(|d| Arc::new(CheckpointManager::new(d)));
+
+    let handles: Vec<_> = (0..cfg.world)
+        .map(|rank| {
+            let engine = engine.clone();
+            let collective = collective.clone();
+            let cfg = cfg.clone();
+            let policy = policy.clone();
+            let rewarder = clone_rewarder(&rewarder);
+            let ckpt = ckpt.clone();
+            std::thread::spawn(move || -> Result<TrainReport> {
+                let mut c = Controller::new(
+                    rank,
+                    engine,
+                    collective,
+                    cfg.clone(),
+                    policy,
+                    rewarder,
+                )?;
+                let mut report = TrainReport::default();
+
+                // SFT warm-start
+                for _ in 0..cfg.sft_steps {
+                    let loss = c.sft_step()?;
+                    report.sft_losses.push(loss);
+                }
+                c.freeze_reference();
+                if rank == 0 {
+                    report.eval_before = c.evaluate(4)?;
+                }
+
+                // RLHF steps
+                for step in 0..cfg.steps {
+                    let stats = c.rlhf_step(step)?;
+                    if rank == 0 {
+                        report.steps.push(stats);
+                        if let Some(ckpt) = &ckpt {
+                            if cfg.checkpoint_every > 0
+                                && (step + 1) % cfg.checkpoint_every == 0
+                            {
+                                let meta = CheckpointMeta {
+                                    step: step as u64 + 1,
+                                    world_size: cfg.world,
+                                    loader: LoaderState {
+                                        seed: cfg.seed,
+                                        epoch: 0,
+                                        cursor: (step + 1)
+                                            * c.engine.manifest().dims.batch,
+                                    },
+                                };
+                                let shard = ShardState {
+                                    rank,
+                                    params: vec![
+                                        ("policy".into(), c.state.params.clone()),
+                                        ("adam_m".into(), c.state.m.clone()),
+                                        ("adam_v".into(), c.state.v.clone()),
+                                    ],
+                                    rng_seed: cfg.seed,
+                                };
+                                // async: training continues while it writes
+                                let h = ckpt.save_async(step as u64 + 1, meta, shard);
+                                drop(h); // completion checked at job end
+                            }
+                        }
+                    }
+                }
+
+                if rank == 0 {
+                    report.eval_after = c.evaluate(4)?;
+                    report.timers_markdown = c.timers.report();
+                }
+                Ok(report)
+            })
+        })
+        .collect();
+
+    let mut rank0: Option<TrainReport> = None;
+    for (rank, h) in handles.into_iter().enumerate() {
+        let r = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("controller {rank} panicked"))?
+            .with_context(|| format!("controller {rank} failed"))?;
+        if rank == 0 {
+            rank0 = Some(r);
+        }
+    }
+    let mut report = rank0.context("no rank-0 report")?;
+    report.reward_model_metric = rm_metric;
+    Ok(report)
+}

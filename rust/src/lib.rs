@@ -1,0 +1,27 @@
+//! # G-Core (reproduction)
+//!
+//! A from-scratch reproduction of *G-Core: A Simple, Scalable and Balanced
+//! RLHF Trainer* (Wu et al., Tencent, 2025) as a three-layer Rust + JAX +
+//! Pallas system: this crate is Layer 3 (the coordinator — the paper's
+//! system contribution), executing Layer-2 JAX models and the Layer-1
+//! Pallas attention kernel through AOT-compiled HLO artifacts via PJRT.
+//!
+//! See DESIGN.md for the full system inventory and experiment index, and
+//! EXPERIMENTS.md for reproduced results.
+
+pub mod attention;
+pub mod balance;
+pub mod checkpoint;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod launch;
+pub mod metrics;
+pub mod placement;
+pub mod reward;
+pub mod rpc;
+pub mod storage;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,176 @@
+//! `gcore` — the G-Core reproduction launcher.
+//!
+//! Subcommands:
+//!   train              run RLHF training (config file or flags)
+//!   bench <e1..e9|all> regenerate an experiment table (DESIGN.md §4)
+//!   simulate           run a placement simulation (colocate/coexist/dynamic)
+//!   inspect-artifacts  print the manifest of an artifact set
+//!   help
+
+use anyhow::{bail, Result};
+
+use gcore::config::RunConfig;
+use gcore::experiments;
+use gcore::launch;
+use gcore::placement::{run_coexist_static, run_colocate, run_dynamic, PlacementSpec};
+use gcore::runtime::Manifest;
+use gcore::util::cli::Args;
+
+const USAGE: &str = "\
+gcore — G-Core RLHF trainer (reproduction)
+
+USAGE:
+  gcore train [--config <file.json>] [--artifacts tiny] [--world N]
+              [--steps N] [--reward ground_truth|bt|generative]
+              [--dynamic-sampling] [--checkpoint-dir DIR]
+  gcore bench <e1|e2|e3|e4|e5|e7|e8|e9|all> [--full]
+  gcore simulate [--placement colocate|coexist|dynamic] [--devices N]
+                 [--steps N] [--dapo]
+  gcore inspect-artifacts [--artifacts tiny]
+";
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    match args.subcommand() {
+        Some("train") => cmd_train(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("inspect-artifacts") => cmd_inspect(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::load(path)?,
+        None => RunConfig::default(),
+    };
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts = a.to_string();
+    }
+    cfg.world = args.parse_or("world", cfg.world);
+    cfg.steps = args.parse_or("steps", cfg.steps);
+    cfg.sft_steps = args.parse_or("sft-steps", cfg.sft_steps);
+    cfg.group_size = args.parse_or("group-size", cfg.group_size);
+    cfg.lr = args.parse_or("lr", cfg.lr);
+    cfg.seed = args.parse_or("seed", cfg.seed);
+    if args.has("dynamic-sampling") {
+        cfg.dynamic_sampling = true;
+    }
+    if let Some(r) = args.get("reward") {
+        cfg.reward = match r {
+            "ground_truth" => gcore::reward::RewardKind::GroundTruth,
+            "bt" | "bradley_terry" => gcore::reward::RewardKind::BradleyTerry,
+            "generative" | "genrm" => gcore::reward::RewardKind::Generative,
+            other => bail!("unknown reward '{other}'"),
+        };
+    }
+    if let Some(d) = args.get("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(d.to_string());
+        if cfg.checkpoint_every == 0 {
+            cfg.checkpoint_every = 10;
+        }
+    }
+    cfg.validate()?;
+
+    println!(
+        "[gcore] training: artifacts={} world={} steps={} reward={:?} dapo={}",
+        cfg.artifacts, cfg.world, cfg.steps, cfg.reward, cfg.dynamic_sampling
+    );
+    let report = launch::run_training(&cfg)?;
+    println!("\nstep | loss | kl | reward | accuracy | gen_len | rounds");
+    println!("-----|------|----|--------|----------|---------|-------");
+    for s in &report.steps {
+        println!(
+            "{:>4} | {:>6.4} | {:>6.4} | {:>5.3} | {:>5.3} | {:>6.1} | {:>4.1}",
+            s.step, s.loss, s.kl, s.mean_reward, s.accuracy, s.mean_gen_len, s.gen_rounds
+        );
+    }
+    println!(
+        "\neval accuracy: before RLHF {:.3} → after {:.3}",
+        report.eval_before, report.eval_after
+    );
+    println!("\nstage timers:\n{}", report.timers_markdown);
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let quick = !args.has("full");
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let ids: Vec<&str> = if which == "all" {
+        vec!["e1", "e2", "e3", "e4", "e5", "e7", "e8", "e9"]
+    } else {
+        vec![which]
+    };
+    for id in ids {
+        if experiments::run(id, quick).is_none() {
+            bail!("unknown experiment '{id}' (e6/e10 are examples: genrm_vs_bt, rlhf_e2e)");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let mut spec = PlacementSpec::paper_like();
+    spec.n_devices = args.parse_or("devices", spec.n_devices);
+    spec.steps = args.parse_or("steps", spec.steps);
+    spec.batch = args.parse_or("batch", spec.batch);
+    spec.dynamic_sampling = args.has("dapo");
+    if spec.dynamic_sampling {
+        spec.accept.p0 = 0.5;
+    }
+    let placement = args.get_or("placement", "dynamic");
+    let report = match placement {
+        "colocate" => run_colocate(&spec),
+        "coexist" => run_coexist_static(&spec, args.parse_or("gen-frac", 0.5)),
+        "dynamic" => {
+            let d = run_dynamic(&spec);
+            println!("ratio trace (step, gen_frac, util_gen, util_reward):");
+            for (s, fr, ug, ur) in d.trace.iter().step_by((d.trace.len() / 12).max(1)) {
+                println!("  {s:>4}  {fr:.3}  {ug:.3}  {ur:.3}");
+            }
+            d.report
+        }
+        other => bail!("unknown placement '{other}'"),
+    };
+    println!(
+        "\n{placement}: makespan {:.0}s  util {:.1}%  swap {:.0} dev-s  bubble {:.0} dev-s  ({:.0} samples/h)",
+        report.makespan_s,
+        report.utilization * 100.0,
+        report.swap_s,
+        report.bubble_s,
+        report.samples_per_hour()
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let name = args.get_or("artifacts", "tiny");
+    let manifest = Manifest::load(gcore::runtime::artifacts_dir(name))?;
+    let d = &manifest.dims;
+    println!(
+        "artifact set '{}': {:.2}M params (policy), {:.2}M (scalar), pallas={}",
+        d.name,
+        manifest.param_count as f64 / 1e6,
+        manifest.scalar_param_count as f64 / 1e6,
+        d.use_pallas
+    );
+    println!(
+        "dims: vocab={} d_model={} layers={} heads={} seq={} prompt={} batch={}",
+        d.vocab, d.d_model, d.n_layers, d.n_heads, d.max_seq, d.prompt_len, d.batch
+    );
+    println!("\n| artifact | inputs | outputs | HLO KB |");
+    println!("|---|---|---|---|");
+    for (name, a) in &manifest.artifacts {
+        println!(
+            "| {name} | {} | {} | {} |",
+            a.inputs.len(),
+            a.outputs.len(),
+            a.hlo_bytes / 1024
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,240 @@
+//! Metrics: stage timers, counters, and the utilization monitor that feeds
+//! dynamic placement (paper §3.2: "we continuously monitor hardware
+//! utilization and gradually reduce the resource allocation for roles with
+//! low utilization") and the progress watchdog (§4.2).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Cumulative per-stage wallclock + call counts.
+#[derive(Debug, Default)]
+pub struct StageTimers {
+    inner: Mutex<BTreeMap<String, (Duration, u64)>>,
+}
+
+impl StageTimers {
+    pub fn new() -> StageTimers {
+        StageTimers::default()
+    }
+
+    pub fn record(&self, stage: &str, dur: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(stage.to_string()).or_insert((Duration::ZERO, 0));
+        e.0 += dur;
+        e.1 += 1;
+    }
+
+    /// Time a closure under a stage label.
+    pub fn time<T>(&self, stage: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(stage, t0.elapsed());
+        out
+    }
+
+    pub fn total(&self, stage: &str) -> Duration {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(stage)
+            .map(|(d, _)| *d)
+            .unwrap_or(Duration::ZERO)
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, (Duration, u64)> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    /// Markdown summary (examples print this at the end of a run).
+    pub fn report(&self) -> String {
+        let snap = self.snapshot();
+        let total: f64 = snap.values().map(|(d, _)| d.as_secs_f64()).sum();
+        let mut s = String::from("| stage | calls | total | share |\n|---|---|---|---|\n");
+        for (stage, (dur, calls)) in &snap {
+            s.push_str(&format!(
+                "| {stage} | {calls} | {:.2}s | {:.1}% |\n",
+                dur.as_secs_f64(),
+                100.0 * dur.as_secs_f64() / total.max(1e-12),
+            ));
+        }
+        s
+    }
+}
+
+/// Sliding-window per-role utilization: the dynamic-placement signal.
+#[derive(Debug, Clone)]
+pub struct UtilizationMonitor {
+    window: usize,
+    /// per role: ring buffer of (busy_s, wall_s) samples
+    samples: BTreeMap<String, Vec<(f64, f64)>>,
+}
+
+impl UtilizationMonitor {
+    pub fn new(window: usize) -> UtilizationMonitor {
+        UtilizationMonitor { window: window.max(1), samples: BTreeMap::new() }
+    }
+
+    /// Record one round: `busy` seconds of useful work observed over
+    /// `wall` seconds of wallclock for `role`'s device group.
+    pub fn record(&mut self, role: &str, busy: f64, wall: f64) {
+        let buf = self.samples.entry(role.to_string()).or_default();
+        buf.push((busy, wall));
+        if buf.len() > self.window {
+            buf.remove(0);
+        }
+    }
+
+    /// Windowed utilization of a role (None until it has samples).
+    pub fn utilization(&self, role: &str) -> Option<f64> {
+        let buf = self.samples.get(role)?;
+        if buf.is_empty() {
+            return None;
+        }
+        let busy: f64 = buf.iter().map(|(b, _)| b).sum();
+        let wall: f64 = buf.iter().map(|(_, w)| w).sum();
+        if wall <= 0.0 {
+            return None;
+        }
+        Some((busy / wall).clamp(0.0, 1.0))
+    }
+
+    pub fn roles(&self) -> Vec<String> {
+        self.samples.keys().cloned().collect()
+    }
+
+    /// The (lowest, highest)-utilization roles — the rebalancing pair.
+    pub fn extremes(&self) -> Option<(String, String)> {
+        let mut pairs: Vec<(String, f64)> = self
+            .samples
+            .keys()
+            .filter_map(|r| self.utilization(r).map(|u| (r.clone(), u)))
+            .collect();
+        if pairs.len() < 2 {
+            return None;
+        }
+        pairs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        Some((pairs[0].0.clone(), pairs[pairs.len() - 1].0.clone()))
+    }
+}
+
+/// Training-progress watchdog (paper §4.2): terminate/restart when the
+/// observed step rate falls below a floor.
+#[derive(Debug)]
+pub struct ProgressWatchdog {
+    started: Instant,
+    last_step_at: Instant,
+    steps: u64,
+    /// minimum acceptable steps/second (long-run)
+    pub min_rate: f64,
+    /// maximum silence between steps
+    pub max_stall: Duration,
+}
+
+impl ProgressWatchdog {
+    pub fn new(min_rate: f64, max_stall: Duration) -> ProgressWatchdog {
+        let now = Instant::now();
+        ProgressWatchdog { started: now, last_step_at: now, steps: 0, min_rate, max_stall }
+    }
+
+    pub fn step_done(&mut self) {
+        self.steps += 1;
+        self.last_step_at = Instant::now();
+    }
+
+    /// Err ⇒ the job must be terminated, resources reallocated, restarted.
+    pub fn check(&self) -> Result<(), String> {
+        if self.last_step_at.elapsed() > self.max_stall {
+            return Err(format!(
+                "stalled: no step for {:.1}s (max {:.1}s)",
+                self.last_step_at.elapsed().as_secs_f64(),
+                self.max_stall.as_secs_f64()
+            ));
+        }
+        let elapsed = self.started.elapsed().as_secs_f64();
+        if elapsed > 1.0 && self.steps > 0 {
+            let rate = self.steps as f64 / elapsed;
+            if rate < self.min_rate {
+                return Err(format!(
+                    "below expected progress: {rate:.3} steps/s < {:.3}",
+                    self.min_rate
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_timers_accumulate() {
+        let t = StageTimers::new();
+        t.record("generate", Duration::from_millis(100));
+        t.record("generate", Duration::from_millis(50));
+        t.record("train", Duration::from_millis(25));
+        assert_eq!(t.total("generate"), Duration::from_millis(150));
+        let snap = t.snapshot();
+        assert_eq!(snap["generate"].1, 2);
+        assert!(t.report().contains("| generate | 2 |"));
+    }
+
+    #[test]
+    fn time_closure() {
+        let t = StageTimers::new();
+        let v = t.time("work", || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(t.total("work") >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn utilization_window() {
+        let mut m = UtilizationMonitor::new(3);
+        m.record("gen", 5.0, 10.0);
+        assert!((m.utilization("gen").unwrap() - 0.5).abs() < 1e-9);
+        // window evicts old samples
+        for _ in 0..3 {
+            m.record("gen", 10.0, 10.0);
+        }
+        assert!((m.utilization("gen").unwrap() - 1.0).abs() < 1e-9);
+        assert_eq!(m.utilization("unknown"), None);
+    }
+
+    #[test]
+    fn extremes_find_rebalance_pair() {
+        let mut m = UtilizationMonitor::new(4);
+        m.record("gen", 9.0, 10.0);
+        m.record("reward", 3.0, 10.0);
+        m.record("train", 6.0, 10.0);
+        let (lo, hi) = m.extremes().unwrap();
+        assert_eq!(lo, "reward");
+        assert_eq!(hi, "gen");
+    }
+
+    #[test]
+    fn watchdog_detects_stall() {
+        let mut w = ProgressWatchdog::new(0.0, Duration::from_millis(10));
+        w.step_done();
+        assert!(w.check().is_ok());
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(w.check().is_err());
+    }
+
+    #[test]
+    fn watchdog_detects_slow_rate() {
+        let w = ProgressWatchdog {
+            started: Instant::now() - Duration::from_secs(100),
+            last_step_at: Instant::now(),
+            steps: 5,
+            min_rate: 1.0,
+            max_stall: Duration::from_secs(3600),
+        };
+        let err = w.check().unwrap_err();
+        assert!(err.contains("below expected progress"), "{err}");
+    }
+}

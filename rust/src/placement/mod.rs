@@ -1,0 +1,384 @@
+//! Placement engines (paper §2.3, §3.2): **co-locate**, **co-exist**, and
+//! G-Core's **dynamic placement**, evaluated on the simulated cluster.
+//!
+//! * Co-locate: every role time-shares all GPUs; stage transitions swap
+//!   models in/out (30–60 s for 32B-class models).  Cheap for plain GRPO,
+//!   but dynamic sampling multiplies the swap rounds and the long tail
+//!   amplifies the bubbles (§3.2).
+//! * Co-exist (static split): generation and rewarding pools pipeline
+//!   without swaps; the split is fixed up front and goes stale as the
+//!   workload drifts.
+//! * Dynamic placement: stages 1–2 co-exist on a split that is re-balanced
+//!   from measured utilization; stages 3–4 co-locate on ALL devices.  The
+//!   initial split comes from the paper's heuristic (activated parameter
+//!   counts); re-balancing "gradually reduce[s] the resource allocation
+//!   for roles with low utilization".
+
+use crate::cluster::device::DeviceId;
+use crate::cluster::sim::{Sim, SimReport, WorkKind};
+use crate::cluster::swap::SwapCostModel;
+use crate::cluster::workload::{AcceptanceModel, GenLenModel, GenTimeModel, TrainTimeModel};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct PlacementSpec {
+    pub n_devices: usize,
+    pub steps: usize,
+    /// sequences per training step (global batch)
+    pub batch: usize,
+    pub group_size: usize,
+    /// per-device weight shard sizes (GB)
+    pub policy_gb: f64,
+    pub reward_gb: f64,
+    pub gen_len: GenLenModel,
+    /// verifier generation lengths (generative rewarding)
+    pub reward_len: GenLenModel,
+    pub accept: AcceptanceModel,
+    pub dynamic_sampling: bool,
+    pub gen_time: GenTimeModel,
+    pub reward_time: GenTimeModel,
+    pub train_time: TrainTimeModel,
+    pub swap: SwapCostModel,
+    pub seed: u64,
+}
+
+impl PlacementSpec {
+    /// A paper-§5-like default: 64 devices, 7B-class policy + verifier.
+    pub fn paper_like() -> PlacementSpec {
+        PlacementSpec {
+            n_devices: 64,
+            steps: 20,
+            batch: 512,
+            group_size: 8,
+            policy_gb: 14.0,
+            reward_gb: 14.0,
+            gen_len: GenLenModel::reasoning_default(),
+            reward_len: GenLenModel {
+                mu0: 4.6, // verifier verdicts ~100 tokens
+                sigma: 0.5,
+                growth_per_step: 0.0,
+                max_len: 1024,
+            },
+            accept: AcceptanceModel::default_decay(),
+            dynamic_sampling: true,
+            gen_time: GenTimeModel::vllm_like(),
+            reward_time: GenTimeModel::vllm_like(),
+            train_time: TrainTimeModel::default_7b(),
+            swap: SwapCostModel::default(),
+            seed: 11,
+        }
+    }
+
+    fn ids(&self, range: std::ops::Range<usize>) -> Vec<DeviceId> {
+        range.map(DeviceId).collect()
+    }
+
+    /// rounds of generation needed at `step` under dynamic sampling
+    fn rounds_at(&self, step: usize, rng: &mut Rng) -> usize {
+        if !self.dynamic_sampling {
+            return 1;
+        }
+        let p = self.accept.accept_prob(step);
+        // accepted fraction per round ≈ p; need full batch
+        let mut need = 1.0f64;
+        let mut rounds = 0;
+        while need > 1e-3 && rounds < 8 {
+            rounds += 1;
+            need -= p * need.max(0.3); // diminishing fills
+            let _ = rng; // jitterless expectation model
+        }
+        rounds.max((1.0 / p).round() as usize).min(8)
+    }
+
+    /// makespan + per-device busy of a generation round on `pool` devices.
+    fn gen_round(
+        &self,
+        sim: &mut Sim,
+        pool: &[DeviceId],
+        lens: &[usize],
+        time: &GenTimeModel,
+        kind: WorkKind,
+        not_before: f64,
+    ) -> f64 {
+        // shard sequences round-robin across the pool; each device's busy
+        // time is its own batch makespan — the long tail shows up as
+        // inter-device spread
+        let per: Vec<Vec<usize>> = {
+            let mut v = vec![Vec::new(); pool.len()];
+            for (i, &l) in lens.iter().enumerate() {
+                v[i % pool.len()].push(l);
+            }
+            v
+        };
+        let mut end = not_before;
+        for (d, dev_lens) in pool.iter().zip(&per) {
+            let (mk, _) = time.batch_times(dev_lens);
+            let (_, e) = sim.run_one_after(*d, not_before, kind, mk);
+            end = end.max(e);
+        }
+        end
+    }
+}
+
+/// Heuristic initial split (paper §3.2): proportional to activated params.
+pub fn heuristic_gen_fraction(policy_gb: f64, reward_gb: f64) -> f64 {
+    (policy_gb / (policy_gb + reward_gb)).clamp(0.1, 0.9)
+}
+
+// ---------------------------------------------------------------------------
+// Co-locate
+// ---------------------------------------------------------------------------
+
+pub fn run_colocate(spec: &PlacementSpec) -> SimReport {
+    let mut sim = Sim::new(spec.n_devices);
+    let mut rng = Rng::new(spec.seed);
+    let all = spec.ids(0..spec.n_devices);
+    let mut samples = 0usize;
+
+    for step in 0..spec.steps {
+        let rounds = spec.rounds_at(step, &mut rng);
+        for round in 0..rounds {
+            // swap policy-gen in (first round: from train layout)
+            let swap_in = if round == 0 {
+                spec.swap.exchange(spec.policy_gb, spec.policy_gb)
+            } else {
+                spec.swap.exchange(spec.reward_gb, spec.policy_gb)
+            };
+            sim.run_group(&all, WorkKind::Swap, swap_in);
+            let lens = spec.gen_len.sample_batch(&mut rng, step, spec.batch);
+            let end = spec.gen_round(&mut sim, &all, &lens, &spec.gen_time, WorkKind::Generate, 0.0);
+            sim.barrier(end); // synchronous stage transition
+            // swap reward model in
+            sim.run_group(&all, WorkKind::Swap, spec.swap.exchange(spec.policy_gb, spec.reward_gb));
+            let rlens = spec.reward_len.sample_batch(&mut rng, step, spec.batch);
+            let end = spec.gen_round(&mut sim, &all, &rlens, &spec.reward_time, WorkKind::Reward, 0.0);
+            sim.barrier(end);
+        }
+        // swap training layout in
+        sim.run_group(&all, WorkKind::Swap, spec.swap.exchange(spec.reward_gb, spec.policy_gb));
+        train_stages(spec, &mut sim, &all, step, &mut rng);
+        samples += spec.batch;
+    }
+    SimReport::from_sim(&sim, samples)
+}
+
+// ---------------------------------------------------------------------------
+// Co-exist (static split) and dynamic placement
+// ---------------------------------------------------------------------------
+
+fn train_stages(
+    spec: &PlacementSpec,
+    sim: &mut Sim,
+    all: &[DeviceId],
+    step: usize,
+    rng: &mut Rng,
+) {
+    // Stage 3 prep: old/ref logprob forwards — linear cost over tokens
+    let lens = spec.gen_len.sample_batch(rng, step, spec.batch);
+    let total_tokens: usize = lens.iter().sum();
+    let prep = 2.0 * spec.train_time.s_per_token * total_tokens as f64 / all.len() as f64;
+    sim.run_group(all, WorkKind::Prepare, prep);
+    // Stage 4 train: fwd+bwd ≈ 3× forward, workload-balanced (per §4.4 the
+    // balancer keeps waste <10%; charge the balanced cost + 5%)
+    let cost: f64 = lens.iter().map(|&l| spec.train_time.seq_cost(l)).sum();
+    let train = 3.0 * 1.05 * cost / all.len() as f64;
+    sim.run_group(all, WorkKind::Train, train);
+}
+
+/// Shared body for co-exist variants. `gen_frac_of_step(step, utils)`
+/// chooses the split each step; returns the trace of splits used.
+fn run_coexist_inner(
+    spec: &PlacementSpec,
+    mut gen_frac_of_step: impl FnMut(usize, Option<(f64, f64)>) -> f64,
+) -> (SimReport, Vec<(usize, f64, f64, f64)>) {
+    let mut sim = Sim::new(spec.n_devices);
+    let mut rng = Rng::new(spec.seed);
+    let all: Vec<DeviceId> = spec.ids(0..spec.n_devices);
+    let mut samples = 0usize;
+    let mut trace = Vec::new();
+    let mut last_utils: Option<(f64, f64)> = None;
+
+    for step in 0..spec.steps {
+        let frac = gen_frac_of_step(step, last_utils).clamp(0.1, 0.9);
+        let n_gen = ((spec.n_devices as f64 * frac).round() as usize)
+            .clamp(1, spec.n_devices - 1);
+        let gen_pool = spec.ids(0..n_gen);
+        let reward_pool = spec.ids(n_gen..spec.n_devices);
+
+        let rounds = spec.rounds_at(step, &mut rng);
+        let step_start = sim.makespan();
+        let mut gen_busy = 0.0;
+        let mut reward_busy = 0.0;
+        // pipelined rounds: reward round r starts when gen round r ends;
+        // gen round r+1 starts immediately after gen round r (no swaps!)
+        let mut gen_end = step_start;
+        let mut reward_end = step_start;
+        for _round in 0..rounds {
+            let lens = spec.gen_len.sample_batch(&mut rng, step, spec.batch);
+            let t0 = gen_end;
+            gen_end = spec.gen_round(&mut sim, &gen_pool, &lens, &spec.gen_time, WorkKind::Generate, t0);
+            gen_busy += gen_end - t0;
+            let rlens = spec.reward_len.sample_batch(&mut rng, step, spec.batch);
+            let r0 = gen_end.max(reward_end);
+            reward_end = spec.gen_round(&mut sim, &reward_pool, &rlens, &spec.reward_time, WorkKind::Reward, r0);
+            reward_busy += reward_end - r0;
+        }
+        let stage12_end = gen_end.max(reward_end);
+        sim.barrier(stage12_end);
+        // measured pool utilizations over stages 1-2 (the dynamic signal)
+        let wall = (stage12_end - step_start).max(1e-9);
+        let util_gen = gen_busy / wall;
+        let util_reward = reward_busy / wall;
+        last_utils = Some((util_gen, util_reward));
+        trace.push((step, frac, util_gen, util_reward));
+
+        // stages 3-4 co-locate on ALL devices: one swap to training layout
+        sim.run_group(&all, WorkKind::Swap, spec.swap.exchange(spec.policy_gb, spec.policy_gb));
+        train_stages(spec, &mut sim, &all, step, &mut rng);
+        // weight sync back to the generation pool
+        sim.run_group(&gen_pool, WorkKind::WeightSync, spec.swap.weight_update(spec.policy_gb));
+        samples += spec.batch;
+    }
+    (SimReport::from_sim(&sim, samples), trace)
+}
+
+pub fn run_coexist_static(spec: &PlacementSpec, gen_frac: f64) -> SimReport {
+    run_coexist_inner(spec, |_, _| gen_frac).0
+}
+
+#[derive(Debug, Clone)]
+pub struct DynamicReport {
+    pub report: SimReport,
+    /// (step, gen_fraction, util_gen, util_reward)
+    pub trace: Vec<(usize, f64, f64, f64)>,
+}
+
+/// G-Core dynamic placement: heuristic initial ratio, then per-step
+/// gradient moves toward the higher-utilization role.
+pub fn run_dynamic(spec: &PlacementSpec) -> DynamicReport {
+    let step_frac = 1.0 / spec.n_devices as f64;
+    let mut frac = heuristic_gen_fraction(spec.policy_gb, spec.reward_gb);
+    let (report, trace) = run_coexist_inner(spec, |_, utils| {
+        if let Some((ug, ur)) = utils {
+            // move one device's worth toward the busier pool
+            if ug > ur + 0.05 {
+                frac += step_frac;
+            } else if ur > ug + 0.05 {
+                frac -= step_frac;
+            }
+        }
+        frac
+    });
+    DynamicReport { report, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_spec() -> PlacementSpec {
+        PlacementSpec { steps: 8, n_devices: 16, batch: 128, ..PlacementSpec::paper_like() }
+    }
+
+    #[test]
+    fn colocate_without_dapo_swaps_negligible() {
+        // paper §2.3: for plain GRPO, swap overhead is minor vs stage time —
+        // in the paper's regime rollouts take "tens of minutes" (long
+        // reasoning generations), so use the long-generation workload
+        let mut spec = PlacementSpec { dynamic_sampling: false, ..fast_spec() };
+        spec.gen_len.mu0 = 7.6; // median ~2000 tokens
+        let r = run_colocate(&spec);
+        assert!(
+            r.swap_s < 0.15 * r.makespan_s * spec.n_devices as f64,
+            "swap {} vs device-time {}",
+            r.swap_s,
+            r.makespan_s * spec.n_devices as f64
+        );
+    }
+
+    #[test]
+    fn dapo_amplifies_colocate_swaps() {
+        // §3.2 item 1: resampling multiplies swap rounds
+        let without = run_colocate(&PlacementSpec { dynamic_sampling: false, ..fast_spec() });
+        let mut with_spec = fast_spec();
+        with_spec.accept.p0 = 0.4;
+        with_spec.accept.floor = 0.2;
+        let with = run_colocate(&with_spec);
+        assert!(
+            with.swap_s > 2.0 * without.swap_s,
+            "with {} vs without {}",
+            with.swap_s,
+            without.swap_s
+        );
+    }
+
+    #[test]
+    fn dynamic_beats_colocate_under_dapo() {
+        // the headline E2 shape: same work, dynamic placement finishes
+        // sooner and wastes less on swaps
+        let mut spec = fast_spec();
+        spec.accept.p0 = 0.5;
+        spec.accept.floor = 0.2;
+        let colo = run_colocate(&spec);
+        let dynp = run_dynamic(&spec);
+        assert!(
+            dynp.report.makespan_s < colo.makespan_s,
+            "dynamic {} vs colocate {}",
+            dynp.report.makespan_s,
+            colo.makespan_s
+        );
+        assert!(dynp.report.swap_s < colo.swap_s);
+    }
+
+    #[test]
+    fn dynamic_tracks_workload_drift() {
+        // E7: generation lengths grow over training → optimal split moves
+        // toward generation; the dynamic trace must follow
+        let mut spec = fast_spec();
+        spec.steps = 24;
+        spec.gen_len.growth_per_step = 0.08; // fast drift for the test
+        let d = run_dynamic(&spec);
+        let first = d.trace.first().unwrap().1;
+        let last = d.trace.last().unwrap().1;
+        assert!(
+            last > first + 2.0 / spec.n_devices as f64,
+            "gen fraction should grow: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn dynamic_at_least_matches_best_static() {
+        let spec = fast_spec();
+        let dynp = run_dynamic(&spec).report;
+        // sweep static splits; dynamic should be within 15% of the best
+        let best = [0.3, 0.5, 0.7]
+            .iter()
+            .map(|&f| run_coexist_static(&spec, f).makespan_s)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            dynp.makespan_s < best * 1.15,
+            "dynamic {} vs best static {best}",
+            dynp.makespan_s
+        );
+    }
+
+    #[test]
+    fn heuristic_fraction_sane() {
+        assert!((heuristic_gen_fraction(14.0, 14.0) - 0.5).abs() < 1e-9);
+        assert!(heuristic_gen_fraction(64.0, 2.0) <= 0.9);
+        assert!(heuristic_gen_fraction(2.0, 64.0) >= 0.1);
+    }
+
+    #[test]
+    fn reports_have_positive_utilization() {
+        let spec = fast_spec();
+        for r in [
+            run_colocate(&spec),
+            run_coexist_static(&spec, 0.5),
+            run_dynamic(&spec).report,
+        ] {
+            assert!(r.utilization > 0.05 && r.utilization <= 1.0, "{r:?}");
+            assert!(r.makespan_s > 0.0);
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! Stage-2 rewarding (paper §2.2, §3.2): Bradley-Terry scoring and
+//! **generative rewarding**.
+//!
+//! Generative rewarding follows the paper's description exactly: "We use a
+//! causal text generation inference engine to replace the traditional
+//! regression-based rewarding model ... and then use this model to
+//! generate reward scores through generation and regex matching" — the
+//! verifier LM reads "<prompt><answer> V:" and its next-token prediction
+//! ("yes"/"no") *is* the verification decision (the GenRM insight [48]).
+//!
+//! Two extraction paths:
+//! * `VerdictMode::Logit` — compare the 'y' vs 'n' next-token logits
+//!   (the single-token decision; cheapest, used inside the training loop);
+//! * `VerdictMode::Regex` — greedy-decode a few tokens and regex-match
+//!   `yes|no` (the paper's literal mechanism; used by the examples/tests
+//!   and required when verdicts are longer than one token).
+
+use anyhow::{bail, Result};
+use regex::Regex;
+
+use crate::coordinator::generation::GenOutput;
+use crate::data::tasks::Task;
+use crate::data::tokenizer::{self, PAD};
+use crate::runtime::engine::Engine;
+use crate::runtime::params::ParamSet;
+use crate::runtime::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RewardKind {
+    /// programmatic ground truth (the synthetic tasks' oracle)
+    GroundTruth,
+    /// Bradley-Terry scalar head
+    BradleyTerry,
+    /// generative verifier LM
+    Generative,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VerdictMode {
+    Logit,
+    Regex,
+}
+
+pub struct Rewarder {
+    pub kind: RewardKind,
+    pub bt_params: Option<ParamSet>,
+    pub verifier_params: Option<ParamSet>,
+    pub verdict_mode: VerdictMode,
+}
+
+impl Rewarder {
+    pub fn ground_truth() -> Rewarder {
+        Rewarder {
+            kind: RewardKind::GroundTruth,
+            bt_params: None,
+            verifier_params: None,
+            verdict_mode: VerdictMode::Logit,
+        }
+    }
+
+    pub fn bradley_terry(params: ParamSet) -> Rewarder {
+        Rewarder {
+            kind: RewardKind::BradleyTerry,
+            bt_params: Some(params),
+            verifier_params: None,
+            verdict_mode: VerdictMode::Logit,
+        }
+    }
+
+    pub fn generative(params: ParamSet, mode: VerdictMode) -> Rewarder {
+        Rewarder {
+            kind: RewardKind::Generative,
+            bt_params: None,
+            verifier_params: Some(params),
+            verdict_mode: mode,
+        }
+    }
+
+    /// Score one generation batch.  `tasks` pairs 1:1 with `gen.rows`.
+    pub fn score(&self, engine: &Engine, tasks: &[Task], gen: &GenOutput) -> Result<Vec<f32>> {
+        let dims = engine.manifest().dims.clone();
+        if tasks.len() != gen.rows.len() {
+            bail!("tasks {} vs rows {}", tasks.len(), gen.rows.len());
+        }
+        match self.kind {
+            RewardKind::GroundTruth => Ok(tasks
+                .iter()
+                .zip(&gen.rows)
+                .map(|(t, row)| {
+                    let resp = tokenizer::extract_response(row, dims.prompt_len);
+                    if t.check(&resp) {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                })
+                .collect()),
+            RewardKind::BradleyTerry => {
+                let params = self.bt_params.as_ref().expect("bt params");
+                score_bt(engine, params, &gen.rows, dims.prompt_len)
+            }
+            RewardKind::Generative => {
+                let params = self.verifier_params.as_ref().expect("verifier params");
+                let responses: Vec<String> = gen
+                    .rows
+                    .iter()
+                    .map(|r| tokenizer::extract_response(r, dims.prompt_len))
+                    .collect();
+                score_generative(engine, params, tasks, &responses, self.verdict_mode)
+            }
+        }
+    }
+}
+
+/// Bradley-Terry scores: reward head value at each row's last real token.
+pub fn score_bt(
+    engine: &Engine,
+    params: &ParamSet,
+    rows: &[Vec<i32>],
+    prompt_len: usize,
+) -> Result<Vec<f32>> {
+    let b = rows.len();
+    let s = rows[0].len();
+    let idx: Vec<i32> = rows
+        .iter()
+        .map(|r| tokenizer::last_token_index(r, prompt_len) as i32)
+        .collect();
+    let mut inputs = params.tensors.clone();
+    inputs.push(Tensor::i32(vec![b, s], rows.iter().flatten().copied().collect()));
+    inputs.push(Tensor::i32(vec![b], idx));
+    let scores = engine.run("reward_score", &inputs)?.remove(0);
+    Ok(scores.as_f32()?.to_vec())
+}
+
+/// Build one verifier query row: "<padded prompt><answer> V:" padded to S.
+/// Returns (row, query_end_index) where `query_end_index` is the ':'
+/// position — the verdict token is predicted from there.
+pub fn verifier_row(
+    task: &Task,
+    response: &str,
+    prompt_len: usize,
+    seq: usize,
+) -> Result<(Vec<i32>, usize)> {
+    let mut row = task.prompt_tokens(prompt_len)?;
+    // cap the response in BYTES so the query always fits (generated text
+    // can contain multi-byte replacement chars after lossy decode)
+    let budget = seq.saturating_sub(prompt_len + 3 + 4);
+    let mut resp = response.to_string();
+    while resp.len() > budget {
+        resp.pop();
+    }
+    row.extend(tokenizer::encode(&format!("{resp} V:")));
+    let qend = row.len() - 1;
+    row.resize(seq, PAD);
+    Ok((row, qend))
+}
+
+/// Generative verification of a batch of (task, response) pairs.
+pub fn score_generative(
+    engine: &Engine,
+    params: &ParamSet,
+    tasks: &[Task],
+    responses: &[String],
+    mode: VerdictMode,
+) -> Result<Vec<f32>> {
+    let dims = engine.manifest().dims.clone();
+    let (b, s, v) = (dims.batch, dims.max_seq, dims.vocab);
+    if tasks.len() != b {
+        bail!("verifier batch must be exactly {b}, got {}", tasks.len());
+    }
+    let mut rows = Vec::with_capacity(b);
+    let mut qends = Vec::with_capacity(b);
+    for (t, r) in tasks.iter().zip(responses) {
+        let (row, qend) = verifier_row(t, r, dims.prompt_len, s)?;
+        rows.push(row);
+        qends.push(qend);
+    }
+
+    match mode {
+        VerdictMode::Logit => {
+            let mut inputs = params.tensors.clone();
+            inputs.push(Tensor::i32(vec![b, s], rows.iter().flatten().copied().collect()));
+            let logits = engine.run("fwd_logits", &inputs)?.remove(0);
+            let ld = logits.as_f32()?;
+            Ok((0..b)
+                .map(|i| {
+                    let base = i * s * v + qends[i] * v;
+                    let y = ld[base + b'y' as usize];
+                    let n = ld[base + b'n' as usize];
+                    if y > n {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                })
+                .collect())
+        }
+        VerdictMode::Regex => {
+            let re = Regex::new(r"^(yes|no)").unwrap();
+            // greedy-decode up to 4 verdict tokens via repeated full forwards
+            let mut cur = rows.clone();
+            let mut ends = qends.clone();
+            for _ in 0..4 {
+                let mut inputs = params.tensors.clone();
+                inputs.push(Tensor::i32(
+                    vec![b, s],
+                    cur.iter().flatten().copied().collect(),
+                ));
+                let logits = engine.run("fwd_logits", &inputs)?.remove(0);
+                let ld = logits.as_f32()?;
+                for i in 0..b {
+                    if ends[i] + 1 >= s {
+                        continue;
+                    }
+                    let base = i * s * v + ends[i] * v;
+                    let tok = ld[base..base + v]
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0 as i32;
+                    ends[i] += 1;
+                    cur[i][ends[i]] = tok;
+                }
+            }
+            Ok((0..b)
+                .map(|i| {
+                    let verdict: String =
+                        tokenizer::decode(&cur[i][qends[i] + 1..=ends[i].min(s - 1)]);
+                    match re.captures(verdict.trim()) {
+                        Some(c) if &c[1] == "yes" => 1.0,
+                        _ => 0.0,
+                    }
+                })
+                .collect())
+        }
+    }
+}
+
+/// Accuracy of scores against ground truth (eval telemetry for E6).
+pub fn reward_accuracy(tasks: &[Task], responses: &[String], scores: &[f32]) -> f64 {
+    let mut correct = 0usize;
+    for ((t, r), &s) in tasks.iter().zip(responses).zip(scores) {
+        let truth = t.check(r);
+        let predicted = s > 0.5;
+        if truth == predicted {
+            correct += 1;
+        }
+    }
+    correct as f64 / tasks.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::{TaskGen, TaskKind};
+
+    #[test]
+    fn verifier_row_shape_and_qend() {
+        let mut g = TaskGen::new(vec![TaskKind::Add], 1);
+        let t = g.sample();
+        let (row, qend) = verifier_row(&t, "7", 16, 64).unwrap();
+        assert_eq!(row.len(), 64);
+        assert_eq!(row[qend], b':' as i32);
+        let text = tokenizer::decode(&row);
+        assert!(text.ends_with("V:"), "{text}");
+    }
+
+    #[test]
+    fn verifier_row_truncates_long_response() {
+        let mut g = TaskGen::new(vec![TaskKind::Add], 2);
+        let t = g.sample();
+        let long = "9".repeat(200);
+        let (row, qend) = verifier_row(&t, &long, 16, 64).unwrap();
+        assert_eq!(row.len(), 64);
+        assert!(qend < 64);
+    }
+
+    #[test]
+    fn reward_accuracy_metric() {
+        let mut g = TaskGen::new(vec![TaskKind::Add], 3);
+        let tasks: Vec<Task> = g.sample_n(4);
+        let responses: Vec<String> = vec![
+            tasks[0].answer.clone(),   // correct
+            "wrong".into(),            // wrong
+            tasks[2].answer.clone(),   // correct
+            "wrong".into(),            // wrong
+        ];
+        // scores agree with truth on 3 of 4
+        let scores = [1.0, 0.0, 0.0, 0.0];
+        assert!((reward_accuracy(&tasks, &responses, &scores) - 0.75).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,207 @@
+//! RPC client: unique ids, bounded retries, result retrieval + cleanup.
+//!
+//! The paper's protocol (§4.2): the client retries until it retrieves the
+//! cached result, then sends a cleanup message.  A server-side `Err`
+//! response is NOT retried — it is the fail-fast signal the coordinator
+//! escalates into full job termination.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::rpc::transport::Transport;
+use crate::rpc::wire::{Request, Response, Status};
+
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    pub max_attempts: usize,
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 8, backoff: Duration::from_millis(1) }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ClientStats {
+    pub calls: u64,
+    pub retries: u64,
+    pub failures: u64,
+}
+
+pub struct RpcClient<T: Transport> {
+    transport: T,
+    next_id: AtomicU64,
+    pub retry: RetryPolicy,
+    stats: std::sync::Mutex<ClientStats>,
+}
+
+impl<T: Transport> RpcClient<T> {
+    pub fn new(transport: T) -> RpcClient<T> {
+        // Unique id space per client instance: high bits from a per-process
+        // counter so two clients sharing a server never collide.
+        static CLIENT_SEQ: AtomicU64 = AtomicU64::new(1);
+        let base = CLIENT_SEQ.fetch_add(1, Ordering::Relaxed) << 40;
+        RpcClient {
+            transport,
+            next_id: AtomicU64::new(base),
+            retry: RetryPolicy::default(),
+            stats: std::sync::Mutex::new(ClientStats::default()),
+        }
+    }
+
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    pub fn stats(&self) -> ClientStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    fn fresh_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Issue one exactly-once call: retry delivery until the result is
+    /// retrieved, then clean up the server-side cache entry.
+    pub fn call(&self, method: &str, payload: Vec<u8>) -> Result<Vec<u8>> {
+        let id = self.fresh_id();
+        let req = Request { id, method: method.to_string(), payload };
+        self.stats.lock().unwrap().calls += 1;
+
+        let resp = self.deliver_with_retry(&req)?;
+        let result = match resp.status {
+            Status::Ok => Ok(resp.payload),
+            // server-side error: fail fast, no retry (paper §4.2)
+            Status::Err => {
+                self.stats.lock().unwrap().failures += 1;
+                bail!(
+                    "rpc '{}' failed on server: {}",
+                    method,
+                    String::from_utf8_lossy(&resp.payload)
+                )
+            }
+            Status::Cleaned => bail!("unexpected Cleaned status for call"),
+        };
+
+        // best-effort cleanup with retry; result already safe in hand
+        let cleanup = Request::cleanup(id, self.fresh_id());
+        let _ = self.deliver_with_retry(&cleanup);
+        result
+    }
+
+    fn deliver_with_retry(&self, req: &Request) -> Result<Response> {
+        let mut last_err = None;
+        for attempt in 0..self.retry.max_attempts {
+            match self.transport.deliver(req) {
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    last_err = Some(e);
+                    if attempt + 1 < self.retry.max_attempts {
+                        self.stats.lock().unwrap().retries += 1;
+                        std::thread::sleep(self.retry.backoff);
+                    }
+                }
+            }
+        }
+        self.stats.lock().unwrap().failures += 1;
+        bail!(
+            "rpc '{}' (id {}) undeliverable after {} attempts: {:#}",
+            req.method,
+            req.id,
+            self.retry.max_attempts,
+            last_err.unwrap()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::server::{RpcServer, Service};
+    use crate::rpc::transport::{FlakyTransport, InProcTransport};
+    use std::sync::atomic::AtomicU64 as Counter;
+    use std::sync::Arc;
+
+    fn counting_server() -> (Arc<RpcServer<impl Service>>, Arc<Counter>) {
+        let count = Arc::new(Counter::new(0));
+        let c2 = count.clone();
+        let server = Arc::new(RpcServer::new(move |_: &str, p: &[u8]| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            Ok(p.to_vec())
+        }));
+        (server, count)
+    }
+
+    #[test]
+    fn call_cleans_up_after_itself() {
+        let (server, _) = counting_server();
+        let client = RpcClient::new(InProcTransport::new(server.clone()));
+        client.call("m", vec![1]).unwrap();
+        assert_eq!(server.stats().cached_now, 0, "cache must be cleaned");
+        assert_eq!(server.stats().cleaned, 1);
+    }
+
+    #[test]
+    fn exactly_once_under_heavy_response_loss() {
+        // Responses are lost 40% of the time: the client retries the SAME
+        // id, the server serves from cache, the handler runs exactly once
+        // per logical call.
+        let (server, count) = counting_server();
+        let flaky = FlakyTransport::new(InProcTransport::new(server.clone()), 99)
+            .with_probs(0.2, 0.4, 0.2);
+        let client = RpcClient::new(flaky).with_retry(RetryPolicy {
+            max_attempts: 64,
+            backoff: Duration::from_micros(10),
+        });
+        let calls = 50;
+        for i in 0..calls {
+            let out = client.call("work", vec![i as u8]).unwrap();
+            assert_eq!(out, vec![i as u8]);
+        }
+        assert_eq!(
+            count.load(Ordering::SeqCst),
+            calls,
+            "handler must run exactly once per logical call"
+        );
+        assert!(client.stats().retries > 0, "test should actually inject loss");
+    }
+
+    #[test]
+    fn server_error_fails_fast_without_retry() {
+        let server = Arc::new(RpcServer::new(|_: &str, _: &[u8]| -> anyhow::Result<Vec<u8>> {
+            anyhow::bail!("worker exploded")
+        }));
+        let client = RpcClient::new(InProcTransport::new(server.clone()));
+        let err = client.call("m", vec![]).unwrap_err().to_string();
+        assert!(err.contains("worker exploded"), "{err}");
+        assert_eq!(server.stats().executed, 1, "no retry on server error");
+    }
+
+    #[test]
+    fn undeliverable_reports_attempts() {
+        let (server, _) = counting_server();
+        let flaky = FlakyTransport::new(InProcTransport::new(server), 7)
+            .with_probs(1.0, 0.0, 0.0);
+        let client = RpcClient::new(flaky).with_retry(RetryPolicy {
+            max_attempts: 3,
+            backoff: Duration::from_micros(1),
+        });
+        let err = client.call("m", vec![]).unwrap_err().to_string();
+        assert!(err.contains("3 attempts"), "{err}");
+    }
+
+    #[test]
+    fn ids_unique_across_clients() {
+        let (server, count) = counting_server();
+        let c1 = RpcClient::new(InProcTransport::new(server.clone()));
+        let c2 = RpcClient::new(InProcTransport::new(server.clone()));
+        c1.call("m", vec![]).unwrap();
+        c2.call("m", vec![]).unwrap();
+        assert_eq!(count.load(Ordering::SeqCst), 2);
+    }
+}

@@ -1,0 +1,24 @@
+//! Exactly-once RPC — implemented verbatim from the paper (§4.2):
+//!
+//! > "each RPC request is assigned a unique ID, and the result is cached on
+//! >  the server side until the client successfully retrieves it.  The
+//! >  client then sends a request to clean up the cached RPC result."
+//!
+//! > "If the RPC returns an unexpected or undesired result, the controller
+//! >  simply terminates all processes."  — surfaced here as hard errors the
+//! >  coordinator escalates (fail-fast; deep-learning jobs are all-or-
+//! >  nothing).
+//!
+//! Two transports: in-process (controller ↔ worker threads) and TCP
+//! (length-prefixed frames; multi-process launches).  `FlakyTransport`
+//! injects drops/duplicates for the E8 exactly-once tests.
+
+pub mod client;
+pub mod server;
+pub mod transport;
+pub mod wire;
+
+pub use client::RpcClient;
+pub use server::{RpcServer, Service};
+pub use transport::{FlakyTransport, InProcTransport, TcpTransport, Transport};
+pub use wire::{Request, Response, Status};

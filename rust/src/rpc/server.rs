@@ -1,0 +1,197 @@
+//! RPC server: executes service methods with exactly-once semantics.
+//!
+//! Duplicate deliveries of a request id return the cached result without
+//! re-executing (the paper's server-side result cache, §4.2); the cache
+//! entry lives until the client's cleanup message.  Re-delivery *after*
+//! cleanup is a protocol violation (the client only cleans up once it has
+//! the result) and is answered with a hard error — the coordinator's
+//! fail-fast rule then tears the job down.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::rpc::wire::{Request, Response, Status, METHOD_CLEANUP};
+use crate::util::codec::Reader;
+
+/// A dispatchable service: the worker-side handler the controller calls.
+pub trait Service: Send + Sync {
+    fn handle(&self, method: &str, payload: &[u8]) -> Result<Vec<u8>>;
+}
+
+impl<F> Service for F
+where
+    F: Fn(&str, &[u8]) -> Result<Vec<u8>> + Send + Sync,
+{
+    fn handle(&self, method: &str, payload: &[u8]) -> Result<Vec<u8>> {
+        self(method, payload)
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub executed: u64,
+    pub duplicates_served: u64,
+    pub cleaned: u64,
+    pub errors: u64,
+    pub cached_now: usize,
+}
+
+pub struct RpcServer<S: Service> {
+    service: S,
+    /// request id → cached result (until cleanup)
+    cache: Mutex<HashMap<u64, Response>>,
+    /// ids whose cache has been cleaned — tombstones for violation detection
+    tombstones: Mutex<HashSet<u64>>,
+    stats: Mutex<ServerStats>,
+}
+
+impl<S: Service> RpcServer<S> {
+    pub fn new(service: S) -> RpcServer<S> {
+        RpcServer {
+            service,
+            cache: Mutex::new(HashMap::new()),
+            tombstones: Mutex::new(HashSet::new()),
+            stats: Mutex::new(ServerStats::default()),
+        }
+    }
+
+    pub fn service(&self) -> &S {
+        &self.service
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        let mut s = self.stats.lock().unwrap().clone();
+        s.cached_now = self.cache.lock().unwrap().len();
+        s
+    }
+
+    /// Handle one delivered request (possibly a duplicate).
+    pub fn dispatch(&self, req: &Request) -> Response {
+        if req.method == METHOD_CLEANUP {
+            return self.handle_cleanup(req);
+        }
+        // duplicate delivery? serve from cache, do NOT re-execute
+        if let Some(cached) = self.cache.lock().unwrap().get(&req.id) {
+            self.stats.lock().unwrap().duplicates_served += 1;
+            return cached.clone();
+        }
+        if self.tombstones.lock().unwrap().contains(&req.id) {
+            // re-delivery after cleanup: protocol violation → fail fast
+            self.stats.lock().unwrap().errors += 1;
+            return Response {
+                id: req.id,
+                status: Status::Err,
+                payload: b"request id re-delivered after cleanup".to_vec(),
+            };
+        }
+        let resp = match self.service.handle(&req.method, &req.payload) {
+            Ok(payload) => Response { id: req.id, status: Status::Ok, payload },
+            Err(e) => {
+                self.stats.lock().unwrap().errors += 1;
+                Response {
+                    id: req.id,
+                    status: Status::Err,
+                    payload: format!("{e:#}").into_bytes(),
+                }
+            }
+        };
+        self.stats.lock().unwrap().executed += 1;
+        self.cache.lock().unwrap().insert(req.id, resp.clone());
+        resp
+    }
+
+    fn handle_cleanup(&self, req: &Request) -> Response {
+        let target = match Reader::new(&req.payload).u64() {
+            Ok(t) => t,
+            Err(_) => {
+                return Response {
+                    id: req.id,
+                    status: Status::Err,
+                    payload: b"bad cleanup payload".to_vec(),
+                }
+            }
+        };
+        if self.cache.lock().unwrap().remove(&target).is_some() {
+            self.tombstones.lock().unwrap().insert(target);
+            self.stats.lock().unwrap().cleaned += 1;
+        }
+        // cleanup is idempotent — duplicate cleanups succeed silently
+        Response { id: req.id, status: Status::Cleaned, payload: vec![] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn echo_server() -> RpcServer<impl Service> {
+        RpcServer::new(|method: &str, payload: &[u8]| {
+            if method == "fail" {
+                anyhow::bail!("boom");
+            }
+            Ok(payload.to_vec())
+        })
+    }
+
+    #[test]
+    fn executes_and_caches() {
+        let s = echo_server();
+        let req = Request { id: 1, method: "echo".into(), payload: vec![9] };
+        let r1 = s.dispatch(&req);
+        assert_eq!(r1.status, Status::Ok);
+        assert_eq!(r1.payload, vec![9]);
+        assert_eq!(s.stats().cached_now, 1);
+    }
+
+    #[test]
+    fn duplicate_not_reexecuted() {
+        let count = AtomicU64::new(0);
+        let s = RpcServer::new(move |_: &str, _: &[u8]| {
+            count.fetch_add(1, Ordering::SeqCst);
+            Ok(count.load(Ordering::SeqCst).to_le_bytes().to_vec())
+        });
+        let req = Request { id: 5, method: "inc".into(), payload: vec![] };
+        let r1 = s.dispatch(&req);
+        let r2 = s.dispatch(&req);
+        assert_eq!(r1, r2, "duplicate must return the cached result");
+        assert_eq!(s.stats().executed, 1);
+        assert_eq!(s.stats().duplicates_served, 1);
+    }
+
+    #[test]
+    fn cleanup_releases_cache_and_is_idempotent() {
+        let s = echo_server();
+        s.dispatch(&Request { id: 1, method: "echo".into(), payload: vec![1] });
+        assert_eq!(s.stats().cached_now, 1);
+        let c = s.dispatch(&Request::cleanup(1, 2));
+        assert_eq!(c.status, Status::Cleaned);
+        assert_eq!(s.stats().cached_now, 0);
+        // idempotent
+        let c2 = s.dispatch(&Request::cleanup(1, 3));
+        assert_eq!(c2.status, Status::Cleaned);
+    }
+
+    #[test]
+    fn redelivery_after_cleanup_is_violation() {
+        let s = echo_server();
+        let req = Request { id: 1, method: "echo".into(), payload: vec![1] };
+        s.dispatch(&req);
+        s.dispatch(&Request::cleanup(1, 2));
+        let r = s.dispatch(&req);
+        assert_eq!(r.status, Status::Err);
+    }
+
+    #[test]
+    fn service_errors_are_cached_too() {
+        let s = echo_server();
+        let req = Request { id: 9, method: "fail".into(), payload: vec![] };
+        let r1 = s.dispatch(&req);
+        assert_eq!(r1.status, Status::Err);
+        let r2 = s.dispatch(&req);
+        assert_eq!(r1, r2);
+        assert_eq!(s.stats().executed, 1);
+    }
+}

@@ -1,0 +1,295 @@
+//! RPC transports: in-process, TCP (length-prefixed frames), and a
+//! fault-injecting wrapper for the exactly-once tests (E8).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::rpc::server::{RpcServer, Service};
+use crate::rpc::wire::{Request, Response};
+use crate::util::rng::Rng;
+
+/// A request/response transport.  `deliver` carries one encoded Request and
+/// returns the encoded Response (or a transport error — the retry trigger).
+pub trait Transport: Send + Sync {
+    fn deliver(&self, request: &Request) -> Result<Response>;
+}
+
+// ---------------------------------------------------------------------------
+// In-process
+// ---------------------------------------------------------------------------
+
+pub struct InProcTransport<S: Service> {
+    server: Arc<RpcServer<S>>,
+}
+
+impl<S: Service> InProcTransport<S> {
+    pub fn new(server: Arc<RpcServer<S>>) -> Self {
+        InProcTransport { server }
+    }
+}
+
+impl<S: Service> Transport for InProcTransport<S> {
+    fn deliver(&self, request: &Request) -> Result<Response> {
+        Ok(self.server.dispatch(request))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP
+// ---------------------------------------------------------------------------
+
+fn write_frame(stream: &mut TcpStream, bytes: &[u8]) -> Result<()> {
+    stream.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    stream.write_all(bytes)?;
+    Ok(())
+}
+
+fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
+    let mut len_buf = [0u8; 4];
+    stream.read_exact(&mut len_buf).context("reading frame length")?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > 1 << 30 {
+        bail!("frame too large: {len}");
+    }
+    let mut buf = vec![0u8; len];
+    stream.read_exact(&mut buf).context("reading frame body")?;
+    Ok(buf)
+}
+
+/// TCP server: accepts connections, one handler thread each, dispatching
+/// into a shared `RpcServer`.
+pub struct TcpRpcHost {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpRpcHost {
+    /// Bind on 127.0.0.1:0 (ephemeral port) and serve until dropped.
+    pub fn spawn<S: Service + 'static>(server: Arc<RpcServer<S>>) -> Result<TcpRpcHost> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            let mut workers = Vec::new();
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((mut stream, _)) => {
+                        stream.set_nonblocking(false).ok();
+                        let server = server.clone();
+                        workers.push(std::thread::spawn(move || {
+                            loop {
+                                let frame = match read_frame(&mut stream) {
+                                    Ok(f) => f,
+                                    Err(_) => break, // connection closed
+                                };
+                                let resp = match Request::decode(&frame) {
+                                    Ok(req) => server.dispatch(&req),
+                                    Err(e) => Response {
+                                        id: 0,
+                                        status: crate::rpc::wire::Status::Err,
+                                        payload: format!("{e:#}").into_bytes(),
+                                    },
+                                };
+                                if write_frame(&mut stream, &resp.encode()).is_err() {
+                                    break;
+                                }
+                            }
+                        }));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for w in workers {
+                w.join().ok();
+            }
+        });
+        Ok(TcpRpcHost { addr, stop, handle: Some(handle) })
+    }
+}
+
+impl Drop for TcpRpcHost {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+/// TCP client transport: one persistent connection, re-established on error.
+pub struct TcpTransport {
+    addr: std::net::SocketAddr,
+    conn: Mutex<Option<TcpStream>>,
+}
+
+impl TcpTransport {
+    pub fn connect(addr: std::net::SocketAddr) -> TcpTransport {
+        TcpTransport { addr, conn: Mutex::new(None) }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn deliver(&self, request: &Request) -> Result<Response> {
+        let mut guard = self.conn.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(TcpStream::connect(self.addr).context("connecting")?);
+        }
+        let stream = guard.as_mut().unwrap();
+        let result = (|| -> Result<Response> {
+            write_frame(stream, &request.encode())?;
+            let frame = read_frame(stream)?;
+            Response::decode(&frame)
+        })();
+        if result.is_err() {
+            *guard = None; // force reconnect on next call
+        }
+        result
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------------
+
+/// Wraps a transport and injects failures:
+/// * `drop_request_prob` — request lost before reaching the server;
+/// * `drop_response_prob` — server executed, but the response is lost
+///   (the dangerous case exactly-once semantics exist for);
+/// * `duplicate_prob` — the request is delivered twice.
+pub struct FlakyTransport<T: Transport> {
+    inner: T,
+    pub drop_request_prob: f64,
+    pub drop_response_prob: f64,
+    pub duplicate_prob: f64,
+    rng: Mutex<Rng>,
+    pub injected_failures: AtomicU64,
+}
+
+impl<T: Transport> FlakyTransport<T> {
+    pub fn new(inner: T, seed: u64) -> FlakyTransport<T> {
+        FlakyTransport {
+            inner,
+            drop_request_prob: 0.0,
+            drop_response_prob: 0.0,
+            duplicate_prob: 0.0,
+            rng: Mutex::new(Rng::new(seed)),
+            injected_failures: AtomicU64::new(0),
+        }
+    }
+
+    pub fn with_probs(mut self, req: f64, resp: f64, dup: f64) -> Self {
+        self.drop_request_prob = req;
+        self.drop_response_prob = resp;
+        self.duplicate_prob = dup;
+        self
+    }
+}
+
+impl<T: Transport> Transport for FlakyTransport<T> {
+    fn deliver(&self, request: &Request) -> Result<Response> {
+        let (drop_req, drop_resp, dup) = {
+            let mut rng = self.rng.lock().unwrap();
+            (
+                rng.bool(self.drop_request_prob),
+                rng.bool(self.drop_response_prob),
+                rng.bool(self.duplicate_prob),
+            )
+        };
+        if drop_req {
+            self.injected_failures.fetch_add(1, Ordering::Relaxed);
+            bail!("injected: request dropped");
+        }
+        if dup {
+            // deliver twice; first response discarded
+            let _ = self.inner.deliver(request)?;
+        }
+        let resp = self.inner.deliver(request)?;
+        if drop_resp {
+            self.injected_failures.fetch_add(1, Ordering::Relaxed);
+            bail!("injected: response dropped");
+        }
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::wire::Status;
+
+    fn echo() -> Arc<RpcServer<impl Service>> {
+        Arc::new(RpcServer::new(|_m: &str, p: &[u8]| Ok(p.to_vec())))
+    }
+
+    #[test]
+    fn inproc_roundtrip() {
+        let t = InProcTransport::new(echo());
+        let r = t
+            .deliver(&Request { id: 1, method: "e".into(), payload: vec![5] })
+            .unwrap();
+        assert_eq!(r.status, Status::Ok);
+        assert_eq!(r.payload, vec![5]);
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let server = echo();
+        let host = TcpRpcHost::spawn(server.clone()).unwrap();
+        let t = TcpTransport::connect(host.addr);
+        for i in 0..10u64 {
+            let r = t
+                .deliver(&Request { id: i, method: "e".into(), payload: vec![i as u8] })
+                .unwrap();
+            assert_eq!(r.payload, vec![i as u8]);
+        }
+        assert_eq!(server.stats().executed, 10);
+    }
+
+    #[test]
+    fn tcp_concurrent_clients() {
+        let server = echo();
+        let host = TcpRpcHost::spawn(server.clone()).unwrap();
+        let addr = host.addr;
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let tr = TcpTransport::connect(addr);
+                    for i in 0..25u64 {
+                        let id = t * 1000 + i;
+                        let r = tr
+                            .deliver(&Request {
+                                id,
+                                method: "e".into(),
+                                payload: id.to_le_bytes().to_vec(),
+                            })
+                            .unwrap();
+                        assert_eq!(r.payload, id.to_le_bytes().to_vec());
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(server.stats().executed, 100);
+    }
+
+    #[test]
+    fn flaky_drops_surface_as_errors() {
+        let t = FlakyTransport::new(InProcTransport::new(echo()), 1)
+            .with_probs(1.0, 0.0, 0.0);
+        assert!(t
+            .deliver(&Request { id: 1, method: "e".into(), payload: vec![] })
+            .is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! RPC wire format: binary envelopes over the util::codec primitives.
+
+use anyhow::{bail, Result};
+
+use crate::util::codec::{Reader, Writer};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub method: String,
+    pub payload: Vec<u8>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    Ok = 0,
+    Err = 1,
+    /// cleanup acknowledgement
+    Cleaned = 2,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub status: Status,
+    pub payload: Vec<u8>,
+}
+
+pub const METHOD_CLEANUP: &str = "__cleanup";
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u64(self.id);
+        w.str(&self.method);
+        w.bytes(&self.payload);
+        w.into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Request> {
+        let mut r = Reader::new(bytes);
+        let req = Request {
+            id: r.u64()?,
+            method: r.str()?,
+            payload: r.bytes()?.to_vec(),
+        };
+        r.expect_end()?;
+        Ok(req)
+    }
+
+    pub fn cleanup(id_to_clean: u64, my_id: u64) -> Request {
+        let mut w = Writer::new();
+        w.u64(id_to_clean);
+        Request { id: my_id, method: METHOD_CLEANUP.into(), payload: w.into_bytes() }
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u64(self.id);
+        w.u8(self.status as u8);
+        w.bytes(&self.payload);
+        w.into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Response> {
+        let mut r = Reader::new(bytes);
+        let id = r.u64()?;
+        let status = match r.u8()? {
+            0 => Status::Ok,
+            1 => Status::Err,
+            2 => Status::Cleaned,
+            s => bail!("bad status byte {s}"),
+        };
+        let payload = r.bytes()?.to_vec();
+        r.expect_end()?;
+        Ok(Response { id, status, payload })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let req = Request { id: 42, method: "generate".into(), payload: vec![1, 2, 3] };
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        for status in [Status::Ok, Status::Err, Status::Cleaned] {
+            let resp = Response { id: 7, status, payload: b"xyz".to_vec() };
+            assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn truncated_frames_rejected() {
+        let req = Request { id: 1, method: "m".into(), payload: vec![0; 16] };
+        let enc = req.encode();
+        assert!(Request::decode(&enc[..enc.len() - 1]).is_err());
+        assert!(Response::decode(&[1, 2, 3]).is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts, compiles them once,
+//! and executes them with host `Tensor` inputs.
+//!
+//! This is the only place Python-built compute enters the Rust system.  The
+//! pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! HLO *text* is the interchange format (serialized protos from jax ≥ 0.5 are
+//! rejected by xla_extension 0.5.1 — see aot.py).
+//!
+//! Thread-safety: `xla` wrapper types hold raw pointers and are not `Send`;
+//! the engine serializes all PJRT access behind one mutex.  XLA-CPU
+//! parallelizes *inside* an execution via its intra-op thread pool, so
+//! coordinator-level threads lose no meaningful compute parallelism.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{artifacts_dir, ArtifactSpec, Manifest};
+use crate::runtime::tensor::Tensor;
+
+struct Inner {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Per-artifact execution statistics (feeds the utilization monitor and the
+/// §Perf tables in EXPERIMENTS.md).
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total: Duration,
+    pub compile_time: Duration,
+}
+
+pub struct Engine {
+    manifest: Manifest,
+    inner: Mutex<Inner>,
+    stats: Mutex<HashMap<String, ExecStats>>,
+}
+
+// SAFETY: all access to the raw-pointer-holding xla types is serialized
+// behind `inner`; the PJRT CPU plugin itself is thread-safe.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Load the artifact set for a named config (e.g. "tiny", "quickstart").
+    pub fn load(config: &str) -> Result<Engine> {
+        Self::from_dir(artifacts_dir(config))
+    }
+
+    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            manifest,
+            inner: Mutex::new(Inner { client, executables: HashMap::new() }),
+            stats: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Pre-compile a set of artifacts (elides first-call latency).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = inner
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        inner.executables.insert(name.to_string(), exe);
+        self.stats
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .compile_time = t0.elapsed();
+        Ok(())
+    }
+
+    fn validate_inputs(spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact '{}' expects {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if t.shape != s.shape || t.dtype() != s.dtype {
+                bail!(
+                    "artifact '{}' input #{i} ('{}'): expected {:?} {}, \
+                     got {:?} {}",
+                    spec.name,
+                    s.name,
+                    s.shape,
+                    s.dtype.name(),
+                    t.shape,
+                    t.dtype().name()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact.  Inputs/outputs are host tensors in manifest
+    /// order; the tuple root is decomposed into one tensor per output.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.run_refs(name, &refs)
+    }
+
+    /// Borrowing variant of `run` — hot paths avoid cloning multi-MB
+    /// parameter tensors just to build the input list (§Perf).
+    pub fn run_refs(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let n_outputs = {
+            let spec = self.manifest.artifact(name)?;
+            Self::validate_inputs(spec, inputs)?;
+            spec.outputs.len()
+        };
+        self.ensure_compiled(name)?;
+
+        let t0 = Instant::now();
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+
+        let outputs = {
+            let inner = self.inner.lock().unwrap();
+            let exe = inner.executables.get(name).unwrap();
+            let result = exe
+                .execute::<xla::Literal>(&lits)
+                .with_context(|| format!("executing '{name}'"))?;
+            let root = result[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            let parts = root.to_tuple().context("decomposing result tuple")?;
+            parts
+                .iter()
+                .map(Tensor::from_literal)
+                .collect::<Result<Vec<_>>>()?
+        };
+
+        if outputs.len() != n_outputs {
+            bail!(
+                "artifact '{}' returned {} outputs, manifest says {}",
+                name,
+                outputs.len(),
+                n_outputs
+            );
+        }
+
+        let mut stats = self.stats.lock().unwrap();
+        let e = stats.entry(name.to_string()).or_default();
+        e.calls += 1;
+        e.total += t0.elapsed();
+        Ok(outputs)
+    }
+
+    /// Snapshot of per-artifact stats.
+    pub fn stats(&self) -> HashMap<String, ExecStats> {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Mean wallclock of one call of `name`, if it has been run.
+    pub fn mean_call_time(&self, name: &str) -> Option<Duration> {
+        let stats = self.stats.lock().unwrap();
+        let e = stats.get(name)?;
+        if e.calls == 0 {
+            return None;
+        }
+        Some(e.total / e.calls as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine tests that need built artifacts live in rust/tests/; here we
+    // only check the failure paths that need no artifacts.
+
+    #[test]
+    fn missing_dir_fails_cleanly() {
+        let msg = match Engine::from_dir("/nonexistent/path") {
+            Ok(_) => panic!("expected error"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

@@ -1,0 +1,250 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! The manifest pins, for every artifact, the exact flat order / shapes /
+//! dtypes of HLO parameters and tuple outputs (jax flattens pytrees in
+//! sorted-dict-key order), plus the policy / scalar-model parameter trees so
+//! the coordinator can checkpoint, shard and all-reduce flat tensor lists
+//! without reconstructing a pytree.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::tensor::Dtype;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json, name_key: &str) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req(name_key)?.as_str().unwrap_or_default().to_string(),
+            shape: j
+                .req("shape")?
+                .as_arr()
+                .context("shape not array")?
+                .iter()
+                .map(|d| d.as_usize().context("bad dim"))
+                .collect::<Result<_>>()?,
+            dtype: Dtype::parse(j.req("dtype")?.as_str().context("dtype not str")?)?,
+        })
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub hlo_bytes: usize,
+}
+
+/// Model dimensions baked into the artifact set (mirror of ModelConfig).
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub prompt_len: usize,
+    pub batch: usize,
+    pub use_pallas: bool,
+}
+
+impl ModelDims {
+    pub fn gen_len(&self) -> usize {
+        self.max_seq - self.prompt_len
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dims: ModelDims,
+    pub param_count: usize,
+    pub scalar_param_count: usize,
+    /// Flat policy parameter tree (manifest order == HLO parameter order).
+    pub policy_tree: Vec<TensorSpec>,
+    /// Flat scalar-head (critic / BT reward) parameter tree.
+    pub scalar_tree: Vec<TensorSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let cfg = j.req("config")?;
+        let dims = ModelDims {
+            name: cfg.req("name")?.as_str().unwrap_or_default().to_string(),
+            vocab: cfg.req("vocab")?.as_usize().context("vocab")?,
+            d_model: cfg.req("d_model")?.as_usize().context("d_model")?,
+            n_layers: cfg.req("n_layers")?.as_usize().context("n_layers")?,
+            n_heads: cfg.req("n_heads")?.as_usize().context("n_heads")?,
+            d_ff: cfg.req("d_ff")?.as_usize().context("d_ff")?,
+            max_seq: cfg.req("max_seq")?.as_usize().context("max_seq")?,
+            prompt_len: cfg.req("prompt_len")?.as_usize().context("prompt_len")?,
+            batch: cfg.req("batch")?.as_usize().context("batch")?,
+            use_pallas: cfg.req("use_pallas")?.as_bool().unwrap_or(false),
+        };
+
+        let tree = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.req(key)?
+                .as_arr()
+                .context("tree not array")?
+                .iter()
+                .map(|t| TensorSpec::from_json(t, "path"))
+                .collect()
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.req("artifacts")?.as_obj().context("artifacts")? {
+            let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.req(key)?
+                    .as_arr()
+                    .context("io not array")?
+                    .iter()
+                    .map(|t| TensorSpec::from_json(t, "name"))
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: a.req("file")?.as_str().context("file")?.to_string(),
+                    inputs: specs("inputs")?,
+                    outputs: specs("outputs")?,
+                    hlo_bytes: a
+                        .get("hlo_bytes")
+                        .and_then(|v| v.as_usize())
+                        .unwrap_or(0),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir,
+            dims,
+            param_count: j.req("param_count")?.as_usize().context("param_count")?,
+            scalar_param_count: j
+                .req("scalar_param_count")?
+                .as_usize()
+                .context("scalar_param_count")?,
+            policy_tree: tree("policy_tree")?,
+            scalar_tree: tree("scalar_tree")?,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Total bytes of one policy parameter set (f32).
+    pub fn policy_bytes(&self) -> usize {
+        self.param_count * 4
+    }
+}
+
+/// Locate the artifacts directory for a config: `$GCORE_ARTIFACTS/<cfg>` or
+/// `artifacts/<cfg>` relative to the repo root / cwd.
+pub fn artifacts_dir(config: &str) -> PathBuf {
+    if let Ok(base) = std::env::var("GCORE_ARTIFACTS") {
+        return PathBuf::from(base).join(config);
+    }
+    // walk up from cwd looking for artifacts/<config>/manifest.json
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts").join(config);
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    PathBuf::from("artifacts").join(config)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Option<Manifest> {
+        let dir = artifacts_dir("tiny");
+        Manifest::load(dir).ok()
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        let Some(m) = tiny() else { return }; // skip if artifacts not built
+        assert_eq!(m.dims.name, "tiny");
+        assert_eq!(m.dims.vocab, 256);
+        assert_eq!(m.policy_tree.len(), 17);
+        assert_eq!(m.scalar_tree.len(), 17);
+        assert!(m.artifacts.contains_key("train_step"));
+        assert!(m.artifacts.contains_key("decode_step"));
+    }
+
+    #[test]
+    fn param_tree_elements_match_count() {
+        let Some(m) = tiny() else { return };
+        let total: usize = m.policy_tree.iter().map(|t| t.num_elements()).sum();
+        assert_eq!(total, m.param_count);
+        let stotal: usize = m.scalar_tree.iter().map(|t| t.num_elements()).sum();
+        assert_eq!(stotal, m.scalar_param_count);
+    }
+
+    #[test]
+    fn artifact_io_arity_contract() {
+        let Some(m) = tiny() else { return };
+        let np = m.policy_tree.len();
+        // policy_grad: params + 8 data args in; grads + 4 scalars out
+        let pg = m.artifact("policy_grad").unwrap();
+        assert_eq!(pg.inputs.len(), np + 8);
+        assert_eq!(pg.outputs.len(), np + 4);
+        // train_step: 3 trees + 10 data in; 3 trees + 4 scalars out
+        let ts = m.artifact("train_step").unwrap();
+        assert_eq!(ts.inputs.len(), 3 * np + 10);
+        assert_eq!(ts.outputs.len(), 3 * np + 4);
+        // decode_step roundtrip shapes
+        let ds = m.artifact("decode_step").unwrap();
+        assert_eq!(ds.inputs[np].shape, ds.outputs[1].shape);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let Some(m) = tiny() else { return };
+        assert!(m.artifact("nonexistent").is_err());
+    }
+}

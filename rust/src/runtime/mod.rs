@@ -1,0 +1,12 @@
+//! Runtime layer: PJRT client wrapper executing the AOT artifacts built by
+//! `python/compile/aot.py`.  See DESIGN.md §3 (Layer 3 → runtime).
+
+pub mod engine;
+pub mod manifest;
+pub mod params;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{artifacts_dir, Manifest, ModelDims, TensorSpec};
+pub use params::{init_policy, init_scalar, ParamSet, TrainState};
+pub use tensor::{Dtype, Tensor, TensorData};

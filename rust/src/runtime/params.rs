@@ -1,0 +1,177 @@
+//! Parameter sets and optimizer state: flat tensor lists in manifest order.
+//!
+//! A `ParamSet` is the Rust-side representation of one model's weights —
+//! policy, reference, critic, or reward model.  The flat ordering is pinned
+//! by the manifest (`policy_tree` / `scalar_tree`), so gradient all-reduce,
+//! checkpointing and weight broadcast are order-stable across processes.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::engine::Engine;
+use crate::runtime::manifest::TensorSpec;
+use crate::runtime::tensor::Tensor;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSet {
+    pub tensors: Vec<Tensor>,
+}
+
+impl ParamSet {
+    pub fn new(tensors: Vec<Tensor>) -> ParamSet {
+        ParamSet { tensors }
+    }
+
+    /// Zero tensors shaped after a manifest tree (Adam m/v init).
+    pub fn zeros(tree: &[TensorSpec]) -> ParamSet {
+        ParamSet {
+            tensors: tree
+                .iter()
+                .map(|s| Tensor::zeros_f32(s.shape.clone()))
+                .collect(),
+        }
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.size_bytes()).sum()
+    }
+
+    /// Elementwise average of several same-shaped sets (gradient reduce).
+    pub fn average(sets: &[&ParamSet]) -> Result<ParamSet> {
+        if sets.is_empty() {
+            bail!("average of zero param sets");
+        }
+        let mut acc = sets[0].clone();
+        for s in &sets[1..] {
+            if s.tensors.len() != acc.tensors.len() {
+                bail!("param set arity mismatch");
+            }
+            for (a, b) in acc.tensors.iter_mut().zip(&s.tensors) {
+                a.add_assign(b)?;
+            }
+        }
+        let scale = 1.0 / sets.len() as f32;
+        for t in &mut acc.tensors {
+            t.scale(scale)?;
+        }
+        Ok(acc)
+    }
+
+    /// Global L2 norm across all tensors (telemetry).
+    pub fn l2_norm(&self) -> Result<f64> {
+        let mut sq = 0.0;
+        for t in &self.tensors {
+            let n = t.l2_norm()?;
+            sq += n * n;
+        }
+        Ok(sq.sqrt())
+    }
+}
+
+/// Initialise a policy-model parameter set via the `init_policy` artifact.
+pub fn init_policy(engine: &Engine, seed: u32) -> Result<ParamSet> {
+    Ok(ParamSet::new(
+        engine.run("init_policy", &[Tensor::scalar_u32(seed)])?,
+    ))
+}
+
+/// Initialise a scalar-head (critic / BT reward) parameter set.
+pub fn init_scalar(engine: &Engine, seed: u32) -> Result<ParamSet> {
+    Ok(ParamSet::new(
+        engine.run("init_scalar", &[Tensor::scalar_u32(seed)])?,
+    ))
+}
+
+/// Optimiser-carrying training state for one model replica.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub params: ParamSet,
+    pub m: ParamSet,
+    pub v: ParamSet,
+    pub step: u64,
+}
+
+impl TrainState {
+    pub fn new(params: ParamSet, tree: &[TensorSpec]) -> TrainState {
+        TrainState {
+            params,
+            m: ParamSet::zeros(tree),
+            v: ParamSet::zeros(tree),
+            step: 0,
+        }
+    }
+
+    /// Apply pre-reduced gradients via the `adam_*` artifact.
+    /// `artifact` is "adam_policy" or "adam_scalar".
+    pub fn apply_grads(
+        &mut self,
+        engine: &Engine,
+        artifact: &str,
+        grads: &ParamSet,
+        lr: f32,
+    ) -> Result<()> {
+        self.step += 1;
+        let n = self.params.tensors.len();
+        let step_t = Tensor::scalar_f32(self.step as f32);
+        let lr_t = Tensor::scalar_f32(lr);
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(4 * n + 2);
+        inputs.extend(self.params.tensors.iter());
+        inputs.extend(self.m.tensors.iter());
+        inputs.extend(self.v.tensors.iter());
+        inputs.extend(grads.tensors.iter());
+        inputs.push(&step_t);
+        inputs.push(&lr_t);
+        let mut out = engine.run_refs(artifact, &inputs)?;
+        if out.len() != 3 * n {
+            bail!("{artifact} returned {} tensors, expected {}", out.len(), 3 * n);
+        }
+        let v = out.split_off(2 * n);
+        let m = out.split_off(n);
+        self.params = ParamSet::new(out);
+        self.m = ParamSet::new(m);
+        self.v = ParamSet::new(v);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(shape: Vec<usize>) -> TensorSpec {
+        TensorSpec { name: "t".into(), shape, dtype: crate::runtime::tensor::Dtype::F32 }
+    }
+
+    #[test]
+    fn zeros_matches_tree() {
+        let tree = vec![spec(vec![2, 3]), spec(vec![4])];
+        let p = ParamSet::zeros(&tree);
+        assert_eq!(p.num_elements(), 10);
+        assert_eq!(p.size_bytes(), 40);
+    }
+
+    #[test]
+    fn average_of_sets() {
+        let a = ParamSet::new(vec![Tensor::f32(vec![2], vec![1.0, 3.0])]);
+        let b = ParamSet::new(vec![Tensor::f32(vec![2], vec![3.0, 5.0])]);
+        let avg = ParamSet::average(&[&a, &b]).unwrap();
+        assert_eq!(avg.tensors[0].as_f32().unwrap(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn average_empty_fails() {
+        assert!(ParamSet::average(&[]).is_err());
+    }
+
+    #[test]
+    fn l2_norm() {
+        let p = ParamSet::new(vec![
+            Tensor::f32(vec![2], vec![3.0, 0.0]),
+            Tensor::f32(vec![1], vec![4.0]),
+        ]);
+        assert!((p.l2_norm().unwrap() - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,268 @@
+//! Host tensors: the owned, `Send` value type the coordinator passes around.
+//!
+//! `xla::Literal` wraps raw C pointers (not `Send`), so the L3 data plane —
+//! RPC payloads, checkpoints, gradient all-reduce — moves `Tensor`s and only
+//! converts to/from `Literal` at the PJRT boundary inside `Engine`.
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            "u32" => Dtype::U32,
+            other => bail!("unsupported dtype '{other}' (artifacts are f32/i32/u32)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I32 => "i32",
+            Dtype::U32 => "u32",
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+
+    fn element_type(&self) -> xla::ElementType {
+        match self {
+            Dtype::F32 => xla::ElementType::F32,
+            Dtype::I32 => xla::ElementType::S32,
+            Dtype::U32 => xla::ElementType::U32,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+/// A host-resident n-d array (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn u32(shape: Vec<usize>, data: Vec<u32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::U32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::f32(vec![], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::i32(vec![], vec![v])
+    }
+
+    pub fn scalar_u32(v: u32) -> Tensor {
+        Tensor::u32(vec![], vec![v])
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match &self.data {
+            TensorData::F32(_) => Dtype::F32,
+            TensorData::I32(_) => Dtype::I32,
+            TensorData::U32(_) => Dtype::U32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is {:?}, expected f32", self.dtype()),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            other => bail!("tensor is not f32: {:?}", matches!(other, TensorData::F32(_))),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is {:?}, expected i32", self.dtype()),
+        }
+    }
+
+    pub fn scalar_value_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected scalar, got shape {:?}", self.shape);
+        }
+        Ok(v[0])
+    }
+
+    fn raw_bytes(&self) -> &[u8] {
+        match &self.data {
+            TensorData::F32(v) => bytemuck_f32(v),
+            TensorData::I32(v) => bytemuck_i32(v),
+            TensorData::U32(v) => bytemuck_u32(v),
+        }
+    }
+
+    /// Convert to an XLA literal (PJRT boundary; engine-internal).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype().element_type(),
+            &self.shape,
+            self.raw_bytes(),
+        )
+        .context("literal creation failed")
+    }
+
+    /// Convert back from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
+            xla::ElementType::U32 => TensorData::U32(lit.to_vec::<u32>()?),
+            other => bail!("unsupported literal element type {other:?}"),
+        };
+        Ok(Tensor { shape: dims, data })
+    }
+
+    // ---- element-wise ops used by the gradient collective -----------------
+
+    /// self += other (f32, shapes must match).
+    pub fn add_assign(&mut self, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        let b = other.as_f32()?.to_vec();
+        let a = self.as_f32_mut()?;
+        for (x, y) in a.iter_mut().zip(b) {
+            *x += y;
+        }
+        Ok(())
+    }
+
+    /// self *= s (f32).
+    pub fn scale(&mut self, s: f32) -> Result<()> {
+        for x in self.as_f32_mut()? {
+            *x *= s;
+        }
+        Ok(())
+    }
+
+    /// L2 norm (f32) — used by grad-norm telemetry.
+    pub fn l2_norm(&self) -> Result<f64> {
+        Ok(self
+            .as_f32()?
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt())
+    }
+}
+
+// Safe reinterpretation of &[T] as &[u8] for POD element types.
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+fn bytemuck_u32(v: &[u32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_scalar() {
+        let t = Tensor::scalar_i32(-7);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[-7]);
+        assert!(back.shape.is_empty());
+    }
+
+    #[test]
+    fn literal_roundtrip_u32() {
+        let t = Tensor::u32(vec![4], vec![0, 1, u32::MAX, 42]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn add_and_scale() {
+        let mut a = Tensor::f32(vec![3], vec![1., 2., 3.]);
+        let b = Tensor::f32(vec![3], vec![10., 20., 30.]);
+        a.add_assign(&b).unwrap();
+        a.scale(0.5).unwrap();
+        assert_eq!(a.as_f32().unwrap(), &[5.5, 11.0, 16.5]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut a = Tensor::zeros_f32(vec![2]);
+        let b = Tensor::zeros_f32(vec![3]);
+        assert!(a.add_assign(&b).is_err());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert!(Dtype::parse("f64").is_err());
+        assert_eq!(Dtype::parse("i32").unwrap().name(), "i32");
+    }
+}

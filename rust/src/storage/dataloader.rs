@@ -1,0 +1,224 @@
+//! Elastic, checkpointable dataloader (paper §4.3):
+//!
+//! > "we utilize distributed checkpointing and design the dataloader
+//! >  consumption state such that checkpoints can be reused across GPU
+//! >  clusters of varying sizes."
+//!
+//! The consumption state is **global** — (seed, epoch, cursor) over a
+//! deterministic per-epoch permutation — and ranks carve their slice of
+//! each global batch at read time.  Resuming the same state with a
+//! different world size replays exactly the unconsumed suffix, in order,
+//! with no sample lost or duplicated (property-tested).
+
+use anyhow::{bail, Result};
+
+use crate::util::codec::{Reader, Writer};
+use crate::util::rng::Rng;
+
+/// Serializable consumption state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LoaderState {
+    pub seed: u64,
+    pub epoch: u64,
+    /// samples consumed within the current epoch
+    pub cursor: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Dataloader {
+    n_samples: usize,
+    global_batch: usize,
+    state: LoaderState,
+    /// permutation of the current epoch (derived, not stored)
+    order: Vec<usize>,
+}
+
+impl Dataloader {
+    pub fn new(n_samples: usize, global_batch: usize, seed: u64) -> Dataloader {
+        assert!(n_samples > 0 && global_batch > 0 && global_batch <= n_samples);
+        let state = LoaderState { seed, epoch: 0, cursor: 0 };
+        let order = Self::epoch_order(n_samples, seed, 0);
+        Dataloader { n_samples, global_batch, state, order }
+    }
+
+    pub fn resume(n_samples: usize, global_batch: usize, state: LoaderState) -> Dataloader {
+        let order = Self::epoch_order(n_samples, state.seed, state.epoch);
+        Dataloader { n_samples, global_batch, state, order }
+    }
+
+    fn epoch_order(n: usize, seed: u64, epoch: u64) -> Vec<usize> {
+        let mut rng = Rng::new(seed ^ epoch.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        order
+    }
+
+    pub fn state(&self) -> LoaderState {
+        self.state.clone()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.state.epoch
+    }
+
+    /// The next **global** batch of sample indices (advances the cursor;
+    /// wraps to a new epoch/permutation when exhausted).
+    pub fn next_global_batch(&mut self) -> Vec<usize> {
+        if self.state.cursor + self.global_batch > self.n_samples {
+            self.state.epoch += 1;
+            self.state.cursor = 0;
+            self.order = Self::epoch_order(self.n_samples, self.state.seed, self.state.epoch);
+        }
+        let start = self.state.cursor;
+        self.state.cursor += self.global_batch;
+        self.order[start..start + self.global_batch].to_vec()
+    }
+
+    /// A rank's slice of a global batch — the elastic carve: works for any
+    /// world size that divides the global batch.
+    pub fn rank_slice(global_batch: &[usize], rank: usize, world: usize) -> Result<Vec<usize>> {
+        if world == 0 || rank >= world {
+            bail!("bad rank {rank} / world {world}");
+        }
+        if global_batch.len() % world != 0 {
+            bail!(
+                "global batch {} not divisible by world size {world}",
+                global_batch.len()
+            );
+        }
+        let per = global_batch.len() / world;
+        Ok(global_batch[rank * per..(rank + 1) * per].to_vec())
+    }
+}
+
+impl LoaderState {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u64(self.seed);
+        w.u64(self.epoch);
+        w.u64(self.cursor as u64);
+        w.into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<LoaderState> {
+        let mut r = Reader::new(bytes);
+        let s = LoaderState {
+            seed: r.u64()?,
+            epoch: r.u64()?,
+            cursor: r.u64()? as usize,
+        };
+        r.expect_end()?;
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn batches_partition_epoch() {
+        let mut dl = Dataloader::new(100, 10, 1);
+        let mut seen = Vec::new();
+        for _ in 0..10 {
+            seen.extend(dl.next_global_batch());
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..100).collect::<Vec<_>>());
+        assert_eq!(dl.epoch(), 0);
+        dl.next_global_batch();
+        assert_eq!(dl.epoch(), 1);
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        let mut dl = Dataloader::new(50, 50, 2);
+        let e0 = dl.next_global_batch();
+        let e1 = dl.next_global_batch();
+        assert_ne!(e0, e1);
+        let mut s0 = e0.clone();
+        let mut s1 = e1.clone();
+        s0.sort_unstable();
+        s1.sort_unstable();
+        assert_eq!(s0, s1);
+    }
+
+    #[test]
+    fn state_roundtrip() {
+        let mut dl = Dataloader::new(64, 8, 3);
+        dl.next_global_batch();
+        dl.next_global_batch();
+        let enc = dl.state().encode();
+        assert_eq!(LoaderState::decode(&enc).unwrap(), dl.state());
+    }
+
+    #[test]
+    fn resume_replays_exact_suffix() {
+        let mut dl = Dataloader::new(96, 12, 7);
+        for _ in 0..3 {
+            dl.next_global_batch();
+        }
+        let state = dl.state();
+        let expected: Vec<Vec<usize>> = (0..6).map(|_| dl.next_global_batch()).collect();
+        let mut resumed = Dataloader::resume(96, 12, state);
+        let actual: Vec<Vec<usize>> = (0..6).map(|_| resumed.next_global_batch()).collect();
+        assert_eq!(expected, actual);
+    }
+
+    #[test]
+    fn elastic_resume_across_world_sizes() {
+        // the paper's elasticity claim: consume with world=4, resume with
+        // world=2 — the union of rank slices is identical either way.
+        prop::check("elastic-dataloader", |rng| {
+            let n = 32 + rng.below(8) * 16;
+            let gb = 16;
+            let seed = rng.next_u64();
+            let consumed = rng.below(2 * n / gb);
+            let mut dl = Dataloader::new(n, gb, seed);
+            for _ in 0..consumed {
+                dl.next_global_batch();
+            }
+            let state = dl.state();
+
+            let collect = |world: usize, state: LoaderState| -> Vec<usize> {
+                let mut dl = Dataloader::resume(n, gb, state);
+                let mut all = Vec::new();
+                for _ in 0..3 {
+                    let batch = dl.next_global_batch();
+                    for r in 0..world {
+                        all.extend(Dataloader::rank_slice(&batch, r, world).unwrap());
+                    }
+                }
+                all
+            };
+            let w4 = collect(4, state.clone());
+            let w2 = collect(2, state.clone());
+            let w8 = collect(8, state);
+            crate::prop_assert!(w4 == w2 && w2 == w8, "world-size changed the stream");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rank_slices_partition_batch() {
+        prop::check("rank-slices-partition", |rng| {
+            let world = [1, 2, 4, 8][rng.below(4)];
+            let gb: Vec<usize> = (0..16).map(|_| rng.below(1000)).collect();
+            let mut union = Vec::new();
+            for r in 0..world {
+                union.extend(Dataloader::rank_slice(&gb, r, world).unwrap());
+            }
+            crate::prop_assert!(union == gb, "slices must partition in order");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bad_rank_and_indivisible_world_rejected() {
+        let gb: Vec<usize> = (0..10).collect();
+        assert!(Dataloader::rank_slice(&gb, 3, 3).is_err());
+        assert!(Dataloader::rank_slice(&gb, 0, 3).is_err()); // 10 % 3 != 0
+        assert!(Dataloader::rank_slice(&gb, 0, 0).is_err());
+    }
+}

@@ -1,0 +1,339 @@
+//! Log-structured key-value store — the FeatureKV/UnionDB analogue (§4.6).
+//!
+//! The paper stores massive multimodal training data in private KV stores
+//! because "storing massive numbers of images directly in a distributed
+//! file system can easily exceed file number quota".  This store keeps the
+//! same property: **one append-only segment file** holds any number of
+//! records; an in-memory index maps key → (offset, len).  Crash recovery
+//! replays the log (corrupt/truncated tails are dropped); `compact`
+//! rewrites live records and drops tombstones.
+//!
+//! Record layout: [u32 klen][key][u32 vlen | TOMBSTONE][value][u32 crc]
+//! (crc over key+value, FNV-1a folded to 32 bits — self-contained).
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+const TOMBSTONE: u32 = u32::MAX;
+
+fn checksum(key: &[u8], value: &[u8]) -> u32 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in key.iter().chain(value.iter()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    (h ^ (h >> 32)) as u32
+}
+
+pub struct KvStore {
+    path: PathBuf,
+    writer: BufWriter<File>,
+    /// key → (value offset, value len); offset points at the value bytes
+    index: BTreeMap<String, (u64, u32)>,
+    log_end: u64,
+    pub stats: KvStats,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct KvStats {
+    pub puts: u64,
+    pub gets: u64,
+    pub deletes: u64,
+    pub recovered_records: u64,
+    pub dropped_tail_bytes: u64,
+}
+
+impl KvStore {
+    /// Open (or create) a store backed by one segment file.
+    pub fn open(path: impl AsRef<Path>) -> Result<KvStore> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let mut stats = KvStats::default();
+        let (index, log_end) = Self::recover(&path, &mut stats)?;
+        let mut file = OpenOptions::new().create(true).append(true).open(&path)?;
+        // if recovery dropped a corrupt tail, truncate it away
+        let actual = file.metadata()?.len();
+        if actual > log_end {
+            stats.dropped_tail_bytes = actual - log_end;
+            file.set_len(log_end)?;
+            file.seek(SeekFrom::End(0))?;
+        }
+        Ok(KvStore { path, writer: BufWriter::new(file), index, log_end, stats })
+    }
+
+    fn recover(
+        path: &Path,
+        stats: &mut KvStats,
+    ) -> Result<(BTreeMap<String, (u64, u32)>, u64)> {
+        let mut index = BTreeMap::new();
+        let Ok(mut file) = File::open(path) else {
+            return Ok((index, 0));
+        };
+        let mut buf = Vec::new();
+        file.read_to_end(&mut buf)?;
+        let mut pos: usize = 0;
+        let mut valid_end: usize = 0;
+        loop {
+            let rec_start = pos;
+            let Some(klen) = read_u32(&buf, &mut pos) else { break };
+            let Some(key) = read_bytes(&buf, &mut pos, klen as usize) else { break };
+            let Some(vlen) = read_u32(&buf, &mut pos) else { break };
+            if vlen == TOMBSTONE {
+                let Some(crc) = read_u32(&buf, &mut pos) else { break };
+                if crc != checksum(key, &[]) {
+                    break;
+                }
+                let key = String::from_utf8_lossy(key).to_string();
+                index.remove(&key);
+            } else {
+                let voff = pos as u64;
+                let Some(value) = read_bytes(&buf, &mut pos, vlen as usize) else {
+                    break;
+                };
+                let Some(crc) = read_u32(&buf, &mut pos) else { break };
+                if crc != checksum(key, value) {
+                    break;
+                }
+                let key = String::from_utf8_lossy(key).to_string();
+                index.insert(key, (voff, vlen));
+            }
+            stats.recovered_records += 1;
+            valid_end = pos;
+            let _ = rec_start;
+        }
+        Ok((index, valid_end as u64))
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.index.contains_key(key)
+    }
+
+    pub fn put(&mut self, key: &str, value: &[u8]) -> Result<()> {
+        if key.len() >= TOMBSTONE as usize || value.len() >= TOMBSTONE as usize {
+            bail!("key/value too large");
+        }
+        let kb = key.as_bytes();
+        self.writer.write_all(&(kb.len() as u32).to_le_bytes())?;
+        self.writer.write_all(kb)?;
+        self.writer.write_all(&(value.len() as u32).to_le_bytes())?;
+        let voff = self.log_end + 4 + kb.len() as u64 + 4;
+        self.writer.write_all(value)?;
+        self.writer.write_all(&checksum(kb, value).to_le_bytes())?;
+        self.writer.flush()?;
+        self.log_end = voff + value.len() as u64 + 4;
+        self.index.insert(key.to_string(), (voff, value.len() as u32));
+        self.stats.puts += 1;
+        Ok(())
+    }
+
+    pub fn get(&mut self, key: &str) -> Result<Option<Vec<u8>>> {
+        self.stats.gets += 1;
+        let Some(&(off, len)) = self.index.get(key) else {
+            return Ok(None);
+        };
+        let mut file = File::open(&self.path).context("reopening segment")?;
+        file.seek(SeekFrom::Start(off))?;
+        let mut out = vec![0u8; len as usize];
+        file.read_exact(&mut out)?;
+        Ok(Some(out))
+    }
+
+    pub fn delete(&mut self, key: &str) -> Result<bool> {
+        self.stats.deletes += 1;
+        if !self.index.contains_key(key) {
+            return Ok(false);
+        }
+        let kb = key.as_bytes();
+        self.writer.write_all(&(kb.len() as u32).to_le_bytes())?;
+        self.writer.write_all(kb)?;
+        self.writer.write_all(&TOMBSTONE.to_le_bytes())?;
+        self.writer.write_all(&checksum(kb, &[]).to_le_bytes())?;
+        self.writer.flush()?;
+        self.log_end += 4 + kb.len() as u64 + 4 + 4;
+        self.index.remove(key);
+        Ok(true)
+    }
+
+    /// Keys with a prefix (e.g. all shards of one sample).
+    pub fn scan_prefix(&self, prefix: &str) -> Vec<String> {
+        self.index
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    /// Rewrite live records into a fresh segment, dropping garbage.
+    pub fn compact(&mut self) -> Result<()> {
+        let tmp = self.path.with_extension("compact");
+        {
+            let file = OpenOptions::new()
+                .create(true)
+                .write(true)
+                .truncate(true)
+                .open(&tmp)?;
+            let mut w = BufWriter::new(file);
+            let keys: Vec<String> = self.index.keys().cloned().collect();
+            let mut new_index = BTreeMap::new();
+            let mut off: u64 = 0;
+            for key in keys {
+                let value = self.get(&key)?.expect("indexed key must exist");
+                let kb = key.as_bytes();
+                w.write_all(&(kb.len() as u32).to_le_bytes())?;
+                w.write_all(kb)?;
+                w.write_all(&(value.len() as u32).to_le_bytes())?;
+                let voff = off + 4 + kb.len() as u64 + 4;
+                w.write_all(&value)?;
+                w.write_all(&checksum(kb, &value).to_le_bytes())?;
+                off = voff + value.len() as u64 + 4;
+                new_index.insert(key, (voff, value.len() as u32));
+            }
+            w.flush()?;
+            self.index = new_index;
+            self.log_end = off;
+        }
+        std::fs::rename(&tmp, &self.path)?;
+        let mut file = OpenOptions::new().append(true).open(&self.path)?;
+        file.seek(SeekFrom::End(0))?;
+        self.writer = BufWriter::new(file);
+        Ok(())
+    }
+
+    pub fn file_size(&self) -> u64 {
+        self.log_end
+    }
+}
+
+fn read_u32(buf: &[u8], pos: &mut usize) -> Option<u32> {
+    let b = buf.get(*pos..*pos + 4)?;
+    *pos += 4;
+    Some(u32::from_le_bytes(b.try_into().unwrap()))
+}
+
+fn read_bytes<'a>(buf: &'a [u8], pos: &mut usize, n: usize) -> Option<&'a [u8]> {
+    let b = buf.get(*pos..*pos + n)?;
+    *pos += n;
+    Some(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("gcore_kv_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("{name}_{}.kv", std::process::id()));
+        std::fs::remove_file(&p).ok();
+        p
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut kv = KvStore::open(tmp("roundtrip")).unwrap();
+        kv.put("a", b"alpha").unwrap();
+        kv.put("b", &vec![7u8; 10_000]).unwrap();
+        assert_eq!(kv.get("a").unwrap().unwrap(), b"alpha");
+        assert_eq!(kv.get("b").unwrap().unwrap().len(), 10_000);
+        assert_eq!(kv.get("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn overwrite_returns_latest() {
+        let mut kv = KvStore::open(tmp("overwrite")).unwrap();
+        kv.put("k", b"v1").unwrap();
+        kv.put("k", b"v2").unwrap();
+        assert_eq!(kv.get("k").unwrap().unwrap(), b"v2");
+        assert_eq!(kv.len(), 1);
+    }
+
+    #[test]
+    fn delete_then_recover() {
+        let path = tmp("delete");
+        {
+            let mut kv = KvStore::open(&path).unwrap();
+            kv.put("keep", b"1").unwrap();
+            kv.put("drop", b"2").unwrap();
+            kv.delete("drop").unwrap();
+        }
+        let mut kv = KvStore::open(&path).unwrap();
+        assert_eq!(kv.get("keep").unwrap().unwrap(), b"1");
+        assert_eq!(kv.get("drop").unwrap(), None);
+    }
+
+    #[test]
+    fn recovery_drops_corrupt_tail() {
+        let path = tmp("corrupt");
+        {
+            let mut kv = KvStore::open(&path).unwrap();
+            kv.put("good", b"data").unwrap();
+        }
+        // append garbage (simulates a crash mid-write)
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&[0xAB; 7]).unwrap();
+        }
+        let mut kv = KvStore::open(&path).unwrap();
+        assert_eq!(kv.get("good").unwrap().unwrap(), b"data");
+        assert!(kv.stats.dropped_tail_bytes > 0);
+        // store still writable after recovery
+        kv.put("new", b"x").unwrap();
+        assert_eq!(kv.get("new").unwrap().unwrap(), b"x");
+    }
+
+    #[test]
+    fn scan_prefix_ordered() {
+        let mut kv = KvStore::open(tmp("scan")).unwrap();
+        kv.put("img/1", b"a").unwrap();
+        kv.put("img/2", b"b").unwrap();
+        kv.put("txt/1", b"c").unwrap();
+        assert_eq!(kv.scan_prefix("img/"), vec!["img/1", "img/2"]);
+        assert_eq!(kv.scan_prefix("zzz").len(), 0);
+    }
+
+    #[test]
+    fn compact_shrinks_file_and_preserves_data() {
+        let path = tmp("compact");
+        let mut kv = KvStore::open(&path).unwrap();
+        for i in 0..50 {
+            kv.put("churn", format!("version {i}").as_bytes()).unwrap();
+        }
+        kv.put("stable", b"here").unwrap();
+        let before = kv.file_size();
+        kv.compact().unwrap();
+        assert!(kv.file_size() < before / 2, "{} -> {}", before, kv.file_size());
+        assert_eq!(kv.get("churn").unwrap().unwrap(), b"version 49");
+        assert_eq!(kv.get("stable").unwrap().unwrap(), b"here");
+        // still writable after compaction
+        kv.put("post", b"compact").unwrap();
+        assert_eq!(kv.get("post").unwrap().unwrap(), b"compact");
+    }
+
+    #[test]
+    fn many_records_one_file() {
+        // the paper's point: thousands of records never create new files
+        let path = tmp("many");
+        let mut kv = KvStore::open(&path).unwrap();
+        for i in 0..2000 {
+            kv.put(&format!("rec/{i:05}"), &[i as u8; 64]).unwrap();
+        }
+        assert_eq!(kv.len(), 2000);
+        assert_eq!(kv.scan_prefix("rec/").len(), 2000);
+        // exactly one backing file
+        assert!(path.exists());
+    }
+}

@@ -1,0 +1,8 @@
+//! Training-data storage substrate (paper §4.6): log-structured KV store
+//! (FeatureKV/UnionDB analogue) + elastic checkpointable dataloader (§4.3).
+
+pub mod dataloader;
+pub mod kv;
+
+pub use dataloader::{Dataloader, LoaderState};
+pub use kv::KvStore;

@@ -1,0 +1,152 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Provides warmup + calibrated measurement loops, robust statistics, and a
+//! markdown table printer.  The `rust/benches/e*_*.rs` binaries (registered
+//! with `harness = false`) use this to regenerate the paper-shaped tables
+//! that EXPERIMENTS.md records.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_nanos() as f64
+    }
+
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns().max(1.0)
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly for ~`budget`, after `warmup` untimed iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, budget: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+        if samples.len() >= 1_000_000 {
+            break;
+        }
+    }
+    summarize(name, samples)
+}
+
+/// Fixed-iteration variant for expensive bodies.
+pub fn bench_n<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    summarize(name, samples)
+}
+
+fn summarize(name: &str, mut samples: Vec<Duration>) -> BenchResult {
+    assert!(!samples.is_empty());
+    samples.sort();
+    let n = samples.len();
+    let total: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean: total / n as u32,
+        p50: samples[n / 2],
+        p95: samples[(n as f64 * 0.95) as usize % n],
+        min: samples[0],
+        max: samples[n - 1],
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Markdown table over results — the bench binaries' standard output format.
+pub fn print_table(title: &str, results: &[BenchResult]) {
+    println!("\n### {title}\n");
+    println!("| case | iters | mean | p50 | p95 | min | max |");
+    println!("|---|---|---|---|---|---|---|");
+    for r in results {
+        println!(
+            "| {} | {} | {} | {} | {} | {} | {} |",
+            r.name,
+            r.iters,
+            fmt_dur(r.mean),
+            fmt_dur(r.p50),
+            fmt_dur(r.p95),
+            fmt_dur(r.min),
+            fmt_dur(r.max),
+        );
+    }
+}
+
+/// Generic markdown table printer for paper-shaped (non-timing) tables.
+pub fn print_rows(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n### {title}\n");
+    println!("| {} |", header.join(" | "));
+    println!("|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for row in rows {
+        println!("| {} |", row.join(" | "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench("noop", 10, Duration::from_millis(20), || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters >= 5);
+        assert!(r.min <= r.p50 && r.p50 <= r.max);
+        assert!(r.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn bench_n_counts() {
+        let mut count = 0;
+        let r = bench_n("count", 37, || count += 1);
+        assert_eq!(count, 37);
+        assert_eq!(r.iters, 37);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

@@ -1,0 +1,125 @@
+//! Tiny argument parser for the `gcore` launcher and examples.
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments (subcommands).  From-scratch replacement for `clap` (not in the
+//! offline vendor set).
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut args = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(item) = it.next() {
+            if let Some(stripped) = item.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(stripped.to_string(), v);
+                } else {
+                    args.bools.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(item);
+            }
+        }
+        args
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key) || self.flags.contains_key(key)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn parse_or<T: FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            Some(v) => v.parse().unwrap_or(default),
+            None => default,
+        }
+    }
+
+    pub fn require(&self, key: &str) -> anyhow::Result<&str> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing required flag --{key}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = mk("train --config configs/e2e.json --steps 100 --verbose");
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get("config"), Some("configs/e2e.json"));
+        assert_eq!(a.parse_or::<usize>("steps", 0), 100);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = mk("--x=1 --y=a=b");
+        assert_eq!(a.get("x"), Some("1"));
+        assert_eq!(a.get("y"), Some("a=b"));
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = mk("bench --fast");
+        assert!(a.has("fast"));
+        assert_eq!(a.subcommand(), Some("bench"));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // a value starting with '-' but not '--' is consumed as a value
+        let a = mk("--offset -3");
+        assert_eq!(a.parse_or::<i64>("offset", 0), -3);
+    }
+
+    #[test]
+    fn parse_or_falls_back_on_garbage() {
+        let a = mk("--n notanumber");
+        assert_eq!(a.parse_or::<usize>("n", 42), 42);
+    }
+
+    #[test]
+    fn require_errors() {
+        let a = mk("run");
+        assert!(a.require("config").is_err());
+    }
+}

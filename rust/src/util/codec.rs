@@ -1,0 +1,267 @@
+//! Compact binary codec for the RPC wire format, checkpoints and the KV
+//! store.  Little-endian, length-prefixed; no external dependencies.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::tensor::{Tensor, TensorData};
+
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn tensor(&mut self, t: &Tensor) {
+        let (tag, raw): (u8, &[u8]) = match &t.data {
+            TensorData::F32(v) => (0, cast_slice(v)),
+            TensorData::I32(v) => (1, cast_slice(v)),
+            TensorData::U32(v) => (2, cast_slice(v)),
+        };
+        self.u8(tag);
+        self.u32(t.shape.len() as u32);
+        for &d in &t.shape {
+            self.u32(d as u32);
+        }
+        self.bytes(raw);
+    }
+
+    pub fn tensors(&mut self, ts: &[Tensor]) {
+        self.u32(ts.len() as u32);
+        for t in ts {
+            self.tensor(t);
+        }
+    }
+}
+
+fn cast_slice<T>(v: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(
+            v.as_ptr() as *const u8,
+            std::mem::size_of_val(v),
+        )
+    }
+}
+
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("codec underrun: need {n} bytes at {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        Ok(std::str::from_utf8(self.bytes()?)
+            .context("invalid utf8 in codec string")?
+            .to_string())
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn tensor(&mut self) -> Result<Tensor> {
+        let tag = self.u8()?;
+        let rank = self.u32()? as usize;
+        if rank > 16 {
+            bail!("implausible tensor rank {rank}");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(self.u32()? as usize);
+        }
+        let raw = self.bytes()?;
+        let n: usize = shape.iter().product();
+        if raw.len() != n * 4 {
+            bail!("tensor payload {} bytes, shape needs {}", raw.len(), n * 4);
+        }
+        let data = match tag {
+            0 => TensorData::F32(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            1 => TensorData::I32(
+                raw.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            2 => TensorData::U32(
+                raw.chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            _ => bail!("unknown tensor dtype tag {tag}"),
+        };
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn tensors(&mut self) -> Result<Vec<Tensor>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| self.tensor()).collect()
+    }
+
+    pub fn expect_end(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("codec: {} trailing bytes", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xDEADBEEF);
+        w.u64(u64::MAX);
+        w.f32(-1.5);
+        w.f64(std::f64::consts::PI);
+        w.str("héllo");
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(r.str().unwrap(), "héllo");
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn tensor_roundtrip_all_dtypes() {
+        let ts = vec![
+            Tensor::f32(vec![2, 2], vec![1., 2., 3., 4.]),
+            Tensor::i32(vec![3], vec![-1, 0, 1]),
+            Tensor::u32(vec![], vec![9]),
+        ];
+        let mut w = Writer::new();
+        w.tensors(&ts);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.tensors().unwrap(), ts);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn underrun_detected() {
+        let mut w = Writer::new();
+        w.u32(100); // claims 100 bytes follow
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(r.bytes().is_err());
+    }
+
+    #[test]
+    fn corrupted_tensor_rejected() {
+        let mut w = Writer::new();
+        w.u8(0);
+        w.u32(1);
+        w.u32(10); // shape says 10 elements
+        w.bytes(&[0u8; 8]); // but only 2 elements of data
+        let bytes = w.into_bytes();
+        assert!(Reader::new(&bytes).tensor().is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! From-scratch utility substrates (the offline vendor set contains only the
+//! `xla` closure, so JSON / RNG / CLI / bench / property-testing are built
+//! here — see DESIGN.md §substrates).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod codec;
+pub mod prop;
+pub mod rng;

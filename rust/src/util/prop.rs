@@ -1,0 +1,79 @@
+//! Seeded property-test runner (proptest is not in the offline vendor set).
+//!
+//! `check` runs a property over N generated cases; on failure it reports the
+//! failing case seed so the run can be reproduced exactly with
+//! `GCORE_PROP_SEED=<seed> cargo test <name>`.  No shrinking — cases are
+//! kept small by construction instead (DESIGN.md §testing).
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with GCORE_PROP_CASES).
+pub fn default_cases() -> u64 {
+    std::env::var("GCORE_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256)
+}
+
+/// Run `property(rng)` over `cases` seeds; panic with the failing seed.
+pub fn check<F>(name: &str, property: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    if let Ok(seed) = std::env::var("GCORE_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("GCORE_PROP_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property '{name}' failed on replayed seed {seed}: {msg}");
+        }
+        return;
+    }
+    let cases = default_cases();
+    for case in 0..cases {
+        // decorrelate case seeds; keep them printable/replayable
+        let seed = 0x9E3779B97F4A7C15u64
+            .wrapping_mul(case + 1)
+            .wrapping_add(name.len() as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (replay with GCORE_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing property-style errors.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("tautology", |rng| {
+            let x = rng.below(100);
+            prop_assert!(x < 100, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "GCORE_PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        check("always-fails", |rng| {
+            let x = rng.below(10);
+            prop_assert!(x > 100, "x={x} is not > 100");
+            Ok(())
+        });
+    }
+}

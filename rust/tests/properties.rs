@@ -1,0 +1,248 @@
+//! Cross-module property tests (seeded runner — see util::prop): the
+//! coordinator/placement/codec invariants DESIGN.md §6 lists.
+
+use gcore::balance::{assign_balanced, plan_epoch};
+use gcore::cluster::sim::{Sim, WorkKind};
+use gcore::cluster::workload::GenLenModel;
+use gcore::coordinator::sampling::{broadcast_advantages, dapo_filter, gae, grpo_advantages};
+use gcore::placement::{run_coexist_static, run_colocate, run_dynamic, PlacementSpec};
+use gcore::prop_assert;
+use gcore::util::json::Json;
+use gcore::util::prop;
+use gcore::util::rng::Rng;
+
+#[test]
+fn sim_time_conservation() {
+    // busy + bubble ≡ makespan × devices, for arbitrary schedules
+    prop::check("sim-conservation", |rng| {
+        let n = 1 + rng.below(8);
+        let mut sim = Sim::new(n);
+        for _ in 0..rng.below(40) {
+            let d = gcore::cluster::device::DeviceId(rng.below(n));
+            let kind = [WorkKind::Generate, WorkKind::Train, WorkKind::Swap][rng.below(3)];
+            match rng.below(3) {
+                0 => {
+                    sim.run_one(d, kind, rng.range(0.0, 10.0));
+                }
+                1 => {
+                    let g: Vec<_> = (0..n).map(gcore::cluster::device::DeviceId).collect();
+                    sim.run_group(&g, kind, rng.range(0.0, 10.0));
+                }
+                _ => {
+                    sim.run_one_after(d, rng.range(0.0, 20.0), kind, rng.range(0.0, 10.0));
+                }
+            }
+        }
+        let busy: f64 = sim.busy_by_kind().values().sum();
+        let total = sim.makespan() * n as f64;
+        prop_assert!(
+            (busy + sim.bubble_seconds() - total).abs() < 1e-6,
+            "conservation violated: busy {busy} bubble {} total {total}",
+            sim.bubble_seconds()
+        );
+        prop_assert!(sim.utilization() <= 1.0 + 1e-9, "util > 1");
+        Ok(())
+    });
+}
+
+#[test]
+fn grpo_advantages_invariants() {
+    prop::check("grpo-invariants", |rng| {
+        let g = 2 + rng.below(6);
+        let groups = 1 + rng.below(5);
+        let rewards: Vec<f32> = (0..g * groups).map(|_| rng.range(-3.0, 3.0) as f32).collect();
+        let adv = grpo_advantages(&rewards, g).unwrap();
+        prop_assert!(adv.len() == rewards.len(), "length preserved");
+        // reward ordering preserved within each group
+        for (gi, chunk) in rewards.chunks(g).enumerate() {
+            let achunk = &adv[gi * g..(gi + 1) * g];
+            for i in 0..g {
+                for j in 0..g {
+                    if chunk[i] > chunk[j] {
+                        prop_assert!(
+                            achunk[i] >= achunk[j],
+                            "ordering broken in group {gi}"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dapo_filter_keeps_exactly_informative_groups() {
+    prop::check("dapo-informative", |rng| {
+        let g = 2 + rng.below(4);
+        let groups = 1 + rng.below(6);
+        // binary rewards
+        let rewards: Vec<f32> = (0..g * groups).map(|_| rng.below(2) as f32).collect();
+        let keep = dapo_filter(&rewards, g).unwrap();
+        for (gi, chunk) in rewards.chunks(g).enumerate() {
+            let sum: f32 = chunk.iter().sum();
+            let informative = sum > 0.0 && sum < g as f32;
+            prop_assert!(
+                keep.contains(&gi) == informative,
+                "group {gi} (sum {sum}) filter mismatch"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gae_zero_rewards_perfect_critic_zero_adv() {
+    prop::check("gae-zero", |rng| {
+        let s = 2 + rng.below(12);
+        let rewards = vec![vec![0.0f32; s]];
+        let values = vec![vec![0.0f32; s]];
+        let masks = vec![vec![1.0f32; s]];
+        let (adv, ret) = gae(&rewards, &values, &masks, rng.range(0.5, 1.0) as f32, rng.range(0.5, 1.0) as f32);
+        prop_assert!(adv[0].iter().all(|a| a.abs() < 1e-6), "{adv:?}");
+        prop_assert!(ret[0].iter().all(|r| r.abs() < 1e-6), "{ret:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn broadcast_advantage_zero_outside_mask() {
+    prop::check("broadcast-mask", |rng| {
+        let b = 1 + rng.below(4);
+        let s = 4 + rng.below(12);
+        let adv: Vec<f32> = (0..b).map(|_| rng.range(-2.0, 2.0) as f32).collect();
+        let masks: Vec<Vec<f32>> = (0..b)
+            .map(|_| (0..s).map(|_| if rng.bool(0.5) { 1.0 } else { 0.0 }).collect())
+            .collect();
+        let rows = broadcast_advantages(&adv, &masks);
+        for (bi, row) in rows.iter().enumerate() {
+            for (t, &x) in row.iter().enumerate() {
+                if masks[bi][t] == 0.0 {
+                    prop_assert!(x == 0.0, "leak at [{bi},{t}]");
+                } else {
+                    prop_assert!((x - adv[bi]).abs() < 1e-6, "wrong value");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn balanced_assignment_never_worse_than_worst_rank_bound() {
+    prop::check("lpt-bound", |rng| {
+        let ranks = [2usize, 4, 8][rng.below(3)];
+        let per = 4 + rng.below(28);
+        let n = ranks * per;
+        let glm = GenLenModel::reasoning_default();
+        let lens = glm.sample_batch(rng, 0, n);
+        let costs: Vec<f64> = lens.iter().map(|&l| l as f64).collect();
+        let batch: Vec<usize> = (0..n).collect();
+        let a = assign_balanced(&batch, &costs, ranks);
+        let rc = a.rank_costs(&costs);
+        let max = rc.iter().cloned().fold(0.0, f64::max);
+        let mean = rc.iter().sum::<f64>() / ranks as f64;
+        // LPT guarantee: makespan ≤ (4/3) · OPT ≤ (4/3) · (mean + max_item)
+        let max_item = costs.iter().cloned().fold(0.0, f64::max);
+        prop_assert!(
+            max <= (mean + max_item) * 4.0 / 3.0 + 1e-9,
+            "LPT bound violated: max {max} mean {mean} item {max_item}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn epoch_buckets_partition_for_all_sizes() {
+    prop::check("epoch-partition", |rng| {
+        let gb = 8 * (1 + rng.below(8));
+        let n = gb * (1 + rng.below(10)) + rng.below(gb); // possibly ragged
+        let buckets = plan_epoch(n, gb, rng);
+        let mut all: Vec<usize> = buckets.iter().flatten().copied().collect();
+        prop_assert!(
+            buckets.iter().all(|b| b.len() == gb),
+            "all buckets full-sized"
+        );
+        all.sort_unstable();
+        all.dedup();
+        prop_assert!(all.len() == buckets.len() * gb, "no duplicates");
+        prop_assert!(all.iter().all(|&i| i < n), "indices in range");
+        Ok(())
+    });
+}
+
+#[test]
+fn placement_reports_internally_consistent() {
+    prop::check("placement-consistency", |rng| {
+        let mut spec = PlacementSpec::paper_like();
+        spec.steps = 2 + rng.below(4);
+        spec.n_devices = 4 * (1 + rng.below(4));
+        spec.batch = 32 * (1 + rng.below(4));
+        spec.dynamic_sampling = rng.bool(0.5);
+        spec.seed = rng.next_u64();
+        for r in [
+            run_colocate(&spec),
+            run_coexist_static(&spec, rng.range(0.2, 0.8)),
+            run_dynamic(&spec).report,
+        ] {
+            prop_assert!(r.makespan_s > 0.0, "zero makespan");
+            prop_assert!((0.0..=1.0 + 1e-9).contains(&r.utilization), "util {}", r.utilization);
+            prop_assert!(r.bubble_s >= -1e-6, "negative bubble");
+            prop_assert!(r.swap_s >= 0.0, "negative swap");
+            prop_assert!(r.samples == spec.batch * spec.steps, "sample count");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn json_fuzz_no_panics_and_value_roundtrip() {
+    prop::check("json-fuzz", |rng| {
+        // random garbage must error, not panic
+        let len = rng.below(64);
+        let garbage: String = (0..len)
+            .map(|_| {
+                let chars = b"{}[]\",:0123456789truefalsnl \\x";
+                chars[rng.below(chars.len())] as char
+            })
+            .collect();
+        let _ = Json::parse(&garbage); // Ok or Err, never panic
+
+        // random structured values roundtrip exactly
+        fn gen_value(rng: &mut Rng, depth: usize) -> Json {
+            match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.bool(0.5)),
+                2 => Json::Num((rng.range(-1e6, 1e6) as i64) as f64),
+                3 => Json::Str(format!("s{}\n\"\\{}", rng.below(100), rng.below(100))),
+                4 => Json::Arr((0..rng.below(4)).map(|_| gen_value(rng, depth + 1)).collect()),
+                _ => {
+                    let mut m = std::collections::BTreeMap::new();
+                    for i in 0..rng.below(4) {
+                        m.insert(format!("k{i}"), gen_value(rng, depth + 1));
+                    }
+                    Json::Obj(m)
+                }
+            }
+        }
+        let v = gen_value(rng, 0);
+        let parsed = Json::parse(&v.to_string()).map_err(|e| e.to_string())?;
+        prop_assert!(parsed == v, "roundtrip mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn codec_fuzz_reader_never_panics() {
+    use gcore::util::codec::Reader;
+    prop::check("codec-fuzz", |rng| {
+        let bytes: Vec<u8> = (0..rng.below(64)).map(|_| rng.below(256) as u8).collect();
+        let mut r = Reader::new(&bytes);
+        // any decode sequence must return Err or Ok, never panic
+        let _ = r.u32();
+        let _ = r.str();
+        let _ = r.tensor();
+        let _ = r.tensors();
+        Ok(())
+    });
+}

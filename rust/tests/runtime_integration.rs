@@ -1,0 +1,324 @@
+//! Integration: artifacts → PJRT → numerics.  Exercises the full AOT bridge
+//! (jax/pallas → HLO text → xla crate → execution) that every higher layer
+//! depends on.  Requires `make artifacts` (tiny set).
+
+use gcore::runtime::{init_policy, init_scalar, Engine, ParamSet, Tensor, TrainState};
+
+fn engine() -> Engine {
+    Engine::load("tiny").expect("artifacts/tiny missing — run `make artifacts`")
+}
+
+fn dims(e: &Engine) -> (usize, usize, usize, usize) {
+    let d = &e.manifest().dims;
+    (d.batch, d.max_seq, d.prompt_len, d.vocab)
+}
+
+fn fixed_tokens(b: usize, s: usize) -> Tensor {
+    // deterministic pseudo-random byte tokens
+    let data: Vec<i32> = (0..b * s)
+        .map(|i| ((i * 2654435761usize) % 256) as i32)
+        .collect();
+    Tensor::i32(vec![b, s], data)
+}
+
+#[test]
+fn init_is_deterministic_and_sized() {
+    let e = engine();
+    let p1 = init_policy(&e, 42).unwrap();
+    let p2 = init_policy(&e, 42).unwrap();
+    assert_eq!(p1, p2);
+    assert_eq!(p1.num_elements(), e.manifest().param_count);
+    let p3 = init_policy(&e, 43).unwrap();
+    assert_ne!(p1, p3);
+    let s = init_scalar(&e, 0).unwrap();
+    assert_eq!(s.num_elements(), e.manifest().scalar_param_count);
+}
+
+#[test]
+fn fwd_logits_shape_and_finite() {
+    let e = engine();
+    let (b, s, _, v) = dims(&e);
+    let params = init_policy(&e, 0).unwrap();
+    let mut inputs = params.tensors.clone();
+    inputs.push(fixed_tokens(b, s));
+    let out = e.run("fwd_logits", &inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape, vec![b, s, v]);
+    assert!(out[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn logprob_is_nonpositive_with_zero_first_column() {
+    let e = engine();
+    let (b, s, _, _) = dims(&e);
+    let params = init_policy(&e, 0).unwrap();
+    let mut inputs = params.tensors.clone();
+    inputs.push(fixed_tokens(b, s));
+    let lp = &e.run("logprob", &inputs).unwrap()[0];
+    assert_eq!(lp.shape, vec![b, s]);
+    let data = lp.as_f32().unwrap();
+    for row in 0..b {
+        assert_eq!(data[row * s], 0.0, "logp[:,0] must be 0");
+    }
+    assert!(data.iter().all(|&x| x <= 1e-5));
+}
+
+#[test]
+fn prefill_decode_matches_full_forward() {
+    // The generation-engine contract: KV-cached decode must reproduce the
+    // full forward logits position by position.
+    let e = engine();
+    let (b, s, p, v) = dims(&e);
+    let params = init_policy(&e, 7).unwrap();
+    let tokens = fixed_tokens(b, s);
+
+    let mut inputs = params.tensors.clone();
+    inputs.push(tokens.clone());
+    let full = e.run("fwd_logits", &inputs).unwrap().remove(0);
+    let full_data = full.as_f32().unwrap();
+
+    // prefill on the first P tokens
+    let tok_data = tokens.as_i32().unwrap();
+    let prompt: Vec<i32> = (0..b)
+        .flat_map(|row| tok_data[row * s..row * s + p].to_vec())
+        .collect();
+    let mut inputs = params.tensors.clone();
+    inputs.push(Tensor::i32(vec![b, p], prompt));
+    let mut out = e.run("prefill", &inputs).unwrap();
+    let (last, mut ck, mut cv) = (out.remove(0), out.remove(0), out.remove(0));
+
+    // prefill last-logits == full logits at position P-1
+    let last_data = last.as_f32().unwrap();
+    for row in 0..b {
+        for j in 0..v {
+            let a = last_data[row * v + j];
+            let bq = full_data[row * s * v + (p - 1) * v + j];
+            assert!((a - bq).abs() < 2e-4, "prefill row {row} tok {j}: {a} vs {bq}");
+        }
+    }
+
+    // three decode steps
+    for pos in p..p + 3 {
+        let step_tok: Vec<i32> = (0..b).map(|row| tok_data[row * s + pos]).collect();
+        let mut inputs = params.tensors.clone();
+        inputs.push(ck);
+        inputs.push(cv);
+        inputs.push(Tensor::i32(vec![b], step_tok));
+        inputs.push(Tensor::scalar_i32(pos as i32));
+        let mut out = e.run("decode_step", &inputs).unwrap();
+        let logits = out.remove(0);
+        ck = out.remove(0);
+        cv = out.remove(0);
+        let ld = logits.as_f32().unwrap();
+        for row in 0..b {
+            for j in 0..v {
+                let a = ld[row * v + j];
+                let bq = full_data[row * s * v + pos * v + j];
+                assert!(
+                    (a - bq).abs() < 3e-4,
+                    "decode pos {pos} row {row} tok {j}: {a} vs {bq}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn train_step_reduces_loss_and_updates_params() {
+    let e = engine();
+    let (b, s, _, _) = dims(&e);
+    let manifest = e.manifest().clone();
+    let params = init_policy(&e, 1).unwrap();
+    let tokens = fixed_tokens(b, s);
+    let ones = Tensor::f32(vec![b, s], vec![1.0; b * s]);
+
+    // old/ref logprobs from the current policy
+    let mut inputs = params.tensors.clone();
+    inputs.push(tokens.clone());
+    let logp = e.run("logprob", &inputs).unwrap().remove(0);
+
+    let mut state = TrainState::new(params, &manifest.policy_tree);
+    let mut losses = Vec::new();
+    for step in 1..=4u64 {
+        let n = state.params.tensors.len();
+        let mut inputs = Vec::with_capacity(3 * n + 10);
+        inputs.extend(state.params.tensors.iter().cloned());
+        inputs.extend(state.m.tensors.iter().cloned());
+        inputs.extend(state.v.tensors.iter().cloned());
+        inputs.push(tokens.clone());
+        inputs.push(ones.clone()); // mask
+        inputs.push(ones.clone()); // advantage +1 everywhere
+        inputs.push(logp.clone()); // old_logp
+        inputs.push(logp.clone()); // ref_logp
+        inputs.push(Tensor::scalar_f32(step as f32));
+        inputs.push(Tensor::scalar_f32(1e-3)); // lr
+        inputs.push(Tensor::scalar_f32(0.2)); // clip
+        inputs.push(Tensor::scalar_f32(0.0)); // kl_coef
+        inputs.push(Tensor::scalar_f32(0.0)); // ent_coef
+        let mut out = e.run("train_step", &inputs).unwrap();
+        let clipfrac = out.pop().unwrap();
+        let _entropy = out.pop().unwrap();
+        let _kl = out.pop().unwrap();
+        let loss = out.pop().unwrap().scalar_value_f32().unwrap();
+        losses.push(loss);
+        let v = out.split_off(2 * n);
+        let m = out.split_off(n);
+        state.params = ParamSet::new(out);
+        state.m = ParamSet::new(m);
+        state.v = ParamSet::new(v);
+        assert!(clipfrac.scalar_value_f32().unwrap() >= 0.0);
+    }
+    // +1 advantage: policy should climb the surrogate => loss decreasing
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "losses {losses:?}"
+    );
+}
+
+#[test]
+fn policy_grad_plus_adam_equals_fused_train_step() {
+    // The multi-controller path (grad → reduce → adam) must match the fused
+    // single-controller train_step artifact.
+    let e = engine();
+    let (b, s, _, _) = dims(&e);
+    let manifest = e.manifest().clone();
+    let params = init_policy(&e, 3).unwrap();
+    let tokens = fixed_tokens(b, s);
+    let ones = Tensor::f32(vec![b, s], vec![1.0; b * s]);
+
+    let mut inputs = params.tensors.clone();
+    inputs.push(tokens.clone());
+    let logp = e.run("logprob", &inputs).unwrap().remove(0);
+
+    // path A: fused
+    let n = params.tensors.len();
+    let zeros = ParamSet::zeros(&manifest.policy_tree);
+    let mut inputs = Vec::new();
+    inputs.extend(params.tensors.iter().cloned());
+    inputs.extend(zeros.tensors.iter().cloned());
+    inputs.extend(zeros.tensors.iter().cloned());
+    inputs.push(tokens.clone());
+    inputs.push(ones.clone());
+    inputs.push(ones.clone());
+    inputs.push(logp.clone());
+    inputs.push(logp.clone());
+    inputs.push(Tensor::scalar_f32(1.0));
+    inputs.push(Tensor::scalar_f32(1e-3));
+    inputs.push(Tensor::scalar_f32(0.2));
+    inputs.push(Tensor::scalar_f32(0.01));
+    inputs.push(Tensor::scalar_f32(0.0));
+    let out_fused = e.run("train_step", &inputs).unwrap();
+    let fused_params = &out_fused[..n];
+
+    // path B: policy_grad then adam_policy
+    let mut inputs = params.tensors.clone();
+    inputs.push(tokens.clone());
+    inputs.push(ones.clone());
+    inputs.push(ones.clone());
+    inputs.push(logp.clone());
+    inputs.push(logp.clone());
+    inputs.push(Tensor::scalar_f32(0.2));
+    inputs.push(Tensor::scalar_f32(0.01));
+    inputs.push(Tensor::scalar_f32(0.0));
+    let mut gout = e.run("policy_grad", &inputs).unwrap();
+    gout.truncate(n); // grads only
+    let grads = ParamSet::new(gout);
+
+    let mut state = TrainState::new(params, &manifest.policy_tree);
+    state.apply_grads(&e, "adam_policy", &grads, 1e-3).unwrap();
+
+    for (i, (a, b)) in fused_params.iter().zip(&state.params.tensors).enumerate() {
+        let (av, bv) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+        for (x, y) in av.iter().zip(bv) {
+            assert!((x - y).abs() < 1e-6, "param tensor {i}: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn reward_score_gathers_last_index() {
+    let e = engine();
+    let (b, s, _, _) = dims(&e);
+    let rm = init_scalar(&e, 5).unwrap();
+    let tokens = fixed_tokens(b, s);
+
+    let mut inputs = rm.tensors.clone();
+    inputs.push(tokens.clone());
+    let values = e.run("value_score", &inputs).unwrap().remove(0);
+    let vd = values.as_f32().unwrap();
+
+    let idx = s - 2;
+    let mut inputs = rm.tensors.clone();
+    inputs.push(tokens);
+    inputs.push(Tensor::i32(vec![b], vec![idx as i32; b]));
+    let scores = e.run("reward_score", &inputs).unwrap().remove(0);
+    let sd = scores.as_f32().unwrap();
+    for row in 0..b {
+        assert!((sd[row] - vd[row * s + idx]).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn bt_grad_learns_preference() {
+    let e = engine();
+    let (b, s, _, _) = dims(&e);
+    let manifest = e.manifest().clone();
+    let chosen = fixed_tokens(b, s);
+    let rejected = {
+        let d: Vec<i32> = chosen.as_i32().unwrap().iter().map(|&x| 255 - x).collect();
+        Tensor::i32(vec![b, s], d)
+    };
+    let idx = Tensor::i32(vec![b], vec![(s - 1) as i32; b]);
+
+    let mut state = TrainState::new(init_scalar(&e, 9).unwrap(), &manifest.scalar_tree);
+    let n = state.params.tensors.len();
+    let mut first = None;
+    let mut last = (0.0, 0.0);
+    for _ in 0..12 {
+        let mut inputs = state.params.tensors.clone();
+        inputs.push(chosen.clone());
+        inputs.push(rejected.clone());
+        inputs.push(idx.clone());
+        inputs.push(idx.clone());
+        let mut out = e.run("bt_grad", &inputs).unwrap();
+        let acc = out.pop().unwrap().scalar_value_f32().unwrap();
+        let loss = out.pop().unwrap().scalar_value_f32().unwrap();
+        out.truncate(n);
+        let grads = ParamSet::new(out);
+        state.apply_grads(&e, "adam_scalar", &grads, 3e-3).unwrap();
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = (loss, acc);
+    }
+    assert!(last.0 < first.unwrap(), "loss {last:?} vs {first:?}");
+    assert_eq!(last.1, 1.0, "pairwise accuracy should reach 1.0");
+}
+
+#[test]
+fn attn_micro_runs() {
+    let e = engine();
+    let d = e.manifest().dims.clone();
+    let (b, h, s, dh) = (d.batch, d.n_heads, d.max_seq, d.d_head());
+    let n = b * h * s * dh;
+    let mk = |seed: usize| {
+        Tensor::f32(
+            vec![b, h, s, dh],
+            (0..n).map(|i| (((i + seed) % 17) as f32 - 8.0) / 8.0).collect(),
+        )
+    };
+    let out = e
+        .run("attn_micro", &[mk(0), mk(5), mk(11)])
+        .unwrap()
+        .remove(0);
+    assert_eq!(out.shape, vec![b, h, s, dh]);
+    assert!(out.as_f32().unwrap().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn arity_validation_errors_are_actionable() {
+    let e = engine();
+    let err = e.run("fwd_logits", &[Tensor::scalar_f32(0.0)]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("fwd_logits") && msg.contains("expects"), "{msg}");
+}

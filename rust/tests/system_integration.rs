@@ -1,0 +1,243 @@
+//! System-level integration: checkpoint/restore across world sizes, RPC
+//! over TCP under fault injection, config round-trips, and the failure
+//! paths the paper's fail-fast philosophy (§4.2) mandates.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use gcore::checkpoint::{CheckpointManager, CheckpointMeta, ShardState};
+use gcore::config::RunConfig;
+use gcore::coordinator::collective::Collective;
+use gcore::coordinator::controller::Controller;
+use gcore::reward::Rewarder;
+use gcore::rpc::client::{RetryPolicy, RpcClient};
+use gcore::rpc::server::{RpcServer, Service};
+use gcore::rpc::transport::{FlakyTransport, TcpRpcHost, TcpTransport, Transport};
+use gcore::rpc::wire::Request;
+use gcore::runtime::{init_policy, Engine};
+use gcore::storage::dataloader::LoaderState;
+use gcore::storage::kv::KvStore;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir()
+        .join("gcore_sys_tests")
+        .join(format!("{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn checkpoint_resume_continues_training() {
+    // Train 2 steps, checkpoint, restore into a FRESH controller, verify
+    // the params match bit-exactly and training can continue.
+    let engine = Arc::new(Engine::load("tiny").expect("run `make artifacts`"));
+    let cfg = RunConfig { steps: 2, sft_steps: 2, ..RunConfig::default() };
+    let policy = init_policy(&engine, 1).unwrap();
+    let mut c = Controller::new(
+        0,
+        engine.clone(),
+        Collective::new(1),
+        cfg.clone(),
+        policy,
+        Rewarder::ground_truth(),
+    )
+    .unwrap();
+    for _ in 0..2 {
+        c.sft_step().unwrap();
+    }
+    c.freeze_reference();
+    c.rlhf_step(0).unwrap();
+
+    let dir = tmpdir("resume");
+    let mgr = CheckpointManager::new(&dir);
+    let meta = CheckpointMeta {
+        step: 1,
+        world_size: 1,
+        loader: LoaderState { seed: cfg.seed, epoch: 0, cursor: 4 },
+    };
+    let shard = ShardState {
+        rank: 0,
+        params: vec![
+            ("policy".into(), c.state.params.clone()),
+            ("adam_m".into(), c.state.m.clone()),
+            ("adam_v".into(), c.state.v.clone()),
+            ("reference".into(), c.ref_params.clone()),
+        ],
+        rng_seed: cfg.seed,
+    };
+    mgr.save_shard(1, &meta, &shard).unwrap();
+
+    // fresh controller from the checkpoint
+    let loaded = mgr.load_shard(1, 0).unwrap();
+    let restored_policy = loaded.params[0].1.clone();
+    assert_eq!(restored_policy, c.state.params);
+    let mut c2 = Controller::new(
+        0,
+        engine.clone(),
+        Collective::new(1),
+        cfg,
+        restored_policy,
+        Rewarder::ground_truth(),
+    )
+    .unwrap();
+    c2.state.m = loaded.params[1].1.clone();
+    c2.state.v = loaded.params[2].1.clone();
+    c2.state.step = meta.step;
+    c2.ref_params = loaded.params[3].1.clone();
+    // resumed training step must succeed and stay finite
+    let stats = c2.rlhf_step(1).unwrap();
+    assert!(stats.loss.is_finite());
+}
+
+#[test]
+fn tcp_rpc_exactly_once_under_faults() {
+    // The E8 scenario over the REAL TCP transport: response loss + client
+    // retries; the server must execute each logical call exactly once.
+    let count = Arc::new(AtomicU64::new(0));
+    let c2 = count.clone();
+    let server = Arc::new(RpcServer::new(move |_: &str, p: &[u8]| {
+        c2.fetch_add(1, Ordering::SeqCst);
+        Ok(p.to_vec())
+    }));
+    let host = TcpRpcHost::spawn(server.clone()).unwrap();
+    let flaky = FlakyTransport::new(TcpTransport::connect(host.addr), 42)
+        .with_probs(0.15, 0.25, 0.1);
+    let client = RpcClient::new(flaky).with_retry(RetryPolicy {
+        max_attempts: 64,
+        backoff: Duration::from_micros(50),
+    });
+    let calls = 60u64;
+    for i in 0..calls {
+        let out = client.call("work", i.to_le_bytes().to_vec()).unwrap();
+        assert_eq!(out, i.to_le_bytes().to_vec());
+    }
+    assert_eq!(count.load(Ordering::SeqCst), calls, "exactly-once violated");
+    assert_eq!(server.stats().cached_now, 0, "cleanups must drain the cache");
+}
+
+#[test]
+fn tcp_rpc_many_concurrent_clients() {
+    let server = Arc::new(RpcServer::new(|_: &str, p: &[u8]| Ok(p.to_vec())));
+    let host = TcpRpcHost::spawn(server.clone()).unwrap();
+    let addr = host.addr;
+    let threads: Vec<_> = (0..8)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let client = RpcClient::new(TcpTransport::connect(addr));
+                for i in 0..50u64 {
+                    let v = (t * 1000 + i).to_le_bytes().to_vec();
+                    assert_eq!(client.call("echo", v.clone()).unwrap(), v);
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert_eq!(server.stats().executed, 400);
+}
+
+#[test]
+fn rpc_server_error_is_fail_fast_signal() {
+    // paper §4.2: unexpected result → terminate everything.  The client
+    // surfaces server-side errors as hard errors without retry.
+    struct Exploding;
+    impl Service for Exploding {
+        fn handle(&self, _m: &str, _p: &[u8]) -> anyhow::Result<Vec<u8>> {
+            anyhow::bail!("CUDA error: device-side assert")
+        }
+    }
+    let server = Arc::new(RpcServer::new(Exploding));
+    let host = TcpRpcHost::spawn(server.clone()).unwrap();
+    let client = RpcClient::new(TcpTransport::connect(host.addr));
+    let err = client.call("train", vec![]).unwrap_err().to_string();
+    assert!(err.contains("device-side assert"), "{err}");
+    assert_eq!(server.stats().executed, 1, "no retry on server error");
+}
+
+#[test]
+fn kv_store_holds_multimodal_payloads() {
+    // §4.6: images in the KV store instead of many files
+    use gcore::data::payload::PayloadSpec;
+    use gcore::util::rng::Rng;
+    let dir = tmpdir("kv_payload");
+    let mut kv = KvStore::open(dir.join("train_data.kv")).unwrap();
+    let spec = PayloadSpec::paper_2k().scaled(64);
+    let mut rng = Rng::new(1);
+    for sid in 0..8u64 {
+        let p = spec.generate(sid, &mut rng);
+        for (i, img) in p.images.iter().enumerate() {
+            kv.put(&format!("sample/{sid}/img/{i}"), img).unwrap();
+        }
+    }
+    assert_eq!(kv.len(), 8 * spec.images_per_sample);
+    assert_eq!(kv.scan_prefix("sample/3/").len(), spec.images_per_sample);
+    let img = kv.get("sample/0/img/0").unwrap().unwrap();
+    assert_eq!(img.len(), spec.bytes_per_image());
+}
+
+#[test]
+fn config_file_roundtrip_through_launcher_path() {
+    let dir = tmpdir("config");
+    let path = dir.join("run.json");
+    std::fs::write(
+        &path,
+        r#"{"artifacts":"tiny","world":1,"steps":1,"sft_steps":1,
+            "reward":"ground_truth","tasks":["copy"]}"#,
+    )
+    .unwrap();
+    let cfg = RunConfig::load(&path).unwrap();
+    assert_eq!(cfg.steps, 1);
+    // the preset configs in configs/ must all parse
+    for preset in [
+        "configs/tiny_groundtruth.json",
+        "configs/quickstart_grpo.json",
+        "configs/dapo.json",
+        "configs/genrm.json",
+        "configs/e2e.json",
+    ] {
+        // tests may run from the crate root
+        if std::path::Path::new(preset).exists() {
+            RunConfig::load(preset)
+                .unwrap_or_else(|e| panic!("{preset} failed to parse: {e:#}"));
+        }
+    }
+}
+
+#[test]
+fn controller_rejects_bad_group_size() {
+    let engine = Arc::new(Engine::load("tiny").expect("run `make artifacts`"));
+    let cfg = RunConfig { group_size: 3, ..RunConfig::default() }; // 4 % 3 != 0
+    let policy = init_policy(&engine, 1).unwrap();
+    let err = Controller::new(
+        0,
+        engine,
+        Collective::new(1),
+        cfg,
+        policy,
+        Rewarder::ground_truth(),
+    )
+    .err()
+    .expect("must reject");
+    assert!(err.to_string().contains("group_size"));
+}
+
+#[test]
+fn flaky_transport_duplicates_do_not_reexecute() {
+    // duplicates delivered straight to the server (no client involved)
+    let count = Arc::new(AtomicU64::new(0));
+    let c2 = count.clone();
+    let server = Arc::new(RpcServer::new(move |_: &str, _: &[u8]| {
+        c2.fetch_add(1, Ordering::SeqCst);
+        Ok(vec![])
+    }));
+    let t = gcore::rpc::transport::InProcTransport::new(server.clone());
+    let req = Request { id: 77, method: "m".into(), payload: vec![] };
+    for _ in 0..5 {
+        t.deliver(&req).unwrap();
+    }
+    assert_eq!(count.load(Ordering::SeqCst), 1);
+    assert_eq!(server.stats().duplicates_served, 4);
+}
