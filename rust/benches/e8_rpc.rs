@@ -7,6 +7,7 @@ use gcore::util::bench;
 
 fn main() {
     gcore::experiments::e8_rpc(false).print();
+    gcore::experiments::e8_collective(false).print();
     // transport latency micro
     let server = Arc::new(RpcServer::new(|_: &str, p: &[u8]| Ok(p.to_vec())));
     let inproc = RpcClient::new(InProcTransport::new(server.clone()));

@@ -2,6 +2,7 @@
 //! examples and benches.  (The offline vendor set has no TOML crate, so
 //! configs are JSON — same composability, zero extra dependencies.)
 
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -9,7 +10,33 @@ use anyhow::{bail, Context, Result};
 use crate::reward::{RewardKind, VerdictMode};
 use crate::util::json::Json;
 
-#[derive(Debug, Clone)]
+/// How the controller group coordinates (see coordinator::collective):
+/// in-proc condvar rendezvous between threads, or RPC rounds against a
+/// rank-0 rendezvous service over TCP (also what `train-dist` workers use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveMode {
+    InProc,
+    Tcp,
+}
+
+impl CollectiveMode {
+    pub fn parse(s: &str) -> Result<CollectiveMode> {
+        Ok(match s {
+            "inproc" => CollectiveMode::InProc,
+            "tcp" => CollectiveMode::Tcp,
+            other => bail!("unknown collective mode '{other}' (inproc|tcp)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveMode::InProc => "inproc",
+            CollectiveMode::Tcp => "tcp",
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
     /// artifact set name (tiny / quickstart / e2e / path)
     pub artifacts: String,
@@ -43,6 +70,11 @@ pub struct RunConfig {
     pub checkpoint_dir: Option<String>,
     pub checkpoint_every: usize,
     pub tasks: Vec<String>,
+    // -- distributed launch ---------------------------------------------------
+    /// collective transport for `gcore train` (train-dist always uses tcp)
+    pub collective: CollectiveMode,
+    /// rendezvous-host port for multi-process launches (0 = ephemeral)
+    pub coordinator_port: u16,
 }
 
 impl Default for RunConfig {
@@ -70,6 +102,8 @@ impl Default for RunConfig {
             checkpoint_dir: None,
             checkpoint_every: 0,
             tasks: vec!["add".into(), "max".into(), "copy".into()],
+            collective: CollectiveMode::InProc,
+            coordinator_port: 0,
         }
     }
 }
@@ -113,7 +147,16 @@ impl RunConfig {
                 "sft_steps" => cfg.sft_steps = req_usize(val, key)?,
                 "verifier_sft_steps" => cfg.verifier_sft_steps = req_usize(val, key)?,
                 "bt_train_steps" => cfg.bt_train_steps = req_usize(val, key)?,
-                "seed" => cfg.seed = req_usize(val, key)? as u64,
+                // number or string: JSON numbers are f64, so u64 seeds above
+                // 2^53 only survive exactly as strings (to_json emits those)
+                "seed" => {
+                    cfg.seed = match val.as_str() {
+                        Some(s) => s
+                            .parse()
+                            .with_context(|| format!("seed '{s}' is not a u64"))?,
+                        None => req_usize(val, key)? as u64,
+                    }
+                }
                 "checkpoint_dir" => cfg.checkpoint_dir = Some(req_str(val, key)?),
                 "checkpoint_every" => cfg.checkpoint_every = req_usize(val, key)?,
                 "tasks" => {
@@ -123,6 +166,16 @@ impl RunConfig {
                         .iter()
                         .map(|t| t.as_str().map(String::from).context("task name"))
                         .collect::<Result<_>>()?
+                }
+                "collective" => {
+                    cfg.collective = CollectiveMode::parse(&req_str(val, key)?)?
+                }
+                "coordinator_port" => {
+                    let p = req_usize(val, key)?;
+                    if p > u16::MAX as usize {
+                        bail!("coordinator_port {p} out of range");
+                    }
+                    cfg.coordinator_port = p as u16
                 }
                 other => bail!("unknown config key '{other}'"),
             }
@@ -135,6 +188,66 @@ impl RunConfig {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading config {:?}", path.as_ref()))?;
         Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Serialize to the same JSON schema `from_json` reads — the launcher
+    /// uses this to hand a fully-resolved config to `train-worker`
+    /// processes.  `from_json(&cfg.to_json()) == cfg` for every valid config.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        let mut put = |k: &str, v: Json| {
+            m.insert(k.to_string(), v);
+        };
+        put("artifacts", Json::Str(self.artifacts.clone()));
+        put("world", Json::Num(self.world as f64));
+        put("steps", Json::Num(self.steps as f64));
+        put("group_size", Json::Num(self.group_size as f64));
+        put("lr", Json::Num(self.lr as f64));
+        put("sft_lr", Json::Num(self.sft_lr as f64));
+        put("clip_eps", Json::Num(self.clip_eps as f64));
+        put("kl_coef", Json::Num(self.kl_coef as f64));
+        put("ent_coef", Json::Num(self.ent_coef as f64));
+        put("temperature", Json::Num(self.temperature as f64));
+        put("top_k", Json::Num(self.top_k as f64));
+        put(
+            "reward",
+            Json::Str(
+                match self.reward {
+                    RewardKind::GroundTruth => "ground_truth",
+                    RewardKind::BradleyTerry => "bradley_terry",
+                    RewardKind::Generative => "generative",
+                }
+                .into(),
+            ),
+        );
+        put(
+            "verdict_mode",
+            Json::Str(
+                match self.verdict_mode {
+                    VerdictMode::Logit => "logit",
+                    VerdictMode::Regex => "regex",
+                }
+                .into(),
+            ),
+        );
+        put("dynamic_sampling", Json::Bool(self.dynamic_sampling));
+        put("max_resample_rounds", Json::Num(self.max_resample_rounds as f64));
+        put("sft_steps", Json::Num(self.sft_steps as f64));
+        put("verifier_sft_steps", Json::Num(self.verifier_sft_steps as f64));
+        put("bt_train_steps", Json::Num(self.bt_train_steps as f64));
+        // string, not number: f64 can't carry u64 seeds above 2^53 exactly
+        put("seed", Json::Str(self.seed.to_string()));
+        if let Some(d) = &self.checkpoint_dir {
+            put("checkpoint_dir", Json::Str(d.clone()));
+        }
+        put("checkpoint_every", Json::Num(self.checkpoint_every as f64));
+        put(
+            "tasks",
+            Json::Arr(self.tasks.iter().map(|t| Json::Str(t.clone())).collect()),
+        );
+        put("collective", Json::Str(self.collective.name().into()));
+        put("coordinator_port", Json::Num(self.coordinator_port as f64));
+        Json::Obj(m)
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -224,5 +337,46 @@ mod tests {
     #[test]
     fn default_is_valid() {
         RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn to_json_roundtrips_exactly() {
+        let mut cfg = RunConfig {
+            artifacts: "quickstart".into(),
+            world: 4,
+            steps: 7,
+            lr: 5e-4,
+            reward: RewardKind::Generative,
+            verdict_mode: VerdictMode::Regex,
+            dynamic_sampling: true,
+            checkpoint_dir: Some("/tmp/ckpt".into()),
+            checkpoint_every: 3,
+            tasks: vec!["add".into(), "rev".into()],
+            collective: CollectiveMode::Tcp,
+            coordinator_port: 29400,
+            // above 2^53: exact only because seeds serialize as strings
+            seed: (1u64 << 60) + 3,
+            ..RunConfig::default()
+        };
+        assert_eq!(RunConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+        cfg.checkpoint_dir = None;
+        assert_eq!(RunConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+        // and the default too
+        let d = RunConfig::default();
+        assert_eq!(RunConfig::from_json(&d.to_json()).unwrap(), d);
+    }
+
+    #[test]
+    fn collective_mode_parses() {
+        let j = Json::parse(r#"{"collective":"tcp","coordinator_port":29500}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.collective, CollectiveMode::Tcp);
+        assert_eq!(cfg.coordinator_port, 29500);
+        for bad in [
+            r#"{"collective":"carrier-pigeon"}"#,
+            r#"{"coordinator_port":99999}"#,
+        ] {
+            assert!(RunConfig::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
     }
 }

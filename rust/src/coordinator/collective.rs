@@ -2,17 +2,34 @@
 //! top-level controller and use collective communication to coordinate
 //! among controllers."
 //!
-//! `Rendezvous<T>` is the primitive: `exchange(rank, value)` blocks until
-//! every controller of the group has contributed, then returns all values
-//! to all ranks (all-gather semantics).  All-reduce, broadcast and barrier
-//! are built on it.  Controllers are threads in-process; the same call
-//! pattern maps onto the RPC transport for multi-process launches.
+//! Two layers:
+//!
+//! * [`CollectiveBackend`] — the byte-level all-gather every collective is
+//!   built on: `exchange(rank, tag, bytes)` blocks until all ranks of the
+//!   group have contributed, then returns all payloads in rank order.
+//!   Implementations: [`InProcBackend`] (a `Condvar` rendezvous between
+//!   controller threads, below) and
+//!   [`crate::coordinator::rpc_collective::RpcCollective`] (request/response
+//!   rounds against a rank-0 rendezvous service over the exactly-once RPC
+//!   stack — `InProcTransport`, TCP, or the fault-injecting wrapper), which
+//!   is what multi-process launches (`gcore train-dist`) use.
+//! * [`Collective`] — the typed facade the `Controller` calls: all-reduce of
+//!   `ParamSet` gradients, mean of scalar metric vectors, token-row gather,
+//!   barrier.  Values are serialized with `util::codec` into length-prefixed
+//!   frames, so every backend moves the exact same bytes and results are
+//!   bit-identical across backends (asserted by
+//!   `tests/collective_properties.rs`).
+//!
+//! `Rendezvous<T>` remains the in-process primitive: `exchange(rank, value)`
+//! blocks until every controller of the group has contributed, then returns
+//! all values to all ranks (all-gather semantics).
 
 use std::sync::{Arc, Condvar, Mutex};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::runtime::params::ParamSet;
+use crate::util::codec::{Reader, Writer};
 
 struct Slots<T> {
     generation: u64,
@@ -91,52 +108,147 @@ impl<T: Clone + Send> Rendezvous<T> {
     }
 }
 
-/// The full collective set one controller group shares.
+// ---------------------------------------------------------------------------
+// Backend abstraction
+// ---------------------------------------------------------------------------
+
+/// The byte-level all-gather a controller group coordinates through.
+///
+/// Ranks call collectives in identical (SPMD lockstep) order; `tag` names
+/// the logical channel so lockstep violations surface as hard errors
+/// instead of silently exchanging mismatched values.
+pub trait CollectiveBackend: Send + Sync {
+    fn world_size(&self) -> usize;
+
+    /// Contribute `payload` for this rank's next round; blocks until every
+    /// rank has contributed and returns all payloads in rank order.
+    fn exchange(&self, rank: usize, tag: &str, payload: Vec<u8>) -> Result<Vec<Vec<u8>>>;
+}
+
+/// In-process backend: controller threads meeting on a `Rendezvous`.
+pub struct InProcBackend {
+    rdv: Arc<Rendezvous<(String, Vec<u8>)>>,
+}
+
+impl InProcBackend {
+    pub fn new(world: usize) -> Arc<InProcBackend> {
+        Arc::new(InProcBackend { rdv: Rendezvous::new(world) })
+    }
+}
+
+impl CollectiveBackend for InProcBackend {
+    fn world_size(&self) -> usize {
+        self.rdv.world_size()
+    }
+
+    fn exchange(&self, rank: usize, tag: &str, payload: Vec<u8>) -> Result<Vec<Vec<u8>>> {
+        let all = self.rdv.exchange(rank, (tag.to_string(), payload));
+        let mut out = Vec::with_capacity(all.len());
+        for (peer_tag, bytes) in all {
+            if peer_tag != tag {
+                bail!(
+                    "collective lockstep violation: rank {rank} is in '{tag}' \
+                     while a peer is in '{peer_tag}'"
+                );
+            }
+            out.push(bytes);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed facade
+// ---------------------------------------------------------------------------
+
+/// Serialize a parameter/gradient set into one length-prefixed frame.
+pub fn encode_param_set(set: &ParamSet) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.tensors(&set.tensors);
+    w.into_bytes()
+}
+
+pub fn decode_param_set(bytes: &[u8]) -> Result<ParamSet> {
+    let mut r = Reader::new(bytes);
+    let tensors = r.tensors()?;
+    r.expect_end()?;
+    Ok(ParamSet::new(tensors))
+}
+
+/// The full collective set one controller group shares.  All values travel
+/// as codec frames through the backend, so the same call pattern runs over
+/// threads, the in-proc RPC transport, or TCP between OS processes.
 pub struct Collective {
-    pub params: Arc<Rendezvous<ParamSet>>,
-    pub scalars: Arc<Rendezvous<Vec<f64>>>,
-    pub bytes: Arc<Rendezvous<Vec<u8>>>,
-    pub tokens: Arc<Rendezvous<Vec<Vec<i32>>>>,
+    backend: Arc<dyn CollectiveBackend>,
 }
 
 impl Collective {
+    /// In-process group of `world` controller threads.
     pub fn new(world: usize) -> Arc<Collective> {
-        Arc::new(Collective {
-            params: Rendezvous::new(world),
-            scalars: Rendezvous::new(world),
-            bytes: Rendezvous::new(world),
-            tokens: Rendezvous::new(world),
-        })
+        Self::with_backend(InProcBackend::new(world))
+    }
+
+    /// Group coordinated by an explicit backend (e.g. `RpcCollective`).
+    pub fn with_backend(backend: Arc<dyn CollectiveBackend>) -> Arc<Collective> {
+        Arc::new(Collective { backend })
     }
 
     pub fn world_size(&self) -> usize {
-        self.params.world_size()
+        self.backend.world_size()
     }
 
     /// Mean-reduce a parameter/gradient set across controllers.
     pub fn all_reduce_mean(&self, rank: usize, set: &ParamSet) -> Result<ParamSet> {
-        let all = self.params.exchange(rank, set.clone());
-        let refs: Vec<&ParamSet> = all.iter().collect();
+        let parts = self.backend.exchange(rank, "params", encode_param_set(set))?;
+        let sets = parts
+            .iter()
+            .map(|b| decode_param_set(b))
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&ParamSet> = sets.iter().collect();
         ParamSet::average(&refs)
     }
 
     /// Mean of per-rank scalar vectors (loss/metric aggregation).
-    pub fn mean_scalars(&self, rank: usize, vals: Vec<f64>) -> Vec<f64> {
-        let all = self.scalars.exchange(rank, vals);
-        let n = all.len() as f64;
+    pub fn mean_scalars(&self, rank: usize, vals: Vec<f64>) -> Result<Vec<f64>> {
+        let mut w = Writer::new();
+        w.f64s(&vals);
+        let parts = self.backend.exchange(rank, "scalars", w.into_bytes())?;
+        let mut all = Vec::with_capacity(parts.len());
+        for b in &parts {
+            let mut r = Reader::new(b);
+            let v = r.f64s()?;
+            r.expect_end()?;
+            all.push(v);
+        }
         let len = all[0].len();
-        (0..len)
+        if all.iter().any(|v| v.len() != len) {
+            bail!("scalar vector length mismatch across ranks");
+        }
+        let n = all.len() as f64;
+        Ok((0..len)
             .map(|i| all.iter().map(|v| v[i]).sum::<f64>() / n)
-            .collect()
+            .collect())
     }
 
     /// Gather every rank's token rows (sample exchange across controllers).
-    pub fn gather_tokens(&self, rank: usize, rows: Vec<Vec<i32>>) -> Vec<Vec<Vec<i32>>> {
-        self.tokens.exchange(rank, rows)
+    pub fn gather_tokens(&self, rank: usize, rows: Vec<Vec<i32>>) -> Result<Vec<Vec<Vec<i32>>>> {
+        let mut w = Writer::new();
+        w.token_rows(&rows);
+        let parts = self.backend.exchange(rank, "tokens", w.into_bytes())?;
+        parts
+            .iter()
+            .map(|b| {
+                let mut r = Reader::new(b);
+                let rows = r.token_rows()?;
+                r.expect_end()?;
+                Ok(rows)
+            })
+            .collect()
     }
 
-    pub fn barrier(&self, rank: usize) {
-        self.bytes.exchange(rank, Vec::new());
+    pub fn barrier(&self, rank: usize) -> Result<()> {
+        self.backend.exchange(rank, "barrier", Vec::new())?;
+        Ok(())
     }
 }
 
@@ -203,17 +315,51 @@ mod tests {
         let a = ParamSet::new(vec![Tensor::f32(vec![1], vec![5.0])]);
         let r = col.all_reduce_mean(0, &a).unwrap();
         assert_eq!(r, a);
-        col.barrier(0);
+        col.barrier(0).unwrap();
     }
 
     #[test]
     fn mean_scalars_aggregates_metrics() {
         let col = Collective::new(2);
         let col2 = col.clone();
-        let h = std::thread::spawn(move || col2.mean_scalars(1, vec![2.0, 20.0]));
-        let r0 = col.mean_scalars(0, vec![4.0, 40.0]);
+        let h = std::thread::spawn(move || col2.mean_scalars(1, vec![2.0, 20.0]).unwrap());
+        let r0 = col.mean_scalars(0, vec![4.0, 40.0]).unwrap();
         let r1 = h.join().unwrap();
         assert_eq!(r0, vec![3.0, 30.0]);
         assert_eq!(r0, r1);
+    }
+
+    #[test]
+    fn gather_tokens_returns_rank_order() {
+        let col = Collective::new(2);
+        let col2 = col.clone();
+        let h = std::thread::spawn(move || {
+            col2.gather_tokens(1, vec![vec![10, 11]]).unwrap()
+        });
+        let r0 = col.gather_tokens(0, vec![vec![0, 1], vec![2]]).unwrap();
+        let r1 = h.join().unwrap();
+        assert_eq!(r0, r1);
+        assert_eq!(r0, vec![vec![vec![0, 1], vec![2]], vec![vec![10, 11]]]);
+    }
+
+    #[test]
+    fn param_set_frame_roundtrip() {
+        let set = ParamSet::new(vec![
+            Tensor::f32(vec![2, 2], vec![1.0, -2.5, f32::MIN_POSITIVE, 4.0]),
+            Tensor::i32(vec![3], vec![-1, 0, 1]),
+        ]);
+        assert_eq!(decode_param_set(&encode_param_set(&set)).unwrap(), set);
+        assert!(decode_param_set(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn inproc_lockstep_violation_is_hard_error() {
+        let backend = InProcBackend::new(2);
+        let b2 = backend.clone();
+        let h = std::thread::spawn(move || b2.exchange(1, "scalars", vec![]));
+        let r0 = backend.exchange(0, "params", vec![]);
+        let r1 = h.join().unwrap();
+        assert!(r0.is_err() && r1.is_err(), "both ranks must fail fast");
+        assert!(r0.unwrap_err().to_string().contains("lockstep"));
     }
 }

@@ -313,7 +313,7 @@ impl Controller {
             batch.rounds as f64,
         ];
         let reduced = if self.collective.world_size() > 1 {
-            self.collective.mean_scalars(self.rank, local)
+            self.collective.mean_scalars(self.rank, local)?
         } else {
             local
         };

@@ -2,7 +2,10 @@
 //!
 //! * `controller` — the SPMD parallel controller (§3.1);
 //! * `single` — the single-controller baseline data plane (§2.2/§3.1);
-//! * `collective` — inter-controller collectives (§3.1);
+//! * `collective` — inter-controller collectives (§3.1): the
+//!   `CollectiveBackend` abstraction plus the in-proc rendezvous backend;
+//! * `rpc_collective` — the RPC-backed collective (rank-0 rendezvous
+//!   service + per-rank clients) multi-process launches coordinate through;
 //! * `generation` — the stage-1 generation engine (KV-cached sampling);
 //! * `sampling` — GRPO/GAE advantages + DAPO dynamic-sampling filter (§3.2);
 //! * `pretrain` — BT-reward and generative-verifier pre-training (§5);
@@ -12,10 +15,12 @@ pub mod collective;
 pub mod controller;
 pub mod generation;
 pub mod pretrain;
+pub mod rpc_collective;
 pub mod sampling;
 pub mod single;
 pub mod workflow;
 
-pub use collective::{Collective, Rendezvous};
+pub use collective::{Collective, CollectiveBackend, InProcBackend, Rendezvous};
+pub use rpc_collective::{RendezvousHost, RpcCollective};
 pub use controller::{Controller, RolloutBatch, StepStats};
 pub use generation::{generate, GenOutput, SamplerConfig};

@@ -1,0 +1,403 @@
+//! RPC-backed collectives (paper §3.1 + §4.2): the byte-level all-gather of
+//! `CollectiveBackend` mapped onto the exactly-once RPC stack, so the
+//! unchanged `Controller` code runs across OS processes.
+//!
+//! Topology: rank 0's process hosts a [`RendezvousHost`] service on an
+//! `RpcServer` (exposed over TCP by `TcpRpcHost`, or in-proc for tests).
+//! Every rank drives rounds through its own `RpcClient`:
+//!
+//! 1. `collective.offer` — contribute this rank's payload for round `seq`
+//!    (idempotent per `(seq, rank)`, so client-level retries and duplicate
+//!    deliveries can never double-contribute);
+//! 2. `collective.poll` — poll until the round is complete; the reply
+//!    carries every rank's payload in rank order.
+//!
+//! Both calls ride the retry-until-cached protocol of `rpc::client`: a lost
+//! response is re-fetched from the server-side result cache under the same
+//! request id, so the host's handler runs exactly once per delivered call
+//! even through the fault-injecting transport.  A tag mismatch between
+//! ranks (a collective-order bug) poisons the round: every participant gets
+//! a hard server error, which the coordinator escalates into job
+//! termination (the paper's fail-fast rule).
+//!
+//! Rounds are garbage-collected once every rank has received the result;
+//! the host holds at most a handful of rounds at a time in lockstep
+//! operation.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::collective::CollectiveBackend;
+use crate::rpc::client::{RetryPolicy, RpcClient};
+use crate::rpc::server::{RpcServer, Service};
+use crate::rpc::transport::Transport;
+use crate::rpc::wire::{GatherFrame, GatherReply, PollFrame};
+
+pub const METHOD_OFFER: &str = "collective.offer";
+pub const METHOD_POLL: &str = "collective.poll";
+
+struct Round {
+    tag: String,
+    parts: Vec<Option<Vec<u8>>>,
+    /// encoded Ready reply, built once when the round completes (the parts
+    /// are moved into it — no per-rank re-encode on the gradient hot path)
+    ready_reply: Option<Vec<u8>>,
+    /// ranks that have received the completed result (round GC)
+    collected: Vec<bool>,
+    n_collected: usize,
+    /// set on a lockstep violation; every later participant fails fast
+    poisoned: Option<String>,
+}
+
+impl Round {
+    fn new(world: usize, tag: &str) -> Round {
+        Round {
+            tag: tag.to_string(),
+            parts: vec![None; world],
+            ready_reply: None,
+            collected: vec![false; world],
+            n_collected: 0,
+            poisoned: None,
+        }
+    }
+}
+
+/// The rank-0 rendezvous service: accumulates per-round contributions and
+/// hands the gathered payloads back to every rank.
+pub struct RendezvousHost {
+    world: usize,
+    rounds: Mutex<HashMap<u64, Round>>,
+}
+
+impl RendezvousHost {
+    pub fn new(world: usize) -> RendezvousHost {
+        assert!(world >= 1, "world must be >= 1");
+        RendezvousHost { world, rounds: Mutex::new(HashMap::new()) }
+    }
+
+    /// Convenience: the host already wrapped in an `RpcServer`, ready for
+    /// `TcpRpcHost::spawn` or `InProcTransport::new`.
+    pub fn serve(world: usize) -> Arc<RpcServer<RendezvousHost>> {
+        Arc::new(RpcServer::new(RendezvousHost::new(world)))
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.world
+    }
+
+    /// Rounds currently buffered (0 once all ranks drained — test hook).
+    pub fn open_rounds(&self) -> usize {
+        self.rounds.lock().unwrap().len()
+    }
+
+    fn offer(&self, frame: GatherFrame) -> Result<Vec<u8>> {
+        if frame.world as usize != self.world {
+            bail!(
+                "world mismatch: rank {} believes world={}, host has {}",
+                frame.rank,
+                frame.world,
+                self.world
+            );
+        }
+        let rank = frame.rank as usize;
+        if rank >= self.world {
+            bail!("rank {rank} out of range for world {}", self.world);
+        }
+        let mut rounds = self.rounds.lock().unwrap();
+        let round = rounds
+            .entry(frame.seq)
+            .or_insert_with(|| Round::new(self.world, &frame.tag));
+        if let Some(msg) = round.poisoned.clone() {
+            bail!("{msg}");
+        }
+        if round.tag != frame.tag {
+            let msg = format!(
+                "collective lockstep violation at round {}: host opened '{}', \
+                 rank {rank} offered '{}'",
+                frame.seq, round.tag, frame.tag
+            );
+            round.poisoned = Some(msg.clone());
+            bail!("{msg}");
+        }
+        // idempotent per (seq, rank): re-offers never double-contribute
+        if round.parts[rank].is_none() {
+            round.parts[rank] = Some(frame.payload);
+        }
+        Ok(Self::reply(&mut rounds, frame.seq, rank, self.world))
+    }
+
+    fn poll(&self, frame: PollFrame) -> Result<Vec<u8>> {
+        let rank = frame.rank as usize;
+        if rank >= self.world {
+            bail!("rank {rank} out of range for world {}", self.world);
+        }
+        let mut rounds = self.rounds.lock().unwrap();
+        match rounds.get(&frame.seq) {
+            None => bail!(
+                "poll for unknown or already-drained collective round {} \
+                 (protocol violation)",
+                frame.seq
+            ),
+            Some(round) => {
+                if let Some(msg) = round.poisoned.clone() {
+                    bail!("{msg}");
+                }
+            }
+        }
+        Ok(Self::reply(&mut rounds, frame.seq, rank, self.world))
+    }
+
+    fn reply(rounds: &mut HashMap<u64, Round>, seq: u64, rank: usize, world: usize) -> Vec<u8> {
+        let round = rounds.get_mut(&seq).expect("round exists under lock");
+        if round.ready_reply.is_none() {
+            if round.parts.iter().any(|p| p.is_none()) {
+                return GatherReply::Pending.encode();
+            }
+            // round complete: encode once, moving the parts out of the map
+            let parts: Vec<Vec<u8>> =
+                round.parts.iter_mut().map(|p| p.take().unwrap()).collect();
+            round.ready_reply = Some(GatherReply::Ready(parts).encode());
+        }
+        if !round.collected[rank] {
+            round.collected[rank] = true;
+            round.n_collected += 1;
+        }
+        let reply = round.ready_reply.clone().unwrap();
+        if round.n_collected == world {
+            rounds.remove(&seq);
+        }
+        reply
+    }
+}
+
+impl Service for RendezvousHost {
+    fn handle(&self, method: &str, payload: &[u8]) -> Result<Vec<u8>> {
+        match method {
+            METHOD_OFFER => self.offer(GatherFrame::decode(payload)?),
+            METHOD_POLL => self.poll(PollFrame::decode(payload)?),
+            other => bail!("unknown collective method '{other}'"),
+        }
+    }
+}
+
+/// A rank's view of the group: `CollectiveBackend` implemented as RPC
+/// rounds against the rank-0 [`RendezvousHost`].
+pub struct RpcCollective<T: Transport> {
+    client: RpcClient<T>,
+    world: usize,
+    next_seq: AtomicU64,
+    /// sleep between result polls
+    pub poll_interval: Duration,
+    /// give up on a round after this long (a dead peer can never arrive;
+    /// erroring here is the fail-fast signal — §4.2)
+    pub round_timeout: Duration,
+}
+
+impl<T: Transport> RpcCollective<T> {
+    pub fn new(transport: T, world: usize) -> RpcCollective<T> {
+        let client = RpcClient::new(transport).with_retry(RetryPolicy {
+            max_attempts: 64,
+            backoff: Duration::from_micros(50),
+        });
+        RpcCollective {
+            client,
+            world,
+            next_seq: AtomicU64::new(0),
+            poll_interval: Duration::from_micros(200),
+            round_timeout: Duration::from_secs(300),
+        }
+    }
+
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.client.retry = retry;
+        self
+    }
+
+    /// Constructor for one rank of a MULTI-PROCESS group: pins the RPC
+    /// request-id namespace to the rank, because the default per-process
+    /// counter would collide across workers sharing the rendezvous host.
+    pub fn for_rank(transport: T, world: usize, rank: usize) -> RpcCollective<T> {
+        assert!(rank < world, "rank {rank} out of range for world {world}");
+        let mut c = Self::new(transport, world);
+        // high bit keeps rank namespaces disjoint from in-process CLIENT_SEQ
+        // bases (which grow from 1 << 40)
+        c.client = c.client.with_id_base((1u64 << 63) | ((rank as u64) << 40));
+        c
+    }
+
+    pub fn with_round_timeout(mut self, timeout: Duration) -> Self {
+        self.round_timeout = timeout;
+        self
+    }
+
+    pub fn client(&self) -> &RpcClient<T> {
+        &self.client
+    }
+}
+
+impl<T: Transport> CollectiveBackend for RpcCollective<T> {
+    fn world_size(&self) -> usize {
+        self.world
+    }
+
+    fn exchange(&self, rank: usize, tag: &str, payload: Vec<u8>) -> Result<Vec<Vec<u8>>> {
+        let seq = self.next_seq.fetch_add(1, Ordering::SeqCst);
+        let offer = GatherFrame {
+            seq,
+            rank: rank as u32,
+            world: self.world as u32,
+            tag: tag.to_string(),
+            payload,
+        }
+        .encode();
+        let t0 = Instant::now();
+        let mut reply = self
+            .client
+            .call(METHOD_OFFER, offer)
+            .with_context(|| format!("offering collective round {seq} ('{tag}')"))?;
+        loop {
+            match GatherReply::decode(&reply)? {
+                GatherReply::Ready(parts) => return Ok(parts),
+                GatherReply::Pending => {
+                    if t0.elapsed() > self.round_timeout {
+                        bail!(
+                            "collective round {seq} ('{tag}') timed out after \
+                             {:.0?} — a peer is likely dead; failing fast (§4.2)",
+                            self.round_timeout
+                        );
+                    }
+                    std::thread::sleep(self.poll_interval);
+                }
+            }
+            let poll = PollFrame { seq, rank: rank as u32 }.encode();
+            reply = self
+                .client
+                .call(METHOD_POLL, poll)
+                .with_context(|| format!("polling collective round {seq} ('{tag}')"))?;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::collective::Collective;
+    use crate::rpc::transport::{FlakyTransport, InProcTransport};
+
+    fn group(world: usize) -> (Arc<RpcServer<RendezvousHost>>, Vec<Arc<Collective>>) {
+        let server = RendezvousHost::serve(world);
+        let cols = (0..world)
+            .map(|_| {
+                Collective::with_backend(Arc::new(RpcCollective::new(
+                    InProcTransport::new(server.clone()),
+                    world,
+                )))
+            })
+            .collect();
+        (server, cols)
+    }
+
+    #[test]
+    fn world_of_one_completes_immediately() {
+        let (_server, cols) = group(1);
+        assert_eq!(cols[0].mean_scalars(0, vec![7.0]).unwrap(), vec![7.0]);
+        cols[0].barrier(0).unwrap();
+    }
+
+    #[test]
+    fn scalars_mean_across_ranks_and_rounds() {
+        let (server, cols) = group(3);
+        let handles: Vec<_> = cols
+            .into_iter()
+            .enumerate()
+            .map(|(rank, col)| {
+                std::thread::spawn(move || -> Result<Vec<Vec<f64>>> {
+                    (0..5)
+                        .map(|round| {
+                            col.mean_scalars(rank, vec![(rank * 3 + round) as f64])
+                        })
+                        .collect()
+                })
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap().unwrap()).collect();
+        for round in 0..5 {
+            // mean over ranks of (3*rank + round) = 3 + round
+            for r in &results {
+                assert_eq!(r[round], vec![3.0 + round as f64]);
+            }
+        }
+        assert_eq!(server.service().open_rounds(), 0, "rounds must be GC'd");
+    }
+
+    #[test]
+    fn duplicate_deliveries_never_double_contribute() {
+        let world = 2;
+        let server = RendezvousHost::serve(world);
+        let cols: Vec<_> = (0..world)
+            .map(|rank| {
+                // every request delivered twice
+                let flaky =
+                    FlakyTransport::new(InProcTransport::new(server.clone()), 11 + rank as u64)
+                        .with_probs(0.0, 0.0, 1.0);
+                Collective::with_backend(Arc::new(RpcCollective::new(flaky, world)))
+            })
+            .collect();
+        let handles: Vec<_> = cols
+            .into_iter()
+            .enumerate()
+            .map(|(rank, col)| {
+                std::thread::spawn(move || col.mean_scalars(rank, vec![rank as f64 * 2.0]))
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap().unwrap(), vec![1.0]);
+        }
+        assert!(
+            server.stats().duplicates_served > 0,
+            "test must actually exercise duplicate delivery"
+        );
+    }
+
+    #[test]
+    fn tag_mismatch_poisons_round_for_all_ranks() {
+        let (_server, cols) = group(2);
+        let col1 = cols[1].clone();
+        let h = std::thread::spawn(move || col1.mean_scalars(1, vec![1.0]));
+        // rank 0 runs a params all-reduce while rank 1 runs mean_scalars:
+        // both must fail fast rather than exchange mismatched bytes
+        let set = crate::runtime::params::ParamSet::new(vec![
+            crate::runtime::tensor::Tensor::f32(vec![1], vec![1.0]),
+        ]);
+        let r0 = cols[0].all_reduce_mean(0, &set);
+        let r1 = h.join().unwrap();
+        assert!(r0.is_err() && r1.is_err(), "both ranks must fail fast");
+        let msg = format!("{:#}", r0.unwrap_err());
+        assert!(msg.contains("lockstep"), "{msg}");
+    }
+
+    #[test]
+    fn world_mismatch_rejected() {
+        let server = RendezvousHost::serve(2);
+        let col = Collective::with_backend(Arc::new(RpcCollective::new(
+            InProcTransport::new(server),
+            3, // lies about world size
+        )));
+        assert!(col.barrier(0).is_err());
+    }
+
+    #[test]
+    fn dead_peer_times_out_fail_fast() {
+        let server = RendezvousHost::serve(2);
+        let backend = RpcCollective::new(InProcTransport::new(server), 2)
+            .with_round_timeout(Duration::from_millis(20));
+        let col = Collective::with_backend(Arc::new(backend));
+        // rank 1 never arrives
+        let err = col.barrier(0).unwrap_err().to_string();
+        assert!(err.contains("timed out"), "{err}");
+    }
+}

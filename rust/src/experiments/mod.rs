@@ -14,6 +14,8 @@ use crate::balance::evaluate_epoch;
 use crate::checkpoint::{CheckpointManager, CheckpointMeta, ShardState};
 use crate::cluster::topology::Topology;
 use crate::cluster::workload::{GenLenModel, TrainTimeModel};
+use crate::coordinator::collective::Collective;
+use crate::coordinator::rpc_collective::{RendezvousHost, RpcCollective};
 use crate::coordinator::single::{route_parallel, route_single};
 use crate::data::payload::PayloadSpec;
 use crate::placement::{run_coexist_static, run_colocate, run_dynamic, PlacementSpec};
@@ -372,6 +374,121 @@ pub fn e8_rpc(quick: bool) -> Table {
     }
 }
 
+/// Rank-varying but deterministic all-reduce operand (E8c).
+fn e8c_param_set(rank: usize, n: usize) -> ParamSet {
+    ParamSet::new(vec![Tensor::f32(
+        vec![n],
+        (0..n)
+            .map(|i| ((i * 7 + rank * 31 + 13) % 97) as f32 / 97.0 - 0.5)
+            .collect(),
+    )])
+}
+
+/// Drive `rounds` all-reduce rounds of an `n`-element gradient across a
+/// collective group (one thread per rank); returns (wall seconds, rank-0
+/// result of the final round).
+fn e8c_time_all_reduce(
+    collectives: Vec<std::sync::Arc<Collective>>,
+    n: usize,
+    rounds: usize,
+) -> (f64, ParamSet) {
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = collectives
+        .into_iter()
+        .enumerate()
+        .map(|(rank, col)| {
+            std::thread::spawn(move || {
+                let set = e8c_param_set(rank, n);
+                let mut last = None;
+                for _ in 0..rounds {
+                    last = Some(col.all_reduce_mean(rank, &set).expect("all-reduce"));
+                }
+                last.unwrap()
+            })
+        })
+        .collect();
+    let results: Vec<ParamSet> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    for r in &results[1..] {
+        assert_eq!(r, &results[0], "ranks must agree on the reduced set");
+    }
+    (wall, results.into_iter().next().unwrap())
+}
+
+/// E8c — collective overhead: in-proc rendezvous vs RPC-backed collectives
+/// (in-proc transport and real TCP), same unchanged controller call
+/// pattern (§3.1 + §4.2).  The "identical" column asserts the RPC backends
+/// reproduce the in-proc all-reduce bit-for-bit.
+pub fn e8_collective(quick: bool) -> Table {
+    use std::sync::Arc;
+    let world = 4;
+    let rounds = if quick { 4 } else { 16 };
+    let sizes: &[usize] = if quick {
+        &[1_024, 65_536]
+    } else {
+        &[1_024, 65_536, 1_048_576]
+    };
+    let mut rows = Vec::new();
+    for &n in sizes {
+        // reference: the in-proc condvar rendezvous
+        let inproc = Collective::new(world);
+        let (ref_wall, ref_set) =
+            e8c_time_all_reduce((0..world).map(|_| inproc.clone()).collect(), n, rounds);
+
+        // RPC over the in-process transport (protocol overhead only)
+        let server = RendezvousHost::serve(world);
+        let rpc_inproc = (0..world)
+            .map(|_| {
+                Collective::with_backend(Arc::new(RpcCollective::new(
+                    crate::rpc::transport::InProcTransport::new(server.clone()),
+                    world,
+                )))
+            })
+            .collect();
+        let (rpc_wall, rpc_set) = e8c_time_all_reduce(rpc_inproc, n, rounds);
+
+        // RPC over real TCP (loopback) — the multi-process data path
+        let server = RendezvousHost::serve(world);
+        let host = crate::rpc::transport::TcpRpcHost::spawn(server).unwrap();
+        let tcp = (0..world)
+            .map(|_| {
+                Collective::with_backend(Arc::new(RpcCollective::new(
+                    crate::rpc::transport::TcpTransport::connect(host.addr),
+                    world,
+                )))
+            })
+            .collect();
+        let (tcp_wall, tcp_set) = e8c_time_all_reduce(tcp, n, rounds);
+        drop(host);
+
+        let mb = (n * 4) as f64 / 1e6;
+        for (backend, wall, set) in [
+            ("in-proc rendezvous", ref_wall, &ref_set),
+            ("rpc (in-proc)", rpc_wall, &rpc_set),
+            ("rpc (tcp)", tcp_wall, &tcp_set),
+        ] {
+            rows.push(vec![
+                format!("{mb:.2} MB x {world} ranks"),
+                backend.into(),
+                f(wall / rounds as f64 * 1e3, 2),
+                f(mb * world as f64 * rounds as f64 / wall, 1),
+                (set == &ref_set).to_string(),
+            ]);
+        }
+    }
+    Table {
+        title: "E8c — collective all-reduce: in-proc vs RPC backends (§3.1/§4.2)".into(),
+        header: vec![
+            "gradient payload".into(),
+            "backend".into(),
+            "ms/round".into(),
+            "agg MB/s".into(),
+            "identical".into(),
+        ],
+        rows,
+    }
+}
+
 /// E9 — async/on-demand checkpointing + elastic resume (§4.3).
 pub fn e9_checkpoint(quick: bool) -> Table {
     let dir = std::env::temp_dir().join(format!("gcore_e9_{}", std::process::id()));
@@ -465,6 +582,7 @@ pub fn run(id: &str, quick: bool) -> Option<Table> {
         "e5" => e5_attention(quick),
         "e7" => e7_dynamic_ratio(quick),
         "e8" => e8_rpc(quick),
+        "e8c" => e8_collective(quick),
         "e9" => e9_checkpoint(quick),
         _ => return None,
     };
@@ -490,6 +608,15 @@ mod tests {
         let t = e8_rpc(true);
         for row in &t.rows {
             assert_eq!(row[3], "true", "exactly-once violated in {row:?}");
+        }
+    }
+
+    #[test]
+    fn e8c_backends_bit_identical() {
+        let t = e8_collective(true);
+        assert_eq!(t.rows.len(), 6); // 2 sizes × 3 backends
+        for row in &t.rows {
+            assert_eq!(row[4], "true", "backend diverged from in-proc: {row:?}");
         }
     }
 

@@ -1,21 +1,40 @@
 //! Launcher: bootstraps a parallel-controller training job (paper §4.2's
-//! "launch tasks via [the] job scheduling system" analogue — here, one
-//! thread per controller sharing a PJRT engine and in-proc collectives;
-//! the same controller code runs over the TCP RPC transport for
-//! multi-process launches).
+//! "launch tasks via [the] job scheduling system" analogue).
+//!
+//! Three launch modes share one per-rank body ([`run_rank`]) and the same
+//! `Controller` code — only the `CollectiveBackend` differs:
+//!
+//! * [`run_training`] — one thread per controller, in-proc condvar
+//!   rendezvous (`CollectiveMode::InProc`), or TCP-loopback collectives
+//!   when the config says `CollectiveMode::Tcp`;
+//! * [`run_training_tcp`] — threads again, but every gradient all-reduce /
+//!   metric reduction / barrier travels as exactly-once RPC rounds against
+//!   a rank-0 rendezvous service over real TCP.  Bit-identical to the
+//!   in-proc launch (asserted in tests/system_integration.rs);
+//! * [`run_worker`] + [`serve_coordinator`] — the multi-process path used
+//!   by `gcore train-dist`: the parent hosts the rendezvous service and
+//!   spawns one `gcore train-worker --rank R --coord HOST:PORT` OS process
+//!   per controller.  Workers never share an address space; they meet only
+//!   through the RPC collective (and each deterministically re-derives the
+//!   initial policy / reward model from the shared seed instead of
+//!   broadcasting multi-MB weights).
 
+use std::net::SocketAddr;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::checkpoint::{CheckpointManager, CheckpointMeta, ShardState};
-use crate::config::RunConfig;
+use crate::config::{CollectiveMode, RunConfig};
 use crate::coordinator::collective::Collective;
 use crate::coordinator::controller::{Controller, StepStats};
 use crate::coordinator::pretrain;
+use crate::coordinator::rpc_collective::{RendezvousHost, RpcCollective};
 use crate::reward::{RewardKind, Rewarder};
+use crate::rpc::server::RpcServer;
+use crate::rpc::transport::{TcpRpcHost, TcpTransport};
 use crate::runtime::engine::Engine;
-use crate::runtime::params::init_policy;
+use crate::runtime::params::{init_policy, ParamSet};
 use crate::storage::dataloader::LoaderState;
 
 #[derive(Debug, Clone, Default)]
@@ -67,91 +86,106 @@ fn clone_rewarder(r: &Rewarder) -> Rewarder {
     }
 }
 
-/// Run a full RLHF training job: SFT warm-start → (optional) reward-model
-/// pre-training → `cfg.steps` RLHF steps across `cfg.world` controllers.
-pub fn run_training(cfg: &RunConfig) -> Result<TrainReport> {
+/// The full per-rank training body: SFT warm-start → RLHF steps →
+/// (rank 0) evaluation + checkpointing.  Identical across launch modes —
+/// the collective is the only thing that knows where the peers live.
+pub fn run_rank(
+    rank: usize,
+    engine: Arc<Engine>,
+    collective: Arc<Collective>,
+    cfg: RunConfig,
+    policy: ParamSet,
+    rewarder: Rewarder,
+    ckpt: Option<Arc<CheckpointManager>>,
+) -> Result<TrainReport> {
+    let mut c = Controller::new(rank, engine, collective, cfg.clone(), policy, rewarder)?;
+    let mut report = TrainReport::default();
+    let mut pending_ckpt: Option<crate::checkpoint::AsyncSaveHandle> = None;
+
+    // SFT warm-start
+    for _ in 0..cfg.sft_steps {
+        let loss = c.sft_step()?;
+        report.sft_losses.push(loss);
+    }
+    c.freeze_reference();
+    if rank == 0 {
+        report.eval_before = c.evaluate(4)?;
+    }
+
+    // RLHF steps
+    for step in 0..cfg.steps {
+        let stats = c.rlhf_step(step)?;
+        if rank == 0 {
+            report.steps.push(stats);
+            if let Some(ckpt) = &ckpt {
+                if cfg.checkpoint_every > 0 && (step + 1) % cfg.checkpoint_every == 0 {
+                    let meta = CheckpointMeta {
+                        step: step as u64 + 1,
+                        world_size: cfg.world,
+                        loader: LoaderState {
+                            seed: cfg.seed,
+                            epoch: 0,
+                            cursor: (step + 1) * c.engine.manifest().dims.batch,
+                        },
+                    };
+                    let shard = ShardState {
+                        rank,
+                        params: vec![
+                            ("policy".into(), c.state.params.clone()),
+                            ("adam_m".into(), c.state.m.clone()),
+                            ("adam_v".into(), c.state.v.clone()),
+                        ],
+                        rng_seed: cfg.seed,
+                    };
+                    // async: training continues while it writes; awaiting
+                    // the PREVIOUS save here caps us at one write in flight
+                    if let Some(h) = pending_ckpt.take() {
+                        h.wait()?;
+                    }
+                    pending_ckpt = Some(ckpt.save_async(step as u64 + 1, meta, shard));
+                }
+            }
+        }
+    }
+
+    // the last async save must land before the process can exit, or the
+    // final checkpoint is silently truncated (train-worker exits right away)
+    if let Some(h) = pending_ckpt.take() {
+        h.wait()?;
+    }
+    if rank == 0 {
+        report.eval_after = c.evaluate(4)?;
+        report.timers_markdown = c.timers.report();
+    }
+    Ok(report)
+}
+
+/// Spawn one thread per rank, each coordinating through its `Collective`
+/// (`collectives[rank]`), and return rank 0's report.
+fn run_threads(cfg: &RunConfig, collectives: Vec<Arc<Collective>>) -> Result<TrainReport> {
+    assert_eq!(collectives.len(), cfg.world);
     let engine = Arc::new(Engine::load(&cfg.artifacts)?);
     let (rewarder, rm_metric) = build_rewarder(&engine, cfg)?;
 
     // identical initial policy on every controller (SPMD)
     let policy = init_policy(&engine, cfg.seed as u32)?;
-    let collective = Collective::new(cfg.world);
 
     let ckpt = cfg
         .checkpoint_dir
         .as_ref()
         .map(|d| Arc::new(CheckpointManager::new(d)));
 
-    let handles: Vec<_> = (0..cfg.world)
-        .map(|rank| {
+    let handles: Vec<_> = collectives
+        .into_iter()
+        .enumerate()
+        .map(|(rank, collective)| {
             let engine = engine.clone();
-            let collective = collective.clone();
             let cfg = cfg.clone();
             let policy = policy.clone();
             let rewarder = clone_rewarder(&rewarder);
             let ckpt = ckpt.clone();
-            std::thread::spawn(move || -> Result<TrainReport> {
-                let mut c = Controller::new(
-                    rank,
-                    engine,
-                    collective,
-                    cfg.clone(),
-                    policy,
-                    rewarder,
-                )?;
-                let mut report = TrainReport::default();
-
-                // SFT warm-start
-                for _ in 0..cfg.sft_steps {
-                    let loss = c.sft_step()?;
-                    report.sft_losses.push(loss);
-                }
-                c.freeze_reference();
-                if rank == 0 {
-                    report.eval_before = c.evaluate(4)?;
-                }
-
-                // RLHF steps
-                for step in 0..cfg.steps {
-                    let stats = c.rlhf_step(step)?;
-                    if rank == 0 {
-                        report.steps.push(stats);
-                        if let Some(ckpt) = &ckpt {
-                            if cfg.checkpoint_every > 0
-                                && (step + 1) % cfg.checkpoint_every == 0
-                            {
-                                let meta = CheckpointMeta {
-                                    step: step as u64 + 1,
-                                    world_size: cfg.world,
-                                    loader: LoaderState {
-                                        seed: cfg.seed,
-                                        epoch: 0,
-                                        cursor: (step + 1)
-                                            * c.engine.manifest().dims.batch,
-                                    },
-                                };
-                                let shard = ShardState {
-                                    rank,
-                                    params: vec![
-                                        ("policy".into(), c.state.params.clone()),
-                                        ("adam_m".into(), c.state.m.clone()),
-                                        ("adam_v".into(), c.state.v.clone()),
-                                    ],
-                                    rng_seed: cfg.seed,
-                                };
-                                // async: training continues while it writes
-                                let h = ckpt.save_async(step as u64 + 1, meta, shard);
-                                drop(h); // completion checked at job end
-                            }
-                        }
-                    }
-                }
-
-                if rank == 0 {
-                    report.eval_after = c.evaluate(4)?;
-                    report.timers_markdown = c.timers.report();
-                }
-                Ok(report)
+            std::thread::spawn(move || {
+                run_rank(rank, engine, collective, cfg, policy, rewarder, ckpt)
             })
         })
         .collect();
@@ -167,6 +201,71 @@ pub fn run_training(cfg: &RunConfig) -> Result<TrainReport> {
         }
     }
     let mut report = rank0.context("no rank-0 report")?;
+    report.reward_model_metric = rm_metric;
+    Ok(report)
+}
+
+/// Run a full RLHF training job: SFT warm-start → (optional) reward-model
+/// pre-training → `cfg.steps` RLHF steps across `cfg.world` controllers.
+/// The collective transport is `cfg.collective` (in-proc threads by
+/// default).
+pub fn run_training(cfg: &RunConfig) -> Result<TrainReport> {
+    match cfg.collective {
+        CollectiveMode::InProc => {
+            let collective = Collective::new(cfg.world);
+            run_threads(cfg, (0..cfg.world).map(|_| collective.clone()).collect())
+        }
+        CollectiveMode::Tcp => run_training_tcp(cfg),
+    }
+}
+
+/// Thread-per-controller launch whose collectives run as exactly-once RPC
+/// rounds over real TCP (loopback) — the single-machine rehearsal of the
+/// multi-process path, bit-identical to `run_training`.
+pub fn run_training_tcp(cfg: &RunConfig) -> Result<TrainReport> {
+    let host = TcpRpcHost::spawn(RendezvousHost::serve(cfg.world))?;
+    let addr = host.addr;
+    let collectives = (0..cfg.world)
+        .map(|_| {
+            Collective::with_backend(Arc::new(RpcCollective::new(
+                TcpTransport::connect(addr),
+                cfg.world,
+            )))
+        })
+        .collect();
+    let report = run_threads(cfg, collectives);
+    drop(host); // all clients joined; release the listener
+    report
+}
+
+/// Host the rendezvous service for a multi-process launch (`train-dist`):
+/// binds 127.0.0.1:`port` (0 = ephemeral; read the actual address off the
+/// returned host) and serves until dropped.
+pub fn serve_coordinator(world: usize, port: u16) -> Result<TcpRpcHost> {
+    let server: Arc<RpcServer<RendezvousHost>> = RendezvousHost::serve(world);
+    TcpRpcHost::spawn_on(&format!("127.0.0.1:{port}"), server)
+}
+
+/// One `train-worker` OS process: rank `rank` of `cfg.world`, coordinating
+/// only through the RPC collective at `coord`.  Every worker re-derives the
+/// initial policy and (if configured) pre-trains its reward model from the
+/// shared seed, which is deterministic — so all ranks start bit-identical
+/// without a weight broadcast.
+pub fn run_worker(cfg: &RunConfig, rank: usize, coord: SocketAddr) -> Result<TrainReport> {
+    let engine = Arc::new(Engine::load(&cfg.artifacts)?);
+    let (rewarder, rm_metric) = build_rewarder(&engine, cfg)?;
+    let policy = init_policy(&engine, cfg.seed as u32)?;
+    let collective = Collective::with_backend(Arc::new(RpcCollective::for_rank(
+        TcpTransport::connect(coord),
+        cfg.world,
+        rank,
+    )));
+    let ckpt = cfg
+        .checkpoint_dir
+        .as_ref()
+        .map(|d| Arc::new(CheckpointManager::new(d)));
+    let mut report = run_rank(rank, engine, collective, cfg.clone(), policy, rewarder, ckpt)
+        .with_context(|| format!("worker rank {rank} failed"))?;
     report.reward_model_metric = rm_metric;
     Ok(report)
 }

@@ -1,17 +1,23 @@
 //! `gcore` — the G-Core reproduction launcher.
 //!
 //! Subcommands:
-//!   train              run RLHF training (config file or flags)
+//!   train              run RLHF training (config file or flags; in-proc or
+//!                      TCP-loopback collectives via --collective)
+//!   train-dist         multi-process training: hosts the rendezvous
+//!                      service and spawns one worker process per rank
+//!   train-worker       one rank of a train-dist job (internal)
 //!   bench <e1..e9|all> regenerate an experiment table (DESIGN.md §4)
 //!   simulate           run a placement simulation (colocate/coexist/dynamic)
 //!   inspect-artifacts  print the manifest of an artifact set
 //!   help
 
-use anyhow::{bail, Result};
+use std::net::SocketAddr;
 
-use gcore::config::RunConfig;
+use anyhow::{bail, Context, Result};
+
+use gcore::config::{CollectiveMode, RunConfig};
 use gcore::experiments;
-use gcore::launch;
+use gcore::launch::{self, TrainReport};
 use gcore::placement::{run_coexist_static, run_colocate, run_dynamic, PlacementSpec};
 use gcore::runtime::Manifest;
 use gcore::util::cli::Args;
@@ -23,7 +29,11 @@ USAGE:
   gcore train [--config <file.json>] [--artifacts tiny] [--world N]
               [--steps N] [--reward ground_truth|bt|generative]
               [--dynamic-sampling] [--checkpoint-dir DIR]
-  gcore bench <e1|e2|e3|e4|e5|e7|e8|e9|all> [--full]
+              [--collective inproc|tcp]
+  gcore train-dist [same flags as train] [--coord-port P]
+              spawns N=world OS processes coordinating over the TCP
+              rendezvous collective (rank 0 prints the report)
+  gcore bench <e1|e2|e3|e4|e5|e7|e8|e8c|e9|all> [--full]
   gcore simulate [--placement colocate|coexist|dynamic] [--devices N]
                  [--steps N] [--dapo]
   gcore inspect-artifacts [--artifacts tiny]
@@ -33,6 +43,8 @@ fn main() -> Result<()> {
     let args = Args::parse_env();
     match args.subcommand() {
         Some("train") => cmd_train(&args),
+        Some("train-dist") => cmd_train_dist(&args),
+        Some("train-worker") => cmd_train_worker(&args),
         Some("bench") => cmd_bench(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("inspect-artifacts") => cmd_inspect(&args),
@@ -43,7 +55,9 @@ fn main() -> Result<()> {
     }
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
+/// Resolve a RunConfig from `--config` plus flag overrides (shared by
+/// `train` and `train-dist`).
+fn cfg_from_args(args: &Args) -> Result<RunConfig> {
     let mut cfg = match args.get("config") {
         Some(path) => RunConfig::load(path)?,
         None => RunConfig::default(),
@@ -57,8 +71,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.group_size = args.parse_or("group-size", cfg.group_size);
     cfg.lr = args.parse_or("lr", cfg.lr);
     cfg.seed = args.parse_or("seed", cfg.seed);
+    cfg.coordinator_port = args.parse_or("coord-port", cfg.coordinator_port);
     if args.has("dynamic-sampling") {
         cfg.dynamic_sampling = true;
+    }
+    if let Some(c) = args.get("collective") {
+        cfg.collective = CollectiveMode::parse(c)?;
     }
     if let Some(r) = args.get("reward") {
         cfg.reward = match r {
@@ -75,12 +93,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
     }
     cfg.validate()?;
+    Ok(cfg)
+}
 
-    println!(
-        "[gcore] training: artifacts={} world={} steps={} reward={:?} dapo={}",
-        cfg.artifacts, cfg.world, cfg.steps, cfg.reward, cfg.dynamic_sampling
-    );
-    let report = launch::run_training(&cfg)?;
+fn print_report(report: &TrainReport) {
     println!("\nstep | loss | kl | reward | accuracy | gen_len | rounds");
     println!("-----|------|----|--------|----------|---------|-------");
     for s in &report.steps {
@@ -94,6 +110,117 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.eval_before, report.eval_after
     );
     println!("\nstage timers:\n{}", report.timers_markdown);
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = cfg_from_args(args)?;
+    println!(
+        "[gcore] training: artifacts={} world={} steps={} reward={:?} dapo={} collective={}",
+        cfg.artifacts,
+        cfg.world,
+        cfg.steps,
+        cfg.reward,
+        cfg.dynamic_sampling,
+        cfg.collective.name()
+    );
+    let report = launch::run_training(&cfg)?;
+    print_report(&report);
+    Ok(())
+}
+
+fn cmd_train_dist(args: &Args) -> Result<()> {
+    let cfg = cfg_from_args(args)?;
+    // the parent hosts the rendezvous service every worker coordinates
+    // through; workers are full OS processes that never share memory
+    let host = launch::serve_coordinator(cfg.world, cfg.coordinator_port)?;
+    let addr = host.addr;
+    println!(
+        "[gcore] train-dist: world={} coordinator={addr} artifacts={}",
+        cfg.world, cfg.artifacts
+    );
+
+    // hand each worker the fully-resolved config
+    let dir = std::env::temp_dir().join(format!("gcore_dist_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let cfg_path = dir.join("run.json");
+    std::fs::write(&cfg_path, cfg.to_json().to_string())?;
+
+    let exe = std::env::current_exe().context("locating gcore binary")?;
+    let mut slots: Vec<Option<(usize, std::process::Child)>> = Vec::new();
+
+    // Everything that can fail after the first spawn runs in this closure so
+    // a mid-flight error (spawn failure, wait error, worker failure) always
+    // reaches the cleanup below — no orphaned workers, no leaked temp dir.
+    let result = (|| -> Result<()> {
+        for rank in 0..cfg.world {
+            let child = std::process::Command::new(&exe)
+                .arg("train-worker")
+                .arg("--config")
+                .arg(&cfg_path)
+                .arg("--rank")
+                .arg(rank.to_string())
+                .arg("--coord")
+                .arg(addr.to_string())
+                .spawn()
+                .with_context(|| format!("spawning worker {rank}"))?;
+            slots.push(Some((rank, child)));
+        }
+
+        // Reap workers in completion order (not rank order): the first
+        // failure — whichever rank it is — ends the job immediately, instead
+        // of the surviving ranks stalling in a collective until its round
+        // timeout and the parent blaming the wrong worker.
+        let mut remaining = slots.len();
+        while remaining > 0 {
+            let mut progressed = false;
+            for slot in slots.iter_mut() {
+                let finished = match slot {
+                    Some((rank, child)) => child
+                        .try_wait()
+                        .with_context(|| format!("waiting on worker {rank}"))?
+                        .map(|status| (*rank, status)),
+                    None => None,
+                };
+                if let Some((rank, status)) = finished {
+                    *slot = None;
+                    remaining -= 1;
+                    progressed = true;
+                    if !status.success() {
+                        bail!(
+                            "worker {rank} failed ({status}) — job terminated \
+                             (fail-fast, §4.2)"
+                        );
+                    }
+                }
+            }
+            if !progressed {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+        }
+        Ok(())
+    })();
+
+    // fail fast (§4.2): one dead worker dooms the job — kill the rest
+    for slot in slots.iter_mut().flatten() {
+        slot.1.kill().ok();
+        slot.1.wait().ok();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    drop(host);
+    result
+}
+
+fn cmd_train_worker(args: &Args) -> Result<()> {
+    let cfg = RunConfig::load(args.require("config")?)?;
+    let rank: usize = args.require_parse("rank")?;
+    let coord: SocketAddr = args.require_parse("coord")?;
+    if rank >= cfg.world {
+        bail!("rank {rank} out of range for world {}", cfg.world);
+    }
+    let report = launch::run_worker(&cfg, rank, coord)?;
+    if rank == 0 {
+        print_report(&report);
+    }
     Ok(())
 }
 
@@ -101,7 +228,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let quick = !args.has("full");
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let ids: Vec<&str> = if which == "all" {
-        vec!["e1", "e2", "e3", "e4", "e5", "e7", "e8", "e9"]
+        vec!["e1", "e2", "e3", "e4", "e5", "e7", "e8", "e8c", "e9"]
     } else {
         vec![which]
     };

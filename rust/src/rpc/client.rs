@@ -58,8 +58,23 @@ impl<T: Transport> RpcClient<T> {
         self
     }
 
+    /// Override the request-id namespace.  The default `CLIENT_SEQ` base is
+    /// only unique *within* one process — clients in different OS processes
+    /// sharing one server (the multi-process collective) must carve up the
+    /// id space explicitly or they would collide in the server's result
+    /// cache.
+    pub fn with_id_base(self, base: u64) -> Self {
+        self.next_id.store(base, Ordering::Relaxed);
+        self
+    }
+
     pub fn stats(&self) -> ClientStats {
         self.stats.lock().unwrap().clone()
+    }
+
+    /// Borrow the underlying transport (fault-injection stats in tests).
+    pub fn transport(&self) -> &T {
+        &self.transport
     }
 
     fn fresh_id(&self) -> u64 {

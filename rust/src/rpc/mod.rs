@@ -20,5 +20,5 @@ pub mod wire;
 
 pub use client::RpcClient;
 pub use server::{RpcServer, Service};
-pub use transport::{FlakyTransport, InProcTransport, TcpTransport, Transport};
-pub use wire::{Request, Response, Status};
+pub use transport::{FlakyTransport, InProcTransport, TcpRpcHost, TcpTransport, Transport};
+pub use wire::{GatherFrame, GatherReply, PollFrame, Request, Response, Status};

@@ -18,6 +18,18 @@ pub trait Transport: Send + Sync {
     fn deliver(&self, request: &Request) -> Result<Response>;
 }
 
+impl<T: Transport + ?Sized> Transport for Box<T> {
+    fn deliver(&self, request: &Request) -> Result<Response> {
+        (**self).deliver(request)
+    }
+}
+
+impl<T: Transport + ?Sized> Transport for Arc<T> {
+    fn deliver(&self, request: &Request) -> Result<Response> {
+        (**self).deliver(request)
+    }
+}
+
 // ---------------------------------------------------------------------------
 // In-process
 // ---------------------------------------------------------------------------
@@ -71,7 +83,16 @@ pub struct TcpRpcHost {
 impl TcpRpcHost {
     /// Bind on 127.0.0.1:0 (ephemeral port) and serve until dropped.
     pub fn spawn<S: Service + 'static>(server: Arc<RpcServer<S>>) -> Result<TcpRpcHost> {
-        let listener = TcpListener::bind("127.0.0.1:0")?;
+        Self::spawn_on("127.0.0.1:0", server)
+    }
+
+    /// Bind on an explicit address (fixed ports for multi-process launches)
+    /// and serve until dropped.
+    pub fn spawn_on<S: Service + 'static>(
+        addr: &str,
+        server: Arc<RpcServer<S>>,
+    ) -> Result<TcpRpcHost> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));

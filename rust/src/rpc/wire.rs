@@ -79,6 +79,116 @@ impl Response {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Collective rendezvous frames (coordinator::rpc_collective)
+// ---------------------------------------------------------------------------
+
+/// One rank's contribution to a collective all-gather round, batched as a
+/// single length-prefixed frame (seq/rank/world header + opaque payload —
+/// e.g. a codec-encoded `ParamSet` for gradient all-reduce).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GatherFrame {
+    /// Round sequence number — SPMD lockstep guarantees all ranks agree.
+    pub seq: u64,
+    pub rank: u32,
+    pub world: u32,
+    /// Logical channel ("params", "scalars", …) — checked by the host to
+    /// catch collective-order mismatches early.
+    pub tag: String,
+    pub payload: Vec<u8>,
+}
+
+impl GatherFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u64(self.seq);
+        w.u32(self.rank);
+        w.u32(self.world);
+        w.str(&self.tag);
+        w.bytes(&self.payload);
+        w.into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<GatherFrame> {
+        let mut r = Reader::new(bytes);
+        let f = GatherFrame {
+            seq: r.u64()?,
+            rank: r.u32()?,
+            world: r.u32()?,
+            tag: r.str()?,
+            payload: r.bytes()?.to_vec(),
+        };
+        r.expect_end()?;
+        Ok(f)
+    }
+}
+
+/// A poll for a round's result (no payload re-upload on retry loops).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PollFrame {
+    pub seq: u64,
+    pub rank: u32,
+}
+
+impl PollFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u64(self.seq);
+        w.u32(self.rank);
+        w.into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<PollFrame> {
+        let mut r = Reader::new(bytes);
+        let f = PollFrame { seq: r.u64()?, rank: r.u32()? };
+        r.expect_end()?;
+        Ok(f)
+    }
+}
+
+/// The rendezvous host's answer: still waiting, or every rank's payload in
+/// rank order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GatherReply {
+    Pending,
+    Ready(Vec<Vec<u8>>),
+}
+
+impl GatherReply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            GatherReply::Pending => w.u8(0),
+            GatherReply::Ready(parts) => {
+                w.u8(1);
+                w.u32(parts.len() as u32);
+                for p in parts {
+                    w.bytes(p);
+                }
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<GatherReply> {
+        let mut r = Reader::new(bytes);
+        let reply = match r.u8()? {
+            0 => GatherReply::Pending,
+            1 => {
+                let n = r.u32()? as usize;
+                let mut parts = Vec::with_capacity(n);
+                for _ in 0..n {
+                    parts.push(r.bytes()?.to_vec());
+                }
+                GatherReply::Ready(parts)
+            }
+            t => bail!("bad gather-reply tag {t}"),
+        };
+        r.expect_end()?;
+        Ok(reply)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,6 +205,27 @@ mod tests {
             let resp = Response { id: 7, status, payload: b"xyz".to_vec() };
             assert_eq!(Response::decode(&resp.encode()).unwrap(), resp);
         }
+    }
+
+    #[test]
+    fn gather_frames_roundtrip() {
+        let f = GatherFrame {
+            seq: 9,
+            rank: 2,
+            world: 4,
+            tag: "params".into(),
+            payload: vec![1, 2, 3, 4, 5],
+        };
+        assert_eq!(GatherFrame::decode(&f.encode()).unwrap(), f);
+        let p = PollFrame { seq: 9, rank: 2 };
+        assert_eq!(PollFrame::decode(&p.encode()).unwrap(), p);
+        for reply in [
+            GatherReply::Pending,
+            GatherReply::Ready(vec![vec![], vec![7, 7], vec![0; 100]]),
+        ] {
+            assert_eq!(GatherReply::decode(&reply.encode()).unwrap(), reply);
+        }
+        assert!(GatherReply::decode(&[9]).is_err());
     }
 
     #[test]

@@ -7,6 +7,11 @@
 //! HLO *text* is the interchange format (serialized protos from jax ≥ 0.5 are
 //! rejected by xla_extension 0.5.1 — see aot.py).
 //!
+//! The XLA bridge is feature-gated (`pjrt`): without the vendored `xla`
+//! crate the engine still loads manifests and validates artifact I/O
+//! contracts, but execution returns an error and engine-backed tests skip
+//! via [`Engine::try_load`].
+//!
 //! Thread-safety: `xla` wrapper types hold raw pointers and are not `Send`;
 //! the engine serializes all PJRT access behind one mutex.  XLA-CPU
 //! parallelizes *inside* an execution via its intra-op thread pool, so
@@ -14,17 +19,25 @@
 
 use std::collections::HashMap;
 use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::time::Duration;
+#[cfg(feature = "pjrt")]
+use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::{bail, Result};
 
 use crate::runtime::manifest::{artifacts_dir, ArtifactSpec, Manifest};
 use crate::runtime::tensor::Tensor;
 
+#[cfg(feature = "pjrt")]
 struct Inner {
     client: xla::PjRtClient,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
+
+#[cfg(not(feature = "pjrt"))]
+struct Inner {}
 
 /// Per-artifact execution statistics (feeds the utilization monitor and the
 /// §Perf tables in EXPERIMENTS.md).
@@ -37,16 +50,46 @@ pub struct ExecStats {
 
 pub struct Engine {
     manifest: Manifest,
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     inner: Mutex<Inner>,
     stats: Mutex<HashMap<String, ExecStats>>,
 }
 
 // SAFETY: all access to the raw-pointer-holding xla types is serialized
 // behind `inner`; the PJRT CPU plugin itself is thread-safe.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for Engine {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for Engine {}
 
 impl Engine {
+    /// True when this build can actually execute artifacts.
+    pub const fn backend_available() -> bool {
+        cfg!(feature = "pjrt")
+    }
+
+    /// Load an artifact set if (and only if) it exists AND this build has an
+    /// execution backend.  Engine-backed tests use this to self-skip — so it
+    /// returns `None` only for the two legitimate skip reasons (no backend,
+    /// artifacts never built) and PANICS on artifacts that exist but fail to
+    /// load: a corrupt manifest must fail the suite loudly, not skip it.
+    pub fn try_load(config: &str) -> Option<Engine> {
+        if !Self::backend_available() {
+            return None;
+        }
+        let dir = artifacts_dir(config);
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        match Self::from_dir(&dir) {
+            Ok(e) => Some(e),
+            Err(e) => panic!(
+                "artifact set '{config}' exists at {dir:?} but failed to \
+                 load — fix or rebuild it (`make artifacts`): {e:#}"
+            ),
+        }
+    }
+
     /// Load the artifact set for a named config (e.g. "tiny", "quickstart").
     pub fn load(config: &str) -> Result<Engine> {
         Self::from_dir(artifacts_dir(config))
@@ -54,12 +97,22 @@ impl Engine {
 
     pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
         let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Engine {
             manifest,
-            inner: Mutex::new(Inner { client, executables: HashMap::new() }),
+            inner: Mutex::new(Self::new_inner()?),
             stats: Mutex::new(HashMap::new()),
         })
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn new_inner() -> Result<Inner> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Inner { client, executables: HashMap::new() })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn new_inner() -> Result<Inner> {
+        Ok(Inner {})
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -74,6 +127,7 @@ impl Engine {
         Ok(())
     }
 
+    #[cfg(feature = "pjrt")]
     fn ensure_compiled(&self, name: &str) -> Result<()> {
         let mut inner = self.inner.lock().unwrap();
         if inner.executables.contains_key(name) {
@@ -98,6 +152,14 @@ impl Engine {
             .or_default()
             .compile_time = t0.elapsed();
         Ok(())
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        bail!(
+            "artifact '{name}' cannot compile: gcore was built without the \
+             `pjrt` feature (no XLA backend)"
+        )
     }
 
     fn validate_inputs(spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
@@ -141,6 +203,11 @@ impl Engine {
             Self::validate_inputs(spec, inputs)?;
             spec.outputs.len()
         };
+        self.execute(name, inputs, n_outputs)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn execute(&self, name: &str, inputs: &[&Tensor], n_outputs: usize) -> Result<Vec<Tensor>> {
         self.ensure_compiled(name)?;
 
         let t0 = Instant::now();
@@ -181,6 +248,15 @@ impl Engine {
         Ok(outputs)
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    fn execute(&self, name: &str, _inputs: &[&Tensor], _n_outputs: usize) -> Result<Vec<Tensor>> {
+        bail!(
+            "artifact '{name}' cannot execute: gcore was built without the \
+             `pjrt` feature (no XLA backend) — enable it with the vendored \
+             xla crate to run artifacts"
+        )
+    }
+
     /// Snapshot of per-artifact stats.
     pub fn stats(&self) -> HashMap<String, ExecStats> {
         self.stats.lock().unwrap().clone()
@@ -202,7 +278,41 @@ mod tests {
     use super::*;
 
     // Engine tests that need built artifacts live in rust/tests/; here we
-    // only check the failure paths that need no artifacts.
+    // exercise the manifest contract and the failure paths that need none.
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join("gcore_engine_tests")
+            .join(format!("{name}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// A minimal-but-complete manifest with one artifact.
+    const MINIMAL_MANIFEST: &str = r#"{
+        "config": {"name": "synthetic", "vocab": 16, "d_model": 8,
+                   "n_layers": 1, "n_heads": 2, "d_ff": 16, "max_seq": 8,
+                   "prompt_len": 4, "batch": 2, "use_pallas": false},
+        "param_count": 6,
+        "scalar_param_count": 2,
+        "policy_tree": [{"path": "w", "shape": [2, 3], "dtype": "f32"}],
+        "scalar_tree": [{"path": "b", "shape": [2], "dtype": "f32"}],
+        "artifacts": {
+            "echo": {
+                "file": "echo.hlo.txt",
+                "inputs": [{"name": "x", "shape": [2], "dtype": "f32"}],
+                "outputs": [{"name": "y", "shape": [2], "dtype": "f32"}],
+                "hlo_bytes": 128
+            }
+        }
+    }"#;
+
+    fn synthetic_engine(name: &str) -> Engine {
+        let dir = tmpdir(name);
+        std::fs::write(dir.join("manifest.json"), MINIMAL_MANIFEST).unwrap();
+        Engine::from_dir(&dir).unwrap()
+    }
 
     #[test]
     fn missing_dir_fails_cleanly() {
@@ -211,5 +321,104 @@ mod tests {
             Err(e) => format!("{e:#}"),
         };
         assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn manifest_roundtrip_through_engine() {
+        let e = synthetic_engine("roundtrip");
+        let d = &e.manifest().dims;
+        assert_eq!(d.name, "synthetic");
+        assert_eq!(d.vocab, 16);
+        assert_eq!(d.gen_len(), 4);
+        assert_eq!(d.d_head(), 4);
+        assert_eq!(e.manifest().param_count, 6);
+        assert_eq!(e.manifest().policy_bytes(), 24);
+        assert_eq!(e.manifest().policy_tree[0].num_elements(), 6);
+        let a = e.manifest().artifact("echo").unwrap();
+        assert_eq!(a.inputs.len(), 1);
+        assert_eq!(a.outputs[0].shape, vec![2]);
+        assert!(e
+            .manifest()
+            .hlo_path("echo")
+            .unwrap()
+            .ends_with("echo.hlo.txt"));
+    }
+
+    #[test]
+    fn malformed_manifests_rejected() {
+        let cases: Vec<(&str, String)> = vec![
+            ("not json", "{".to_string()),
+            ("not an object", "[1, 2]".to_string()),
+            ("missing config", r#"{"param_count": 1}"#.to_string()),
+            ("bad dtype", MINIMAL_MANIFEST.replace("\"f32\"", "\"f64\"")),
+            (
+                "shape not array",
+                MINIMAL_MANIFEST.replace("\"shape\": [2, 3]", "\"shape\": 6"),
+            ),
+            (
+                "missing artifact file",
+                MINIMAL_MANIFEST.replace("\"file\": \"echo.hlo.txt\",", ""),
+            ),
+        ];
+        for (label, text) in cases {
+            let dir = tmpdir(&format!("bad_{}", label.replace(' ', "_")));
+            std::fs::write(dir.join("manifest.json"), text).unwrap();
+            assert!(
+                Engine::from_dir(&dir).is_err(),
+                "manifest with {label} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_is_actionable() {
+        let e = synthetic_engine("unknown");
+        let msg = format!("{:#}", e.run("nope", &[]).unwrap_err());
+        assert!(msg.contains("'nope'"), "{msg}");
+    }
+
+    #[test]
+    fn input_arity_validated_before_execution() {
+        let e = synthetic_engine("arity");
+        let msg = format!("{:#}", e.run("echo", &[]).unwrap_err());
+        assert!(msg.contains("expects 1 inputs"), "{msg}");
+    }
+
+    #[test]
+    fn input_shape_and_dtype_validated_before_execution() {
+        let e = synthetic_engine("shape");
+        // wrong shape
+        let msg = format!(
+            "{:#}",
+            e.run("echo", &[Tensor::zeros_f32(vec![3])]).unwrap_err()
+        );
+        assert!(msg.contains("expected [2]"), "{msg}");
+        // wrong dtype
+        let msg = format!(
+            "{:#}",
+            e.run("echo", &[Tensor::i32(vec![2], vec![0, 0])]).unwrap_err()
+        );
+        assert!(msg.contains("f32"), "{msg}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_backend_error_is_actionable() {
+        let e = synthetic_engine("stub");
+        assert!(!Engine::backend_available());
+        assert!(Engine::try_load("tiny").is_none());
+        let msg = format!(
+            "{:#}",
+            e.run("echo", &[Tensor::zeros_f32(vec![2])]).unwrap_err()
+        );
+        assert!(msg.contains("pjrt"), "{msg}");
+        assert!(e.warmup(&["echo"]).is_err());
+    }
+
+    #[test]
+    fn stats_start_empty() {
+        let e = synthetic_engine("stats");
+        assert!(e.stats().is_empty());
+        assert!(e.mean_call_time("echo").is_none());
     }
 }

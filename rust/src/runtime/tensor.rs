@@ -4,7 +4,9 @@
 //! RPC payloads, checkpoints, gradient all-reduce — moves `Tensor`s and only
 //! converts to/from `Literal` at the PJRT boundary inside `Engine`.
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::{bail, Result};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dtype {
@@ -35,6 +37,7 @@ impl Dtype {
         4
     }
 
+    #[cfg(feature = "pjrt")]
     fn element_type(&self) -> xla::ElementType {
         match self {
             Dtype::F32 => xla::ElementType::F32,
@@ -140,6 +143,7 @@ impl Tensor {
         Ok(v[0])
     }
 
+    #[cfg(feature = "pjrt")]
     fn raw_bytes(&self) -> &[u8] {
         match &self.data {
             TensorData::F32(v) => bytemuck_f32(v),
@@ -149,6 +153,7 @@ impl Tensor {
     }
 
     /// Convert to an XLA literal (PJRT boundary; engine-internal).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         xla::Literal::create_from_shape_and_untyped_data(
             self.dtype().element_type(),
@@ -159,6 +164,7 @@ impl Tensor {
     }
 
     /// Convert back from an XLA literal.
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
         let shape = lit.array_shape().context("literal has no array shape")?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -206,12 +212,15 @@ impl Tensor {
 }
 
 // Safe reinterpretation of &[T] as &[u8] for POD element types.
+#[cfg(feature = "pjrt")]
 fn bytemuck_f32(v: &[f32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
+#[cfg(feature = "pjrt")]
 fn bytemuck_i32(v: &[i32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
+#[cfg(feature = "pjrt")]
 fn bytemuck_u32(v: &[u32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
@@ -220,6 +229,7 @@ fn bytemuck_u32(v: &[u32]) -> &[u8] {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_f32() {
         let t = Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
@@ -228,6 +238,7 @@ mod tests {
         assert_eq!(t, back);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_i32_scalar() {
         let t = Tensor::scalar_i32(-7);
@@ -236,6 +247,7 @@ mod tests {
         assert!(back.shape.is_empty());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_u32() {
         let t = Tensor::u32(vec![4], vec![0, 1, u32::MAX, 42]);

@@ -70,6 +70,17 @@ impl Args {
         self.get(key)
             .ok_or_else(|| anyhow::anyhow!("missing required flag --{key}"))
     }
+
+    /// Required flag that must parse (rank/port/address flags of the
+    /// distributed launcher).
+    pub fn require_parse<T: FromStr>(&self, key: &str) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let v = self.require(key)?;
+        v.parse()
+            .map_err(|e| anyhow::anyhow!("invalid --{key} '{v}': {e}"))
+    }
 }
 
 #[cfg(test)]
@@ -121,5 +132,15 @@ mod tests {
     fn require_errors() {
         let a = mk("run");
         assert!(a.require("config").is_err());
+    }
+
+    #[test]
+    fn require_parse_typed() {
+        let a = mk("train-worker --rank 3 --coord 127.0.0.1:29400 --port x");
+        assert_eq!(a.require_parse::<usize>("rank").unwrap(), 3);
+        let addr: std::net::SocketAddr = a.require_parse("coord").unwrap();
+        assert_eq!(addr.port(), 29400);
+        assert!(a.require_parse::<u16>("port").is_err(), "garbage must error");
+        assert!(a.require_parse::<u16>("absent").is_err());
     }
 }

@@ -63,6 +63,29 @@ impl Writer {
         }
     }
 
+    /// Length-prefixed f64 vector — bit-exact (collective scalar reduction).
+    pub fn f64s(&mut self, v: &[f64]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn i32s(&mut self, v: &[i32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Ragged token rows (collective sample exchange / RPC payloads).
+    pub fn token_rows(&mut self, rows: &[Vec<i32>]) {
+        self.u32(rows.len() as u32);
+        for row in rows {
+            self.i32s(row);
+        }
+    }
+
     pub fn tensor(&mut self, t: &Tensor) {
         let (tag, raw): (u8, &[u8]) = match &t.data {
             TensorData::F32(v) => (0, cast_slice(v)),
@@ -157,6 +180,29 @@ impl<'a> Reader<'a> {
             .collect())
     }
 
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn token_rows(&mut self) -> Result<Vec<Vec<i32>>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| self.i32s()).collect()
+    }
+
     pub fn tensor(&mut self) -> Result<Tensor> {
         let tag = self.u8()?;
         let rank = self.u32()? as usize;
@@ -242,6 +288,24 @@ mod tests {
         let bytes = w.into_bytes();
         let mut r = Reader::new(&bytes);
         assert_eq!(r.tensors().unwrap(), ts);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn f64_and_token_rows_roundtrip_bit_exact() {
+        let f64s = vec![0.0, -0.0, f64::NAN, f64::INFINITY, 1.5e-300, -7.25];
+        let rows = vec![vec![], vec![1, -2, 3], vec![i32::MIN, i32::MAX]];
+        let mut w = Writer::new();
+        w.f64s(&f64s);
+        w.token_rows(&rows);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        let back = r.f64s().unwrap();
+        assert_eq!(back.len(), f64s.len());
+        for (a, b) in back.iter().zip(&f64s) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f64 must roundtrip bit-exactly");
+        }
+        assert_eq!(r.token_rows().unwrap(), rows);
         r.expect_end().unwrap();
     }
 

@@ -15,8 +15,20 @@ pub fn default_cases() -> u64 {
         .unwrap_or(256)
 }
 
-/// Run `property(rng)` over `cases` seeds; panic with the failing seed.
+/// Run `property(rng)` over `default_cases()` seeds; panic with the
+/// failing seed.
 pub fn check<F>(name: &str, property: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    check_n(name, default_cases(), property)
+}
+
+/// `check` with an explicit case count — for properties whose cases are
+/// expensive (thread groups, transports) and need a smaller default than
+/// the global one.  `GCORE_PROP_SEED` replay and `GCORE_PROP_CASES`
+/// override still apply (the env override wins when smaller).
+pub fn check_n<F>(name: &str, cases: u64, property: F)
 where
     F: Fn(&mut Rng) -> Result<(), String>,
 {
@@ -28,7 +40,7 @@ where
         }
         return;
     }
-    let cases = default_cases();
+    let cases = cases.min(default_cases());
     for case in 0..cases {
         // decorrelate case seeds; keep them printable/replayable
         let seed = 0x9E3779B97F4A7C15u64

@@ -1,0 +1,221 @@
+//! Exactly-once collective properties: the RPC-backed collective, driven
+//! through the fault-injecting transport (request drops, response drops,
+//! duplicate deliveries), must produce results **bit-identical** to the
+//! in-proc `Rendezvous` backend — the correctness core of the paper's
+//! retry-until-cached protocol (§4.2) applied to collectives (§3.1).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gcore::coordinator::collective::{Collective, CollectiveBackend};
+use gcore::coordinator::rpc_collective::{RendezvousHost, RpcCollective};
+use gcore::prop_assert;
+use gcore::rpc::client::RetryPolicy;
+use gcore::rpc::transport::{FlakyTransport, InProcTransport, TcpRpcHost, TcpTransport};
+use gcore::runtime::{ParamSet, Tensor};
+use gcore::util::prop;
+use gcore::util::rng::Rng;
+
+/// Deterministic per-(rank, round) operand, same shapes on every rank.
+fn operand(shapes: &[usize], rank: usize, round: usize, seed: u64) -> ParamSet {
+    let mut rng = Rng::new(seed ^ ((rank as u64) << 32) ^ (round as u64));
+    ParamSet::new(
+        shapes
+            .iter()
+            .map(|&n| Tensor::f32(vec![n], (0..n).map(|_| rng.range(-4.0, 4.0) as f32).collect()))
+            .collect(),
+    )
+}
+
+fn bits(set: &ParamSet) -> Vec<u32> {
+    set.tensors
+        .iter()
+        .flat_map(|t| t.as_f32().unwrap().iter().map(|f| f.to_bits()))
+        .collect()
+}
+
+/// Run `rounds` all-reduce rounds on every rank of `collectives`; returns
+/// per-rank, per-round results (or the first error).
+fn drive(
+    collectives: Vec<Arc<Collective>>,
+    shapes: Vec<usize>,
+    rounds: usize,
+    seed: u64,
+) -> Result<Vec<Vec<ParamSet>>, String> {
+    let handles: Vec<_> = collectives
+        .into_iter()
+        .enumerate()
+        .map(|(rank, col)| {
+            let shapes = shapes.clone();
+            std::thread::spawn(move || -> Result<Vec<ParamSet>, String> {
+                (0..rounds)
+                    .map(|round| {
+                        col.all_reduce_mean(rank, &operand(&shapes, rank, round, seed))
+                            .map_err(|e| format!("rank {rank} round {round}: {e:#}"))
+                    })
+                    .collect()
+            })
+        })
+        .collect();
+    handles
+        .into_iter()
+        .map(|h| h.join().map_err(|_| "rank panicked".to_string())?)
+        .collect()
+}
+
+#[test]
+fn rpc_collective_bitwise_matches_inproc_under_faults() {
+    // Heavier per-case than most properties (thread groups + fault-injected
+    // transports): cap the cases while still sweeping world size / shapes /
+    // fault seeds.
+    prop::check_n("rpc-collective-bitwise", 24, |rng| {
+        let world = 2 + rng.below(2); // 2..=3 ranks
+        let rounds = 1 + rng.below(3);
+        let shapes: Vec<usize> = (0..1 + rng.below(2)).map(|_| 1 + rng.below(32)).collect();
+        let seed = rng.next_u64();
+
+        // reference: in-proc rendezvous backend
+        let inproc = Collective::new(world);
+        let reference = drive(
+            (0..world).map(|_| inproc.clone()).collect(),
+            shapes.clone(),
+            rounds,
+            seed,
+        )?;
+
+        // RPC backend through drops + duplicates
+        let server = RendezvousHost::serve(world);
+        let collectives: Vec<Arc<Collective>> = (0..world)
+            .map(|rank| {
+                let flaky = FlakyTransport::new(
+                    InProcTransport::new(server.clone()),
+                    seed ^ (0xF1A6 + rank as u64),
+                )
+                .with_probs(0.15, 0.25, 0.15);
+                let backend = RpcCollective::new(flaky, world)
+                    .with_retry(RetryPolicy {
+                        max_attempts: 256,
+                        backoff: Duration::from_micros(10),
+                    })
+                    .with_round_timeout(Duration::from_secs(60));
+                Collective::with_backend(Arc::new(backend))
+            })
+            .collect();
+        let rpc_results = drive(collectives, shapes, rounds, seed)?;
+
+        for (rank, (a, b)) in reference.iter().zip(&rpc_results).enumerate() {
+            for (round, (ra, rb)) in a.iter().zip(b).enumerate() {
+                prop_assert!(
+                    bits(ra) == bits(rb),
+                    "rank {rank} round {round}: RPC result diverged from in-proc"
+                );
+            }
+        }
+        let stats = server.stats();
+        prop_assert!(
+            stats.cached_now == 0,
+            "retry-until-cached must drain the result cache ({} left)",
+            stats.cached_now
+        );
+        prop_assert!(
+            server.service().open_rounds() == 0,
+            "completed rounds must be garbage-collected"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn faults_are_actually_injected_and_absorbed() {
+    // A fixed heavy-fault run that also checks the transport really dropped
+    // things (so the property above isn't vacuously passing).
+    let world = 3;
+    let server = RendezvousHost::serve(world);
+    let transports: Vec<_> = (0..world)
+        .map(|rank| {
+            Arc::new(
+                FlakyTransport::new(InProcTransport::new(server.clone()), 777 + rank as u64)
+                    .with_probs(0.25, 0.35, 0.25),
+            )
+        })
+        .collect();
+    let collectives: Vec<Arc<Collective>> = transports
+        .iter()
+        .map(|t| {
+            let backend = RpcCollective::new(t.clone(), world).with_retry(RetryPolicy {
+                max_attempts: 512,
+                backoff: Duration::from_micros(10),
+            });
+            Collective::with_backend(Arc::new(backend))
+        })
+        .collect();
+    let results = drive(collectives, vec![16, 5], 4, 42).unwrap();
+    for r in &results[1..] {
+        for (a, b) in results[0].iter().zip(r) {
+            assert_eq!(bits(a), bits(b), "all ranks must agree");
+        }
+    }
+    let injected: u64 = transports
+        .iter()
+        .map(|t| t.injected_failures.load(std::sync::atomic::Ordering::Relaxed))
+        .sum();
+    assert!(injected > 0, "fault profile must actually fire");
+    assert_eq!(server.stats().cached_now, 0);
+    assert_eq!(server.service().open_rounds(), 0);
+}
+
+#[test]
+fn full_collective_surface_over_real_tcp_matches_inproc() {
+    // scalars + tokens + barrier + params across 4 ranks over loopback TCP
+    let world = 4;
+    let inproc = Collective::new(world);
+    let host = TcpRpcHost::spawn(RendezvousHost::serve(world)).unwrap();
+    let tcp: Vec<Arc<Collective>> = (0..world)
+        .map(|_| {
+            Collective::with_backend(Arc::new(RpcCollective::new(
+                TcpTransport::connect(host.addr),
+                world,
+            )))
+        })
+        .collect();
+
+    let run_group = |collectives: Vec<Arc<Collective>>| -> Vec<(Vec<f64>, Vec<Vec<Vec<i32>>>)> {
+        let handles: Vec<_> = collectives
+            .into_iter()
+            .enumerate()
+            .map(|(rank, col)| {
+                std::thread::spawn(move || {
+                    col.barrier(rank).unwrap();
+                    let scalars = col
+                        .mean_scalars(rank, vec![rank as f64, 0.1 * rank as f64])
+                        .unwrap();
+                    let tokens = col
+                        .gather_tokens(rank, vec![vec![rank as i32; rank + 1]])
+                        .unwrap();
+                    col.barrier(rank).unwrap();
+                    (scalars, tokens)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    };
+
+    let a = run_group((0..world).map(|_| inproc.clone()).collect());
+    let b = run_group(tcp);
+    for (rank, ((sa, ta), (sb, tb))) in a.iter().zip(&b).enumerate() {
+        let sa_bits: Vec<u64> = sa.iter().map(|f| f.to_bits()).collect();
+        let sb_bits: Vec<u64> = sb.iter().map(|f| f.to_bits()).collect();
+        assert_eq!(sa_bits, sb_bits, "rank {rank} scalars diverged");
+        assert_eq!(ta, tb, "rank {rank} tokens diverged");
+    }
+    drop(host);
+}
+
+#[test]
+fn backend_world_size_is_consistent() {
+    let server = RendezvousHost::serve(5);
+    assert_eq!(server.service().world_size(), 5);
+    let backend = RpcCollective::new(InProcTransport::new(server), 5);
+    assert_eq!(backend.world_size(), 5);
+    assert_eq!(Collective::with_backend(Arc::new(backend)).world_size(), 5);
+}

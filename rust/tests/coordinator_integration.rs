@@ -16,8 +16,16 @@ use gcore::reward::{RewardKind, Rewarder, VerdictMode};
 use gcore::runtime::{init_policy, Engine};
 use gcore::util::rng::Rng;
 
-fn engine() -> Arc<Engine> {
-    Arc::new(Engine::load("tiny").expect("artifacts/tiny missing — run `make artifacts`"))
+/// None (⇒ the test self-skips) when the tiny artifact set isn't built or
+/// this build has no PJRT backend (`pjrt` feature off).
+fn engine() -> Option<Arc<Engine>> {
+    match Engine::try_load("tiny") {
+        Some(e) => Some(Arc::new(e)),
+        None => {
+            eprintln!("skipping: artifacts/tiny not built or pjrt backend unavailable");
+            None
+        }
+    }
 }
 
 fn tiny_cfg() -> RunConfig {
@@ -35,7 +43,7 @@ fn tiny_cfg() -> RunConfig {
 
 #[test]
 fn generation_respects_artifact_contract() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let dims = e.manifest().dims.clone();
     let params = init_policy(&e, 0).unwrap();
     let mut gen = TaskGen::new(vec![TaskKind::Add], 1);
@@ -73,7 +81,7 @@ fn generation_respects_artifact_contract() {
 
 #[test]
 fn greedy_generation_is_deterministic() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let dims = e.manifest().dims.clone();
     let params = init_policy(&e, 3).unwrap();
     let mut gen = TaskGen::new(vec![TaskKind::Copy], 4);
@@ -90,7 +98,7 @@ fn greedy_generation_is_deterministic() {
 
 #[test]
 fn ground_truth_rewarder_scores_correctness() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let dims = e.manifest().dims.clone();
     let mut gen = TaskGen::new(vec![TaskKind::Add], 5);
     let tasks = gen.sample_n(dims.batch);
@@ -116,7 +124,7 @@ fn ground_truth_rewarder_scores_correctness() {
 
 #[test]
 fn bt_pretraining_fits_preferences() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let (params, rep) =
         pretrain::train_bt(&e, vec![TaskKind::Copy, TaskKind::Rev], 60, 2e-3, 7).unwrap();
     assert_eq!(params.num_elements(), e.manifest().scalar_param_count);
@@ -130,7 +138,7 @@ fn bt_pretraining_fits_preferences() {
 
 #[test]
 fn verifier_pretraining_beats_chance() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let (params, rep) =
         pretrain::train_verifier(&e, vec![TaskKind::Copy], 300, 3e-3, 11).unwrap();
     assert_eq!(params.num_elements(), e.manifest().param_count);
@@ -143,6 +151,7 @@ fn verifier_pretraining_beats_chance() {
 
 #[test]
 fn rlhf_single_controller_short_run() {
+    let Some(_e) = engine() else { return };
     let cfg = tiny_cfg();
     let report = launch::run_training(&cfg).unwrap();
     assert_eq!(report.steps.len(), cfg.steps);
@@ -162,6 +171,7 @@ fn rlhf_single_controller_short_run() {
 fn rlhf_two_parallel_controllers_agree_with_collective() {
     // world=2: gradients all-reduce; stats are identical across ranks by
     // construction (mean_scalars) — the run must simply succeed and train.
+    let Some(_e) = engine() else { return };
     let cfg = RunConfig { world: 2, steps: 2, sft_steps: 2, ..tiny_cfg() };
     let report = launch::run_training(&cfg).unwrap();
     assert_eq!(report.steps.len(), 2);
@@ -170,6 +180,7 @@ fn rlhf_two_parallel_controllers_agree_with_collective() {
 
 #[test]
 fn dynamic_sampling_loops_locally() {
+    let Some(_e) = engine() else { return };
     let cfg = RunConfig {
         dynamic_sampling: true,
         max_resample_rounds: 3,
@@ -185,7 +196,7 @@ fn dynamic_sampling_loops_locally() {
 
 #[test]
 fn generative_reward_path_runs() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let cfg = RunConfig {
         reward: RewardKind::Generative,
         verdict_mode: VerdictMode::Logit,
@@ -207,7 +218,7 @@ fn generative_reward_path_runs() {
 
 #[test]
 fn regex_verdict_mode_runs() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let dims = e.manifest().dims.clone();
     let (params, _) = pretrain::train_verifier(&e, vec![TaskKind::Add], 10, 2e-3, 13).unwrap();
     let mut gen = TaskGen::new(vec![TaskKind::Add], 14);

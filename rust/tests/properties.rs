@@ -233,6 +233,125 @@ fn json_fuzz_no_panics_and_value_roundtrip() {
 }
 
 #[test]
+fn rpc_wire_frames_roundtrip_exactly() {
+    use gcore::rpc::wire::{GatherFrame, GatherReply, PollFrame, Request, Response, Status};
+    fn rand_bytes(rng: &mut Rng, max: usize) -> Vec<u8> {
+        (0..rng.below(max)).map(|_| rng.below(256) as u8).collect()
+    }
+    prop::check("wire-roundtrip", |rng| {
+        let req = Request {
+            id: rng.next_u64(),
+            method: format!("m{}.{}", rng.below(100), rng.below(100)),
+            payload: rand_bytes(rng, 64),
+        };
+        prop_assert!(
+            Request::decode(&req.encode()).map_err(|e| e.to_string())? == req,
+            "request roundtrip"
+        );
+        let resp = Response {
+            id: rng.next_u64(),
+            status: [Status::Ok, Status::Err, Status::Cleaned][rng.below(3)],
+            payload: rand_bytes(rng, 64),
+        };
+        prop_assert!(
+            Response::decode(&resp.encode()).map_err(|e| e.to_string())? == resp,
+            "response roundtrip"
+        );
+        let frame = GatherFrame {
+            seq: rng.next_u64(),
+            rank: rng.below(64) as u32,
+            world: rng.below(64) as u32,
+            tag: ["params", "scalars", "tokens", "barrier"][rng.below(4)].into(),
+            payload: rand_bytes(rng, 128),
+        };
+        let enc = frame.encode();
+        prop_assert!(
+            GatherFrame::decode(&enc).map_err(|e| e.to_string())? == frame,
+            "gather frame roundtrip"
+        );
+        // truncation must error, never panic
+        prop_assert!(
+            GatherFrame::decode(&enc[..enc.len() - 1 - rng.below(enc.len() - 1)]).is_err(),
+            "truncated gather frame must be rejected"
+        );
+        let poll = PollFrame { seq: rng.next_u64(), rank: rng.below(64) as u32 };
+        prop_assert!(
+            PollFrame::decode(&poll.encode()).map_err(|e| e.to_string())? == poll,
+            "poll frame roundtrip"
+        );
+        let reply = if rng.bool(0.3) {
+            GatherReply::Pending
+        } else {
+            GatherReply::Ready((0..rng.below(5)).map(|_| rand_bytes(rng, 48)).collect())
+        };
+        prop_assert!(
+            GatherReply::decode(&reply.encode()).map_err(|e| e.to_string())? == reply,
+            "gather reply roundtrip"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn codec_vectors_roundtrip_bit_exact() {
+    use gcore::runtime::{Tensor, TensorData};
+    use gcore::util::codec::{Reader, Writer};
+    prop::check("codec-vec-roundtrip", |rng| {
+        // f64 bit patterns, including NaNs/infs/subnormals from raw bits
+        let f64s: Vec<f64> = (0..rng.below(24)).map(|_| f64::from_bits(rng.next_u64())).collect();
+        let i32s: Vec<i32> = (0..rng.below(24)).map(|_| rng.next_u64() as i32).collect();
+        let rows: Vec<Vec<i32>> = (0..rng.below(5))
+            .map(|_| (0..rng.below(12)).map(|_| rng.next_u64() as i32).collect())
+            .collect();
+        let tensors: Vec<Tensor> = (0..rng.below(4))
+            .map(|_| {
+                let n = rng.below(16);
+                match rng.below(3) {
+                    0 => Tensor::f32(
+                        vec![n],
+                        (0..n).map(|_| f32::from_bits(rng.next_u64() as u32)).collect(),
+                    ),
+                    1 => Tensor::i32(vec![n], (0..n).map(|_| rng.next_u64() as i32).collect()),
+                    _ => Tensor::u32(vec![n], (0..n).map(|_| rng.next_u64() as u32).collect()),
+                }
+            })
+            .collect();
+
+        let mut w = Writer::new();
+        w.f64s(&f64s);
+        w.i32s(&i32s);
+        w.token_rows(&rows);
+        w.tensors(&tensors);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+
+        let f_back = r.f64s().map_err(|e| e.to_string())?;
+        prop_assert!(f_back.len() == f64s.len(), "f64 length");
+        for (a, b) in f_back.iter().zip(&f64s) {
+            prop_assert!(a.to_bits() == b.to_bits(), "f64 bits {a} vs {b}");
+        }
+        prop_assert!(r.i32s().map_err(|e| e.to_string())? == i32s, "i32s");
+        prop_assert!(r.token_rows().map_err(|e| e.to_string())? == rows, "token rows");
+        let t_back = r.tensors().map_err(|e| e.to_string())?;
+        prop_assert!(t_back.len() == tensors.len(), "tensor count");
+        for (a, b) in t_back.iter().zip(&tensors) {
+            prop_assert!(a.shape == b.shape, "shape");
+            let same = match (&a.data, &b.data) {
+                (TensorData::F32(x), TensorData::F32(y)) => {
+                    x.iter().map(|v| v.to_bits()).eq(y.iter().map(|v| v.to_bits()))
+                }
+                (TensorData::I32(x), TensorData::I32(y)) => x == y,
+                (TensorData::U32(x), TensorData::U32(y)) => x == y,
+                _ => false,
+            };
+            prop_assert!(same, "tensor payload must roundtrip bit-exactly");
+        }
+        prop_assert!(r.expect_end().is_ok(), "no trailing bytes");
+        Ok(())
+    });
+}
+
+#[test]
 fn codec_fuzz_reader_never_panics() {
     use gcore::util::codec::Reader;
     prop::check("codec-fuzz", |rng| {

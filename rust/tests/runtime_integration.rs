@@ -4,8 +4,14 @@
 
 use gcore::runtime::{init_policy, init_scalar, Engine, ParamSet, Tensor, TrainState};
 
-fn engine() -> Engine {
-    Engine::load("tiny").expect("artifacts/tiny missing — run `make artifacts`")
+/// None (⇒ the test self-skips) when the tiny artifact set isn't built or
+/// this build has no PJRT backend (`pjrt` feature off).
+fn engine() -> Option<Engine> {
+    let e = Engine::try_load("tiny");
+    if e.is_none() {
+        eprintln!("skipping: artifacts/tiny not built or pjrt backend unavailable");
+    }
+    e
 }
 
 fn dims(e: &Engine) -> (usize, usize, usize, usize) {
@@ -23,7 +29,7 @@ fn fixed_tokens(b: usize, s: usize) -> Tensor {
 
 #[test]
 fn init_is_deterministic_and_sized() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let p1 = init_policy(&e, 42).unwrap();
     let p2 = init_policy(&e, 42).unwrap();
     assert_eq!(p1, p2);
@@ -36,7 +42,7 @@ fn init_is_deterministic_and_sized() {
 
 #[test]
 fn fwd_logits_shape_and_finite() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let (b, s, _, v) = dims(&e);
     let params = init_policy(&e, 0).unwrap();
     let mut inputs = params.tensors.clone();
@@ -49,7 +55,7 @@ fn fwd_logits_shape_and_finite() {
 
 #[test]
 fn logprob_is_nonpositive_with_zero_first_column() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let (b, s, _, _) = dims(&e);
     let params = init_policy(&e, 0).unwrap();
     let mut inputs = params.tensors.clone();
@@ -67,7 +73,7 @@ fn logprob_is_nonpositive_with_zero_first_column() {
 fn prefill_decode_matches_full_forward() {
     // The generation-engine contract: KV-cached decode must reproduce the
     // full forward logits position by position.
-    let e = engine();
+    let Some(e) = engine() else { return };
     let (b, s, p, v) = dims(&e);
     let params = init_policy(&e, 7).unwrap();
     let tokens = fixed_tokens(b, s);
@@ -124,8 +130,25 @@ fn prefill_decode_matches_full_forward() {
 }
 
 #[test]
+fn fwd_logits_is_bitwise_deterministic() {
+    // Repeated executions of the same artifact on the same inputs must be
+    // bit-identical — the property the multi-process SPMD launch relies on
+    // (every worker re-derives identical state from the shared seed).
+    let Some(e) = engine() else { return };
+    let (b, s, _, _) = dims(&e);
+    let params = init_policy(&e, 11).unwrap();
+    let mut inputs = params.tensors.clone();
+    inputs.push(fixed_tokens(b, s));
+    let a = e.run("fwd_logits", &inputs).unwrap().remove(0);
+    let c = e.run("fwd_logits", &inputs).unwrap().remove(0);
+    let ab: Vec<u32> = a.as_f32().unwrap().iter().map(|x| x.to_bits()).collect();
+    let cb: Vec<u32> = c.as_f32().unwrap().iter().map(|x| x.to_bits()).collect();
+    assert_eq!(ab, cb, "forward pass must be bitwise deterministic");
+}
+
+#[test]
 fn train_step_reduces_loss_and_updates_params() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let (b, s, _, _) = dims(&e);
     let manifest = e.manifest().clone();
     let params = init_policy(&e, 1).unwrap();
@@ -179,7 +202,7 @@ fn train_step_reduces_loss_and_updates_params() {
 fn policy_grad_plus_adam_equals_fused_train_step() {
     // The multi-controller path (grad → reduce → adam) must match the fused
     // single-controller train_step artifact.
-    let e = engine();
+    let Some(e) = engine() else { return };
     let (b, s, _, _) = dims(&e);
     let manifest = e.manifest().clone();
     let params = init_policy(&e, 3).unwrap();
@@ -237,7 +260,7 @@ fn policy_grad_plus_adam_equals_fused_train_step() {
 
 #[test]
 fn reward_score_gathers_last_index() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let (b, s, _, _) = dims(&e);
     let rm = init_scalar(&e, 5).unwrap();
     let tokens = fixed_tokens(b, s);
@@ -260,7 +283,7 @@ fn reward_score_gathers_last_index() {
 
 #[test]
 fn bt_grad_learns_preference() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let (b, s, _, _) = dims(&e);
     let manifest = e.manifest().clone();
     let chosen = fixed_tokens(b, s);
@@ -297,7 +320,7 @@ fn bt_grad_learns_preference() {
 
 #[test]
 fn attn_micro_runs() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let d = e.manifest().dims.clone();
     let (b, h, s, dh) = (d.batch, d.n_heads, d.max_seq, d.d_head());
     let n = b * h * s * dh;
@@ -317,7 +340,7 @@ fn attn_micro_runs() {
 
 #[test]
 fn arity_validation_errors_are_actionable() {
-    let e = engine();
+    let Some(e) = engine() else { return };
     let err = e.run("fwd_logits", &[Tensor::scalar_f32(0.0)]).unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("fwd_logits") && msg.contains("expects"), "{msg}");
