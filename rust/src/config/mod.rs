@@ -11,12 +11,15 @@ use crate::reward::{RewardKind, VerdictMode};
 use crate::util::json::Json;
 
 /// How the controller group coordinates (see coordinator::collective):
-/// in-proc condvar rendezvous between threads, or RPC rounds against a
-/// rank-0 rendezvous service over TCP (also what `train-dist` workers use).
+/// in-proc condvar rendezvous between threads, RPC rounds against a rank-0
+/// rendezvous service over TCP, or chunked streaming ring collectives
+/// (peer-hosted RPC services, O(payload) per rank — no rank-0 bottleneck).
+/// `train-dist` workers honour the same choice.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CollectiveMode {
     InProc,
     Tcp,
+    Ring,
 }
 
 impl CollectiveMode {
@@ -24,7 +27,8 @@ impl CollectiveMode {
         Ok(match s {
             "inproc" => CollectiveMode::InProc,
             "tcp" => CollectiveMode::Tcp,
-            other => bail!("unknown collective mode '{other}' (inproc|tcp)"),
+            "ring" => CollectiveMode::Ring,
+            other => bail!("unknown collective mode '{other}' (inproc|tcp|ring)"),
         })
     }
 
@@ -32,6 +36,7 @@ impl CollectiveMode {
         match self {
             CollectiveMode::InProc => "inproc",
             CollectiveMode::Tcp => "tcp",
+            CollectiveMode::Ring => "ring",
         }
     }
 }
@@ -71,10 +76,14 @@ pub struct RunConfig {
     pub checkpoint_every: usize,
     pub tasks: Vec<String>,
     // -- distributed launch ---------------------------------------------------
-    /// collective transport for `gcore train` (train-dist always uses tcp)
+    /// collective transport for `gcore train` / `gcore train-dist`
     pub collective: CollectiveMode,
     /// rendezvous-host port for multi-process launches (0 = ephemeral)
     pub coordinator_port: u16,
+    /// bytes per streamed chunk for the ring collective (`--collective ring`)
+    pub ring_chunk_bytes: usize,
+    /// bound on the RPC server's cleanup-tombstone set (ids; oldest evicted)
+    pub rpc_tombstone_capacity: usize,
 }
 
 impl Default for RunConfig {
@@ -104,6 +113,8 @@ impl Default for RunConfig {
             tasks: vec!["add".into(), "max".into(), "copy".into()],
             collective: CollectiveMode::InProc,
             coordinator_port: 0,
+            ring_chunk_bytes: 256 * 1024,
+            rpc_tombstone_capacity: crate::rpc::server::DEFAULT_TOMBSTONE_CAPACITY,
         }
     }
 }
@@ -177,6 +188,10 @@ impl RunConfig {
                     }
                     cfg.coordinator_port = p as u16
                 }
+                "ring_chunk_bytes" => cfg.ring_chunk_bytes = req_usize(val, key)?,
+                "rpc_tombstone_capacity" => {
+                    cfg.rpc_tombstone_capacity = req_usize(val, key)?
+                }
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -247,6 +262,11 @@ impl RunConfig {
         );
         put("collective", Json::Str(self.collective.name().into()));
         put("coordinator_port", Json::Num(self.coordinator_port as f64));
+        put("ring_chunk_bytes", Json::Num(self.ring_chunk_bytes as f64));
+        put(
+            "rpc_tombstone_capacity",
+            Json::Num(self.rpc_tombstone_capacity as f64),
+        );
         Json::Obj(m)
     }
 
@@ -259,6 +279,12 @@ impl RunConfig {
         }
         if self.tasks.is_empty() {
             bail!("at least one task kind required");
+        }
+        if self.ring_chunk_bytes < 16 {
+            bail!("ring_chunk_bytes must be >= 16");
+        }
+        if self.rpc_tombstone_capacity == 0 {
+            bail!("rpc_tombstone_capacity must be >= 1");
         }
         Ok(())
     }
@@ -372,11 +398,28 @@ mod tests {
         let cfg = RunConfig::from_json(&j).unwrap();
         assert_eq!(cfg.collective, CollectiveMode::Tcp);
         assert_eq!(cfg.coordinator_port, 29500);
+        let j = Json::parse(r#"{"collective":"ring","ring_chunk_bytes":4096}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.collective, CollectiveMode::Ring);
+        assert_eq!(cfg.ring_chunk_bytes, 4096);
         for bad in [
             r#"{"collective":"carrier-pigeon"}"#,
             r#"{"coordinator_port":99999}"#,
+            r#"{"ring_chunk_bytes":4}"#,
+            r#"{"rpc_tombstone_capacity":0}"#,
         ] {
             assert!(RunConfig::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn ring_and_tombstone_knobs_roundtrip() {
+        let cfg = RunConfig {
+            collective: CollectiveMode::Ring,
+            ring_chunk_bytes: 64 * 1024,
+            rpc_tombstone_capacity: 1024,
+            ..RunConfig::default()
+        };
+        assert_eq!(RunConfig::from_json(&cfg.to_json()).unwrap(), cfg);
     }
 }

@@ -4,21 +4,27 @@
 //!
 //! Two layers:
 //!
-//! * [`CollectiveBackend`] — the byte-level all-gather every collective is
-//!   built on: `exchange(rank, tag, bytes)` blocks until all ranks of the
-//!   group have contributed, then returns all payloads in rank order.
+//! * [`CollectiveBackend`] — the byte-level collectives everything is built
+//!   on: `exchange(rank, tag, bytes)` blocks until all ranks of the group
+//!   have contributed, then returns all payloads in rank order (all-gather);
+//!   `all_reduce(rank, tag, bytes, op)` returns the rank-order [`ReduceOp`]
+//!   fold of every rank's payload.  The default `all_reduce` is exchange +
+//!   local fold; backends with a cheaper data path (the ring) override it.
 //!   Implementations: [`InProcBackend`] (a `Condvar` rendezvous between
-//!   controller threads, below) and
+//!   controller threads, below),
 //!   [`crate::coordinator::rpc_collective::RpcCollective`] (request/response
 //!   rounds against a rank-0 rendezvous service over the exactly-once RPC
-//!   stack — `InProcTransport`, TCP, or the fault-injecting wrapper), which
-//!   is what multi-process launches (`gcore train-dist`) use.
+//!   stack — `InProcTransport`, TCP, or the fault-injecting wrapper), and
+//!   [`crate::coordinator::ring_collective::RingCollective`] (chunked
+//!   streaming frames around a ring of peer-hosted RPC services — O(payload)
+//!   bytes per rank, independent of world size).
 //! * [`Collective`] — the typed facade the `Controller` calls: all-reduce of
 //!   `ParamSet` gradients, mean of scalar metric vectors, token-row gather,
-//!   barrier.  Values are serialized with `util::codec` into length-prefixed
-//!   frames, so every backend moves the exact same bytes and results are
-//!   bit-identical across backends (asserted by
-//!   `tests/collective_properties.rs`).
+//!   barrier.  Reduced values travel as flat element-aligned buffers and are
+//!   folded in strict rank order — (…(v₀ ⊕ v₁) ⊕ v₂…) — on EVERY backend,
+//!   so results are bit-identical across backends whether the fold happens
+//!   locally (exchange-based backends) or distributed around the ring
+//!   (asserted by `tests/collective_properties.rs`).
 //!
 //! `Rendezvous<T>` remains the in-process primitive: `exchange(rank, value)`
 //! blocks until every controller of the group has contributed, then returns
@@ -29,6 +35,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use anyhow::{bail, Result};
 
 use crate::runtime::params::ParamSet;
+use crate::runtime::tensor::Tensor;
 use crate::util::codec::{Reader, Writer};
 
 struct Slots<T> {
@@ -112,7 +119,79 @@ impl<T: Clone + Send> Rendezvous<T> {
 // Backend abstraction
 // ---------------------------------------------------------------------------
 
-/// The byte-level all-gather a controller group coordinates through.
+/// Elementwise reduction over flat little-endian element buffers.
+///
+/// The op is defined at the byte level so backends can stream and combine
+/// bounded chunks without decoding whole payloads; chunk boundaries must be
+/// multiples of [`ReduceOp::elem_bytes`].  Combination order is pinned to
+/// rank order by every caller, so f32/f64 non-associativity never makes
+/// backends diverge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    SumF32,
+    SumF64,
+}
+
+impl ReduceOp {
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            ReduceOp::SumF32 => 4,
+            ReduceOp::SumF64 => 8,
+        }
+    }
+
+    /// `acc ⊕= incoming`, elementwise.  Both buffers must be the same length
+    /// and a multiple of the element size.
+    pub fn combine(self, acc: &mut [u8], incoming: &[u8]) -> Result<()> {
+        if acc.len() != incoming.len() {
+            bail!(
+                "reduce operand length mismatch across ranks: {} vs {} bytes",
+                acc.len(),
+                incoming.len()
+            );
+        }
+        if acc.len() % self.elem_bytes() != 0 {
+            bail!(
+                "reduce operand {} bytes is not a multiple of the {}-byte element",
+                acc.len(),
+                self.elem_bytes()
+            );
+        }
+        match self {
+            ReduceOp::SumF32 => {
+                for (a, b) in acc.chunks_exact_mut(4).zip(incoming.chunks_exact(4)) {
+                    let s = f32::from_le_bytes([a[0], a[1], a[2], a[3]])
+                        + f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+                    a.copy_from_slice(&s.to_le_bytes());
+                }
+            }
+            ReduceOp::SumF64 => {
+                for (a, b) in acc.chunks_exact_mut(8).zip(incoming.chunks_exact(8)) {
+                    let s = f64::from_le_bytes([a[0], a[1], a[2], a[3], a[4], a[5], a[6], a[7]])
+                        + f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]);
+                    a.copy_from_slice(&s.to_le_bytes());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Rank-order fold — (…(parts[0] ⊕ parts[1]) ⊕ parts[2]…) — the
+    /// reference reduction every backend must reproduce bit-for-bit.
+    pub fn fold(self, parts: Vec<Vec<u8>>) -> Result<Vec<u8>> {
+        let mut it = parts.into_iter();
+        let mut acc = match it.next() {
+            Some(p) => p,
+            None => bail!("reduce over an empty group"),
+        };
+        for p in it {
+            self.combine(&mut acc, &p)?;
+        }
+        Ok(acc)
+    }
+}
+
+/// The byte-level collectives a controller group coordinates through.
 ///
 /// Ranks call collectives in identical (SPMD lockstep) order; `tag` names
 /// the logical channel so lockstep violations surface as hard errors
@@ -123,6 +202,21 @@ pub trait CollectiveBackend: Send + Sync {
     /// Contribute `payload` for this rank's next round; blocks until every
     /// rank has contributed and returns all payloads in rank order.
     fn exchange(&self, rank: usize, tag: &str, payload: Vec<u8>) -> Result<Vec<Vec<u8>>>;
+
+    /// Reduce every rank's `payload` with `op` in rank order and return the
+    /// reduced buffer to all ranks.  The default routes through `exchange`
+    /// (all-gather, then a local fold); backends that can move fewer bytes
+    /// (the ring's reduce-scatter/broadcast streams) override it — the
+    /// result must stay bit-identical to the default.
+    fn all_reduce(
+        &self,
+        rank: usize,
+        tag: &str,
+        payload: Vec<u8>,
+        op: ReduceOp,
+    ) -> Result<Vec<u8>> {
+        op.fold(self.exchange(rank, tag, payload)?)
+    }
 }
 
 /// In-process backend: controller threads meeting on a `Rendezvous`.
@@ -161,7 +255,9 @@ impl CollectiveBackend for InProcBackend {
 // Typed facade
 // ---------------------------------------------------------------------------
 
-/// Serialize a parameter/gradient set into one length-prefixed frame.
+/// Serialize a parameter/gradient set into one length-prefixed frame
+/// (self-describing: shapes + dtypes travel with the data — checkpoints,
+/// weight broadcast).
 pub fn encode_param_set(set: &ParamSet) -> Vec<u8> {
     let mut w = Writer::new();
     w.tensors(&set.tensors);
@@ -172,6 +268,47 @@ pub fn decode_param_set(bytes: &[u8]) -> Result<ParamSet> {
     let mut r = Reader::new(bytes);
     let tensors = r.tensors()?;
     r.expect_end()?;
+    Ok(ParamSet::new(tensors))
+}
+
+/// Flatten a gradient set into raw little-endian f32 bytes, no headers.
+/// Tensor shapes are manifest-pinned and identical on every rank (SPMD), so
+/// the reduce hot path ships only element data — and the buffer chunks
+/// cleanly on element boundaries for streaming backends.
+pub fn encode_param_flat(set: &ParamSet) -> Result<Vec<u8>> {
+    let mut buf = Vec::with_capacity(set.num_elements() * 4);
+    for t in &set.tensors {
+        for x in t.as_f32()? {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    Ok(buf)
+}
+
+/// Rebuild a set from flat f32 bytes using `like`'s shapes (the local
+/// operand — all ranks share the same manifest-pinned shapes).
+pub fn decode_param_flat(bytes: &[u8], like: &ParamSet) -> Result<ParamSet> {
+    if bytes.len() != like.num_elements() * 4 {
+        bail!(
+            "flat param payload is {} bytes, local shapes need {}",
+            bytes.len(),
+            like.num_elements() * 4
+        );
+    }
+    let mut pos = 0usize;
+    let tensors = like
+        .tensors
+        .iter()
+        .map(|t| {
+            let n = t.len();
+            let vals: Vec<f32> = bytes[pos..pos + 4 * n]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            pos += 4 * n;
+            Tensor::f32(t.shape.clone(), vals)
+        })
+        .collect();
     Ok(ParamSet::new(tensors))
 }
 
@@ -197,36 +334,41 @@ impl Collective {
         self.backend.world_size()
     }
 
-    /// Mean-reduce a parameter/gradient set across controllers.
+    /// Mean-reduce a parameter/gradient set across controllers.  The sum is
+    /// folded in strict rank order on every backend, then scaled by 1/world
+    /// locally — bit-identical to `ParamSet::average` over the rank-ordered
+    /// operands (the PR 1 invariant).
     pub fn all_reduce_mean(&self, rank: usize, set: &ParamSet) -> Result<ParamSet> {
-        let parts = self.backend.exchange(rank, "params", encode_param_set(set))?;
-        let sets = parts
-            .iter()
-            .map(|b| decode_param_set(b))
-            .collect::<Result<Vec<_>>>()?;
-        let refs: Vec<&ParamSet> = sets.iter().collect();
-        ParamSet::average(&refs)
+        let flat = encode_param_flat(set)?;
+        let summed = self
+            .backend
+            .all_reduce(rank, "params", flat, ReduceOp::SumF32)?;
+        let mut out = decode_param_flat(&summed, set)?;
+        let scale = 1.0 / self.world_size() as f32;
+        for t in &mut out.tensors {
+            t.scale(scale)?;
+        }
+        Ok(out)
     }
 
     /// Mean of per-rank scalar vectors (loss/metric aggregation).
     pub fn mean_scalars(&self, rank: usize, vals: Vec<f64>) -> Result<Vec<f64>> {
-        let mut w = Writer::new();
-        w.f64s(&vals);
-        let parts = self.backend.exchange(rank, "scalars", w.into_bytes())?;
-        let mut all = Vec::with_capacity(parts.len());
-        for b in &parts {
-            let mut r = Reader::new(b);
-            let v = r.f64s()?;
-            r.expect_end()?;
-            all.push(v);
+        let mut buf = Vec::with_capacity(vals.len() * 8);
+        for x in &vals {
+            buf.extend_from_slice(&x.to_le_bytes());
         }
-        let len = all[0].len();
-        if all.iter().any(|v| v.len() != len) {
+        let summed = self
+            .backend
+            .all_reduce(rank, "scalars", buf, ReduceOp::SumF64)?;
+        if summed.len() != vals.len() * 8 {
             bail!("scalar vector length mismatch across ranks");
         }
-        let n = all.len() as f64;
-        Ok((0..len)
-            .map(|i| all.iter().map(|v| v[i]).sum::<f64>() / n)
+        let n = self.world_size() as f64;
+        Ok(summed
+            .chunks_exact(8)
+            .map(|c| {
+                f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) / n
+            })
             .collect())
     }
 
@@ -350,6 +492,47 @@ mod tests {
         ]);
         assert_eq!(decode_param_set(&encode_param_set(&set)).unwrap(), set);
         assert!(decode_param_set(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn reduce_op_folds_in_rank_order() {
+        // f32 sum
+        let parts: Vec<Vec<u8>> = [[1.0f32, 2.0], [3.0, 4.0], [5.0, 6.0]]
+            .iter()
+            .map(|vs| vs.iter().flat_map(|v| v.to_le_bytes()).collect())
+            .collect();
+        let out = ReduceOp::SumF32.fold(parts).unwrap();
+        assert_eq!(
+            out,
+            [9.0f32, 12.0].iter().flat_map(|v| v.to_le_bytes()).collect::<Vec<u8>>()
+        );
+        // f64 sum
+        let parts64: Vec<Vec<u8>> = [[0.5f64], [0.25]]
+            .iter()
+            .map(|vs| vs.iter().flat_map(|v| v.to_le_bytes()).collect())
+            .collect();
+        let out64 = ReduceOp::SumF64.fold(parts64).unwrap();
+        assert_eq!(out64, 0.75f64.to_le_bytes().to_vec());
+        // errors: empty group, length mismatch, misaligned
+        assert!(ReduceOp::SumF32.fold(vec![]).is_err());
+        assert!(ReduceOp::SumF32.fold(vec![vec![0; 4], vec![0; 8]]).is_err());
+        assert!(ReduceOp::SumF64.fold(vec![vec![0; 4], vec![0; 4]]).is_err());
+    }
+
+    #[test]
+    fn param_flat_roundtrip_preserves_shapes_and_bits() {
+        let set = ParamSet::new(vec![
+            Tensor::f32(vec![2, 2], vec![1.0, -2.5, f32::MIN_POSITIVE, 4.0]),
+            Tensor::f32(vec![3], vec![-0.0, 7.0, 1e-30]),
+        ]);
+        let flat = encode_param_flat(&set).unwrap();
+        assert_eq!(flat.len(), set.num_elements() * 4);
+        assert_eq!(decode_param_flat(&flat, &set).unwrap(), set);
+        // wrong length rejected
+        assert!(decode_param_flat(&flat[..flat.len() - 4], &set).is_err());
+        // non-f32 tensors can't travel the reduce path
+        let ints = ParamSet::new(vec![Tensor::i32(vec![1], vec![3])]);
+        assert!(encode_param_flat(&ints).is_err());
     }
 
     #[test]

@@ -6,6 +6,9 @@
 //!   `CollectiveBackend` abstraction plus the in-proc rendezvous backend;
 //! * `rpc_collective` — the RPC-backed collective (rank-0 rendezvous
 //!   service + per-rank clients) multi-process launches coordinate through;
+//! * `ring_collective` — chunked streaming ring collectives over the same
+//!   exactly-once RPC stack: O(payload) bytes per rank, independent of
+//!   world size (no rank-0 bottleneck);
 //! * `generation` — the stage-1 generation engine (KV-cached sampling);
 //! * `sampling` — GRPO/GAE advantages + DAPO dynamic-sampling filter (§3.2);
 //! * `pretrain` — BT-reward and generative-verifier pre-training (§5);
@@ -15,12 +18,14 @@ pub mod collective;
 pub mod controller;
 pub mod generation;
 pub mod pretrain;
+pub mod ring_collective;
 pub mod rpc_collective;
 pub mod sampling;
 pub mod single;
 pub mod workflow;
 
-pub use collective::{Collective, CollectiveBackend, InProcBackend, Rendezvous};
-pub use rpc_collective::{RendezvousHost, RpcCollective};
+pub use collective::{Collective, CollectiveBackend, InProcBackend, ReduceOp, Rendezvous};
+pub use ring_collective::{RingCollective, RingInbox, RingPeer};
+pub use rpc_collective::{CollectiveStatus, RendezvousHost, RpcCollective};
 pub use controller::{Controller, RolloutBatch, StepStats};
 pub use generation::{generate, GenOutput, SamplerConfig};

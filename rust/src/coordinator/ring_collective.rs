@@ -1,0 +1,804 @@
+//! Ring collectives over the exactly-once RPC stack (paper §3.1 + §4.2):
+//! the third `CollectiveBackend`, built for controller-count scalability.
+//!
+//! The rendezvous backend funnels every payload through rank 0's
+//! `RendezvousHost` — O(world²) bytes per round on one process, exactly the
+//! single-controller bottleneck the paper's parallel-controller design
+//! exists to avoid.  Here every rank instead hosts a tiny [`RingPeer`]
+//! inbox service and streams bounded [`ChunkFrame`]s to its ring successor
+//! (`(rank + 1) % world`), so per-rank traffic is O(payload) **independent
+//! of world size** (measured in E8c):
+//!
+//! * `all_reduce` — a reduce sweep chains rank-order partial sums
+//!   0 → 1 → … → N-1 chunk by chunk; the last rank finalizes each chunk and
+//!   immediately streams it back around the ring (broadcast sweep).  Every
+//!   rank sends each chunk at most twice.  Because partials accumulate in
+//!   strict rank order — (…(v₀ ⊕ v₁) ⊕ v₂…) — the result is bit-identical
+//!   to the in-proc backend's local fold (the PR 1 invariant, asserted by
+//!   `tests/collective_properties.rs`).
+//! * `exchange` — classic ring all-gather: at step `t` a rank forwards the
+//!   payload it received at step `t-1`, so after world-1 steps every rank
+//!   holds all payloads (token gathers, barriers, bootstrap rounds).
+//!
+//! Chunks ride the retry-until-cached RPC protocol, so drops, duplicate
+//! deliveries and lost responses never double-insert a chunk (the peer's
+//! `RpcServer` result cache absorbs them).  Each ack carries the receiver's
+//! inbox backlog: reduce-stream senders HARD-wait past
+//! [`RingCollective::window`] chunks (polling `ring.backlog`), so the
+//! gradient-sized stream never buffers whole on a slow host; gather and
+//! broadcast sends use a soft pause instead — a hard wait there would close
+//! a blocking cycle around the ring, and those transients are bounded by
+//! one payload (the size of the result buffer the rank allocates anyway).
+//! Lockstep violations (tag mismatch) and
+//! dead peers (chunk-wait timeout) surface as typed
+//! [`CollectiveStatus`](crate::coordinator::rpc_collective::CollectiveStatus)
+//! failures, same as the rendezvous backend.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::collective::{CollectiveBackend, ReduceOp};
+use crate::coordinator::rpc_collective::CollectiveStatus;
+use crate::rpc::client::{RetryPolicy, RpcClient};
+use crate::rpc::server::{RpcServer, Service};
+use crate::rpc::transport::Transport;
+use crate::rpc::wire::{ChunkAck, ChunkFrame, PHASE_BCAST, PHASE_GATHER, PHASE_REDUCE};
+
+pub const METHOD_RING_OFFER: &str = "ring.offer";
+pub const METHOD_RING_BACKLOG: &str = "ring.backlog";
+
+/// Default chunk size for streamed payloads (multiple of every element size).
+pub const DEFAULT_CHUNK_BYTES: usize = 256 * 1024;
+
+/// Default backlog (in chunks) past which a sender throttles.
+pub const DEFAULT_WINDOW: usize = 16;
+
+/// A chunk parked in a peer's inbox until the compute thread consumes it.
+struct StoredChunk {
+    tag: String,
+    total: u32,
+    payload: Vec<u8>,
+}
+
+/// Inbox contents, guarded by one mutex so the retired-round watermark and
+/// the chunk map can never disagree (a check-then-insert race against
+/// `retire_through` would park a stale chunk forever).
+struct InboxState {
+    /// (round, phase, origin, chunk) → stored chunk
+    slots: HashMap<(u64, u8, u32, u32), StoredChunk>,
+    /// rounds below this watermark are locally complete: late/duplicate
+    /// chunks for them are acked but NOT (re-)inserted.  This keeps `offer`
+    /// idempotent even past the RPC server's tombstone horizon (a
+    /// re-delivered offer whose tombstone aged out re-executes the handler;
+    /// without the watermark the stale chunk would park forever and inflate
+    /// the backlog the credit window hard-waits on).
+    retired_below: u64,
+}
+
+/// The per-rank chunk inbox: predecessor streams in via [`RingPeer`]'s RPC
+/// handler, the rank's own compute thread blocks in [`RingInbox::take`].
+pub struct RingInbox {
+    state: Mutex<InboxState>,
+    cv: Condvar,
+}
+
+impl RingInbox {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Arc<RingInbox> {
+        Arc::new(RingInbox {
+            state: Mutex::new(InboxState { slots: HashMap::new(), retired_below: 0 }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Chunks currently buffered (0 once a round is fully consumed — test
+    /// hook and the backlog figure acked to senders).
+    pub fn open_chunks(&self) -> usize {
+        self.state.lock().unwrap().slots.len()
+    }
+
+    /// Mark every round up to and including `round` locally complete; their
+    /// stray chunks are dropped on arrival from now on (and purged if a
+    /// racing re-delivery slipped one in).  Rounds are strictly sequential
+    /// per rank, so the backend retires each round as it returns.
+    fn retire_through(&self, round: u64) {
+        let mut state = self.state.lock().unwrap();
+        if round + 1 > state.retired_below {
+            state.retired_below = round + 1;
+        }
+        let watermark = state.retired_below;
+        state.slots.retain(|key, _| key.0 >= watermark);
+    }
+
+    /// Park one delivered chunk.  Idempotent per key: the exactly-once RPC
+    /// layer dedupes live requests, the retired-round watermark drops
+    /// anything re-delivered after its round already completed, and a
+    /// re-insert of the same live frame is a no-op.
+    fn offer(&self, frame: ChunkFrame) -> Result<Vec<u8>> {
+        let mut state = self.state.lock().unwrap();
+        if frame.round >= state.retired_below {
+            state
+                .slots
+                .entry((frame.round, frame.phase, frame.origin, frame.chunk))
+                .or_insert_with(|| StoredChunk {
+                    tag: frame.tag,
+                    total: frame.total,
+                    payload: frame.payload,
+                });
+        }
+        let backlog = state.slots.len() as u32;
+        self.cv.notify_all();
+        Ok(ChunkAck { backlog }.encode())
+    }
+
+    /// Block until the chunk at `key` arrives (or `timeout` passes) and
+    /// remove it from the inbox.
+    fn take(&self, key: (u64, u8, u32, u32), timeout: Duration) -> Result<StoredChunk> {
+        let deadline = Instant::now() + timeout;
+        let mut state = self.state.lock().unwrap();
+        loop {
+            if let Some(chunk) = state.slots.remove(&key) {
+                return Ok(chunk);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!(
+                    "{} ring chunk (round {} phase {} origin {} chunk {}) timed out — \
+                     a peer is likely dead; failing fast (§4.2)",
+                    CollectiveStatus::RoundTimeout.marker(),
+                    key.0,
+                    key.1,
+                    key.2,
+                    key.3
+                );
+            }
+            let (guard, _) = self.cv.wait_timeout(state, deadline - now).unwrap();
+            state = guard;
+        }
+    }
+}
+
+/// The RPC service a rank exposes to its ring predecessor.
+pub struct RingPeer {
+    inbox: Arc<RingInbox>,
+}
+
+impl RingPeer {
+    pub fn new(inbox: Arc<RingInbox>) -> RingPeer {
+        RingPeer { inbox }
+    }
+
+    /// Convenience: the peer already wrapped in an `RpcServer`, ready for
+    /// `TcpRpcHost::spawn` or `InProcTransport::new`.
+    pub fn serve(inbox: Arc<RingInbox>) -> Arc<RpcServer<RingPeer>> {
+        Arc::new(RpcServer::new(RingPeer::new(inbox)))
+    }
+}
+
+impl Service for RingPeer {
+    fn handle(&self, method: &str, payload: &[u8]) -> Result<Vec<u8>> {
+        match method {
+            METHOD_RING_OFFER => self.inbox.offer(ChunkFrame::decode(payload)?),
+            // read-only backlog probe (sender-side flow control)
+            METHOD_RING_BACKLOG => {
+                Ok(ChunkAck { backlog: self.inbox.open_chunks() as u32 }.encode())
+            }
+            other => bail!("unknown ring method '{other}'"),
+        }
+    }
+}
+
+/// One rank's view of the ring: `CollectiveBackend` implemented as chunked
+/// streams to the successor's [`RingPeer`] over any exactly-once transport.
+pub struct RingCollective<T: Transport> {
+    rank: usize,
+    world: usize,
+    /// this rank's inbox (fed by the predecessor through our own server)
+    inbox: Arc<RingInbox>,
+    /// exactly-once client to the successor's inbox service
+    succ: RpcClient<T>,
+    next_seq: AtomicU64,
+    /// bytes per streamed chunk (rounded down to the reduce element size)
+    pub chunk_bytes: usize,
+    /// successor-backlog threshold past which sends throttle
+    pub window: usize,
+    /// throttle pause when the successor's inbox is over `window`
+    pub poll_interval: Duration,
+    /// give up waiting on a chunk after this long (fail-fast, §4.2)
+    pub round_timeout: Duration,
+}
+
+impl<T: Transport> RingCollective<T> {
+    pub fn new(
+        rank: usize,
+        world: usize,
+        inbox: Arc<RingInbox>,
+        successor: T,
+    ) -> RingCollective<T> {
+        assert!(world >= 1, "world must be >= 1");
+        assert!(rank < world, "rank {rank} out of range for world {world}");
+        let succ = RpcClient::new(successor).with_retry(RetryPolicy {
+            max_attempts: 64,
+            backoff: Duration::from_micros(50),
+        });
+        RingCollective {
+            rank,
+            world,
+            inbox,
+            succ,
+            next_seq: AtomicU64::new(0),
+            chunk_bytes: DEFAULT_CHUNK_BYTES,
+            window: DEFAULT_WINDOW,
+            poll_interval: Duration::from_micros(200),
+            round_timeout: Duration::from_secs(300),
+        }
+    }
+
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.succ.retry = retry;
+        self
+    }
+
+    pub fn with_chunk_bytes(mut self, chunk_bytes: usize) -> Self {
+        assert!(chunk_bytes >= 16, "chunk_bytes must be >= 16");
+        self.chunk_bytes = chunk_bytes;
+        self
+    }
+
+    pub fn with_window(mut self, window: usize) -> Self {
+        assert!(window >= 1, "window must be >= 1");
+        self.window = window;
+        self
+    }
+
+    pub fn with_round_timeout(mut self, timeout: Duration) -> Self {
+        self.round_timeout = timeout;
+        self
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn client(&self) -> &RpcClient<T> {
+        &self.succ
+    }
+
+    /// Ship one chunk to the successor, honouring the credit window.
+    ///
+    /// `wait_for_credit = true` (the REDUCE stream — the multi-GB gradient
+    /// path) polls the successor's backlog until it drops to `window`, hard-
+    /// bounding a slow rank's inbox.  This is deadlock-free ONLY for the
+    /// reduce sweep: its consumption chain terminates at the last rank,
+    /// whose broadcast sends never block.  Gather and broadcast sends pass
+    /// `false` (a single soft pause) — a hard wait there closes a cycle
+    /// around the ring, because those streams are consumed only after the
+    /// receiver finishes its own sends.
+    fn send_chunk(&self, frame: ChunkFrame, wait_for_credit: bool) -> Result<()> {
+        let round = frame.round;
+        let chunk = frame.chunk;
+        let reply = self
+            .succ
+            .call(METHOD_RING_OFFER, frame.encode())
+            .with_context(|| format!("streaming ring chunk {chunk} of round {round}"))?;
+        let mut backlog = ChunkAck::decode(&reply)?.backlog as usize;
+        if !wait_for_credit {
+            if backlog > self.window {
+                std::thread::sleep(self.poll_interval);
+            }
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        while backlog > self.window {
+            if t0.elapsed() > self.round_timeout {
+                bail!(
+                    "{} ring successor backlog stuck at {backlog} (> window {}) for \
+                     {:.0?} after chunk {chunk} of round {round} — peer is likely \
+                     wedged; failing fast (§4.2)",
+                    CollectiveStatus::RoundTimeout.marker(),
+                    self.window,
+                    self.round_timeout
+                );
+            }
+            std::thread::sleep(self.poll_interval);
+            let reply = self
+                .succ
+                .call(METHOD_RING_BACKLOG, Vec::new())
+                .with_context(|| format!("polling ring backlog in round {round}"))?;
+            backlog = ChunkAck::decode(&reply)?.backlog as usize;
+        }
+        Ok(())
+    }
+
+    /// Stream a whole payload to the successor as `total` bounded chunks.
+    fn send_payload(
+        &self,
+        round: u64,
+        phase: u8,
+        origin: u32,
+        tag: &str,
+        bytes: &[u8],
+        chunk_bytes: usize,
+    ) -> Result<()> {
+        let total = crate::util::codec::chunk_count(bytes.len(), chunk_bytes) as u32;
+        for c in 0..total {
+            let (lo, hi) = crate::util::codec::chunk_range(bytes.len(), chunk_bytes, c as usize);
+            self.send_chunk(
+                ChunkFrame {
+                    round,
+                    phase,
+                    origin,
+                    chunk: c,
+                    total,
+                    tag: tag.to_string(),
+                    payload: bytes[lo..hi].to_vec(),
+                },
+                false, // gather streams soft-throttle (see send_chunk docs)
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Take the expected chunk from our inbox, enforcing lockstep: a tag
+    /// mismatch means the predecessor is in a different collective.
+    fn recv_chunk(
+        &self,
+        round: u64,
+        phase: u8,
+        origin: u32,
+        chunk: u32,
+        tag: &str,
+        deadline: Instant,
+    ) -> Result<StoredChunk> {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        let stored = self.inbox.take((round, phase, origin, chunk), remaining)?;
+        if stored.tag != tag {
+            bail!(
+                "{} collective lockstep violation at ring round {round}: rank {} is in \
+                 '{tag}' while its predecessor streamed '{}'",
+                CollectiveStatus::Poisoned.marker(),
+                self.rank,
+                stored.tag
+            );
+        }
+        Ok(stored)
+    }
+
+    /// Receive one whole payload (all chunks of `origin`) from the
+    /// predecessor's stream.
+    fn recv_payload(
+        &self,
+        round: u64,
+        phase: u8,
+        origin: u32,
+        tag: &str,
+        deadline: Instant,
+    ) -> Result<Vec<u8>> {
+        let first = self.recv_chunk(round, phase, origin, 0, tag, deadline)?;
+        let total = first.total;
+        let mut buf = first.payload;
+        for c in 1..total {
+            let next = self.recv_chunk(round, phase, origin, c, tag, deadline)?;
+            if next.total != total {
+                bail!(
+                    "{} inconsistent chunk totals in ring round {round}: {} then {}",
+                    CollectiveStatus::ProtocolViolation.marker(),
+                    total,
+                    next.total
+                );
+            }
+            buf.extend_from_slice(&next.payload);
+        }
+        Ok(buf)
+    }
+}
+
+impl<T: Transport> CollectiveBackend for RingCollective<T> {
+    fn world_size(&self) -> usize {
+        self.world
+    }
+
+    /// Ring all-gather: after `world - 1` forwarding steps every rank holds
+    /// every origin's payload, in rank order.
+    fn exchange(&self, rank: usize, tag: &str, payload: Vec<u8>) -> Result<Vec<Vec<u8>>> {
+        debug_assert_eq!(rank, self.rank, "backend is bound to one rank");
+        let round = self.next_seq.fetch_add(1, Ordering::SeqCst);
+        if self.world == 1 {
+            self.inbox.retire_through(round);
+            return Ok(vec![payload]);
+        }
+        let deadline = Instant::now() + self.round_timeout;
+        let mut parts: Vec<Option<Vec<u8>>> = (0..self.world).map(|_| None).collect();
+        parts[self.rank] = Some(payload);
+        for step in 0..self.world - 1 {
+            // forward the origin received last step (own payload at step 0);
+            // borrow, don't clone — the chunker copies only chunk-sized slices
+            let send_origin = (self.rank + self.world - step) % self.world;
+            let bytes = parts[send_origin]
+                .as_deref()
+                .expect("forwarded payload must have been received");
+            let origin = send_origin as u32;
+            self.send_payload(round, PHASE_GATHER, origin, tag, bytes, self.chunk_bytes)?;
+            let recv_origin = (self.rank + self.world - step - 1) % self.world;
+            parts[recv_origin] =
+                Some(self.recv_payload(round, PHASE_GATHER, recv_origin as u32, tag, deadline)?);
+        }
+        self.inbox.retire_through(round);
+        Ok(parts
+            .into_iter()
+            .map(|p| p.expect("all origins gathered after world-1 steps"))
+            .collect())
+    }
+
+    /// Streaming ring all-reduce: rank-order partial sums flow 0 → … → N-1
+    /// chunk by chunk (reduce sweep); the last rank finalizes each chunk and
+    /// immediately streams it back around the ring (broadcast sweep).  Per
+    /// rank: at most 2 × payload sent, regardless of world size.
+    fn all_reduce(
+        &self,
+        rank: usize,
+        tag: &str,
+        payload: Vec<u8>,
+        op: ReduceOp,
+    ) -> Result<Vec<u8>> {
+        debug_assert_eq!(rank, self.rank, "backend is bound to one rank");
+        if self.world == 1 {
+            let round = self.next_seq.fetch_add(1, Ordering::SeqCst);
+            self.inbox.retire_through(round);
+            return Ok(payload);
+        }
+        if payload.len() % op.elem_bytes() != 0 {
+            bail!(
+                "reduce payload {} bytes is not a multiple of the {}-byte element",
+                payload.len(),
+                op.elem_bytes()
+            );
+        }
+        let round = self.next_seq.fetch_add(1, Ordering::SeqCst);
+        let deadline = Instant::now() + self.round_timeout;
+        // element-aligned chunks so combine() never splits a value
+        let cb = {
+            let aligned = self.chunk_bytes - self.chunk_bytes % op.elem_bytes();
+            aligned.max(op.elem_bytes())
+        };
+        let total = crate::util::codec::chunk_count(payload.len(), cb) as u32;
+        let last = self.world - 1;
+        let mut result = vec![0u8; payload.len()];
+
+        // reduce sweep; rank `last` starts the broadcast as chunks finalize
+        for c in 0..total {
+            let (lo, hi) = crate::util::codec::chunk_range(payload.len(), cb, c as usize);
+            let mut acc = payload[lo..hi].to_vec();
+            if self.rank > 0 {
+                let partial = self.recv_chunk(round, PHASE_REDUCE, 0, c, tag, deadline)?;
+                // rank-order accumulation: (v₀ ⊕ … ⊕ v_{rank-1}) ⊕ v_rank
+                let mut sum = partial.payload;
+                op.combine(&mut sum, &acc)?;
+                acc = sum;
+            }
+            if self.rank < last {
+                // hard credit window: bounds the successor's inbox on the
+                // gradient-sized stream (deadlock-free — see send_chunk)
+                self.send_chunk(
+                    ChunkFrame {
+                        round,
+                        phase: PHASE_REDUCE,
+                        origin: 0,
+                        chunk: c,
+                        total,
+                        tag: tag.to_string(),
+                        payload: acc,
+                    },
+                    true,
+                )?;
+            } else {
+                result[lo..hi].copy_from_slice(&acc);
+                self.send_chunk(
+                    ChunkFrame {
+                        round,
+                        phase: PHASE_BCAST,
+                        origin: 0,
+                        chunk: c,
+                        total,
+                        tag: tag.to_string(),
+                        payload: acc,
+                    },
+                    false,
+                )?;
+            }
+        }
+
+        // broadcast sweep: last → 0 → 1 → … → world-2
+        if self.rank < last {
+            for c in 0..total {
+                let (lo, hi) = crate::util::codec::chunk_range(payload.len(), cb, c as usize);
+                let reduced = self.recv_chunk(round, PHASE_BCAST, 0, c, tag, deadline)?;
+                if reduced.payload.len() != hi - lo {
+                    bail!(
+                        "{} ring broadcast chunk {c} is {} bytes, expected {}",
+                        CollectiveStatus::ProtocolViolation.marker(),
+                        reduced.payload.len(),
+                        hi - lo
+                    );
+                }
+                if self.rank + 1 < last {
+                    // successor still needs the reduced chunk
+                    self.send_chunk(
+                        ChunkFrame {
+                            round,
+                            phase: PHASE_BCAST,
+                            origin: 0,
+                            chunk: c,
+                            total,
+                            tag: tag.to_string(),
+                            payload: reduced.payload.clone(),
+                        },
+                        false,
+                    )?;
+                }
+                result[lo..hi].copy_from_slice(&reduced.payload);
+            }
+        }
+        self.inbox.retire_through(round);
+        Ok(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::collective::Collective;
+    use crate::rpc::transport::{FlakyTransport, InProcTransport};
+    use crate::runtime::params::ParamSet;
+    use crate::runtime::tensor::Tensor;
+
+    /// Wire up a full in-process ring: rank r's client talks to rank
+    /// (r+1)%world's inbox server through `wrap`.
+    fn ring_group<T, F>(world: usize, wrap: F) -> Vec<Arc<Collective>>
+    where
+        T: Transport + 'static,
+        F: Fn(usize, Arc<RpcServer<RingPeer>>) -> T,
+    {
+        let inboxes: Vec<Arc<RingInbox>> = (0..world).map(|_| RingInbox::new()).collect();
+        let servers: Vec<Arc<RpcServer<RingPeer>>> =
+            inboxes.iter().map(|ib| RingPeer::serve(ib.clone())).collect();
+        (0..world)
+            .map(|rank| {
+                let succ = wrap(rank, servers[(rank + 1) % world].clone());
+                Collective::with_backend(Arc::new(
+                    RingCollective::new(rank, world, inboxes[rank].clone(), succ)
+                        .with_chunk_bytes(16) // force multi-chunk streaming
+                        .with_window(2),
+                ))
+            })
+            .collect()
+    }
+
+    fn plain_ring(world: usize) -> Vec<Arc<Collective>> {
+        ring_group(world, |_, server| InProcTransport::new(server))
+    }
+
+    fn run_ranks<R: Send + 'static>(
+        cols: Vec<Arc<Collective>>,
+        body: impl Fn(usize, Arc<Collective>) -> R + Send + Sync + 'static,
+    ) -> Vec<R> {
+        let body = Arc::new(body);
+        let handles: Vec<_> = cols
+            .into_iter()
+            .enumerate()
+            .map(|(rank, col)| {
+                let body = body.clone();
+                std::thread::spawn(move || body(rank, col))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn world_of_one_is_identity() {
+        let cols = plain_ring(1);
+        let set = ParamSet::new(vec![Tensor::f32(vec![2], vec![1.5, -2.0])]);
+        assert_eq!(cols[0].all_reduce_mean(0, &set).unwrap(), set);
+        assert_eq!(cols[0].mean_scalars(0, vec![7.0]).unwrap(), vec![7.0]);
+        cols[0].barrier(0).unwrap();
+    }
+
+    #[test]
+    fn ring_all_reduce_means_across_ranks() {
+        for world in [2usize, 3, 4] {
+            let cols = plain_ring(world);
+            let results = run_ranks(cols, move |rank, col| {
+                // 9 f32s at 16-byte chunks → 3 chunks, last one partial
+                let set = ParamSet::new(vec![Tensor::f32(
+                    vec![9],
+                    (0..9).map(|i| (rank * 9 + i) as f32).collect(),
+                )]);
+                col.all_reduce_mean(rank, &set).unwrap()
+            });
+            for r in &results[1..] {
+                assert_eq!(r, &results[0], "world {world}: ranks must agree");
+            }
+            let expect: Vec<f32> = (0..9)
+                .map(|i| {
+                    (0..world).map(|r| (r * 9 + i) as f32).sum::<f32>() / world as f32
+                })
+                .collect();
+            assert_eq!(results[0].tensors[0].as_f32().unwrap(), &expect[..], "world {world}");
+        }
+    }
+
+    #[test]
+    fn ring_gather_returns_rank_order_with_ragged_payloads() {
+        let cols = plain_ring(3);
+        let results = run_ranks(cols, |rank, col| {
+            // ragged: rank r contributes r+1 rows
+            let rows: Vec<Vec<i32>> = (0..rank + 1).map(|i| vec![rank as i32, i as i32]).collect();
+            col.gather_tokens(rank, rows).unwrap()
+        });
+        for r in &results[1..] {
+            assert_eq!(r, &results[0]);
+        }
+        assert_eq!(results[0].len(), 3);
+        for (rank, rows) in results[0].iter().enumerate() {
+            assert_eq!(rows.len(), rank + 1, "rank {rank} row count");
+            assert_eq!(rows[0], vec![rank as i32, 0]);
+        }
+    }
+
+    #[test]
+    fn repeated_rounds_and_barriers_stay_in_lockstep() {
+        let cols = plain_ring(3);
+        let results = run_ranks(cols, |rank, col| {
+            let mut out = Vec::new();
+            for round in 0..10 {
+                col.barrier(rank).unwrap();
+                let m = col
+                    .mean_scalars(rank, vec![(rank * 10 + round) as f64])
+                    .unwrap();
+                out.push(m[0]);
+            }
+            out
+        });
+        for r in &results[1..] {
+            assert_eq!(r, &results[0]);
+        }
+        for (round, v) in results[0].iter().enumerate() {
+            assert_eq!(*v, 10.0 + round as f64); // mean over ranks of 10r+round
+        }
+    }
+
+    #[test]
+    fn duplicate_deliveries_never_double_reduce() {
+        // every chunk delivered twice: the peer's exactly-once cache must
+        // absorb the duplicates or sums would double
+        let cols = ring_group(2, |rank, server| {
+            FlakyTransport::new(InProcTransport::new(server), 31 + rank as u64)
+                .with_probs(0.0, 0.0, 1.0)
+        });
+        let results = run_ranks(cols, |rank, col| {
+            col.mean_scalars(rank, vec![rank as f64 * 2.0]).unwrap()
+        });
+        assert_eq!(results[0], vec![1.0]);
+        assert_eq!(results[1], vec![1.0]);
+    }
+
+    #[test]
+    fn tag_mismatch_is_typed_lockstep_violation() {
+        // short timeout: the rank that does NOT see the mismatched frame
+        // waits for a broadcast that never comes and must fail fast too
+        let inboxes: Vec<Arc<RingInbox>> = (0..2).map(|_| RingInbox::new()).collect();
+        let servers: Vec<Arc<RpcServer<RingPeer>>> =
+            inboxes.iter().map(|ib| RingPeer::serve(ib.clone())).collect();
+        let cols: Vec<Arc<Collective>> = (0..2)
+            .map(|rank| {
+                Collective::with_backend(Arc::new(
+                    RingCollective::new(
+                        rank,
+                        2,
+                        inboxes[rank].clone(),
+                        InProcTransport::new(servers[(rank + 1) % 2].clone()),
+                    )
+                    .with_round_timeout(Duration::from_millis(200)),
+                ))
+            })
+            .collect();
+        let col1 = cols[1].clone();
+        let h = std::thread::spawn(move || col1.mean_scalars(1, vec![1.0]));
+        let set = ParamSet::new(vec![Tensor::f32(vec![1], vec![1.0])]);
+        let r0 = cols[0].all_reduce_mean(0, &set);
+        let r1 = h.join().unwrap();
+        // the receiving side detects the mismatch with the typed poison
+        // status; the other fails fast on its (typed) round timeout
+        let errs: Vec<anyhow::Error> = [r0.err(), r1.err()].into_iter().flatten().collect();
+        assert_eq!(errs.len(), 2, "mismatched collectives must fail on both ranks");
+        assert!(
+            errs.iter()
+                .any(|e| CollectiveStatus::classify_error(e) == Some(CollectiveStatus::Poisoned)),
+            "expected a typed lockstep poison, got: {errs:?}"
+        );
+        assert!(
+            errs.iter().all(|e| CollectiveStatus::classify_error(e).is_some()),
+            "every failure must carry a typed status: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn dead_peer_times_out_fail_fast() {
+        let inboxes: Vec<Arc<RingInbox>> = (0..2).map(|_| RingInbox::new()).collect();
+        let servers: Vec<Arc<RpcServer<RingPeer>>> =
+            inboxes.iter().map(|ib| RingPeer::serve(ib.clone())).collect();
+        // rank 1 never participates
+        let succ = InProcTransport::new(servers[0].clone());
+        let backend = RingCollective::new(1, 2, inboxes[1].clone(), succ)
+            .with_round_timeout(Duration::from_millis(20));
+        let err = backend
+            .all_reduce(1, "params", vec![0; 4], ReduceOp::SumF32)
+            .unwrap_err();
+        assert_eq!(
+            CollectiveStatus::classify_error(&err),
+            Some(CollectiveStatus::RoundTimeout),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn stale_redelivery_after_round_retired_is_dropped() {
+        // A chunk re-executed past the RPC tombstone horizon must not park
+        // forever in the inbox of a rank that already finished the round.
+        let inbox = RingInbox::new();
+        let peer = RingPeer::new(inbox.clone());
+        let frame = ChunkFrame {
+            round: 0,
+            phase: PHASE_REDUCE,
+            origin: 0,
+            chunk: 0,
+            total: 1,
+            tag: "params".into(),
+            payload: vec![1, 2, 3, 4],
+        };
+        peer.handle(METHOD_RING_OFFER, &frame.encode()).unwrap();
+        assert_eq!(inbox.open_chunks(), 1);
+        let got = inbox.take((0, PHASE_REDUCE, 0, 0), Duration::from_millis(10)).unwrap();
+        assert_eq!(got.payload, vec![1, 2, 3, 4]);
+        inbox.retire_through(0);
+        // stale re-delivery of the consumed chunk: acked, NOT re-inserted
+        peer.handle(METHOD_RING_OFFER, &frame.encode()).unwrap();
+        assert_eq!(inbox.open_chunks(), 0, "retired-round chunk must be dropped");
+        // later rounds still flow
+        let next = ChunkFrame { round: 1, ..frame };
+        peer.handle(METHOD_RING_OFFER, &next.encode()).unwrap();
+        assert_eq!(inbox.open_chunks(), 1);
+    }
+
+    #[test]
+    fn inboxes_drain_after_rounds() {
+        let inboxes: Vec<Arc<RingInbox>> = (0..3).map(|_| RingInbox::new()).collect();
+        let servers: Vec<Arc<RpcServer<RingPeer>>> =
+            inboxes.iter().map(|ib| RingPeer::serve(ib.clone())).collect();
+        let cols: Vec<Arc<Collective>> = (0..3)
+            .map(|rank| {
+                Collective::with_backend(Arc::new(
+                    RingCollective::new(
+                        rank,
+                        3,
+                        inboxes[rank].clone(),
+                        InProcTransport::new(servers[(rank + 1) % 3].clone()),
+                    )
+                    .with_chunk_bytes(16),
+                ))
+            })
+            .collect();
+        let results = run_ranks(cols, |rank, col| {
+            let set = ParamSet::new(vec![Tensor::f32(vec![8], vec![rank as f32; 8])]);
+            col.all_reduce_mean(rank, &set).unwrap()
+        });
+        assert_eq!(results[0].tensors[0].as_f32().unwrap(), &[1.0; 8]);
+        for (i, ib) in inboxes.iter().enumerate() {
+            assert_eq!(ib.open_chunks(), 0, "inbox {i} must drain");
+        }
+    }
+}

@@ -40,6 +40,79 @@ use crate::rpc::wire::{GatherFrame, GatherReply, PollFrame};
 pub const METHOD_OFFER: &str = "collective.offer";
 pub const METHOD_POLL: &str = "collective.poll";
 
+/// Typed collective status, replacing substring matching on error text.
+///
+/// Server-side failures cross the RPC boundary as error strings (the `Err`
+/// payload of `rpc::wire::Response`), so each status embeds a stable
+/// `[COLLECTIVE:…]` marker that survives the wire; [`CollectiveStatus::classify`]
+/// parses it back out on the client side.  `launch` matches on the enum to
+/// pick worker exit codes, and `train-dist` decodes those exit codes back
+/// into a human-readable reason — no stringly-typed plumbing in between.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveStatus {
+    /// A lockstep violation poisoned the round for every participant.
+    Poisoned,
+    /// Rank/world disagreement between a worker and the host.
+    WorldMismatch,
+    /// A peer never arrived; the round timed out (fail-fast, §4.2).
+    RoundTimeout,
+    /// Malformed protocol use (poll for a drained round, rank out of range).
+    ProtocolViolation,
+}
+
+impl CollectiveStatus {
+    pub const ALL: [CollectiveStatus; 4] = [
+        CollectiveStatus::Poisoned,
+        CollectiveStatus::WorldMismatch,
+        CollectiveStatus::RoundTimeout,
+        CollectiveStatus::ProtocolViolation,
+    ];
+
+    /// The stable wire marker embedded in error text.
+    pub fn marker(self) -> &'static str {
+        match self {
+            CollectiveStatus::Poisoned => "[COLLECTIVE:poisoned]",
+            CollectiveStatus::WorldMismatch => "[COLLECTIVE:world-mismatch]",
+            CollectiveStatus::RoundTimeout => "[COLLECTIVE:timeout]",
+            CollectiveStatus::ProtocolViolation => "[COLLECTIVE:protocol]",
+        }
+    }
+
+    pub fn describe(self) -> &'static str {
+        match self {
+            CollectiveStatus::Poisoned => "round poisoned by a collective lockstep violation",
+            CollectiveStatus::WorldMismatch => "world-size mismatch with the rendezvous host",
+            CollectiveStatus::RoundTimeout => "collective round timed out (dead peer)",
+            CollectiveStatus::ProtocolViolation => "collective protocol violation",
+        }
+    }
+
+    /// Process exit code a `train-worker` reports for this status (the
+    /// parent decodes it with [`CollectiveStatus::from_exit_code`]).
+    pub fn exit_code(self) -> i32 {
+        match self {
+            CollectiveStatus::Poisoned => 65,
+            CollectiveStatus::WorldMismatch => 66,
+            CollectiveStatus::RoundTimeout => 67,
+            CollectiveStatus::ProtocolViolation => 68,
+        }
+    }
+
+    pub fn from_exit_code(code: i32) -> Option<CollectiveStatus> {
+        Self::ALL.into_iter().find(|s| s.exit_code() == code)
+    }
+
+    /// Recover the typed status from error text that crossed the RPC wire.
+    pub fn classify(text: &str) -> Option<CollectiveStatus> {
+        Self::ALL.into_iter().find(|s| text.contains(s.marker()))
+    }
+
+    /// `classify` over a full anyhow error chain.
+    pub fn classify_error(err: &anyhow::Error) -> Option<CollectiveStatus> {
+        Self::classify(&format!("{err:#}"))
+    }
+}
+
 struct Round {
     tag: String,
     parts: Vec<Option<Vec<u8>>>,
@@ -97,7 +170,8 @@ impl RendezvousHost {
     fn offer(&self, frame: GatherFrame) -> Result<Vec<u8>> {
         if frame.world as usize != self.world {
             bail!(
-                "world mismatch: rank {} believes world={}, host has {}",
+                "{} world mismatch: rank {} believes world={}, host has {}",
+                CollectiveStatus::WorldMismatch.marker(),
                 frame.rank,
                 frame.world,
                 self.world
@@ -105,7 +179,11 @@ impl RendezvousHost {
         }
         let rank = frame.rank as usize;
         if rank >= self.world {
-            bail!("rank {rank} out of range for world {}", self.world);
+            bail!(
+                "{} rank {rank} out of range for world {}",
+                CollectiveStatus::ProtocolViolation.marker(),
+                self.world
+            );
         }
         let mut rounds = self.rounds.lock().unwrap();
         let round = rounds
@@ -116,9 +194,12 @@ impl RendezvousHost {
         }
         if round.tag != frame.tag {
             let msg = format!(
-                "collective lockstep violation at round {}: host opened '{}', \
+                "{} collective lockstep violation at round {}: host opened '{}', \
                  rank {rank} offered '{}'",
-                frame.seq, round.tag, frame.tag
+                CollectiveStatus::Poisoned.marker(),
+                frame.seq,
+                round.tag,
+                frame.tag
             );
             round.poisoned = Some(msg.clone());
             bail!("{msg}");
@@ -133,13 +214,18 @@ impl RendezvousHost {
     fn poll(&self, frame: PollFrame) -> Result<Vec<u8>> {
         let rank = frame.rank as usize;
         if rank >= self.world {
-            bail!("rank {rank} out of range for world {}", self.world);
+            bail!(
+                "{} rank {rank} out of range for world {}",
+                CollectiveStatus::ProtocolViolation.marker(),
+                self.world
+            );
         }
         let mut rounds = self.rounds.lock().unwrap();
         match rounds.get(&frame.seq) {
             None => bail!(
-                "poll for unknown or already-drained collective round {} \
+                "{} poll for unknown or already-drained collective round {} \
                  (protocol violation)",
+                CollectiveStatus::ProtocolViolation.marker(),
                 frame.seq
             ),
             Some(round) => {
@@ -265,8 +351,9 @@ impl<T: Transport> CollectiveBackend for RpcCollective<T> {
                 GatherReply::Pending => {
                     if t0.elapsed() > self.round_timeout {
                         bail!(
-                            "collective round {seq} ('{tag}') timed out after \
+                            "{} collective round {seq} ('{tag}') timed out after \
                              {:.0?} — a peer is likely dead; failing fast (§4.2)",
+                            CollectiveStatus::RoundTimeout.marker(),
                             self.round_timeout
                         );
                     }
@@ -376,8 +463,33 @@ mod tests {
         let r0 = cols[0].all_reduce_mean(0, &set);
         let r1 = h.join().unwrap();
         assert!(r0.is_err() && r1.is_err(), "both ranks must fail fast");
-        let msg = format!("{:#}", r0.unwrap_err());
+        let err = r0.unwrap_err();
+        let msg = format!("{err:#}");
         assert!(msg.contains("lockstep"), "{msg}");
+        // the poison travels as a TYPED status, not just prose
+        assert_eq!(
+            CollectiveStatus::classify_error(&err),
+            Some(CollectiveStatus::Poisoned)
+        );
+        assert_eq!(
+            CollectiveStatus::classify_error(&r1.unwrap_err()),
+            Some(CollectiveStatus::Poisoned)
+        );
+    }
+
+    #[test]
+    fn typed_statuses_roundtrip_markers_and_exit_codes() {
+        for s in CollectiveStatus::ALL {
+            assert_eq!(CollectiveStatus::classify(s.marker()), Some(s), "{s:?}");
+            assert_eq!(
+                CollectiveStatus::classify(&format!("prefix {} suffix", s.marker())),
+                Some(s)
+            );
+            assert_eq!(CollectiveStatus::from_exit_code(s.exit_code()), Some(s));
+        }
+        assert_eq!(CollectiveStatus::classify("plain worker error"), None);
+        assert_eq!(CollectiveStatus::from_exit_code(1), None);
+        assert_eq!(CollectiveStatus::from_exit_code(0), None);
     }
 
     #[test]

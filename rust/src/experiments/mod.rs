@@ -47,6 +47,28 @@ impl Table {
         }
         s
     }
+
+    /// Machine-readable form (`gcore bench --json`; uploaded as a CI
+    /// artifact by the bench-smoke job).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("title".to_string(), Json::Str(self.title.clone()));
+        m.insert(
+            "header".to_string(),
+            Json::Arr(self.header.iter().map(|h| Json::Str(h.clone())).collect()),
+        );
+        m.insert(
+            "rows".to_string(),
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
 }
 
 fn f(x: f64, prec: usize) -> String {
@@ -415,73 +437,127 @@ fn e8c_time_all_reduce(
     (wall, results.into_iter().next().unwrap())
 }
 
-/// E8c — collective overhead: in-proc rendezvous vs RPC-backed collectives
-/// (in-proc transport and real TCP), same unchanged controller call
-/// pattern (§3.1 + §4.2).  The "identical" column asserts the RPC backends
-/// reproduce the in-proc all-reduce bit-for-bit.
+/// Rendezvous-backed TCP group with metered per-rank client transports.
+fn e8c_rendezvous_tcp_group(
+    world: usize,
+) -> (
+    crate::rpc::transport::TcpRpcHost,
+    Vec<std::sync::Arc<Collective>>,
+    Vec<std::sync::Arc<crate::rpc::transport::TransferStats>>,
+) {
+    use crate::rpc::transport::{MeteredTransport, TcpRpcHost, TcpTransport};
+    use std::sync::Arc;
+    let host = TcpRpcHost::spawn(RendezvousHost::serve(world)).expect("spawn rendezvous host");
+    let mut stats = Vec::with_capacity(world);
+    let cols = (0..world)
+        .map(|_| {
+            let metered = MeteredTransport::new(TcpTransport::connect(host.addr));
+            stats.push(metered.stats());
+            Collective::with_backend(Arc::new(RpcCollective::new(metered, world)))
+        })
+        .collect();
+    (host, cols, stats)
+}
+
+/// Ring-backed TCP group with metered per-rank successor transports —
+/// the exact launcher wiring (`launch::ring_tcp_group_with`) plus a byte
+/// meter on each rank's client.
+fn e8c_ring_tcp_group(
+    world: usize,
+    chunk_bytes: usize,
+) -> (
+    Vec<crate::rpc::transport::TcpRpcHost>,
+    Vec<std::sync::Arc<Collective>>,
+    Vec<std::sync::Arc<crate::rpc::transport::TransferStats>>,
+) {
+    use crate::rpc::transport::{MeteredTransport, TcpTransport};
+    let stats_cell = std::cell::RefCell::new(Vec::with_capacity(world));
+    let (hosts, cols) = crate::launch::ring_tcp_group_with(
+        world,
+        chunk_bytes,
+        crate::rpc::server::DEFAULT_TOMBSTONE_CAPACITY,
+        |_, addr| {
+            let metered = MeteredTransport::new(TcpTransport::connect(addr));
+            stats_cell.borrow_mut().push(metered.stats());
+            metered
+        },
+    )
+    .expect("spawn ring peers");
+    (hosts, cols, stats_cell.into_inner())
+}
+
+fn e8c_max_rank_mb(stats: &[std::sync::Arc<crate::rpc::transport::TransferStats>]) -> f64 {
+    stats.iter().map(|s| s.total()).max().unwrap_or(0) as f64 / 1e6
+}
+
+/// E8c — collective scalability sweep: payload size × world size across the
+/// in-proc reference, the rank-0 rendezvous RPC backend and the streaming
+/// ring backend, all over real loopback TCP (§3.1 + §4.2).
+///
+/// "client MB/round" is MEASURED on each rank's metered CLIENT transport
+/// (max across ranks, per round) — request + response frames on the
+/// connection the rank initiates.  Ring ranks additionally RECEIVE ~the
+/// same volume through their own peer server (unmetered here), so absolute
+/// totals are ~2× the column; the scaling shape is what the column is for:
+/// rendezvous grows linearly with world size (every Ready reply carries
+/// all world payloads — the O(world²) host funnel seen from one rank)
+/// while the ring stays flat, independent of world.  The "identical"
+/// column asserts both RPC backends reproduce the in-proc all-reduce
+/// bit-for-bit.
 pub fn e8_collective(quick: bool) -> Table {
     use std::sync::Arc;
-    let world = 4;
-    let rounds = if quick { 4 } else { 16 };
-    let sizes: &[usize] = if quick {
-        &[1_024, 65_536]
-    } else {
-        &[1_024, 65_536, 1_048_576]
-    };
+    let worlds: &[usize] = if quick { &[2, 4] } else { &[2, 4, 8] };
+    let sizes: &[usize] = if quick { &[4_096, 65_536] } else { &[65_536, 1_048_576] };
+    let rounds = if quick { 2 } else { 8 };
+    let chunk_bytes = 64 * 1024;
     let mut rows = Vec::new();
-    for &n in sizes {
-        // reference: the in-proc condvar rendezvous
-        let inproc = Collective::new(world);
-        let (ref_wall, ref_set) =
-            e8c_time_all_reduce((0..world).map(|_| inproc.clone()).collect(), n, rounds);
+    for &world in worlds {
+        for &n in sizes {
+            // reference: the in-proc condvar rendezvous
+            let inproc = Collective::new(world);
+            let (ref_wall, ref_set) =
+                e8c_time_all_reduce((0..world).map(|_| inproc.clone()).collect(), n, rounds);
 
-        // RPC over the in-process transport (protocol overhead only)
-        let server = RendezvousHost::serve(world);
-        let rpc_inproc = (0..world)
-            .map(|_| {
-                Collective::with_backend(Arc::new(RpcCollective::new(
-                    crate::rpc::transport::InProcTransport::new(server.clone()),
-                    world,
-                )))
-            })
-            .collect();
-        let (rpc_wall, rpc_set) = e8c_time_all_reduce(rpc_inproc, n, rounds);
+            // rank-0 rendezvous RPC over real TCP
+            let (host, cols, rdv_stats) = e8c_rendezvous_tcp_group(world);
+            let (rdv_wall, rdv_set) = e8c_time_all_reduce(cols, n, rounds);
+            drop(host);
 
-        // RPC over real TCP (loopback) — the multi-process data path
-        let server = RendezvousHost::serve(world);
-        let host = crate::rpc::transport::TcpRpcHost::spawn(server).unwrap();
-        let tcp = (0..world)
-            .map(|_| {
-                Collective::with_backend(Arc::new(RpcCollective::new(
-                    crate::rpc::transport::TcpTransport::connect(host.addr),
-                    world,
-                )))
-            })
-            .collect();
-        let (tcp_wall, tcp_set) = e8c_time_all_reduce(tcp, n, rounds);
-        drop(host);
+            // streaming ring over real TCP
+            let (hosts, cols, ring_stats) = e8c_ring_tcp_group(world, chunk_bytes);
+            let (ring_wall, ring_set) = e8c_time_all_reduce(cols, n, rounds);
+            drop(hosts);
 
-        let mb = (n * 4) as f64 / 1e6;
-        for (backend, wall, set) in [
-            ("in-proc rendezvous", ref_wall, &ref_set),
-            ("rpc (in-proc)", rpc_wall, &rpc_set),
-            ("rpc (tcp)", tcp_wall, &tcp_set),
-        ] {
-            rows.push(vec![
-                format!("{mb:.2} MB x {world} ranks"),
-                backend.into(),
-                f(wall / rounds as f64 * 1e3, 2),
-                f(mb * world as f64 * rounds as f64 / wall, 1),
-                (set == &ref_set).to_string(),
-            ]);
+            let mb = (n * 4) as f64 / 1e6;
+            let per_round = |stats: &[Arc<crate::rpc::transport::TransferStats>]| {
+                e8c_max_rank_mb(stats) / rounds as f64
+            };
+            for (backend, wall, set, rank_mb) in [
+                ("in-proc rendezvous", ref_wall, &ref_set, None),
+                ("rendezvous rpc (tcp)", rdv_wall, &rdv_set, Some(per_round(&rdv_stats))),
+                ("ring (tcp)", ring_wall, &ring_set, Some(per_round(&ring_stats))),
+            ] {
+                rows.push(vec![
+                    format!("{world}"),
+                    format!("{mb:.2} MB"),
+                    backend.into(),
+                    f(wall / rounds as f64 * 1e3, 2),
+                    rank_mb.map(|m| f(m, 2)).unwrap_or_else(|| "-".into()),
+                    f(mb * world as f64 * rounds as f64 / wall, 1),
+                    (set == &ref_set).to_string(),
+                ]);
+            }
         }
     }
     Table {
-        title: "E8c — collective all-reduce: in-proc vs RPC backends (§3.1/§4.2)".into(),
+        title: "E8c — collective sweep: rendezvous O(world) vs ring O(1) per-rank bytes (§3.1/§4.2)"
+            .into(),
         header: vec![
-            "gradient payload".into(),
+            "world".into(),
+            "payload".into(),
             "backend".into(),
             "ms/round".into(),
+            "client MB/round".into(),
             "agg MB/s".into(),
             "identical".into(),
         ],
@@ -612,12 +688,44 @@ mod tests {
     }
 
     #[test]
-    fn e8c_backends_bit_identical() {
+    fn e8c_backends_bit_identical_across_sweep() {
         let t = e8_collective(true);
-        assert_eq!(t.rows.len(), 6); // 2 sizes × 3 backends
+        assert_eq!(t.rows.len(), 12); // 2 worlds × 2 sizes × 3 backends
+        let identical = t.header.len() - 1;
         for row in &t.rows {
-            assert_eq!(row[4], "true", "backend diverged from in-proc: {row:?}");
+            assert_eq!(row[identical], "true", "backend diverged from in-proc: {row:?}");
         }
+    }
+
+    #[test]
+    fn e8c_ring_per_rank_bytes_flat_rendezvous_grows() {
+        // the measured (not asserted-by-construction) scalability claim:
+        // per-rank bytes grow ~linearly in world size through the rank-0
+        // rendezvous, but stay ~flat around the ring
+        let t = e8_collective(true);
+        let mb_of = |world: &str, backend: &str| -> f64 {
+            t.rows
+                .iter()
+                .filter(|r| r[0] == world && r[2] == backend)
+                .map(|r| r[4].parse::<f64>().expect("per-rank MB"))
+                .fold(0.0, f64::max) // largest payload row dominates
+        };
+        let rdv2 = mb_of("2", "rendezvous rpc (tcp)");
+        let rdv4 = mb_of("4", "rendezvous rpc (tcp)");
+        let ring2 = mb_of("2", "ring (tcp)");
+        let ring4 = mb_of("4", "ring (tcp)");
+        assert!(
+            rdv4 > rdv2 * 1.3,
+            "rendezvous per-rank bytes must grow with world: {rdv2} -> {rdv4}"
+        );
+        assert!(
+            ring4 <= ring2 * 2.5,
+            "ring per-rank bytes must stay ~flat in world: {ring2} -> {ring4}"
+        );
+        assert!(
+            ring4 < rdv4,
+            "at world 4 the ring must move fewer per-rank bytes ({ring4} vs {rdv4})"
+        );
     }
 
     #[test]

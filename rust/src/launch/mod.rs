@@ -1,23 +1,36 @@
 //! Launcher: bootstraps a parallel-controller training job (paper §4.2's
 //! "launch tasks via [the] job scheduling system" analogue).
 //!
-//! Three launch modes share one per-rank body ([`run_rank`]) and the same
+//! Launch modes share one per-rank body ([`run_rank`]) and the same
 //! `Controller` code — only the `CollectiveBackend` differs:
 //!
 //! * [`run_training`] — one thread per controller, in-proc condvar
-//!   rendezvous (`CollectiveMode::InProc`), or TCP-loopback collectives
-//!   when the config says `CollectiveMode::Tcp`;
+//!   rendezvous (`CollectiveMode::InProc`), TCP-loopback rendezvous
+//!   collectives (`CollectiveMode::Tcp`), or streaming ring collectives
+//!   (`CollectiveMode::Ring`);
 //! * [`run_training_tcp`] — threads again, but every gradient all-reduce /
 //!   metric reduction / barrier travels as exactly-once RPC rounds against
 //!   a rank-0 rendezvous service over real TCP.  Bit-identical to the
 //!   in-proc launch (asserted in tests/system_integration.rs);
+//! * [`run_training_ring`] — threads whose collectives stream chunked
+//!   frames around a TCP ring of peer-hosted inbox services — O(payload)
+//!   bytes per rank, no rank-0 bottleneck, and still bit-identical to the
+//!   in-proc launch;
 //! * [`run_worker`] + [`serve_coordinator`] — the multi-process path used
 //!   by `gcore train-dist`: the parent hosts the rendezvous service and
 //!   spawns one `gcore train-worker --rank R --coord HOST:PORT` OS process
 //!   per controller.  Workers never share an address space; they meet only
 //!   through the RPC collective (and each deterministically re-derives the
 //!   initial policy / reward model from the shared seed instead of
-//!   broadcasting multi-MB weights).
+//!   broadcasting multi-MB weights).  With `--collective ring` the
+//!   rendezvous is only the bootstrap: each worker hosts its own ring peer
+//!   on an ephemeral port, all-gathers the addresses through the
+//!   coordinator once, then streams everything rank-to-rank.
+//!
+//! Worker failures carry typed collective statuses
+//! ([`CollectiveStatus`]): [`worker_exit_code`] maps them to stable exit
+//! codes, which `train-dist` decodes back into a reason instead of
+//! grepping stderr.
 
 use std::net::SocketAddr;
 use std::sync::Arc;
@@ -26,10 +39,11 @@ use anyhow::{Context, Result};
 
 use crate::checkpoint::{CheckpointManager, CheckpointMeta, ShardState};
 use crate::config::{CollectiveMode, RunConfig};
-use crate::coordinator::collective::Collective;
+use crate::coordinator::collective::{Collective, CollectiveBackend};
 use crate::coordinator::controller::{Controller, StepStats};
 use crate::coordinator::pretrain;
-use crate::coordinator::rpc_collective::{RendezvousHost, RpcCollective};
+use crate::coordinator::ring_collective::{RingCollective, RingInbox, RingPeer};
+use crate::coordinator::rpc_collective::{CollectiveStatus, RendezvousHost, RpcCollective};
 use crate::reward::{RewardKind, Rewarder};
 use crate::rpc::server::RpcServer;
 use crate::rpc::transport::{TcpRpcHost, TcpTransport};
@@ -216,6 +230,7 @@ pub fn run_training(cfg: &RunConfig) -> Result<TrainReport> {
             run_threads(cfg, (0..cfg.world).map(|_| collective.clone()).collect())
         }
         CollectiveMode::Tcp => run_training_tcp(cfg),
+        CollectiveMode::Ring => run_training_ring(cfg),
     }
 }
 
@@ -223,7 +238,11 @@ pub fn run_training(cfg: &RunConfig) -> Result<TrainReport> {
 /// rounds over real TCP (loopback) — the single-machine rehearsal of the
 /// multi-process path, bit-identical to `run_training`.
 pub fn run_training_tcp(cfg: &RunConfig) -> Result<TrainReport> {
-    let host = TcpRpcHost::spawn(RendezvousHost::serve(cfg.world))?;
+    let server = Arc::new(
+        RpcServer::new(RendezvousHost::new(cfg.world))
+            .with_tombstone_capacity(cfg.rpc_tombstone_capacity),
+    );
+    let host = TcpRpcHost::spawn(server)?;
     let addr = host.addr;
     let collectives = (0..cfg.world)
         .map(|_| {
@@ -238,28 +257,141 @@ pub fn run_training_tcp(cfg: &RunConfig) -> Result<TrainReport> {
     report
 }
 
+/// Build a full loopback-TCP ring: one inbox host per rank (tombstones
+/// bounded to `tombstone_capacity`), each rank's client connected to its
+/// successor's host through `connect` — the launcher passes a plain
+/// `TcpTransport`, E8c wraps it in a byte meter.  One wiring path for both,
+/// so the benchmark always measures the topology the launcher runs.
+/// Returns the hosts (keep them alive for the duration of the job) and the
+/// per-rank collectives.
+pub fn ring_tcp_group_with<T, F>(
+    world: usize,
+    chunk_bytes: usize,
+    tombstone_capacity: usize,
+    connect: F,
+) -> Result<(Vec<TcpRpcHost>, Vec<Arc<Collective>>)>
+where
+    T: crate::rpc::transport::Transport + 'static,
+    F: Fn(usize, SocketAddr) -> T,
+{
+    let inboxes: Vec<Arc<RingInbox>> = (0..world).map(|_| RingInbox::new()).collect();
+    let hosts = inboxes
+        .iter()
+        .map(|ib| {
+            let server = Arc::new(
+                RpcServer::new(RingPeer::new(ib.clone()))
+                    .with_tombstone_capacity(tombstone_capacity),
+            );
+            TcpRpcHost::spawn(server)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let collectives = (0..world)
+        .map(|rank| {
+            let succ = connect(rank, hosts[(rank + 1) % world].addr);
+            Collective::with_backend(Arc::new(
+                RingCollective::new(rank, world, inboxes[rank].clone(), succ)
+                    .with_chunk_bytes(chunk_bytes),
+            ))
+        })
+        .collect();
+    Ok((hosts, collectives))
+}
+
+/// `ring_tcp_group_with` over plain TCP transports and the default
+/// tombstone bound.
+pub fn ring_tcp_group(
+    world: usize,
+    chunk_bytes: usize,
+) -> Result<(Vec<TcpRpcHost>, Vec<Arc<Collective>>)> {
+    ring_tcp_group_with(
+        world,
+        chunk_bytes,
+        crate::rpc::server::DEFAULT_TOMBSTONE_CAPACITY,
+        |_, addr| TcpTransport::connect(addr),
+    )
+}
+
+/// Thread-per-controller launch over streaming ring collectives
+/// (loopback TCP) — O(payload) bytes per rank, bit-identical to
+/// `run_training` (asserted in tests/system_integration.rs).
+pub fn run_training_ring(cfg: &RunConfig) -> Result<TrainReport> {
+    let (hosts, collectives) = ring_tcp_group_with(
+        cfg.world,
+        cfg.ring_chunk_bytes,
+        cfg.rpc_tombstone_capacity,
+        |_, addr| TcpTransport::connect(addr),
+    )?;
+    let report = run_threads(cfg, collectives);
+    drop(hosts); // all clients joined; release the listeners
+    report
+}
+
 /// Host the rendezvous service for a multi-process launch (`train-dist`):
 /// binds 127.0.0.1:`port` (0 = ephemeral; read the actual address off the
-/// returned host) and serves until dropped.
-pub fn serve_coordinator(world: usize, port: u16) -> Result<TcpRpcHost> {
-    let server: Arc<RpcServer<RendezvousHost>> = RendezvousHost::serve(world);
+/// returned host) and serves until dropped.  `tombstone_capacity` bounds
+/// the server's cleanup-tombstone set (`rpc_tombstone_capacity` knob).
+pub fn serve_coordinator(
+    world: usize,
+    port: u16,
+    tombstone_capacity: usize,
+) -> Result<TcpRpcHost> {
+    let server = Arc::new(
+        RpcServer::new(RendezvousHost::new(world)).with_tombstone_capacity(tombstone_capacity),
+    );
     TcpRpcHost::spawn_on(&format!("127.0.0.1:{port}"), server)
 }
 
+/// Build the collective one `train-worker` coordinates through.  For the
+/// rendezvous modes this is a single RPC client at `coord`.  For the ring,
+/// the worker hosts its own inbox service on an ephemeral port, all-gathers
+/// every rank's address through the coordinator ONCE (the only rendezvous
+/// round), then streams all collective traffic to its ring successor; the
+/// returned host must stay alive for the duration of the job.
+fn build_worker_collective(
+    cfg: &RunConfig,
+    rank: usize,
+    coord: SocketAddr,
+) -> Result<(Arc<Collective>, Option<TcpRpcHost>)> {
+    match cfg.collective {
+        CollectiveMode::Ring => {
+            let boot = RpcCollective::for_rank(TcpTransport::connect(coord), cfg.world, rank);
+            let inbox = RingInbox::new();
+            let server = Arc::new(
+                RpcServer::new(RingPeer::new(inbox.clone()))
+                    .with_tombstone_capacity(cfg.rpc_tombstone_capacity),
+            );
+            let host = TcpRpcHost::spawn(server)?;
+            let addrs = boot
+                .exchange(rank, "ring.bootstrap", host.addr.to_string().into_bytes())
+                .context("ring bootstrap address exchange")?;
+            let succ_raw = &addrs[(rank + 1) % cfg.world];
+            let succ: SocketAddr = std::str::from_utf8(succ_raw)
+                .context("ring bootstrap address is not utf8")?
+                .parse()
+                .context("ring bootstrap address did not parse")?;
+            let backend =
+                RingCollective::new(rank, cfg.world, inbox, TcpTransport::connect(succ))
+                    .with_chunk_bytes(cfg.ring_chunk_bytes);
+            Ok((Collective::with_backend(Arc::new(backend)), Some(host)))
+        }
+        _ => {
+            let backend = RpcCollective::for_rank(TcpTransport::connect(coord), cfg.world, rank);
+            Ok((Collective::with_backend(Arc::new(backend)), None))
+        }
+    }
+}
+
 /// One `train-worker` OS process: rank `rank` of `cfg.world`, coordinating
-/// only through the RPC collective at `coord`.  Every worker re-derives the
-/// initial policy and (if configured) pre-trains its reward model from the
-/// shared seed, which is deterministic — so all ranks start bit-identical
-/// without a weight broadcast.
+/// only through the collective rooted at `coord`.  Every worker re-derives
+/// the initial policy and (if configured) pre-trains its reward model from
+/// the shared seed, which is deterministic — so all ranks start
+/// bit-identical without a weight broadcast.
 pub fn run_worker(cfg: &RunConfig, rank: usize, coord: SocketAddr) -> Result<TrainReport> {
     let engine = Arc::new(Engine::load(&cfg.artifacts)?);
     let (rewarder, rm_metric) = build_rewarder(&engine, cfg)?;
     let policy = init_policy(&engine, cfg.seed as u32)?;
-    let collective = Collective::with_backend(Arc::new(RpcCollective::for_rank(
-        TcpTransport::connect(coord),
-        cfg.world,
-        rank,
-    )));
+    // `_ring_host` keeps this rank's inbox service alive until training ends
+    let (collective, _ring_host) = build_worker_collective(cfg, rank, coord)?;
     let ckpt = cfg
         .checkpoint_dir
         .as_ref()
@@ -268,4 +400,21 @@ pub fn run_worker(cfg: &RunConfig, rank: usize, coord: SocketAddr) -> Result<Tra
         .with_context(|| format!("worker rank {rank} failed"))?;
     report.reward_model_metric = rm_metric;
     Ok(report)
+}
+
+/// The process exit code a `train-worker` reports for `err`: typed
+/// collective statuses map to stable codes (`CollectiveStatus::exit_code`,
+/// 65..=68) the parent matches on; anything else is 1.
+pub fn worker_exit_code(err: &anyhow::Error) -> i32 {
+    match CollectiveStatus::classify_error(err) {
+        Some(status) => status.exit_code(),
+        None => 1,
+    }
+}
+
+/// Decode a worker's exit status into the typed collective reason, if any
+/// (the `train-dist` parent's half of the exit-code contract).
+pub fn describe_worker_exit(code: Option<i32>) -> Option<&'static str> {
+    code.and_then(CollectiveStatus::from_exit_code)
+        .map(|s| s.describe())
 }

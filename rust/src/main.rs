@@ -21,6 +21,7 @@ use gcore::launch::{self, TrainReport};
 use gcore::placement::{run_coexist_static, run_colocate, run_dynamic, PlacementSpec};
 use gcore::runtime::Manifest;
 use gcore::util::cli::Args;
+use gcore::util::json::Json;
 
 const USAGE: &str = "\
 gcore — G-Core RLHF trainer (reproduction)
@@ -29,11 +30,14 @@ USAGE:
   gcore train [--config <file.json>] [--artifacts tiny] [--world N]
               [--steps N] [--reward ground_truth|bt|generative]
               [--dynamic-sampling] [--checkpoint-dir DIR]
-              [--collective inproc|tcp]
+              [--collective inproc|tcp|ring] [--ring-chunk-bytes N]
+              [--tombstone-capacity N]
   gcore train-dist [same flags as train] [--coord-port P]
-              spawns N=world OS processes coordinating over the TCP
-              rendezvous collective (rank 0 prints the report)
-  gcore bench <e1|e2|e3|e4|e5|e7|e8|e8c|e9|all> [--full]
+              spawns N=world OS processes; --collective tcp funnels
+              collectives through the rank-0 rendezvous, --collective ring
+              streams chunked frames rank-to-rank (bootstrap via the
+              rendezvous, then O(payload)/rank; rank 0 prints the report)
+  gcore bench <e1|e2|e3|e4|e5|e7|e8|e8c|e9|all> [--full] [--json out.json]
   gcore simulate [--placement colocate|coexist|dynamic] [--devices N]
                  [--steps N] [--dapo]
   gcore inspect-artifacts [--artifacts tiny]
@@ -72,6 +76,9 @@ fn cfg_from_args(args: &Args) -> Result<RunConfig> {
     cfg.lr = args.parse_or("lr", cfg.lr);
     cfg.seed = args.parse_or("seed", cfg.seed);
     cfg.coordinator_port = args.parse_or("coord-port", cfg.coordinator_port);
+    cfg.ring_chunk_bytes = args.parse_or("ring-chunk-bytes", cfg.ring_chunk_bytes);
+    cfg.rpc_tombstone_capacity =
+        args.parse_or("tombstone-capacity", cfg.rpc_tombstone_capacity);
     if args.has("dynamic-sampling") {
         cfg.dynamic_sampling = true;
     }
@@ -131,12 +138,16 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_train_dist(args: &Args) -> Result<()> {
     let cfg = cfg_from_args(args)?;
     // the parent hosts the rendezvous service every worker coordinates
-    // through; workers are full OS processes that never share memory
-    let host = launch::serve_coordinator(cfg.world, cfg.coordinator_port)?;
+    // through (for --collective ring it is only the address bootstrap);
+    // workers are full OS processes that never share memory
+    let host =
+        launch::serve_coordinator(cfg.world, cfg.coordinator_port, cfg.rpc_tombstone_capacity)?;
     let addr = host.addr;
     println!(
-        "[gcore] train-dist: world={} coordinator={addr} artifacts={}",
-        cfg.world, cfg.artifacts
+        "[gcore] train-dist: world={} coordinator={addr} artifacts={} collective={}",
+        cfg.world,
+        cfg.artifacts,
+        cfg.collective.name()
     );
 
     // hand each worker the fully-resolved config
@@ -186,9 +197,14 @@ fn cmd_train_dist(args: &Args) -> Result<()> {
                     remaining -= 1;
                     progressed = true;
                     if !status.success() {
+                        // decode the typed collective status the worker's
+                        // exit code carries (launch::worker_exit_code)
+                        let reason = launch::describe_worker_exit(status.code())
+                            .map(|d| format!(": {d}"))
+                            .unwrap_or_default();
                         bail!(
-                            "worker {rank} failed ({status}) — job terminated \
-                             (fail-fast, §4.2)"
+                            "worker {rank} failed ({status}){reason} — job \
+                             terminated (fail-fast, §4.2)"
                         );
                     }
                 }
@@ -217,11 +233,20 @@ fn cmd_train_worker(args: &Args) -> Result<()> {
     if rank >= cfg.world {
         bail!("rank {rank} out of range for world {}", cfg.world);
     }
-    let report = launch::run_worker(&cfg, rank, coord)?;
-    if rank == 0 {
-        print_report(&report);
+    match launch::run_worker(&cfg, rank, coord) {
+        Ok(report) => {
+            if rank == 0 {
+                print_report(&report);
+            }
+            Ok(())
+        }
+        Err(err) => {
+            // typed collective statuses become stable exit codes the parent
+            // matches on (fail-fast, §4.2)
+            eprintln!("[gcore] worker {rank} failed: {err:#}");
+            std::process::exit(launch::worker_exit_code(&err));
+        }
     }
-    Ok(())
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -232,10 +257,22 @@ fn cmd_bench(args: &Args) -> Result<()> {
     } else {
         vec![which]
     };
+    let mut tables = Vec::new();
     for id in ids {
-        if experiments::run(id, quick).is_none() {
-            bail!("unknown experiment '{id}' (e6/e10 are examples: genrm_vs_bt, rlhf_e2e)");
+        match experiments::run(id, quick) {
+            Some(t) => tables.push(t),
+            None => {
+                bail!("unknown experiment '{id}' (e6/e10 are examples: genrm_vs_bt, rlhf_e2e)")
+            }
         }
+    }
+    // machine-readable results (the CI bench-smoke job uploads this file as
+    // a workflow artifact, so perf trajectory is captured on every PR)
+    if let Some(path) = args.get("json") {
+        let doc = Json::Arr(tables.iter().map(|t| t.to_json()).collect());
+        std::fs::write(path, doc.to_string_pretty())
+            .with_context(|| format!("writing bench results to {path}"))?;
+        println!("[gcore] wrote {} table(s) to {path}", tables.len());
     }
     Ok(())
 }

@@ -6,14 +6,61 @@
 //! cleanup is a protocol violation (the client only cleans up once it has
 //! the result) and is answered with a hard error — the coordinator's
 //! fail-fast rule then tears the job down.
+//!
+//! Tombstones are BOUNDED: a long job cleans up millions of ids, so the
+//! violation-detection set evicts its oldest entries past
+//! [`DEFAULT_TOMBSTONE_CAPACITY`] (configurable via
+//! [`RpcServer::with_tombstone_capacity`] / the `rpc_tombstone_capacity`
+//! config knob).  Eviction trades early violation detection for bounded
+//! memory: a request re-delivered after its tombstone aged out re-executes
+//! as a fresh call instead of erroring.  Services must therefore stay
+//! duplicate-tolerant beyond the tombstone horizon — the in-tree ones are
+//! (the rendezvous host is idempotent per (seq, rank); the ring inbox
+//! drops chunks for rounds it already retired).
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::Mutex;
 
 use anyhow::Result;
 
 use crate::rpc::wire::{Request, Response, Status, METHOD_CLEANUP};
 use crate::util::codec::Reader;
+
+/// Default bound on the cleanup-tombstone set (ids, not bytes).
+pub const DEFAULT_TOMBSTONE_CAPACITY: usize = 1 << 16;
+
+/// FIFO-bounded tombstone set: O(1) insert/lookup, oldest ids evicted once
+/// `cap` is exceeded.
+struct TombstoneSet {
+    cap: usize,
+    order: VecDeque<u64>,
+    ids: HashSet<u64>,
+    evicted: u64,
+}
+
+impl TombstoneSet {
+    fn new(cap: usize) -> TombstoneSet {
+        assert!(cap >= 1, "tombstone capacity must be >= 1");
+        TombstoneSet { cap, order: VecDeque::new(), ids: HashSet::new(), evicted: 0 }
+    }
+
+    fn insert(&mut self, id: u64) {
+        if !self.ids.insert(id) {
+            return; // already tombstoned (duplicate cleanup)
+        }
+        self.order.push_back(id);
+        while self.order.len() > self.cap {
+            if let Some(old) = self.order.pop_front() {
+                self.ids.remove(&old);
+                self.evicted += 1;
+            }
+        }
+    }
+
+    fn contains(&self, id: u64) -> bool {
+        self.ids.contains(&id)
+    }
+}
 
 /// A dispatchable service: the worker-side handler the controller calls.
 pub trait Service: Send + Sync {
@@ -36,25 +83,39 @@ pub struct ServerStats {
     pub cleaned: u64,
     pub errors: u64,
     pub cached_now: usize,
+    pub tombstones_now: usize,
+    pub tombstones_evicted: u64,
 }
 
 pub struct RpcServer<S: Service> {
     service: S,
     /// request id → cached result (until cleanup)
     cache: Mutex<HashMap<u64, Response>>,
-    /// ids whose cache has been cleaned — tombstones for violation detection
-    tombstones: Mutex<HashSet<u64>>,
+    /// ids whose cache has been cleaned — bounded tombstones for violation
+    /// detection (oldest evicted past capacity; see module docs)
+    tombstones: Mutex<TombstoneSet>,
     stats: Mutex<ServerStats>,
 }
 
 impl<S: Service> RpcServer<S> {
     pub fn new(service: S) -> RpcServer<S> {
+        Self::with_capacity(service, DEFAULT_TOMBSTONE_CAPACITY)
+    }
+
+    fn with_capacity(service: S, tombstone_capacity: usize) -> RpcServer<S> {
         RpcServer {
             service,
             cache: Mutex::new(HashMap::new()),
-            tombstones: Mutex::new(HashSet::new()),
+            tombstones: Mutex::new(TombstoneSet::new(tombstone_capacity)),
             stats: Mutex::new(ServerStats::default()),
         }
+    }
+
+    /// Bound the cleanup-tombstone set to `cap` ids (the
+    /// `rpc_tombstone_capacity` config knob).
+    pub fn with_tombstone_capacity(mut self, cap: usize) -> Self {
+        *self.tombstones.get_mut().unwrap() = TombstoneSet::new(cap);
+        self
     }
 
     pub fn service(&self) -> &S {
@@ -64,6 +125,9 @@ impl<S: Service> RpcServer<S> {
     pub fn stats(&self) -> ServerStats {
         let mut s = self.stats.lock().unwrap().clone();
         s.cached_now = self.cache.lock().unwrap().len();
+        let t = self.tombstones.lock().unwrap();
+        s.tombstones_now = t.ids.len();
+        s.tombstones_evicted = t.evicted;
         s
     }
 
@@ -77,7 +141,7 @@ impl<S: Service> RpcServer<S> {
             self.stats.lock().unwrap().duplicates_served += 1;
             return cached.clone();
         }
-        if self.tombstones.lock().unwrap().contains(&req.id) {
+        if self.tombstones.lock().unwrap().contains(req.id) {
             // re-delivery after cleanup: protocol violation → fail fast
             self.stats.lock().unwrap().errors += 1;
             return Response {
@@ -182,6 +246,46 @@ mod tests {
         s.dispatch(&Request::cleanup(1, 2));
         let r = s.dispatch(&req);
         assert_eq!(r.status, Status::Err);
+    }
+
+    #[test]
+    fn tombstones_are_bounded_and_eviction_is_safe() {
+        let count = AtomicU64::new(0);
+        let s = RpcServer::new(move |_: &str, _: &[u8]| {
+            count.fetch_add(1, Ordering::SeqCst);
+            Ok(count.load(Ordering::SeqCst).to_le_bytes().to_vec())
+        })
+        .with_tombstone_capacity(4);
+
+        // execute + clean up ids 1..=6: capacity 4 evicts the oldest two
+        for id in 1..=6u64 {
+            s.dispatch(&Request { id, method: "inc".into(), payload: vec![] });
+            s.dispatch(&Request::cleanup(id, 100 + id));
+        }
+        let st = s.stats();
+        assert_eq!(st.tombstones_now, 4, "set must stay at capacity");
+        assert_eq!(st.tombstones_evicted, 2);
+
+        // LIVE tombstone (id 6) still detects the protocol violation
+        let r = s.dispatch(&Request { id: 6, method: "inc".into(), payload: vec![] });
+        assert_eq!(r.status, Status::Err, "live tombstone must still dedupe");
+
+        // EVICTED tombstone (id 1): re-delivery re-executes as a fresh call
+        // — safe, just no longer flagged
+        let r = s.dispatch(&Request { id: 1, method: "inc".into(), payload: vec![] });
+        assert_eq!(r.status, Status::Ok, "evicted entry must re-execute safely");
+        assert_eq!(s.stats().executed, 7, "6 originals + 1 re-execution");
+    }
+
+    #[test]
+    fn duplicate_cleanup_does_not_double_count_tombstones() {
+        let s = echo_server().with_tombstone_capacity(8);
+        s.dispatch(&Request { id: 1, method: "echo".into(), payload: vec![1] });
+        s.dispatch(&Request::cleanup(1, 2));
+        s.dispatch(&Request::cleanup(1, 3));
+        let st = s.stats();
+        assert_eq!(st.tombstones_now, 1);
+        assert_eq!(st.tombstones_evicted, 0);
     }
 
     #[test]

@@ -179,6 +179,65 @@ impl Transport for TcpTransport {
 }
 
 // ---------------------------------------------------------------------------
+// Byte metering
+// ---------------------------------------------------------------------------
+
+/// Bytes a metered transport moved (encoded request/response frames).
+#[derive(Debug, Default)]
+pub struct TransferStats {
+    pub sent: AtomicU64,
+    pub received: AtomicU64,
+}
+
+impl TransferStats {
+    pub fn total(&self) -> u64 {
+        self.sent.load(Ordering::Relaxed) + self.received.load(Ordering::Relaxed)
+    }
+}
+
+/// Wraps a transport and counts encoded request/response bytes — how E8c
+/// measures per-rank traffic instead of asserting it.
+pub struct MeteredTransport<T: Transport> {
+    inner: T,
+    stats: Arc<TransferStats>,
+}
+
+impl<T: Transport> MeteredTransport<T> {
+    pub fn new(inner: T) -> MeteredTransport<T> {
+        MeteredTransport { inner, stats: Arc::new(TransferStats::default()) }
+    }
+
+    /// Shared handle to the counters (read after the run completes).
+    pub fn stats(&self) -> Arc<TransferStats> {
+        self.stats.clone()
+    }
+}
+
+/// Encoded size of a request frame, without re-encoding it:
+/// u64 id + length-prefixed method + length-prefixed payload (wire.rs).
+fn request_frame_len(req: &Request) -> u64 {
+    (8 + 4 + req.method.len() + 4 + req.payload.len()) as u64
+}
+
+/// Encoded size of a response frame: u64 id + status byte + payload.
+fn response_frame_len(resp: &Response) -> u64 {
+    (8 + 1 + 4 + resp.payload.len()) as u64
+}
+
+impl<T: Transport> Transport for MeteredTransport<T> {
+    fn deliver(&self, request: &Request) -> Result<Response> {
+        self.stats
+            .sent
+            .fetch_add(request_frame_len(request), Ordering::Relaxed);
+        let resp = self.inner.deliver(request)?;
+        self.stats
+            .received
+            .fetch_add(response_frame_len(&resp), Ordering::Relaxed);
+        Ok(resp)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Fault injection
 // ---------------------------------------------------------------------------
 
@@ -303,6 +362,20 @@ mod tests {
             t.join().unwrap();
         }
         assert_eq!(server.stats().executed, 100);
+    }
+
+    #[test]
+    fn metered_transport_counts_frame_bytes() {
+        let t = MeteredTransport::new(InProcTransport::new(echo()));
+        let stats = t.stats();
+        let req = Request { id: 1, method: "e".into(), payload: vec![7; 100] };
+        let resp = t.deliver(&req).unwrap();
+        assert_eq!(stats.sent.load(Ordering::Relaxed), req.encode().len() as u64);
+        assert_eq!(
+            stats.received.load(Ordering::Relaxed),
+            resp.encode().len() as u64
+        );
+        assert_eq!(stats.total(), (req.encode().len() + resp.encode().len()) as u64);
     }
 
     #[test]

@@ -189,6 +189,98 @@ impl GatherReply {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Ring collective streaming frames (coordinator::ring_collective)
+// ---------------------------------------------------------------------------
+
+/// Ring traffic phases.  `GATHER` carries origin payloads hopping around the
+/// ring (all-gather); `REDUCE` carries rank-order partial sums flowing
+/// 0 → 1 → … → N-1; `BCAST` distributes the fully reduced result from the
+/// last rank back around the ring.
+pub const PHASE_GATHER: u8 = 0;
+pub const PHASE_REDUCE: u8 = 1;
+pub const PHASE_BCAST: u8 = 2;
+
+/// One bounded chunk of a streamed collective payload.  Large ParamSets are
+/// split into `total` chunks so no host ever buffers a whole multi-GB
+/// payload; `round` is the SPMD round epoch, `origin` the rank whose payload
+/// the chunk belongs to (all-gather routing; 0 for reduce/bcast streams).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkFrame {
+    pub round: u64,
+    pub phase: u8,
+    pub origin: u32,
+    /// chunk index within the payload
+    pub chunk: u32,
+    /// total chunks this payload streams as (>= 1 even when empty)
+    pub total: u32,
+    /// logical channel ("params", "scalars", …) — checked by the receiver to
+    /// catch collective-order mismatches early.
+    pub tag: String,
+    pub payload: Vec<u8>,
+}
+
+impl ChunkFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u64(self.round);
+        w.u8(self.phase);
+        w.u32(self.origin);
+        w.u32(self.chunk);
+        w.u32(self.total);
+        w.str(&self.tag);
+        w.bytes(&self.payload);
+        w.into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<ChunkFrame> {
+        let mut r = Reader::new(bytes);
+        let f = ChunkFrame {
+            round: r.u64()?,
+            phase: r.u8()?,
+            origin: r.u32()?,
+            chunk: r.u32()?,
+            total: r.u32()?,
+            tag: r.str()?,
+            payload: r.bytes()?.to_vec(),
+        };
+        r.expect_end()?;
+        if f.phase > PHASE_BCAST {
+            bail!("bad chunk phase {}", f.phase);
+        }
+        if f.total == 0 {
+            bail!("chunk total must be >= 1");
+        }
+        if f.chunk >= f.total {
+            bail!("chunk index {} out of range for total {}", f.chunk, f.total);
+        }
+        Ok(f)
+    }
+}
+
+/// The ring peer's answer to a delivered chunk: how many chunks its inbox is
+/// currently buffering.  Senders throttle when this exceeds their window, so
+/// a slow rank bounds its predecessor's stream instead of buffering it whole.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkAck {
+    pub backlog: u32,
+}
+
+impl ChunkAck {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u32(self.backlog);
+        w.into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<ChunkAck> {
+        let mut r = Reader::new(bytes);
+        let a = ChunkAck { backlog: r.u32()? };
+        r.expect_end()?;
+        Ok(a)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,6 +318,55 @@ mod tests {
             assert_eq!(GatherReply::decode(&reply.encode()).unwrap(), reply);
         }
         assert!(GatherReply::decode(&[9]).is_err());
+    }
+
+    #[test]
+    fn chunk_frames_roundtrip() {
+        let f = ChunkFrame {
+            round: 12,
+            phase: PHASE_REDUCE,
+            origin: 0,
+            chunk: 3,
+            total: 7,
+            tag: "params".into(),
+            payload: vec![1, 2, 3],
+        };
+        assert_eq!(ChunkFrame::decode(&f.encode()).unwrap(), f);
+        let a = ChunkAck { backlog: 9 };
+        assert_eq!(ChunkAck::decode(&a.encode()).unwrap(), a);
+        // empty payloads stream as one empty chunk
+        let empty = ChunkFrame {
+            round: 0,
+            phase: PHASE_GATHER,
+            origin: 2,
+            chunk: 0,
+            total: 1,
+            tag: "barrier".into(),
+            payload: vec![],
+        };
+        assert_eq!(ChunkFrame::decode(&empty.encode()).unwrap(), empty);
+    }
+
+    #[test]
+    fn malformed_chunk_frames_rejected() {
+        let mut bad_phase = ChunkFrame {
+            round: 1,
+            phase: PHASE_BCAST,
+            origin: 0,
+            chunk: 0,
+            total: 1,
+            tag: "t".into(),
+            payload: vec![],
+        };
+        bad_phase.phase = 9;
+        assert!(ChunkFrame::decode(&bad_phase.encode()).is_err(), "bad phase");
+        let out_of_range = ChunkFrame { phase: PHASE_GATHER, chunk: 5, total: 5, ..bad_phase };
+        assert!(
+            ChunkFrame::decode(&out_of_range.encode()).is_err(),
+            "chunk index must be < total"
+        );
+        let enc = ChunkAck { backlog: 1 }.encode();
+        assert!(ChunkAck::decode(&enc[..enc.len() - 1]).is_err());
     }
 
     #[test]

@@ -117,6 +117,31 @@ fn cast_slice<T>(v: &[T]) -> &[u8] {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Chunked streaming frames (ring collective / bounded-buffer transfers)
+// ---------------------------------------------------------------------------
+
+/// Number of `chunk`-byte frames needed to stream `len` bytes.  Always >= 1:
+/// an empty payload still travels as one empty frame so the receiver learns
+/// the (zero) total without a side channel.
+pub fn chunk_count(len: usize, chunk: usize) -> usize {
+    assert!(chunk > 0, "chunk size must be > 0");
+    if len == 0 {
+        1
+    } else {
+        len.div_ceil(chunk)
+    }
+}
+
+/// Byte range `[lo, hi)` of chunk `index` when streaming `len` bytes in
+/// `chunk`-byte frames.  Indices past the end yield empty ranges.
+pub fn chunk_range(len: usize, chunk: usize, index: usize) -> (usize, usize) {
+    assert!(chunk > 0, "chunk size must be > 0");
+    let lo = (index * chunk).min(len);
+    let hi = (index * chunk + chunk).min(len);
+    (lo, hi)
+}
+
 pub struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
@@ -316,6 +341,30 @@ mod tests {
         let bytes = w.into_bytes();
         let mut r = Reader::new(&bytes);
         assert!(r.bytes().is_err());
+    }
+
+    #[test]
+    fn chunk_math_covers_payload_exactly() {
+        for (len, chunk) in [(0usize, 8usize), (1, 8), (8, 8), (9, 8), (100, 7), (64, 64)] {
+            let n = chunk_count(len, chunk);
+            assert!(n >= 1, "len {len} chunk {chunk}");
+            let mut covered = 0;
+            for i in 0..n {
+                let (lo, hi) = chunk_range(len, chunk, i);
+                assert_eq!(lo, covered, "len {len} chunk {chunk} idx {i}");
+                assert!(hi - lo <= chunk);
+                covered = hi;
+            }
+            assert_eq!(covered, len, "chunks must cover the payload exactly");
+            // every chunk but the last is full-size
+            for i in 0..n.saturating_sub(1) {
+                let (lo, hi) = chunk_range(len, chunk, i);
+                assert_eq!(hi - lo, chunk);
+            }
+            // past-the-end indices are empty
+            let (lo, hi) = chunk_range(len, chunk, n + 3);
+            assert_eq!(lo, hi);
+        }
     }
 
     #[test]

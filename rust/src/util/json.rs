@@ -114,12 +114,6 @@ impl Json {
 
     // ---- serialize --------------------------------------------------------
 
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s, None, 0);
-        s
-    }
-
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, Some(1), 0);
@@ -175,9 +169,14 @@ impl Json {
     }
 }
 
+// `to_string()` comes from the `ToString` blanket impl over this Display
+// (an inherent `to_string` would shadow it — clippy's
+// inherent_to_string_shadow_display).
 impl fmt::Display for Json {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(&self.to_string())
+        let mut s = String::new();
+        self.write(&mut s, None, 0);
+        f.write_str(&s)
     }
 }
 

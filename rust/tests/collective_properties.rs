@@ -8,6 +8,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use gcore::coordinator::collective::{Collective, CollectiveBackend};
+use gcore::coordinator::ring_collective::{RingCollective, RingInbox, RingPeer};
 use gcore::coordinator::rpc_collective::{RendezvousHost, RpcCollective};
 use gcore::prop_assert;
 use gcore::rpc::client::RetryPolicy;
@@ -123,6 +124,125 @@ fn rpc_collective_bitwise_matches_inproc_under_faults() {
         );
         Ok(())
     });
+}
+
+/// Build an in-process ring whose successor transports go through `wrap`
+/// (identity or fault injection).  Returns (inboxes, collectives).
+fn ring_group<T, F>(
+    world: usize,
+    chunk_bytes: usize,
+    wrap: F,
+) -> (Vec<Arc<RingInbox>>, Vec<Arc<Collective>>)
+where
+    T: gcore::rpc::transport::Transport + 'static,
+    F: Fn(usize, Arc<gcore::rpc::server::RpcServer<RingPeer>>) -> T,
+{
+    let inboxes: Vec<Arc<RingInbox>> = (0..world).map(|_| RingInbox::new()).collect();
+    let servers: Vec<_> = inboxes.iter().map(|ib| RingPeer::serve(ib.clone())).collect();
+    let collectives = (0..world)
+        .map(|rank| {
+            let succ = wrap(rank, servers[(rank + 1) % world].clone());
+            Collective::with_backend(Arc::new(
+                RingCollective::new(rank, world, inboxes[rank].clone(), succ)
+                    .with_chunk_bytes(chunk_bytes)
+                    .with_window(2)
+                    .with_round_timeout(Duration::from_secs(60)),
+            ))
+        })
+        .collect();
+    (inboxes, collectives)
+}
+
+#[test]
+fn ring_collective_bitwise_matches_inproc_under_faults() {
+    // The tentpole invariant: the chunked streaming ring — driven through
+    // drops, duplicate deliveries and lost responses — must reproduce the
+    // in-proc backend's all-reduce bit-for-bit, because both accumulate in
+    // strict rank order.
+    prop::check_n("ring-collective-bitwise", 24, |rng| {
+        let world = 2 + rng.below(3); // 2..=4 ranks
+        let rounds = 1 + rng.below(3);
+        let shapes: Vec<usize> = (0..1 + rng.below(2)).map(|_| 1 + rng.below(32)).collect();
+        // tiny chunks force multi-chunk streaming + the credit window
+        let chunk_bytes = 16 + 4 * rng.below(9);
+        let seed = rng.next_u64();
+
+        let inproc = Collective::new(world);
+        let reference = drive(
+            (0..world).map(|_| inproc.clone()).collect(),
+            shapes.clone(),
+            rounds,
+            seed,
+        )?;
+
+        let (inboxes, collectives) = ring_group(world, chunk_bytes, |rank, server| {
+            FlakyTransport::new(
+                InProcTransport::new(server),
+                seed ^ (0xB1A6u64.wrapping_add(rank as u64)),
+            )
+            .with_probs(0.15, 0.25, 0.15)
+        });
+        let ring_results = drive(collectives, shapes, rounds, seed)?;
+
+        for (rank, (a, b)) in reference.iter().zip(&ring_results).enumerate() {
+            for (round, (ra, rb)) in a.iter().zip(b).enumerate() {
+                prop_assert!(
+                    bits(ra) == bits(rb),
+                    "rank {rank} round {round}: ring result diverged from in-proc"
+                );
+            }
+        }
+        for (i, ib) in inboxes.iter().enumerate() {
+            prop_assert!(
+                ib.open_chunks() == 0,
+                "ring inbox {i} must drain after the rounds"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ring_full_surface_over_real_tcp_matches_inproc() {
+    // scalars + tokens + barrier + params across 4 ranks over a real
+    // loopback-TCP ring
+    let world = 4;
+    let inproc = Collective::new(world);
+    let (_hosts, ring) = gcore::launch::ring_tcp_group(world, 64).unwrap();
+
+    type Surface = (Vec<f64>, Vec<Vec<Vec<i32>>>, ParamSet);
+    let run_group = |collectives: Vec<Arc<Collective>>| -> Vec<Surface> {
+        let handles: Vec<_> = collectives
+            .into_iter()
+            .enumerate()
+            .map(|(rank, col)| {
+                std::thread::spawn(move || {
+                    col.barrier(rank).unwrap();
+                    let scalars = col
+                        .mean_scalars(rank, vec![rank as f64, 0.1 * rank as f64])
+                        .unwrap();
+                    let tokens = col
+                        .gather_tokens(rank, vec![vec![rank as i32; rank + 1]])
+                        .unwrap();
+                    let set = operand(&[33], rank, 0, 77);
+                    let reduced = col.all_reduce_mean(rank, &set).unwrap();
+                    col.barrier(rank).unwrap();
+                    (scalars, tokens, reduced)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    };
+
+    let a = run_group((0..world).map(|_| inproc.clone()).collect());
+    let b = run_group(ring);
+    for (rank, ((sa, ta, pa), (sb, tb, pb))) in a.iter().zip(&b).enumerate() {
+        let sa_bits: Vec<u64> = sa.iter().map(|f| f.to_bits()).collect();
+        let sb_bits: Vec<u64> = sb.iter().map(|f| f.to_bits()).collect();
+        assert_eq!(sa_bits, sb_bits, "rank {rank} scalars diverged");
+        assert_eq!(ta, tb, "rank {rank} tokens diverged");
+        assert_eq!(bits(pa), bits(pb), "rank {rank} params diverged");
+    }
 }
 
 #[test]

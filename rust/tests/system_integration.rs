@@ -297,6 +297,139 @@ fn tcp_collective_launch_bitwise_matches_inproc_threads() {
 }
 
 #[test]
+fn ring_collective_launch_bitwise_matches_inproc_threads() {
+    // The acceptance bar for the ring backend: four controllers streaming
+    // chunked frames around a loopback-TCP ring must produce a per-step
+    // loss trajectory BIT-IDENTICAL to the in-proc thread launch of the
+    // same config/seed — rank-order chunked accumulation may not perturb
+    // training by a single ULP.
+    let Some(_e) = try_engine() else { return };
+    let cfg = RunConfig {
+        artifacts: "tiny".into(),
+        world: 4,
+        steps: 2,
+        sft_steps: 2,
+        group_size: 4,
+        seed: 23,
+        ring_chunk_bytes: 64, // force multi-chunk gradient streams
+        ..RunConfig::default()
+    };
+    let inproc = gcore::launch::run_training(&cfg).unwrap();
+    let ring = gcore::launch::run_training_ring(&cfg).unwrap();
+
+    assert_eq!(inproc.steps.len(), ring.steps.len());
+    for (a, b) in inproc.steps.iter().zip(&ring.steps) {
+        assert_eq!(
+            a.loss.to_bits(),
+            b.loss.to_bits(),
+            "step {} loss diverged: {} vs {}",
+            a.step,
+            a.loss,
+            b.loss
+        );
+        assert_eq!(a.kl.to_bits(), b.kl.to_bits(), "step {} kl", a.step);
+        assert_eq!(
+            a.mean_reward.to_bits(),
+            b.mean_reward.to_bits(),
+            "step {} reward",
+            a.step
+        );
+        assert_eq!(
+            a.accuracy.to_bits(),
+            b.accuracy.to_bits(),
+            "step {} accuracy",
+            a.step
+        );
+    }
+    let sft_a: Vec<u32> = inproc.sft_losses.iter().map(|l| l.to_bits()).collect();
+    let sft_b: Vec<u32> = ring.sft_losses.iter().map(|l| l.to_bits()).collect();
+    assert_eq!(sft_a, sft_b, "SFT warm-start trajectory diverged");
+    assert_eq!(
+        inproc.eval_after.to_bits(),
+        ring.eval_after.to_bits(),
+        "final evaluation diverged"
+    );
+}
+
+#[test]
+fn tombstone_eviction_under_tcp_load_is_safe() {
+    // A long-job stand-in: many exactly-once calls through a tiny tombstone
+    // bound.  Live entries still dedupe, evicted ones re-execute safely,
+    // and the set never exceeds its capacity.
+    let server = Arc::new(
+        RpcServer::new(|_: &str, p: &[u8]| Ok(p.to_vec())).with_tombstone_capacity(8),
+    );
+    let host = TcpRpcHost::spawn(server.clone()).unwrap();
+    let client = RpcClient::new(TcpTransport::connect(host.addr));
+    for i in 0..100u64 {
+        let v = i.to_le_bytes().to_vec();
+        assert_eq!(client.call("echo", v.clone()).unwrap(), v);
+    }
+    let st = server.stats();
+    assert_eq!(st.executed, 100);
+    assert!(st.tombstones_now <= 8, "tombstones must stay bounded");
+    assert!(st.tombstones_evicted >= 92 - 8, "old tombstones must age out");
+    assert_eq!(st.cached_now, 0, "cleanups must still drain the cache");
+}
+
+#[test]
+fn typed_poison_status_maps_to_worker_exit_code() {
+    use gcore::coordinator::rpc_collective::{CollectiveStatus, RendezvousHost, RpcCollective};
+    use gcore::rpc::transport::InProcTransport;
+
+    // two ranks run mismatched collectives against one rendezvous: the
+    // poison must surface as the TYPED status, and launch must map it to
+    // the stable worker exit code train-dist matches on
+    let server = RendezvousHost::serve(2);
+    let cols: Vec<Arc<gcore::coordinator::collective::Collective>> = (0..2)
+        .map(|_| {
+            gcore::coordinator::collective::Collective::with_backend(Arc::new(
+                RpcCollective::new(InProcTransport::new(server.clone()), 2),
+            ))
+        })
+        .collect();
+    let col1 = cols[0].clone();
+    let h = std::thread::spawn(move || col1.mean_scalars(0, vec![1.0]));
+    let err = cols[1].barrier(1).unwrap_err();
+    let _ = h.join().unwrap(); // other rank errors too; outcome checked below
+
+    assert_eq!(
+        CollectiveStatus::classify_error(&err),
+        Some(CollectiveStatus::Poisoned)
+    );
+    assert_eq!(
+        gcore::launch::worker_exit_code(&err),
+        CollectiveStatus::Poisoned.exit_code()
+    );
+    // the parent decodes that exit code back into a reason
+    assert_eq!(
+        gcore::launch::describe_worker_exit(Some(CollectiveStatus::Poisoned.exit_code())),
+        Some(CollectiveStatus::Poisoned.describe())
+    );
+    // non-collective failures stay on the generic exit code, undecoded
+    let plain = anyhow::anyhow!("disk full");
+    assert_eq!(gcore::launch::worker_exit_code(&plain), 1);
+    assert_eq!(gcore::launch::describe_worker_exit(Some(1)), None);
+    assert_eq!(gcore::launch::describe_worker_exit(None), None);
+
+    // a dead peer times out with the typed status as well
+    let server = RendezvousHost::serve(2);
+    let lonely = gcore::coordinator::collective::Collective::with_backend(Arc::new(
+        RpcCollective::new(InProcTransport::new(server), 2)
+            .with_round_timeout(Duration::from_millis(20)),
+    ));
+    let err = lonely.barrier(0).unwrap_err();
+    assert_eq!(
+        CollectiveStatus::classify_error(&err),
+        Some(CollectiveStatus::RoundTimeout)
+    );
+    assert_eq!(
+        gcore::launch::worker_exit_code(&err),
+        CollectiveStatus::RoundTimeout.exit_code()
+    );
+}
+
+#[test]
 fn flaky_transport_duplicates_do_not_reexecute() {
     // duplicates delivered straight to the server (no client involved)
     let count = Arc::new(AtomicU64::new(0));
