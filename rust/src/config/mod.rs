@@ -84,6 +84,13 @@ pub struct RunConfig {
     pub ring_chunk_bytes: usize,
     /// bound on the RPC server's cleanup-tombstone set (ids; oldest evicted)
     pub rpc_tombstone_capacity: usize,
+    /// age bound on cleanup tombstones in milliseconds (0 = count-based
+    /// eviction only); entries older than this re-execute as fresh calls
+    pub rpc_tombstone_ttl_ms: u64,
+    /// size bound for gradient all-reduce buckets (tensor-boundary
+    /// partition; bucket k reduces on the communicator thread while bucket
+    /// k+1 serializes)
+    pub allreduce_bucket_bytes: usize,
 }
 
 impl Default for RunConfig {
@@ -115,6 +122,8 @@ impl Default for RunConfig {
             coordinator_port: 0,
             ring_chunk_bytes: 256 * 1024,
             rpc_tombstone_capacity: crate::rpc::server::DEFAULT_TOMBSTONE_CAPACITY,
+            rpc_tombstone_ttl_ms: 0,
+            allreduce_bucket_bytes: 4 * 1024 * 1024,
         }
     }
 }
@@ -192,6 +201,12 @@ impl RunConfig {
                 "rpc_tombstone_capacity" => {
                     cfg.rpc_tombstone_capacity = req_usize(val, key)?
                 }
+                "rpc_tombstone_ttl_ms" => {
+                    cfg.rpc_tombstone_ttl_ms = req_usize(val, key)? as u64
+                }
+                "allreduce_bucket_bytes" => {
+                    cfg.allreduce_bucket_bytes = req_usize(val, key)?
+                }
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -267,6 +282,14 @@ impl RunConfig {
             "rpc_tombstone_capacity",
             Json::Num(self.rpc_tombstone_capacity as f64),
         );
+        put(
+            "rpc_tombstone_ttl_ms",
+            Json::Num(self.rpc_tombstone_ttl_ms as f64),
+        );
+        put(
+            "allreduce_bucket_bytes",
+            Json::Num(self.allreduce_bucket_bytes as f64),
+        );
         Json::Obj(m)
     }
 
@@ -285,6 +308,9 @@ impl RunConfig {
         }
         if self.rpc_tombstone_capacity == 0 {
             bail!("rpc_tombstone_capacity must be >= 1");
+        }
+        if self.allreduce_bucket_bytes < 4 {
+            bail!("allreduce_bucket_bytes must be >= 4 (one f32 element)");
         }
         Ok(())
     }
@@ -418,8 +444,26 @@ mod tests {
             collective: CollectiveMode::Ring,
             ring_chunk_bytes: 64 * 1024,
             rpc_tombstone_capacity: 1024,
+            rpc_tombstone_ttl_ms: 30_000,
+            allreduce_bucket_bytes: 128 * 1024,
             ..RunConfig::default()
         };
         assert_eq!(RunConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+    }
+
+    #[test]
+    fn allreduce_bucket_knob_parses_and_validates() {
+        let j = Json::parse(r#"{"allreduce_bucket_bytes":65536,"rpc_tombstone_ttl_ms":500}"#)
+            .unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.allreduce_bucket_bytes, 65536);
+        assert_eq!(cfg.rpc_tombstone_ttl_ms, 500);
+        // 0 TTL (age expiry disabled) is legal; sub-element buckets are not
+        assert!(RunConfig::from_json(&Json::parse(r#"{"rpc_tombstone_ttl_ms":0}"#).unwrap())
+            .is_ok());
+        assert!(
+            RunConfig::from_json(&Json::parse(r#"{"allreduce_bucket_bytes":2}"#).unwrap())
+                .is_err()
+        );
     }
 }

@@ -30,13 +30,16 @@
 //! blocks until every controller of the group has contributed, then returns
 //! all values to all ranks (all-gather semantics).
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::params::ParamSet;
 use crate::runtime::tensor::Tensor;
 use crate::util::codec::{Reader, Writer};
+use crate::util::pod;
 
 struct Slots<T> {
     generation: u64,
@@ -159,17 +162,42 @@ impl ReduceOp {
         }
         match self {
             ReduceOp::SumF32 => {
-                for (a, b) in acc.chunks_exact_mut(4).zip(incoming.chunks_exact(4)) {
-                    let s = f32::from_le_bytes([a[0], a[1], a[2], a[3]])
-                        + f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
-                    a.copy_from_slice(&s.to_le_bytes());
+                // aligned LE buffers sum as plain &[f32] slices (the SIMD-
+                // friendly fast path); misaligned/BE falls back per element
+                match (pod::bytes_as_f32_mut(acc), pod::bytes_as_f32(incoming)) {
+                    (Some(a), Some(b)) => {
+                        for (x, &y) in a.iter_mut().zip(b) {
+                            *x += y;
+                        }
+                        return Ok(());
+                    }
+                    _ => {
+                        for (a, b) in acc.chunks_exact_mut(4).zip(incoming.chunks_exact(4)) {
+                            let s = f32::from_le_bytes([a[0], a[1], a[2], a[3]])
+                                + f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+                            a.copy_from_slice(&s.to_le_bytes());
+                        }
+                    }
                 }
             }
             ReduceOp::SumF64 => {
-                for (a, b) in acc.chunks_exact_mut(8).zip(incoming.chunks_exact(8)) {
-                    let s = f64::from_le_bytes([a[0], a[1], a[2], a[3], a[4], a[5], a[6], a[7]])
-                        + f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]);
-                    a.copy_from_slice(&s.to_le_bytes());
+                match (pod::bytes_as_f64_mut(acc), pod::bytes_as_f64(incoming)) {
+                    (Some(a), Some(b)) => {
+                        for (x, &y) in a.iter_mut().zip(b) {
+                            *x += y;
+                        }
+                        return Ok(());
+                    }
+                    _ => {
+                        for (a, b) in acc.chunks_exact_mut(8).zip(incoming.chunks_exact(8)) {
+                            let s =
+                                f64::from_le_bytes([a[0], a[1], a[2], a[3], a[4], a[5], a[6], a[7]])
+                                    + f64::from_le_bytes([
+                                        b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+                                    ]);
+                            a.copy_from_slice(&s.to_le_bytes());
+                        }
+                    }
                 }
             }
         }
@@ -278,9 +306,7 @@ pub fn decode_param_set(bytes: &[u8]) -> Result<ParamSet> {
 pub fn encode_param_flat(set: &ParamSet) -> Result<Vec<u8>> {
     let mut buf = Vec::with_capacity(set.num_elements() * 4);
     for t in &set.tensors {
-        for x in t.as_f32()? {
-            buf.extend_from_slice(&x.to_le_bytes());
-        }
+        pod::extend_le_f32(&mut buf, t.as_f32()?);
     }
     Ok(buf)
 }
@@ -301,10 +327,7 @@ pub fn decode_param_flat(bytes: &[u8], like: &ParamSet) -> Result<ParamSet> {
         .iter()
         .map(|t| {
             let n = t.len();
-            let vals: Vec<f32> = bytes[pos..pos + 4 * n]
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
+            let vals = pod::to_f32_vec(&bytes[pos..pos + 4 * n]);
             pos += 4 * n;
             Tensor::f32(t.shape.clone(), vals)
         })
@@ -312,11 +335,141 @@ pub fn decode_param_flat(bytes: &[u8], like: &ParamSet) -> Result<ParamSet> {
     Ok(ParamSet::new(tensors))
 }
 
+/// In-place variant of [`decode_param_flat`]: overwrite `out`'s tensors
+/// from flat f32 bytes without allocating.  (The bucketed reduce path does
+/// the same per bucket via `Tensor::copy_from_le_f32_bytes`; this is the
+/// whole-set primitive for callers that hold a reusable set.)
+pub fn decode_param_flat_into(bytes: &[u8], out: &mut ParamSet) -> Result<()> {
+    if bytes.len() != out.num_elements() * 4 {
+        bail!(
+            "flat param payload is {} bytes, local shapes need {}",
+            bytes.len(),
+            out.num_elements() * 4
+        );
+    }
+    let mut pos = 0usize;
+    for t in &mut out.tensors {
+        let n = t.len() * 4;
+        t.copy_from_le_f32_bytes(&bytes[pos..pos + n])?;
+        pos += n;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Bucketed, overlapped gradient reduction
+// ---------------------------------------------------------------------------
+
+/// One bucket of a [`plan_reduce_buckets`] partition: a contiguous run of
+/// tensors (`tensors`) and its byte span in the flat wire layout (`bytes`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReduceBucket {
+    pub tensors: Range<usize>,
+    pub bytes: Range<usize>,
+}
+
+/// Partition `set` into size-bounded buckets on tensor boundaries: tensors
+/// pack greedily until adding the next one would exceed `bucket_bytes`
+/// (a single tensor larger than the bound gets its own bucket).  The plan
+/// is a pure function of the tensor shapes and the bound, so SPMD ranks —
+/// which share manifest-pinned shapes and the `allreduce_bucket_bytes`
+/// config — always compute identical plans.
+pub fn plan_reduce_buckets(set: &ParamSet, bucket_bytes: usize) -> Vec<ReduceBucket> {
+    let cap = bucket_bytes.max(4);
+    let mut out = Vec::new();
+    let (mut t0, mut b0, mut pos) = (0usize, 0usize, 0usize);
+    for (i, t) in set.tensors.iter().enumerate() {
+        let sz = t.len() * 4;
+        if pos > b0 && pos - b0 + sz > cap {
+            out.push(ReduceBucket { tensors: t0..i, bytes: b0..pos });
+            t0 = i;
+            b0 = pos;
+        }
+        pos += sz;
+    }
+    if t0 < set.tensors.len() || out.is_empty() {
+        out.push(ReduceBucket { tensors: t0..set.tensors.len(), bytes: b0..pos });
+    }
+    out
+}
+
+/// One in-flight asynchronous reduction, issued through a rank's
+/// communicator thread.  `wait` blocks until the reduced buffer is back.
+pub struct ReduceHandle {
+    rx: mpsc::Receiver<Result<Vec<u8>>>,
+}
+
+impl ReduceHandle {
+    pub fn wait(self) -> Result<Vec<u8>> {
+        match self.rx.recv() {
+            Ok(res) => res,
+            Err(_) => bail!("communicator thread dropped an in-flight reduction"),
+        }
+    }
+}
+
+/// A bucketed mean-reduce in flight: buckets were submitted in plan order
+/// to the rank's communicator thread; `wait` drains them in the same order,
+/// decoding + scaling each bucket while later buckets are still on the
+/// wire.
+pub struct ReduceMeanHandle {
+    plan: Vec<ReduceBucket>,
+    handles: Vec<ReduceHandle>,
+    out: ParamSet,
+    world: usize,
+}
+
+impl ReduceMeanHandle {
+    pub fn buckets(&self) -> usize {
+        self.plan.len()
+    }
+
+    pub fn wait(mut self) -> Result<ParamSet> {
+        let scale = 1.0 / self.world as f32;
+        for (bucket, handle) in self.plan.iter().zip(self.handles) {
+            let summed = handle.wait()?;
+            if summed.len() != bucket.bytes.len() {
+                bail!(
+                    "reduced bucket is {} bytes, expected {}",
+                    summed.len(),
+                    bucket.bytes.len()
+                );
+            }
+            let mut pos = 0usize;
+            for t in &mut self.out.tensors[bucket.tensors.clone()] {
+                let n = t.len() * 4;
+                t.copy_from_le_f32_bytes(&summed[pos..pos + n])?;
+                pos += n;
+                t.scale(scale)?;
+            }
+        }
+        Ok(self.out)
+    }
+}
+
+/// A job queued to a rank's communicator thread.
+struct CommJob {
+    rank: usize,
+    tag: String,
+    payload: Vec<u8>,
+    op: ReduceOp,
+    reply: mpsc::Sender<Result<Vec<u8>>>,
+}
+
 /// The full collective set one controller group shares.  All values travel
 /// as codec frames through the backend, so the same call pattern runs over
 /// threads, the in-proc RPC transport, or TCP between OS processes.
+///
+/// Each rank additionally gets a lazily-spawned **communicator thread**
+/// (`all_reduce_async`): reductions submitted to it run strictly in
+/// submission order while the rank's compute thread keeps working — the
+/// overlap that makes bucketed gradient reduction pay.  While a rank has
+/// async reductions in flight it must not issue other collectives (the
+/// lockstep tag protocol still applies, it just runs on the communicator).
 pub struct Collective {
     backend: Arc<dyn CollectiveBackend>,
+    /// rank → job queue of that rank's communicator thread
+    comms: Mutex<HashMap<usize, mpsc::Sender<CommJob>>>,
 }
 
 impl Collective {
@@ -327,11 +480,119 @@ impl Collective {
 
     /// Group coordinated by an explicit backend (e.g. `RpcCollective`).
     pub fn with_backend(backend: Arc<dyn CollectiveBackend>) -> Arc<Collective> {
-        Arc::new(Collective { backend })
+        Arc::new(Collective { backend, comms: Mutex::new(HashMap::new()) })
     }
 
     pub fn world_size(&self) -> usize {
         self.backend.world_size()
+    }
+
+    /// The job queue of `rank`'s communicator thread, spawning it on first
+    /// use.  The thread owns only the backend handle; it exits when the
+    /// `Collective` (and with it every queue sender) is dropped.
+    fn comm_sender(&self, rank: usize) -> mpsc::Sender<CommJob> {
+        let mut comms = self.comms.lock().unwrap();
+        comms
+            .entry(rank)
+            .or_insert_with(|| {
+                let (tx, rx) = mpsc::channel::<CommJob>();
+                let backend = self.backend.clone();
+                std::thread::spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        let res = backend.all_reduce(job.rank, &job.tag, job.payload, job.op);
+                        let _ = job.reply.send(res);
+                    }
+                });
+                tx
+            })
+            .clone()
+    }
+
+    /// Submit one reduction to `rank`'s communicator thread and return
+    /// immediately.  Jobs run strictly in submission order, so as long as
+    /// every rank submits the same tag sequence the lockstep protocol is
+    /// preserved exactly as for synchronous calls.
+    pub fn all_reduce_async(
+        &self,
+        rank: usize,
+        tag: &str,
+        payload: Vec<u8>,
+        op: ReduceOp,
+    ) -> ReduceHandle {
+        let (reply, rx) = mpsc::channel();
+        let job = CommJob { rank, tag: tag.to_string(), payload, op, reply };
+        if let Err(mpsc::SendError(job)) = self.comm_sender(rank).send(job) {
+            // communicator thread died (panic): surface through the handle
+            let _ = job
+                .reply
+                .send(Err(anyhow!("communicator thread for rank {rank} is gone")));
+        }
+        ReduceHandle { rx }
+    }
+
+    /// Mean-reduce a gradient set as size-bounded buckets streamed through
+    /// the rank's communicator thread: bucket *k* is on the wire while
+    /// bucket *k+1* serializes here, and `ReduceMeanHandle::wait` decodes +
+    /// scales finished buckets while later ones are still in flight.  Each
+    /// bucket is folded in strict rank order, so the result is bit-identical
+    /// to the monolithic [`Collective::all_reduce_mean`] on every backend
+    /// (asserted in tests/collective_properties.rs).  Takes `set` by value:
+    /// every bucket's bytes are copied onto the wire before any reduced
+    /// bucket lands, so the operand's own storage becomes the output — no
+    /// second full-set allocation on the gradient hot path.
+    pub fn all_reduce_mean_async(
+        &self,
+        rank: usize,
+        set: ParamSet,
+        bucket_bytes: usize,
+    ) -> Result<ReduceMeanHandle> {
+        let plan = plan_reduce_buckets(&set, bucket_bytes);
+        let mut handles = Vec::with_capacity(plan.len());
+        for (k, bucket) in plan.iter().enumerate() {
+            let mut payload = Vec::with_capacity(bucket.bytes.len());
+            for t in &set.tensors[bucket.tensors.clone()] {
+                pod::extend_le_f32(&mut payload, t.as_f32()?);
+            }
+            handles.push(self.all_reduce_async(
+                rank,
+                &format!("params/b{k}"),
+                payload,
+                ReduceOp::SumF32,
+            ));
+        }
+        Ok(ReduceMeanHandle { plan, handles, out: set, world: self.world_size() })
+    }
+
+    /// Synchronous facade over [`Collective::all_reduce_mean_async`] — the
+    /// stage-4 gradient path (`allreduce_bucket_bytes` config knob).
+    pub fn all_reduce_mean_bucketed(
+        &self,
+        rank: usize,
+        set: ParamSet,
+        bucket_bytes: usize,
+    ) -> Result<ParamSet> {
+        self.all_reduce_mean_async(rank, set, bucket_bytes)?.wait()
+    }
+
+    /// Broadcast `bytes` from `root` to every rank over the collective's
+    /// byte channel (weight broadcast).  Implemented as an exchange in
+    /// which only the root contributes a payload; on the ring backend the
+    /// empty contributions travel as single empty frames, so per-rank cost
+    /// stays O(payload).
+    pub fn broadcast_bytes(&self, rank: usize, root: usize, bytes: Vec<u8>) -> Result<Vec<u8>> {
+        if root >= self.world_size() {
+            bail!("broadcast root {root} out of range for world {}", self.world_size());
+        }
+        let payload = if rank == root { bytes } else { Vec::new() };
+        let mut parts = self.backend.exchange(rank, "bytes", payload)?;
+        if parts.len() != self.world_size() {
+            bail!(
+                "broadcast exchange returned {} parts for world {}",
+                parts.len(),
+                self.world_size()
+            );
+        }
+        Ok(parts.swap_remove(root))
     }
 
     /// Mean-reduce a parameter/gradient set across controllers.  The sum is
@@ -533,6 +794,147 @@ mod tests {
         // non-f32 tensors can't travel the reduce path
         let ints = ParamSet::new(vec![Tensor::i32(vec![1], vec![3])]);
         assert!(encode_param_flat(&ints).is_err());
+    }
+
+    #[test]
+    fn decode_param_flat_into_reuses_storage() {
+        let set = ParamSet::new(vec![
+            Tensor::f32(vec![2, 2], vec![1.0, -2.5, f32::MIN_POSITIVE, 4.0]),
+            Tensor::f32(vec![3], vec![-0.0, 7.0, 1e-30]),
+        ]);
+        let flat = encode_param_flat(&set).unwrap();
+        let mut out = ParamSet::new(vec![
+            Tensor::zeros_f32(vec![2, 2]),
+            Tensor::zeros_f32(vec![3]),
+        ]);
+        decode_param_flat_into(&flat, &mut out).unwrap();
+        assert_eq!(out, set);
+        // wrong length rejected
+        assert!(decode_param_flat_into(&flat[..flat.len() - 4], &mut out).is_err());
+    }
+
+    #[test]
+    fn bucket_plan_splits_on_tensor_boundaries() {
+        let set = ParamSet::new(vec![
+            Tensor::zeros_f32(vec![4]),  // 16 bytes
+            Tensor::zeros_f32(vec![2]),  // 8 bytes
+            Tensor::zeros_f32(vec![10]), // 40 bytes (alone, exceeds 24)
+            Tensor::zeros_f32(vec![1]),  // 4 bytes
+        ]);
+        let plan = plan_reduce_buckets(&set, 24);
+        assert_eq!(
+            plan,
+            vec![
+                ReduceBucket { tensors: 0..2, bytes: 0..24 },
+                ReduceBucket { tensors: 2..3, bytes: 24..64 },
+                ReduceBucket { tensors: 3..4, bytes: 64..68 },
+            ]
+        );
+        // bound >= whole set: one bucket
+        let whole = plan_reduce_buckets(&set, 1 << 20);
+        assert_eq!(whole, vec![ReduceBucket { tensors: 0..4, bytes: 0..68 }]);
+        // bound smaller than every tensor: one bucket per tensor
+        let tiny = plan_reduce_buckets(&set, 4);
+        assert_eq!(tiny.len(), 4);
+        for (i, b) in tiny.iter().enumerate() {
+            assert_eq!(b.tensors, i..i + 1);
+        }
+        // buckets tile the byte range exactly
+        let mut pos = 0;
+        for b in &plan {
+            assert_eq!(b.bytes.start, pos);
+            pos = b.bytes.end;
+        }
+        assert_eq!(pos, set.num_elements() * 4);
+        // empty set still plans one (empty) bucket, mirroring the monolithic
+        // path's single empty-payload round
+        let empty = plan_reduce_buckets(&ParamSet::new(vec![]), 64);
+        assert_eq!(empty, vec![ReduceBucket { tensors: 0..0, bytes: 0..0 }]);
+    }
+
+    #[test]
+    fn bucketed_mean_matches_monolithic_inproc() {
+        let col = Collective::new(2);
+        let a = ParamSet::new(vec![
+            Tensor::f32(vec![3], vec![1.0, 2.0, 3.0]),
+            Tensor::f32(vec![2], vec![-1.0, 0.5]),
+            Tensor::f32(vec![4], vec![0.25, -0.25, 8.0, 1e-20]),
+        ]);
+        let b = ParamSet::new(vec![
+            Tensor::f32(vec![3], vec![0.5, -2.0, 1.0]),
+            Tensor::f32(vec![2], vec![4.0, 4.0]),
+            Tensor::f32(vec![4], vec![1.0, 1.0, 1.0, 1.0]),
+        ]);
+        // monolithic reference
+        let (m0, m1) = {
+            let col2 = col.clone();
+            let b2 = b.clone();
+            let h = std::thread::spawn(move || col2.all_reduce_mean(1, &b2).unwrap());
+            (col.all_reduce_mean(0, &a).unwrap(), h.join().unwrap())
+        };
+        assert_eq!(m0, m1);
+        // bucketed at 8 bytes (splits every tensor apart) must agree bitwise
+        let (r0, r1) = {
+            let col2 = col.clone();
+            let b2 = b.clone();
+            let h = std::thread::spawn(move || {
+                col2.all_reduce_mean_bucketed(1, b2, 8).unwrap()
+            });
+            (col.all_reduce_mean_bucketed(0, a.clone(), 8).unwrap(), h.join().unwrap())
+        };
+        assert_eq!(r0, m0);
+        assert_eq!(r1, m1);
+        // and at a bound that swallows the whole set
+        let (w0, w1) = {
+            let col2 = col.clone();
+            let h = std::thread::spawn(move || {
+                col2.all_reduce_mean_bucketed(1, b, 1 << 20).unwrap()
+            });
+            (col.all_reduce_mean_bucketed(0, a, 1 << 20).unwrap(), h.join().unwrap())
+        };
+        assert_eq!(w0, m0);
+        assert_eq!(w1, m1);
+    }
+
+    #[test]
+    fn async_handles_overlap_and_resolve_in_order() {
+        let col = Collective::new(2);
+        let col2 = col.clone();
+        let h = std::thread::spawn(move || {
+            let ha = col2.all_reduce_async(1, "x", vec![0, 0, 128, 63], ReduceOp::SumF32);
+            let hb = col2.all_reduce_async(1, "y", vec![0, 0, 0, 64], ReduceOp::SumF32);
+            (ha.wait().unwrap(), hb.wait().unwrap())
+        });
+        // both rounds are in flight on the communicator before any wait
+        let ha = col.all_reduce_async(0, "x", vec![0, 0, 128, 63], ReduceOp::SumF32);
+        let hb = col.all_reduce_async(0, "y", vec![0, 0, 0, 64], ReduceOp::SumF32);
+        let (a0, b0) = (ha.wait().unwrap(), hb.wait().unwrap());
+        let (a1, b1) = h.join().unwrap();
+        assert_eq!(a0, a1);
+        assert_eq!(b0, b1);
+        assert_eq!(a0, 2.0f32.to_le_bytes().to_vec()); // 1.0 + 1.0
+        assert_eq!(b0, 4.0f32.to_le_bytes().to_vec()); // 2.0 + 2.0
+    }
+
+    #[test]
+    fn broadcast_bytes_delivers_root_payload_to_all() {
+        let col = Collective::new(3);
+        let payload = vec![9u8, 8, 7, 6, 5];
+        let handles: Vec<_> = (0..3)
+            .map(|rank| {
+                let col = col.clone();
+                let p = payload.clone();
+                std::thread::spawn(move || {
+                    let mine = if rank == 1 { p } else { Vec::new() };
+                    col.broadcast_bytes(rank, 1, mine).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), payload);
+        }
+        // out-of-range root rejected
+        assert!(Collective::new(1).broadcast_bytes(0, 5, vec![]).is_err());
     }
 
     #[test]

@@ -143,7 +143,11 @@ impl Controller {
         let loss = out.pop().unwrap().scalar_value_f32()?;
         let grads = ParamSet::new(out);
         let grads = if self.collective.world_size() > 1 {
-            self.collective.all_reduce_mean(self.rank, &grads)?
+            self.collective.all_reduce_mean_bucketed(
+                self.rank,
+                grads,
+                self.cfg.allreduce_bucket_bytes,
+            )?
         } else {
             grads
         };
@@ -378,8 +382,14 @@ impl Controller {
             let kl = out.pop().unwrap().scalar_value_f32()?;
             let loss = out.pop().unwrap().scalar_value_f32()?;
             let grads = ParamSet::new(out);
+            // bucketed + overlapped: bucket k is on the wire (communicator
+            // thread) while bucket k+1 serializes and finished buckets
+            // decode/scale in the grads' own storage — bit-identical to the
+            // monolithic reduce
+            let bucket_bytes = self.cfg.allreduce_bucket_bytes;
             let grads = self.timers.time("4_grad_allreduce", || {
-                self.collective.all_reduce_mean(self.rank, &grads)
+                self.collective
+                    .all_reduce_mean_bucketed(self.rank, grads, bucket_bytes)
             })?;
             self.state
                 .apply_grads(&self.engine, "adam_policy", &grads, self.cfg.lr)?;

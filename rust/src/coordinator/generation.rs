@@ -129,11 +129,12 @@ fn generate_stepwise(
         );
     }
 
-    // prefill
+    // prefill — borrowed params: no clone of the multi-MB parameter set
     let flat: Vec<i32> = prompts.iter().flatten().copied().collect();
-    let mut inputs = params.tensors.clone();
-    inputs.push(Tensor::i32(vec![b, p], flat));
-    let mut out = engine.run("prefill", &inputs)?;
+    let rows_t = Tensor::i32(vec![b, p], flat);
+    let mut inputs: Vec<&Tensor> = params.tensors.iter().collect();
+    inputs.push(&rows_t);
+    let mut out = engine.run_refs("prefill", &inputs)?;
     let mut logits = out.remove(0);
     let mut ck = out.remove(0);
     let mut cv = out.remove(0);
@@ -168,13 +169,18 @@ fn generate_stepwise(
             }
             break;
         }
-        // decode next position
-        let mut inputs = params.tensors.clone();
-        inputs.push(ck);
-        inputs.push(cv);
-        inputs.push(Tensor::i32(vec![b], step_tokens));
-        inputs.push(Tensor::scalar_i32(pos as i32));
-        let mut out = engine.run("decode_step", &inputs)?;
+        // decode next position — borrowed params + caches, so per-token
+        // cost is O(step inputs), not O(params) (the old loop cloned the
+        // full ParamSet every token)
+        let step_t = Tensor::i32(vec![b], step_tokens);
+        let pos_t = Tensor::scalar_i32(pos as i32);
+        let mut inputs: Vec<&Tensor> = params.tensors.iter().collect();
+        inputs.push(&ck);
+        inputs.push(&cv);
+        inputs.push(&step_t);
+        inputs.push(&pos_t);
+        let mut out = engine.run_refs("decode_step", &inputs)?;
+        drop(inputs);
         logits = out.remove(0);
         ck = out.remove(0);
         cv = out.remove(0);

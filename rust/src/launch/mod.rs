@@ -34,12 +34,15 @@
 
 use std::net::SocketAddr;
 use std::sync::Arc;
+use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::{CheckpointManager, CheckpointMeta, ShardState};
 use crate::config::{CollectiveMode, RunConfig};
-use crate::coordinator::collective::{Collective, CollectiveBackend};
+use crate::coordinator::collective::{
+    decode_param_set, encode_param_set, Collective, CollectiveBackend,
+};
 use crate::coordinator::controller::{Controller, StepStats};
 use crate::coordinator::pretrain;
 use crate::coordinator::ring_collective::{RingCollective, RingInbox, RingPeer};
@@ -50,6 +53,7 @@ use crate::rpc::transport::{TcpRpcHost, TcpTransport};
 use crate::runtime::engine::Engine;
 use crate::runtime::params::{init_policy, ParamSet};
 use crate::storage::dataloader::LoaderState;
+use crate::util::codec::{Reader, Writer};
 
 #[derive(Debug, Clone, Default)]
 pub struct TrainReport {
@@ -98,6 +102,79 @@ fn clone_rewarder(r: &Rewarder) -> Rewarder {
         verifier_params: r.verifier_params.clone(),
         verdict_mode: r.verdict_mode,
     }
+}
+
+/// Wire form of a pre-trained rewarder: final metric + the reward-model
+/// parameter set (the kind/verdict mode come from the shared config, so
+/// only the weights travel).  Used by [`broadcast_rewarder`].
+pub fn encode_rewarder(r: &Rewarder, metric: f32) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.f32(metric);
+    let params = r.bt_params.as_ref().or_else(|| r.verifier_params.as_ref());
+    match params {
+        Some(set) => {
+            w.u8(1);
+            w.bytes(&encode_param_set(set));
+        }
+        None => w.u8(0),
+    }
+    w.into_bytes()
+}
+
+/// Inverse of [`encode_rewarder`]: rebuild the rewarder for `cfg.reward`
+/// from broadcast bytes.
+pub fn decode_rewarder(cfg: &RunConfig, bytes: &[u8]) -> Result<(Rewarder, f32)> {
+    let mut r = Reader::new(bytes);
+    let metric = r.f32()?;
+    let has_params = r.u8()? == 1;
+    let params = if has_params { Some(decode_param_set(r.bytes()?)?) } else { None };
+    r.expect_end()?;
+    let rewarder = match cfg.reward {
+        RewardKind::GroundTruth => Rewarder::ground_truth(),
+        RewardKind::BradleyTerry => Rewarder::bradley_terry(
+            params.context("broadcast Bradley-Terry rewarder carries no params")?,
+        ),
+        RewardKind::Generative => Rewarder::generative(
+            params.context("broadcast generative rewarder carries no params")?,
+            cfg.verdict_mode,
+        ),
+    };
+    Ok((rewarder, metric))
+}
+
+/// Pre-train the reward model on rank 0 only and broadcast the weights to
+/// every rank over the collective's bytes channel (ROADMAP: `train-dist`
+/// workers used to re-derive reward models per process — deterministic but
+/// wasteful).  Every rank, rank 0 included, constructs its rewarder from
+/// the broadcast bytes, so the resulting state is bit-identical across
+/// ranks by construction.  Ground-truth rewarding has no model, and a
+/// world of one has no peers — both skip the broadcast.
+///
+/// Caveat: non-root ranks sit inside the broadcast exchange while rank 0
+/// pre-trains, so the pre-train must finish within the backend's
+/// collective `round_timeout` (300s default — generous for the in-tree
+/// artifact sets; raise it via the backend builder for reward models that
+/// train longer, or the waiting ranks fail fast with a typed timeout).
+pub fn broadcast_rewarder(
+    engine: &Engine,
+    cfg: &RunConfig,
+    collective: &Collective,
+    rank: usize,
+) -> Result<(Rewarder, f32)> {
+    if collective.world_size() == 1 || cfg.reward == RewardKind::GroundTruth {
+        return build_rewarder(engine, cfg);
+    }
+    let payload = if rank == 0 {
+        let (rewarder, metric) = build_rewarder(engine, cfg)?;
+        encode_rewarder(&rewarder, metric)
+    } else {
+        Vec::new()
+    };
+    let bytes = collective.broadcast_bytes(rank, 0, payload)?;
+    if bytes.is_empty() {
+        bail!("rewarder broadcast delivered an empty payload");
+    }
+    decode_rewarder(cfg, &bytes)
 }
 
 /// The full per-rank training body: SFT warm-start → RLHF steps →
@@ -240,7 +317,8 @@ pub fn run_training(cfg: &RunConfig) -> Result<TrainReport> {
 pub fn run_training_tcp(cfg: &RunConfig) -> Result<TrainReport> {
     let server = Arc::new(
         RpcServer::new(RendezvousHost::new(cfg.world))
-            .with_tombstone_capacity(cfg.rpc_tombstone_capacity),
+            .with_tombstone_capacity(cfg.rpc_tombstone_capacity)
+            .with_tombstone_ttl(Duration::from_millis(cfg.rpc_tombstone_ttl_ms)),
     );
     let host = TcpRpcHost::spawn(server)?;
     let addr = host.addr;
@@ -268,6 +346,7 @@ pub fn ring_tcp_group_with<T, F>(
     world: usize,
     chunk_bytes: usize,
     tombstone_capacity: usize,
+    tombstone_ttl_ms: u64,
     connect: F,
 ) -> Result<(Vec<TcpRpcHost>, Vec<Arc<Collective>>)>
 where
@@ -280,7 +359,8 @@ where
         .map(|ib| {
             let server = Arc::new(
                 RpcServer::new(RingPeer::new(ib.clone()))
-                    .with_tombstone_capacity(tombstone_capacity),
+                    .with_tombstone_capacity(tombstone_capacity)
+                    .with_tombstone_ttl(Duration::from_millis(tombstone_ttl_ms)),
             );
             TcpRpcHost::spawn(server)
         })
@@ -307,6 +387,7 @@ pub fn ring_tcp_group(
         world,
         chunk_bytes,
         crate::rpc::server::DEFAULT_TOMBSTONE_CAPACITY,
+        0,
         |_, addr| TcpTransport::connect(addr),
     )
 }
@@ -319,6 +400,7 @@ pub fn run_training_ring(cfg: &RunConfig) -> Result<TrainReport> {
         cfg.world,
         cfg.ring_chunk_bytes,
         cfg.rpc_tombstone_capacity,
+        cfg.rpc_tombstone_ttl_ms,
         |_, addr| TcpTransport::connect(addr),
     )?;
     let report = run_threads(cfg, collectives);
@@ -334,9 +416,12 @@ pub fn serve_coordinator(
     world: usize,
     port: u16,
     tombstone_capacity: usize,
+    tombstone_ttl_ms: u64,
 ) -> Result<TcpRpcHost> {
     let server = Arc::new(
-        RpcServer::new(RendezvousHost::new(world)).with_tombstone_capacity(tombstone_capacity),
+        RpcServer::new(RendezvousHost::new(world))
+            .with_tombstone_capacity(tombstone_capacity)
+            .with_tombstone_ttl(Duration::from_millis(tombstone_ttl_ms)),
     );
     TcpRpcHost::spawn_on(&format!("127.0.0.1:{port}"), server)
 }
@@ -358,7 +443,8 @@ fn build_worker_collective(
             let inbox = RingInbox::new();
             let server = Arc::new(
                 RpcServer::new(RingPeer::new(inbox.clone()))
-                    .with_tombstone_capacity(cfg.rpc_tombstone_capacity),
+                    .with_tombstone_capacity(cfg.rpc_tombstone_capacity)
+                    .with_tombstone_ttl(Duration::from_millis(cfg.rpc_tombstone_ttl_ms)),
             );
             let host = TcpRpcHost::spawn(server)?;
             let addrs = boot
@@ -383,15 +469,17 @@ fn build_worker_collective(
 
 /// One `train-worker` OS process: rank `rank` of `cfg.world`, coordinating
 /// only through the collective rooted at `coord`.  Every worker re-derives
-/// the initial policy and (if configured) pre-trains its reward model from
-/// the shared seed, which is deterministic — so all ranks start
-/// bit-identical without a weight broadcast.
+/// the initial policy from the shared seed (one cheap engine call); the
+/// reward model is pre-trained on rank 0 only and broadcast over the
+/// collective's bytes channel ([`broadcast_rewarder`] — the ring's chunked
+/// streaming makes the multi-MB weight frame O(payload) per rank), so all
+/// ranks still start bit-identical.
 pub fn run_worker(cfg: &RunConfig, rank: usize, coord: SocketAddr) -> Result<TrainReport> {
     let engine = Arc::new(Engine::load(&cfg.artifacts)?);
-    let (rewarder, rm_metric) = build_rewarder(&engine, cfg)?;
     let policy = init_policy(&engine, cfg.seed as u32)?;
     // `_ring_host` keeps this rank's inbox service alive until training ends
     let (collective, _ring_host) = build_worker_collective(cfg, rank, coord)?;
+    let (rewarder, rm_metric) = broadcast_rewarder(&engine, cfg, &collective, rank)?;
     let ckpt = cfg
         .checkpoint_dir
         .as_ref()
@@ -417,4 +505,82 @@ pub fn worker_exit_code(err: &anyhow::Error) -> i32 {
 pub fn describe_worker_exit(code: Option<i32>) -> Option<&'static str> {
     code.and_then(CollectiveStatus::from_exit_code)
         .map(|s| s.describe())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reward::VerdictMode;
+    use crate::runtime::tensor::Tensor;
+
+    fn bt_rewarder() -> Rewarder {
+        Rewarder::bradley_terry(ParamSet::new(vec![
+            Tensor::f32(vec![2, 2], vec![0.5, -1.25, f32::MIN_POSITIVE, 3.0]),
+            Tensor::f32(vec![3], vec![-0.0, 9.0, 1e-30]),
+        ]))
+    }
+
+    #[test]
+    fn rewarder_wire_roundtrip_is_bit_exact() {
+        let cfg = RunConfig {
+            reward: RewardKind::BradleyTerry,
+            ..RunConfig::default()
+        };
+        let r = bt_rewarder();
+        let bytes = encode_rewarder(&r, 0.875);
+        let (back, metric) = decode_rewarder(&cfg, &bytes).unwrap();
+        assert_eq!(metric, 0.875);
+        assert_eq!(back.kind, RewardKind::BradleyTerry);
+        assert_eq!(back.bt_params, r.bt_params);
+
+        // generative path carries the verifier weights + config's verdict mode
+        let gcfg = RunConfig {
+            reward: RewardKind::Generative,
+            verdict_mode: VerdictMode::Regex,
+            ..RunConfig::default()
+        };
+        let v = Rewarder::generative(
+            ParamSet::new(vec![Tensor::f32(vec![2], vec![1.0, 2.0])]),
+            VerdictMode::Logit, // overwritten by the config on decode
+        );
+        let (back, _) = decode_rewarder(&gcfg, &encode_rewarder(&v, 0.5)).unwrap();
+        assert_eq!(back.kind, RewardKind::Generative);
+        assert_eq!(back.verdict_mode, VerdictMode::Regex);
+        assert_eq!(back.verifier_params, v.verifier_params);
+
+        // a BT config can't decode a payload without params
+        let no_params = encode_rewarder(&Rewarder::ground_truth(), 1.0);
+        assert!(decode_rewarder(&cfg, &no_params).is_err());
+    }
+
+    #[test]
+    fn rewarder_broadcast_is_bit_identical_across_ranks() {
+        // no engine needed: drive broadcast_bytes + the rewarder codec the
+        // way broadcast_rewarder does, across an in-proc world of 3
+        let world = 3;
+        let col = Collective::new(world);
+        let cfg = RunConfig {
+            reward: RewardKind::BradleyTerry,
+            world,
+            ..RunConfig::default()
+        };
+        let reference = bt_rewarder();
+        let payload = encode_rewarder(&reference, 0.75);
+        let handles: Vec<_> = (0..world)
+            .map(|rank| {
+                let col = col.clone();
+                let cfg = cfg.clone();
+                let payload = if rank == 0 { payload.clone() } else { Vec::new() };
+                std::thread::spawn(move || {
+                    let bytes = col.broadcast_bytes(rank, 0, payload).unwrap();
+                    decode_rewarder(&cfg, &bytes).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let (r, metric) = h.join().unwrap();
+            assert_eq!(metric, 0.75);
+            assert_eq!(r.bt_params, reference.bt_params, "weights must be bit-identical");
+        }
+    }
 }

@@ -31,13 +31,14 @@ USAGE:
               [--steps N] [--reward ground_truth|bt|generative]
               [--dynamic-sampling] [--checkpoint-dir DIR]
               [--collective inproc|tcp|ring] [--ring-chunk-bytes N]
-              [--tombstone-capacity N]
+              [--tombstone-capacity N] [--tombstone-ttl-ms N]
+              [--allreduce-bucket-bytes N]
   gcore train-dist [same flags as train] [--coord-port P]
               spawns N=world OS processes; --collective tcp funnels
               collectives through the rank-0 rendezvous, --collective ring
               streams chunked frames rank-to-rank (bootstrap via the
               rendezvous, then O(payload)/rank; rank 0 prints the report)
-  gcore bench <e1|e2|e3|e4|e5|e7|e8|e8c|e9|all> [--full] [--json out.json]
+  gcore bench <e1|e2|e3|e4|e5|e7|e8|e8c|e9|e9a|all> [--full] [--json out.json]
   gcore simulate [--placement colocate|coexist|dynamic] [--devices N]
                  [--steps N] [--dapo]
   gcore inspect-artifacts [--artifacts tiny]
@@ -79,6 +80,9 @@ fn cfg_from_args(args: &Args) -> Result<RunConfig> {
     cfg.ring_chunk_bytes = args.parse_or("ring-chunk-bytes", cfg.ring_chunk_bytes);
     cfg.rpc_tombstone_capacity =
         args.parse_or("tombstone-capacity", cfg.rpc_tombstone_capacity);
+    cfg.rpc_tombstone_ttl_ms = args.parse_or("tombstone-ttl-ms", cfg.rpc_tombstone_ttl_ms);
+    cfg.allreduce_bucket_bytes =
+        args.parse_or("allreduce-bucket-bytes", cfg.allreduce_bucket_bytes);
     if args.has("dynamic-sampling") {
         cfg.dynamic_sampling = true;
     }
@@ -140,8 +144,12 @@ fn cmd_train_dist(args: &Args) -> Result<()> {
     // the parent hosts the rendezvous service every worker coordinates
     // through (for --collective ring it is only the address bootstrap);
     // workers are full OS processes that never share memory
-    let host =
-        launch::serve_coordinator(cfg.world, cfg.coordinator_port, cfg.rpc_tombstone_capacity)?;
+    let host = launch::serve_coordinator(
+        cfg.world,
+        cfg.coordinator_port,
+        cfg.rpc_tombstone_capacity,
+        cfg.rpc_tombstone_ttl_ms,
+    )?;
     let addr = host.addr;
     println!(
         "[gcore] train-dist: world={} coordinator={addr} artifacts={} collective={}",
@@ -253,7 +261,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let quick = !args.has("full");
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let ids: Vec<&str> = if which == "all" {
-        vec!["e1", "e2", "e3", "e4", "e5", "e7", "e8", "e8c", "e9"]
+        vec!["e1", "e2", "e3", "e4", "e5", "e7", "e8", "e8c", "e9", "e9a"]
     } else {
         vec![which]
     };

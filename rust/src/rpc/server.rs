@@ -7,19 +7,23 @@
 //! the result) and is answered with a hard error — the coordinator's
 //! fail-fast rule then tears the job down.
 //!
-//! Tombstones are BOUNDED: a long job cleans up millions of ids, so the
-//! violation-detection set evicts its oldest entries past
-//! [`DEFAULT_TOMBSTONE_CAPACITY`] (configurable via
+//! Tombstones are BOUNDED, by count and (optionally) by age: a long job
+//! cleans up millions of ids, so the violation-detection set evicts its
+//! oldest entries past [`DEFAULT_TOMBSTONE_CAPACITY`] (configurable via
 //! [`RpcServer::with_tombstone_capacity`] / the `rpc_tombstone_capacity`
-//! config knob).  Eviction trades early violation detection for bounded
-//! memory: a request re-delivered after its tombstone aged out re-executes
-//! as a fresh call instead of erroring.  Services must therefore stay
-//! duplicate-tolerant beyond the tombstone horizon — the in-tree ones are
-//! (the rendezvous host is idempotent per (seq, rank); the ring inbox
-//! drops chunks for rounds it already retired).
+//! config knob) and expires entries older than the TTL set by
+//! [`RpcServer::with_tombstone_ttl`] (the `rpc_tombstone_ttl_ms` knob;
+//! 0 = count-based only).  Eviction/expiry trades early violation
+//! detection for bounded memory: a request re-delivered after its
+//! tombstone aged out re-executes as a fresh call instead of erroring.
+//! Services must therefore stay duplicate-tolerant beyond the tombstone
+//! horizon — the in-tree ones are (the rendezvous host is idempotent per
+//! (seq, rank); the ring inbox drops chunks for rounds it already
+//! retired).
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -30,34 +34,60 @@ use crate::util::codec::Reader;
 pub const DEFAULT_TOMBSTONE_CAPACITY: usize = 1 << 16;
 
 /// FIFO-bounded tombstone set: O(1) insert/lookup, oldest ids evicted once
-/// `cap` is exceeded.
+/// `cap` is exceeded, and — when a TTL is set — expired once older than it
+/// (entries are in insertion order, so expiry only ever pops the front).
 struct TombstoneSet {
     cap: usize,
-    order: VecDeque<u64>,
+    ttl: Option<Duration>,
+    order: VecDeque<(u64, Instant)>,
     ids: HashSet<u64>,
     evicted: u64,
+    expired: u64,
 }
 
 impl TombstoneSet {
     fn new(cap: usize) -> TombstoneSet {
         assert!(cap >= 1, "tombstone capacity must be >= 1");
-        TombstoneSet { cap, order: VecDeque::new(), ids: HashSet::new(), evicted: 0 }
+        TombstoneSet {
+            cap,
+            ttl: None,
+            order: VecDeque::new(),
+            ids: HashSet::new(),
+            evicted: 0,
+            expired: 0,
+        }
+    }
+
+    /// Drop every entry older than the TTL (front of the queue first).
+    fn purge_expired(&mut self) {
+        let Some(ttl) = self.ttl else { return };
+        let now = Instant::now();
+        while let Some(&(id, at)) = self.order.front() {
+            if now.duration_since(at) <= ttl {
+                break;
+            }
+            self.order.pop_front();
+            self.ids.remove(&id);
+            self.expired += 1;
+        }
     }
 
     fn insert(&mut self, id: u64) {
+        self.purge_expired();
         if !self.ids.insert(id) {
             return; // already tombstoned (duplicate cleanup)
         }
-        self.order.push_back(id);
+        self.order.push_back((id, Instant::now()));
         while self.order.len() > self.cap {
-            if let Some(old) = self.order.pop_front() {
+            if let Some((old, _)) = self.order.pop_front() {
                 self.ids.remove(&old);
                 self.evicted += 1;
             }
         }
     }
 
-    fn contains(&self, id: u64) -> bool {
+    fn contains(&mut self, id: u64) -> bool {
+        self.purge_expired();
         self.ids.contains(&id)
     }
 }
@@ -85,6 +115,7 @@ pub struct ServerStats {
     pub cached_now: usize,
     pub tombstones_now: usize,
     pub tombstones_evicted: u64,
+    pub tombstones_expired: u64,
 }
 
 pub struct RpcServer<S: Service> {
@@ -114,7 +145,25 @@ impl<S: Service> RpcServer<S> {
     /// Bound the cleanup-tombstone set to `cap` ids (the
     /// `rpc_tombstone_capacity` config knob).
     pub fn with_tombstone_capacity(mut self, cap: usize) -> Self {
-        *self.tombstones.get_mut().unwrap() = TombstoneSet::new(cap);
+        assert!(cap >= 1, "tombstone capacity must be >= 1");
+        let t = self.tombstones.get_mut().unwrap();
+        t.cap = cap;
+        while t.order.len() > t.cap {
+            if let Some((old, _)) = t.order.pop_front() {
+                t.ids.remove(&old);
+                t.evicted += 1;
+            }
+        }
+        self
+    }
+
+    /// Expire tombstones older than `ttl` (the `rpc_tombstone_ttl_ms`
+    /// config knob; zero disables age-based expiry).  An expired entry's
+    /// request id re-executes as a fresh call — safe for the in-tree
+    /// duplicate-tolerant services, see module docs.
+    pub fn with_tombstone_ttl(mut self, ttl: Duration) -> Self {
+        self.tombstones.get_mut().unwrap().ttl =
+            if ttl.is_zero() { None } else { Some(ttl) };
         self
     }
 
@@ -125,9 +174,11 @@ impl<S: Service> RpcServer<S> {
     pub fn stats(&self) -> ServerStats {
         let mut s = self.stats.lock().unwrap().clone();
         s.cached_now = self.cache.lock().unwrap().len();
-        let t = self.tombstones.lock().unwrap();
+        let mut t = self.tombstones.lock().unwrap();
+        t.purge_expired();
         s.tombstones_now = t.ids.len();
         s.tombstones_evicted = t.evicted;
+        s.tombstones_expired = t.expired;
         s
     }
 
@@ -275,6 +326,42 @@ mod tests {
         let r = s.dispatch(&Request { id: 1, method: "inc".into(), payload: vec![] });
         assert_eq!(r.status, Status::Ok, "evicted entry must re-execute safely");
         assert_eq!(s.stats().executed, 7, "6 originals + 1 re-execution");
+    }
+
+    #[test]
+    fn tombstones_expire_past_the_age_horizon() {
+        let count = AtomicU64::new(0);
+        let s = RpcServer::new(move |_: &str, _: &[u8]| {
+            count.fetch_add(1, Ordering::SeqCst);
+            Ok(count.load(Ordering::SeqCst).to_le_bytes().to_vec())
+        })
+        .with_tombstone_capacity(64)
+        .with_tombstone_ttl(std::time::Duration::from_millis(40));
+
+        s.dispatch(&Request { id: 1, method: "inc".into(), payload: vec![] });
+        s.dispatch(&Request::cleanup(1, 100));
+        // inside the horizon: re-delivery is still a protocol violation
+        let r = s.dispatch(&Request { id: 1, method: "inc".into(), payload: vec![] });
+        assert_eq!(r.status, Status::Err, "live tombstone must flag re-delivery");
+
+        std::thread::sleep(std::time::Duration::from_millis(80));
+        // past the horizon: the tombstone aged out, re-execution is safe
+        let r = s.dispatch(&Request { id: 1, method: "inc".into(), payload: vec![] });
+        assert_eq!(r.status, Status::Ok, "expired tombstone must re-execute");
+        let st = s.stats();
+        assert!(st.tombstones_expired >= 1, "{st:?}");
+        assert_eq!(st.executed, 2, "original + eviction-safe re-execution");
+    }
+
+    #[test]
+    fn zero_ttl_disables_age_expiry() {
+        let s = echo_server().with_tombstone_ttl(std::time::Duration::ZERO);
+        s.dispatch(&Request { id: 1, method: "echo".into(), payload: vec![1] });
+        s.dispatch(&Request::cleanup(1, 2));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let r = s.dispatch(&Request { id: 1, method: "echo".into(), payload: vec![1] });
+        assert_eq!(r.status, Status::Err, "TTL 0 must keep count-based behaviour");
+        assert_eq!(s.stats().tombstones_expired, 0);
     }
 
     #[test]

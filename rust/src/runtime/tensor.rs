@@ -8,6 +8,8 @@
 use anyhow::Context;
 use anyhow::{bail, Result};
 
+use crate::util::pod;
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dtype {
     F32,
@@ -143,12 +145,14 @@ impl Tensor {
         Ok(v[0])
     }
 
-    #[cfg(feature = "pjrt")]
-    fn raw_bytes(&self) -> &[u8] {
+    /// The element storage viewed as raw bytes (native order — equal to the
+    /// little-endian wire order on every supported target).  Zero-copy: the
+    /// codec and the gradient collective serialize straight from this view.
+    pub fn raw_bytes(&self) -> &[u8] {
         match &self.data {
-            TensorData::F32(v) => bytemuck_f32(v),
-            TensorData::I32(v) => bytemuck_i32(v),
-            TensorData::U32(v) => bytemuck_u32(v),
+            TensorData::F32(v) => pod::f32_as_bytes(v),
+            TensorData::I32(v) => pod::i32_as_bytes(v),
+            TensorData::U32(v) => pod::u32_as_bytes(v),
         }
     }
 
@@ -179,16 +183,33 @@ impl Tensor {
 
     // ---- element-wise ops used by the gradient collective -----------------
 
-    /// self += other (f32, shapes must match).
+    /// self += other (f32, shapes must match).  Iterates both storages
+    /// directly — no copy of the right-hand side.
     pub fn add_assign(&mut self, other: &Tensor) -> Result<()> {
         if self.shape != other.shape {
             bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
         }
-        let b = other.as_f32()?.to_vec();
+        let b = other.as_f32()?;
         let a = self.as_f32_mut()?;
-        for (x, y) in a.iter_mut().zip(b) {
+        for (x, &y) in a.iter_mut().zip(b) {
             *x += y;
         }
+        Ok(())
+    }
+
+    /// Overwrite this f32 tensor's elements from little-endian wire bytes
+    /// without allocating (one memcpy on aligned LE buffers) — the
+    /// zero-copy half of `decode_param_flat_into`.
+    pub fn copy_from_le_f32_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        let dst = self.as_f32_mut()?;
+        if bytes.len() != dst.len() * 4 {
+            bail!(
+                "flat payload is {} bytes, tensor needs {}",
+                bytes.len(),
+                dst.len() * 4
+            );
+        }
+        pod::copy_le_f32(bytes, dst);
         Ok(())
     }
 
@@ -209,20 +230,6 @@ impl Tensor {
             .sum::<f64>()
             .sqrt())
     }
-}
-
-// Safe reinterpretation of &[T] as &[u8] for POD element types.
-#[cfg(feature = "pjrt")]
-fn bytemuck_f32(v: &[f32]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
-}
-#[cfg(feature = "pjrt")]
-fn bytemuck_i32(v: &[i32]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
-}
-#[cfg(feature = "pjrt")]
-fn bytemuck_u32(v: &[u32]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 
 #[cfg(test)]
@@ -269,6 +276,31 @@ mod tests {
         let mut a = Tensor::zeros_f32(vec![2]);
         let b = Tensor::zeros_f32(vec![3]);
         assert!(a.add_assign(&b).is_err());
+    }
+
+    #[test]
+    fn raw_bytes_match_le_wire_order() {
+        let t = Tensor::f32(vec![2], vec![1.5, -2.0]);
+        let expect: Vec<u8> = [1.5f32, -2.0].iter().flat_map(|x| x.to_le_bytes()).collect();
+        assert_eq!(t.raw_bytes(), &expect[..]);
+        let ti = Tensor::i32(vec![1], vec![-1]);
+        assert_eq!(ti.raw_bytes(), &[0xFF, 0xFF, 0xFF, 0xFF]);
+    }
+
+    #[test]
+    fn copy_from_le_bytes_fills_in_place() {
+        let mut t = Tensor::zeros_f32(vec![3]);
+        let src: Vec<u8> = [7.0f32, -0.5, 1e-30]
+            .iter()
+            .flat_map(|x| x.to_le_bytes())
+            .collect();
+        t.copy_from_le_f32_bytes(&src).unwrap();
+        assert_eq!(t.as_f32().unwrap(), &[7.0, -0.5, 1e-30]);
+        // wrong length rejected
+        assert!(t.copy_from_le_f32_bytes(&src[..8]).is_err());
+        // non-f32 rejected
+        let mut ti = Tensor::i32(vec![1], vec![0]);
+        assert!(ti.copy_from_le_f32_bytes(&[0; 4]).is_err());
     }
 
     #[test]

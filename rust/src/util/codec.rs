@@ -4,6 +4,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::tensor::{Tensor, TensorData};
+use crate::util::pod;
 
 #[derive(Default)]
 pub struct Writer {
@@ -58,24 +59,18 @@ impl Writer {
 
     pub fn f32s(&mut self, v: &[f32]) {
         self.u32(v.len() as u32);
-        for x in v {
-            self.buf.extend_from_slice(&x.to_le_bytes());
-        }
+        pod::extend_le_f32(&mut self.buf, v);
     }
 
     /// Length-prefixed f64 vector — bit-exact (collective scalar reduction).
     pub fn f64s(&mut self, v: &[f64]) {
         self.u32(v.len() as u32);
-        for x in v {
-            self.buf.extend_from_slice(&x.to_le_bytes());
-        }
+        pod::extend_le_f64(&mut self.buf, v);
     }
 
     pub fn i32s(&mut self, v: &[i32]) {
         self.u32(v.len() as u32);
-        for x in v {
-            self.buf.extend_from_slice(&x.to_le_bytes());
-        }
+        pod::extend_le_i32(&mut self.buf, v);
     }
 
     /// Ragged token rows (collective sample exchange / RPC payloads).
@@ -87,17 +82,17 @@ impl Writer {
     }
 
     pub fn tensor(&mut self, t: &Tensor) {
-        let (tag, raw): (u8, &[u8]) = match &t.data {
-            TensorData::F32(v) => (0, cast_slice(v)),
-            TensorData::I32(v) => (1, cast_slice(v)),
-            TensorData::U32(v) => (2, cast_slice(v)),
+        let tag: u8 = match &t.data {
+            TensorData::F32(_) => 0,
+            TensorData::I32(_) => 1,
+            TensorData::U32(_) => 2,
         };
         self.u8(tag);
         self.u32(t.shape.len() as u32);
         for &d in &t.shape {
             self.u32(d as u32);
         }
-        self.bytes(raw);
+        self.bytes(t.raw_bytes());
     }
 
     pub fn tensors(&mut self, ts: &[Tensor]) {
@@ -105,15 +100,6 @@ impl Writer {
         for t in ts {
             self.tensor(t);
         }
-    }
-}
-
-fn cast_slice<T>(v: &[T]) -> &[u8] {
-    unsafe {
-        std::slice::from_raw_parts(
-            v.as_ptr() as *const u8,
-            std::mem::size_of_val(v),
-        )
     }
 }
 
@@ -199,10 +185,7 @@ impl<'a> Reader<'a> {
     pub fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.u32()? as usize;
         let raw = self.take(n * 4)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        Ok(pod::to_f32_vec(raw))
     }
 
     pub fn f64s(&mut self) -> Result<Vec<f64>> {
@@ -244,11 +227,7 @@ impl<'a> Reader<'a> {
             bail!("tensor payload {} bytes, shape needs {}", raw.len(), n * 4);
         }
         let data = match tag {
-            0 => TensorData::F32(
-                raw.chunks_exact(4)
-                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                    .collect(),
-            ),
+            0 => TensorData::F32(pod::to_f32_vec(raw)),
             1 => TensorData::I32(
                 raw.chunks_exact(4)
                     .map(|c| i32::from_le_bytes(c.try_into().unwrap()))

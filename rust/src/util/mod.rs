@@ -6,5 +6,6 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod codec;
+pub mod pod;
 pub mod prop;
 pub mod rng;

@@ -202,6 +202,182 @@ fn ring_collective_bitwise_matches_inproc_under_faults() {
     });
 }
 
+/// Run `rounds` rounds in which every rank first reduces monolithically,
+/// then bucketed at each bound in `bucket_sizes`; returns, per rank and
+/// round, the monolithic result followed by each bucketed result.
+fn drive_bucketed(
+    collectives: Vec<Arc<Collective>>,
+    shapes: Vec<usize>,
+    rounds: usize,
+    seed: u64,
+    bucket_sizes: Vec<usize>,
+) -> Result<Vec<Vec<Vec<ParamSet>>>, String> {
+    let handles: Vec<_> = collectives
+        .into_iter()
+        .enumerate()
+        .map(|(rank, col)| {
+            let shapes = shapes.clone();
+            let bucket_sizes = bucket_sizes.clone();
+            std::thread::spawn(move || -> Result<Vec<Vec<ParamSet>>, String> {
+                (0..rounds)
+                    .map(|round| {
+                        let set = operand(&shapes, rank, round, seed);
+                        let mut results = vec![col
+                            .all_reduce_mean(rank, &set)
+                            .map_err(|e| format!("rank {rank} round {round} mono: {e:#}"))?];
+                        for &bb in &bucket_sizes {
+                            results.push(
+                                col.all_reduce_mean_bucketed(rank, set.clone(), bb).map_err(
+                                    |e| format!("rank {rank} round {round} bucket {bb}: {e:#}"),
+                                )?,
+                            );
+                        }
+                        Ok(results)
+                    })
+                    .collect()
+            })
+        })
+        .collect();
+    handles
+        .into_iter()
+        .map(|h| h.join().map_err(|_| "rank panicked".to_string())?)
+        .collect()
+}
+
+#[test]
+fn bucketed_allreduce_bitwise_matches_monolithic_across_backends() {
+    // The bucketed/overlapped tentpole invariant: for bucket bounds smaller
+    // than one tensor, mid-sized, and >= the whole set, the async bucketed
+    // reduce must reproduce the monolithic rank-order fold bit-for-bit on
+    // the in-proc backend AND on both RPC backends under drops/duplicates.
+    prop::check_n("bucketed-allreduce-bitwise", 12, |rng| {
+        let world = 2 + rng.below(2); // 2..=3 ranks
+        let rounds = 1 + rng.below(2);
+        // several tensors so sub-tensor bounds really split the set
+        let shapes: Vec<usize> = (0..2 + rng.below(3)).map(|_| 1 + rng.below(24)).collect();
+        let seed = rng.next_u64();
+        // smaller than one tensor / mid / >= whole set
+        let bucket_sizes = vec![4, 64, 1 << 20];
+
+        // in-proc reference: monolithic + bucketed must all agree
+        let inproc = Collective::new(world);
+        let reference = drive_bucketed(
+            (0..world).map(|_| inproc.clone()).collect(),
+            shapes.clone(),
+            rounds,
+            seed,
+            bucket_sizes.clone(),
+        )?;
+        for (rank, per_round) in reference.iter().enumerate() {
+            for (round, results) in per_round.iter().enumerate() {
+                for (i, r) in results[1..].iter().enumerate() {
+                    prop_assert!(
+                        bits(r) == bits(&results[0]),
+                        "rank {rank} round {round}: in-proc bucketed #{i} diverged"
+                    );
+                }
+            }
+        }
+
+        // rendezvous RPC backend under faults
+        let server = RendezvousHost::serve(world);
+        let rpc_cols: Vec<Arc<Collective>> = (0..world)
+            .map(|rank| {
+                let flaky = FlakyTransport::new(
+                    InProcTransport::new(server.clone()),
+                    seed ^ (0xBCE7 + rank as u64),
+                )
+                .with_probs(0.1, 0.2, 0.1);
+                Collective::with_backend(Arc::new(
+                    RpcCollective::new(flaky, world)
+                        .with_retry(RetryPolicy {
+                            max_attempts: 256,
+                            backoff: Duration::from_micros(10),
+                        })
+                        .with_round_timeout(Duration::from_secs(60)),
+                ))
+            })
+            .collect();
+        let rpc_results =
+            drive_bucketed(rpc_cols, shapes.clone(), rounds, seed, bucket_sizes.clone())?;
+
+        // ring backend under faults, tiny chunks
+        let (_inboxes, ring_cols) = ring_group(world, 16, |rank, server| {
+            FlakyTransport::new(
+                InProcTransport::new(server),
+                seed ^ (0x51B6u64.wrapping_add(rank as u64)),
+            )
+            .with_probs(0.1, 0.2, 0.1)
+        });
+        let ring_results = drive_bucketed(ring_cols, shapes, rounds, seed, bucket_sizes)?;
+
+        for (backend, results) in [("rpc", &rpc_results), ("ring", &ring_results)] {
+            for (rank, (a, b)) in reference.iter().zip(results).enumerate() {
+                for (round, (ra, rb)) in a.iter().zip(b).enumerate() {
+                    for (i, (xa, xb)) in ra.iter().zip(rb).enumerate() {
+                        prop_assert!(
+                            bits(xa) == bits(xb),
+                            "rank {rank} round {round} result #{i}: {backend} diverged"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn broadcast_bytes_survives_faults_on_every_backend() {
+    // the weight-broadcast channel: root's payload must arrive bit-exact on
+    // every rank, over the rendezvous RPC and ring backends under faults
+    let world = 3;
+    let payload: Vec<u8> = (0..4096u32)
+        .flat_map(|i| i.wrapping_mul(2654435761).to_le_bytes())
+        .collect();
+
+    let run = |cols: Vec<Arc<Collective>>| -> Vec<Vec<u8>> {
+        let handles: Vec<_> = cols
+            .into_iter()
+            .enumerate()
+            .map(|(rank, col)| {
+                let p = payload.clone();
+                std::thread::spawn(move || {
+                    let mine = if rank == 2 { p } else { Vec::new() };
+                    col.broadcast_bytes(rank, 2, mine).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    };
+
+    let server = RendezvousHost::serve(world);
+    let rpc_cols: Vec<Arc<Collective>> = (0..world)
+        .map(|rank| {
+            let flaky =
+                FlakyTransport::new(InProcTransport::new(server.clone()), 0xB0 + rank as u64)
+                    .with_probs(0.15, 0.25, 0.15);
+            Collective::with_backend(Arc::new(
+                RpcCollective::new(flaky, world).with_retry(RetryPolicy {
+                    max_attempts: 256,
+                    backoff: Duration::from_micros(10),
+                }),
+            ))
+        })
+        .collect();
+    for got in run(rpc_cols) {
+        assert_eq!(got, payload, "rpc broadcast corrupted the payload");
+    }
+
+    let (_inboxes, ring_cols) = ring_group(world, 64, |rank, server| {
+        FlakyTransport::new(InProcTransport::new(server), 0xB1D6 + rank as u64)
+            .with_probs(0.15, 0.25, 0.15)
+    });
+    for got in run(ring_cols) {
+        assert_eq!(got, payload, "ring broadcast corrupted the payload");
+    }
+}
+
 #[test]
 fn ring_full_surface_over_real_tcp_matches_inproc() {
     // scalars + tokens + barrier + params across 4 ranks over a real
