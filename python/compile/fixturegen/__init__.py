@@ -1,0 +1,13 @@
+"""Fixture-artifact generator for the pure-Rust HLO interpreter backend.
+
+This package is the build-time half of `rust/src/runtime/hlo/`: it
+constructs the tiny/synthetic model entry points as HLO op graphs
+(`hlo_builder`), derives their gradients with reverse-mode autodiff
+(`hlo_autodiff`), emits them as HLO *text* in exactly the dialect the Rust
+parser accepts (`modelgen`), and validates everything differentially
+against the repo's real jax model (`validate`) before the artifacts and
+jax-generated goldens are committed under `rust/tests/fixtures/artifacts/`.
+
+CI never runs this code: the artifacts it emits are checked in.  Re-run
+with `python -m compile.fixturegen` after changing the model or op set.
+"""

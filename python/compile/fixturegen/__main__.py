@@ -1,0 +1,77 @@
+"""Regenerate the committed fixture artifact sets + goldens.
+
+    python -m compile.fixturegen [--out ../rust/tests/fixtures]
+
+Steps: emit HLO artifact sets for the `tiny` and `synthetic` configs,
+differentially validate every artifact against the jax model, prove the
+learning-threshold test scenarios pass, then write the artifact text,
+manifests and golden JSONs the Rust test tier consumes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+from . import goldens as goldens_mod
+from . import hlo_eval, simulate, validate
+from .modelgen import SYNTHETIC, TINY, emit_artifacts, manifest_json
+
+# tiny goldens are limited to small-output artifacts (inputs are derived
+# from the recipe either way; outputs for grad/train artifacts would be
+# ~0.5 MB of JSON each at tiny scale)
+TINY_GOLDENS = ["logprob", "value_score", "reward_score"]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    default_out = os.path.join(os.path.dirname(__file__),
+                               "../../../rust/tests/fixtures")
+    ap.add_argument("--out", default=default_out)
+    ap.add_argument("--skip-simulate", action="store_true",
+                    help="skip the learning-threshold simulations (slow)")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+
+    for cfg in (SYNTHETIC, TINY):
+        print(f"== {cfg.name}: emitting ...")
+        arts = emit_artifacts(cfg)
+        tol = 5e-4 if cfg.name == "synthetic" else 2e-3
+        print(f"== {cfg.name}: validating against jax/model.py ...")
+        validate.validate(cfg, arts, tol=tol, verbose=False)
+
+        set_dir = os.path.join(out, "artifacts", cfg.name)
+        os.makedirs(set_dir, exist_ok=True)
+        total = 0
+        for name, text, _, _ in arts:
+            path = os.path.join(set_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            total += len(text)
+        with open(os.path.join(set_dir, "manifest.json"), "w") as f:
+            f.write(manifest_json(cfg, arts))
+        print(f"== {cfg.name}: wrote {len(arts)} artifacts "
+              f"({total / 1e6:.2f} MB HLO text) -> {set_dir}")
+
+        gold_dir = os.path.join(out, "goldens", cfg.name)
+        os.makedirs(gold_dir, exist_ok=True)
+        wanted = (TINY_GOLDENS if cfg.name == "tiny"
+                  else [name for name, _, _, _ in arts])
+        n = 0
+        for name, text, ins, _ in arts:
+            if name not in wanted:
+                continue
+            module = hlo_eval.Module(text)
+            j = goldens_mod.golden_json(cfg, name, module, ins)
+            with open(os.path.join(gold_dir, f"{name}.json"), "w") as f:
+                f.write(j)
+            n += 1
+        print(f"== {cfg.name}: wrote {n} golden files -> {gold_dir}")
+
+    if not args.skip_simulate:
+        print("== simulating the Rust suites' learning-threshold tests ...")
+        simulate.main()
+
+
+if __name__ == "__main__":
+    main()

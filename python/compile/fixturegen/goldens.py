@@ -1,0 +1,164 @@
+"""Golden input/output pairs for the committed fixture artifacts.
+
+Inputs are *derived*, not stored: `golden_input` is a deterministic
+integer-hash recipe implemented identically in Rust
+(`rust/tests/hlo_golden.rs::golden_input`) — keep the two in sync.
+Outputs are computed with **jax** (`model.py` / `ref.py`, the same
+functions `aot.py` lowers), so the Rust interpreter is differentially
+tested against jax on every CI run without CI ever running Python.
+`init_*` has no jax counterpart (jax PRNG lowers to a CPU custom-call);
+its goldens come from the Python evaluator mirror instead.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from .. import model
+from ..kernels import ref
+from . import hlo_eval
+from .validate import model_config, unflatten
+
+
+def _hash(i, j):
+    return ((i * 1000003 + j) * 2654435761) & 0xFFFFFFFF
+
+
+def _unit(u):
+    return (u >> 8) / 16777216.0
+
+
+def golden_input(cfg, index, name, shape, dtype):
+    """Deterministic input for input slot `index` of an artifact.
+    Mirror of the Rust implementation — change both or neither."""
+    n = 1
+    for d in shape:
+        n *= d
+    base = name.rsplit("/", 1)[-1]
+    if dtype == "u32":
+        return np.uint32(42)
+    if dtype == "i32":
+        if base == "pos":
+            return np.int32(cfg.prompt_len)
+        hi = cfg.max_seq - 1 if base.endswith("idx") else cfg.vocab
+        vals = [_hash(index, j) % hi for j in range(n)]
+        return np.array(vals, np.int32).reshape(shape)
+    # f32
+    scalars = {"step": 3.0, "lr": 1e-3, "clip_eps": 0.2,
+               "kl_coef": 0.03, "ent_coef": 0.01}
+    if base in scalars:
+        return np.float32(scalars[base])
+    vals = np.empty(n, np.float64)
+    for j in range(n):
+        vals[j] = _unit(_hash(index, j))
+    if name.startswith("v/"):
+        # Adam second moments must be non-negative
+        out = 1e-4 * vals + 1e-8
+        return out.astype(np.float32).reshape(shape)
+    if base == "mask":
+        out = (np.array([_hash(index, j) & 3 for j in range(n)]) != 0)
+        return out.astype(np.float32).reshape(shape)
+    if base in ("old_logp", "ref_logp"):
+        out = -2.0 * vals - 0.05
+    elif base in ("adv", "returns", "q", "k", "v"):
+        out = 2.0 * vals - 1.0
+    elif base in ("cache_k", "cache_v"):
+        out = 0.1 * vals - 0.05
+    elif name.rsplit("/", 1)[-1] in ("ln1_g", "ln2_g") or base == "lnf_g":
+        out = 1.0 + 0.01 * (vals - 0.5)
+    else:
+        out = 0.04 * vals - 0.02
+    return out.astype(np.float32).reshape(shape)
+
+
+def jax_reference(cfg, name, ins):
+    """Run the jax counterpart of artifact `name` on `ins` (flat list)."""
+    mcfg = model_config(cfg)
+    np17 = 17
+
+    def tree(xs):
+        return unflatten(mcfg, xs, False)
+
+    def stree(xs):
+        return unflatten(mcfg, xs, True)
+
+    def flat(t):
+        return [np.asarray(x, np.float32) for x in jax.tree_util.tree_leaves(t)]
+
+    if name == "fwd_logits":
+        return [np.asarray(model.logits_fn(mcfg, tree(ins[:np17]), ins[np17]))]
+    if name == "logprob":
+        lg = model.logits_fn(mcfg, tree(ins[:np17]), ins[np17])
+        return [np.asarray(ref.token_logprob_ref(lg, ins[np17]))]
+    if name == "value_score":
+        return [np.asarray(model.values_fn(mcfg, stree(ins[:np17]), ins[np17]))]
+    if name == "reward_score":
+        return [np.asarray(model.reward_score(mcfg, stree(ins[:np17]),
+                                              ins[np17], ins[np17 + 1]))]
+    if name == "prefill":
+        out = model.prefill(mcfg, tree(ins[:np17]), ins[np17])
+        return [np.asarray(x) for x in out]
+    if name == "decode_step":
+        out = model.decode_step(mcfg, tree(ins[:np17]), ins[np17],
+                                ins[np17 + 1], ins[np17 + 2], ins[np17 + 3])
+        return [np.asarray(x) for x in out]
+    if name == "policy_grad":
+        g, loss, kl, ent, cf = model.policy_grad(
+            mcfg, tree(ins[:np17]), *ins[np17:])
+        return flat(g) + [np.float32(loss), np.float32(kl),
+                          np.float32(ent), np.float32(cf)]
+    if name == "sft_grad":
+        g, loss = model.sft_grad(mcfg, tree(ins[:np17]), *ins[np17:])
+        return flat(g) + [np.float32(loss)]
+    if name == "critic_grad":
+        g, loss = model.critic_grad(mcfg, stree(ins[:np17]), *ins[np17:])
+        return flat(g) + [np.float32(loss)]
+    if name == "bt_grad":
+        g, loss, acc = model.bt_grad(mcfg, stree(ins[:np17]), *ins[np17:])
+        return flat(g) + [np.float32(loss), np.float32(acc)]
+    if name in ("adam_policy", "adam_scalar"):
+        t = tree if name == "adam_policy" else stree
+        p, m, v = model.adam_apply(
+            mcfg, t(ins[:np17]), t(ins[np17:2 * np17]),
+            t(ins[2 * np17:3 * np17]), t(ins[3 * np17:4 * np17]),
+            ins[4 * np17], ins[4 * np17 + 1])
+        return flat(p) + flat(m) + flat(v)
+    if name == "train_step":
+        out = model.train_step(mcfg, tree(ins[:np17]),
+                               tree(ins[np17:2 * np17]),
+                               tree(ins[2 * np17:3 * np17]), *ins[3 * np17:])
+        return flat(out[0]) + flat(out[1]) + flat(out[2]) + [
+            np.float32(out[3]), np.float32(out[4]), np.float32(out[5]),
+            np.float32(out[6])]
+    return None  # init_*: no jax counterpart
+
+
+def golden_json(cfg, name, module, ins_specs):
+    ins = [golden_input(cfg, i, n, s, d)
+           for i, (n, s, d) in enumerate(ins_specs)]
+    want = jax_reference(cfg, name, ins)
+    source = "jax"
+    if want is None:
+        want = hlo_eval.evaluate(module, ins)
+        source = "hlo_eval"
+    else:
+        # cross-check the evaluator mirror against jax right here
+        got = hlo_eval.evaluate(module, ins)
+        err = max(float(np.max(np.abs(np.asarray(a, np.float32) - w)))
+                  if np.asarray(a).size else 0.0
+                  for a, w in zip(got, want))
+        assert err < 5e-4, f"{name}: hlo_eval vs jax {err}"
+    outs = []
+    for w in want:
+        w = np.asarray(w)
+        dt = {"float32": "f32", "int32": "i32", "uint32": "u32"}[str(w.dtype)]
+        data = ", ".join(repr(float(x)) if dt == "f32" else str(int(x))
+                         for x in w.reshape(-1))
+        shape = ", ".join(str(d) for d in w.shape)
+        outs.append(f'{{"dtype": "{dt}", "shape": [{shape}], '
+                    f'"data": [{data}]}}')
+    return ('{\n"artifact": "%s",\n"source": "%s",\n"atol": 5e-5,\n'
+            '"rtol": 5e-4,\n"outputs": [\n %s\n]\n}\n'
+            % (name, source, ",\n ".join(outs)))

@@ -1,0 +1,204 @@
+"""Reverse-mode autodiff over `hlo_builder.Graph`.
+
+Mirrors what `jax.value_and_grad` does for `python/compile/model.py`, so
+the gradient fixture artifacts are derived, not hand-written.  Conventions
+(exact for the graphs `modelgen` builds):
+
+* `reduce_max` is stop-grad — it only appears as the softmax / logsumexp
+  stabilizer whose gradient contribution cancels analytically;
+* `maximum`/`minimum` route gradients to the left operand on ties (GE/LE);
+* integer/pred ops (`convert` from non-f32, `compare`, `iota`) terminate
+  gradient flow.
+"""
+
+from __future__ import annotations
+
+
+def gradients(g, loss, wrt):
+    assert g.dims(loss) == (), "loss must be scalar"
+    needed = [False] * len(g.nodes)
+    stack = [loss]
+    while stack:
+        i = stack.pop()
+        if needed[i]:
+            continue
+        needed[i] = True
+        stack.extend(g.nodes[i].operands)
+
+    adj = {}
+
+    def acc(node, contrib):
+        if node in adj:
+            adj[node] = g.add(adj[node], contrib)
+        else:
+            adj[node] = contrib
+
+    adj[loss] = g.c_f32(1.0)
+    limit = loss + 1
+    for i in range(limit - 1, -1, -1):
+        if not needed[i] or i not in adj:
+            continue
+        n = g.nodes[i]
+        if n.shape.dtype != "f32":
+            continue
+        grad = adj[i]
+        op = n.op
+        dims = list(n.shape.dims)
+        if op in ("parameter", "constant", "iota"):
+            continue
+        elif op == "add":
+            acc(n.operands[0], grad)
+            acc(n.operands[1], grad)
+        elif op == "subtract":
+            acc(n.operands[0], grad)
+            acc(n.operands[1], g.neg(grad))
+        elif op == "multiply":
+            a, b = n.operands
+            acc(a, g.mul(grad, b))
+            acc(b, g.mul(grad, a))
+        elif op == "divide":
+            a, b = n.operands
+            da = g.div(grad, b)
+            acc(a, da)
+            acc(b, g.neg(g.mul(da, i)))  # -g*a/b^2 == -(g/b)*(a/b)
+        elif op in ("maximum", "minimum"):
+            a, b = n.operands
+            p = g.compare("GE" if op == "maximum" else "LE", a, b)
+            zeros = g.full_f32(0.0, dims)
+            acc(a, g.select(p, grad, zeros))
+            acc(b, g.select(p, zeros, grad))
+        elif op == "negate":
+            acc(n.operands[0], g.neg(grad))
+        elif op == "abs":
+            a = n.operands[0]
+            p = g.compare("GE", a, g.full_f32(0.0, dims))
+            acc(a, g.select(p, grad, g.neg(grad)))
+        elif op == "exponential":
+            acc(n.operands[0], g.mul(grad, i))
+        elif op == "log":
+            acc(n.operands[0], g.div(grad, n.operands[0]))
+        elif op == "tanh":
+            y2 = g.mul(i, i)
+            one_m = g.sub(g.full_f32(1.0, dims), y2)
+            acc(n.operands[0], g.mul(grad, one_m))
+        elif op == "rsqrt":
+            y3 = g.mul(g.mul(i, i), i)
+            acc(n.operands[0], g.mul(grad, g.mul(y3, g.full_f32(-0.5, dims))))
+        elif op == "sqrt":
+            acc(n.operands[0], g.div(g.mul(grad, g.full_f32(0.5, dims)), i))
+        elif op == "select":
+            p, a, b = n.operands
+            zeros = g.full_f32(0.0, dims)
+            acc(a, g.select(p, grad, zeros))
+            acc(b, g.select(p, zeros, grad))
+        elif op == "convert":
+            pass  # int/pred source: no flow
+        elif op == "broadcast":
+            dm = n.attrs["dims"]
+            red = [d for d in range(len(dims)) if d not in dm]
+            acc(n.operands[0], g.reduce_add(grad, red))
+        elif op == "reshape":
+            acc(n.operands[0], g.reshape(grad, list(g.dims(n.operands[0]))))
+        elif op == "transpose":
+            perm = n.attrs["perm"]
+            inv = [0] * len(perm)
+            for k, p in enumerate(perm):
+                inv[p] = k
+            acc(n.operands[0], g.transpose(grad, inv))
+        elif op == "slice":
+            src = n.operands[0]
+            sd = g.dims(src)
+            low = [s for s, _ in n.attrs["spec"]]
+            high = [d - l for (_, l), d in zip(n.attrs["spec"], sd)]
+            acc(src, g.pad_zero(grad, low, high))
+        elif op == "concatenate":
+            dim = n.attrs["dim"]
+            start = 0
+            for part in n.operands:
+                pd = g.dims(part)
+                spec = [(start, start + pd[dim]) if k == dim else (0, d)
+                        for k, d in enumerate(g.dims(grad))]
+                acc(part, g.slice(grad, spec))
+                start += pd[dim]
+        elif op == "pad":
+            src = n.operands[0]
+            spec = [(lo, lo + d) for lo, d in
+                    zip(n.attrs["low"], g.dims(src))]
+            acc(src, g.slice(grad, spec))
+        elif op == "reduce_add":
+            src = n.operands[0]
+            sd = list(g.dims(src))
+            kept = [d for d in range(len(sd)) if d not in n.attrs["dims"]]
+            acc(src, g.broadcast(grad, kept, sd))
+        elif op == "reduce_max":
+            pass  # stop-grad (softmax stabilizer)
+        elif op == "dot":
+            dl, dr = _dot_vjp(g, grad, n)
+            acc(n.operands[0], dl)
+            acc(n.operands[1], dr)
+        else:
+            raise ValueError(f"op {op} is not differentiable (node %v{i})")
+
+    outs = []
+    for w in wrt:
+        if w in adj:
+            outs.append(adj[w])
+        else:
+            outs.append(g.full_f32(0.0, list(g.dims(w))))
+    return outs
+
+
+def _maybe_transpose(g, a, perm):
+    if perm == list(range(len(perm))):
+        return a
+    return g.transpose(a, perm)
+
+
+def _dot_vjp(g, grad, n):
+    lhs, rhs = n.operands
+    lb, rb = n.attrs["lb"], n.attrs["rb"]
+    lc, rc = n.attrs["lc"], n.attrs["rc"]
+    lrank, rrank = len(g.dims(lhs)), len(g.dims(rhs))
+    lhs_free = [d for d in range(lrank) if d not in lb and d not in lc]
+    rhs_free = [d for d in range(rrank) if d not in rb and d not in rc]
+    nb, nlf, nrf = len(lb), len(lhs_free), len(rhs_free)
+
+    # dLHS = dot(G, RHS): contract G's rhs-free block with RHS free dims.
+    dl_raw = g.dot_general(
+        grad, rhs,
+        list(range(nb)), rb,
+        list(range(nb + nlf, nb + nlf + nrf)), rhs_free)
+    # raw layout: [batch, lhs_free, rhs_contract (ascending)]
+    rcs = sorted(rc)
+    perm_l = []
+    for j in range(lrank):
+        if j in lb:
+            perm_l.append(lb.index(j))
+        elif j in lhs_free:
+            perm_l.append(nb + lhs_free.index(j))
+        else:
+            r = rc[lc.index(j)]
+            perm_l.append(nb + nlf + rcs.index(r))
+    dl = _maybe_transpose(g, dl_raw, perm_l)
+    assert g.dims(dl) == g.dims(lhs)
+
+    # dRHS = dot(LHS, G): contract LHS free dims with G's lhs-free block.
+    dr_raw = g.dot_general(
+        lhs, grad,
+        lb, list(range(nb)),
+        lhs_free, list(range(nb, nb + nlf)))
+    # raw layout: [batch (lhs_batch order), lhs_contract (ascending), rhs_free]
+    lcs = sorted(lc)
+    nlc = len(lcs)
+    perm_r = []
+    for j in range(rrank):
+        if j in rb:
+            perm_r.append(rb.index(j))
+        elif j in rc:
+            l = lc[rc.index(j)]
+            perm_r.append(nb + lcs.index(l))
+        else:
+            perm_r.append(nb + nlc + rhs_free.index(j))
+    dr = _maybe_transpose(g, dr_raw, perm_r)
+    assert g.dims(dr) == g.dims(rhs)
+    return dl, dr

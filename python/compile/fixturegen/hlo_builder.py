@@ -1,0 +1,345 @@
+"""HLO op-graph builder + text emission.
+
+The emitted text uses exactly the instruction/attribute spellings that
+`rust/src/runtime/hlo/parser.rs` handles (and that XLA's own text parser
+accepts): shape-prefixed operands, `dimensions={...}`, `slice={[a:b]}`,
+`padding=l_hx...`, `to_apply=%reduce_add`, dot dimension-number attributes.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Shape:
+    dtype: str  # f32 | s32 | u32 | pred
+    dims: tuple
+
+    def text(self) -> str:
+        return f"{self.dtype}[{','.join(str(d) for d in self.dims)}]"
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+
+def sh(dtype, *dims):
+    return Shape(dtype, tuple(int(d) for d in dims))
+
+
+@dataclass
+class Node:
+    op: str
+    operands: list
+    shape: Shape
+    attrs: dict = field(default_factory=dict)
+
+
+def _f32_lit(v: float) -> str:
+    v = float(v)
+    if math.isinf(v):
+        return "inf" if v > 0 else "-inf"
+    import numpy as np
+
+    # shortest decimal that round-trips through f32
+    return repr(float(np.float32(v)))
+
+
+class Graph:
+    def __init__(self):
+        self.nodes: list[Node] = []
+        self.n_params = 0
+
+    def _push(self, op, operands, shape, **attrs):
+        self.nodes.append(Node(op, list(operands), shape, attrs))
+        return len(self.nodes) - 1
+
+    def dims(self, a):
+        return self.nodes[a].shape.dims
+
+    def dtype(self, a):
+        return self.nodes[a].shape.dtype
+
+    # -- leaves -------------------------------------------------------------
+
+    def param(self, dtype, dims):
+        i = self.n_params
+        self.n_params += 1
+        return self._push("parameter", [], sh(dtype, *dims), index=i)
+
+    def c_f32(self, v):
+        return self._push("constant", [], sh("f32"), value=float(v))
+
+    def c_s32(self, v):
+        return self._push("constant", [], sh("s32"), value=int(v))
+
+    def c_u32(self, v):
+        return self._push("constant", [], sh("u32"), value=int(v) & 0xFFFFFFFF)
+
+    def full_f32(self, v, dims):
+        return self.broadcast(self.c_f32(v), [], dims)
+
+    def iota(self, dtype, dims, dim):
+        assert 0 <= dim < len(dims)
+        return self._push("iota", [], sh(dtype, *dims), dim=dim)
+
+    # -- elementwise --------------------------------------------------------
+
+    def _ew2(self, op, a, b):
+        assert self.nodes[a].shape == self.nodes[b].shape, (
+            f"{op}: {self.nodes[a].shape} vs {self.nodes[b].shape}")
+        return self._push(op, [a, b], self.nodes[a].shape)
+
+    def add(self, a, b):
+        return self._ew2("add", a, b)
+
+    def sub(self, a, b):
+        return self._ew2("subtract", a, b)
+
+    def mul(self, a, b):
+        return self._ew2("multiply", a, b)
+
+    def div(self, a, b):
+        return self._ew2("divide", a, b)
+
+    def max(self, a, b):
+        return self._ew2("maximum", a, b)
+
+    def min(self, a, b):
+        return self._ew2("minimum", a, b)
+
+    def pow(self, a, b):
+        return self._ew2("power", a, b)
+
+    def xor(self, a, b):
+        return self._ew2("xor", a, b)
+
+    def shl(self, a, b):
+        return self._ew2("shift-left", a, b)
+
+    def shr(self, a, b):
+        return self._ew2("shift-right-logical", a, b)
+
+    def _ew1(self, op, a):
+        return self._push(op, [a], self.nodes[a].shape)
+
+    def neg(self, a):
+        return self._ew1("negate", a)
+
+    def abs(self, a):
+        return self._ew1("abs", a)
+
+    def exp(self, a):
+        return self._ew1("exponential", a)
+
+    def log(self, a):
+        return self._ew1("log", a)
+
+    def tanh(self, a):
+        return self._ew1("tanh", a)
+
+    def rsqrt(self, a):
+        return self._ew1("rsqrt", a)
+
+    def sqrt(self, a):
+        return self._ew1("sqrt", a)
+
+    def sin(self, a):
+        return self._ew1("sine", a)
+
+    def cos(self, a):
+        return self._ew1("cosine", a)
+
+    def compare(self, direction, a, b):
+        assert self.dims(a) == self.dims(b)
+        return self._push("compare", [a, b], sh("pred", *self.dims(a)),
+                          direction=direction)
+
+    def select(self, p, a, b):
+        assert self.dims(p) == self.dims(a) == self.dims(b)
+        return self._push("select", [p, a, b], self.nodes[a].shape)
+
+    def convert(self, a, to):
+        return self._push("convert", [a], sh(to, *self.dims(a)))
+
+    # -- shape ops ----------------------------------------------------------
+
+    def broadcast(self, a, dims_map, out_dims):
+        dims_map = list(dims_map)
+        assert len(dims_map) == len(self.dims(a))
+        assert all(x < y for x, y in zip(dims_map, dims_map[1:])), dims_map
+        for i, d in enumerate(dims_map):
+            assert out_dims[d] == self.dims(a)[i]
+        return self._push("broadcast", [a], sh(self.dtype(a), *out_dims),
+                          dims=dims_map)
+
+    def reshape(self, a, out_dims):
+        assert self.nodes[a].shape.size == sh("f32", *out_dims).size
+        return self._push("reshape", [a], sh(self.dtype(a), *out_dims))
+
+    def transpose(self, a, perm):
+        out = [self.dims(a)[p] for p in perm]
+        return self._push("transpose", [a], sh(self.dtype(a), *out),
+                          perm=list(perm))
+
+    def slice(self, a, spec):
+        for (s, l), d in zip(spec, self.dims(a)):
+            assert 0 <= s <= l <= d
+        out = [l - s for (s, l) in spec]
+        return self._push("slice", [a], sh(self.dtype(a), *out),
+                          spec=[tuple(x) for x in spec])
+
+    def concat(self, parts, dim):
+        out = list(self.dims(parts[0]))
+        out[dim] = sum(self.dims(p)[dim] for p in parts)
+        return self._push("concatenate", list(parts),
+                          sh(self.dtype(parts[0]), *out), dim=dim)
+
+    def pad_zero(self, a, low, high):
+        zero = self.c_f32(0.0)
+        out = [d + lo + hi for d, lo, hi in zip(self.dims(a), low, high)]
+        return self._push("pad", [a, zero], sh(self.dtype(a), *out),
+                          low=list(low), high=list(high))
+
+    def _reduce(self, op, a, dims):
+        out = [d for i, d in enumerate(self.dims(a)) if i not in dims]
+        return self._push(op, [a], sh(self.dtype(a), *out), dims=sorted(dims))
+
+    def reduce_add(self, a, dims):
+        return self._reduce("reduce_add", a, list(dims))
+
+    def reduce_max(self, a, dims):
+        return self._reduce("reduce_max", a, list(dims))
+
+    def dot_general(self, lhs, rhs, lb, rb, lc, rc):
+        ld, rd = self.dims(lhs), self.dims(rhs)
+        for a, b in zip(lc, rc):
+            assert ld[a] == rd[b], "dot contract mismatch"
+        for a, b in zip(lb, rb):
+            assert ld[a] == rd[b], "dot batch mismatch"
+        out = [ld[i] for i in lb]
+        out += [ld[i] for i in range(len(ld)) if i not in lb and i not in lc]
+        out += [rd[i] for i in range(len(rd)) if i not in rb and i not in rc]
+        return self._push("dot", [lhs, rhs], sh("f32", *out),
+                          lb=list(lb), rb=list(rb), lc=list(lc), rc=list(rc))
+
+    def matmul(self, lhs, rhs):
+        return self.dot_general(lhs, rhs, [], [], [len(self.dims(lhs)) - 1], [0])
+
+    def dyn_slice(self, a, starts, sizes):
+        assert len(starts) == len(self.dims(a))
+        return self._push("dynamic-slice", [a] + list(starts),
+                          sh(self.dtype(a), *sizes), sizes=list(sizes))
+
+    def dyn_update_slice(self, a, update, starts):
+        assert len(starts) == len(self.dims(a))
+        return self._push("dynamic-update-slice", [a, update] + list(starts),
+                          self.nodes[a].shape)
+
+    # -- emission -----------------------------------------------------------
+
+    def emit_hlo(self, module_name, outputs):
+        live = [False] * len(self.nodes)
+        stack = list(outputs)
+        while stack:
+            i = stack.pop()
+            if live[i]:
+                continue
+            live[i] = True
+            stack.extend(self.nodes[i].operands)
+        for i, n in enumerate(self.nodes):
+            if n.op == "parameter":
+                live[i] = True
+
+        uses_add = any(live[i] and n.op == "reduce_add"
+                       for i, n in enumerate(self.nodes))
+        uses_max = any(live[i] and n.op == "reduce_max"
+                       for i, n in enumerate(self.nodes))
+
+        out = [f"HloModule {module_name}"]
+        if uses_add:
+            out.append("""
+%reduce_add (ra_lhs: f32[], ra_rhs: f32[]) -> f32[] {
+  %ra_lhs = f32[] parameter(0)
+  %ra_rhs = f32[] parameter(1)
+  ROOT %ra_out = f32[] add(f32[] %ra_lhs, f32[] %ra_rhs)
+}""")
+        if uses_max:
+            out.append("""
+%reduce_max (rm_lhs: f32[], rm_rhs: f32[]) -> f32[] {
+  %rm_lhs = f32[] parameter(0)
+  %rm_rhs = f32[] parameter(1)
+  ROOT %rm_out = f32[] maximum(f32[] %rm_lhs, f32[] %rm_rhs)
+}""")
+
+        params = sorted(
+            (n.attrs["index"], i) for i, n in enumerate(self.nodes)
+            if n.op == "parameter")
+        sig = ", ".join(f"p{idx}: {self.nodes[i].shape.text()}"
+                        for idx, i in params)
+        out_sig = ", ".join(self.nodes[o].shape.text() for o in outputs)
+        out.append(f"\nENTRY %entry ({sig}) -> ({out_sig}) {{")
+        for i, n in enumerate(self.nodes):
+            if live[i]:
+                out.append("  " + self._instr_text(i, n))
+        tuple_ops = ", ".join(f"{self.nodes[o].shape.text()} %v{o}"
+                              for o in outputs)
+        out.append(f"  ROOT %result = ({out_sig}) tuple({tuple_ops})")
+        out.append("}")
+        return "\n".join(out) + "\n"
+
+    def _opn(self, i):
+        return f"{self.nodes[i].shape.text()} %v{i}"
+
+    def _instr_text(self, i, n):
+        s = n.shape.text()
+        ops = ", ".join(self._opn(o) for o in n.operands)
+        dl = lambda d: ",".join(str(x) for x in d)  # noqa: E731
+        op = n.op
+        if op == "parameter":
+            return f"%v{i} = {s} parameter({n.attrs['index']})"
+        if op == "constant":
+            v = n.attrs["value"]
+            lit = _f32_lit(v) if n.shape.dtype == "f32" else str(v)
+            return f"%v{i} = {s} constant({lit})"
+        if op == "compare":
+            return f"%v{i} = {s} compare({ops}), direction={n.attrs['direction']}"
+        if op == "broadcast":
+            return f"%v{i} = {s} broadcast({ops}), dimensions={{{dl(n.attrs['dims'])}}}"
+        if op == "transpose":
+            return f"%v{i} = {s} transpose({ops}), dimensions={{{dl(n.attrs['perm'])}}}"
+        if op == "slice":
+            spec = ", ".join(f"[{a}:{b}]" for a, b in n.attrs["spec"])
+            return f"%v{i} = {s} slice({ops}), slice={{{spec}}}"
+        if op == "concatenate":
+            return f"%v{i} = {s} concatenate({ops}), dimensions={{{n.attrs['dim']}}}"
+        if op == "pad":
+            spec = "x".join(f"{lo}_{hi}" for lo, hi in
+                            zip(n.attrs["low"], n.attrs["high"]))
+            return f"%v{i} = {s} pad({ops}), padding={spec}"
+        if op in ("reduce_add", "reduce_max"):
+            init = "0" if op == "reduce_add" else "-inf"
+            body = op
+            src = self._opn(n.operands[0])
+            return (f"%vc{i} = f32[] constant({init})\n"
+                    f"  %v{i} = {s} reduce({src}, f32[] %vc{i}), "
+                    f"dimensions={{{dl(n.attrs['dims'])}}}, to_apply=%{body}")
+        if op == "dot":
+            attrs = []
+            if n.attrs["lb"]:
+                attrs.append(f"lhs_batch_dims={{{dl(n.attrs['lb'])}}}")
+                attrs.append(f"rhs_batch_dims={{{dl(n.attrs['rb'])}}}")
+            attrs.append(f"lhs_contracting_dims={{{dl(n.attrs['lc'])}}}")
+            attrs.append(f"rhs_contracting_dims={{{dl(n.attrs['rc'])}}}")
+            return f"%v{i} = {s} dot({ops}), {', '.join(attrs)}"
+        if op == "iota":
+            return f"%v{i} = {s} iota(), iota_dimension={n.attrs['dim']}"
+        if op == "dynamic-slice":
+            return (f"%v{i} = {s} dynamic-slice({ops}), "
+                    f"dynamic_slice_sizes={{{dl(n.attrs['sizes'])}}}")
+        return f"%v{i} = {s} {op}({ops})"

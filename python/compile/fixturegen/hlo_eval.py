@@ -1,0 +1,393 @@
+"""HLO-text parser + numpy (float32) evaluator.
+
+A Python mirror of `rust/src/runtime/hlo/{parser,eval}.rs` used at
+fixture-generation time: the emitted artifact text is round-tripped
+through *this* parser/evaluator and differentially compared against the
+real jax model, so the committed text is known-good before the Rust
+interpreter ever sees it.  Keep the two in sync when extending the op set.
+"""
+
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+_DTYPES = {"f32": np.float32, "s32": np.int32, "u32": np.uint32, "pred": np.bool_}
+
+
+class Instr:
+    __slots__ = ("name", "dtype", "dims", "opcode", "operands", "attrs")
+
+    def __init__(self, name, dtype, dims, opcode, operands, attrs):
+        self.name = name
+        self.dtype = dtype
+        self.dims = dims
+        self.opcode = opcode
+        self.operands = operands
+        self.attrs = attrs
+
+
+class Computation:
+    def __init__(self, name):
+        self.name = name
+        self.instrs = []
+        self.params = []
+        self.root = None
+
+
+def _split_top(s):
+    out, depth, start = [], 0, 0
+    for i, c in enumerate(s):
+        if c in "{([":
+            depth += 1
+        elif c in "})]":
+            depth -= 1
+        elif c == "," and depth == 0:
+            out.append(s[start:i].strip())
+            start = i + 1
+    tail = s[start:].strip()
+    if tail:
+        out.append(tail)
+    return out
+
+
+def _matching_paren(s, open_idx):
+    depth = 0
+    for i in range(open_idx, len(s)):
+        if s[i] in "{([":
+            depth += 1
+        elif s[i] in "})]":
+            depth -= 1
+            if depth == 0:
+                return i
+    raise ValueError(f"unbalanced parens in {s!r}")
+
+
+_SHAPE_RE = re.compile(r"^\s*(f32|s32|u32|pred)\[([0-9,]*)\]")
+
+
+def _parse_shape(s):
+    m = _SHAPE_RE.match(s)
+    if not m:
+        raise ValueError(f"bad shape at {s[:40]!r}")
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    rest = s[m.end():]
+    if rest.startswith("{"):  # layout suffix
+        close = _matching_paren(rest, 0)
+        rest = rest[close + 1:]
+    return m.group(1), dims, rest
+
+
+def _int_list(v):
+    inner = v.strip().strip("{}").strip()
+    return [int(x) for x in inner.split(",")] if inner else []
+
+
+class Module:
+    def __init__(self, text):
+        self.computations = {}
+        self.entry = None
+        cur = None
+        for raw in text.splitlines():
+            line = raw.strip()
+            if not line or line.startswith("HloModule") or line.startswith("//"):
+                continue
+            if line == "}":
+                cur = None
+                continue
+            if line.endswith("{") and "->" in line:
+                name = line.lstrip("ENTRY").strip().split("(")[0].strip().lstrip("%")
+                cur = Computation(name)
+                self.computations[name] = cur
+                if raw.strip().startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            assert cur is not None, f"instruction outside computation: {line}"
+            self._parse_instr(cur, line)
+        if self.entry is None:
+            if len(self.computations) != 1:
+                raise ValueError("no ENTRY computation")
+            self.entry = next(iter(self.computations.values()))
+
+    def _parse_instr(self, comp, line):
+        is_root = line.startswith("ROOT ")
+        if is_root:
+            line = line[5:]
+        name, rhs = line.split("=", 1)
+        name = name.strip().lstrip("%")
+        rhs = rhs.strip()
+        if rhs.startswith("("):  # tuple shape
+            close = _matching_paren(rhs, 0)
+            dtype, dims = None, None
+            rhs = rhs[close + 1:].strip()
+        else:
+            dtype, dims, rhs = _parse_shape(rhs)
+            rhs = rhs.strip()
+        open_idx = rhs.index("(")
+        opcode = rhs[:open_idx].strip()
+        close = _matching_paren(rhs, open_idx)
+        operand_str = rhs[open_idx + 1:close]
+        attr_str = rhs[close + 1:].lstrip(",").strip()
+
+        by_name = {ins.name: k for k, ins in enumerate(comp.instrs)}
+        operands = []
+        attrs = {}
+        if opcode == "parameter":
+            attrs["index"] = int(operand_str)
+        elif opcode == "constant":
+            flat = operand_str.replace("{", "").replace("}", "")
+            toks = [t.strip() for t in flat.split(",") if t.strip()]
+
+            def lit(t):
+                if dtype == "f32":
+                    return np.float32(float(t))
+                if dtype == "pred":
+                    return t in ("true", "1")
+                return int(t)
+
+            attrs["literal"] = np.array([lit(t) for t in toks],
+                                        dtype=_DTYPES[dtype]).reshape(dims)
+        else:
+            for frag in _split_top(operand_str):
+                opname = [t for t in frag.split() if t.startswith("%")][-1]
+                operands.append(by_name[opname.lstrip("%")])
+        for attr in _split_top(attr_str):
+            if not attr or "=" not in attr:
+                continue
+            k, v = attr.split("=", 1)
+            k, v = k.strip(), v.strip()
+            if k in ("dimensions", "dynamic_slice_sizes", "lhs_batch_dims",
+                     "rhs_batch_dims", "lhs_contracting_dims",
+                     "rhs_contracting_dims", "offset_dims",
+                     "collapsed_slice_dims", "start_index_map", "slice_sizes"):
+                attrs[k] = _int_list(v)
+            elif k in ("iota_dimension", "index_vector_dim", "index"):
+                attrs[k] = int(v)
+            elif k == "slice":
+                parts = _split_top(v.strip().strip("{}"))
+                attrs["slice"] = [tuple(int(x) for x in p.strip("[] ").split(":"))
+                                  for p in parts]
+            elif k == "padding":
+                attrs["padding"] = [tuple(int(x) for x in p.split("_"))
+                                    for p in v.split("x")]
+            elif k == "direction":
+                attrs["direction"] = v
+            elif k == "to_apply":
+                attrs["to_apply"] = v.lstrip("%")
+        ins = Instr(name, dtype, dims, opcode, operands, attrs)
+        idx = len(comp.instrs)
+        comp.instrs.append(ins)
+        if opcode == "parameter":
+            comp.params.append((attrs["index"], idx))
+        if is_root:
+            comp.root = idx
+
+
+_CMP = {
+    "EQ": np.equal, "NE": np.not_equal, "LT": np.less, "LE": np.less_equal,
+    "GT": np.greater, "GE": np.greater_equal,
+}
+
+_U32 = np.uint32
+
+
+def evaluate(module: Module, inputs):
+    """Evaluate the ENTRY computation; returns list of np arrays."""
+    comp = module.entry
+    params = {idx: inputs[pnum] for pnum, idx in sorted(comp.params)}
+    assert len(params) == len(inputs), (len(comp.params), len(inputs))
+    vals = [None] * len(comp.instrs)
+    err = np.seterr(all="ignore")  # inf/0*inf semantics mirror f32 hardware
+    try:
+        for i, ins in enumerate(comp.instrs):
+            if i == comp.root:
+                break
+            vals[i] = _exec(module, ins, [vals[o] for o in ins.operands],
+                            params.get(i))
+            if ins.dims is not None and vals[i] is not None:
+                assert tuple(vals[i].shape) == ins.dims, (
+                    ins.name, ins.opcode, vals[i].shape, ins.dims)
+    finally:
+        np.seterr(**err)
+    root = comp.instrs[comp.root]
+    assert root.opcode == "tuple"
+    return [vals[o] for o in root.operands]
+
+
+def _f32(x):
+    return np.asarray(x, dtype=np.float32)
+
+
+def _exec(module, ins, args, param_val):
+    op = ins.opcode
+    if op == "parameter":
+        a = np.asarray(param_val, dtype=_DTYPES[ins.dtype]).reshape(ins.dims)
+        return a
+    if op == "constant":
+        return ins.attrs["literal"]
+    a = args[0] if args else None
+    if op == "add":
+        return a + args[1] if a.dtype != _U32 else (a + args[1]).astype(_U32)
+    if op == "subtract":
+        return a - args[1]
+    if op == "multiply":
+        return a * args[1]
+    if op == "divide":
+        return _f32(a / args[1]) if a.dtype == np.float32 else a // args[1]
+    if op == "maximum":
+        return np.maximum(a, args[1])
+    if op == "minimum":
+        return np.minimum(a, args[1])
+    if op == "power":
+        return _f32(np.power(a, args[1]))
+    if op == "and":
+        return a & args[1]
+    if op == "or":
+        return a | args[1]
+    if op == "xor":
+        return a ^ args[1]
+    if op == "shift-left":
+        return (a.astype(np.uint64) << args[1].astype(np.uint64)).astype(_U32)
+    if op == "shift-right-logical":
+        return (a >> args[1]).astype(a.dtype)
+    if op == "negate":
+        return -a
+    if op == "abs":
+        return np.abs(a)
+    if op == "exponential":
+        return _f32(np.exp(a))
+    if op == "log":
+        return _f32(np.log(a))
+    if op == "tanh":
+        return _f32(np.tanh(a))
+    if op == "rsqrt":
+        return _f32(1.0 / np.sqrt(a, dtype=np.float32))
+    if op == "sqrt":
+        return _f32(np.sqrt(a))
+    if op == "sine":
+        return _f32(np.sin(a))
+    if op == "cosine":
+        return _f32(np.cos(a))
+    if op == "not":
+        return ~a
+    if op == "compare":
+        return _CMP[ins.attrs["direction"]](a, args[1])
+    if op == "select":
+        return np.where(args[0], args[1], args[2]).astype(args[1].dtype)
+    if op == "convert":
+        return a.astype(_DTYPES[ins.dtype])
+    if op == "broadcast":
+        dims_map = ins.attrs.get("dimensions", [])
+        src = a
+        # place source axes at dims_map positions, broadcast the rest
+        expanded = np.empty(ins.dims, dtype=a.dtype)
+        view_shape = [1] * len(ins.dims)
+        for i_src, d in enumerate(dims_map):
+            view_shape[d] = src.shape[i_src]
+        expanded[...] = src.reshape(view_shape)
+        return expanded
+    if op == "reshape":
+        return a.reshape(ins.dims)
+    if op == "transpose":
+        return np.transpose(a, ins.attrs["dimensions"]).copy()
+    if op == "slice":
+        spec = ins.attrs["slice"]
+        idx = tuple(slice(s[0], s[1], s[2] if len(s) > 2 else 1) for s in spec)
+        return a[idx].copy()
+    if op == "concatenate":
+        return np.concatenate(args, axis=ins.attrs["dimensions"][0])
+    if op == "pad":
+        pads = [(int(lo), int(hi)) for lo, hi, *_ in ins.attrs["padding"]]
+        return np.pad(a, pads, constant_values=args[1])
+    if op == "reduce":
+        kind = module.computations[ins.attrs["to_apply"]]
+        root_op = kind.instrs[kind.root].opcode
+        dims = tuple(ins.attrs["dimensions"])
+        if root_op == "add":
+            return np.sum(a, axis=dims, dtype=a.dtype)
+        if root_op == "maximum":
+            return np.max(a, axis=dims)
+        return np.min(a, axis=dims)
+    if op == "dot":
+        return _dot(ins, args[0], args[1])
+    if op == "iota":
+        d = ins.attrs["iota_dimension"]
+        out = np.arange(ins.dims[d], dtype=_DTYPES[ins.dtype])
+        shape = [1] * len(ins.dims)
+        shape[d] = ins.dims[d]
+        return np.broadcast_to(out.reshape(shape), ins.dims).copy()
+    if op == "dynamic-slice":
+        sizes = ins.attrs["dynamic_slice_sizes"]
+        starts = [int(x) for x in args[1:]]
+        idx = tuple(
+            slice(min(max(s, 0), d - z), min(max(s, 0), d - z) + z)
+            for s, z, d in zip(starts, sizes, a.shape))
+        return a[idx].copy()
+    if op == "dynamic-update-slice":
+        upd = args[1]
+        starts = [int(x) for x in args[2:]]
+        out = a.copy()
+        idx = tuple(
+            slice(min(max(s, 0), d - u), min(max(s, 0), d - u) + u)
+            for s, u, d in zip(starts, upd.shape, a.shape))
+        out[idx] = upd
+        return out
+    if op == "gather":
+        return _gather(ins, args[0], args[1])
+    raise ValueError(f"unsupported opcode {op}")
+
+
+def _dot(ins, lhs, rhs):
+    lb, rb = ins.attrs.get("lhs_batch_dims", []), ins.attrs.get("rhs_batch_dims", [])
+    lc, rc = ins.attrs["lhs_contracting_dims"], ins.attrs["rhs_contracting_dims"]
+    lhs_free = [d for d in range(lhs.ndim) if d not in lb and d not in lc]
+    rhs_free = [d for d in range(rhs.ndim) if d not in rb and d not in rc]
+    lt = np.transpose(lhs, lb + lhs_free + lc)
+    rt = np.transpose(rhs, rb + rc + rhs_free)
+    bshape = lt.shape[:len(lb)]
+    m = int(np.prod([lhs.shape[d] for d in lhs_free], dtype=np.int64))
+    k = int(np.prod([lhs.shape[d] for d in lc], dtype=np.int64))
+    n = int(np.prod([rhs.shape[d] for d in rhs_free], dtype=np.int64))
+    b = int(np.prod(bshape, dtype=np.int64))
+    out = np.matmul(lt.reshape(b, m, k).astype(np.float32),
+                    rt.reshape(b, k, n).astype(np.float32))
+    out_shape = (tuple(bshape)
+                 + tuple(lhs.shape[d] for d in lhs_free)
+                 + tuple(rhs.shape[d] for d in rhs_free))
+    return out.reshape(out_shape).astype(np.float32)
+
+
+def _gather(ins, operand, indices):
+    g = ins.attrs
+    offset_dims = g["offset_dims"]
+    collapsed = g["collapsed_slice_dims"]
+    start_map = g["start_index_map"]
+    ivd = g["index_vector_dim"]
+    slice_sizes = g["slice_sizes"]
+    out = np.empty(ins.dims, dtype=operand.dtype)
+    idx_shape = list(indices.shape)
+    batch_shape = [d for i, d in enumerate(idx_shape) if i != ivd] \
+        if ivd < len(idx_shape) else idx_shape
+    offset_operand_dims = [d for d in range(operand.ndim) if d not in collapsed]
+    out_batch_axes = [a for a in range(len(ins.dims)) if a not in offset_dims]
+    for out_idx in np.ndindex(*ins.dims):
+        batch_idx, slice_idx = [], {}
+        for axis, coord in enumerate(out_idx):
+            if axis in offset_dims:
+                slice_idx[offset_operand_dims[offset_dims.index(axis)]] = coord
+            else:
+                batch_idx.append(coord)
+        full = list(batch_idx)
+        start = [0] * operand.ndim
+        for c, od in enumerate(start_map):
+            if ivd < len(idx_shape):
+                iidx = full[:ivd] + [c] + full[ivd:]
+            else:
+                iidx = full
+            raw = int(indices[tuple(iidx)])
+            start[od] = min(max(raw, 0), operand.shape[od] - slice_sizes[od])
+        src = tuple(start[d] + slice_idx.get(d, 0) for d in range(operand.ndim))
+        out[out_idx] = operand[src]
+    _ = batch_shape, out_batch_axes
+    return out

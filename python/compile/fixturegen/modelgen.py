@@ -1,0 +1,692 @@
+"""Model entry points → HLO artifact sets (the fixture counterpart of
+`python/compile/aot.py`).
+
+One definition of the tiny byte-level transformer — the same math as
+`python/compile/model.py` (pre-LN blocks, causal attention, tanh-GELU,
+layernorm eps 1e-5, ref.py losses, bias-corrected Adam) — built as HLO op
+graphs, with gradient artifacts derived by `hlo_autodiff`.  The 17-tensor
+flat parameter tree is the sorted-pytree-key order `aot.py` pins in the
+manifest, so the Rust coordinator code runs unchanged.
+
+`generate_rollout` is intentionally not emitted: it needs `while` +
+in-graph RNG, which the Rust interpreter does not model (ROADMAP op-set
+gap).  The coordinator's stepwise `prefill`/`decode_step` path covers it.
+
+Init differs from model.py's `jax.random.normal` (which lowers to a CPU
+custom-call the interpreter can't execute): parameters are drawn with a
+counter-based hash (lowbias32) + Box-Muller expressed in plain HLO ops —
+same N(0, 0.02) / depth-scaled-residual distribution, fully deterministic
+in the seed.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .hlo_autodiff import gradients
+from .hlo_builder import Graph
+
+
+@dataclass(frozen=True)
+class GenConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+    prompt_len: int
+    batch: int
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    adam_eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+    def param_count(self):
+        d, v, s, f, l = self.d_model, self.vocab, self.max_seq, self.d_ff, self.n_layers
+        per_block = 2 * d + 4 * d * d + 2 * d + d * f + f + f * d + d
+        return v * d + s * d + l * per_block + 2 * d + d * v
+
+    def scalar_param_count(self):
+        return self.param_count() - self.d_model * self.vocab + self.d_model
+
+    def tree(self, scalar_head: bool):
+        d, v, s, f, l = self.d_model, self.vocab, self.max_seq, self.d_ff, self.n_layers
+        head = 1 if scalar_head else v
+        return [
+            ("blk/b1", [l, f]),
+            ("blk/b2", [l, d]),
+            ("blk/ln1_b", [l, d]),
+            ("blk/ln1_g", [l, d]),
+            ("blk/ln2_b", [l, d]),
+            ("blk/ln2_g", [l, d]),
+            ("blk/w1", [l, d, f]),
+            ("blk/w2", [l, f, d]),
+            ("blk/wk", [l, d, d]),
+            ("blk/wo", [l, d, d]),
+            ("blk/wq", [l, d, d]),
+            ("blk/wv", [l, d, d]),
+            ("head", [d, head]),
+            ("lnf_b", [d]),
+            ("lnf_g", [d]),
+            ("pos_emb", [s, d]),
+            ("tok_emb", [v, d]),
+        ]
+
+
+TINY = GenConfig("tiny", vocab=256, d_model=64, n_layers=2, n_heads=2,
+                 d_ff=256, max_seq=64, prompt_len=16, batch=4)
+SYNTHETIC = GenConfig("synthetic", vocab=32, d_model=8, n_layers=2, n_heads=2,
+                      d_ff=16, max_seq=12, prompt_len=4, batch=2)
+
+# Flat-tree indices.
+(B1, B2, LN1B, LN1G, LN2B, LN2G, W1, W2, WK, WO, WQ, WV,
+ HEAD, LNFB, LNFG, POS, TOK) = range(17)
+NP17 = 17
+
+
+class M:
+    """Model-graph scaffold: a Graph plus the config it is built for."""
+
+    def __init__(self, cfg: GenConfig):
+        self.cfg = cfg
+        self.g = Graph()
+
+    def tree_params(self, scalar_head):
+        return [self.g.param("f32", dims) for _, dims in self.cfg.tree(scalar_head)]
+
+    # -- building blocks ----------------------------------------------------
+
+    def onehot(self, ids, depth):
+        g = self.g
+        dims = list(g.dims(ids)) + [depth]
+        iota = g.iota("s32", dims, len(dims) - 1)
+        idb = g.broadcast(ids, list(range(len(dims) - 1)), dims)
+        return g.convert(g.compare("EQ", iota, idb), "f32")
+
+    def layer(self, p, l):
+        g = self.g
+        dims = list(g.dims(p))
+        spec = [(l, l + 1)] + [(0, d) for d in dims[1:]]
+        return g.reshape(g.slice(p, spec), dims[1:])
+
+    def layernorm(self, x, gain, bias):
+        g = self.g
+        dims = list(g.dims(x))
+        d = dims[-1]
+        last = len(dims) - 1
+        kept = list(range(last))
+        inv_d = g.full_f32(1.0 / d, dims[:last])
+        mu = g.mul(g.reduce_add(x, [last]), inv_d)
+        xc = g.sub(x, g.broadcast(mu, kept, dims))
+        var = g.mul(g.reduce_add(g.mul(xc, xc), [last]), inv_d)
+        inv = g.rsqrt(g.add(var, g.full_f32(1e-5, dims[:last])))
+        norm = g.mul(xc, g.broadcast(inv, kept, dims))
+        ng = g.mul(norm, g.broadcast(gain, [last], dims))
+        return g.add(ng, g.broadcast(bias, [last], dims))
+
+    def gelu(self, x):
+        g = self.g
+        dims = list(g.dims(x))
+        x3 = g.mul(g.mul(x, x), x)
+        inner = g.add(x, g.mul(x3, g.full_f32(0.044715, dims)))
+        t = g.tanh(g.mul(inner, g.full_f32(math.sqrt(2.0 / math.pi), dims)))
+        tp1 = g.add(t, g.full_f32(1.0, dims))
+        return g.mul(g.mul(x, g.full_f32(0.5, dims)), tp1)
+
+    def split_heads(self, x):
+        g = self.g
+        b, t, _ = g.dims(x)
+        h, dh = self.cfg.n_heads, self.cfg.d_head
+        return g.transpose(g.reshape(x, [b, t, h, dh]), [0, 2, 1, 3])
+
+    def merge_heads(self, x):
+        g = self.g
+        b, h, t, dh = g.dims(x)
+        return g.reshape(g.transpose(x, [0, 2, 1, 3]), [b, t, h * dh])
+
+    def proj(self, x, w):
+        return self.g.dot_general(x, w, [], [], [2], [0])
+
+    def attention(self, q, k, v, qpos):
+        """softmax(q·kᵀ/√Dh + causal/pos mask)·v.
+
+        qpos: ("static", offset) — query rows at offset+[0..T);
+              ("dynamic", node)  — all rows at one runtime position.
+        """
+        g = self.g
+        qd = list(g.dims(q))
+        s = g.dims(k)[2]
+        sd = [qd[0], qd[1], qd[2], s]
+        raw = g.dot_general(q, k, [0, 1], [0, 1], [3], [3])
+        scores = g.mul(raw, g.full_f32(1.0 / math.sqrt(self.cfg.d_head), sd))
+        kpos = g.iota("s32", sd, 3)
+        kind, val = qpos
+        if kind == "static":
+            qp = g.iota("s32", sd, 2)
+            if val:
+                qp = g.add(qp, g.broadcast(g.c_s32(val), [], sd))
+        else:
+            qp = g.broadcast(val, [], sd)
+        keep = g.compare("LE", kpos, qp)
+        masked = g.select(keep, scores, g.full_f32(-1.0e30, sd))
+        mx = g.reduce_max(masked, [3])
+        shifted = g.sub(masked, g.broadcast(mx, [0, 1, 2], sd))
+        ex = g.exp(shifted)
+        den = g.reduce_add(ex, [3])
+        p = g.div(ex, g.broadcast(den, [0, 1, 2], sd))
+        return g.dot_general(p, v, [0, 1], [0, 1], [3], [2])
+
+    def embed(self, params, tokens, pos):
+        g = self.g
+        b, t = g.dims(tokens)
+        d = self.cfg.d_model
+        oh = self.onehot(tokens, self.cfg.vocab)
+        emb = g.dot_general(oh, params[TOK], [], [], [2], [0])
+        kind, val = pos
+        if kind == "static":
+            ps = g.slice(params[POS], [(val, val + t), (0, d)])
+        else:
+            ps = g.dyn_slice(params[POS], [val, g.c_s32(0)], [t, d])
+        return g.add(emb, g.broadcast(ps, [1, 2], [b, t, d]))
+
+    def ffn(self, params, h, l):
+        g = self.g
+        dims = list(g.dims(h))
+        x = self.layernorm(h, self.layer(params[LN2G], l), self.layer(params[LN2B], l))
+        up = self.proj(x, self.layer(params[W1], l))
+        f = self.cfg.d_ff
+        upb = g.add(up, g.broadcast(self.layer(params[B1], l), [2],
+                                    [dims[0], dims[1], f]))
+        act = self.gelu(upb)
+        down = self.proj(act, self.layer(params[W2], l))
+        downb = g.add(down, g.broadcast(self.layer(params[B2], l), [2], dims))
+        return g.add(h, downb)
+
+    def block(self, params, h, l):
+        g = self.g
+        x = self.layernorm(h, self.layer(params[LN1G], l), self.layer(params[LN1B], l))
+        q = self.split_heads(self.proj(x, self.layer(params[WQ], l)))
+        k = self.split_heads(self.proj(x, self.layer(params[WK], l)))
+        v = self.split_heads(self.proj(x, self.layer(params[WV], l)))
+        attn = self.attention(q, k, v, ("static", 0))
+        ao = self.proj(self.merge_heads(attn), self.layer(params[WO], l))
+        h = g.add(h, ao)
+        return self.ffn(params, h, l)
+
+    def trunk(self, params, tokens):
+        h = self.embed(params, tokens, ("static", 0))
+        for l in range(self.cfg.n_layers):
+            h = self.block(params, h, l)
+        return self.layernorm(h, params[LNFG], params[LNFB])
+
+    def logits(self, params, tokens):
+        return self.proj(self.trunk(params, tokens), params[HEAD])
+
+    def values(self, params, tokens):
+        td = list(self.g.dims(tokens))
+        return self.g.reshape(self.logits(params, tokens), td)
+
+    def log_softmax(self, logits):
+        g = self.g
+        dims = list(g.dims(logits))
+        last = len(dims) - 1
+        kept = list(range(last))
+        mx = g.reduce_max(logits, [last])
+        shifted = g.sub(logits, g.broadcast(mx, kept, dims))
+        den = g.reduce_add(g.exp(shifted), [last])
+        return g.sub(shifted, g.broadcast(g.log(den), kept, dims))
+
+    def token_logprob(self, logits, tokens):
+        g = self.g
+        b, s, v = g.dims(logits)
+        lp = self.log_softmax(logits)
+        lp_prev = g.slice(lp, [(0, b), (0, s - 1), (0, v)])
+        tok_next = g.slice(tokens, [(0, b), (1, s)])
+        oh = self.onehot(tok_next, v)
+        scored = g.reduce_add(g.mul(lp_prev, oh), [2])
+        return g.concat([g.full_f32(0.0, [b, 1]), scored], 1)
+
+    def entropy(self, logits):
+        g = self.g
+        last = len(g.dims(logits)) - 1
+        lp = self.log_softmax(logits)
+        return g.neg(g.reduce_add(g.mul(g.exp(lp), lp), [last]))
+
+    def masked_mean(self, x, mask):
+        g = self.g
+        alld = list(range(len(g.dims(x))))
+        num = g.reduce_add(g.mul(x, mask), alld)
+        den = g.max(g.reduce_add(mask, alld), g.c_f32(1.0))
+        return g.div(num, den)
+
+    def mean_all(self, x):
+        g = self.g
+        dims = g.dims(x)
+        n = 1
+        for d in dims:
+            n *= d
+        return g.mul(g.reduce_add(x, list(range(len(dims)))), g.c_f32(1.0 / n))
+
+    def reward_score(self, params, tokens, idx):
+        g = self.g
+        b, s = g.dims(tokens)
+        v = self.values(params, tokens)
+        iota = g.iota("s32", [b, s], 1)
+        oh = g.convert(g.compare("EQ", iota, g.broadcast(idx, [0], [b, s])), "f32")
+        return g.reduce_add(g.mul(v, oh), [1])
+
+    def ppo_loss(self, logits, lp, old_lp, ref_lp, adv, mask, clip, klc, entc):
+        g = self.g
+        dims = list(g.dims(lp))
+        ratio = g.exp(g.sub(lp, old_lp))
+        unclipped = g.mul(ratio, adv)
+        one = g.full_f32(1.0, dims)
+        epsb = g.broadcast(clip, [], dims)
+        clipped = g.mul(g.min(g.max(ratio, g.sub(one, epsb)), g.add(one, epsb)), adv)
+        pg = g.neg(g.min(unclipped, clipped))
+        lr = g.sub(ref_lp, lp)
+        kl = g.sub(g.sub(g.exp(lr), lr), one)
+        ent = self.entropy(logits)
+        pg_m = self.masked_mean(pg, mask)
+        kl_m = self.masked_mean(kl, mask)
+        ent_m = self.masked_mean(ent, mask)
+        loss = g.sub(g.add(pg_m, g.mul(klc, kl_m)), g.mul(entc, ent_m))
+        outside = g.compare("GT", g.abs(g.sub(ratio, one)), epsb)
+        clipfrac = self.masked_mean(g.convert(outside, "f32"), mask)
+        return loss, kl_m, ent_m, clipfrac
+
+    def adam(self, p, m, v, grads, step, lr):
+        g = self.g
+        cfg = self.cfg
+        b1c, b2c = g.c_f32(cfg.adam_b1), g.c_f32(cfg.adam_b2)
+        one = g.c_f32(1.0)
+        c1 = g.sub(one, g.pow(b1c, step))
+        c2 = g.sub(one, g.pow(b2c, step))
+        po, mo, vo = [], [], []
+        for i in range(NP17):
+            dims = list(g.dims(p[i]))
+            mn = g.add(g.mul(g.broadcast(b1c, [], dims), m[i]),
+                       g.mul(g.full_f32(1.0 - cfg.adam_b1, dims), grads[i]))
+            vn = g.add(g.mul(g.broadcast(b2c, [], dims), v[i]),
+                       g.mul(g.full_f32(1.0 - cfg.adam_b2, dims),
+                             g.mul(grads[i], grads[i])))
+            mhat = g.div(mn, g.broadcast(c1, [], dims))
+            vhat = g.div(vn, g.broadcast(c2, [], dims))
+            den = g.add(g.sqrt(vhat), g.full_f32(cfg.adam_eps, dims))
+            upd = g.div(mhat, den)
+            if cfg.weight_decay:
+                upd = g.add(upd, g.mul(g.full_f32(cfg.weight_decay, dims), p[i]))
+            pn = g.sub(p[i], g.mul(g.broadcast(lr, [], dims), upd))
+            po.append(pn)
+            mo.append(mn)
+            vo.append(vn)
+        return po, mo, vo
+
+    # -- KV-cached path -----------------------------------------------------
+
+    def cached_block(self, params, h, l, ck, cv, qpos, write):
+        g = self.g
+        x = self.layernorm(h, self.layer(params[LN1G], l), self.layer(params[LN1B], l))
+        q = self.split_heads(self.proj(x, self.layer(params[WQ], l)))
+        k = self.split_heads(self.proj(x, self.layer(params[WK], l)))
+        v = self.split_heads(self.proj(x, self.layer(params[WV], l)))
+        if write[0] == "prefix":
+            t = g.dims(k)[2]
+            s = g.dims(ck)[2]
+            high = [0, 0, s - t, 0]
+            ck = g.pad_zero(k, [0, 0, 0, 0], high)
+            cv = g.pad_zero(v, [0, 0, 0, 0], high)
+        else:
+            zero = g.c_s32(0)
+            pos = write[1]
+            ck = g.dyn_update_slice(ck, k, [zero, zero, pos, zero])
+            cv = g.dyn_update_slice(cv, v, [zero, zero, pos, zero])
+        attn = self.attention(q, ck, cv, qpos)
+        ao = self.proj(self.merge_heads(attn), self.layer(params[WO], l))
+        h = g.add(h, ao)
+        return self.ffn(params, h, l), ck, cv
+
+    def forward_cached(self, params, tokens, caches, pos):
+        g = self.g
+        cfg = self.cfg
+        b, t = g.dims(tokens)
+        ln, hn, s, dh = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.d_head
+        h = self.embed(params, tokens, pos)
+        cks, cvs = [], []
+        for l in range(ln):
+            if caches is None:
+                ck_l = g.full_f32(0.0, [b, hn, s, dh])
+                cv_l = g.full_f32(0.0, [b, hn, s, dh])
+                write = ("prefix",)
+            else:
+                ck_l = self.layer(caches[0], l)
+                cv_l = self.layer(caches[1], l)
+                write = ("dynamic", pos[1])
+            h, ckn, cvn = self.cached_block(params, h, l, ck_l, cv_l, pos, write)
+            cks.append(g.reshape(ckn, [1, b, hn, s, dh]))
+            cvs.append(g.reshape(cvn, [1, b, hn, s, dh]))
+        ck_out = g.concat(cks, 0)
+        cv_out = g.concat(cvs, 0)
+        d = cfg.d_model
+        h_last = g.reshape(g.slice(h, [(0, b), (t - 1, t), (0, d)]), [b, 1, d])
+        hf = self.layernorm(h_last, params[LNFG], params[LNFB])
+        logits = g.reshape(self.proj(hf, params[HEAD]), [b, cfg.vocab])
+        return logits, ck_out, cv_out
+
+    # -- init ---------------------------------------------------------------
+
+    def hash_u32(self, x):
+        g = self.g
+        dims = list(g.dims(x))
+        z = x
+        for mul, shift in ((0xED5AD4BB, 17), (0xAC4C1B51, 11), (0x31848BAB, 15)):
+            zs = g.shr(z, g.broadcast(g.c_u32(shift), [], dims))
+            z = g.mul(g.xor(z, zs), g.broadcast(g.c_u32(mul), [], dims))
+        zs = g.shr(z, g.broadcast(g.c_u32(14), [], dims))
+        return g.xor(z, zs)
+
+    def to_unit(self, h):
+        g = self.g
+        dims = list(g.dims(h))
+        top = g.shr(h, g.broadcast(g.c_u32(8), [], dims))
+        f = g.convert(top, "f32")
+        fh = g.add(f, g.full_f32(0.5, dims))
+        return g.mul(fh, g.full_f32(1.0 / 16777216.0, dims))
+
+    def normal_init(self, seed, stream, dims, std):
+        g = self.g
+        n = 1
+        for d in dims:
+            n *= d
+        idx = g.iota("u32", [n], 0)
+        x2 = g.mul(idx, g.broadcast(g.c_u32(2), [], [n]))
+        sg = g.mul(g.broadcast(seed, [], [n]),
+                   g.broadcast(g.c_u32(0x9E3779B1), [], [n]))
+        streamc = (stream * 0x85EBCA6B + 1) & 0xFFFFFFFF
+        base = g.add(sg, g.broadcast(g.c_u32(streamc), [], [n]))
+        e1 = g.add(x2, base)
+        e2 = g.add(g.add(x2, g.broadcast(g.c_u32(1), [], [n])), base)
+        u1 = self.to_unit(self.hash_u32(e1))
+        u2 = self.to_unit(self.hash_u32(e2))
+        r = g.sqrt(g.mul(g.log(u1), g.full_f32(-2.0, [n])))
+        ang = g.mul(u2, g.full_f32(2.0 * math.pi, [n]))
+        z = g.mul(r, g.cos(ang))
+        return g.reshape(g.mul(z, g.full_f32(std, [n])), dims)
+
+    def init_tree(self, seed, scalar_head):
+        cfg = self.cfg
+        std = 0.02
+        res_std = std / math.sqrt(2.0 * cfg.n_layers)
+        out = []
+        for i, (path, dims) in enumerate(cfg.tree(scalar_head)):
+            if path in ("blk/ln1_g", "blk/ln2_g", "lnf_g"):
+                out.append(self.g.full_f32(1.0, dims))
+            elif path in ("blk/ln1_b", "blk/ln2_b", "lnf_b", "blk/b1", "blk/b2"):
+                out.append(self.g.full_f32(0.0, dims))
+            elif path == "pos_emb":
+                out.append(self.normal_init(seed, i, dims, 0.01))
+            elif path in ("blk/wo", "blk/w2"):
+                out.append(self.normal_init(seed, i, dims, res_std))
+            else:
+                out.append(self.normal_init(seed, i, dims, std))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Entry-point emission
+# ---------------------------------------------------------------------------
+
+
+def _tree_io(cfg, prefix, scalar):
+    return [(f"{prefix}/{p}", dims, "f32") for p, dims in cfg.tree(scalar)]
+
+
+def emit_artifacts(cfg: GenConfig):
+    """Returns [(name, hlo_text, inputs, outputs)] with manifest I/O specs."""
+    b, s, p_len, v = cfg.batch, cfg.max_seq, cfg.prompt_len, cfg.vocab
+    cache = [cfg.n_layers, b, cfg.n_heads, s, cfg.d_head]
+    tok_bs = ("tokens", [b, s], "i32")
+    mask_bs = ("mask", [b, s], "f32")
+    sc = lambda name: (name, [], "f32")  # noqa: E731
+    arts = []
+
+    def art(m, name, outs, ins, out_specs):
+        arts.append((name, m.g.emit_hlo(name, outs), ins, out_specs))
+
+    for name, scalar in (("init_policy", False), ("init_scalar", True)):
+        m = M(cfg)
+        seed = m.g.param("u32", [])
+        tree = m.init_tree(seed, scalar)
+        outs = [(f"out/{p}", d, "f32") for p, d in cfg.tree(scalar)]
+        art(m, name, tree, [("seed", [], "u32")], outs)
+
+    m = M(cfg)
+    params = m.tree_params(False)
+    tokens = m.g.param("s32", [b, s])
+    art(m, "fwd_logits", [m.logits(params, tokens)],
+        _tree_io(cfg, "params", False) + [tok_bs],
+        [("out", [b, s, v], "f32")])
+
+    m = M(cfg)
+    params = m.tree_params(False)
+    tokens = m.g.param("s32", [b, s])
+    lp = m.token_logprob(m.logits(params, tokens), tokens)
+    art(m, "logprob", [lp],
+        _tree_io(cfg, "params", False) + [tok_bs],
+        [("out", [b, s], "f32")])
+
+    m = M(cfg)
+    params = m.tree_params(False)
+    tokens = m.g.param("s32", [b, p_len])
+    logits, ck, cv = m.forward_cached(params, tokens, None, ("static", 0))
+    art(m, "prefill", [logits, ck, cv],
+        _tree_io(cfg, "params", False) + [("tokens", [b, p_len], "i32")],
+        [("out/0", [b, v], "f32"), ("out/1", cache, "f32"),
+         ("out/2", cache, "f32")])
+
+    m = M(cfg)
+    params = m.tree_params(False)
+    ck_in = m.g.param("f32", cache)
+    cv_in = m.g.param("f32", cache)
+    tok = m.g.param("s32", [b])
+    pos = m.g.param("s32", [])
+    tok2 = m.g.reshape(tok, [b, 1])
+    logits, ckn, cvn = m.forward_cached(params, tok2, (ck_in, cv_in),
+                                        ("dynamic", pos))
+    art(m, "decode_step", [logits, ckn, cvn],
+        _tree_io(cfg, "params", False) + [
+            ("cache_k", cache, "f32"), ("cache_v", cache, "f32"),
+            ("token", [b], "i32"), ("pos", [], "i32")],
+        [("out/0", [b, v], "f32"), ("out/1", cache, "f32"),
+         ("out/2", cache, "f32")])
+
+    m = M(cfg)
+    params = m.tree_params(True)
+    tokens = m.g.param("s32", [b, s])
+    art(m, "value_score", [m.values(params, tokens)],
+        _tree_io(cfg, "params", True) + [tok_bs],
+        [("out", [b, s], "f32")])
+
+    m = M(cfg)
+    params = m.tree_params(True)
+    tokens = m.g.param("s32", [b, s])
+    idx = m.g.param("s32", [b])
+    art(m, "reward_score", [m.reward_score(params, tokens, idx)],
+        _tree_io(cfg, "params", True) + [tok_bs, ("last_idx", [b], "i32")],
+        [("out", [b], "f32")])
+
+    m = M(cfg)
+    params = m.tree_params(False)
+    tokens = m.g.param("s32", [b, s])
+    mask = m.g.param("f32", [b, s])
+    adv = m.g.param("f32", [b, s])
+    old_lp = m.g.param("f32", [b, s])
+    ref_lp = m.g.param("f32", [b, s])
+    clip = m.g.param("f32", [])
+    klc = m.g.param("f32", [])
+    entc = m.g.param("f32", [])
+    logits = m.logits(params, tokens)
+    lp = m.token_logprob(logits, tokens)
+    loss, kl, ent, cf = m.ppo_loss(logits, lp, old_lp, ref_lp, adv, mask,
+                                   clip, klc, entc)
+    grads = gradients(m.g, loss, params)
+    art(m, "policy_grad", grads + [loss, kl, ent, cf],
+        _tree_io(cfg, "params", False) + [
+            tok_bs, mask_bs, ("adv", [b, s], "f32"),
+            ("old_logp", [b, s], "f32"), ("ref_logp", [b, s], "f32"),
+            sc("clip_eps"), sc("kl_coef"), sc("ent_coef")],
+        _tree_io(cfg, "out/grads", False) + [
+            sc("out/loss"), sc("out/kl"), sc("out/entropy"), sc("out/clipfrac")])
+
+    m = M(cfg)
+    params = m.tree_params(False)
+    tokens = m.g.param("s32", [b, s])
+    mask = m.g.param("f32", [b, s])
+    lp = m.token_logprob(m.logits(params, tokens), tokens)
+    loss = m.g.neg(m.masked_mean(lp, mask))
+    grads = gradients(m.g, loss, params)
+    art(m, "sft_grad", grads + [loss],
+        _tree_io(cfg, "params", False) + [tok_bs, mask_bs],
+        _tree_io(cfg, "out/grads", False) + [sc("out/loss")])
+
+    m = M(cfg)
+    params = m.tree_params(True)
+    tokens = m.g.param("s32", [b, s])
+    mask = m.g.param("f32", [b, s])
+    returns = m.g.param("f32", [b, s])
+    vals = m.values(params, tokens)
+    dv = m.g.sub(vals, returns)
+    loss = m.masked_mean(m.g.mul(dv, dv), mask)
+    grads = gradients(m.g, loss, params)
+    art(m, "critic_grad", grads + [loss],
+        _tree_io(cfg, "params", True) + [
+            tok_bs, mask_bs, ("returns", [b, s], "f32")],
+        _tree_io(cfg, "out/grads", True) + [sc("out/loss")])
+
+    m = M(cfg)
+    params = m.tree_params(True)
+    chosen = m.g.param("s32", [b, s])
+    rejected = m.g.param("s32", [b, s])
+    cidx = m.g.param("s32", [b])
+    ridx = m.g.param("s32", [b])
+    s_c = m.reward_score(params, chosen, cidx)
+    s_r = m.reward_score(params, rejected, ridx)
+    diff = m.g.sub(s_c, s_r)
+    nd = m.g.neg(diff)
+    # -log sigmoid(diff) = softplus(-diff), stable form
+    mx = m.g.max(nd, m.g.full_f32(0.0, [b]))
+    e = m.g.exp(m.g.neg(m.g.abs(nd)))
+    sp = m.g.add(mx, m.g.log(m.g.add(m.g.full_f32(1.0, [b]), e)))
+    loss = m.mean_all(sp)
+    acc = m.mean_all(m.g.convert(m.g.compare("GT", s_c, s_r), "f32"))
+    grads = gradients(m.g, loss, params)
+    art(m, "bt_grad", grads + [loss, acc],
+        _tree_io(cfg, "params", True) + [
+            ("chosen", [b, s], "i32"), ("rejected", [b, s], "i32"),
+            ("chosen_idx", [b], "i32"), ("rejected_idx", [b], "i32")],
+        _tree_io(cfg, "out/grads", True) + [sc("out/loss"), sc("out/acc")])
+
+    for name, scalar in (("adam_policy", False), ("adam_scalar", True)):
+        m = M(cfg)
+        p = m.tree_params(scalar)
+        mm = m.tree_params(scalar)
+        vv = m.tree_params(scalar)
+        gg = m.tree_params(scalar)
+        step = m.g.param("f32", [])
+        lr = m.g.param("f32", [])
+        pn, mn, vn = m.adam(p, mm, vv, gg, step, lr)
+        art(m, name, pn + mn + vn,
+            _tree_io(cfg, "params", scalar) + _tree_io(cfg, "m", scalar)
+            + _tree_io(cfg, "v", scalar) + _tree_io(cfg, "grads", scalar)
+            + [sc("step"), sc("lr")],
+            _tree_io(cfg, "out/params", scalar) + _tree_io(cfg, "out/m", scalar)
+            + _tree_io(cfg, "out/v", scalar))
+
+    m = M(cfg)
+    params = m.tree_params(False)
+    mm = m.tree_params(False)
+    vv = m.tree_params(False)
+    tokens = m.g.param("s32", [b, s])
+    mask = m.g.param("f32", [b, s])
+    adv = m.g.param("f32", [b, s])
+    old_lp = m.g.param("f32", [b, s])
+    ref_lp = m.g.param("f32", [b, s])
+    step = m.g.param("f32", [])
+    lr = m.g.param("f32", [])
+    clip = m.g.param("f32", [])
+    klc = m.g.param("f32", [])
+    entc = m.g.param("f32", [])
+    logits = m.logits(params, tokens)
+    lp = m.token_logprob(logits, tokens)
+    loss, kl, ent, cf = m.ppo_loss(logits, lp, old_lp, ref_lp, adv, mask,
+                                   clip, klc, entc)
+    grads = gradients(m.g, loss, params)
+    pn, mn, vn = m.adam(params, mm, vv, grads, step, lr)
+    art(m, "train_step", pn + mn + vn + [loss, kl, ent, cf],
+        _tree_io(cfg, "params", False) + _tree_io(cfg, "m", False)
+        + _tree_io(cfg, "v", False) + [
+            tok_bs, mask_bs, ("adv", [b, s], "f32"),
+            ("old_logp", [b, s], "f32"), ("ref_logp", [b, s], "f32"),
+            sc("step"), sc("lr"), sc("clip_eps"), sc("kl_coef"), sc("ent_coef")],
+        _tree_io(cfg, "out/params", False) + _tree_io(cfg, "out/m", False)
+        + _tree_io(cfg, "out/v", False) + [
+            sc("out/loss"), sc("out/kl"), sc("out/entropy"), sc("out/clipfrac")])
+
+    m = M(cfg)
+    hn, dh = cfg.n_heads, cfg.d_head
+    q = m.g.param("f32", [b, hn, s, dh])
+    k = m.g.param("f32", [b, hn, s, dh])
+    vvv = m.g.param("f32", [b, hn, s, dh])
+    art(m, "attn_micro", [m.attention(q, k, vvv, ("static", 0))],
+        [("q", [b, hn, s, dh], "f32"), ("k", [b, hn, s, dh], "f32"),
+         ("v", [b, hn, s, dh], "f32")],
+        [("out", [b, hn, s, dh], "f32")])
+
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Manifest
+# ---------------------------------------------------------------------------
+
+
+def _io_json(specs, key):
+    items = []
+    for name, shape, dtype in specs:
+        dims = ", ".join(str(d) for d in shape)
+        items.append(f'{{"{key}": "{name}", "shape": [{dims}], '
+                     f'"dtype": "{dtype}"}}')
+    return "[\n   " + ",\n   ".join(items) + "\n  ]"
+
+
+def manifest_json(cfg: GenConfig, arts):
+    policy = [(f"p/{p}", d, "f32") for p, d in cfg.tree(False)]
+    scalar = [(f"p/{p}", d, "f32") for p, d in cfg.tree(True)]
+    entries = []
+    for name, text, ins, outs in arts:
+        entries.append(
+            f' "{name}": {{\n  "file": "{name}.hlo.txt",\n'
+            f'  "inputs": {_io_json(ins, "name")},\n'
+            f'  "outputs": {_io_json(outs, "name")},\n'
+            f'  "hlo_bytes": {len(text)}\n }}')
+    config = (f'{{"name": "{cfg.name}", "vocab": {cfg.vocab}, '
+              f'"d_model": {cfg.d_model}, "n_layers": {cfg.n_layers}, '
+              f'"n_heads": {cfg.n_heads}, "d_ff": {cfg.d_ff}, '
+              f'"max_seq": {cfg.max_seq}, "prompt_len": {cfg.prompt_len}, '
+              f'"batch": {cfg.batch}, "use_pallas": false}}')
+    return ('{\n"format_version": 1,\n'
+            '"generator": "python -m compile.fixturegen '
+            '(HLO emitter for the pure-Rust interpreter backend)",\n'
+            f'"config": {config},\n'
+            f'"param_count": {cfg.param_count()},\n'
+            f'"scalar_param_count": {cfg.scalar_param_count()},\n'
+            f'"policy_tree": {_io_json(policy, "path")},\n'
+            f'"scalar_tree": {_io_json(scalar, "path")},\n'
+            '"artifacts": {\n' + ",\n".join(entries) + "\n}\n}\n")

@@ -1,0 +1,215 @@
+"""Exact ports of `rust/src/util/rng.rs` (xoshiro256++), the byte
+tokenizer and `rust/src/data/tasks.rs` — used to simulate the Rust test
+suites' exact task streams when validating that the fixture model can meet
+their learning thresholds (see `simulate.py`)."""
+
+from __future__ import annotations
+
+M64 = (1 << 64) - 1
+
+
+def _splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & M64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    return state, z ^ (z >> 31)
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class Rng:
+    def __init__(self, seed):
+        s = seed & M64
+        self.s = []
+        for _ in range(4):
+            s, z = _splitmix64(s)
+            self.s.append(z)
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & M64, 23) + s[0]) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def fork(self, stream):
+        return Rng(self.next_u64() ^ ((stream * 0x9E3779B97F4A7C15) & M64))
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        assert n > 0
+        return int(self.f64() * n) % n
+
+    def bool(self, p):
+        return self.f64() < p
+
+    def weighted(self, weights):
+        t = self.f64() * sum(weights)
+        for i, w in enumerate(weights):
+            t -= w
+            if t <= 0.0:
+                return i
+        return len(weights) - 1
+
+    def sample_logits(self, logits, temperature, top_k):
+        import numpy as np
+
+        logits = np.asarray(logits, np.float32)
+        if temperature <= 0.0:
+            return int(np.argmax(logits))
+        k = len(logits) if top_k == 0 else min(top_k, len(logits))
+        idx = list(np.argsort(-logits, kind="stable")[:k])
+        mx = max(float(logits[i]) for i in idx)
+        ws = [float(np.exp((float(logits[i]) - mx) / temperature)) for i in idx]
+        return int(idx[self.weighted(ws)])
+
+
+# -- tokenizer (tokenizer.rs) ----------------------------------------------
+
+PAD = 0
+EOS = 10  # '\n'
+
+
+def encode(s):
+    return [b for b in s.encode()]
+
+
+def pad_prompt(s, width):
+    toks = encode(s)
+    assert len(toks) <= width, s
+    return [ord(" ")] * (width - len(toks)) + toks
+
+
+def extract_response(row, prompt_len):
+    gen = row[prompt_len:]
+    end = gen.index(EOS) if EOS in gen else len(gen)
+    return bytes(t for t in gen[:end] if 0 < t < 256).decode("utf-8", "replace")
+
+
+def last_token_index(row, prompt_len):
+    gen = row[prompt_len:]
+    if EOS in gen:
+        return prompt_len + gen.index(EOS)
+    return len(row) - 1
+
+
+# -- tasks (tasks.rs) -------------------------------------------------------
+
+
+class Task:
+    def __init__(self, kind, prompt, answer):
+        self.kind, self.prompt, self.answer = kind, prompt, answer
+
+    def check(self, response):
+        return response.strip() == self.answer
+
+    def prompt_tokens(self, width):
+        return pad_prompt(self.prompt, width)
+
+    def demonstration(self, prompt_width, seq):
+        row = self.prompt_tokens(prompt_width)
+        answer = encode(self.answer + "\n")
+        assert len(row) + len(answer) <= seq
+        start = len(row)
+        row = row + answer
+        end = len(row)
+        row = row + [PAD] * (seq - len(row))
+        m = [0.0] * seq
+        for i in range(start, end):
+            m[i] = 1.0
+        return row, m
+
+
+class TaskGen:
+    def __init__(self, kinds, seed):
+        self.kinds = kinds
+        self.rng = Rng(seed)
+
+    def sample(self):
+        kind = self.kinds[self.rng.below(len(self.kinds))]
+        if kind == "add":
+            a, b = self.rng.below(10), self.rng.below(10)
+            return Task(kind, f"{a}+{b}=", str(a + b))
+        if kind == "max":
+            a, b = self.rng.below(10), self.rng.below(10)
+            return Task(kind, f"max {a} {b}=", str(max(a, b)))
+        if kind == "copy":
+            s = self._word(3)
+            return Task(kind, f"copy {s}=", s)
+        s = self._word(3)
+        return Task(kind, f"rev {s}=", s[::-1])
+
+    def sample_n(self, n):
+        return [self.sample() for _ in range(n)]
+
+    def _word(self, n):
+        return "".join(chr(ord("a") + self.rng.below(26)) for _ in range(n))
+
+    def corrupt(self, task):
+        if task.kind in ("add", "max"):
+            v = int(task.answer)
+            delta = 1 + self.rng.below(3)
+            sign = 1 if self.rng.bool(0.5) else -1
+            c = v + sign * delta
+            if c < 0 or c == v:
+                c = v + delta
+            return str(c)
+        chars = list(task.answer)
+        if self.rng.bool(0.7) or len(chars) < 2:
+            if self.rng.bool(0.5):
+                chars.append(chr(ord("a") + self.rng.below(26)))
+            elif len(chars) >= 2:
+                chars.pop()
+            else:
+                chars.append("x")
+        else:
+            i = self.rng.below(len(chars) - 1)
+            chars[i], chars[i + 1] = chars[i + 1], chars[i]
+            if "".join(chars) == task.answer:
+                chars[0] = "a" if chars[0] == "z" else "z"
+        return "".join(chars)
+
+    def rng_bool(self):
+        return self.rng.bool(0.5)
+
+
+def preference_pair(gen, prompt_width, seq):
+    task = gen.sample()
+    wrong = gen.corrupt(task)
+
+    def mk(answer):
+        row = task.prompt_tokens(prompt_width) + encode(answer + "\n")
+        assert len(row) <= seq
+        idx = len(row) - 1
+        return row + [PAD] * (seq - len(row)), idx
+
+    chosen, cidx = mk(task.answer)
+    rejected, ridx = mk(wrong)
+    return chosen, rejected, cidx, ridx
+
+
+def verifier_example(gen, prompt_width, seq):
+    task = gen.sample()
+    correct = gen.rng_bool()
+    answer = task.answer if correct else gen.corrupt(task)
+    verdict = "yes" if correct else "no"
+    row = task.prompt_tokens(prompt_width) + encode(f"{answer} V:")
+    vstart = len(row)
+    row = row + encode(verdict + "\n")
+    vend = len(row)
+    assert len(row) <= seq
+    row = row + [PAD] * (seq - len(row))
+    m = [0.0] * seq
+    for i in range(vstart, vend):
+        m[i] = 1.0
+    return row, m, correct

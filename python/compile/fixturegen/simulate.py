@@ -1,0 +1,266 @@
+"""Simulate the Rust test suites' learning-threshold scenarios against the
+emitted artifacts (via `hlo_eval`, the Python mirror of the Rust
+interpreter), using exact ports of the Rust RNG/task generators.
+
+Run at fixture-generation time to prove the committed `tiny` set can pass:
+* runtime_integration: `train_step_reduces_loss_and_updates_params`,
+  `bt_grad_learns_preference`;
+* coordinator_integration: `bt_pretraining_fits_preferences` (acc ≥ 0.75),
+  `verifier_pretraining_beats_chance` (acc > 0.65), SFT warm-start loss
+  decrease.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from . import hlo_eval, rustrng
+from .modelgen import TINY, emit_artifacts
+
+
+class Engine:
+    def __init__(self, cfg, arts):
+        self.cfg = cfg
+        self.mods = {name: hlo_eval.Module(text) for name, text, _, _ in arts}
+
+    def run(self, name, inputs):
+        return hlo_eval.evaluate(self.mods[name], inputs)
+
+
+def fixed_tokens(b, s):
+    return np.array([[(i * 2654435761) % 256 for i in range(r * s, (r + 1) * s)]
+                     for r in range(b)], np.int32)
+
+
+class TrainState:
+    def __init__(self, engine, params, artifact):
+        self.e = engine
+        self.params = params
+        self.m = [np.zeros_like(p) for p in params]
+        self.v = [np.zeros_like(p) for p in params]
+        self.step = 0
+        self.artifact = artifact
+
+    def apply(self, grads, lr):
+        self.step += 1
+        out = self.e.run(self.artifact,
+                         self.params + self.m + self.v + list(grads)
+                         + [np.float32(self.step), np.float32(lr)])
+        n = len(self.params)
+        self.params, self.m, self.v = out[:n], out[n:2 * n], out[2 * n:3 * n]
+
+
+def sim_bt_fixed_batch(e):
+    """runtime_integration::bt_grad_learns_preference."""
+    cfg = e.cfg
+    b, s = cfg.batch, cfg.max_seq
+    chosen = fixed_tokens(b, s)
+    rejected = (255 - chosen).astype(np.int32)
+    idx = np.full((b,), s - 1, np.int32)
+    params = e.run("init_scalar", [np.uint32(9)])
+    st = TrainState(e, params, "adam_scalar")
+    first, last = None, (0.0, 0.0)
+    for _ in range(12):
+        out = e.run("bt_grad", st.params + [chosen, rejected, idx, idx])
+        loss, acc = float(out[-2]), float(out[-1])
+        st.apply(out[:-2], 3e-3)
+        if first is None:
+            first = loss
+        last = (loss, acc)
+    assert last[0] < first, (last, first)
+    assert last[1] == 1.0, last
+    return first, last
+
+
+def sim_train_bt(e, kinds, steps, lr, seed):
+    """pretrain.rs::train_bt."""
+    cfg = e.cfg
+    b, s, p = cfg.batch, cfg.max_seq, cfg.prompt_len
+    st = TrainState(e, e.run("init_scalar", [np.uint32(seed)]), "adam_scalar")
+    gen = rustrng.TaskGen(kinds, seed)
+    losses, acc = [], 0.0
+    for _ in range(steps):
+        ch, rj, ci, ri = [], [], [], []
+        for _ in range(b):
+            c, r, a, d = rustrng.preference_pair(gen, p, s)
+            ch.append(c)
+            rj.append(r)
+            ci.append(a)
+            ri.append(d)
+        out = e.run("bt_grad", st.params + [
+            np.array(ch, np.int32), np.array(rj, np.int32),
+            np.array(ci, np.int32), np.array(ri, np.int32)])
+        acc = float(out[-1])
+        losses.append(float(out[-2]))
+        st.apply(out[:-2], lr)
+    return losses, acc
+
+
+def verifier_accuracy(e, params, kinds, seed):
+    cfg = e.cfg
+    b, s, p, v = cfg.batch, cfg.max_seq, cfg.prompt_len, cfg.vocab
+    gen = rustrng.TaskGen(kinds, seed)
+    correct = total = 0
+    for _ in range(4):
+        rows, qends, labels = [], [], []
+        for _ in range(b):
+            row, mask, label = rustrng.verifier_example(gen, p, s)
+            vstart = mask.index(1.0)
+            rows.append(row)
+            qends.append(vstart - 1)
+            labels.append(label)
+        blanked = []
+        for row, q in zip(rows, qends):
+            r = list(row)
+            for i in range(q + 1, len(r)):
+                r[i] = 0
+            blanked.append(r)
+        logits = e.run("fwd_logits",
+                       params + [np.array(blanked, np.int32)])[0]
+        for i in range(b):
+            yes = logits[i, qends[i], ord("y")] > logits[i, qends[i], ord("n")]
+            correct += int(yes == labels[i])
+            total += 1
+    return correct / total
+
+
+def sim_train_verifier(e, kinds, steps, lr, seed):
+    """pretrain.rs::train_verifier."""
+    cfg = e.cfg
+    b, s, p = cfg.batch, cfg.max_seq, cfg.prompt_len
+    st = TrainState(e, e.run("init_policy", [np.uint32(seed)]), "adam_policy")
+    gen = rustrng.TaskGen(kinds, seed)
+    losses = []
+    for _ in range(steps):
+        rows, masks = [], []
+        for _ in range(b):
+            row, mask, _ = rustrng.verifier_example(gen, p, s)
+            rows.append(row)
+            masks.append(mask)
+        out = e.run("sft_grad", st.params + [
+            np.array(rows, np.int32), np.array(masks, np.float32)])
+        losses.append(float(out[-1]))
+        st.apply(out[:-1], lr)
+    metric = verifier_accuracy(e, st.params, kinds, seed + 1)
+    return losses, metric
+
+
+def sim_train_step_decreases(e):
+    """runtime_integration::train_step_reduces_loss_and_updates_params."""
+    cfg = e.cfg
+    b, s = cfg.batch, cfg.max_seq
+    params = e.run("init_policy", [np.uint32(1)])
+    tokens = fixed_tokens(b, s)
+    ones = np.ones((b, s), np.float32)
+    logp = e.run("logprob", params + [tokens])[0]
+    st = TrainState(e, params, "adam_policy")
+    losses = []
+    m = [np.zeros_like(p) for p in params]
+    v = [np.zeros_like(p) for p in params]
+    cur = params
+    for step in range(1, 5):
+        out = e.run("train_step", cur + m + v + [
+            tokens, ones, ones, logp, logp,
+            np.float32(step), np.float32(1e-3), np.float32(0.2),
+            np.float32(0.0), np.float32(0.0)])
+        n = len(params)
+        cur, m, v = out[:n], out[n:2 * n], out[2 * n:3 * n]
+        losses.append(float(out[3 * n]))
+        assert float(out[3 * n + 3]) >= 0.0
+    assert losses[-1] < losses[0], losses
+    _ = st
+    return losses
+
+
+def sim_sft_decreases(e, seed=17, steps=4, lr=1.5e-3):
+    """controller.rs::sft_step over the tiny_cfg task mix."""
+    cfg = e.cfg
+    b, s, p = cfg.batch, cfg.max_seq, cfg.prompt_len
+    gen = rustrng.TaskGen(["add", "max", "copy"], seed)
+    st = TrainState(e, e.run("init_policy", [np.uint32(seed)]), "adam_policy")
+    losses = []
+    for _ in range(steps):
+        rows, masks = [], []
+        for _ in range(b):
+            t = gen.sample()
+            row, mask = t.demonstration(p, s)
+            rows.append(row)
+            masks.append(mask)
+        out = e.run("sft_grad", st.params + [
+            np.array(rows, np.int32), np.array(masks, np.float32)])
+        losses.append(float(out[-1]))
+        st.apply(out[:-1], lr)
+    assert losses[-1] < losses[0], losses
+    return losses
+
+
+def sim_fused_equals_split(e):
+    """runtime_integration::policy_grad_plus_adam_equals_fused (tolerance
+    here is float-level; in Rust both paths share one interpreter and are
+    bit-identical)."""
+    cfg = e.cfg
+    b, s = cfg.batch, cfg.max_seq
+    params = e.run("init_policy", [np.uint32(3)])
+    tokens = fixed_tokens(b, s)
+    ones = np.ones((b, s), np.float32)
+    logp = e.run("logprob", params + [tokens])[0]
+    zeros = [np.zeros_like(p) for p in params]
+    fused = e.run("train_step", params + zeros + zeros + [
+        tokens, ones, ones, logp, logp, np.float32(1.0), np.float32(1e-3),
+        np.float32(0.2), np.float32(0.01), np.float32(0.0)])
+    gout = e.run("policy_grad", params + [
+        tokens, ones, ones, logp, logp,
+        np.float32(0.2), np.float32(0.01), np.float32(0.0)])
+    st = TrainState(e, params, "adam_policy")
+    st.apply(gout[:len(params)], 1e-3)
+    n = len(params)
+    err = max(float(np.max(np.abs(a - c))) for a, c in
+              zip(fused[:n], st.params))
+    assert err < 1e-6, err
+    return err
+
+
+def main():
+    cfg = TINY
+    print("emitting tiny artifacts ...")
+    arts = emit_artifacts(cfg)
+    e = Engine(cfg, arts)
+
+    t0 = time.time()
+    losses = sim_train_step_decreases(e)
+    dt = (time.time() - t0) / 4
+    print(f"train_step losses {['%.4f' % l for l in losses]} "
+          f"({dt * 1e3:.0f} ms/step in numpy)")
+
+    err = sim_fused_equals_split(e)
+    print(f"fused == grad+adam, max|Δ| = {err:.2e}")
+
+    first, last = sim_bt_fixed_batch(e)
+    print(f"bt fixed batch: loss {first:.4f} -> {last[0]:.4f}, acc {last[1]}")
+
+    losses, acc = sim_train_bt(e, ["copy", "rev"], 60, 2e-3, 7)
+    print(f"train_bt(copy,rev,60,2e-3,seed7): loss {losses[0]:.4f} -> "
+          f"{losses[-1]:.4f}, final-batch acc {acc:.3f} (need >= 0.75)")
+    assert acc >= 0.75 and losses[-1] < losses[0]
+
+    losses, acc2 = sim_train_bt(e, ["copy", "rev"], 40, 3e-3, 17 + 101)
+    print(f"train_bt(copy,rev,40,3e-3,seed118): acc {acc2:.3f} "
+          f"(build_rewarder path)")
+
+    sft = sim_sft_decreases(e)
+    print(f"sft warm-start losses {['%.4f' % l for l in sft]}")
+
+    t0 = time.time()
+    losses, metric = sim_train_verifier(e, ["copy"], 300, 3e-3, 11)
+    print(f"train_verifier(copy,300,3e-3,seed11): loss {losses[0]:.4f} -> "
+          f"{losses[-1]:.4f}, accuracy {metric:.3f} (need > 0.65) "
+          f"[{time.time() - t0:.0f}s]")
+    assert metric > 0.65
+
+    print("all threshold simulations OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -946,7 +946,86 @@ pub fn e9_checkpoint(quick: bool) -> Table {
     }
 }
 
-/// Run one experiment by id ("e1".."e9"), print its table, and return it.
+/// E-interp: per-artifact wallclock of the pure-Rust HLO interpreter on
+/// the checked-in fixture sets (parse/"compile" once, then warm calls).
+/// The CI engine-tests job uploads this as `BENCH_engine_interp.json`, so
+/// interpreter perf trajectory is visible on every PR; with the `pjrt`
+/// feature the same harness times XLA for the comparison column in
+/// EXPERIMENTS.md §Einterp.
+pub fn einterp_engine(quick: bool) -> Table {
+    use crate::runtime::Engine;
+    let reps = if quick { 3u32 } else { 10 };
+    let mut rows = Vec::new();
+    for config in ["synthetic", "tiny"] {
+        let Some(engine) = Engine::try_load(config) else {
+            rows.push(vec![
+                config.to_string(),
+                "-".into(),
+                "missing".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            continue;
+        };
+        let names: Vec<String> = engine.manifest().artifacts.keys().cloned().collect();
+        for name in names {
+            let spec = engine.manifest().artifact(&name).unwrap().clone();
+            // benign placeholder inputs: zeros for tensors (token 0 is in
+            // range), 1.0 for f32 scalars (Adam's `step` must be >= 1)
+            let inputs: Vec<Tensor> = spec
+                .inputs
+                .iter()
+                .map(|s| match s.dtype {
+                    crate::runtime::Dtype::F32 => {
+                        if s.shape.is_empty() {
+                            Tensor::scalar_f32(1.0)
+                        } else {
+                            Tensor::zeros_f32(s.shape.clone())
+                        }
+                    }
+                    crate::runtime::Dtype::I32 => {
+                        Tensor::i32(s.shape.clone(), vec![0; s.num_elements()])
+                    }
+                    crate::runtime::Dtype::U32 => {
+                        Tensor::u32(s.shape.clone(), vec![0; s.num_elements()])
+                    }
+                })
+                .collect();
+            engine.run(&name, &inputs).unwrap(); // warm (parse + first call)
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                engine.run(&name, &inputs).unwrap();
+            }
+            let ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+            let compile_ms = engine
+                .stats()
+                .get(&name)
+                .map(|s| s.compile_time.as_secs_f64() * 1e3)
+                .unwrap_or(0.0);
+            rows.push(vec![
+                config.to_string(),
+                name.clone(),
+                engine.backend_name().to_string(),
+                format!("{compile_ms:.1}"),
+                format!("{ms:.2}"),
+            ]);
+        }
+    }
+    Table {
+        title: "Einterp: engine backend per-artifact wallclock".into(),
+        header: vec![
+            "config".into(),
+            "artifact".into(),
+            "backend".into(),
+            "parse/compile ms".into(),
+            "ms/call".into(),
+        ],
+        rows,
+    }
+}
+
+/// Run one experiment by id ("e1".."e9a", "einterp"), print its table, and
+/// return it.
 pub fn run(id: &str, quick: bool) -> Option<Table> {
     let t = match id {
         "e1" => e1_controller_scaling(quick),
@@ -959,6 +1038,7 @@ pub fn run(id: &str, quick: bool) -> Option<Table> {
         "e8c" => e8_collective(quick),
         "e9" => e9_checkpoint(quick),
         "e9a" => e9a_allreduce(quick),
+        "einterp" => einterp_engine(quick),
         _ => return None,
     };
     t.print();

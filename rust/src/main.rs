@@ -38,7 +38,9 @@ USAGE:
               collectives through the rank-0 rendezvous, --collective ring
               streams chunked frames rank-to-rank (bootstrap via the
               rendezvous, then O(payload)/rank; rank 0 prints the report)
-  gcore bench <e1|e2|e3|e4|e5|e7|e8|e8c|e9|e9a|all> [--full] [--json out.json]
+  gcore bench <e1|e2|e3|e4|e5|e7|e8|e8c|e9|e9a|einterp|all> [--full]
+              [--json out.json]   (einterp: HLO-interpreter engine timings
+              over the checked-in fixture artifact sets)
   gcore simulate [--placement colocate|coexist|dynamic] [--devices N]
                  [--steps N] [--dapo]
   gcore inspect-artifacts [--artifacts tiny]
@@ -261,7 +263,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let quick = !args.has("full");
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let ids: Vec<&str> = if which == "all" {
-        vec!["e1", "e2", "e3", "e4", "e5", "e7", "e8", "e8c", "e9", "e9a"]
+        vec!["e1", "e2", "e3", "e4", "e5", "e7", "e8", "e8c", "e9", "e9a", "einterp"]
     } else {
         vec![which]
     };

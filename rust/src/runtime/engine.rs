@@ -1,43 +1,83 @@
-//! PJRT execution engine: loads AOT HLO-text artifacts, compiles them once,
-//! and executes them with host `Tensor` inputs.
+//! Execution engine: loads AOT HLO-text artifacts and executes them with
+//! host `Tensor` inputs through one of two backends:
 //!
-//! This is the only place Python-built compute enters the Rust system.  The
-//! pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
-//! → `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
-//! HLO *text* is the interchange format (serialized protos from jax ≥ 0.5 are
-//! rejected by xla_extension 0.5.1 — see aot.py).
+//! * **`Pjrt`** (feature `pjrt`) — the vendored `xla` crate, following
+//!   /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
+//!   `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//!   HLO *text* is the interchange format (serialized protos from jax ≥
+//!   0.5 are rejected by xla_extension 0.5.1 — see aot.py).
+//! * **`Interp`** — the pure-Rust HLO interpreter (`runtime::hlo`), always
+//!   compiled in.  It executes the checked-in fixture artifact sets under
+//!   `rust/tests/fixtures/artifacts/` (emitted and jax-validated by
+//!   `python -m compile.fixturegen`), so the engine-backed test tier runs
+//!   on stock CI runners with no XLA closure and no Python.
 //!
-//! The XLA bridge is feature-gated (`pjrt`): without the vendored `xla`
-//! crate the engine still loads manifests and validates artifact I/O
-//! contracts, but execution returns an error and engine-backed tests skip
-//! via [`Engine::try_load`].
+//! Selection: `pjrt` builds default to PJRT, everything else to the
+//! interpreter; `GCORE_ENGINE=interp|pjrt|auto` overrides.  With both
+//! backends in one build the differential test in tests/hlo_golden.rs
+//! asserts they agree on the fixture artifacts.
 //!
-//! Thread-safety: `xla` wrapper types hold raw pointers and are not `Send`;
-//! the engine serializes all PJRT access behind one mutex.  XLA-CPU
-//! parallelizes *inside* an execution via its intra-op thread pool, so
-//! coordinator-level threads lose no meaningful compute parallelism.
+//! Thread-safety: `xla` wrapper types hold raw pointers and are not
+//! `Send`; the engine serializes all PJRT access behind one mutex (XLA-CPU
+//! parallelizes *inside* an execution).  The interpreter is pure, so
+//! compiled programs are shared as `Arc` snapshots and coordinator threads
+//! execute concurrently.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
-use std::time::Duration;
-#[cfg(feature = "pjrt")]
-use std::time::Instant;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 #[cfg(feature = "pjrt")]
 use anyhow::Context;
 use anyhow::{bail, Result};
 
+use crate::runtime::hlo::Program;
 use crate::runtime::manifest::{artifacts_dir, ArtifactSpec, Manifest};
 use crate::runtime::tensor::Tensor;
 
-#[cfg(feature = "pjrt")]
-struct Inner {
-    client: xla::PjRtClient,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+/// Which execution backend to build an engine on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT when the `pjrt` feature is compiled in, interpreter otherwise.
+    Auto,
+    Pjrt,
+    Interp,
 }
 
-#[cfg(not(feature = "pjrt"))]
-struct Inner {}
+impl BackendKind {
+    /// Parse a `GCORE_ENGINE` value.
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        Ok(match s {
+            "auto" | "" => BackendKind::Auto,
+            "pjrt" => BackendKind::Pjrt,
+            "interp" => BackendKind::Interp,
+            other => bail!(
+                "unknown GCORE_ENGINE value '{other}' (auto|pjrt|interp)"
+            ),
+        })
+    }
+
+    /// The backend selected by the environment (`GCORE_ENGINE`), default
+    /// [`BackendKind::Auto`].
+    pub fn from_env() -> Result<BackendKind> {
+        match std::env::var("GCORE_ENGINE") {
+            Ok(v) => Self::parse(&v),
+            Err(_) => Ok(BackendKind::Auto),
+        }
+    }
+}
+
+enum ExecBackend {
+    #[cfg(feature = "pjrt")]
+    Pjrt {
+        client: xla::PjRtClient,
+        executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    },
+    /// Pure-Rust HLO interpreter: parsed programs, keyed by artifact name.
+    Interp {
+        programs: HashMap<String, Arc<Program>>,
+    },
+}
 
 /// Per-artifact execution statistics (feeds the utilization monitor and the
 /// §Perf tables in EXPERIMENTS.md).
@@ -50,33 +90,33 @@ pub struct ExecStats {
 
 pub struct Engine {
     manifest: Manifest,
-    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
-    inner: Mutex<Inner>,
+    inner: Mutex<ExecBackend>,
     stats: Mutex<HashMap<String, ExecStats>>,
 }
 
 // SAFETY: all access to the raw-pointer-holding xla types is serialized
-// behind `inner`; the PJRT CPU plugin itself is thread-safe.
+// behind `inner`; the PJRT CPU plugin itself is thread-safe.  The
+// interpreter variant holds only owned data and is naturally Send + Sync.
 #[cfg(feature = "pjrt")]
 unsafe impl Send for Engine {}
 #[cfg(feature = "pjrt")]
 unsafe impl Sync for Engine {}
 
 impl Engine {
-    /// True when this build can actually execute artifacts.
+    /// True when this build can execute artifacts.  Always true since the
+    /// interpreter backend landed — kept for the historical call sites
+    /// that gated on the `pjrt` feature.
     pub const fn backend_available() -> bool {
-        cfg!(feature = "pjrt")
+        true
     }
 
-    /// Load an artifact set if (and only if) it exists AND this build has an
-    /// execution backend.  Engine-backed tests use this to self-skip — so it
-    /// returns `None` only for the two legitimate skip reasons (no backend,
-    /// artifacts never built) and PANICS on artifacts that exist but fail to
-    /// load: a corrupt manifest must fail the suite loudly, not skip it.
+    /// Load an artifact set if (and only if) it exists.  Engine-backed
+    /// tests use this to self-skip — since the interpreter backend landed
+    /// the ONLY legitimate skip reason is a missing artifact set (and the
+    /// checked-in fixture sets make even that unusual); artifacts that
+    /// exist but fail to load PANIC so a corrupt set fails the suite
+    /// loudly instead of skipping it.
     pub fn try_load(config: &str) -> Option<Engine> {
-        if !Self::backend_available() {
-            return None;
-        }
         let dir = artifacts_dir(config);
         if !dir.join("manifest.json").exists() {
             return None;
@@ -85,7 +125,8 @@ impl Engine {
             Ok(e) => Some(e),
             Err(e) => panic!(
                 "artifact set '{config}' exists at {dir:?} but failed to \
-                 load — fix or rebuild it (`make artifacts`): {e:#}"
+                 load — fix or rebuild it (`make artifacts`, or \
+                 `python -m compile.fixturegen` for the fixture sets): {e:#}"
             ),
         }
     }
@@ -95,24 +136,59 @@ impl Engine {
         Self::from_dir(artifacts_dir(config))
     }
 
+    /// Load with the backend chosen by `GCORE_ENGINE` (default: PJRT when
+    /// compiled in, interpreter otherwise).
     pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        Self::from_dir_with_backend(dir, BackendKind::from_env()?)
+    }
+
+    /// Load with an explicit backend choice (the differential tests build
+    /// one engine per backend this way).
+    pub fn from_dir_with_backend(
+        dir: impl AsRef<std::path::Path>,
+        kind: BackendKind,
+    ) -> Result<Engine> {
         let manifest = Manifest::load(dir)?;
         Ok(Engine {
             manifest,
-            inner: Mutex::new(Self::new_inner()?),
+            inner: Mutex::new(Self::new_backend(kind)?),
             stats: Mutex::new(HashMap::new()),
         })
     }
 
     #[cfg(feature = "pjrt")]
-    fn new_inner() -> Result<Inner> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Inner { client, executables: HashMap::new() })
+    fn new_backend(kind: BackendKind) -> Result<ExecBackend> {
+        match kind {
+            BackendKind::Interp => Ok(ExecBackend::Interp { programs: HashMap::new() }),
+            BackendKind::Auto | BackendKind::Pjrt => {
+                let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+                Ok(ExecBackend::Pjrt { client, executables: HashMap::new() })
+            }
+        }
     }
 
     #[cfg(not(feature = "pjrt"))]
-    fn new_inner() -> Result<Inner> {
-        Ok(Inner {})
+    fn new_backend(kind: BackendKind) -> Result<ExecBackend> {
+        match kind {
+            BackendKind::Auto | BackendKind::Interp => {
+                Ok(ExecBackend::Interp { programs: HashMap::new() })
+            }
+            BackendKind::Pjrt => bail!(
+                "GCORE_ENGINE=pjrt but gcore was built without the `pjrt` \
+                 feature (no XLA backend); unset GCORE_ENGINE (or set it to \
+                 'interp'/'auto') to use the built-in HLO interpreter, or \
+                 rebuild with the vendored xla crate"
+            ),
+        }
+    }
+
+    /// Name of the active backend ("pjrt" or "interp").
+    pub fn backend_name(&self) -> &'static str {
+        match &*self.inner.lock().unwrap() {
+            #[cfg(feature = "pjrt")]
+            ExecBackend::Pjrt { .. } => "pjrt",
+            ExecBackend::Interp { .. } => "interp",
+        }
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -127,24 +203,59 @@ impl Engine {
         Ok(())
     }
 
-    #[cfg(feature = "pjrt")]
+    /// Compile (PJRT) or parse (interpreter) an artifact once.
     fn ensure_compiled(&self, name: &str) -> Result<()> {
-        let mut inner = self.inner.lock().unwrap();
-        if inner.executables.contains_key(name) {
-            return Ok(());
+        {
+            let inner = self.inner.lock().unwrap();
+            let present = match &*inner {
+                #[cfg(feature = "pjrt")]
+                ExecBackend::Pjrt { executables, .. } => executables.contains_key(name),
+                ExecBackend::Interp { programs } => programs.contains_key(name),
+            };
+            if present {
+                return Ok(());
+            }
         }
         let path = self.manifest.hlo_path(name)?;
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = inner
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact '{name}'"))?;
-        inner.executables.insert(name.to_string(), exe);
+        let mut inner = self.inner.lock().unwrap();
+        // re-check after re-locking: a racing thread may have compiled the
+        // artifact while we resolved the path (cold engine, world >= 2)
+        let present = match &*inner {
+            #[cfg(feature = "pjrt")]
+            ExecBackend::Pjrt { executables, .. } => executables.contains_key(name),
+            ExecBackend::Interp { programs } => programs.contains_key(name),
+        };
+        if present {
+            return Ok(());
+        }
+        match &mut *inner {
+            #[cfg(feature = "pjrt")]
+            ExecBackend::Pjrt { client, executables } => {
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-utf8 path")?,
+                )
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling artifact '{name}'"))?;
+                executables.insert(name.to_string(), exe);
+            }
+            ExecBackend::Interp { programs } => {
+                let text = std::fs::read_to_string(&path).map_err(|e| {
+                    anyhow::anyhow!(
+                        "reading HLO text {path:?}: {e} — regenerate the \
+                         artifact set (`make artifacts`, or \
+                         `python -m compile.fixturegen` for fixtures)"
+                    )
+                })?;
+                let program = Program::parse(&text)
+                    .map_err(|e| e.context(format!("parsing HLO text {path:?}")))?;
+                programs.insert(name.to_string(), Arc::new(program));
+            }
+        }
+        drop(inner);
         self.stats
             .lock()
             .unwrap()
@@ -152,14 +263,6 @@ impl Engine {
             .or_default()
             .compile_time = t0.elapsed();
         Ok(())
-    }
-
-    #[cfg(not(feature = "pjrt"))]
-    fn ensure_compiled(&self, name: &str) -> Result<()> {
-        bail!(
-            "artifact '{name}' cannot compile: gcore was built without the \
-             `pjrt` feature (no XLA backend)"
-        )
     }
 
     fn validate_inputs(spec: &ArtifactSpec, inputs: &[&Tensor]) -> Result<()> {
@@ -206,32 +309,10 @@ impl Engine {
         self.execute(name, inputs, n_outputs)
     }
 
-    #[cfg(feature = "pjrt")]
     fn execute(&self, name: &str, inputs: &[&Tensor], n_outputs: usize) -> Result<Vec<Tensor>> {
         self.ensure_compiled(name)?;
-
         let t0 = Instant::now();
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-
-        let outputs = {
-            let inner = self.inner.lock().unwrap();
-            let exe = inner.executables.get(name).unwrap();
-            let result = exe
-                .execute::<xla::Literal>(&lits)
-                .with_context(|| format!("executing '{name}'"))?;
-            let root = result[0][0]
-                .to_literal_sync()
-                .context("fetching result literal")?;
-            let parts = root.to_tuple().context("decomposing result tuple")?;
-            parts
-                .iter()
-                .map(Tensor::from_literal)
-                .collect::<Result<Vec<_>>>()?
-        };
-
+        let outputs = self.execute_inner(name, inputs)?;
         if outputs.len() != n_outputs {
             bail!(
                 "artifact '{}' returned {} outputs, manifest says {}",
@@ -240,7 +321,6 @@ impl Engine {
                 n_outputs
             );
         }
-
         let mut stats = self.stats.lock().unwrap();
         let e = stats.entry(name.to_string()).or_default();
         e.calls += 1;
@@ -248,13 +328,52 @@ impl Engine {
         Ok(outputs)
     }
 
+    #[cfg(feature = "pjrt")]
+    fn execute_inner(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        // Interp: run outside the backend lock (pure, thread-safe).
+        let program = {
+            let inner = self.inner.lock().unwrap();
+            match &*inner {
+                ExecBackend::Interp { programs } => Some(programs[name].clone()),
+                ExecBackend::Pjrt { .. } => None,
+            }
+        };
+        if let Some(p) = program {
+            return Self::run_interp(&p, name, inputs);
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let inner = self.inner.lock().unwrap();
+        let ExecBackend::Pjrt { executables, .. } = &*inner else {
+            unreachable!("backend changed under us");
+        };
+        let exe = executables.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing '{name}'"))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = root.to_tuple().context("decomposing result tuple")?;
+        parts.iter().map(Tensor::from_literal).collect::<Result<Vec<_>>>()
+    }
+
     #[cfg(not(feature = "pjrt"))]
-    fn execute(&self, name: &str, _inputs: &[&Tensor], _n_outputs: usize) -> Result<Vec<Tensor>> {
-        bail!(
-            "artifact '{name}' cannot execute: gcore was built without the \
-             `pjrt` feature (no XLA backend) — enable it with the vendored \
-             xla crate to run artifacts"
-        )
+    fn execute_inner(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let program = {
+            let inner = self.inner.lock().unwrap();
+            let ExecBackend::Interp { programs } = &*inner;
+            programs[name].clone()
+        };
+        Self::run_interp(&program, name, inputs)
+    }
+
+    fn run_interp(program: &Program, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        program
+            .evaluate_refs(inputs)
+            .map_err(|e| e.context(format!("interpreting '{name}'")))
     }
 
     /// Snapshot of per-artifact stats.
@@ -277,8 +396,9 @@ impl Engine {
 mod tests {
     use super::*;
 
-    // Engine tests that need built artifacts live in rust/tests/; here we
-    // exercise the manifest contract and the failure paths that need none.
+    // Engine tests that need the fixture artifact sets live in
+    // rust/tests/; here we exercise the manifest contract, backend
+    // selection and the failure paths that need no artifacts.
 
     fn tmpdir(name: &str) -> std::path::PathBuf {
         let d = std::env::temp_dir()
@@ -307,6 +427,11 @@ mod tests {
             }
         }
     }"#;
+
+    const ECHO_HLO: &str = "HloModule echo\n\nENTRY %entry (p0: f32[2]) -> (f32[2]) {\n  \
+        %v0 = f32[2] parameter(0)\n  %v1 = f32[2] negate(f32[2] %v0)\n  \
+        %v2 = f32[2] negate(f32[2] %v1)\n  \
+        ROOT %result = (f32[2]) tuple(f32[2] %v2)\n}\n";
 
     fn synthetic_engine(name: &str) -> Engine {
         let dir = tmpdir(name);
@@ -401,18 +526,67 @@ mod tests {
         assert!(msg.contains("f32"), "{msg}");
     }
 
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
+        assert_eq!(BackendKind::parse("").unwrap(), BackendKind::Auto);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("interp").unwrap(), BackendKind::Interp);
+        let msg = BackendKind::parse("tpu").unwrap_err().to_string();
+        assert!(msg.contains("GCORE_ENGINE") && msg.contains("tpu"), "{msg}");
+    }
+
+    /// The engine is always executable now: default builds select the
+    /// interpreter, and asking for PJRT without the feature fails with an
+    /// error that names both GCORE_ENGINE and the interpreter fallback.
     #[cfg(not(feature = "pjrt"))]
     #[test]
-    fn stub_backend_error_is_actionable() {
-        let e = synthetic_engine("stub");
-        assert!(!Engine::backend_available());
-        assert!(Engine::try_load("tiny").is_none());
+    fn backend_selection_without_pjrt_feature() {
+        assert!(Engine::backend_available());
+        let dir = tmpdir("selection");
+        std::fs::write(dir.join("manifest.json"), MINIMAL_MANIFEST).unwrap();
+        let e = Engine::from_dir_with_backend(&dir, BackendKind::Auto).unwrap();
+        assert_eq!(e.backend_name(), "interp");
+        let e = Engine::from_dir_with_backend(&dir, BackendKind::Interp).unwrap();
+        assert_eq!(e.backend_name(), "interp");
+        let msg = format!(
+            "{:#}",
+            Engine::from_dir_with_backend(&dir, BackendKind::Pjrt).unwrap_err()
+        );
+        assert!(msg.contains("GCORE_ENGINE"), "{msg}");
+        assert!(msg.contains("interp"), "{msg}");
+        assert!(msg.contains("pjrt"), "{msg}");
+    }
+
+    #[test]
+    fn interp_backend_executes_hlo_text() {
+        let dir = tmpdir("interp_exec");
+        std::fs::write(dir.join("manifest.json"), MINIMAL_MANIFEST).unwrap();
+        std::fs::write(dir.join("echo.hlo.txt"), ECHO_HLO).unwrap();
+        let e = Engine::from_dir_with_backend(&dir, BackendKind::Interp).unwrap();
+        let x = Tensor::f32(vec![2], vec![1.5, -2.0]);
+        let out = e.run("echo", &[x.clone()]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], x);
+        // stats recorded a compile and a call
+        let st = e.stats();
+        assert_eq!(st["echo"].calls, 1);
+        assert!(e.mean_call_time("echo").is_some());
+        assert!(e.warmup(&["echo"]).is_ok());
+    }
+
+    #[test]
+    fn interp_missing_hlo_file_is_actionable() {
+        let e = synthetic_engine("missing_hlo");
+        if e.backend_name() != "interp" {
+            return; // pjrt build without GCORE_ENGINE override
+        }
         let msg = format!(
             "{:#}",
             e.run("echo", &[Tensor::zeros_f32(vec![2])]).unwrap_err()
         );
-        assert!(msg.contains("pjrt"), "{msg}");
-        assert!(e.warmup(&["echo"]).is_err());
+        assert!(msg.contains("echo.hlo.txt"), "{msg}");
+        assert!(msg.contains("fixturegen"), "{msg}");
     }
 
     #[test]

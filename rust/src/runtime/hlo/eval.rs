@@ -1,0 +1,1520 @@
+//! Reference evaluator for parsed HLO modules.
+//!
+//! Correctness first, but with the two properties the engine tier needs:
+//!
+//! * values are `Arc`-backed, so `reshape` (and same-type `convert`) are
+//!   zero-copy and operand buffers are *taken* at their last use — unary /
+//!   binary elementwise ops and `dynamic-update-slice` then mutate in
+//!   place instead of allocating.  The stepwise decode loop's per-token
+//!   allocations stay bounded by the step outputs (tests/alloc_counts.rs).
+//! * evaluation is pure and `&self`, so coordinator threads execute
+//!   concurrently (unlike PJRT, which the engine serializes).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::hlo::parser::{
+    CmpDir, DotDims, HDtype, HShape, HloModule, Instr, Literal, ReduceKind,
+};
+use crate::runtime::tensor::{Tensor, TensorData};
+
+/// A compiled-for-evaluation module: parse once, evaluate many times.
+#[derive(Debug, Clone)]
+pub struct Program {
+    module: HloModule,
+    /// For the entry computation: `last_use[i]` = index of the last
+    /// instruction consuming instruction `i`'s value (`usize::MAX` for the
+    /// root and unused values — those are never dropped early).
+    last_use: Vec<usize>,
+}
+
+impl Program {
+    pub fn parse(text: &str) -> Result<Program> {
+        Ok(Program::new(HloModule::parse(text)?))
+    }
+
+    pub fn new(module: HloModule) -> Program {
+        let entry = module.entry_computation();
+        let mut last_use = vec![usize::MAX; entry.instrs.len()];
+        for (i, ins) in entry.instrs.iter().enumerate() {
+            for &op in &ins.operands {
+                last_use[op] = i;
+            }
+        }
+        last_use[entry.root] = usize::MAX;
+        for &op in &entry.instrs[entry.root].operands {
+            last_use[op] = usize::MAX;
+        }
+        Program { module, last_use }
+    }
+
+    pub fn module(&self) -> &HloModule {
+        &self.module
+    }
+
+    /// Instruction count of the entry computation (interp "compile" stat).
+    pub fn num_instructions(&self) -> usize {
+        self.module.entry_computation().instrs.len()
+    }
+
+    /// Evaluate the entry computation.  The root must be a tuple; its
+    /// elements come back as one host tensor each (the engine contract).
+    pub fn evaluate(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.evaluate_refs(&refs)
+    }
+
+    /// Borrowing variant of [`Program::evaluate`] — parameters are copied
+    /// into the value arena exactly once (the engine's hot path).
+    pub fn evaluate_refs(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let entry = self.module.entry_computation();
+        if inputs.len() != entry.params.len() {
+            bail!(
+                "module '{}' expects {} parameters, got {}",
+                self.module.name,
+                entry.params.len(),
+                inputs.len()
+            );
+        }
+        let mut slots: Vec<Option<Val>> = vec![None; entry.instrs.len()];
+        for (i, ins) in entry.instrs.iter().enumerate() {
+            if i == entry.root {
+                break;
+            }
+            let val = self
+                .exec(i, ins, inputs, &mut slots)
+                .with_context(|| format!("evaluating %{} ({})", ins.name, ins.opcode))?;
+            if let Some(v) = val {
+                if let Some(shape) = &ins.shape {
+                    debug_assert_eq!(
+                        v.dims,
+                        shape.dims,
+                        "%{}: result shape mismatch",
+                        ins.name
+                    );
+                }
+                slots[i] = Some(v);
+            }
+        }
+        let root = &entry.instrs[entry.root];
+        if root.opcode != "tuple" {
+            bail!("entry root must be a tuple, got '{}'", root.opcode);
+        }
+        // take (not clone) each root operand at its LAST occurrence so
+        // uniquely-owned buffers move straight into the output tensors
+        // without a copy; earlier duplicate occurrences clone (legal HLO
+        // may repeat a tuple element)
+        root.operands
+            .iter()
+            .enumerate()
+            .map(|(k, &op)| {
+                let dup_later = root.operands[k + 1..].contains(&op);
+                let v = if dup_later {
+                    slots[op].clone()
+                } else {
+                    slots[op].take()
+                };
+                v.context("root operand missing")?.into_tensor()
+            })
+            .collect()
+    }
+
+    /// Execute one instruction.  Returns `None` only for the root tuple.
+    fn exec(
+        &self,
+        idx: usize,
+        ins: &Instr,
+        inputs: &[&Tensor],
+        slots: &mut [Option<Val>],
+    ) -> Result<Option<Val>> {
+        // Take operands out of their slots at last use so uniquely-owned
+        // buffers can be mutated in place downstream.
+        let mut args: Vec<Val> = Vec::with_capacity(ins.operands.len());
+        for &op in &ins.operands {
+            let take = self.last_use[op] == idx
+                && ins.operands.iter().filter(|&&o| o == op).count() == 1;
+            let v = if take {
+                slots[op].take()
+            } else {
+                slots[op].clone()
+            };
+            args.push(v.with_context(|| format!("operand #{op} missing"))?);
+        }
+        let out_shape = ins.shape.as_ref();
+        let v = match ins.opcode.as_str() {
+            "parameter" => {
+                let p = ins.param_idx.context("parameter without number")?;
+                Val::from_tensor(inputs[p])
+            }
+            "constant" => Val::from_literal(
+                ins.literal.as_ref().context("constant without literal")?,
+                &out_shape.context("constant without shape")?.dims,
+            )?,
+            "tuple" => return Ok(None),
+            "add" => binary(args, BinOp::Add)?,
+            "subtract" => binary(args, BinOp::Sub)?,
+            "multiply" => binary(args, BinOp::Mul)?,
+            "divide" => binary(args, BinOp::Div)?,
+            "maximum" => binary(args, BinOp::Max)?,
+            "minimum" => binary(args, BinOp::Min)?,
+            "power" => binary(args, BinOp::Pow)?,
+            "and" => binary(args, BinOp::And)?,
+            "or" => binary(args, BinOp::Or)?,
+            "xor" => binary(args, BinOp::Xor)?,
+            "shift-left" => binary(args, BinOp::Shl)?,
+            "shift-right-logical" => binary(args, BinOp::Shr)?,
+            "negate" => unary(args, UnOp::Neg)?,
+            "abs" => unary(args, UnOp::Abs)?,
+            "exponential" => unary(args, UnOp::Exp)?,
+            "log" => unary(args, UnOp::Log)?,
+            "tanh" => unary(args, UnOp::Tanh)?,
+            "rsqrt" => unary(args, UnOp::Rsqrt)?,
+            "sqrt" => unary(args, UnOp::Sqrt)?,
+            "sine" => unary(args, UnOp::Sin)?,
+            "cosine" => unary(args, UnOp::Cos)?,
+            "not" => unary(args, UnOp::Not)?,
+            "compare" => compare(args, ins.direction.context("compare without direction")?)?,
+            "select" => select(args)?,
+            "convert" => convert(args, out_shape.context("convert without shape")?.dtype)?,
+            "broadcast" => broadcast(
+                args,
+                &ins.dims,
+                &out_shape.context("broadcast without shape")?.dims,
+            )?,
+            "reshape" => {
+                let mut v = args.remove_first()?;
+                let out = out_shape.context("reshape without shape")?;
+                if out.num_elements() != v.len() {
+                    bail!("reshape element count mismatch");
+                }
+                v.dims = out.dims.clone();
+                v
+            }
+            "transpose" => transpose(args, &ins.dims)?,
+            "slice" => slice_op(args, &ins.slice)?,
+            "concatenate" => concat(args, ins.dims.first().copied().unwrap_or(0))?,
+            "pad" => pad(args, &ins.pad_cfg)?,
+            "reduce" => {
+                let name = ins.to_apply.as_deref().context("reduce without to_apply")?;
+                let kind = self.module.reduce_kind(name)?;
+                reduce(args, &ins.dims, kind)?
+            }
+            "dot" => dot(args, ins.dot.clone().unwrap_or_default())?,
+            "iota" => iota(
+                out_shape.context("iota without shape")?,
+                ins.dims.first().copied().context("iota without dimension")?,
+            )?,
+            "dynamic-slice" => dynamic_slice(args, &ins.dyn_sizes)?,
+            "dynamic-update-slice" => dynamic_update_slice(args)?,
+            "gather" => gather(args, ins, out_shape.context("gather without shape")?)?,
+            "get-tuple-element" => bail!("tuples only supported at the root"),
+            other => bail!("unsupported opcode '{other}'"),
+        };
+        Ok(Some(v))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Values
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub enum Data {
+    F32(Arc<Vec<f32>>),
+    S32(Arc<Vec<i32>>),
+    U32(Arc<Vec<u32>>),
+    Pred(Arc<Vec<bool>>),
+}
+
+#[derive(Debug, Clone)]
+pub struct Val {
+    pub dims: Vec<usize>,
+    pub data: Data,
+}
+
+trait ValVec {
+    fn remove_first(&mut self) -> Result<Val>;
+}
+
+impl ValVec for Vec<Val> {
+    fn remove_first(&mut self) -> Result<Val> {
+        if self.is_empty() {
+            bail!("missing operand");
+        }
+        Ok(self.remove(0))
+    }
+}
+
+impl Val {
+    pub fn f32(dims: Vec<usize>, v: Vec<f32>) -> Val {
+        Val { dims, data: Data::F32(Arc::new(v)) }
+    }
+
+    pub fn s32(dims: Vec<usize>, v: Vec<i32>) -> Val {
+        Val { dims, data: Data::S32(Arc::new(v)) }
+    }
+
+    pub fn u32(dims: Vec<usize>, v: Vec<u32>) -> Val {
+        Val { dims, data: Data::U32(Arc::new(v)) }
+    }
+
+    pub fn pred(dims: Vec<usize>, v: Vec<bool>) -> Val {
+        Val { dims, data: Data::Pred(Arc::new(v)) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> HDtype {
+        match &self.data {
+            Data::F32(_) => HDtype::F32,
+            Data::S32(_) => HDtype::S32,
+            Data::U32(_) => HDtype::U32,
+            Data::Pred(_) => HDtype::Pred,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            other => bail!("expected f32 value, got {:?}", dtype_of(other)),
+        }
+    }
+
+    pub fn as_s32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::S32(v) => Ok(v),
+            other => bail!("expected s32 value, got {:?}", dtype_of(other)),
+        }
+    }
+
+    pub fn as_pred(&self) -> Result<&[bool]> {
+        match &self.data {
+            Data::Pred(v) => Ok(v),
+            other => bail!("expected pred value, got {:?}", dtype_of(other)),
+        }
+    }
+
+    /// Owned f32 buffer when uniquely held (for in-place mutation).
+    fn into_f32_owned(self) -> Result<(Vec<usize>, Vec<f32>)> {
+        match self.data {
+            Data::F32(a) => {
+                let v = Arc::try_unwrap(a).unwrap_or_else(|a| a.as_ref().clone());
+                Ok((self.dims, v))
+            }
+            other => bail!("expected f32 value, got {:?}", dtype_of(&other)),
+        }
+    }
+
+    fn from_tensor(t: &Tensor) -> Val {
+        match &t.data {
+            TensorData::F32(v) => Val::f32(t.shape.clone(), v.clone()),
+            TensorData::I32(v) => Val::s32(t.shape.clone(), v.clone()),
+            TensorData::U32(v) => Val::u32(t.shape.clone(), v.clone()),
+        }
+    }
+
+    fn into_tensor(self) -> Result<Tensor> {
+        let dims = self.dims;
+        Ok(match self.data {
+            Data::F32(a) => {
+                Tensor::f32(dims, Arc::try_unwrap(a).unwrap_or_else(|a| a.as_ref().clone()))
+            }
+            Data::S32(a) => {
+                Tensor::i32(dims, Arc::try_unwrap(a).unwrap_or_else(|a| a.as_ref().clone()))
+            }
+            Data::U32(a) => {
+                Tensor::u32(dims, Arc::try_unwrap(a).unwrap_or_else(|a| a.as_ref().clone()))
+            }
+            Data::Pred(_) => bail!("pred values cannot cross the engine boundary"),
+        })
+    }
+
+    fn from_literal(lit: &Literal, dims: &[usize]) -> Result<Val> {
+        let n: usize = dims.iter().product();
+        let check = |len: usize| -> Result<()> {
+            if len != n {
+                bail!("literal has {len} elements, shape needs {n}");
+            }
+            Ok(())
+        };
+        Ok(match lit {
+            Literal::F32(v) => {
+                check(v.len())?;
+                Val::f32(dims.to_vec(), v.clone())
+            }
+            Literal::S32(v) => {
+                check(v.len())?;
+                Val::s32(dims.to_vec(), v.clone())
+            }
+            Literal::U32(v) => {
+                check(v.len())?;
+                Val::u32(dims.to_vec(), v.clone())
+            }
+            Literal::Pred(v) => {
+                check(v.len())?;
+                Val::pred(dims.to_vec(), v.clone())
+            }
+        })
+    }
+}
+
+fn dtype_of(d: &Data) -> HDtype {
+    match d {
+        Data::F32(_) => HDtype::F32,
+        Data::S32(_) => HDtype::S32,
+        Data::U32(_) => HDtype::U32,
+        Data::Pred(_) => HDtype::Pred,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Index helpers
+// ---------------------------------------------------------------------------
+
+/// Row-major strides.
+pub fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+/// Iterate `dims` in row-major order, tracking a source offset through
+/// arbitrary per-axis strides (0 for broadcast axes).  O(1) amortized per
+/// element.
+struct Stepper<'a> {
+    dims: &'a [usize],
+    strides: &'a [usize],
+    counters: Vec<usize>,
+    offset: usize,
+    done: bool,
+}
+
+impl<'a> Stepper<'a> {
+    fn new(dims: &'a [usize], strides: &'a [usize]) -> Stepper<'a> {
+        Stepper {
+            dims,
+            strides,
+            counters: vec![0; dims.len()],
+            offset: 0,
+            done: dims.iter().any(|&d| d == 0),
+        }
+    }
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        if self.done {
+            return None;
+        }
+        let cur = self.offset;
+        // increment (row-major: last axis fastest)
+        let mut axis = self.dims.len();
+        loop {
+            if axis == 0 {
+                self.done = true;
+                break;
+            }
+            axis -= 1;
+            self.counters[axis] += 1;
+            self.offset += self.strides[axis];
+            if self.counters[axis] < self.dims[axis] {
+                break;
+            }
+            self.counters[axis] = 0;
+            self.offset -= self.strides[axis] * self.dims[axis];
+        }
+        Some(cur)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise ops
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    Pow,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+}
+
+fn binary(mut args: Vec<Val>, op: BinOp) -> Result<Val> {
+    let b = args.pop().context("binary op missing rhs")?;
+    let a = args.pop().context("binary op missing lhs")?;
+    if a.dims != b.dims {
+        bail!("elementwise shape mismatch {:?} vs {:?}", a.dims, b.dims);
+    }
+    match (&a.data, &b.data) {
+        (Data::F32(_), Data::F32(_)) => {
+            let f: fn(f32, f32) -> f32 = match op {
+                BinOp::Add => |x, y| x + y,
+                BinOp::Sub => |x, y| x - y,
+                BinOp::Mul => |x, y| x * y,
+                BinOp::Div => |x, y| x / y,
+                BinOp::Max => f32::max,
+                BinOp::Min => f32::min,
+                BinOp::Pow => f32::powf,
+                _ => bail!("bitwise op on f32"),
+            };
+            // mutate the lhs buffer in place when uniquely owned (hot path)
+            let (dims, mut x) = a.into_f32_owned()?;
+            let rhs = b.as_f32()?;
+            for (xi, &yi) in x.iter_mut().zip(rhs.iter()) {
+                *xi = f(*xi, yi);
+            }
+            Ok(Val::f32(dims, x))
+        }
+        (Data::S32(xa), Data::S32(xb)) => {
+            let out: Vec<i32> = xa
+                .iter()
+                .zip(xb.iter())
+                .map(|(&x, &y)| match op {
+                    BinOp::Add => x.wrapping_add(y),
+                    BinOp::Sub => x.wrapping_sub(y),
+                    BinOp::Mul => x.wrapping_mul(y),
+                    BinOp::Max => x.max(y),
+                    BinOp::Min => x.min(y),
+                    _ => 0,
+                })
+                .collect();
+            match op {
+                BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Max | BinOp::Min => {
+                    Ok(Val::s32(a.dims.clone(), out))
+                }
+                _ => bail!("unsupported s32 binary op"),
+            }
+        }
+        (Data::U32(xa), Data::U32(xb)) => {
+            let out: Result<Vec<u32>> = xa
+                .iter()
+                .zip(xb.iter())
+                .map(|(&x, &y)| {
+                    Ok(match op {
+                        BinOp::Add => x.wrapping_add(y),
+                        BinOp::Sub => x.wrapping_sub(y),
+                        BinOp::Mul => x.wrapping_mul(y),
+                        BinOp::Max => x.max(y),
+                        BinOp::Min => x.min(y),
+                        BinOp::And => x & y,
+                        BinOp::Or => x | y,
+                        BinOp::Xor => x ^ y,
+                        BinOp::Shl => x.wrapping_shl(y),
+                        BinOp::Shr => x.wrapping_shr(y),
+                        _ => bail!("unsupported u32 binary op"),
+                    })
+                })
+                .collect();
+            Ok(Val::u32(a.dims.clone(), out?))
+        }
+        (Data::Pred(xa), Data::Pred(xb)) => {
+            let out: Result<Vec<bool>> = xa
+                .iter()
+                .zip(xb.iter())
+                .map(|(&x, &y)| {
+                    Ok(match op {
+                        BinOp::And => x && y,
+                        BinOp::Or => x || y,
+                        BinOp::Xor => x ^ y,
+                        _ => bail!("unsupported pred binary op"),
+                    })
+                })
+                .collect();
+            Ok(Val::pred(a.dims.clone(), out?))
+        }
+        _ => bail!("binary op dtype mismatch {:?} vs {:?}", a.dtype(), b.dtype()),
+    }
+}
+
+#[derive(Clone, Copy)]
+enum UnOp {
+    Neg,
+    Abs,
+    Exp,
+    Log,
+    Tanh,
+    Rsqrt,
+    Sqrt,
+    Sin,
+    Cos,
+    Not,
+}
+
+fn unary(mut args: Vec<Val>, op: UnOp) -> Result<Val> {
+    let a = args.remove_first()?;
+    match (&a.data, op) {
+        (Data::Pred(p), UnOp::Not) => {
+            let out: Vec<bool> = p.iter().map(|&x| !x).collect();
+            Ok(Val::pred(a.dims.clone(), out))
+        }
+        (Data::U32(p), UnOp::Not) => {
+            let out: Vec<u32> = p.iter().map(|&x| !x).collect();
+            Ok(Val::u32(a.dims.clone(), out))
+        }
+        (Data::S32(p), UnOp::Neg) => {
+            let out: Vec<i32> = p.iter().map(|&x| x.wrapping_neg()).collect();
+            Ok(Val::s32(a.dims.clone(), out))
+        }
+        (Data::S32(p), UnOp::Abs) => {
+            let out: Vec<i32> = p.iter().map(|&x| x.wrapping_abs()).collect();
+            Ok(Val::s32(a.dims.clone(), out))
+        }
+        (Data::F32(_), _) => {
+            let f: fn(f32) -> f32 = match op {
+                UnOp::Neg => |x| -x,
+                UnOp::Abs => f32::abs,
+                UnOp::Exp => f32::exp,
+                UnOp::Log => f32::ln,
+                UnOp::Tanh => f32::tanh,
+                UnOp::Rsqrt => |x| 1.0 / x.sqrt(),
+                UnOp::Sqrt => f32::sqrt,
+                UnOp::Sin => f32::sin,
+                UnOp::Cos => f32::cos,
+                UnOp::Not => return Err(anyhow::anyhow!("'not' on f32")),
+            };
+            let (dims, mut x) = a.into_f32_owned()?;
+            for xi in x.iter_mut() {
+                *xi = f(*xi);
+            }
+            Ok(Val::f32(dims, x))
+        }
+        _ => bail!("unsupported unary op on {:?}", a.dtype()),
+    }
+}
+
+fn compare(mut args: Vec<Val>, dir: CmpDir) -> Result<Val> {
+    let b = args.pop().context("compare missing rhs")?;
+    let a = args.pop().context("compare missing lhs")?;
+    if a.dims != b.dims {
+        bail!("compare shape mismatch {:?} vs {:?}", a.dims, b.dims);
+    }
+    macro_rules! cmp {
+        ($xa:expr, $xb:expr) => {
+            $xa.iter()
+                .zip($xb.iter())
+                .map(|(x, y)| match dir {
+                    CmpDir::Eq => x == y,
+                    CmpDir::Ne => x != y,
+                    CmpDir::Lt => x < y,
+                    CmpDir::Le => x <= y,
+                    CmpDir::Gt => x > y,
+                    CmpDir::Ge => x >= y,
+                })
+                .collect::<Vec<bool>>()
+        };
+    }
+    let out = match (&a.data, &b.data) {
+        (Data::F32(xa), Data::F32(xb)) => cmp!(xa, xb),
+        (Data::S32(xa), Data::S32(xb)) => cmp!(xa, xb),
+        (Data::U32(xa), Data::U32(xb)) => cmp!(xa, xb),
+        _ => bail!("compare dtype mismatch"),
+    };
+    Ok(Val::pred(a.dims.clone(), out))
+}
+
+fn select(mut args: Vec<Val>) -> Result<Val> {
+    let b = args.pop().context("select missing on-false")?;
+    let a = args.pop().context("select missing on-true")?;
+    let p = args.pop().context("select missing predicate")?;
+    if p.dims != a.dims || a.dims != b.dims {
+        bail!("select shape mismatch");
+    }
+    let pv = p.as_pred()?;
+    match (&a.data, &b.data) {
+        (Data::F32(_), Data::F32(_)) => {
+            let (dims, mut x) = a.into_f32_owned()?;
+            let on_false = b.as_f32()?;
+            for ((xi, &fi), &pi) in x.iter_mut().zip(on_false.iter()).zip(pv.iter()) {
+                if !pi {
+                    *xi = fi;
+                }
+            }
+            Ok(Val::f32(dims, x))
+        }
+        (Data::S32(xa), Data::S32(xb)) => {
+            let out: Vec<i32> = pv
+                .iter()
+                .zip(xa.iter().zip(xb.iter()))
+                .map(|(&p, (&x, &y))| if p { x } else { y })
+                .collect();
+            Ok(Val::s32(a.dims.clone(), out))
+        }
+        (Data::U32(xa), Data::U32(xb)) => {
+            let out: Vec<u32> = pv
+                .iter()
+                .zip(xa.iter().zip(xb.iter()))
+                .map(|(&p, (&x, &y))| if p { x } else { y })
+                .collect();
+            Ok(Val::u32(a.dims.clone(), out))
+        }
+        _ => bail!("select dtype mismatch"),
+    }
+}
+
+fn convert(mut args: Vec<Val>, to: HDtype) -> Result<Val> {
+    let a = args.remove_first()?;
+    if a.dtype() == to {
+        return Ok(a); // zero-copy
+    }
+    let dims = a.dims.clone();
+    macro_rules! conv {
+        ($src:expr, $f:expr) => {
+            $src.iter().map($f).collect()
+        };
+    }
+    Ok(match (&a.data, to) {
+        (Data::Pred(v), HDtype::F32) => Val::f32(dims, conv!(v, |&x| if x { 1.0 } else { 0.0 })),
+        (Data::Pred(v), HDtype::S32) => Val::s32(dims, conv!(v, |&x| x as i32)),
+        (Data::Pred(v), HDtype::U32) => Val::u32(dims, conv!(v, |&x| x as u32)),
+        (Data::S32(v), HDtype::F32) => Val::f32(dims, conv!(v, |&x| x as f32)),
+        (Data::U32(v), HDtype::F32) => Val::f32(dims, conv!(v, |&x| x as f32)),
+        (Data::S32(v), HDtype::U32) => Val::u32(dims, conv!(v, |&x| x as u32)),
+        (Data::U32(v), HDtype::S32) => Val::s32(dims, conv!(v, |&x| x as i32)),
+        (Data::F32(v), HDtype::S32) => Val::s32(dims, conv!(v, |&x| x as i32)),
+        (Data::F32(v), HDtype::U32) => Val::u32(dims, conv!(v, |&x| x as u32)),
+        (src, to) => bail!("unsupported convert {:?} -> {:?}", dtype_of(src), to),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Shape ops
+// ---------------------------------------------------------------------------
+
+fn broadcast(mut args: Vec<Val>, dims_map: &[usize], out_dims: &[usize]) -> Result<Val> {
+    let a = args.remove_first()?;
+    if dims_map.len() != a.dims.len() {
+        bail!(
+            "broadcast dims {:?} rank-mismatch input {:?}",
+            dims_map,
+            a.dims
+        );
+    }
+    for (i, &d) in dims_map.iter().enumerate() {
+        if out_dims[d] != a.dims[i] {
+            bail!("broadcast dim {i} size mismatch");
+        }
+    }
+    // per-output-axis source strides (0 on new axes)
+    let in_strides = strides(&a.dims);
+    let mut map_strides = vec![0usize; out_dims.len()];
+    for (i, &d) in dims_map.iter().enumerate() {
+        map_strides[d] = in_strides[i];
+    }
+    let n: usize = out_dims.iter().product();
+    macro_rules! bc {
+        ($src:expr, $mk:path) => {{
+            let mut out = Vec::with_capacity(n);
+            let mut st = Stepper::new(out_dims, &map_strides);
+            while let Some(off) = st.next() {
+                out.push($src[off]);
+            }
+            $mk(out_dims.to_vec(), out)
+        }};
+    }
+    Ok(match &a.data {
+        Data::F32(v) => bc!(v, Val::f32),
+        Data::S32(v) => bc!(v, Val::s32),
+        Data::U32(v) => bc!(v, Val::u32),
+        Data::Pred(v) => bc!(v, Val::pred),
+    })
+}
+
+fn transpose(mut args: Vec<Val>, perm: &[usize]) -> Result<Val> {
+    let a = args.remove_first()?;
+    if perm.len() != a.dims.len() {
+        bail!("transpose perm rank mismatch");
+    }
+    let out_dims: Vec<usize> = perm.iter().map(|&p| a.dims[p]).collect();
+    let in_strides = strides(&a.dims);
+    let map_strides: Vec<usize> = perm.iter().map(|&p| in_strides[p]).collect();
+    let n = a.len();
+    macro_rules! tr {
+        ($src:expr, $mk:path) => {{
+            let mut out = Vec::with_capacity(n);
+            let mut st = Stepper::new(&out_dims, &map_strides);
+            while let Some(off) = st.next() {
+                out.push($src[off]);
+            }
+            $mk(out_dims.clone(), out)
+        }};
+    }
+    Ok(match &a.data {
+        Data::F32(v) => tr!(v, Val::f32),
+        Data::S32(v) => tr!(v, Val::s32),
+        Data::U32(v) => tr!(v, Val::u32),
+        Data::Pred(v) => tr!(v, Val::pred),
+    })
+}
+
+fn slice_op(mut args: Vec<Val>, spec: &[(usize, usize, usize)]) -> Result<Val> {
+    let a = args.remove_first()?;
+    if spec.len() != a.dims.len() {
+        bail!("slice spec rank mismatch");
+    }
+    let out_dims: Vec<usize> = spec
+        .iter()
+        .map(|&(s, l, st)| {
+            if st == 0 {
+                bail!("slice stride 0");
+            }
+            Ok((l.saturating_sub(s) + st - 1) / st)
+        })
+        .collect::<Result<_>>()?;
+    let in_strides = strides(&a.dims);
+    let base: usize = spec
+        .iter()
+        .zip(&in_strides)
+        .map(|(&(s, _, _), &str_)| s * str_)
+        .sum();
+    let map_strides: Vec<usize> = spec
+        .iter()
+        .zip(&in_strides)
+        .map(|(&(_, _, st), &str_)| st * str_)
+        .collect();
+    let n: usize = out_dims.iter().product();
+    macro_rules! sl {
+        ($src:expr, $mk:path) => {{
+            let mut out = Vec::with_capacity(n);
+            let mut st = Stepper::new(&out_dims, &map_strides);
+            while let Some(off) = st.next() {
+                out.push($src[base + off]);
+            }
+            $mk(out_dims.clone(), out)
+        }};
+    }
+    Ok(match &a.data {
+        Data::F32(v) => sl!(v, Val::f32),
+        Data::S32(v) => sl!(v, Val::s32),
+        Data::U32(v) => sl!(v, Val::u32),
+        Data::Pred(v) => sl!(v, Val::pred),
+    })
+}
+
+fn concat(args: Vec<Val>, dim: usize) -> Result<Val> {
+    if args.is_empty() {
+        bail!("concatenate with no operands");
+    }
+    let rank = args[0].dims.len();
+    if dim >= rank {
+        bail!("concatenate dim out of range");
+    }
+    let mut out_dims = args[0].dims.clone();
+    out_dims[dim] = args.iter().map(|a| a.dims[dim]).sum();
+    for a in &args {
+        for (i, (&x, &y)) in a.dims.iter().zip(&out_dims).enumerate() {
+            if i != dim && x != y {
+                bail!("concatenate shape mismatch off-axis");
+            }
+        }
+    }
+    let outer: usize = out_dims[..dim].iter().product();
+    macro_rules! cc {
+        ($variant:path, $mk:path, $t:ty) => {{
+            let mut out: Vec<$t> = Vec::with_capacity(out_dims.iter().product());
+            for o in 0..outer {
+                for a in &args {
+                    let chunk: usize = a.dims[dim..].iter().product();
+                    let src = match &a.data {
+                        $variant(v) => v,
+                        _ => bail!("concatenate dtype mismatch"),
+                    };
+                    out.extend_from_slice(&src[o * chunk..(o + 1) * chunk]);
+                }
+            }
+            $mk(out_dims.clone(), out)
+        }};
+    }
+    Ok(match &args[0].data {
+        Data::F32(_) => cc!(Data::F32, Val::f32, f32),
+        Data::S32(_) => cc!(Data::S32, Val::s32, i32),
+        Data::U32(_) => cc!(Data::U32, Val::u32, u32),
+        Data::Pred(_) => cc!(Data::Pred, Val::pred, bool),
+    })
+}
+
+fn pad(mut args: Vec<Val>, cfg: &[(i64, i64, i64)]) -> Result<Val> {
+    let pad_val = args.pop().context("pad missing value")?;
+    let a = args.pop().context("pad missing operand")?;
+    if cfg.len() != a.dims.len() {
+        bail!("pad spec rank mismatch");
+    }
+    if cfg.iter().any(|&(l, h, i)| l < 0 || h < 0 || i != 0) {
+        bail!("negative/interior padding unsupported");
+    }
+    let out_dims: Vec<usize> = a
+        .dims
+        .iter()
+        .zip(cfg)
+        .map(|(&d, &(l, h, _))| d + l as usize + h as usize)
+        .collect();
+    let out_strides = strides(&out_dims);
+    let base: usize = cfg
+        .iter()
+        .zip(&out_strides)
+        .map(|(&(l, _, _), &s)| l as usize * s)
+        .sum();
+    let n: usize = out_dims.iter().product();
+    macro_rules! pd {
+        ($src:expr, $pv:expr, $mk:path) => {{
+            let fill = $pv[0];
+            let mut out = vec![fill; n];
+            let mut st = Stepper::new(&a.dims, &out_strides);
+            let mut i = 0usize;
+            while let Some(off) = st.next() {
+                out[base + off] = $src[i];
+                i += 1;
+            }
+            $mk(out_dims.clone(), out)
+        }};
+    }
+    Ok(match (&a.data, &pad_val.data) {
+        (Data::F32(v), Data::F32(p)) => pd!(v, p, Val::f32),
+        (Data::S32(v), Data::S32(p)) => pd!(v, p, Val::s32),
+        (Data::U32(v), Data::U32(p)) => pd!(v, p, Val::u32),
+        _ => bail!("pad dtype mismatch"),
+    })
+}
+
+fn reduce(mut args: Vec<Val>, dims: &[usize], kind: ReduceKind) -> Result<Val> {
+    let init = args.pop().context("reduce missing init")?;
+    let a = args.pop().context("reduce missing operand")?;
+    let reduce_set: Vec<bool> = (0..a.dims.len()).map(|i| dims.contains(&i)).collect();
+    let out_dims: Vec<usize> = a
+        .dims
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !reduce_set[*i])
+        .map(|(_, &d)| d)
+        .collect();
+    let out_strides_full = strides(&out_dims);
+    // per-input-axis contribution to the output offset (0 on reduced axes)
+    let mut map = vec![0usize; a.dims.len()];
+    let mut k = 0;
+    for i in 0..a.dims.len() {
+        if !reduce_set[i] {
+            map[i] = out_strides_full[k];
+            k += 1;
+        }
+    }
+    let n_out: usize = out_dims.iter().product();
+    macro_rules! red {
+        ($src:expr, $iv:expr, $mk:path, $t:ty, $comb:expr) => {{
+            let comb: fn($t, $t) -> $t = $comb;
+            let mut out = vec![$iv[0]; n_out];
+            let mut st = Stepper::new(&a.dims, &map);
+            let mut i = 0usize;
+            while let Some(off) = st.next() {
+                out[off] = comb(out[off], $src[i]);
+                i += 1;
+            }
+            $mk(out_dims.clone(), out)
+        }};
+    }
+    Ok(match (&a.data, &init.data) {
+        (Data::F32(v), Data::F32(iv)) => match kind {
+            ReduceKind::Add => red!(v, iv, Val::f32, f32, |x, y| x + y),
+            ReduceKind::Max => red!(v, iv, Val::f32, f32, f32::max),
+            ReduceKind::Min => red!(v, iv, Val::f32, f32, f32::min),
+        },
+        (Data::S32(v), Data::S32(iv)) => match kind {
+            ReduceKind::Add => red!(v, iv, Val::s32, i32, |x, y| x.wrapping_add(y)),
+            ReduceKind::Max => red!(v, iv, Val::s32, i32, i32::max),
+            ReduceKind::Min => red!(v, iv, Val::s32, i32, i32::min),
+        },
+        (Data::U32(v), Data::U32(iv)) => match kind {
+            ReduceKind::Add => red!(v, iv, Val::u32, u32, |x, y| x.wrapping_add(y)),
+            ReduceKind::Max => red!(v, iv, Val::u32, u32, u32::max),
+            ReduceKind::Min => red!(v, iv, Val::u32, u32, u32::min),
+        },
+        _ => bail!("reduce dtype mismatch"),
+    })
+}
+
+fn iota(shape: &HShape, dim: usize) -> Result<Val> {
+    if dim >= shape.dims.len() {
+        bail!("iota dimension out of range");
+    }
+    let dims = shape.dims.clone();
+    let n = shape.num_elements();
+    let st = strides(&dims);
+    let size = dims[dim];
+    let stride = st[dim];
+    macro_rules! io {
+        ($t:ty, $mk:path) => {{
+            let mut out = vec![0 as $t; n];
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = ((i / stride) % size) as $t;
+            }
+            $mk(dims.clone(), out)
+        }};
+    }
+    Ok(match shape.dtype {
+        HDtype::S32 => io!(i32, Val::s32),
+        HDtype::U32 => io!(u32, Val::u32),
+        HDtype::F32 => io!(f32, Val::f32),
+        HDtype::Pred => bail!("pred iota unsupported"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Dot
+// ---------------------------------------------------------------------------
+
+/// Materialize `a` with its axes permuted into `order` (row-major).
+/// Zero-copy when `order` is already the identity — the canonical layouts
+/// the emitter produces hit that path on the hot matmuls.
+fn regroup_f32(a: &Val, order: &[usize]) -> Result<Arc<Vec<f32>>> {
+    let identity = order.iter().enumerate().all(|(i, &o)| i == o);
+    match &a.data {
+        Data::F32(v) => {
+            if identity {
+                Ok(v.clone())
+            } else {
+                let dims_out: Vec<usize> = order.iter().map(|&i| a.dims[i]).collect();
+                let in_strides = strides(&a.dims);
+                let map: Vec<usize> = order.iter().map(|&i| in_strides[i]).collect();
+                let mut out = Vec::with_capacity(a.len());
+                let mut st = Stepper::new(&dims_out, &map);
+                while let Some(off) = st.next() {
+                    out.push(v[off]);
+                }
+                Ok(Arc::new(out))
+            }
+        }
+        _ => bail!("dot requires f32 operands"),
+    }
+}
+
+fn dot(mut args: Vec<Val>, dd: DotDims) -> Result<Val> {
+    let rhs = args.pop().context("dot missing rhs")?;
+    let lhs = args.pop().context("dot missing lhs")?;
+    let lhs_free: Vec<usize> = (0..lhs.dims.len())
+        .filter(|i| !dd.lhs_batch.contains(i) && !dd.lhs_contract.contains(i))
+        .collect();
+    let rhs_free: Vec<usize> = (0..rhs.dims.len())
+        .filter(|i| !dd.rhs_batch.contains(i) && !dd.rhs_contract.contains(i))
+        .collect();
+    for (&lb, &rb) in dd.lhs_batch.iter().zip(&dd.rhs_batch) {
+        if lhs.dims[lb] != rhs.dims[rb] {
+            bail!("dot batch dim mismatch");
+        }
+    }
+    for (&lc, &rc) in dd.lhs_contract.iter().zip(&dd.rhs_contract) {
+        if lhs.dims[lc] != rhs.dims[rc] {
+            bail!("dot contracting dim mismatch");
+        }
+    }
+
+    // regroup to lhs [batch..., free..., contract...] and
+    // rhs [batch..., contract..., free...]
+    let lorder: Vec<usize> = dd
+        .lhs_batch
+        .iter()
+        .chain(&lhs_free)
+        .chain(&dd.lhs_contract)
+        .copied()
+        .collect();
+    let rorder: Vec<usize> = dd
+        .rhs_batch
+        .iter()
+        .chain(&dd.rhs_contract)
+        .chain(&rhs_free)
+        .copied()
+        .collect();
+    let ldata = regroup_f32(&lhs, &lorder)?;
+    let rdata = regroup_f32(&rhs, &rorder)?;
+
+    let nb: usize = dd.lhs_batch.iter().map(|&i| lhs.dims[i]).product();
+    let m: usize = lhs_free.iter().map(|&i| lhs.dims[i]).product();
+    let k: usize = dd.lhs_contract.iter().map(|&i| lhs.dims[i]).product();
+    let n: usize = rhs_free.iter().map(|&i| rhs.dims[i]).product();
+
+    let mut out = vec![0f32; nb * m * n];
+    for b in 0..nb {
+        let lbase = b * m * k;
+        let rbase = b * k * n;
+        let obase = b * m * n;
+        for mi in 0..m {
+            let lrow = &ldata[lbase + mi * k..lbase + (mi + 1) * k];
+            let orow = &mut out[obase + mi * n..obase + (mi + 1) * n];
+            for (ki, &a) in lrow.iter().enumerate() {
+                // Deliberate deviation from strict IEEE dot semantics: an
+                // exactly-zero lhs element contributes nothing, even
+                // against a non-finite rhs row (XLA would produce NaN from
+                // 0·inf).  This makes one-hot embedding matmuls O(rows)
+                // instead of O(rows·V), and every fixture artifact is
+                // finite-valued, so the two semantics agree there
+                // (asserted by the jax goldens + interp==pjrt tests).
+                if a == 0.0 {
+                    continue;
+                }
+                let rrow = &rdata[rbase + ki * n..rbase + (ki + 1) * n];
+                for (o, &r) in orow.iter_mut().zip(rrow.iter()) {
+                    *o += a * r;
+                }
+            }
+        }
+    }
+    let mut out_dims: Vec<usize> = dd.lhs_batch.iter().map(|&i| lhs.dims[i]).collect();
+    out_dims.extend(lhs_free.iter().map(|&i| lhs.dims[i]));
+    out_dims.extend(rhs_free.iter().map(|&i| rhs.dims[i]));
+    Ok(Val::f32(out_dims, out))
+}
+
+// ---------------------------------------------------------------------------
+// Dynamic slice / update
+// ---------------------------------------------------------------------------
+
+fn start_indices(args: &[Val], rank: usize) -> Result<Vec<usize>> {
+    if args.len() != rank {
+        bail!("expected {rank} start indices, got {}", args.len());
+    }
+    args.iter()
+        .map(|v| {
+            if !v.dims.is_empty() {
+                bail!("start index must be scalar");
+            }
+            Ok(match &v.data {
+                Data::S32(x) => x[0].max(0) as usize,
+                Data::U32(x) => x[0] as usize,
+                _ => bail!("start index must be integer"),
+            })
+        })
+        .collect()
+}
+
+fn dynamic_slice(mut args: Vec<Val>, sizes: &[usize]) -> Result<Val> {
+    if args.is_empty() {
+        bail!("dynamic-slice missing operand");
+    }
+    let a = args.remove(0);
+    let starts = start_indices(&args, a.dims.len())?;
+    let spec: Vec<(usize, usize, usize)> = starts
+        .iter()
+        .zip(sizes)
+        .zip(&a.dims)
+        .map(|((&s, &sz), &d)| {
+            let s = s.min(d.saturating_sub(sz));
+            (s, s + sz, 1)
+        })
+        .collect();
+    slice_op(vec![a], &spec)
+}
+
+fn dynamic_update_slice(mut args: Vec<Val>) -> Result<Val> {
+    if args.len() < 2 {
+        bail!("dynamic-update-slice missing operands");
+    }
+    let base = args.remove(0);
+    let update = args.remove(0);
+    if base.dtype() != update.dtype() {
+        bail!("dynamic-update-slice dtype mismatch");
+    }
+    let starts = start_indices(&args, base.dims.len())?;
+    let starts: Vec<usize> = starts
+        .iter()
+        .zip(&update.dims)
+        .zip(&base.dims)
+        .map(|((&s, &u), &d)| s.min(d.saturating_sub(u)))
+        .collect();
+    let base_dims = base.dims.clone();
+    let base_strides = strides(&base_dims);
+    let offset: usize = starts.iter().zip(&base_strides).map(|(&s, &st)| s * st).sum();
+    macro_rules! dus {
+        ($variant:path, $mk:path, $t:ty) => {{
+            let upd: &[$t] = match &update.data {
+                $variant(v) => v,
+                _ => bail!("dynamic-update-slice dtype mismatch"),
+            };
+            let arc = match base.data {
+                $variant(a) => a,
+                _ => unreachable!(),
+            };
+            // in place when uniquely owned (the decode-loop hot path)
+            let mut buf = Arc::try_unwrap(arc).unwrap_or_else(|a| a.as_ref().clone());
+            let mut st = Stepper::new(&update.dims, &base_strides);
+            let mut i = 0usize;
+            while let Some(off) = st.next() {
+                buf[offset + off] = upd[i];
+                i += 1;
+            }
+            $mk(base_dims.clone(), buf)
+        }};
+    }
+    Ok(match &update.data {
+        Data::F32(_) => dus!(Data::F32, Val::f32, f32),
+        Data::S32(_) => dus!(Data::S32, Val::s32, i32),
+        Data::U32(_) => dus!(Data::U32, Val::u32, u32),
+        Data::Pred(_) => dus!(Data::Pred, Val::pred, bool),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Gather (the embedding-lookup / take-along-axis subset)
+// ---------------------------------------------------------------------------
+
+fn gather(mut args: Vec<Val>, ins: &Instr, out_shape: &HShape) -> Result<Val> {
+    let g = ins.gather.as_ref().context("gather without dimension numbers")?;
+    let indices = args.pop().context("gather missing indices")?;
+    let operand = args.pop().context("gather missing operand")?;
+    let orank = operand.dims.len();
+    if g.slice_sizes.len() != orank {
+        bail!("gather slice_sizes rank mismatch");
+    }
+    for (&sz, &d) in g.slice_sizes.iter().zip(&operand.dims) {
+        if sz > d {
+            bail!("gather slice size exceeds operand dim");
+        }
+    }
+    // indices batch shape: indices dims with index_vector_dim removed
+    // (index_vector_dim == rank means implicit trailing 1)
+    let mut batch_dims: Vec<usize> = indices.dims.clone();
+    let ncomp = if g.index_vector_dim < indices.dims.len() {
+        batch_dims.remove(g.index_vector_dim)
+    } else {
+        1
+    };
+    if ncomp != g.start_index_map.len() {
+        bail!("gather index components {} != start_index_map", ncomp);
+    }
+    let idx_i32 = indices.as_s32()?;
+    let idx_strides = strides(&indices.dims);
+    let comp_stride = if g.index_vector_dim < indices.dims.len() {
+        idx_strides[g.index_vector_dim]
+    } else {
+        0
+    };
+    // strides of the batch portion within the indices buffer
+    let batch_strides: Vec<usize> = (0..indices.dims.len())
+        .filter(|&i| i != g.index_vector_dim)
+        .map(|i| idx_strides[i])
+        .collect();
+
+    // offset dims of the output map to non-collapsed operand dims, in order
+    let offset_operand_dims: Vec<usize> =
+        (0..orank).filter(|i| !g.collapsed_slice_dims.contains(i)).collect();
+    if g.offset_dims.len() != offset_operand_dims.len() {
+        bail!("gather offset_dims/collapsed mismatch");
+    }
+    let out_dims = out_shape.dims.clone();
+    let out_batch_axes: Vec<usize> =
+        (0..out_dims.len()).filter(|a| !g.offset_dims.contains(a)).collect();
+    if out_batch_axes.len() != batch_dims.len() {
+        bail!("gather output batch rank mismatch");
+    }
+    let op_strides = strides(&operand.dims);
+    let src = operand.as_f32()?;
+
+    let n: usize = out_dims.iter().product();
+    let mut out = Vec::with_capacity(n);
+    let out_strides_ = strides(&out_dims);
+    for lin in 0..n {
+        // decompose output index
+        let mut start_off = 0usize; // offset from gathered start indices
+        let mut in_slice_off = 0usize; // offset within the slice
+        let mut batch_lin = 0usize;
+        for (axis, &od) in out_dims.iter().enumerate() {
+            let coord = (lin / out_strides_[axis]) % od;
+            if let Some(k) = g.offset_dims.iter().position(|&a| a == axis) {
+                in_slice_off += coord * op_strides[offset_operand_dims[k]];
+            } else {
+                let b = out_batch_axes.iter().position(|&a| a == axis).unwrap();
+                batch_lin += coord * batch_strides[b];
+            }
+        }
+        for (c, &od) in g.start_index_map.iter().enumerate() {
+            let raw = idx_i32[batch_lin + c * comp_stride].max(0) as usize;
+            let clamped = raw.min(operand.dims[od] - g.slice_sizes[od]);
+            start_off += clamped * op_strides[od];
+        }
+        out.push(src[start_off + in_slice_off]);
+    }
+    Ok(Val::f32(out_dims, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(text: &str, inputs: &[Tensor]) -> Vec<Tensor> {
+        Program::parse(text).unwrap().evaluate(inputs).unwrap()
+    }
+
+    #[test]
+    fn elementwise_and_broadcast() {
+        let text = r#"ENTRY %m (a: f32[2,3], s: f32[]) -> (f32[2,3]) {
+  %a = f32[2,3] parameter(0)
+  %s = f32[] parameter(1)
+  %sb = f32[2,3] broadcast(f32[] %s), dimensions={}
+  %x = f32[2,3] multiply(f32[2,3] %a, f32[2,3] %sb)
+  %e = f32[2,3] exponential(f32[2,3] %x)
+  ROOT %t = (f32[2,3]) tuple(f32[2,3] %e)
+}
+"#;
+        let a = Tensor::f32(vec![2, 3], vec![0.0, 1.0, -1.0, 2.0, 0.5, -0.5]);
+        let out = run(text, &[a.clone(), Tensor::scalar_f32(2.0)]);
+        let got = out[0].as_f32().unwrap();
+        for (g, x) in got.iter().zip(a.as_f32().unwrap()) {
+            assert_eq!(*g, (2.0 * x).exp());
+        }
+    }
+
+    #[test]
+    fn row_broadcast_matches_dims_mapping() {
+        let text = r#"ENTRY %m (v: f32[3]) -> (f32[2,3], f32[3,2]) {
+  %v = f32[3] parameter(0)
+  %r = f32[2,3] broadcast(f32[3] %v), dimensions={1}
+  %c = f32[3,2] broadcast(f32[3] %v), dimensions={0}
+  ROOT %t = (f32[2,3], f32[3,2]) tuple(f32[2,3] %r, f32[3,2] %c)
+}
+"#;
+        let out = run(text, &[Tensor::f32(vec![3], vec![1.0, 2.0, 3.0])]);
+        assert_eq!(out[0].as_f32().unwrap(), &[1., 2., 3., 1., 2., 3.]);
+        assert_eq!(out[1].as_f32().unwrap(), &[1., 1., 2., 2., 3., 3.]);
+    }
+
+    #[test]
+    fn reduce_sum_and_max() {
+        let text = r#"%radd (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(f32[] %a, f32[] %b)
+}
+
+%rmax (c: f32[], d: f32[]) -> f32[] {
+  %c = f32[] parameter(0)
+  %d = f32[] parameter(1)
+  ROOT %r2 = f32[] maximum(f32[] %c, f32[] %d)
+}
+
+ENTRY %m (x: f32[2,3]) -> (f32[2], f32[3], f32[]) {
+  %x = f32[2,3] parameter(0)
+  %zero = f32[] constant(0)
+  %ninf = f32[] constant(-inf)
+  %rows = f32[2] reduce(f32[2,3] %x, f32[] %zero), dimensions={1}, to_apply=%radd
+  %cols = f32[3] reduce(f32[2,3] %x, f32[] %ninf), dimensions={0}, to_apply=%rmax
+  %all = f32[] reduce(f32[2,3] %x, f32[] %zero), dimensions={0,1}, to_apply=%radd
+  ROOT %t = (f32[2], f32[3], f32[]) tuple(f32[2] %rows, f32[3] %cols, f32[] %all)
+}
+"#;
+        let x = Tensor::f32(vec![2, 3], vec![1., -2., 3., 4., 5., -6.]);
+        let out = run(text, &[x]);
+        assert_eq!(out[0].as_f32().unwrap(), &[2.0, 3.0]);
+        assert_eq!(out[1].as_f32().unwrap(), &[4.0, 5.0, 3.0]);
+        assert_eq!(out[2].as_f32().unwrap(), &[5.0]);
+    }
+
+    #[test]
+    fn dot_plain_and_batched() {
+        let text = r#"ENTRY %m (a: f32[2,3], b: f32[3,4], q: f32[2,2,3], k: f32[2,4,3]) -> (f32[2,4], f32[2,2,4]) {
+  %a = f32[2,3] parameter(0)
+  %b = f32[3,4] parameter(1)
+  %q = f32[2,2,3] parameter(2)
+  %k = f32[2,4,3] parameter(3)
+  %mm = f32[2,4] dot(f32[2,3] %a, f32[3,4] %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %bmm = f32[2,2,4] dot(f32[2,2,3] %q, f32[2,4,3] %k), lhs_batch_dims={0}, rhs_batch_dims={0}, lhs_contracting_dims={2}, rhs_contracting_dims={2}
+  ROOT %t = (f32[2,4], f32[2,2,4]) tuple(f32[2,4] %mm, f32[2,2,4] %bmm)
+}
+"#;
+        let a = Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::f32(vec![3, 4], (0..12).map(|i| i as f32).collect());
+        let q = Tensor::f32(vec![2, 2, 3], (0..12).map(|i| (i % 5) as f32).collect());
+        let k = Tensor::f32(vec![2, 4, 3], (0..24).map(|i| (i % 7) as f32 - 3.0).collect());
+        let out = run(text, &[a.clone(), b.clone(), q.clone(), k.clone()]);
+        // reference mm
+        let (av, bv) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+        for i in 0..2 {
+            for j in 0..4 {
+                let want: f32 = (0..3).map(|l| av[i * 3 + l] * bv[l * 4 + j]).sum();
+                assert_eq!(out[0].as_f32().unwrap()[i * 4 + j], want);
+            }
+        }
+        // reference bmm: q[b,i,:] · k[b,j,:]
+        let (qv, kv) = (q.as_f32().unwrap(), k.as_f32().unwrap());
+        for bb in 0..2 {
+            for i in 0..2 {
+                for j in 0..4 {
+                    let want: f32 = (0..3)
+                        .map(|l| qv[bb * 6 + i * 3 + l] * kv[bb * 12 + j * 3 + l])
+                        .sum();
+                    assert_eq!(out[1].as_f32().unwrap()[bb * 8 + i * 4 + j], want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_slice_concat_pad() {
+        let text = r#"ENTRY %m (x: f32[2,3]) -> (f32[3,2], f32[2,2], f32[2,5], f32[4,3]) {
+  %x = f32[2,3] parameter(0)
+  %zero = f32[] constant(9)
+  %tr = f32[3,2] transpose(f32[2,3] %x), dimensions={1,0}
+  %sl = f32[2,2] slice(f32[2,3] %x), slice={[0:2], [1:3]}
+  %cc = f32[2,5] concatenate(f32[2,3] %x, f32[2,2] %sl), dimensions={1}
+  %pd = f32[4,3] pad(f32[2,3] %x, f32[] %zero), padding=1_1x0_0
+  ROOT %t = (f32[3,2], f32[2,2], f32[2,5], f32[4,3]) tuple(f32[3,2] %tr, f32[2,2] %sl, f32[2,5] %cc, f32[4,3] %pd)
+}
+"#;
+        let x = Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let out = run(text, &[x]);
+        assert_eq!(out[0].as_f32().unwrap(), &[1., 4., 2., 5., 3., 6.]);
+        assert_eq!(out[1].as_f32().unwrap(), &[2., 3., 5., 6.]);
+        assert_eq!(out[2].as_f32().unwrap(), &[1., 2., 3., 2., 3., 4., 5., 6., 5., 6.]);
+        assert_eq!(
+            out[3].as_f32().unwrap(),
+            &[9., 9., 9., 1., 2., 3., 4., 5., 6., 9., 9., 9.]
+        );
+    }
+
+    #[test]
+    fn iota_compare_select_convert() {
+        let text = r#"ENTRY %m (x: s32[4]) -> (f32[4]) {
+  %x = s32[4] parameter(0)
+  %i = s32[4] iota(), iota_dimension=0
+  %p = pred[4] compare(s32[4] %i, s32[4] %x), direction=LE
+  %pf = f32[4] convert(pred[4] %p)
+  %xf = f32[4] convert(s32[4] %x)
+  %sel = f32[4] select(pred[4] %p, f32[4] %xf, f32[4] %pf)
+  ROOT %t = (f32[4]) tuple(f32[4] %sel)
+}
+"#;
+        let x = Tensor::i32(vec![4], vec![2, 0, 1, 5]);
+        let out = run(text, &[x]);
+        // i = [0,1,2,3]; p = i<=x = [T,F,F,T]; sel = [2, 0, 0, 5]
+        assert_eq!(out[0].as_f32().unwrap(), &[2.0, 0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn dynamic_slice_and_update() {
+        let text = r#"ENTRY %m (x: f32[2,4], u: f32[2,1], p: s32[]) -> (f32[2,2], f32[2,4]) {
+  %x = f32[2,4] parameter(0)
+  %u = f32[2,1] parameter(1)
+  %p = s32[] parameter(2)
+  %z = s32[] constant(0)
+  %ds = f32[2,2] dynamic-slice(f32[2,4] %x, s32[] %z, s32[] %p), dynamic_slice_sizes={2,2}
+  %du = f32[2,4] dynamic-update-slice(f32[2,4] %x, f32[2,1] %u, s32[] %z, s32[] %p)
+  ROOT %t = (f32[2,2], f32[2,4]) tuple(f32[2,2] %ds, f32[2,4] %du)
+}
+"#;
+        let x = Tensor::f32(vec![2, 4], (0..8).map(|i| i as f32).collect());
+        let u = Tensor::f32(vec![2, 1], vec![100.0, 200.0]);
+        let out = run(text, &[x, u, Tensor::scalar_i32(1)]);
+        assert_eq!(out[0].as_f32().unwrap(), &[1., 2., 5., 6.]);
+        assert_eq!(out[1].as_f32().unwrap(), &[0., 100., 2., 3., 4., 200., 6., 7.]);
+    }
+
+    #[test]
+    fn gather_embedding_lookup() {
+        // tok_emb[V=4, D=2] gathered at indices [3] → [3, 2]
+        let text = r#"ENTRY %m (e: f32[4,2], ix: s32[3]) -> (f32[3,2]) {
+  %e = f32[4,2] parameter(0)
+  %ix = s32[3] parameter(1)
+  %g = f32[3,2] gather(f32[4,2] %e, s32[3] %ix), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,2}
+  ROOT %t = (f32[3,2]) tuple(f32[3,2] %g)
+}
+"#;
+        let e = Tensor::f32(vec![4, 2], vec![0., 1., 10., 11., 20., 21., 30., 31.]);
+        let ix = Tensor::i32(vec![3], vec![2, 0, 3]);
+        let out = run(text, &[e, ix]);
+        assert_eq!(out[0].as_f32().unwrap(), &[20., 21., 0., 1., 30., 31.]);
+    }
+
+    #[test]
+    fn u32_hash_ops() {
+        let text = r#"ENTRY %m (s: u32[]) -> (u32[4]) {
+  %s = u32[] parameter(0)
+  %i = u32[4] iota(), iota_dimension=0
+  %sb = u32[4] broadcast(u32[] %s), dimensions={}
+  %x0 = u32[4] add(u32[4] %i, u32[4] %sb)
+  %c = u32[] constant(2654435761)
+  %cb = u32[4] broadcast(u32[] %c), dimensions={}
+  %x1 = u32[4] multiply(u32[4] %x0, u32[4] %cb)
+  %sh = u32[] constant(16)
+  %shb = u32[4] broadcast(u32[] %sh), dimensions={}
+  %x2 = u32[4] shift-right-logical(u32[4] %x1, u32[4] %shb)
+  %x3 = u32[4] xor(u32[4] %x1, u32[4] %x2)
+  ROOT %t = (u32[4]) tuple(u32[4] %x3)
+}
+"#;
+        let out = run(text, &[Tensor::scalar_u32(7)]);
+        let got = match &out[0].data {
+            TensorData::U32(v) => v.clone(),
+            _ => panic!("expected u32"),
+        };
+        let want: Vec<u32> = (0..4u32)
+            .map(|i| {
+                let x = i.wrapping_add(7).wrapping_mul(2654435761);
+                x ^ (x >> 16)
+            })
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn softmax_composed_from_primitives() {
+        let text = r#"%radd (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(f32[] %a, f32[] %b)
+}
+
+%rmax (c: f32[], d: f32[]) -> f32[] {
+  %c = f32[] parameter(0)
+  %d = f32[] parameter(1)
+  ROOT %r2 = f32[] maximum(f32[] %c, f32[] %d)
+}
+
+ENTRY %m (x: f32[2,4]) -> (f32[2,4]) {
+  %x = f32[2,4] parameter(0)
+  %ninf = f32[] constant(-inf)
+  %zero = f32[] constant(0)
+  %mx = f32[2] reduce(f32[2,4] %x, f32[] %ninf), dimensions={1}, to_apply=%rmax
+  %mxb = f32[2,4] broadcast(f32[2] %mx), dimensions={0}
+  %sub = f32[2,4] subtract(f32[2,4] %x, f32[2,4] %mxb)
+  %ex = f32[2,4] exponential(f32[2,4] %sub)
+  %sm = f32[2] reduce(f32[2,4] %ex, f32[] %zero), dimensions={1}, to_apply=%radd
+  %smb = f32[2,4] broadcast(f32[2] %sm), dimensions={0}
+  %p = f32[2,4] divide(f32[2,4] %ex, f32[2,4] %smb)
+  ROOT %t = (f32[2,4]) tuple(f32[2,4] %p)
+}
+"#;
+        let x = Tensor::f32(vec![2, 4], vec![1., 2., 3., 4., -1., 0., 1., 2.]);
+        let out = Program::parse(text).unwrap().evaluate(&[x.clone()]).unwrap();
+        let xd = x.as_f32().unwrap();
+        for r in 0..2 {
+            let row = &xd[r * 4..(r + 1) * 4];
+            let mx = row.iter().fold(f32::MIN, |a, &b| a.max(b));
+            let ex: Vec<f32> = row.iter().map(|&v| (v - mx).exp()).collect();
+            let s: f32 = ex.iter().sum();
+            for c in 0..4 {
+                let got = out[0].as_f32().unwrap()[r * 4 + c];
+                assert!((got - ex[c] / s).abs() < 1e-7, "{got} vs {}", ex[c] / s);
+            }
+        }
+    }
+
+    #[test]
+    fn arity_mismatch_is_error() {
+        let p = Program::parse(
+            "ENTRY %m (a: f32[1]) -> (f32[1]) {\n  %a = f32[1] parameter(0)\n  ROOT %t = (f32[1]) tuple(f32[1] %a)\n}\n",
+        )
+        .unwrap();
+        assert!(p.evaluate(&[]).is_err());
+    }
+}

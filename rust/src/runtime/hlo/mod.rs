@@ -1,0 +1,39 @@
+//! Pure-Rust HLO-text interpreter: the execution backend that makes the
+//! engine-gated test tier run on stock CI runners (no vendored XLA, no
+//! Python toolchain).
+//!
+//! Two layers:
+//!
+//! * [`parser`] — HLO *text* (the interchange format `python/compile/aot.py`
+//!   emits) → [`parser::HloModule`].  Covers the op set the checked-in
+//!   fixture artifact sets use — parameter/constant/tuple, elementwise
+//!   arithmetic, `dot` (general), reshape/broadcast/transpose/slice/
+//!   concatenate/pad, reduce, select/compare, exp/log/tanh/rsqrt/sqrt/
+//!   sin/cos/power, iota, convert, integer bit ops, dynamic-slice/
+//!   dynamic-update-slice and gather — and fails loudly on anything else.
+//! * [`eval`] — a reference evaluator over host tensors.  Values are
+//!   `Arc`-backed so shape-only ops (reshape, same-type convert) are
+//!   zero-copy and buffers are taken at their last use — elementwise ops
+//!   and `dynamic-update-slice` then mutate in place, keeping the stepwise
+//!   decode loop's allocations bounded (asserted in tests/alloc_counts.rs).
+//!
+//! The fixture artifacts themselves (a real 2-layer byte-level transformer:
+//! forward, KV-cached prefill/decode, PPO/SFT/BT/critic gradients, fused
+//! Adam train step) are emitted by `python/compile/fixturegen/` — an HLO
+//! graph builder with reverse-mode autodiff whose output is differentially
+//! validated against `python/compile/model.py` (jax) at generation time,
+//! then committed under `rust/tests/fixtures/artifacts/` together with
+//! jax-generated golden outputs.  CI never runs Python: it evaluates the
+//! committed text with this interpreter and compares against the committed
+//! goldens.
+//!
+//! Known op-set gaps (tracked in ROADMAP.md): no `while`/`sort`/`rng-*` /
+//! `scatter`, so the fused `generate_rollout` artifact is not part of the
+//! fixture sets — the coordinator's stepwise `prefill`/`decode_step` path
+//! covers generation.
+
+pub mod eval;
+pub mod parser;
+
+pub use eval::Program;
+pub use parser::HloModule;

@@ -1,0 +1,683 @@
+//! HLO-text parser: the interchange format emitted by `python/compile/aot.py`
+//! (and by [`super::builder`]) → an executable [`HloModule`].
+//!
+//! This is deliberately a *practical* parser, not a full grammar: it covers
+//! the instruction syntax XLA's `HloModule::ToString` emits for the op set
+//! the artifact sets use, and fails loudly (with the offending line) on
+//! anything else — a silent mis-parse would corrupt training numerics.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Element types the artifact contract uses (`pred` appears only as an
+/// intermediate inside modules; manifest I/O is f32/s32/u32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HDtype {
+    F32,
+    S32,
+    U32,
+    Pred,
+}
+
+impl HDtype {
+    pub fn parse(s: &str) -> Result<HDtype> {
+        Ok(match s {
+            "f32" => HDtype::F32,
+            "s32" => HDtype::S32,
+            "u32" => HDtype::U32,
+            "pred" => HDtype::Pred,
+            other => bail!("unsupported element type '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            HDtype::F32 => "f32",
+            HDtype::S32 => "s32",
+            HDtype::U32 => "u32",
+            HDtype::Pred => "pred",
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HShape {
+    pub dtype: HDtype,
+    pub dims: Vec<usize>,
+}
+
+impl HShape {
+    pub fn num_elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn to_text(&self) -> String {
+        let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        format!("{}[{}]", self.dtype.name(), dims.join(","))
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpDir {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl CmpDir {
+    pub fn parse(s: &str) -> Result<CmpDir> {
+        Ok(match s {
+            "EQ" => CmpDir::Eq,
+            "NE" => CmpDir::Ne,
+            "LT" => CmpDir::Lt,
+            "LE" => CmpDir::Le,
+            "GT" => CmpDir::Gt,
+            "GE" => CmpDir::Ge,
+            other => bail!("unknown compare direction '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CmpDir::Eq => "EQ",
+            CmpDir::Ne => "NE",
+            CmpDir::Lt => "LT",
+            CmpDir::Le => "LE",
+            CmpDir::Gt => "GT",
+            CmpDir::Ge => "GE",
+        }
+    }
+}
+
+/// `dot` dimension numbers.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DotDims {
+    pub lhs_batch: Vec<usize>,
+    pub rhs_batch: Vec<usize>,
+    pub lhs_contract: Vec<usize>,
+    pub rhs_contract: Vec<usize>,
+}
+
+/// `gather` dimension numbers (the embedding-lookup subset).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GatherDims {
+    pub offset_dims: Vec<usize>,
+    pub collapsed_slice_dims: Vec<usize>,
+    pub start_index_map: Vec<usize>,
+    pub index_vector_dim: usize,
+    pub slice_sizes: Vec<usize>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+    U32(Vec<u32>),
+    Pred(Vec<bool>),
+}
+
+/// One parsed instruction.  Operands are indices into the owning
+/// computation's instruction list (HLO text is in def-before-use order).
+#[derive(Debug, Clone)]
+pub struct Instr {
+    pub name: String,
+    /// `None` for tuple-shaped instructions (the ROOT tuple).
+    pub shape: Option<HShape>,
+    pub opcode: String,
+    pub operands: Vec<usize>,
+    /// `dimensions={...}` / `iota_dimension=` payload.
+    pub dims: Vec<usize>,
+    /// `slice={[start:limit:stride], ...}`.
+    pub slice: Vec<(usize, usize, usize)>,
+    /// `padding=low_high[_interior]x...` per dimension.
+    pub pad_cfg: Vec<(i64, i64, i64)>,
+    pub dot: Option<DotDims>,
+    pub gather: Option<GatherDims>,
+    /// `dynamic_slice_sizes={...}`.
+    pub dyn_sizes: Vec<usize>,
+    pub direction: Option<CmpDir>,
+    pub to_apply: Option<String>,
+    pub literal: Option<Literal>,
+    pub param_idx: Option<usize>,
+    pub tuple_index: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Computation {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    /// Instruction index per parameter number.
+    pub params: Vec<usize>,
+    pub root: usize,
+    pub is_entry: bool,
+}
+
+/// What kind of fold a reduce body computes (the evaluator fast-paths
+/// these; arbitrary reduce bodies are rejected at parse time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceKind {
+    Add,
+    Max,
+    Min,
+}
+
+#[derive(Debug, Clone)]
+pub struct HloModule {
+    pub name: String,
+    pub computations: Vec<Computation>,
+    pub entry: usize,
+}
+
+impl HloModule {
+    pub fn entry_computation(&self) -> &Computation {
+        &self.computations[self.entry]
+    }
+
+    pub fn computation(&self, name: &str) -> Result<&Computation> {
+        self.computations
+            .iter()
+            .find(|c| c.name == name)
+            .with_context(|| format!("no computation '{name}' in module '{}'", self.name))
+    }
+
+    /// Classify a reduce body computation as one of the supported folds.
+    pub fn reduce_kind(&self, name: &str) -> Result<ReduceKind> {
+        let c = self.computation(name)?;
+        let root = &c.instrs[c.root];
+        Ok(match root.opcode.as_str() {
+            "add" => ReduceKind::Add,
+            "maximum" => ReduceKind::Max,
+            "minimum" => ReduceKind::Min,
+            other => bail!("unsupported reduce body op '{other}' in '{name}'"),
+        })
+    }
+
+    /// Parse HLO text into a module.
+    pub fn parse(text: &str) -> Result<HloModule> {
+        let mut name = String::from("module");
+        let mut computations: Vec<Computation> = Vec::new();
+        let mut entry = None;
+
+        let mut lines = text.lines().peekable();
+        while let Some(line) = lines.next() {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with("//") {
+                continue;
+            }
+            if let Some(rest) = t.strip_prefix("HloModule") {
+                name = rest
+                    .trim()
+                    .trim_end_matches(',')
+                    .split([',', ' '])
+                    .next()
+                    .unwrap_or("module")
+                    .to_string();
+                continue;
+            }
+            // computation header: `[ENTRY ]%name (p: shape, ...) -> shape {`
+            if t.contains("->") && t.ends_with('{') {
+                let is_entry = t.starts_with("ENTRY");
+                let mut comp = parse_computation(t, &mut lines)
+                    .with_context(|| format!("parsing computation at '{t}'"))?;
+                comp.is_entry = is_entry;
+                if is_entry {
+                    entry = Some(computations.len());
+                }
+                computations.push(comp);
+                continue;
+            }
+            bail!("unrecognised top-level HLO line: '{t}'");
+        }
+        // single-computation modules may omit ENTRY
+        let entry = match entry {
+            Some(e) => e,
+            None if computations.len() == 1 => 0,
+            None => bail!("module '{name}' has no ENTRY computation"),
+        };
+        Ok(HloModule { name, computations, entry })
+    }
+}
+
+fn parse_computation<'a>(
+    header: &str,
+    lines: &mut impl Iterator<Item = &'a str>,
+) -> Result<Computation> {
+    let h = header.trim_start_matches("ENTRY").trim();
+    let name = h
+        .split('(')
+        .next()
+        .context("computation header missing '('")?
+        .trim()
+        .trim_start_matches('%')
+        .to_string();
+
+    let mut instrs: Vec<Instr> = Vec::new();
+    let mut by_name: HashMap<String, usize> = HashMap::new();
+    let mut params: Vec<(usize, usize)> = Vec::new(); // (param number, instr idx)
+    let mut root = None;
+
+    for line in lines {
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if t == "}" {
+            break;
+        }
+        let (is_root, instr) =
+            parse_instr(t, &by_name).with_context(|| format!("parsing instruction '{t}'"))?;
+        let idx = instrs.len();
+        if let Some(p) = instr.param_idx {
+            params.push((p, idx));
+        }
+        if is_root {
+            root = Some(idx);
+        }
+        by_name.insert(instr.name.clone(), idx);
+        instrs.push(instr);
+    }
+
+    params.sort();
+    let params: Vec<usize> = params.into_iter().map(|(_, i)| i).collect();
+    let root = match root {
+        Some(r) => r,
+        None => instrs.len().checked_sub(1).context("empty computation")?,
+    };
+    Ok(Computation { name, instrs, params, root, is_entry: false })
+}
+
+/// Split `s` on commas at brace/paren/bracket depth zero.
+fn split_top(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '{' | '(' | '[' => depth += 1,
+            '}' | ')' | ']' => depth -= 1,
+            ',' if depth == 0 => {
+                out.push(s[start..i].trim());
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let tail = s[start..].trim();
+    if !tail.is_empty() {
+        out.push(tail);
+    }
+    out
+}
+
+/// Find the byte index of the `)`/`}` matching the opener at byte `open`.
+fn matching_paren(s: &str, open: usize) -> Result<usize> {
+    let mut depth = 0i32;
+    for (i, c) in s.bytes().enumerate().skip(open) {
+        match c {
+            b'(' | b'{' | b'[' => depth += 1,
+            b')' | b'}' | b']' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    bail!("unbalanced parentheses in '{s}'")
+}
+
+/// Parse a shape prefix like `f32[4,64]{1,0}` at the start of `s`.
+/// Returns (shape, bytes consumed).  Tuple shapes return (None, consumed).
+fn parse_shape_prefix(s: &str) -> Result<(Option<HShape>, usize)> {
+    let s_trim = s.trim_start();
+    let lead = s.len() - s_trim.len();
+    if s_trim.starts_with('(') {
+        let close = matching_paren(s_trim, 0)?;
+        return Ok((None, lead + close + 1));
+    }
+    let lb = s_trim.find('[').context("shape missing '['")?;
+    let dtype = HDtype::parse(&s_trim[..lb])?;
+    let rb = s_trim[lb..].find(']').context("shape missing ']'")? + lb;
+    let dims_str = &s_trim[lb + 1..rb];
+    let dims: Vec<usize> = if dims_str.trim().is_empty() {
+        Vec::new()
+    } else {
+        dims_str
+            .split(',')
+            .map(|d| d.trim().parse::<usize>().context("bad dim"))
+            .collect::<Result<_>>()?
+    };
+    let mut consumed = rb + 1;
+    // optional layout suffix `{1,0}`
+    if s_trim[consumed..].starts_with('{') {
+        let close = matching_paren(s_trim, consumed)?;
+        consumed = close + 1;
+    }
+    Ok((Some(HShape { dtype, dims }), lead + consumed))
+}
+
+fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
+    let inner = s.trim().trim_start_matches('{').trim_end_matches('}');
+    if inner.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    inner
+        .split(',')
+        .map(|d| d.trim().parse::<usize>().with_context(|| format!("bad index in '{s}'")))
+        .collect()
+}
+
+fn parse_literal(dtype: HDtype, payload: &str) -> Result<Literal> {
+    // strip all braces, split on commas: covers scalars, 1-D and nested
+    let flat: String = payload.chars().filter(|c| !matches!(c, '{' | '}')).collect();
+    let toks: Vec<&str> = flat.split(',').map(|t| t.trim()).filter(|t| !t.is_empty()).collect();
+    let parse_f32 = |t: &str| -> Result<f32> {
+        Ok(match t {
+            "inf" => f32::INFINITY,
+            "-inf" => f32::NEG_INFINITY,
+            "nan" => f32::NAN,
+            _ => t.parse::<f32>().with_context(|| format!("bad f32 literal '{t}'"))?,
+        })
+    };
+    Ok(match dtype {
+        HDtype::F32 => Literal::F32(toks.iter().map(|t| parse_f32(t)).collect::<Result<_>>()?),
+        HDtype::S32 => Literal::S32(
+            toks.iter()
+                .map(|t| t.parse::<i32>().with_context(|| format!("bad s32 '{t}'")))
+                .collect::<Result<_>>()?,
+        ),
+        HDtype::U32 => Literal::U32(
+            toks.iter()
+                .map(|t| t.parse::<u32>().with_context(|| format!("bad u32 '{t}'")))
+                .collect::<Result<_>>()?,
+        ),
+        HDtype::Pred => Literal::Pred(
+            toks.iter()
+                .map(|t| match *t {
+                    "true" | "1" => Ok(true),
+                    "false" | "0" => Ok(false),
+                    other => bail!("bad pred literal '{other}'"),
+                })
+                .collect::<Result<_>>()?,
+        ),
+    })
+}
+
+fn parse_padding(s: &str) -> Result<Vec<(i64, i64, i64)>> {
+    s.split('x')
+        .map(|dim| {
+            let parts: Vec<&str> = dim.split('_').collect();
+            let get = |i: usize| -> Result<i64> {
+                parts
+                    .get(i)
+                    .copied()
+                    .unwrap_or("0")
+                    .parse::<i64>()
+                    .with_context(|| format!("bad padding '{dim}'"))
+            };
+            if parts.len() < 2 || parts.len() > 3 {
+                bail!("bad padding spec '{dim}'");
+            }
+            Ok((get(0)?, get(1)?, if parts.len() == 3 { get(2)? } else { 0 }))
+        })
+        .collect()
+}
+
+fn parse_slice_spec(s: &str) -> Result<Vec<(usize, usize, usize)>> {
+    let inner = s.trim().trim_start_matches('{').trim_end_matches('}');
+    split_top(inner)
+        .into_iter()
+        .map(|part| {
+            let p = part.trim().trim_start_matches('[').trim_end_matches(']');
+            let nums: Vec<usize> = p
+                .split(':')
+                .map(|n| n.trim().parse::<usize>().with_context(|| format!("bad slice '{part}'")))
+                .collect::<Result<_>>()?;
+            Ok(match nums.len() {
+                2 => (nums[0], nums[1], 1),
+                3 => (nums[0], nums[1], nums[2]),
+                _ => bail!("bad slice spec '{part}'"),
+            })
+        })
+        .collect()
+}
+
+fn parse_instr(line: &str, by_name: &HashMap<String, usize>) -> Result<(bool, Instr)> {
+    let (is_root, rest) = match line.strip_prefix("ROOT ") {
+        Some(r) => (true, r),
+        None => (false, line),
+    };
+    let eq = rest.find('=').context("instruction missing '='")?;
+    let name = rest[..eq].trim().trim_start_matches('%').to_string();
+    let rhs = rest[eq + 1..].trim();
+
+    let (shape, consumed) = parse_shape_prefix(rhs)?;
+    let rhs = rhs[consumed..].trim_start();
+    let open = rhs.find('(').context("instruction missing opcode '('")?;
+    let opcode = rhs[..open].trim().to_string();
+    let close = matching_paren(rhs, open)?;
+    let operand_str = &rhs[open + 1..close];
+    let attr_str = rhs[close + 1..].trim_start_matches(',').trim();
+
+    let mut instr = Instr {
+        name,
+        shape,
+        opcode: opcode.clone(),
+        operands: Vec::new(),
+        dims: Vec::new(),
+        slice: Vec::new(),
+        pad_cfg: Vec::new(),
+        dot: None,
+        gather: None,
+        dyn_sizes: Vec::new(),
+        direction: None,
+        to_apply: None,
+        literal: None,
+        param_idx: None,
+        tuple_index: None,
+    };
+
+    match opcode.as_str() {
+        "parameter" => {
+            instr.param_idx =
+                Some(operand_str.trim().parse::<usize>().context("bad parameter number")?);
+        }
+        "constant" => {
+            let dtype = instr
+                .shape
+                .as_ref()
+                .context("tuple-shaped constants unsupported")?
+                .dtype;
+            instr.literal = Some(parse_literal(dtype, operand_str)?);
+        }
+        _ => {
+            for frag in split_top(operand_str) {
+                // fragment is `[shape ]%name`; take the %-token
+                let opname = frag
+                    .split_whitespace()
+                    .rev()
+                    .find(|t| t.starts_with('%'))
+                    .with_context(|| format!("operand '{frag}' has no %name"))?
+                    .trim_start_matches('%');
+                let idx = *by_name
+                    .get(opname)
+                    .with_context(|| format!("operand '%{opname}' not yet defined"))?;
+                instr.operands.push(idx);
+            }
+        }
+    }
+
+    let mut dot = DotDims::default();
+    let mut has_dot = false;
+    let mut gather = GatherDims::default();
+    let mut has_gather = false;
+    for attr in split_top(attr_str) {
+        if attr.is_empty() {
+            continue;
+        }
+        let (key, val) = match attr.split_once('=') {
+            Some(kv) => kv,
+            // flags like `sharding` we don't model
+            None => continue,
+        };
+        let (key, val) = (key.trim(), val.trim());
+        match key {
+            "dimensions" => instr.dims = parse_usize_list(val)?,
+            "iota_dimension" => instr.dims = vec![val.parse::<usize>().context("iota dim")?],
+            "index" => instr.tuple_index = Some(val.parse::<usize>().context("gte index")?),
+            "slice" => instr.slice = parse_slice_spec(val)?,
+            "padding" => instr.pad_cfg = parse_padding(val)?,
+            "dynamic_slice_sizes" => instr.dyn_sizes = parse_usize_list(val)?,
+            "direction" => instr.direction = Some(CmpDir::parse(val)?),
+            "to_apply" => instr.to_apply = Some(val.trim_start_matches('%').to_string()),
+            "lhs_batch_dims" => {
+                dot.lhs_batch = parse_usize_list(val)?;
+                has_dot = true;
+            }
+            "rhs_batch_dims" => {
+                dot.rhs_batch = parse_usize_list(val)?;
+                has_dot = true;
+            }
+            "lhs_contracting_dims" => {
+                dot.lhs_contract = parse_usize_list(val)?;
+                has_dot = true;
+            }
+            "rhs_contracting_dims" => {
+                dot.rhs_contract = parse_usize_list(val)?;
+                has_dot = true;
+            }
+            "offset_dims" => {
+                gather.offset_dims = parse_usize_list(val)?;
+                has_gather = true;
+            }
+            "collapsed_slice_dims" => {
+                gather.collapsed_slice_dims = parse_usize_list(val)?;
+                has_gather = true;
+            }
+            "start_index_map" => {
+                gather.start_index_map = parse_usize_list(val)?;
+                has_gather = true;
+            }
+            "index_vector_dim" => {
+                gather.index_vector_dim = val.parse().context("index_vector_dim")?;
+                has_gather = true;
+            }
+            "slice_sizes" => {
+                gather.slice_sizes = parse_usize_list(val)?;
+                has_gather = true;
+            }
+            // metadata we can safely ignore
+            "metadata" | "sharding" | "frontend_attributes" | "backend_config"
+            | "operand_precision" | "indices_are_sorted" | "entry_computation_layout" => {}
+            other => bail!("unsupported attribute '{other}' on op '{opcode}'"),
+        }
+    }
+    if has_dot {
+        instr.dot = Some(dot);
+    }
+    if has_gather {
+        instr.gather = Some(gather);
+    }
+    Ok((is_root, instr))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SMALL: &str = r#"HloModule small
+
+%reduce_add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add.1 = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main (p0: f32[2,3]) -> (f32[2]) {
+  %p0 = f32[2,3]{1,0} parameter(0)
+  %c0 = f32[] constant(0)
+  %half = f32[] constant(0.5)
+  %hb = f32[2,3] broadcast(f32[] %half), dimensions={}
+  %scaled = f32[2,3] multiply(f32[2,3] %p0, f32[2,3] %hb)
+  %red = f32[2] reduce(f32[2,3] %scaled, f32[] %c0), dimensions={1}, to_apply=%reduce_add
+  ROOT %t = (f32[2]) tuple(f32[2] %red)
+}
+"#;
+
+    #[test]
+    fn parses_module_structure() {
+        let m = HloModule::parse(SMALL).unwrap();
+        assert_eq!(m.name, "small");
+        assert_eq!(m.computations.len(), 2);
+        let e = m.entry_computation();
+        assert_eq!(e.name, "main");
+        assert_eq!(e.params.len(), 1);
+        assert_eq!(e.instrs.len(), 7);
+        let red = &e.instrs[5];
+        assert_eq!(red.opcode, "reduce");
+        assert_eq!(red.dims, vec![1]);
+        assert_eq!(red.to_apply.as_deref(), Some("reduce_add"));
+        assert_eq!(m.reduce_kind("reduce_add").unwrap(), ReduceKind::Add);
+        let root = &e.instrs[e.root];
+        assert_eq!(root.opcode, "tuple");
+        assert!(root.shape.is_none());
+    }
+
+    #[test]
+    fn parses_shapes_and_literals() {
+        let (s, used) = parse_shape_prefix("f32[4,64]{1,0} rest").unwrap();
+        let s = s.unwrap();
+        assert_eq!(s.dims, vec![4, 64]);
+        assert_eq!(&"f32[4,64]{1,0} rest"[used..], " rest");
+        assert_eq!(
+            parse_literal(HDtype::F32, "{ { 1, 2 }, { 3, 4.5 } }").unwrap(),
+            Literal::F32(vec![1.0, 2.0, 3.0, 4.5])
+        );
+        assert_eq!(parse_literal(HDtype::S32, "-7").unwrap(), Literal::S32(vec![-7]));
+        assert_eq!(
+            parse_literal(HDtype::F32, "-1e+30").unwrap(),
+            Literal::F32(vec![-1e30])
+        );
+    }
+
+    #[test]
+    fn parses_dot_and_slice_attrs() {
+        let text = r#"ENTRY %m (a: f32[2,3], b: f32[3,4]) -> f32[2,4] {
+  %a = f32[2,3] parameter(0)
+  %b = f32[3,4] parameter(1)
+  %s = f32[2,2] slice(f32[2,3] %a), slice={[0:2], [1:3]}
+  ROOT %d = f32[2,4] dot(f32[2,3] %a, f32[3,4] %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"#;
+        let m = HloModule::parse(text).unwrap();
+        let e = m.entry_computation();
+        assert_eq!(e.instrs[2].slice, vec![(0, 2, 1), (1, 3, 1)]);
+        let d = e.instrs[3].dot.clone().unwrap();
+        assert_eq!(d.lhs_contract, vec![1]);
+        assert_eq!(d.rhs_contract, vec![0]);
+        assert!(d.lhs_batch.is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(HloModule::parse("HloModule x\nwat").is_err());
+        assert!(HloModule::parse(
+            "ENTRY %m (a: f32[1]) -> f32[1] {\n  %a = f32[1] frobnicate(%z)\n}\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn padding_spec_parses() {
+        assert_eq!(
+            parse_padding("0_0x1_2x0_0_3").unwrap(),
+            vec![(0, 0, 0), (1, 2, 0), (0, 0, 3)]
+        );
+        assert!(parse_padding("nope").is_err());
+    }
+}

@@ -2,11 +2,12 @@
 //! `python/compile/aot.py`.  See DESIGN.md §3 (Layer 3 → runtime).
 
 pub mod engine;
+pub mod hlo;
 pub mod manifest;
 pub mod params;
 pub mod tensor;
 
-pub use engine::Engine;
+pub use engine::{BackendKind, Engine};
 pub use manifest::{artifacts_dir, Manifest, ModelDims, TensorSpec};
 pub use params::{init_policy, init_scalar, ParamSet, TrainState};
 pub use tensor::{Dtype, Tensor, TensorData};

@@ -1,0 +1,272 @@
+//! Golden-transcript tests for the pure-Rust HLO interpreter backend.
+//!
+//! For every committed fixture artifact with a golden file, inputs are
+//! re-derived from the deterministic recipe (`golden_input`, an exact
+//! mirror of `python/compile/fixturegen/goldens.py::golden_input` — change
+//! both or neither), evaluated through the engine, and compared against
+//! the committed outputs.  Goldens were computed **with jax**
+//! (`model.py`/`ref.py`) at fixture-generation time, so this tier
+//! differentially tests the interpreter against jax on every CI run
+//! without CI ever running Python.  `init_*` goldens come from the
+//! fixturegen evaluator mirror instead (jax PRNG lowers to a custom-call).
+//!
+//! A `pjrt`-only differential test additionally asserts interp == PJRT on
+//! the same artifacts; it is compiled out (not silently skipped) when the
+//! feature is absent.
+
+use std::path::PathBuf;
+
+use gcore::runtime::{Engine, Tensor};
+use gcore::util::json::Json;
+
+/// Walk up from the cwd to a checked-in fixture path.
+fn fixture_dir(rel: &str) -> PathBuf {
+    let mut dir = std::env::current_dir().unwrap();
+    loop {
+        let cand = dir.join("rust/tests/fixtures").join(rel);
+        if cand.exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            panic!("fixture path rust/tests/fixtures/{rel} not found from cwd");
+        }
+    }
+}
+
+fn hash(i: usize, j: usize) -> u32 {
+    ((i as u64)
+        .wrapping_mul(1_000_003)
+        .wrapping_add(j as u64) as u32)
+        .wrapping_mul(2_654_435_761)
+}
+
+fn unit(u: u32) -> f64 {
+    (u >> 8) as f64 / 16_777_216.0
+}
+
+/// Deterministic golden input for input slot `index` of an artifact.
+/// EXACT mirror of fixturegen's `golden_input` (integer hash + f64 math,
+/// rounded to f32 once).
+fn golden_input(
+    dims: &gcore::runtime::ModelDims,
+    index: usize,
+    name: &str,
+    shape: &[usize],
+    dtype: &str,
+) -> Tensor {
+    let n: usize = shape.iter().product();
+    let base = name.rsplit('/').next().unwrap_or(name);
+    match dtype {
+        "u32" => Tensor::scalar_u32(42),
+        "i32" => {
+            if base == "pos" {
+                return Tensor::scalar_i32(dims.prompt_len as i32);
+            }
+            let hi = if base.ends_with("idx") { dims.max_seq - 1 } else { dims.vocab };
+            let vals: Vec<i32> =
+                (0..n).map(|j| (hash(index, j) as usize % hi) as i32).collect();
+            Tensor::i32(shape.to_vec(), vals)
+        }
+        _ => {
+            let scalar = match base {
+                "step" => Some(3.0f32),
+                "lr" => Some(1e-3),
+                "clip_eps" => Some(0.2),
+                "kl_coef" => Some(0.03),
+                "ent_coef" => Some(0.01),
+                _ => None,
+            };
+            if let Some(v) = scalar {
+                return Tensor::scalar_f32(v);
+            }
+            let vals: Vec<f32> = (0..n)
+                .map(|j| {
+                    let h = hash(index, j);
+                    let u = unit(h);
+                    let v: f64 = if name.starts_with("v/") {
+                        1e-4 * u + 1e-8
+                    } else if base == "mask" {
+                        return if (h & 3) != 0 { 1.0f32 } else { 0.0 };
+                    } else if base == "old_logp" || base == "ref_logp" {
+                        -2.0 * u - 0.05
+                    } else if matches!(base, "adv" | "returns" | "q" | "k" | "v") {
+                        2.0 * u - 1.0
+                    } else if base == "cache_k" || base == "cache_v" {
+                        0.1 * u - 0.05
+                    } else if matches!(base, "ln1_g" | "ln2_g" | "lnf_g") {
+                        1.0 + 0.01 * (u - 0.5)
+                    } else {
+                        0.04 * u - 0.02
+                    };
+                    v as f32
+                })
+                .collect();
+            Tensor::f32(shape.to_vec(), vals)
+        }
+    }
+}
+
+fn golden_inputs(engine: &Engine, artifact: &str) -> Vec<Tensor> {
+    let spec = engine.manifest().artifact(artifact).unwrap().clone();
+    let dims = engine.manifest().dims.clone();
+    spec.inputs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| golden_input(&dims, i, &s.name, &s.shape, s.dtype.name()))
+        .collect()
+}
+
+struct Golden {
+    artifact: String,
+    atol: f64,
+    rtol: f64,
+    outputs: Vec<Tensor>,
+}
+
+fn load_golden(path: &std::path::Path) -> Golden {
+    let text = std::fs::read_to_string(path).unwrap();
+    let j = Json::parse(&text).unwrap_or_else(|e| panic!("{path:?}: {e:?}"));
+    let outputs = j
+        .req("outputs")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|o| {
+            let shape: Vec<usize> = o
+                .req("shape")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|d| d.as_usize().unwrap())
+                .collect();
+            let data = o.req("data").unwrap().as_arr().unwrap();
+            match o.req("dtype").unwrap().as_str().unwrap() {
+                "f32" => Tensor::f32(
+                    shape,
+                    data.iter().map(|v| v.as_f64().unwrap() as f32).collect(),
+                ),
+                "i32" => Tensor::i32(
+                    shape,
+                    data.iter().map(|v| v.as_i64().unwrap() as i32).collect(),
+                ),
+                "u32" => Tensor::u32(
+                    shape,
+                    data.iter().map(|v| v.as_i64().unwrap() as u32).collect(),
+                ),
+                other => panic!("bad golden dtype {other}"),
+            }
+        })
+        .collect();
+    Golden {
+        artifact: j.req("artifact").unwrap().as_str().unwrap().to_string(),
+        atol: j.req("atol").unwrap().as_f64().unwrap(),
+        rtol: j.req("rtol").unwrap().as_f64().unwrap(),
+        outputs,
+    }
+}
+
+fn assert_close(artifact: &str, idx: usize, got: &Tensor, want: &Tensor, atol: f64, rtol: f64) {
+    assert_eq!(got.shape, want.shape, "{artifact} output #{idx} shape");
+    assert_eq!(got.dtype(), want.dtype(), "{artifact} output #{idx} dtype");
+    match (&got.data, &want.data) {
+        (gcore::runtime::TensorData::F32(a), gcore::runtime::TensorData::F32(b)) => {
+            for (k, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                let (x, y) = (*x as f64, *y as f64);
+                assert!(
+                    (x - y).abs() <= atol + rtol * y.abs(),
+                    "{artifact} output #{idx}[{k}]: interp {x} vs golden {y} \
+                     (atol {atol}, rtol {rtol})"
+                );
+            }
+        }
+        _ => assert_eq!(got, want, "{artifact} output #{idx} (integer)"),
+    }
+}
+
+fn run_goldens(config: &str) {
+    let engine = Engine::try_load(config).unwrap_or_else(|| {
+        panic!(
+            "{config} artifact set not found — regenerate the checked-in \
+             fixtures with `python -m compile.fixturegen`"
+        )
+    });
+    let dir = fixture_dir(&format!("goldens/{config}"));
+    let mut checked = 0;
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension() == Some(std::ffi::OsStr::new("json")))
+        .collect();
+    entries.sort();
+    assert!(!entries.is_empty(), "no golden files in {dir:?}");
+    for path in entries {
+        let golden = load_golden(&path);
+        let inputs = golden_inputs(&engine, &golden.artifact);
+        let out = engine.run(&golden.artifact, &inputs).unwrap_or_else(|e| {
+            panic!("running '{}' on golden inputs: {e:#}", golden.artifact)
+        });
+        assert_eq!(
+            out.len(),
+            golden.outputs.len(),
+            "{}: output arity",
+            golden.artifact
+        );
+        for (i, (g, w)) in out.iter().zip(&golden.outputs).enumerate() {
+            assert_close(&golden.artifact, i, g, w, golden.atol, golden.rtol);
+        }
+        checked += 1;
+    }
+    println!("checked {checked} goldens for '{config}' (backend: {})", engine.backend_name());
+}
+
+/// Every synthetic-set artifact matches its jax-generated golden.
+#[test]
+fn synthetic_goldens_match_jax_references() {
+    run_goldens("synthetic");
+}
+
+/// Tiny-set spot goldens (small-output artifacts) match jax references.
+#[test]
+fn tiny_goldens_match_jax_references() {
+    run_goldens("tiny");
+}
+
+/// Re-running an artifact must be bitwise deterministic — the property the
+/// SPMD launch and the greedy-eval tests rely on.
+#[test]
+fn interpreter_is_bitwise_deterministic() {
+    let engine = Engine::try_load("synthetic").expect("fixture set missing");
+    for name in ["fwd_logits", "policy_grad", "init_policy"] {
+        let inputs = golden_inputs(&engine, name);
+        let a = engine.run(name, &inputs).unwrap();
+        let b = engine.run(name, &inputs).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.raw_bytes(), y.raw_bytes(), "{name} not deterministic");
+        }
+    }
+}
+
+/// Differential interp == PJRT on the fixture artifacts.  Compiled only
+/// with the `pjrt` feature — with the interpreter always available there
+/// is no runtime skip left, and without the feature the comparison target
+/// itself does not exist.
+#[cfg(feature = "pjrt")]
+#[test]
+fn interp_matches_pjrt_on_fixture_artifacts() {
+    use gcore::runtime::engine::BackendKind;
+    let dir = fixture_dir("artifacts/synthetic");
+    let interp = Engine::from_dir_with_backend(&dir, BackendKind::Interp).unwrap();
+    let pjrt = Engine::from_dir_with_backend(&dir, BackendKind::Pjrt).unwrap();
+    let names: Vec<String> = interp.manifest().artifacts.keys().cloned().collect();
+    for name in names {
+        let inputs = golden_inputs(&interp, &name);
+        let a = interp.run(&name, &inputs).unwrap();
+        let b = pjrt.run(&name, &inputs).unwrap();
+        assert_eq!(a.len(), b.len(), "{name}");
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_close(&name, i, x, y, 5e-5, 5e-4);
+        }
+    }
+}

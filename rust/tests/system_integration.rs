@@ -28,15 +28,17 @@ fn tmpdir(name: &str) -> std::path::PathBuf {
     d
 }
 
-/// None (⇒ the test self-skips) when the tiny artifact set isn't built or
-/// this build has no PJRT backend (`pjrt` feature off).
-fn try_engine() -> Option<Arc<Engine>> {
+/// Loads the tiny artifact set.  PANICS when the set is missing: the
+/// fixture set is checked in (rust/tests/fixtures/artifacts/tiny) and the
+/// interpreter backend is always available, so there is no legitimate
+/// skip reason left — the tier fails loudly if either regresses.
+fn try_engine() -> Arc<Engine> {
     match Engine::try_load("tiny") {
-        Some(e) => Some(Arc::new(e)),
-        None => {
-            eprintln!("skipping: artifacts/tiny not built or pjrt backend unavailable");
-            None
-        }
+        Some(e) => Arc::new(e),
+        None => panic!(
+            "tiny artifact set not found — regenerate the checked-in \
+             fixtures with `python -m compile.fixturegen`"
+        ),
     }
 }
 
@@ -44,7 +46,7 @@ fn try_engine() -> Option<Arc<Engine>> {
 fn checkpoint_resume_continues_training() {
     // Train 2 steps, checkpoint, restore into a FRESH controller, verify
     // the params match bit-exactly and training can continue.
-    let Some(engine) = try_engine() else { return };
+    let engine = try_engine();
     let cfg = RunConfig { steps: 2, sft_steps: 2, ..RunConfig::default() };
     let policy = init_policy(&engine, 1).unwrap();
     let mut c = Controller::new(
@@ -220,7 +222,7 @@ fn config_file_roundtrip_through_launcher_path() {
 
 #[test]
 fn controller_rejects_bad_group_size() {
-    let Some(engine) = try_engine() else { return };
+    let engine = try_engine();
     let cfg = RunConfig { group_size: 3, ..RunConfig::default() }; // 4 % 3 != 0
     let policy = init_policy(&engine, 1).unwrap();
     let err = Controller::new(
@@ -243,7 +245,7 @@ fn tcp_collective_launch_bitwise_matches_inproc_threads() {
     // produce a per-step loss trajectory BIT-IDENTICAL to the in-proc
     // thread launch of the same config/seed — the transport may not perturb
     // training by a single ULP.
-    let Some(_e) = try_engine() else { return };
+    let _e = try_engine();
     let cfg = RunConfig {
         artifacts: "tiny".into(),
         world: 4,
@@ -303,7 +305,7 @@ fn ring_collective_launch_bitwise_matches_inproc_threads() {
     // loss trajectory BIT-IDENTICAL to the in-proc thread launch of the
     // same config/seed — rank-order chunked accumulation may not perturb
     // training by a single ULP.
-    let Some(_e) = try_engine() else { return };
+    let _e = try_engine();
     let cfg = RunConfig {
         artifacts: "tiny".into(),
         world: 4,
