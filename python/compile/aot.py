@@ -226,6 +226,13 @@ def build_manifest(cfg: ModelConfig, artifacts: dict) -> dict:
         "policy_tree": policy_tree,
         "scalar_tree": scalar_tree,
         "artifacts": artifacts,
+        # parameters baked into the fused generate_rollout artifact; the
+        # Rust generation gate compares SamplerConfig against this block
+        # and errors loudly on a mismatch
+        "sampler": {
+            "top_k": model.ROLLOUT_TOP_K,
+            "stop_at_eos": model.ROLLOUT_STOP_AT_EOS,
+        },
         "perf_estimates": {
             "attn_vmem_bytes_per_grid_step": vmem_footprint_bytes(
                 cfg.block_q, cfg.block_k, Dh

@@ -37,6 +37,13 @@ from .kernels import ref
 
 Params = dict[str, Any]
 
+# Sampler parameters compiled into `generate_rollout`.  The manifest
+# records them (aot.build_manifest "sampler" block) so the Rust runtime
+# can refuse a SamplerConfig that asks for anything else instead of
+# silently decoding a differently-distributed rollout.
+ROLLOUT_TOP_K = 16
+ROLLOUT_STOP_AT_EOS = True
+
 
 # ===========================================================================
 # Initialisation
@@ -225,7 +232,7 @@ def generate_rollout(cfg: ModelConfig, params: Params, prompts: jax.Array,
     B = prompts.shape[0]
     P, S, V = cfg.prompt_len, cfg.max_seq, cfg.vocab
     EOS, PAD = 10, 0
-    top_k = 16  # matches SamplerConfig::default on the Rust side
+    top_k = ROLLOUT_TOP_K  # recorded in the manifest's sampler block
 
     logits, ck, cv = forward_cached(
         cfg, params,

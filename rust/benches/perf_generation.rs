@@ -1,7 +1,9 @@
-//! §Perf microbench (EXPERIMENTS.md): fused `generate_rollout` vs the
-//! per-token `prefill`/`decode_step` generation path, per artifact set.
+//! §Perf microbench (EXPERIMENTS.md): the production `generate` entry
+//! (fused `generate_rollout` when the set carries it, the continuous-
+//! batching scheduler otherwise) vs the stepwise reference decoder, per
+//! artifact set.
 use std::sync::Arc;
-use gcore::coordinator::generation::{generate, SamplerConfig};
+use gcore::coordinator::generation::{self, generate, SamplerConfig};
 use gcore::data::tasks::{TaskGen, TaskKind};
 use gcore::runtime::{init_policy, Engine};
 use gcore::util::rng::Rng;
@@ -22,15 +24,34 @@ fn main() -> anyhow::Result<()> {
             .map(|t| t.prompt_tokens(d.prompt_len).unwrap())
             .collect();
         let mut rng = Rng::new(2);
-        let fused_cfg = SamplerConfig::default(); // top_k 16 → fused path
-        let step_cfg = SamplerConfig { top_k: 15, ..SamplerConfig::default() };
-        generate(&e, &params, &prompts, &fused_cfg, &mut rng)?; // compile
-        generate(&e, &params, &prompts, &step_cfg, &mut rng)?;
-        for (label, cfg) in [("fused", &fused_cfg), ("stepwise", &step_cfg)] {
+        // the manifest's baked sampler params (or the defaults) keep the
+        // production lane on its fast path; the reference lane calls the
+        // stepwise decoder directly instead of spoofing a config mismatch
+        let cfg = match e.manifest().sampler {
+            Some(b) => SamplerConfig { top_k: b.top_k, stop_at_eos: b.stop_at_eos, ..SamplerConfig::default() },
+            None => SamplerConfig::default(),
+        };
+        let prod_label = if e.manifest().artifacts.contains_key("generate_rollout") {
+            "fused"
+        } else {
+            "scheduled"
+        };
+        generate(&e, &params, &prompts, &cfg, &mut rng)?; // compile
+        generation::generate_stepwise(&e, &params, &prompts, &cfg, &mut rng)?;
+        type GenFn = fn(
+            &Engine,
+            &gcore::runtime::ParamSet,
+            &[Vec<i32>],
+            &SamplerConfig,
+            &mut Rng,
+        ) -> anyhow::Result<generation::GenOutput>;
+        let lanes: [(&str, GenFn); 2] =
+            [(prod_label, generate), ("stepwise", generation::generate_stepwise)];
+        for (label, f) in lanes {
             let t0 = std::time::Instant::now();
             let n = 8;
             for _ in 0..n {
-                std::hint::black_box(generate(&e, &params, &prompts, cfg, &mut rng)?);
+                std::hint::black_box(f(&e, &params, &prompts, &cfg, &mut rng)?);
             }
             let per = t0.elapsed().as_secs_f64() / n as f64;
             println!(

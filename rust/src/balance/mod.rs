@@ -82,6 +82,21 @@ pub fn assign_balanced(batch: &[usize], costs: &[f64], n_ranks: usize) -> RankAs
     RankAssignment { per_rank }
 }
 
+/// Grace budget for long-tail rollout cancellation (paper §3.2): once the
+/// dynamic-sampling round has enough finished sequences, the stragglers'
+/// remaining decode steps are pure tail cost — the same waste
+/// `waste_fraction` measures for training steps.  Scale the configured
+/// grace window by the live fraction of the decode batch: a nearly-full
+/// batch amortizes each lockstep step well (generous grace), a nearly
+/// empty one pays full price per straggler token (cancel promptly).
+pub fn cancel_grace_steps(grace: usize, live: usize, batch: usize) -> usize {
+    if batch == 0 || live == 0 {
+        return 0;
+    }
+    let frac = (live as f64 / batch as f64).min(1.0);
+    (grace as f64 * frac).ceil() as usize
+}
+
 /// Epoch plan: bucket → shuffle (paper's distribution-bias fix).
 /// Returns the sequence of global batches (each a list of sample indices).
 pub fn plan_epoch(
@@ -254,6 +269,21 @@ mod tests {
         let monotone = means.windows(2).all(|w| w[0] <= w[1])
             || means.windows(2).all(|w| w[0] >= w[1]);
         assert!(!monotone, "bucket order must be shuffled: {means:?}");
+    }
+
+    #[test]
+    fn cancel_grace_scales_with_utilization() {
+        // full batch: full grace; half batch: half grace (ceil); an idle
+        // or degenerate batch cancels immediately
+        assert_eq!(cancel_grace_steps(8, 4, 4), 8);
+        assert_eq!(cancel_grace_steps(8, 2, 4), 4);
+        assert_eq!(cancel_grace_steps(8, 1, 4), 2);
+        assert_eq!(cancel_grace_steps(7, 1, 3), 3); // ceil(7/3)
+        assert_eq!(cancel_grace_steps(8, 0, 4), 0);
+        assert_eq!(cancel_grace_steps(8, 1, 0), 0);
+        assert_eq!(cancel_grace_steps(0, 3, 4), 0);
+        // live > batch is clamped, not amplified
+        assert_eq!(cancel_grace_steps(8, 9, 4), 8);
     }
 
     #[test]

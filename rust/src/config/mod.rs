@@ -66,6 +66,18 @@ pub struct RunConfig {
     // -- dynamic sampling (DAPO) --------------------------------------------
     pub dynamic_sampling: bool,
     pub max_resample_rounds: usize,
+    // -- rollout scheduler (continuous batching / paged KV) ------------------
+    /// token positions per KV-cache page
+    pub kv_page_size: usize,
+    /// page-pool capacity in pages (0 = auto-size: one full wave never
+    /// blocks on admission)
+    pub kv_cache_pages: usize,
+    /// preempt straggler rollouts once the dynamic-sampling round has
+    /// enough finished sequences (requires `dynamic_sampling`)
+    pub rollout_cancel: bool,
+    /// decode-step grace window before preemption (scaled down by batch
+    /// utilization — balance::cancel_grace_steps)
+    pub rollout_cancel_grace: usize,
     // -- warm starts ---------------------------------------------------------
     pub sft_steps: usize,
     pub verifier_sft_steps: usize,
@@ -111,6 +123,10 @@ impl Default for RunConfig {
             verdict_mode: VerdictMode::Logit,
             dynamic_sampling: false,
             max_resample_rounds: 4,
+            kv_page_size: 16,
+            kv_cache_pages: 0,
+            rollout_cancel: false,
+            rollout_cancel_grace: 8,
             sft_steps: 30,
             verifier_sft_steps: 60,
             bt_train_steps: 40,
@@ -164,6 +180,14 @@ impl RunConfig {
                     cfg.dynamic_sampling = val.as_bool().context("bool")?
                 }
                 "max_resample_rounds" => cfg.max_resample_rounds = req_usize(val, key)?,
+                "kv_page_size" => cfg.kv_page_size = req_usize(val, key)?,
+                "kv_cache_pages" => cfg.kv_cache_pages = req_usize(val, key)?,
+                "rollout_cancel" => {
+                    cfg.rollout_cancel = val.as_bool().context("bool")?
+                }
+                "rollout_cancel_grace" => {
+                    cfg.rollout_cancel_grace = req_usize(val, key)?
+                }
                 "sft_steps" => cfg.sft_steps = req_usize(val, key)?,
                 "verifier_sft_steps" => cfg.verifier_sft_steps = req_usize(val, key)?,
                 "bt_train_steps" => cfg.bt_train_steps = req_usize(val, key)?,
@@ -262,6 +286,10 @@ impl RunConfig {
         );
         put("dynamic_sampling", Json::Bool(self.dynamic_sampling));
         put("max_resample_rounds", Json::Num(self.max_resample_rounds as f64));
+        put("kv_page_size", Json::Num(self.kv_page_size as f64));
+        put("kv_cache_pages", Json::Num(self.kv_cache_pages as f64));
+        put("rollout_cancel", Json::Bool(self.rollout_cancel));
+        put("rollout_cancel_grace", Json::Num(self.rollout_cancel_grace as f64));
         put("sft_steps", Json::Num(self.sft_steps as f64));
         put("verifier_sft_steps", Json::Num(self.verifier_sft_steps as f64));
         put("bt_train_steps", Json::Num(self.bt_train_steps as f64));
@@ -311,6 +339,12 @@ impl RunConfig {
         }
         if self.allreduce_bucket_bytes < 4 {
             bail!("allreduce_bucket_bytes must be >= 4 (one f32 element)");
+        }
+        if self.kv_page_size == 0 {
+            bail!("kv_page_size must be >= 1");
+        }
+        if self.rollout_cancel && !self.dynamic_sampling {
+            bail!("rollout_cancel requires dynamic_sampling (cancelled groups are re-sampled)");
         }
         Ok(())
     }
@@ -416,6 +450,28 @@ mod tests {
         // and the default too
         let d = RunConfig::default();
         assert_eq!(RunConfig::from_json(&d.to_json()).unwrap(), d);
+    }
+
+    #[test]
+    fn rollout_scheduler_knobs_roundtrip_and_validate() {
+        let cfg = RunConfig {
+            dynamic_sampling: true,
+            kv_page_size: 8,
+            kv_cache_pages: 64,
+            rollout_cancel: true,
+            rollout_cancel_grace: 3,
+            ..RunConfig::default()
+        };
+        assert_eq!(RunConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+        for bad in [
+            r#"{"kv_page_size":0}"#,
+            // cancellation without dynamic sampling has no re-sampling path
+            r#"{"rollout_cancel":true}"#,
+        ] {
+            assert!(RunConfig::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+        let j = Json::parse(r#"{"rollout_cancel":true,"dynamic_sampling":true}"#).unwrap();
+        assert!(RunConfig::from_json(&j).unwrap().rollout_cancel);
     }
 
     #[test]

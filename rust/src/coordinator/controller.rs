@@ -21,6 +21,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::RunConfig;
 use crate::coordinator::collective::Collective;
 use crate::coordinator::generation::{self, GenOutput, SamplerConfig};
+use crate::coordinator::rollout;
 use crate::coordinator::sampling;
 use crate::data::tasks::{Task, TaskGen};
 use crate::data::tokenizer;
@@ -114,6 +115,17 @@ impl Controller {
         }
     }
 
+    /// Scheduler options derived from the run config (page geometry +
+    /// pool size for the paged KV cache).
+    fn rollout_opts(&self, cancel: Option<rollout::CancelPolicy>) -> rollout::RolloutOptions {
+        rollout::RolloutOptions {
+            page_size: self.cfg.kv_page_size,
+            pool_pages: self.cfg.kv_cache_pages,
+            cancel,
+            ..rollout::RolloutOptions::default()
+        }
+    }
+
     /// Freeze the current policy as the KL reference (post-SFT).
     pub fn freeze_reference(&mut self) {
         self.ref_params = self.state.params.clone();
@@ -188,6 +200,50 @@ impl Controller {
         Ok((tasks, gen, rewards))
     }
 
+    /// One generation+rewarding round through the rollout scheduler with
+    /// long-tail preemption armed: once `needed_rows` sequences finish,
+    /// stragglers get a utilization-scaled grace window and are then
+    /// cancelled, their KV pages reclaimed.  Returns per-row cancelled
+    /// flags so DAPO can exclude preempted groups.
+    #[allow(clippy::type_complexity)]
+    fn rollout_round_cancel(
+        &mut self,
+        needed_rows: usize,
+    ) -> Result<(Vec<Task>, GenOutput, Vec<f32>, Vec<bool>)> {
+        let dims = self.engine.manifest().dims.clone();
+        let (b, p, g) = (dims.batch, dims.prompt_len, self.cfg.group_size);
+        let n_groups = b / g;
+        let mut tasks = Vec::with_capacity(b);
+        for _ in 0..n_groups {
+            let t = self.taskgen.sample();
+            for _ in 0..g {
+                tasks.push(t.clone());
+            }
+        }
+        let requests: Vec<rollout::RolloutRequest> = tasks
+            .iter()
+            .enumerate()
+            .map(|(id, t)| {
+                Ok(rollout::RolloutRequest { id, prompt: t.prompt_tokens(p)? })
+            })
+            .collect::<Result<_>>()?;
+        let opts = self.rollout_opts(Some(rollout::CancelPolicy {
+            needed: needed_rows.min(b),
+            grace_steps: self.cfg.rollout_cancel_grace,
+        }));
+        let engine = self.engine.clone();
+        let scfg = self.sampler_cfg();
+        let run = self.timers.time("1_generation", || {
+            rollout::run(&engine, &self.state.params, &requests, &scfg, &mut self.rng, &opts)
+        })?;
+        let cancelled: Vec<bool> = run.results.iter().map(|r| r.cancelled).collect();
+        let gen = generation::gen_output_from(run.results);
+        let rewards = self.timers.time("2_rewarding", || {
+            self.rewarder.score(&engine, &tasks, &gen)
+        })?;
+        Ok((tasks, gen, rewards, cancelled))
+    }
+
     /// Stages 1-2 with DAPO dynamic sampling: locally regenerate until a
     /// full batch of informative groups is collected (paper §3.2) or the
     /// round budget is exhausted (then pad with the freshest groups).
@@ -210,8 +266,19 @@ impl Controller {
 
         while acc_tasks.len() < b && rounds < self.cfg.max_resample_rounds {
             rounds += 1;
-            let (tasks, gen, rewards) = self.rollout_round()?;
-            let keep = sampling::dapo_filter(&rewards, g)?;
+            let (tasks, gen, rewards, keep) = if self.cfg.rollout_cancel {
+                // long-tail preemption: stop decoding stragglers once the
+                // round has produced the rows this batch still needs;
+                // preempted groups are excluded from acceptance
+                let needed = b - acc_tasks.len();
+                let (tasks, gen, rewards, cancelled) = self.rollout_round_cancel(needed)?;
+                let keep = sampling::dapo_filter_with_cancelled(&rewards, g, &cancelled)?;
+                (tasks, gen, rewards, keep)
+            } else {
+                let (tasks, gen, rewards) = self.rollout_round()?;
+                let keep = sampling::dapo_filter(&rewards, g)?;
+                (tasks, gen, rewards, keep)
+            };
             for &gi in &keep {
                 if acc_tasks.len() >= b {
                     break;

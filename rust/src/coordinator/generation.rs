@@ -11,6 +11,8 @@ use anyhow::{bail, Result};
 
 use crate::data::tokenizer::{EOS, PAD};
 use crate::runtime::engine::Engine;
+
+use super::rollout;
 use crate::runtime::params::ParamSet;
 use crate::runtime::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -44,9 +46,19 @@ pub struct GenOutput {
 ///
 /// Fast path: when the artifact set carries `generate_rollout` (the fused
 /// prefill+scan+sample module — see EXPERIMENTS.md §Perf) and the sampler
-/// is stochastic with the baked top-k, the whole rollout is ONE engine
-/// call with no per-token KV-cache round-trips.  Greedy eval and custom
-/// top-k fall back to the per-token `prefill`/`decode_step` path.
+/// is stochastic, the whole rollout is ONE engine call with no per-token
+/// KV-cache round-trips.  The fused module bakes its sampler parameters
+/// in at trace time; the manifest records them (`"sampler"` block) and a
+/// `cfg` asking for anything else is an ERROR — silently decoding a
+/// differently-distributed stepwise rollout is exactly the bug this gate
+/// replaces.  Greedy (`temperature <= 0`) is an explicit argmax request
+/// the stochastic fused module cannot express, so it always takes the
+/// per-token path.
+///
+/// The per-token path runs on the continuous-batching rollout scheduler
+/// (`coordinator::rollout`) over a paged KV cache — bit-identical to
+/// [`generate_stepwise`] for the same seed (pinned by differential
+/// tests).
 pub fn generate(
     engine: &Engine,
     params: &ParamSet,
@@ -54,14 +66,107 @@ pub fn generate(
     cfg: &SamplerConfig,
     rng: &mut Rng,
 ) -> Result<GenOutput> {
-    let fused_ok = cfg.temperature > 0.0
-        && cfg.top_k == 16 // the top-k baked into the artifact
-        && cfg.stop_at_eos
-        && engine.manifest().artifacts.contains_key("generate_rollout");
-    if fused_ok {
+    let manifest = engine.manifest();
+    if cfg.temperature > 0.0 && manifest.artifacts.contains_key("generate_rollout") {
+        let Some(baked) = manifest.sampler else {
+            bail!(
+                "artifact set '{}' carries generate_rollout but its manifest \
+                 has no \"sampler\" block recording the baked sampler \
+                 parameters — regenerate the set (aot.py records top_k / \
+                 stop_at_eos now)",
+                manifest.dims.name
+            );
+        };
+        if cfg.top_k != baked.top_k || cfg.stop_at_eos != baked.stop_at_eos {
+            bail!(
+                "sampler config (top_k={}, stop_at_eos={}) does not match the \
+                 parameters baked into this set's generate_rollout artifact \
+                 (top_k={}, stop_at_eos={}); use the baked values, or decode \
+                 greedily (temperature <= 0) for the per-token path",
+                cfg.top_k,
+                cfg.stop_at_eos,
+                baked.top_k,
+                baked.stop_at_eos
+            );
+        }
         return generate_fused(engine, params, prompts, cfg, rng);
     }
-    generate_stepwise(engine, params, prompts, cfg, rng)
+    generate_scheduled(engine, params, prompts, cfg, rng)
+}
+
+/// Route a fixed `[batch]` of prompts through the continuous-batching
+/// rollout scheduler (paged KV cache, immediate EOS retirement).  Same
+/// contract and same bits as [`generate_stepwise`].
+fn generate_scheduled(
+    engine: &Engine,
+    params: &ParamSet,
+    prompts: &[Vec<i32>],
+    cfg: &SamplerConfig,
+    rng: &mut Rng,
+) -> Result<GenOutput> {
+    let dims = engine.manifest().dims.clone();
+    let (b, p) = (dims.batch, dims.prompt_len);
+    if prompts.len() != b || prompts.iter().any(|r| r.len() != p) {
+        bail!(
+            "prompts must be [{b}][{p}], got [{}][{}]",
+            prompts.len(),
+            prompts.first().map(|r| r.len()).unwrap_or(0)
+        );
+    }
+    let requests: Vec<rollout::RolloutRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(id, prompt)| rollout::RolloutRequest { id, prompt: prompt.clone() })
+        .collect();
+    let run = rollout::run(
+        engine,
+        params,
+        &requests,
+        cfg,
+        rng,
+        &rollout::RolloutOptions::default(),
+    )?;
+    Ok(gen_output_from(run.results))
+}
+
+/// Adapt scheduler results (request order) into the training-side
+/// `GenOutput` layout.
+pub fn gen_output_from(results: Vec<rollout::RolloutResult>) -> GenOutput {
+    let mut rows = Vec::with_capacity(results.len());
+    let mut gen_lens = Vec::with_capacity(results.len());
+    let mut masks = Vec::with_capacity(results.len());
+    for r in results {
+        rows.push(r.row);
+        gen_lens.push(r.gen_len);
+        masks.push(r.mask);
+    }
+    GenOutput { rows, gen_lens, masks }
+}
+
+/// The glen/mask/PAD accounting rule every generation path must agree
+/// on: the generated span runs to the first EOS inclusive (when stopping
+/// at EOS), everything after it is PAD, and the loss mask covers exactly
+/// the span.  The fused path derives its accounting with this; the
+/// stepwise/scheduler paths account incrementally and are pinned against
+/// it by tests.
+pub fn account_row(row: &mut [i32], p: usize, stop_at_eos: bool) -> (usize, Vec<f32>) {
+    let s = row.len();
+    let glen = if stop_at_eos {
+        match row[p..].iter().position(|&t| t == EOS) {
+            Some(i) => i + 1,
+            None => s - p,
+        }
+    } else {
+        s - p
+    };
+    for x in row[p + glen..].iter_mut() {
+        *x = PAD;
+    }
+    let mut mask = vec![0.0f32; s];
+    for x in mask.iter_mut().skip(p).take(glen) {
+        *x = 1.0;
+    }
+    (glen, mask)
 }
 
 /// One-call rollout via the fused `generate_rollout` artifact.
@@ -90,20 +195,9 @@ fn generate_fused(
     let mut masks = Vec::with_capacity(b);
     for row_i in 0..b {
         let mut row = data[row_i * s..(row_i + 1) * s].to_vec();
-        // gen length = up to and including the first EOS; the artifact
-        // emits PAD after EOS by construction
-        let gen = &row[p..];
-        let glen = match gen.iter().position(|&t| t == EOS) {
-            Some(i) => i + 1,
-            None => s - p,
-        };
-        for x in row[p + glen..].iter_mut() {
-            *x = PAD;
-        }
-        let mut m = vec![0.0f32; s];
-        for x in m.iter_mut().skip(p).take(glen) {
-            *x = 1.0;
-        }
+        // shared accounting rule: gen length = up to and including the
+        // first EOS; the artifact emits PAD after EOS by construction
+        let (glen, m) = account_row(&mut row, p, cfg.stop_at_eos);
         rows.push(row);
         gen_lens.push(glen);
         masks.push(m);
@@ -111,8 +205,11 @@ fn generate_fused(
     Ok(GenOutput { rows, gen_lens, masks })
 }
 
-/// Per-token decode loop (`prefill` + `decode_step`) — the flexible path.
-fn generate_stepwise(
+/// Per-token decode loop (`prefill` + `decode_step`) over one monolithic
+/// dense KV cache.  Kept public as the reference implementation the
+/// scheduler's differential tests pin bit-identity against; production
+/// traffic goes through `generate` → the rollout scheduler.
+pub fn generate_stepwise(
     engine: &Engine,
     params: &ParamSet,
     prompts: &[Vec<i32>],

@@ -10,6 +10,9 @@
 //!   exactly-once RPC stack: O(payload) bytes per rank, independent of
 //!   world size (no rank-0 bottleneck);
 //! * `generation` — the stage-1 generation engine (KV-cached sampling);
+//! * `rollout` — the continuous-batching rollout scheduler over a paged
+//!   KV cache (admission waves, token-granular retirement, prefix reuse,
+//!   long-tail cancellation);
 //! * `sampling` — GRPO/GAE advantages + DAPO dynamic-sampling filter (§3.2);
 //! * `pretrain` — BT-reward and generative-verifier pre-training (§5);
 //! * `workflow` — the 4-stage RLHF workflow definition (§2.2).
@@ -19,6 +22,7 @@ pub mod controller;
 pub mod generation;
 pub mod pretrain;
 pub mod ring_collective;
+pub mod rollout;
 pub mod rpc_collective;
 pub mod sampling;
 pub mod single;

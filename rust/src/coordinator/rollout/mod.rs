@@ -1,0 +1,501 @@
+//! Continuous-batching rollout scheduler over the paged KV cache (the
+//! generation data plane the paper's dynamic-sampling and long-tail
+//! claims ride on; OpenRLHF / HybridFlow bolt on vLLM for the same job).
+//!
+//! The `prefill`/`decode_step` artifacts fix `[batch]` and share one
+//! scalar `pos` across the batch, so scheduling is *wave-granular at
+//! admission* (up to `batch` sequences prefill together) and
+//! *token-granular at retirement*: a row that hits EOS is retired
+//! immediately — its pages are reclaimed mid-wave, it stops consuming
+//! RNG draws, and the long-tail cancellation policy can preempt the
+//! stragglers that remain (see `CancelPolicy`).  A per-row-position
+//! `decode_step` variant that would let fresh sequences join a wave
+//! mid-flight is deliberately deferred (ROADMAP).
+//!
+//! Bit-identity contract: with an ample pool and no cancellation, a run
+//! over exactly `batch` requests consumes the RNG in the same order and
+//! produces the same rows as `generation::generate_stepwise` — pinned by
+//! the differential tests in rust/tests/rollout_integration.rs.
+
+pub mod paged;
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::balance;
+use crate::data::tokenizer::{EOS, PAD};
+use crate::runtime::engine::Engine;
+use crate::runtime::params::ParamSet;
+use crate::runtime::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::generation::SamplerConfig;
+use paged::{KvSpec, PagedKvCache};
+
+/// Token positions per KV page when the caller does not size it
+/// (`RunConfig::kv_page_size` mirrors this default).
+pub const DEFAULT_PAGE_SIZE: usize = 16;
+
+#[derive(Debug, Clone)]
+pub struct RolloutRequest {
+    /// caller-visible identity; results come back in request order
+    pub id: usize,
+    pub prompt: Vec<i32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct RolloutResult {
+    pub id: usize,
+    /// [max_seq] prompt + generated + PAD
+    pub row: Vec<i32>,
+    pub gen_len: usize,
+    /// loss mask over [max_seq]: 1.0 on generated tokens
+    pub mask: Vec<f32>,
+    /// preempted by the cancellation policy before finishing
+    pub cancelled: bool,
+}
+
+/// Long-tail straggler preemption (paper §3.2): once `needed` sequences
+/// have finished, surviving rows get a grace window — scaled down by
+/// `balance::cancel_grace_steps` as batch utilization drops — and are
+/// then cancelled, their pages reclaimed.
+#[derive(Debug, Clone, Copy)]
+pub struct CancelPolicy {
+    pub needed: usize,
+    pub grace_steps: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct RolloutOptions {
+    /// token positions per page
+    pub page_size: usize,
+    /// page-pool capacity; 0 = auto-size so a full wave never blocks
+    pub pool_pages: usize,
+    /// reuse resident prompt pages across requests with a common prefix
+    pub share_prefixes: bool,
+    /// feed `decode_step` caches gathered from pages instead of passing
+    /// the engine's dense output straight back — proves the paged store
+    /// is the source of truth (differential tests run both modes)
+    pub paged_feedback: bool,
+    pub cancel: Option<CancelPolicy>,
+}
+
+impl Default for RolloutOptions {
+    fn default() -> Self {
+        RolloutOptions {
+            page_size: DEFAULT_PAGE_SIZE,
+            pool_pages: 0,
+            share_prefixes: true,
+            paged_feedback: false,
+            cancel: None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerStats {
+    pub waves: usize,
+    pub prefill_calls: usize,
+    pub decode_calls: usize,
+    /// slot-steps where the slot held a live (not yet retired) sequence
+    pub live_slot_steps: usize,
+    /// total slot-steps paid (batch × decode calls) — the lockstep cost
+    pub slot_steps: usize,
+    pub generated_tokens: usize,
+    pub finished: usize,
+    pub cancelled: usize,
+    /// admissions deferred to a later wave by page-pool pressure
+    pub admission_waits: usize,
+    pub peak_pages: usize,
+    pub shared_page_hits: usize,
+    pub page_evictions: usize,
+}
+
+pub struct RolloutRun {
+    /// one per request, in request order
+    pub results: Vec<RolloutResult>,
+    pub stats: SchedulerStats,
+}
+
+/// Per-slot in-flight sequence state.
+struct Slot {
+    req: usize,
+    row: Vec<i32>,
+    gen_len: usize,
+    done: bool,
+    cancelled: bool,
+    /// page table: page ids for page-slots 0..pages.len()
+    pages: Vec<usize>,
+    /// leading pages mapped from the share index (read-only)
+    shared: usize,
+    /// reserved-but-unallocated pages
+    reserved: usize,
+    /// positions written into the paged store
+    written: usize,
+}
+
+/// Engine dense-cache layout [L, B, H, S, D] (row-major).
+struct DenseLayout {
+    batch: usize,
+    spec: KvSpec,
+}
+
+impl DenseLayout {
+    fn col_offset(&self, layer: usize, row: usize, head: usize, pos: usize) -> usize {
+        (((layer * self.batch + row) * self.spec.heads + head) * self.spec.max_seq + pos)
+            * self.spec.d_head
+    }
+}
+
+/// Copy dense columns `[start_pos, start_pos + n)` of `row` into a page.
+fn scatter_cols(
+    cache: &mut PagedKvCache,
+    lay: &DenseLayout,
+    page: usize,
+    row: usize,
+    start_pos: usize,
+    n: usize,
+    dense: (&[f32], &[f32]),
+) {
+    let spec = *cache.spec();
+    let d = spec.d_head;
+    let (pk, pv) = cache.page_mut(page);
+    for l in 0..spec.layers {
+        for h in 0..spec.heads {
+            for i in 0..n {
+                let pos = start_pos + i;
+                let po = spec.page_offset(l, h, pos % spec.page_size);
+                let co = lay.col_offset(l, row, h, pos);
+                pk[po..po + d].copy_from_slice(&dense.0[co..co + d]);
+                pv[po..po + d].copy_from_slice(&dense.1[co..co + d]);
+            }
+        }
+    }
+}
+
+/// Rebuild one sequence's dense cache columns from its page table.
+fn gather_seq(
+    cache: &PagedKvCache,
+    lay: &DenseLayout,
+    slot: &Slot,
+    row: usize,
+    dense: (&mut [f32], &mut [f32]),
+) {
+    let spec = *cache.spec();
+    let d = spec.d_head;
+    for pos in 0..slot.written {
+        let (pk, pv) = cache.page(slot.pages[pos / spec.page_size]);
+        for l in 0..spec.layers {
+            for h in 0..spec.heads {
+                let po = spec.page_offset(l, h, pos % spec.page_size);
+                let co = lay.col_offset(l, row, h, pos);
+                dense.0[co..co + d].copy_from_slice(&pk[po..po + d]);
+                dense.1[co..co + d].copy_from_slice(&pv[po..po + d]);
+            }
+        }
+    }
+}
+
+/// Run requests to completion through admission waves.  Results come back
+/// in request order; when a `CancelPolicy` fires, preempted and
+/// never-admitted requests are returned with `cancelled: true`.
+pub fn run(
+    engine: &Engine,
+    params: &ParamSet,
+    requests: &[RolloutRequest],
+    cfg: &SamplerConfig,
+    rng: &mut Rng,
+    opts: &RolloutOptions,
+) -> Result<RolloutRun> {
+    let dims = engine.manifest().dims.clone();
+    let (b, p, s, v) = (dims.batch, dims.prompt_len, dims.max_seq, dims.vocab);
+    if requests.iter().any(|r| r.prompt.len() != p) {
+        bail!("rollout prompts must each be prompt_len={p} tokens");
+    }
+    let kv = engine.kv_cache_spec()?;
+    let spec = KvSpec {
+        layers: kv.layers,
+        heads: kv.heads,
+        max_seq: s,
+        d_head: kv.d_head,
+        page_size: opts.page_size.max(1),
+    };
+    let pps = spec.pages_per_seq();
+    let pool = if opts.pool_pages == 0 { b * pps } else { opts.pool_pages };
+    let mut cache = PagedKvCache::new(spec, pool)?;
+    let lay = DenseLayout { batch: b, spec };
+
+    let mut stats = SchedulerStats::default();
+    let mut results: Vec<Option<RolloutResult>> = (0..requests.len()).map(|_| None).collect();
+    let mut queue: VecDeque<usize> = (0..requests.len()).collect();
+    let mut finished_total = 0usize;
+    let mut preempt_all = false;
+
+    while !queue.is_empty() && !preempt_all {
+        // ---- admission: fill up to `b` slots, blocking on pool pressure --
+        let mut slots: Vec<Option<Slot>> = (0..b).map(|_| None).collect();
+        let mut admitted = 0usize;
+        for slot in slots.iter_mut() {
+            let Some(&req) = queue.front() else { break };
+            let prompt = &requests[req].prompt;
+            // map resident shared prompt pages up front (refs pin them
+            // against eviction until this sequence retires)
+            let full_prompt_pages = p / spec.page_size;
+            let mut shared_pages = Vec::new();
+            if opts.share_prefixes {
+                for k in 0..full_prompt_pages {
+                    let prefix = &prompt[..(k + 1) * spec.page_size];
+                    if shared_pages.len() == k && cache.is_resident(prefix) {
+                        if let Some(id) = cache.lookup_shared(prefix) {
+                            shared_pages.push(id);
+                        }
+                    }
+                }
+            }
+            let need = pps - shared_pages.len();
+            if !cache.try_reserve(need) {
+                // blocked: undo the shared mappings, wait for retirements
+                for &id in &shared_pages {
+                    cache.release(id);
+                }
+                stats.admission_waits += 1;
+                break;
+            }
+            queue.pop_front();
+            let shared = shared_pages.len();
+            *slot = Some(Slot {
+                req,
+                row: prompt.clone(),
+                gen_len: 0,
+                done: false,
+                cancelled: false,
+                pages: shared_pages,
+                shared,
+                reserved: need,
+                written: 0,
+            });
+            admitted += 1;
+        }
+        if admitted == 0 {
+            bail!(
+                "rollout admission deadlock: pool of {pool} pages cannot admit a \
+                 sequence needing {pps} pages (capacity check should have caught this)"
+            );
+        }
+        stats.waves += 1;
+
+        // ---- prefill the wave (empty slots ride along as PAD rows) ------
+        let flat: Vec<i32> = slots
+            .iter()
+            .flat_map(|slot| match slot {
+                Some(sl) => sl.row[..p].to_vec(),
+                None => vec![PAD; p],
+            })
+            .collect();
+        let rows_t = Tensor::i32(vec![b, p], flat);
+        let mut inputs: Vec<&Tensor> = params.tensors.iter().collect();
+        inputs.push(&rows_t);
+        let mut out = engine.run_refs("prefill", &inputs)?;
+        drop(inputs);
+        let mut logits = out.remove(0);
+        let mut ck = out.remove(0);
+        let mut cv = out.remove(0);
+        stats.prefill_calls += 1;
+
+        // ---- write prompt KV into pages; publish full pages for reuse ---
+        for (si, slot) in slots.iter_mut().enumerate() {
+            let Some(sl) = slot else { continue };
+            let dense = (ck.as_f32()?, cv.as_f32()?);
+            let full_prompt_pages = p / spec.page_size;
+            for k in sl.shared..full_prompt_pages {
+                let id = cache.alloc_reserved();
+                sl.reserved -= 1;
+                scatter_cols(&mut cache, &lay, id, si, k * spec.page_size, spec.page_size, dense);
+                if opts.share_prefixes {
+                    cache.register_shared(id, &sl.row[..(k + 1) * spec.page_size]);
+                }
+                sl.pages.push(id);
+            }
+            let tail = p % spec.page_size;
+            if tail > 0 {
+                let id = cache.alloc_reserved();
+                sl.reserved -= 1;
+                scatter_cols(&mut cache, &lay, id, si, full_prompt_pages * spec.page_size, tail, dense);
+                sl.pages.push(id);
+            }
+            sl.written = p;
+        }
+
+        // ---- lockstep decode with token-granular retirement --------------
+        let mut grace: Option<usize> = None;
+        for pos in p..s {
+            let ld = logits.as_f32()?;
+            let mut step_tokens = vec![PAD; b];
+            for (si, slot) in slots.iter_mut().enumerate() {
+                let Some(sl) = slot else { continue };
+                if sl.done {
+                    sl.row.push(PAD);
+                    continue;
+                }
+                let slice = &ld[si * v..(si + 1) * v];
+                let tok = rng.sample_logits(slice, cfg.temperature, cfg.top_k) as i32;
+                sl.gen_len += 1;
+                stats.generated_tokens += 1;
+                if cfg.stop_at_eos && tok == EOS {
+                    // retire immediately: reclaim pages mid-wave
+                    sl.done = true;
+                    finished_total += 1;
+                    release_slot_pages(&mut cache, sl);
+                }
+                sl.row.push(tok);
+                step_tokens[si] = tok;
+            }
+            let live = slots
+                .iter()
+                .flatten()
+                .filter(|sl| !sl.done)
+                .count();
+
+            // long-tail preemption: arm the (utilization-scaled) grace
+            // window once enough sequences have finished, then cancel
+            if let Some(pol) = &opts.cancel {
+                if grace.is_none() && finished_total >= pol.needed {
+                    grace = Some(balance::cancel_grace_steps(pol.grace_steps, live, b));
+                }
+                if let Some(g) = grace {
+                    if g == 0 && live > 0 {
+                        for slot in slots.iter_mut() {
+                            let Some(sl) = slot else { continue };
+                            if !sl.done {
+                                sl.done = true;
+                                sl.cancelled = true;
+                                stats.cancelled += 1;
+                                release_slot_pages(&mut cache, sl);
+                            }
+                        }
+                        preempt_all = true;
+                    } else {
+                        grace = Some(g.saturating_sub(1));
+                    }
+                }
+            }
+
+            if slots.iter().flatten().all(|sl| sl.done) || pos == s - 1 {
+                break;
+            }
+
+            // decode the next position; dense passthrough by default,
+            // page-gathered caches when proving the paged data plane
+            let (gk, gv);
+            let (ck_in, cv_in): (&Tensor, &Tensor) = if opts.paged_feedback {
+                let mut dk = Tensor::zeros_f32(ck.shape.clone());
+                let mut dv = Tensor::zeros_f32(cv.shape.clone());
+                for (si, slot) in slots.iter().enumerate() {
+                    let Some(sl) = slot else { continue };
+                    if sl.done {
+                        continue;
+                    }
+                    gather_seq(&cache, &lay, sl, si, (dk.as_f32_mut()?, dv.as_f32_mut()?));
+                }
+                (gk, gv) = (dk, dv);
+                (&gk, &gv)
+            } else {
+                (&ck, &cv)
+            };
+            let step_t = Tensor::i32(vec![b], step_tokens);
+            let pos_t = Tensor::scalar_i32(pos as i32);
+            let mut inputs: Vec<&Tensor> = params.tensors.iter().collect();
+            inputs.push(ck_in);
+            inputs.push(cv_in);
+            inputs.push(&step_t);
+            inputs.push(&pos_t);
+            let mut out = engine.run_refs("decode_step", &inputs)?;
+            drop(inputs);
+            logits = out.remove(0);
+            ck = out.remove(0);
+            cv = out.remove(0);
+            stats.decode_calls += 1;
+            stats.slot_steps += b;
+            stats.live_slot_steps += live;
+
+            // scatter the column decode_step just wrote (position `pos`)
+            for (si, slot) in slots.iter_mut().enumerate() {
+                let Some(sl) = slot else { continue };
+                if sl.done {
+                    continue;
+                }
+                let page_slot = pos / spec.page_size;
+                if page_slot == sl.pages.len() {
+                    let id = cache.alloc_reserved();
+                    sl.reserved -= 1;
+                    sl.pages.push(id);
+                }
+                let dense = (ck.as_f32()?, cv.as_f32()?);
+                scatter_cols(&mut cache, &lay, sl.pages[page_slot], si, pos, 1, dense);
+                sl.written = pos + 1;
+            }
+        }
+
+        // ---- finalize the wave ------------------------------------------
+        for slot in slots.iter_mut() {
+            let Some(sl) = slot else { continue };
+            if !sl.done {
+                // hit the length cap: finished, just without EOS
+                sl.done = true;
+                finished_total += 1;
+            }
+            release_slot_pages(&mut cache, sl);
+            sl.row.resize(s, PAD);
+            let mut mask = vec![0.0f32; s];
+            for x in mask.iter_mut().skip(p).take(sl.gen_len) {
+                *x = 1.0;
+            }
+            if !sl.cancelled {
+                stats.finished += 1;
+            }
+            results[sl.req] = Some(RolloutResult {
+                id: requests[sl.req].id,
+                row: std::mem::take(&mut sl.row),
+                gen_len: sl.gen_len,
+                mask,
+                cancelled: sl.cancelled,
+            });
+        }
+    }
+
+    // requests preempted before admission
+    while let Some(req) = queue.pop_front() {
+        let mut row = requests[req].prompt.clone();
+        row.resize(s, PAD);
+        stats.cancelled += 1;
+        results[req] = Some(RolloutResult {
+            id: requests[req].id,
+            row,
+            gen_len: 0,
+            mask: vec![0.0; s],
+            cancelled: true,
+        });
+    }
+
+    let st = cache.stats();
+    stats.peak_pages = st.peak_in_use;
+    stats.shared_page_hits = st.shared_hits;
+    stats.page_evictions = st.evictions;
+    let results = results
+        .into_iter()
+        .map(|r| r.expect("every request resolves to a result"))
+        .collect();
+    Ok(RolloutRun { results, stats })
+}
+
+/// Release every page a slot still maps and drop unused reservations.
+fn release_slot_pages(cache: &mut PagedKvCache, sl: &mut Slot) {
+    for id in sl.pages.drain(..) {
+        cache.release(id);
+    }
+    cache.unreserve(sl.reserved);
+    sl.reserved = 0;
+    sl.shared = 0;
+    sl.written = 0;
+}

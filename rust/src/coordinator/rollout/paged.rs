@@ -1,0 +1,326 @@
+//! Block-allocated paged KV cache (paper §2.2 data plane): fixed-size
+//! pages off a free list, per-sequence page tables, refcounted
+//! prefix-sharing across prompts with a common prefix, and a reservation
+//! protocol so admission can *block* on pool pressure instead of a
+//! mid-decode allocation failure.
+//!
+//! The allocator is engine-agnostic: it hands out page buffers laid out
+//! `[layers, heads, page_size, d_head]` (K and V separately) and tracks
+//! ownership; the scheduler in `rollout::` does the gather/scatter between
+//! pages and the dense `[L,B,H,S,D]` caches the `prefill`/`decode_step`
+//! artifacts exchange.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Geometry of one sequence's KV store, derived from the `decode_step`
+/// artifact's cache operands (`Engine::kv_cache_spec`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvSpec {
+    pub layers: usize,
+    pub heads: usize,
+    pub max_seq: usize,
+    pub d_head: usize,
+    /// token positions per page
+    pub page_size: usize,
+}
+
+impl KvSpec {
+    /// f32 elements in one page's K buffer (V is the same size).
+    pub fn page_elems(&self) -> usize {
+        self.layers * self.heads * self.page_size * self.d_head
+    }
+
+    /// Pages needed to hold a sequence decoded out to `max_seq`.
+    pub fn pages_per_seq(&self) -> usize {
+        self.max_seq.div_ceil(self.page_size)
+    }
+
+    /// Element offset of position `off` for `(layer, head)` within a page.
+    pub fn page_offset(&self, layer: usize, head: usize, off: usize) -> usize {
+        ((layer * self.heads + head) * self.page_size + off) * self.d_head
+    }
+}
+
+#[derive(Debug)]
+struct Page {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// sequences currently mapping this page
+    refs: usize,
+    /// token prefix this page is registered under in the share index
+    /// (`None` for private generation/tail pages)
+    key: Option<Vec<i32>>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct PageStats {
+    pub capacity: usize,
+    /// high-water mark of pages with refs > 0
+    pub peak_in_use: usize,
+    /// admissions that mapped an already-resident shared prompt page
+    pub shared_hits: usize,
+    /// cached (refs == 0) shared pages reclaimed under pool pressure
+    pub evictions: usize,
+}
+
+/// The page pool.  Invariant: every page is exactly one of
+/// free-listed, cached-in-index (refs == 0, evictable), or mapped
+/// (refs > 0).  `reserved` pages are spoken for by admitted sequences but
+/// not yet allocated; `try_reserve` is the only admission gate, so
+/// `alloc_reserved` cannot fail for a holder of a reservation.
+#[derive(Debug)]
+pub struct PagedKvCache {
+    spec: KvSpec,
+    pages: Vec<Page>,
+    free: Vec<usize>,
+    index: HashMap<Vec<i32>, usize>,
+    reserved: usize,
+    in_use: usize,
+    stats: PageStats,
+}
+
+impl PagedKvCache {
+    pub fn new(spec: KvSpec, capacity_pages: usize) -> Result<PagedKvCache> {
+        if spec.page_size == 0 {
+            bail!("kv page_size must be >= 1");
+        }
+        if capacity_pages < spec.pages_per_seq() {
+            bail!(
+                "page pool of {capacity_pages} pages cannot hold one worst-case \
+                 sequence ({} pages of {} positions for max_seq {})",
+                spec.pages_per_seq(),
+                spec.page_size,
+                spec.max_seq
+            );
+        }
+        let elems = spec.page_elems();
+        let pages = (0..capacity_pages)
+            .map(|_| Page { k: vec![0.0; elems], v: vec![0.0; elems], refs: 0, key: None })
+            .collect();
+        Ok(PagedKvCache {
+            spec,
+            pages,
+            free: (0..capacity_pages).rev().collect(),
+            index: HashMap::new(),
+            reserved: 0,
+            in_use: 0,
+            stats: PageStats { capacity: capacity_pages, ..PageStats::default() },
+        })
+    }
+
+    pub fn spec(&self) -> &KvSpec {
+        &self.spec
+    }
+
+    pub fn stats(&self) -> &PageStats {
+        &self.stats
+    }
+
+    /// Pages currently mapped by at least one sequence.
+    pub fn in_use(&self) -> usize {
+        self.in_use
+    }
+
+    /// Pages obtainable right now: free-listed plus evictable cached pages,
+    /// minus outstanding reservations.
+    pub fn available(&self) -> usize {
+        let evictable = self.pages.iter().filter(|p| p.refs == 0 && p.key.is_some()).count();
+        (self.free.len() + evictable).saturating_sub(self.reserved)
+    }
+
+    /// Admission gate: reserve `n` pages for a sequence about to start.
+    /// Returns false (caller must wait for retirements) when the pool
+    /// cannot cover the worst case.
+    pub fn try_reserve(&mut self, n: usize) -> bool {
+        if self.available() < n {
+            return false;
+        }
+        self.reserved += n;
+        true
+    }
+
+    /// Return unused reservations (early EOS, better-than-predicted
+    /// prefix sharing).
+    pub fn unreserve(&mut self, n: usize) {
+        debug_assert!(n <= self.reserved);
+        self.reserved = self.reserved.saturating_sub(n);
+    }
+
+    fn bump(&mut self) {
+        self.in_use += 1;
+        self.stats.peak_in_use = self.stats.peak_in_use.max(self.in_use);
+    }
+
+    /// Map an already-resident shared page for `prefix` (refcount + 1).
+    pub fn lookup_shared(&mut self, prefix: &[i32]) -> Option<usize> {
+        let id = *self.index.get(prefix)?;
+        self.pages[id].refs += 1;
+        if self.pages[id].refs == 1 {
+            self.bump();
+        }
+        self.stats.shared_hits += 1;
+        Some(id)
+    }
+
+    /// Whether `prefix` is resident (no refcount change) — used by
+    /// admission to predict how many new pages a sequence needs.
+    pub fn is_resident(&self, prefix: &[i32]) -> bool {
+        self.index.contains_key(prefix)
+    }
+
+    /// Allocate one page against a held reservation.  Panics only if the
+    /// reservation protocol was violated (a bug, not pool pressure).
+    pub fn alloc_reserved(&mut self) -> usize {
+        debug_assert!(self.reserved > 0, "alloc without reservation");
+        self.reserved = self.reserved.saturating_sub(1);
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => self.evict().expect("reservation invariant: no page to evict"),
+        };
+        let page = &mut self.pages[id];
+        page.refs = 1;
+        page.key = None;
+        self.bump();
+        id
+    }
+
+    /// Reclaim some cached (refs == 0) shared page.
+    fn evict(&mut self) -> Option<usize> {
+        let key = self
+            .index
+            .iter()
+            .find(|(_, &id)| self.pages[id].refs == 0)
+            .map(|(k, _)| k.clone())?;
+        let id = self.index.remove(&key)?;
+        self.pages[id].key = None;
+        self.stats.evictions += 1;
+        Some(id)
+    }
+
+    /// Publish a (fully written) prompt page for reuse by later sequences
+    /// with the same token prefix.
+    pub fn register_shared(&mut self, id: usize, prefix: &[i32]) {
+        if self.index.contains_key(prefix) {
+            return; // first writer wins; keep the existing mapping
+        }
+        self.pages[id].key = Some(prefix.to_vec());
+        self.index.insert(prefix.to_vec(), id);
+    }
+
+    /// Drop one sequence's mapping.  Shared pages stay cached (evictable);
+    /// private pages go straight back to the free list.
+    pub fn release(&mut self, id: usize) {
+        let page = &mut self.pages[id];
+        debug_assert!(page.refs > 0);
+        page.refs -= 1;
+        if page.refs == 0 {
+            self.in_use -= 1;
+            if page.key.is_none() {
+                self.free.push(id);
+            }
+        }
+    }
+
+    pub fn page(&self, id: usize) -> (&[f32], &[f32]) {
+        (&self.pages[id].k, &self.pages[id].v)
+    }
+
+    pub fn page_mut(&mut self, id: usize) -> (&mut [f32], &mut [f32]) {
+        let p = &mut self.pages[id];
+        (&mut p.k, &mut p.v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> KvSpec {
+        KvSpec { layers: 2, heads: 2, max_seq: 8, d_head: 3, page_size: 4 }
+    }
+
+    #[test]
+    fn geometry() {
+        let s = spec();
+        assert_eq!(s.page_elems(), 2 * 2 * 4 * 3);
+        assert_eq!(s.pages_per_seq(), 2);
+        assert_eq!(s.page_offset(1, 1, 2), ((4 + 1) * 4 + 2) * 3);
+        let odd = KvSpec { max_seq: 9, ..s };
+        assert_eq!(odd.pages_per_seq(), 3);
+    }
+
+    #[test]
+    fn pool_must_fit_one_sequence() {
+        assert!(PagedKvCache::new(spec(), 1).is_err());
+        assert!(PagedKvCache::new(spec(), 2).is_ok());
+    }
+
+    #[test]
+    fn reserve_alloc_release_cycle() {
+        let mut c = PagedKvCache::new(spec(), 4).unwrap();
+        assert_eq!(c.available(), 4);
+        assert!(c.try_reserve(3));
+        assert_eq!(c.available(), 1);
+        assert!(!c.try_reserve(2), "over-reservation must be refused");
+        let a = c.alloc_reserved();
+        let b = c.alloc_reserved();
+        c.unreserve(1); // sequence finished early, one reservation unused
+        assert_eq!(c.in_use(), 2);
+        c.release(a);
+        c.release(b);
+        assert_eq!(c.in_use(), 0);
+        assert_eq!(c.available(), 4);
+        assert_eq!(c.stats().peak_in_use, 2);
+    }
+
+    #[test]
+    fn shared_pages_cache_and_evict() {
+        let mut c = PagedKvCache::new(spec(), 2).unwrap();
+        assert!(c.try_reserve(1));
+        let p0 = c.alloc_reserved();
+        c.register_shared(p0, &[1, 2, 3, 4]);
+        assert!(c.lookup_shared(&[9, 9]).is_none());
+        let hit = c.lookup_shared(&[1, 2, 3, 4]).unwrap();
+        assert_eq!(hit, p0);
+        assert_eq!(c.stats().shared_hits, 1);
+        // two mappings of the same page: one physical page in use
+        assert_eq!(c.in_use(), 1);
+        c.release(p0);
+        c.release(p0);
+        // cached but evictable: still obtainable capacity
+        assert_eq!(c.in_use(), 0);
+        assert!(c.is_resident(&[1, 2, 3, 4]));
+        assert_eq!(c.available(), 2);
+        // exhaust the free list; the cached page gets evicted
+        assert!(c.try_reserve(2));
+        let _x = c.alloc_reserved();
+        let _y = c.alloc_reserved();
+        assert_eq!(c.stats().evictions, 1);
+        assert!(!c.is_resident(&[1, 2, 3, 4]));
+    }
+
+    #[test]
+    fn mapped_shared_pages_are_not_evictable() {
+        let mut c = PagedKvCache::new(spec(), 2).unwrap();
+        assert!(c.try_reserve(1));
+        let p0 = c.alloc_reserved();
+        c.register_shared(p0, &[7]);
+        // still mapped (refs 1): only the one free page is obtainable
+        assert_eq!(c.available(), 1);
+        assert!(!c.try_reserve(2));
+    }
+
+    #[test]
+    fn page_buffers_are_stable_across_alloc() {
+        let mut c = PagedKvCache::new(spec(), 2).unwrap();
+        assert!(c.try_reserve(1));
+        let id = c.alloc_reserved();
+        c.page_mut(id).0[0] = 42.0;
+        c.page_mut(id).1[1] = -1.0;
+        let (k, v) = c.page(id);
+        assert_eq!(k[0], 42.0);
+        assert_eq!(v[1], -1.0);
+    }
+}

@@ -92,6 +92,30 @@ pub fn dapo_filter(rewards: &[f32], group_size: usize) -> Result<Vec<usize>> {
         .collect())
 }
 
+/// DAPO filter aware of long-tail cancellation: a group containing a
+/// rollout the scheduler preempted (`CancelPolicy`) has truncated,
+/// unscoreable members — it is excluded outright, on top of the usual
+/// no-signal filter.  Keeps acceptance decisions and straggler
+/// preemption composable: cancelling never *adds* a group to the batch.
+pub fn dapo_filter_with_cancelled(
+    rewards: &[f32],
+    group_size: usize,
+    cancelled: &[bool],
+) -> Result<Vec<usize>> {
+    if cancelled.len() != rewards.len() {
+        bail!(
+            "cancelled flags len {} != rewards len {}",
+            cancelled.len(),
+            rewards.len()
+        );
+    }
+    let keep = dapo_filter(rewards, group_size)?;
+    Ok(keep
+        .into_iter()
+        .filter(|&g| !cancelled[g * group_size..(g + 1) * group_size].iter().any(|&c| c))
+        .collect())
+}
+
 /// Whiten advantages batch-wide (optional PPO stabiliser).
 pub fn whiten(adv: &mut [f32]) {
     let n = adv.len() as f32;
@@ -190,6 +214,23 @@ mod tests {
     fn dapo_all_informative_keeps_all() {
         let rewards = [1.0, 0.0, 0.0, 1.0];
         assert_eq!(dapo_filter(&rewards, 2).unwrap(), vec![0, 1]);
+    }
+
+    #[test]
+    fn dapo_with_cancelled_excludes_preempted_groups() {
+        // groups: mixed, mixed-but-cancelled-member, all-equal, mixed
+        let rewards = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 1.0, 0.0];
+        let cancelled = [false, false, true, false, false, false, false, false];
+        let keep = dapo_filter_with_cancelled(&rewards, 2, &cancelled).unwrap();
+        assert_eq!(keep, vec![0, 3]);
+        // no cancellations: identical to the plain filter
+        let none = [false; 8];
+        assert_eq!(
+            dapo_filter_with_cancelled(&rewards, 2, &none).unwrap(),
+            dapo_filter(&rewards, 2).unwrap()
+        );
+        // flags length must match
+        assert!(dapo_filter_with_cancelled(&rewards, 2, &[false; 3]).is_err());
     }
 
     #[test]

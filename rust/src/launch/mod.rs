@@ -49,7 +49,7 @@ use crate::coordinator::ring_collective::{RingCollective, RingInbox, RingPeer};
 use crate::coordinator::rpc_collective::{CollectiveStatus, RendezvousHost, RpcCollective};
 use crate::reward::{RewardKind, Rewarder};
 use crate::rpc::server::RpcServer;
-use crate::rpc::transport::{TcpRpcHost, TcpTransport};
+use crate::rpc::transport::{MeteredTransport, TcpRpcHost, TcpTransport, TransferStats};
 use crate::runtime::engine::Engine;
 use crate::runtime::params::{init_policy, ParamSet};
 use crate::storage::dataloader::LoaderState;
@@ -432,14 +432,23 @@ pub fn serve_coordinator(
 /// every rank's address through the coordinator ONCE (the only rendezvous
 /// round), then streams all collective traffic to its ring successor; the
 /// returned host must stay alive for the duration of the job.
+///
+/// Every outbound connection is wrapped in a [`MeteredTransport`] feeding
+/// one per-rank [`TransferStats`], so `train-dist` reports the bytes each
+/// worker actually moved over real sockets (E8c measures, not models).
 fn build_worker_collective(
     cfg: &RunConfig,
     rank: usize,
     coord: SocketAddr,
-) -> Result<(Arc<Collective>, Option<TcpRpcHost>)> {
+) -> Result<(Arc<Collective>, Option<TcpRpcHost>, Arc<TransferStats>)> {
+    let stats = Arc::new(TransferStats::default());
     match cfg.collective {
         CollectiveMode::Ring => {
-            let boot = RpcCollective::for_rank(TcpTransport::connect(coord), cfg.world, rank);
+            let boot = RpcCollective::for_rank(
+                MeteredTransport::with_stats(TcpTransport::connect(coord), stats.clone()),
+                cfg.world,
+                rank,
+            );
             let inbox = RingInbox::new();
             let server = Arc::new(
                 RpcServer::new(RingPeer::new(inbox.clone()))
@@ -455,14 +464,22 @@ fn build_worker_collective(
                 .context("ring bootstrap address is not utf8")?
                 .parse()
                 .context("ring bootstrap address did not parse")?;
-            let backend =
-                RingCollective::new(rank, cfg.world, inbox, TcpTransport::connect(succ))
-                    .with_chunk_bytes(cfg.ring_chunk_bytes);
-            Ok((Collective::with_backend(Arc::new(backend)), Some(host)))
+            let backend = RingCollective::new(
+                rank,
+                cfg.world,
+                inbox,
+                MeteredTransport::with_stats(TcpTransport::connect(succ), stats.clone()),
+            )
+            .with_chunk_bytes(cfg.ring_chunk_bytes);
+            Ok((Collective::with_backend(Arc::new(backend)), Some(host), stats))
         }
         _ => {
-            let backend = RpcCollective::for_rank(TcpTransport::connect(coord), cfg.world, rank);
-            Ok((Collective::with_backend(Arc::new(backend)), None))
+            let backend = RpcCollective::for_rank(
+                MeteredTransport::with_stats(TcpTransport::connect(coord), stats.clone()),
+                cfg.world,
+                rank,
+            );
+            Ok((Collective::with_backend(Arc::new(backend)), None, stats))
         }
     }
 }
@@ -478,7 +495,7 @@ pub fn run_worker(cfg: &RunConfig, rank: usize, coord: SocketAddr) -> Result<Tra
     let engine = Arc::new(Engine::load(&cfg.artifacts)?);
     let policy = init_policy(&engine, cfg.seed as u32)?;
     // `_ring_host` keeps this rank's inbox service alive until training ends
-    let (collective, _ring_host) = build_worker_collective(cfg, rank, coord)?;
+    let (collective, _ring_host, net) = build_worker_collective(cfg, rank, coord)?;
     let (rewarder, rm_metric) = broadcast_rewarder(&engine, cfg, &collective, rank)?;
     let ckpt = cfg
         .checkpoint_dir
@@ -487,6 +504,13 @@ pub fn run_worker(cfg: &RunConfig, rank: usize, coord: SocketAddr) -> Result<Tra
     let mut report = run_rank(rank, engine, collective, cfg.clone(), policy, rewarder, ckpt)
         .with_context(|| format!("worker rank {rank} failed"))?;
     report.reward_model_metric = rm_metric;
+    // machine-readable per-rank byte totals: the train-dist parent (and
+    // E8c) parses this line off the worker's stdout
+    println!(
+        "[gcore] worker {rank} collective-bytes sent={} recv={}",
+        net.sent.load(std::sync::atomic::Ordering::Relaxed),
+        net.received.load(std::sync::atomic::Ordering::Relaxed)
+    );
     Ok(report)
 }
 

@@ -33,14 +33,20 @@ USAGE:
               [--collective inproc|tcp|ring] [--ring-chunk-bytes N]
               [--tombstone-capacity N] [--tombstone-ttl-ms N]
               [--allreduce-bucket-bytes N]
+              [--kv-page-size N] [--kv-cache-pages N]
+              [--rollout-cancel] [--rollout-cancel-grace N]
+              (rollout scheduler: KV page geometry / pool size; --rollout-cancel
+              preempts long-tail stragglers once a round has enough accepted
+              rollouts — requires --dynamic-sampling)
   gcore train-dist [same flags as train] [--coord-port P]
               spawns N=world OS processes; --collective tcp funnels
               collectives through the rank-0 rendezvous, --collective ring
               streams chunked frames rank-to-rank (bootstrap via the
               rendezvous, then O(payload)/rank; rank 0 prints the report)
-  gcore bench <e1|e2|e3|e4|e5|e7|e8|e8c|e9|e9a|einterp|all> [--full]
-              [--json out.json]   (einterp: HLO-interpreter engine timings
-              over the checked-in fixture artifact sets)
+  gcore bench <e1|e2|e3|e4|e5|e7|e8|e8c|e9|e9a|egen|einterp|all> [--full]
+              [--json out.json]   (egen: continuous-batching rollout
+              scheduler tokens/s vs queue depth; einterp: HLO-interpreter
+              engine timings over the checked-in fixture artifact sets)
   gcore simulate [--placement colocate|coexist|dynamic] [--devices N]
                  [--steps N] [--dapo]
   gcore inspect-artifacts [--artifacts tiny]
@@ -85,6 +91,12 @@ fn cfg_from_args(args: &Args) -> Result<RunConfig> {
     cfg.rpc_tombstone_ttl_ms = args.parse_or("tombstone-ttl-ms", cfg.rpc_tombstone_ttl_ms);
     cfg.allreduce_bucket_bytes =
         args.parse_or("allreduce-bucket-bytes", cfg.allreduce_bucket_bytes);
+    cfg.kv_page_size = args.parse_or("kv-page-size", cfg.kv_page_size);
+    cfg.kv_cache_pages = args.parse_or("kv-cache-pages", cfg.kv_cache_pages);
+    cfg.rollout_cancel_grace = args.parse_or("rollout-cancel-grace", cfg.rollout_cancel_grace);
+    if args.has("rollout-cancel") {
+        cfg.rollout_cancel = true;
+    }
     if args.has("dynamic-sampling") {
         cfg.dynamic_sampling = true;
     }
@@ -263,7 +275,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let quick = !args.has("full");
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let ids: Vec<&str> = if which == "all" {
-        vec!["e1", "e2", "e3", "e4", "e5", "e7", "e8", "e8c", "e9", "e9a", "einterp"]
+        vec!["e1", "e2", "e3", "e4", "e5", "e7", "e8", "e8c", "e9", "e9a", "egen", "einterp"]
     } else {
         vec![which]
     };

@@ -207,6 +207,12 @@ impl<T: Transport> MeteredTransport<T> {
         MeteredTransport { inner, stats: Arc::new(TransferStats::default()) }
     }
 
+    /// Meter into an existing counter — lets every connection a rank opens
+    /// (bootstrap + ring successor) accumulate into one per-rank total.
+    pub fn with_stats(inner: T, stats: Arc<TransferStats>) -> MeteredTransport<T> {
+        MeteredTransport { inner, stats }
+    }
+
     /// Shared handle to the counters (read after the run completes).
     pub fn stats(&self) -> Arc<TransferStats> {
         self.stats.clone()

@@ -88,6 +88,16 @@ pub struct ExecStats {
     pub compile_time: Duration,
 }
 
+/// Dense KV-cache geometry of the `decode_step` artifact (`[L,B,H,S,D]`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvCacheSpec {
+    pub layers: usize,
+    pub batch: usize,
+    pub heads: usize,
+    pub max_seq: usize,
+    pub d_head: usize,
+}
+
 pub struct Engine {
     manifest: Manifest,
     inner: Mutex<ExecBackend>,
@@ -193,6 +203,37 @@ impl Engine {
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// Geometry of the `decode_step` KV-cache operands `[L,B,H,S,D]` — the
+    /// contract the paged rollout data plane gathers/scatters against.
+    /// Read from the artifact's declared input shapes (not re-derived from
+    /// `dims`) so a manifest/HLO drift fails here, loudly.
+    pub fn kv_cache_spec(&self) -> Result<KvCacheSpec> {
+        let spec = self.manifest.artifact("decode_step")?;
+        let np = self.manifest.policy_tree.len();
+        let cache = spec.inputs.get(np).ok_or_else(|| {
+            anyhow::anyhow!("decode_step has no cache operand after {np} params")
+        })?;
+        let d = &self.manifest.dims;
+        let sh = &cache.shape;
+        if sh.len() != 5 || sh[1] != d.batch || sh[3] != d.max_seq {
+            bail!(
+                "decode_step cache operand '{}' has shape {:?}; expected \
+                 [layers, batch={}, heads, max_seq={}, d_head]",
+                cache.name,
+                sh,
+                d.batch,
+                d.max_seq
+            );
+        }
+        Ok(KvCacheSpec {
+            layers: sh[0],
+            batch: sh[1],
+            heads: sh[2],
+            max_seq: sh[3],
+            d_head: sh[4],
+        })
     }
 
     /// Pre-compile a set of artifacts (elides first-call latency).

@@ -1136,6 +1136,16 @@ fn dynamic_update_slice(mut args: Vec<Val>) -> Result<Val> {
     let base_dims = base.dims.clone();
     let base_strides = strides(&base_dims);
     let offset: usize = starts.iter().zip(&base_strides).map(|(&s, &st)| s * st).sum();
+    // Merge trailing axes into one contiguous run: axis i joins while its
+    // base stride equals the run built inside it (innermost always does).
+    // The KV decode hot path ([L,B,H,1,D] into [L,B,H,S,D]) then moves
+    // d_head-sized blocks per step instead of scalars.
+    let mut run = 1usize;
+    let mut outer = update.dims.len();
+    while outer > 0 && base_strides[outer - 1] == run {
+        run *= update.dims[outer - 1];
+        outer -= 1;
+    }
     macro_rules! dus {
         ($variant:path, $mk:path, $t:ty) => {{
             let upd: &[$t] = match &update.data {
@@ -1148,11 +1158,11 @@ fn dynamic_update_slice(mut args: Vec<Val>) -> Result<Val> {
             };
             // in place when uniquely owned (the decode-loop hot path)
             let mut buf = Arc::try_unwrap(arc).unwrap_or_else(|a| a.as_ref().clone());
-            let mut st = Stepper::new(&update.dims, &base_strides);
+            let mut st = Stepper::new(&update.dims[..outer], &base_strides[..outer]);
             let mut i = 0usize;
             while let Some(off) = st.next() {
-                buf[offset + off] = upd[i];
-                i += 1;
+                buf[offset + off..offset + off + run].copy_from_slice(&upd[i..i + run]);
+                i += run;
             }
             $mk(base_dims.clone(), buf)
         }};

@@ -76,6 +76,15 @@ impl ModelDims {
     }
 }
 
+/// Sampler parameters compiled into the fused `generate_rollout` artifact
+/// (aot.py records them so the runtime can refuse a mismatched
+/// `SamplerConfig` instead of silently decoding a different distribution).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BakedSampler {
+    pub top_k: usize,
+    pub stop_at_eos: bool,
+}
+
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub dir: PathBuf,
@@ -87,6 +96,9 @@ pub struct Manifest {
     /// Flat scalar-head (critic / BT reward) parameter tree.
     pub scalar_tree: Vec<TensorSpec>,
     pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Sampler block for `generate_rollout`; absent in sets predating it
+    /// (or sets without the fused artifact).
+    pub sampler: Option<BakedSampler>,
 }
 
 impl Manifest {
@@ -146,6 +158,16 @@ impl Manifest {
             );
         }
 
+        let sampler = j
+            .get("sampler")
+            .map(|s| -> Result<BakedSampler> {
+                Ok(BakedSampler {
+                    top_k: s.req("top_k")?.as_usize().context("sampler.top_k")?,
+                    stop_at_eos: s.req("stop_at_eos")?.as_bool().unwrap_or(true),
+                })
+            })
+            .transpose()?;
+
         Ok(Manifest {
             dir,
             dims,
@@ -157,6 +179,7 @@ impl Manifest {
             policy_tree: tree("policy_tree")?,
             scalar_tree: tree("scalar_tree")?,
             artifacts,
+            sampler,
         })
     }
 

@@ -92,6 +92,12 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Items-per-second throughput, guarded against a zero wall clock (timer
+/// granularity on very fast runs) — the Egen tokens/s column.
+pub fn per_sec(n: usize, wall_secs: f64) -> f64 {
+    n as f64 / wall_secs.max(1e-12)
+}
+
 /// Markdown table over results — the bench binaries' standard output format.
 pub fn print_table(title: &str, results: &[BenchResult]) {
     println!("\n### {title}\n");
@@ -141,6 +147,12 @@ mod tests {
         let r = bench_n("count", 37, || count += 1);
         assert_eq!(count, 37);
         assert_eq!(r.iters, 37);
+    }
+
+    #[test]
+    fn per_sec_guards_zero_wall() {
+        assert_eq!(per_sec(100, 2.0), 50.0);
+        assert!(per_sec(1, 0.0).is_finite());
     }
 
     #[test]

@@ -1,0 +1,613 @@
+//! Rollout-scheduler integration tier: differential bit-identity against
+//! the stepwise reference decoder on the checked-in fixture sets, paged
+//! KV-cache admission/exhaustion behavior, prefix-page reuse, long-tail
+//! cancellation, and the sampler edge cases (EOS on the first generated
+//! token, simultaneous EOS, top_k >= vocab, greedy temperature 0) pinned
+//! on hand-written constant-logit artifact sets.
+
+use std::path::PathBuf;
+
+use gcore::coordinator::generation::{self, GenOutput, SamplerConfig};
+use gcore::coordinator::rollout::{self, CancelPolicy, RolloutOptions, RolloutRequest};
+use gcore::data::tokenizer::{EOS, PAD};
+use gcore::runtime::{init_policy, Engine, ParamSet, Tensor};
+use gcore::util::rng::Rng;
+
+/// Loads a checked-in fixture artifact set.  PANICS when missing: the
+/// fixtures are committed and the interpreter backend is always available,
+/// so there is no legitimate skip reason (same policy as the coordinator
+/// tier).
+fn engine(set: &str) -> Engine {
+    match Engine::try_load(set) {
+        Some(e) => e,
+        None => panic!(
+            "{set} artifact set not found — regenerate the checked-in \
+             fixtures with `python -m compile.fixturegen`"
+        ),
+    }
+}
+
+/// Deterministic in-vocab prompts, distinct per row (and per salt).
+fn prompts_for(e: &Engine, salt: i32) -> Vec<Vec<i32>> {
+    let d = e.manifest().dims.clone();
+    (0..d.batch)
+        .map(|r| {
+            (0..d.prompt_len)
+                .map(|c| (r as i32 * 31 + c as i32 * 7 + salt).rem_euclid(d.vocab as i32 - 1) + 1)
+                .collect()
+        })
+        .collect()
+}
+
+fn requests(prompts: &[Vec<i32>]) -> Vec<RolloutRequest> {
+    prompts
+        .iter()
+        .enumerate()
+        .map(|(id, p)| RolloutRequest { id, prompt: p.clone() })
+        .collect()
+}
+
+fn as_gen_output(run: rollout::RolloutRun) -> GenOutput {
+    generation::gen_output_from(run.results)
+}
+
+// ---------------------------------------------------------------------------
+// differential: scheduler vs stepwise reference on the fixture sets
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scheduler_matches_stepwise_on_fixture_sets() {
+    for set in ["tiny", "synthetic"] {
+        let e = engine(set);
+        let params = init_policy(&e, 5).unwrap();
+        let prompts = prompts_for(&e, 3);
+        let cfg = SamplerConfig { temperature: 1.0, top_k: 8, stop_at_eos: true };
+        let base =
+            generation::generate_stepwise(&e, &params, &prompts, &cfg, &mut Rng::new(7)).unwrap();
+        for feedback in [false, true] {
+            let opts = RolloutOptions { paged_feedback: feedback, ..RolloutOptions::default() };
+            let run =
+                rollout::run(&e, &params, &requests(&prompts), &cfg, &mut Rng::new(7), &opts)
+                    .unwrap();
+            let stats = run.stats.clone();
+            let out = as_gen_output(run);
+            assert_eq!(out.rows, base.rows, "{set} paged_feedback={feedback}");
+            assert_eq!(out.gen_lens, base.gen_lens, "{set} paged_feedback={feedback}");
+            assert_eq!(out.masks, base.masks, "{set} paged_feedback={feedback}");
+            assert_eq!(stats.waves, 1);
+            assert_eq!(stats.finished, prompts.len());
+            assert_eq!(stats.cancelled, 0);
+            assert_eq!(stats.generated_tokens, out.gen_lens.iter().sum::<usize>());
+            // dead-row retirement: rows that finish early stop counting as
+            // live slot-steps (the waste the scheduler exists to remove)
+            if out.gen_lens.iter().any(|&g| g != out.gen_lens[0]) {
+                assert!(
+                    stats.live_slot_steps < stats.slot_steps,
+                    "{set}: early-EOS rows must retire immediately"
+                );
+            }
+        }
+        // the public entry point routes through the scheduler on sets
+        // without a fused artifact — same bits as the reference
+        let via_generate =
+            generation::generate(&e, &params, &prompts, &cfg, &mut Rng::new(7)).unwrap();
+        assert_eq!(via_generate.rows, base.rows, "{set} generate()");
+        assert_eq!(via_generate.gen_lens, base.gen_lens, "{set} generate()");
+        assert_eq!(via_generate.masks, base.masks, "{set} generate()");
+    }
+}
+
+#[test]
+fn two_waves_match_sequential_stepwise() {
+    let e = engine("tiny");
+    let params = init_policy(&e, 9).unwrap();
+    let first = prompts_for(&e, 1);
+    let second = prompts_for(&e, 101);
+    let cfg = SamplerConfig { temperature: 1.0, top_k: 8, stop_at_eos: true };
+
+    // reference: two stepwise batches drawing from ONE carried rng
+    let mut rng = Rng::new(13);
+    let base_a = generation::generate_stepwise(&e, &params, &first, &cfg, &mut rng).unwrap();
+    let base_b = generation::generate_stepwise(&e, &params, &second, &cfg, &mut rng).unwrap();
+
+    let all: Vec<Vec<i32>> = first.iter().chain(second.iter()).cloned().collect();
+    let run = rollout::run(
+        &e,
+        &params,
+        &requests(&all),
+        &cfg,
+        &mut Rng::new(13),
+        &RolloutOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(run.stats.waves, 2);
+    assert_eq!(run.stats.prefill_calls, 2);
+    let out = as_gen_output(run);
+    let b = first.len();
+    assert_eq!(&out.rows[..b], &base_a.rows[..]);
+    assert_eq!(&out.rows[b..], &base_b.rows[..]);
+    assert_eq!(&out.gen_lens[..b], &base_a.gen_lens[..]);
+    assert_eq!(&out.gen_lens[b..], &base_b.gen_lens[..]);
+}
+
+// ---------------------------------------------------------------------------
+// paged pool behavior
+// ---------------------------------------------------------------------------
+
+#[test]
+fn page_pool_exhaustion_blocks_admission_without_panicking() {
+    let e = engine("tiny");
+    let dims = e.manifest().dims.clone();
+    let params = init_policy(&e, 4).unwrap();
+    let prompts = prompts_for(&e, 17);
+    let cfg = SamplerConfig { temperature: 1.0, top_k: 8, stop_at_eos: true };
+    // pool sized for exactly ONE sequence: every other admission must wait
+    let pps = dims.max_seq.div_ceil(rollout::DEFAULT_PAGE_SIZE);
+    let opts = RolloutOptions {
+        pool_pages: pps,
+        share_prefixes: false,
+        ..RolloutOptions::default()
+    };
+    let run =
+        rollout::run(&e, &params, &requests(&prompts), &cfg, &mut Rng::new(3), &opts).unwrap();
+    assert_eq!(run.stats.waves, dims.batch, "one sequence per wave");
+    assert!(run.stats.admission_waits >= dims.batch - 1);
+    assert!(run.stats.peak_pages <= pps, "pool cap must hold");
+    assert_eq!(run.results.len(), dims.batch);
+    for (i, r) in run.results.iter().enumerate() {
+        assert!(!r.cancelled, "request {i} must complete, not be dropped");
+        assert!(r.gen_len >= 1);
+        assert_eq!(&r.row[..dims.prompt_len], &prompts[i][..]);
+        assert_eq!(r.mask.iter().sum::<f32>() as usize, r.gen_len);
+    }
+}
+
+#[test]
+fn prefix_sharing_reuses_pages_and_keeps_bits() {
+    let e = engine("tiny");
+    let dims = e.manifest().dims.clone();
+    let params = init_policy(&e, 6).unwrap();
+    // every request carries the SAME prompt → wave 2 maps wave 1's
+    // published prompt pages instead of recomputing/rescattering them
+    let prompt = prompts_for(&e, 23)[0].clone();
+    let all: Vec<Vec<i32>> = (0..2 * dims.batch).map(|_| prompt.clone()).collect();
+    let cfg = SamplerConfig { temperature: 1.0, top_k: 8, stop_at_eos: true };
+
+    let shared_opts = RolloutOptions { paged_feedback: true, ..RolloutOptions::default() };
+    let shared =
+        rollout::run(&e, &params, &requests(&all), &cfg, &mut Rng::new(21), &shared_opts).unwrap();
+    assert!(
+        shared.stats.shared_page_hits >= 1,
+        "identical prompts across waves must hit the share index"
+    );
+
+    // sharing must be a pure allocation optimization: same seed, sharing
+    // off, dense passthrough — identical bits
+    let plain_opts = RolloutOptions { share_prefixes: false, ..RolloutOptions::default() };
+    let plain =
+        rollout::run(&e, &params, &requests(&all), &cfg, &mut Rng::new(21), &plain_opts).unwrap();
+    let a = as_gen_output(shared);
+    let b = as_gen_output(plain);
+    assert_eq!(a.rows, b.rows);
+    assert_eq!(a.gen_lens, b.gen_lens);
+    assert_eq!(a.masks, b.masks);
+}
+
+// ---------------------------------------------------------------------------
+// hand-written constant-logit artifact sets: sampler edge cases with
+// deterministic EOS timing (vocab 11 → greedy argmax is 10 == EOS on the
+// very first token; vocab 12 → argmax 11, never EOS)
+// ---------------------------------------------------------------------------
+
+const MICRO_CACHE: &str = "f32[1,2,1,6,4]";
+
+/// Extra manifest content for the fused-gate tests.
+enum Gate {
+    None,
+    /// `generate_rollout` present, no "sampler" block
+    NoSampler,
+    /// `generate_rollout` present, sampler baked with top_k=4
+    Baked,
+}
+
+/// Write a 2-row, prompt_len=2, max_seq=6 artifact set whose prefill and
+/// decode_step emit constant logits and zero caches.  `row_target` makes
+/// prefill logits one-hot at column 10+row instead (row 0 → EOS, row 1 →
+/// a non-EOS token) so EOS timing diverges across rows deterministically.
+fn micro_engine(name: &str, vocab: usize, row_target: bool, gate: Gate) -> Engine {
+    let dir: PathBuf = std::env::temp_dir()
+        .join("gcore_rollout_tests")
+        .join(format!("{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let logits = if row_target {
+        assert!(vocab > 11, "row targets are columns 10 and 11");
+        format!(
+            "  %rows = s32[2,{vocab}] iota(), iota_dimension=0\n  \
+             %cols = s32[2,{vocab}] iota(), iota_dimension=1\n  \
+             %c10 = s32[] constant(10)\n  \
+             %b10 = s32[2,{vocab}] broadcast(s32[] %c10), dimensions={{}}\n  \
+             %tgt = s32[2,{vocab}] add(s32[2,{vocab}] %rows, s32[2,{vocab}] %b10)\n  \
+             %eq = pred[2,{vocab}] compare(s32[2,{vocab}] %cols, s32[2,{vocab}] %tgt), direction=EQ\n  \
+             %c5 = f32[] constant(5)\n  \
+             %hi = f32[2,{vocab}] broadcast(f32[] %c5), dimensions={{}}\n  \
+             %lo = f32[2,{vocab}] broadcast(f32[] %c0), dimensions={{}}\n  \
+             %logits = f32[2,{vocab}] select(pred[2,{vocab}] %eq, f32[2,{vocab}] %hi, f32[2,{vocab}] %lo)\n"
+        )
+    } else {
+        format!("  %logits = f32[2,{vocab}] broadcast(f32[] %c0), dimensions={{}}\n")
+    };
+    let prefill = format!(
+        "HloModule prefill\n\n\
+         ENTRY %entry (p0: f32[1], p1: s32[2,2]) -> (f32[2,{vocab}], {MICRO_CACHE}, {MICRO_CACHE}) {{\n  \
+         %v0 = f32[1] parameter(0)\n  \
+         %v1 = s32[2,2] parameter(1)\n  \
+         %c0 = f32[] constant(0)\n\
+         {logits}  \
+         %ck = {MICRO_CACHE} broadcast(f32[] %c0), dimensions={{}}\n  \
+         %cv = {MICRO_CACHE} broadcast(f32[] %c0), dimensions={{}}\n  \
+         ROOT %result = (f32[2,{vocab}], {MICRO_CACHE}, {MICRO_CACHE}) tuple(f32[2,{vocab}] %logits, {MICRO_CACHE} %ck, {MICRO_CACHE} %cv)\n\
+         }}\n"
+    );
+    let decode = format!(
+        "HloModule decode_step\n\n\
+         ENTRY %entry (p0: f32[1], p1: {MICRO_CACHE}, p2: {MICRO_CACHE}, p3: s32[2], p4: s32[]) -> (f32[2,{vocab}], {MICRO_CACHE}, {MICRO_CACHE}) {{\n  \
+         %v0 = f32[1] parameter(0)\n  \
+         %v1 = {MICRO_CACHE} parameter(1)\n  \
+         %v2 = {MICRO_CACHE} parameter(2)\n  \
+         %v3 = s32[2] parameter(3)\n  \
+         %v4 = s32[] parameter(4)\n  \
+         %c0 = f32[] constant(0)\n  \
+         %logits = f32[2,{vocab}] broadcast(f32[] %c0), dimensions={{}}\n  \
+         ROOT %result = (f32[2,{vocab}], {MICRO_CACHE}, {MICRO_CACHE}) tuple(f32[2,{vocab}] %logits, {MICRO_CACHE} %v1, {MICRO_CACHE} %v2)\n\
+         }}\n"
+    );
+    std::fs::write(dir.join("prefill.hlo.txt"), prefill).unwrap();
+    std::fs::write(dir.join("decode_step.hlo.txt"), decode).unwrap();
+
+    let cache_shape = "[1, 2, 1, 6, 4]";
+    let outputs = format!(
+        r#"[{{"name": "out/0", "shape": [2, {vocab}], "dtype": "f32"}},
+            {{"name": "out/1", "shape": {cache_shape}, "dtype": "f32"}},
+            {{"name": "out/2", "shape": {cache_shape}, "dtype": "f32"}}]"#
+    );
+    // the gate bails before ever touching the fused artifact, so its HLO
+    // file deliberately does not exist — reaching for it would be a bug
+    let fused = match gate {
+        Gate::None => "",
+        Gate::NoSampler | Gate::Baked => {
+            r#", "generate_rollout": {"file": "generate_rollout.hlo.txt",
+                "inputs": [{"name": "p/w", "shape": [1], "dtype": "f32"},
+                           {"name": "prompts", "shape": [2, 2], "dtype": "i32"},
+                           {"name": "seed", "shape": [], "dtype": "u32"},
+                           {"name": "temperature", "shape": [], "dtype": "f32"}],
+                "outputs": [{"name": "rows", "shape": [2, 6], "dtype": "i32"}],
+                "hlo_bytes": 0}"#
+        }
+    };
+    let sampler = match gate {
+        Gate::Baked => r#", "sampler": {"top_k": 4, "stop_at_eos": true}"#,
+        _ => "",
+    };
+    let manifest = format!(
+        r#"{{
+"config": {{"name": "micro", "vocab": {vocab}, "d_model": 4, "n_layers": 1,
+           "n_heads": 1, "d_ff": 4, "max_seq": 6, "prompt_len": 2,
+           "batch": 2, "use_pallas": false}},
+"param_count": 1,
+"scalar_param_count": 1,
+"policy_tree": [{{"path": "p/w", "shape": [1], "dtype": "f32"}}],
+"scalar_tree": [{{"path": "p/w", "shape": [1], "dtype": "f32"}}],
+"artifacts": {{
+ "prefill": {{"file": "prefill.hlo.txt",
+   "inputs": [{{"name": "p/w", "shape": [1], "dtype": "f32"}},
+              {{"name": "tokens", "shape": [2, 2], "dtype": "i32"}}],
+   "outputs": {outputs}, "hlo_bytes": 1}},
+ "decode_step": {{"file": "decode_step.hlo.txt",
+   "inputs": [{{"name": "p/w", "shape": [1], "dtype": "f32"}},
+              {{"name": "cache_k", "shape": {cache_shape}, "dtype": "f32"}},
+              {{"name": "cache_v", "shape": {cache_shape}, "dtype": "f32"}},
+              {{"name": "token", "shape": [2], "dtype": "i32"}},
+              {{"name": "pos", "shape": [], "dtype": "i32"}}],
+   "outputs": {outputs}, "hlo_bytes": 1}}{fused}
+}}{sampler}
+}}"#
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    Engine::from_dir(&dir).unwrap()
+}
+
+fn micro_params() -> ParamSet {
+    ParamSet::new(vec![Tensor::f32(vec![1], vec![0.0])])
+}
+
+fn micro_prompts() -> Vec<Vec<i32>> {
+    vec![vec![1, 2], vec![3, 4]]
+}
+
+const GREEDY: SamplerConfig = SamplerConfig { temperature: 0.0, top_k: 1, stop_at_eos: true };
+
+#[test]
+fn eos_on_first_token_and_all_rows_simultaneously() {
+    // vocab 11, all-zero logits: greedy argmax (last max wins on ties) is
+    // index 10 == EOS — every row emits EOS as its first generated token
+    let e = micro_engine("eos_first", 11, false, Gate::None);
+    let params = micro_params();
+    let prompts = micro_prompts();
+    let base =
+        generation::generate_stepwise(&e, &params, &prompts, &GREEDY, &mut Rng::new(1)).unwrap();
+    let run = rollout::run(
+        &e,
+        &params,
+        &requests(&prompts),
+        &GREEDY,
+        &mut Rng::new(2), // greedy: rng must not matter
+        &RolloutOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(run.stats.decode_calls, 0, "all rows retire at the first sample");
+    assert_eq!(run.stats.generated_tokens, 2);
+    let out = as_gen_output(run);
+    assert_eq!(out.rows, base.rows);
+    assert_eq!(out.gen_lens, base.gen_lens);
+    assert_eq!(out.masks, base.masks);
+    for (i, p) in prompts.iter().enumerate() {
+        assert_eq!(out.gen_lens[i], 1);
+        assert_eq!(out.rows[i], vec![p[0], p[1], EOS, PAD, PAD, PAD]);
+        assert_eq!(out.masks[i], vec![0.0, 0.0, 1.0, 0.0, 0.0, 0.0]);
+    }
+}
+
+#[test]
+fn greedy_without_eos_runs_to_the_length_cap() {
+    // vocab 12: argmax is 11, never EOS — rows fill to max_seq
+    let e = micro_engine("never_eos", 12, false, Gate::None);
+    let params = micro_params();
+    let prompts = micro_prompts();
+    let base =
+        generation::generate_stepwise(&e, &params, &prompts, &GREEDY, &mut Rng::new(5)).unwrap();
+    let run = rollout::run(
+        &e,
+        &params,
+        &requests(&prompts),
+        &GREEDY,
+        &mut Rng::new(6),
+        &RolloutOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(run.stats.decode_calls, 3); // positions 2..=4 decode, 5 is the cap
+    let out = as_gen_output(run);
+    assert_eq!(out.rows, base.rows);
+    assert_eq!(out.gen_lens, base.gen_lens);
+    for (i, p) in prompts.iter().enumerate() {
+        assert_eq!(out.gen_lens[i], 4);
+        assert_eq!(out.rows[i], vec![p[0], p[1], 11, 11, 11, 11]);
+        assert_eq!(out.masks[i].iter().sum::<f32>(), 4.0);
+    }
+}
+
+#[test]
+fn top_k_larger_than_vocab_is_clamped_identically() {
+    let e = micro_engine("topk_clamp", 12, false, Gate::None);
+    let params = micro_params();
+    let prompts = micro_prompts();
+    let cfg = SamplerConfig { temperature: 1.0, top_k: 64, stop_at_eos: true };
+    let base =
+        generation::generate_stepwise(&e, &params, &prompts, &cfg, &mut Rng::new(31)).unwrap();
+    for feedback in [false, true] {
+        let opts = RolloutOptions { paged_feedback: feedback, ..RolloutOptions::default() };
+        let run = rollout::run(&e, &params, &requests(&prompts), &cfg, &mut Rng::new(31), &opts)
+            .unwrap();
+        let out = as_gen_output(run);
+        assert_eq!(out.rows, base.rows, "paged_feedback={feedback}");
+        assert_eq!(out.gen_lens, base.gen_lens);
+        assert!(out.rows.iter().flatten().all(|&t| t < 12));
+    }
+}
+
+#[test]
+fn cancellation_preempts_stragglers_and_reclaims_pages() {
+    // prefill logits: row 0 → EOS immediately, row 1 → token 11 (never
+    // EOS); zero-grace policy with needed=1 preempts row 1 right away
+    let e = micro_engine("cancel_zero_grace", 12, true, Gate::None);
+    let params = micro_params();
+    let prompts = micro_prompts();
+    let opts = RolloutOptions {
+        cancel: Some(CancelPolicy { needed: 1, grace_steps: 0 }),
+        ..RolloutOptions::default()
+    };
+    let run =
+        rollout::run(&e, &params, &requests(&prompts), &GREEDY, &mut Rng::new(1), &opts).unwrap();
+    assert_eq!(run.stats.finished, 1);
+    assert_eq!(run.stats.cancelled, 1);
+    let r0 = &run.results[0];
+    assert!(!r0.cancelled);
+    assert_eq!(r0.gen_len, 1);
+    assert_eq!(r0.row, vec![1, 2, EOS, PAD, PAD, PAD]);
+    let r1 = &run.results[1];
+    assert!(r1.cancelled);
+    assert_eq!(r1.gen_len, 1);
+    assert_eq!(r1.row, vec![3, 4, 11, PAD, PAD, PAD]);
+    assert_eq!(r1.mask.iter().sum::<f32>() as usize, r1.gen_len);
+}
+
+#[test]
+fn generous_grace_lets_stragglers_finish() {
+    let e = micro_engine("cancel_grace", 12, true, Gate::None);
+    let params = micro_params();
+    let prompts = micro_prompts();
+    let opts = RolloutOptions {
+        cancel: Some(CancelPolicy { needed: 1, grace_steps: 8 }),
+        ..RolloutOptions::default()
+    };
+    let run =
+        rollout::run(&e, &params, &requests(&prompts), &GREEDY, &mut Rng::new(1), &opts).unwrap();
+    // grace (scaled: ceil(8 * 1/2) = 4) outlasts the 3 remaining decode
+    // steps to the cap — nothing is cancelled
+    assert_eq!(run.stats.cancelled, 0);
+    assert_eq!(run.stats.finished, 2);
+    assert_eq!(run.results[1].gen_len, 4);
+}
+
+#[test]
+fn cancellation_drains_never_admitted_requests() {
+    // 3 waves' worth of never-EOS requests: wave 1 finishes at the cap,
+    // arming the policy; wave 2 is preempted at its first sample; the
+    // remaining queue never runs and comes back cancelled with gen_len 0
+    let e = micro_engine("cancel_queue", 12, false, Gate::None);
+    let params = micro_params();
+    let all: Vec<Vec<i32>> = (0..6).map(|i| vec![1 + (i as i32 % 2), 5]).collect();
+    let opts = RolloutOptions {
+        cancel: Some(CancelPolicy { needed: 1, grace_steps: 0 }),
+        ..RolloutOptions::default()
+    };
+    let run =
+        rollout::run(&e, &params, &requests(&all), &GREEDY, &mut Rng::new(1), &opts).unwrap();
+    assert_eq!(run.results.len(), 6);
+    assert_eq!(run.stats.finished, 2);
+    assert_eq!(run.stats.cancelled, 4);
+    for r in &run.results[..2] {
+        assert!(!r.cancelled);
+        assert_eq!(r.gen_len, 4);
+    }
+    for r in &run.results[2..4] {
+        assert!(r.cancelled);
+        assert_eq!(r.gen_len, 1, "wave-2 rows are preempted after one sample");
+    }
+    for (i, r) in run.results[4..].iter().enumerate() {
+        assert!(r.cancelled);
+        assert_eq!(r.gen_len, 0, "request {} never ran", i + 4);
+        assert_eq!(&r.row[..2], &all[i + 4][..]);
+        assert!(r.row[2..].iter().all(|&t| t == PAD));
+        assert!(r.mask.iter().all(|&m| m == 0.0));
+    }
+}
+
+#[test]
+fn micro_exhaustion_with_small_pages_blocks_and_completes() {
+    let e = micro_engine("micro_pool", 12, false, Gate::None);
+    let params = micro_params();
+    let prompts = micro_prompts();
+    // page_size 2 → 3 pages per sequence; pool of 3 → one sequence at a time
+    let opts = RolloutOptions {
+        page_size: 2,
+        pool_pages: 3,
+        share_prefixes: false,
+        paged_feedback: true,
+        ..RolloutOptions::default()
+    };
+    let base =
+        generation::generate_stepwise(&e, &params, &prompts, &GREEDY, &mut Rng::new(1)).unwrap();
+    let run =
+        rollout::run(&e, &params, &requests(&prompts), &GREEDY, &mut Rng::new(1), &opts).unwrap();
+    assert_eq!(run.stats.waves, 2);
+    assert!(run.stats.admission_waits >= 1);
+    assert!(run.stats.peak_pages <= 3);
+    let out = as_gen_output(run);
+    // greedy + constant logits: per-wave decode equals the batch reference
+    assert_eq!(out.rows, base.rows);
+    assert_eq!(out.gen_lens, base.gen_lens);
+}
+
+// ---------------------------------------------------------------------------
+// fused-path gate (satellite: the old `top_k == 16` magic-constant check)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fused_gate_rejects_mismatched_sampler_config() {
+    let e = micro_engine("gate_mismatch", 11, false, Gate::Baked);
+    let params = micro_params();
+    let prompts = micro_prompts();
+    let cfg = SamplerConfig { temperature: 1.0, top_k: 8, stop_at_eos: true };
+    let msg = format!(
+        "{:#}",
+        generation::generate(&e, &params, &prompts, &cfg, &mut Rng::new(1)).unwrap_err()
+    );
+    assert!(msg.contains("does not match"), "{msg}");
+    assert!(msg.contains("top_k=4"), "{msg}");
+}
+
+#[test]
+fn fused_gate_rejects_missing_sampler_block() {
+    let e = micro_engine("gate_missing", 11, false, Gate::NoSampler);
+    let params = micro_params();
+    let prompts = micro_prompts();
+    let cfg = SamplerConfig { temperature: 1.0, top_k: 16, stop_at_eos: true };
+    let msg = format!(
+        "{:#}",
+        generation::generate(&e, &params, &prompts, &cfg, &mut Rng::new(1)).unwrap_err()
+    );
+    assert!(msg.contains("sampler"), "{msg}");
+    assert!(msg.contains("regenerate"), "{msg}");
+}
+
+#[test]
+fn greedy_request_bypasses_the_fused_gate() {
+    // temperature <= 0 is an explicit argmax ask the stochastic fused
+    // module cannot express — it must take the per-token path even on a
+    // set carrying generate_rollout (whose HLO here does not even exist)
+    let e = micro_engine("gate_greedy", 11, false, Gate::Baked);
+    let params = micro_params();
+    let prompts = micro_prompts();
+    let out = generation::generate(&e, &params, &prompts, &GREEDY, &mut Rng::new(1)).unwrap();
+    assert_eq!(out.gen_lens, vec![1, 1]);
+    assert_eq!(out.rows[0], vec![1, 2, EOS, PAD, PAD, PAD]);
+}
+
+// ---------------------------------------------------------------------------
+// accounting rule (satellite: dead-row PAD/mask bookkeeping)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn account_row_pins_the_shared_accounting_rule() {
+    // EOS mid-span: gen length runs to the first EOS inclusive, the tail
+    // is PAD, the mask covers exactly the span
+    let mut row = vec![1, 2, 5, EOS, 7, 9];
+    let (glen, mask) = generation::account_row(&mut row, 2, true);
+    assert_eq!(glen, 2);
+    assert_eq!(row, vec![1, 2, 5, EOS, PAD, PAD]);
+    assert_eq!(mask, vec![0.0, 0.0, 1.0, 1.0, 0.0, 0.0]);
+
+    // no EOS: the whole generated span counts
+    let mut row = vec![1, 2, 5, 6, 7, 9];
+    let (glen, mask) = generation::account_row(&mut row, 2, true);
+    assert_eq!(glen, 4);
+    assert_eq!(row, vec![1, 2, 5, 6, 7, 9]);
+    assert_eq!(mask.iter().sum::<f32>(), 4.0);
+
+    // stop_at_eos = false: EOS is just a token (alloc-count pins rely on
+    // this — the scheduler must keep decoding through it)
+    let mut row = vec![1, 2, EOS, 6, 7, 9];
+    let (glen, _) = generation::account_row(&mut row, 2, false);
+    assert_eq!(glen, 4);
+    assert_eq!(row, vec![1, 2, EOS, 6, 7, 9]);
+}
+
+#[test]
+fn stop_at_eos_false_decodes_through_eos_identically() {
+    // vocab 11 zero logits: every sampled token is EOS, but with
+    // stop_at_eos=false rows must decode to the cap anyway (the greedy
+    // evaluate()/alloc-count path depends on this)
+    let e = micro_engine("no_stop", 11, false, Gate::None);
+    let params = micro_params();
+    let prompts = micro_prompts();
+    let cfg = SamplerConfig { temperature: 0.0, top_k: 1, stop_at_eos: false };
+    let base =
+        generation::generate_stepwise(&e, &params, &prompts, &cfg, &mut Rng::new(1)).unwrap();
+    let run = rollout::run(
+        &e,
+        &params,
+        &requests(&prompts),
+        &cfg,
+        &mut Rng::new(2),
+        &RolloutOptions::default(),
+    )
+    .unwrap();
+    let out = as_gen_output(run);
+    assert_eq!(out.rows, base.rows);
+    assert_eq!(out.gen_lens, vec![4, 4]);
+    for row in &out.rows {
+        assert_eq!(&row[2..], &[EOS, EOS, EOS, EOS]);
+    }
+}
