@@ -9,6 +9,14 @@
 //! See DESIGN.md for the full system inventory and experiment index, and
 //! EXPERIMENTS.md for reproduced results.
 
+// Unsafe inventory: `util::pod` is the only module with unsafe *code*
+// (POD slice reinterpretation for the collective data plane); the pjrt
+// feature adds two `unsafe impl Send/Sync` in `runtime::engine` justified
+// by its backend mutex.  Keep it that way — new unsafe belongs in
+// util::pod behind a safe API, and any unsafe fn must spell out its
+// internal unsafe blocks:
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod attention;
 pub mod balance;
 pub mod checkpoint;

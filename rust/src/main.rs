@@ -9,6 +9,10 @@
 //!   bench <e1..e9|all> regenerate an experiment table (DESIGN.md §4)
 //!   simulate           run a placement simulation (colocate/coexist/dynamic)
 //!   inspect-artifacts  print the manifest of an artifact set
+//!   hlo-lint           statically verify an artifact set's HLO (shape/dtype
+//!                      inference, def-use, manifest I/O contract) and print
+//!                      the per-artifact analysis table; nonzero exit on any
+//!                      diagnostic
 //!   help
 
 use std::net::SocketAddr;
@@ -50,6 +54,13 @@ USAGE:
   gcore simulate [--placement colocate|coexist|dynamic] [--devices N]
                  [--steps N] [--dapo]
   gcore inspect-artifacts [--artifacts tiny]
+  gcore hlo-lint [<artifacts-dir>] [--artifacts tiny]
+              statically verify every artifact in the set (shape/dtype
+              inference, def-use, reduce contracts, manifest I/O) and print
+              instruction counts, unsupported-op and fusible-chain reports,
+              and the static peak-live-bytes bound; exits nonzero if any
+              diagnostic fires or decode_step exceeds the 3 MiB/token
+              allocation budget asserted in tests/alloc_counts.rs
 ";
 
 fn main() -> Result<()> {
@@ -61,6 +72,7 @@ fn main() -> Result<()> {
         Some("bench") => cmd_bench(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("inspect-artifacts") => cmd_inspect(&args),
+        Some("hlo-lint") => cmd_hlo_lint(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -329,6 +341,92 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         report.swap_s,
         report.bubble_s,
         report.samples_per_hour()
+    );
+    Ok(())
+}
+
+/// Per-decode-step allocation budget asserted dynamically by
+/// tests/alloc_counts.rs; the lint cross-checks the *static* peak-live
+/// bound against the same number so planner/allocator drift fails here.
+const DECODE_STEP_BUDGET: usize = 3 << 20;
+
+fn cmd_hlo_lint(args: &Args) -> Result<()> {
+    use gcore::runtime::hlo::verify::{lint_set, DiagKind};
+    use gcore::util::bench::{fmt_bytes, format_rows};
+
+    let dir = match args.positional.get(1) {
+        Some(p) => std::path::PathBuf::from(p),
+        None => gcore::runtime::artifacts_dir(args.get_or("artifacts", "tiny")),
+    };
+    let report =
+        lint_set(&dir).with_context(|| format!("linting artifact set at {dir:?}"))?;
+
+    let mut rows = Vec::new();
+    let mut over_budget = Vec::new();
+    for a in &report.artifacts {
+        let unsupported = a
+            .diagnostics
+            .iter()
+            .filter(|d| d.kind == DiagKind::UnsupportedOp)
+            .count();
+        let (chains, peak) = match &a.plan {
+            Some(p) => (p.fusible_chains.len().to_string(), fmt_bytes(p.peak_live_bytes)),
+            None => ("-".to_string(), "-".to_string()),
+        };
+        if a.name == "decode_step" {
+            if let Some(p) = &a.plan {
+                if p.peak_live_bytes > DECODE_STEP_BUDGET {
+                    over_budget.push(format!(
+                        "decode_step static peak-live bound {} exceeds the \
+                         {} budget tests/alloc_counts.rs asserts per token",
+                        fmt_bytes(p.peak_live_bytes),
+                        fmt_bytes(DECODE_STEP_BUDGET)
+                    ));
+                }
+            }
+        }
+        rows.push(vec![
+            a.name.clone(),
+            a.instrs.to_string(),
+            unsupported.to_string(),
+            chains,
+            peak,
+            a.diagnostics.len().to_string(),
+        ]);
+    }
+    print!(
+        "{}",
+        format_rows(
+            &format!("hlo-lint: {} ({})", report.set_name, dir.display()),
+            &["artifact", "instrs", "unsupported", "fusible chains", "peak live", "diags"],
+            &rows,
+        )
+    );
+
+    let total = report.total_diagnostics();
+    if total > 0 {
+        println!("\ndiagnostics:");
+        for a in &report.artifacts {
+            for d in &a.diagnostics {
+                println!("  {}: {d}", a.name);
+            }
+        }
+    }
+    for msg in &over_budget {
+        println!("\nbudget: {msg}");
+    }
+    if total > 0 || !over_budget.is_empty() {
+        bail!(
+            "hlo-lint: {} diagnostic(s), {} budget violation(s) in set '{}'",
+            total,
+            over_budget.len(),
+            report.set_name
+        );
+    }
+    println!(
+        "\nhlo-lint: {} artifact(s) verified clean in set '{}'",
+        report.artifacts.len(),
+        report.set_name
     );
     Ok(())
 }

@@ -31,7 +31,7 @@ use std::time::{Duration, Instant};
 use anyhow::Context;
 use anyhow::{bail, Result};
 
-use crate::runtime::hlo::Program;
+use crate::runtime::hlo::{verify, Program};
 use crate::runtime::manifest::{artifacts_dir, ArtifactSpec, Manifest};
 use crate::runtime::tensor::Tensor;
 
@@ -159,11 +159,33 @@ impl Engine {
         kind: BackendKind,
     ) -> Result<Engine> {
         let manifest = Manifest::load(dir)?;
-        Ok(Engine {
+        let engine = Engine {
             manifest,
             inner: Mutex::new(Self::new_backend(kind)?),
             stats: Mutex::new(HashMap::new()),
-        })
+        };
+        engine.preverify_interp()?;
+        Ok(engine)
+    }
+
+    /// Interpreter backend: eagerly parse + statically verify every
+    /// artifact whose HLO file is present, so a corrupt set fails at load
+    /// (`try_load` then panics at startup) instead of mid-rollout on a
+    /// coordinator thread.  Artifacts whose HLO file is *missing* are
+    /// skipped on purpose: gated sets omit files by design (e.g. no fused
+    /// `generate_rollout` in the fixtures) and the lazy `ensure_compiled`
+    /// error for them is the actionable one.
+    fn preverify_interp(&self) -> Result<()> {
+        if self.backend_name() != "interp" {
+            return Ok(());
+        }
+        let names: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
+        for name in names {
+            if self.manifest.hlo_path(&name)?.exists() {
+                self.ensure_compiled(&name)?;
+            }
+        }
+        Ok(())
     }
 
     #[cfg(feature = "pjrt")]
@@ -292,7 +314,22 @@ impl Engine {
                     )
                 })?;
                 let program = Program::parse(&text)
-                    .map_err(|e| e.context(format!("parsing HLO text {path:?}")))?;
+                    .map_err(|e| e.context(format!("compiling HLO text {path:?}")))?;
+                let io = verify::verify_artifact_io(
+                    program.module(),
+                    self.manifest.artifact(name)?,
+                );
+                if !io.is_empty() {
+                    let list = io
+                        .iter()
+                        .map(|d| format!("  {d}"))
+                        .collect::<Vec<_>>()
+                        .join("\n");
+                    bail!(
+                        "artifact '{name}' ({path:?}) disagrees with its \
+                         manifest I/O contract:\n{list}"
+                    );
+                }
                 programs.insert(name.to_string(), Arc::new(program));
             }
         }
@@ -635,5 +672,46 @@ mod tests {
         let e = synthetic_engine("stats");
         assert!(e.stats().is_empty());
         assert!(e.mean_call_time("echo").is_none());
+    }
+
+    #[test]
+    fn interp_load_verifies_present_hlo() {
+        // a shape-corrupt artifact must fail at LOAD time (try_load panics
+        // at startup), not at first execution mid-rollout
+        let dir = tmpdir("load_verify");
+        std::fs::write(dir.join("manifest.json"), MINIMAL_MANIFEST).unwrap();
+        std::fs::write(
+            dir.join("echo.hlo.txt"),
+            ECHO_HLO.replace("%v1 = f32[2]", "%v1 = f32[3]"),
+        )
+        .unwrap();
+        let msg = format!(
+            "{:#}",
+            Engine::from_dir_with_backend(&dir, BackendKind::Interp).unwrap_err()
+        );
+        assert!(msg.contains("failed static verification"), "{msg}");
+        assert!(msg.contains("%v1"), "{msg}");
+    }
+
+    #[test]
+    fn interp_load_rejects_manifest_io_drift() {
+        // HLO verifies internally but disagrees with the manifest's declared
+        // output shape — the by-position tensor feed would silently corrupt
+        let dir = tmpdir("io_drift");
+        std::fs::write(
+            dir.join("manifest.json"),
+            MINIMAL_MANIFEST.replace(
+                r#""name": "y", "shape": [2]"#,
+                r#""name": "y", "shape": [3]"#,
+            ),
+        )
+        .unwrap();
+        std::fs::write(dir.join("echo.hlo.txt"), ECHO_HLO).unwrap();
+        let msg = format!(
+            "{:#}",
+            Engine::from_dir_with_backend(&dir, BackendKind::Interp).unwrap_err()
+        );
+        assert!(msg.contains("I/O contract"), "{msg}");
+        assert!(msg.contains("output #0"), "{msg}");
     }
 }

@@ -1,4 +1,4 @@
-//! Reference evaluator for parsed HLO modules.
+//! Reference evaluator for *verified* HLO modules.
 //!
 //! Correctness first, but with the two properties the engine tier needs:
 //!
@@ -9,6 +9,12 @@
 //!   allocations stay bounded by the step outputs (tests/alloc_counts.rs).
 //! * evaluation is pure and `&self`, so coordinator threads execute
 //!   concurrently (unlike PJRT, which the engine serializes).
+//!
+//! [`Program::parse`] runs [`super::verify`] and precomputes a
+//! [`StaticPlan`] before anything executes: liveness (`last_use`) and
+//! buffer uniqueness come from the plan, so in-place mutation is a
+//! *checked promise* — an `Arc::try_unwrap` the plan said would succeed
+//! erroring out is a planner bug surfaced loudly, not a silent copy.
 
 use std::sync::Arc;
 
@@ -17,40 +23,48 @@ use anyhow::{bail, Context, Result};
 use crate::runtime::hlo::parser::{
     CmpDir, DotDims, HDtype, HShape, HloModule, Instr, Literal, ReduceKind,
 };
+use crate::runtime::hlo::plan::StaticPlan;
+use crate::runtime::hlo::verify;
 use crate::runtime::tensor::{Tensor, TensorData};
 
-/// A compiled-for-evaluation module: parse once, evaluate many times.
+/// A compiled-for-evaluation module: parse + verify + plan once, evaluate
+/// many times.
 #[derive(Debug, Clone)]
 pub struct Program {
     module: HloModule,
-    /// For the entry computation: `last_use[i]` = index of the last
-    /// instruction consuming instruction `i`'s value (`usize::MAX` for the
-    /// root and unused values — those are never dropped early).
-    last_use: Vec<usize>,
+    plan: StaticPlan,
 }
 
 impl Program {
     pub fn parse(text: &str) -> Result<Program> {
-        Ok(Program::new(HloModule::parse(text)?))
+        Program::compile(HloModule::parse(text)?)
     }
 
-    pub fn new(module: HloModule) -> Program {
-        let entry = module.entry_computation();
-        let mut last_use = vec![usize::MAX; entry.instrs.len()];
-        for (i, ins) in entry.instrs.iter().enumerate() {
-            for &op in &ins.operands {
-                last_use[op] = i;
-            }
+    /// Verify a parsed module and build its execution plan.  Any verifier
+    /// diagnostic — shape/dtype mismatch, def-use defect, unsupported op,
+    /// missing attribute — rejects the module here, before evaluation.
+    pub fn compile(module: HloModule) -> Result<Program> {
+        let diags = verify::verify_module(&module);
+        if !diags.is_empty() {
+            let list: Vec<String> = diags.iter().map(|d| format!("  {d}")).collect();
+            bail!(
+                "module '{}' failed static verification with {} diagnostic(s):\n{}",
+                module.name,
+                diags.len(),
+                list.join("\n")
+            );
         }
-        last_use[entry.root] = usize::MAX;
-        for &op in &entry.instrs[entry.root].operands {
-            last_use[op] = usize::MAX;
-        }
-        Program { module, last_use }
+        let plan = StaticPlan::build(&module);
+        Ok(Program { module, plan })
     }
 
     pub fn module(&self) -> &HloModule {
         &self.module
+    }
+
+    /// The static execution plan (liveness, uniqueness, peak-live bound).
+    pub fn plan(&self) -> &StaticPlan {
+        &self.plan
     }
 
     /// Instruction count of the entry computation (interp "compile" stat).
@@ -115,7 +129,8 @@ impl Program {
                 } else {
                     slots[op].take()
                 };
-                v.context("root operand missing")?.into_tensor()
+                let owned = !dup_later && self.plan.unique[op];
+                v.context("root operand missing")?.into_tensor(owned)
             })
             .collect()
     }
@@ -128,11 +143,14 @@ impl Program {
         inputs: &[&Tensor],
         slots: &mut [Option<Val>],
     ) -> Result<Option<Val>> {
-        // Take operands out of their slots at last use so uniquely-owned
-        // buffers can be mutated in place downstream.
+        // Take operands out of their slots at their plan-computed last use
+        // so uniquely-owned buffers can be mutated in place downstream.
+        // `owned[k]` = the take yields the only handle on the buffer (per
+        // the static alias analysis), so in-place mutation is safe.
         let mut args: Vec<Val> = Vec::with_capacity(ins.operands.len());
+        let mut owned: Vec<bool> = Vec::with_capacity(ins.operands.len());
         for &op in &ins.operands {
-            let take = self.last_use[op] == idx
+            let take = self.plan.last_use[op] == idx
                 && ins.operands.iter().filter(|&&o| o == op).count() == 1;
             let v = if take {
                 slots[op].take()
@@ -140,6 +158,7 @@ impl Program {
                 slots[op].clone()
             };
             args.push(v.with_context(|| format!("operand #{op} missing"))?);
+            owned.push(take && self.plan.unique[op]);
         }
         let out_shape = ins.shape.as_ref();
         let v = match ins.opcode.as_str() {
@@ -152,30 +171,30 @@ impl Program {
                 &out_shape.context("constant without shape")?.dims,
             )?,
             "tuple" => return Ok(None),
-            "add" => binary(args, BinOp::Add)?,
-            "subtract" => binary(args, BinOp::Sub)?,
-            "multiply" => binary(args, BinOp::Mul)?,
-            "divide" => binary(args, BinOp::Div)?,
-            "maximum" => binary(args, BinOp::Max)?,
-            "minimum" => binary(args, BinOp::Min)?,
-            "power" => binary(args, BinOp::Pow)?,
-            "and" => binary(args, BinOp::And)?,
-            "or" => binary(args, BinOp::Or)?,
-            "xor" => binary(args, BinOp::Xor)?,
-            "shift-left" => binary(args, BinOp::Shl)?,
-            "shift-right-logical" => binary(args, BinOp::Shr)?,
-            "negate" => unary(args, UnOp::Neg)?,
-            "abs" => unary(args, UnOp::Abs)?,
-            "exponential" => unary(args, UnOp::Exp)?,
-            "log" => unary(args, UnOp::Log)?,
-            "tanh" => unary(args, UnOp::Tanh)?,
-            "rsqrt" => unary(args, UnOp::Rsqrt)?,
-            "sqrt" => unary(args, UnOp::Sqrt)?,
-            "sine" => unary(args, UnOp::Sin)?,
-            "cosine" => unary(args, UnOp::Cos)?,
-            "not" => unary(args, UnOp::Not)?,
+            "add" => binary(args, &owned, BinOp::Add)?,
+            "subtract" => binary(args, &owned, BinOp::Sub)?,
+            "multiply" => binary(args, &owned, BinOp::Mul)?,
+            "divide" => binary(args, &owned, BinOp::Div)?,
+            "maximum" => binary(args, &owned, BinOp::Max)?,
+            "minimum" => binary(args, &owned, BinOp::Min)?,
+            "power" => binary(args, &owned, BinOp::Pow)?,
+            "and" => binary(args, &owned, BinOp::And)?,
+            "or" => binary(args, &owned, BinOp::Or)?,
+            "xor" => binary(args, &owned, BinOp::Xor)?,
+            "shift-left" => binary(args, &owned, BinOp::Shl)?,
+            "shift-right-logical" => binary(args, &owned, BinOp::Shr)?,
+            "negate" => unary(args, &owned, UnOp::Neg)?,
+            "abs" => unary(args, &owned, UnOp::Abs)?,
+            "exponential" => unary(args, &owned, UnOp::Exp)?,
+            "log" => unary(args, &owned, UnOp::Log)?,
+            "tanh" => unary(args, &owned, UnOp::Tanh)?,
+            "rsqrt" => unary(args, &owned, UnOp::Rsqrt)?,
+            "sqrt" => unary(args, &owned, UnOp::Sqrt)?,
+            "sine" => unary(args, &owned, UnOp::Sin)?,
+            "cosine" => unary(args, &owned, UnOp::Cos)?,
+            "not" => unary(args, &owned, UnOp::Not)?,
             "compare" => compare(args, ins.direction.context("compare without direction")?)?,
-            "select" => select(args)?,
+            "select" => select(args, &owned)?,
             "convert" => convert(args, out_shape.context("convert without shape")?.dtype)?,
             "broadcast" => broadcast(
                 args,
@@ -193,20 +212,35 @@ impl Program {
             }
             "transpose" => transpose(args, &ins.dims)?,
             "slice" => slice_op(args, &ins.slice)?,
-            "concatenate" => concat(args, ins.dims.first().copied().unwrap_or(0))?,
+            // a missing dimensions= used to silently mean axis 0 here; the
+            // verifier rejects it at compile time and this is the backstop
+            "concatenate" => concat(
+                args,
+                ins.dims
+                    .first()
+                    .copied()
+                    .context("concatenate without dimensions= (no silent axis-0 default)")?,
+            )?,
             "pad" => pad(args, &ins.pad_cfg)?,
             "reduce" => {
                 let name = ins.to_apply.as_deref().context("reduce without to_apply")?;
                 let kind = self.module.reduce_kind(name)?;
                 reduce(args, &ins.dims, kind)?
             }
-            "dot" => dot(args, ins.dot.clone().unwrap_or_default())?,
+            // absent dimension numbers used to default to an outer product;
+            // also rejected by the verifier, error kept as the backstop
+            "dot" => dot(
+                args,
+                ins.dot
+                    .clone()
+                    .context("dot without dimension numbers (no silent default)")?,
+            )?,
             "iota" => iota(
                 out_shape.context("iota without shape")?,
                 ins.dims.first().copied().context("iota without dimension")?,
             )?,
             "dynamic-slice" => dynamic_slice(args, &ins.dyn_sizes)?,
-            "dynamic-update-slice" => dynamic_update_slice(args)?,
+            "dynamic-update-slice" => dynamic_update_slice(args, &owned)?,
             "gather" => gather(args, ins, out_shape.context("gather without shape")?)?,
             "get-tuple-element" => bail!("tuples only supported at the root"),
             other => bail!("unsupported opcode '{other}'"),
@@ -301,11 +335,23 @@ impl Val {
         }
     }
 
-    /// Owned f32 buffer when uniquely held (for in-place mutation).
-    fn into_f32_owned(self) -> Result<(Vec<usize>, Vec<f32>)> {
+    /// f32 buffer for in-place mutation.  `owned` is the static plan's
+    /// promise that this handle is the only one — then the unwrap must
+    /// succeed, and failure is a planner bug reported loudly.  Without the
+    /// promise the buffer is copied (never a guessed `try_unwrap`).
+    fn into_f32_owned(self, owned: bool) -> Result<(Vec<usize>, Vec<f32>)> {
         match self.data {
             Data::F32(a) => {
-                let v = Arc::try_unwrap(a).unwrap_or_else(|a| a.as_ref().clone());
+                let v = if owned {
+                    Arc::try_unwrap(a).map_err(|_| {
+                        anyhow::anyhow!(
+                            "static plan marked this buffer unique but it is shared \
+                             (planner bug)"
+                        )
+                    })?
+                } else {
+                    a.as_ref().clone()
+                };
                 Ok((self.dims, v))
             }
             other => bail!("expected f32 value, got {:?}", dtype_of(&other)),
@@ -320,18 +366,29 @@ impl Val {
         }
     }
 
-    fn into_tensor(self) -> Result<Tensor> {
+    /// Hand the buffer to a host tensor.  `owned` (from the static plan)
+    /// moves the buffer without a copy and treats a shared `Arc` as a
+    /// planner bug; `!owned` copies.
+    fn into_tensor(self, owned: bool) -> Result<Tensor> {
         let dims = self.dims;
+        macro_rules! unwrap_buf {
+            ($a:expr) => {
+                if owned {
+                    Arc::try_unwrap($a).map_err(|_| {
+                        anyhow::anyhow!(
+                            "static plan marked this output buffer unique but it \
+                             is shared (planner bug)"
+                        )
+                    })?
+                } else {
+                    $a.as_ref().clone()
+                }
+            };
+        }
         Ok(match self.data {
-            Data::F32(a) => {
-                Tensor::f32(dims, Arc::try_unwrap(a).unwrap_or_else(|a| a.as_ref().clone()))
-            }
-            Data::S32(a) => {
-                Tensor::i32(dims, Arc::try_unwrap(a).unwrap_or_else(|a| a.as_ref().clone()))
-            }
-            Data::U32(a) => {
-                Tensor::u32(dims, Arc::try_unwrap(a).unwrap_or_else(|a| a.as_ref().clone()))
-            }
+            Data::F32(a) => Tensor::f32(dims, unwrap_buf!(a)),
+            Data::S32(a) => Tensor::i32(dims, unwrap_buf!(a)),
+            Data::U32(a) => Tensor::u32(dims, unwrap_buf!(a)),
             Data::Pred(_) => bail!("pred values cannot cross the engine boundary"),
         })
     }
@@ -455,7 +512,7 @@ enum BinOp {
     Shr,
 }
 
-fn binary(mut args: Vec<Val>, op: BinOp) -> Result<Val> {
+fn binary(mut args: Vec<Val>, owned: &[bool], op: BinOp) -> Result<Val> {
     let b = args.pop().context("binary op missing rhs")?;
     let a = args.pop().context("binary op missing lhs")?;
     if a.dims != b.dims {
@@ -473,8 +530,8 @@ fn binary(mut args: Vec<Val>, op: BinOp) -> Result<Val> {
                 BinOp::Pow => f32::powf,
                 _ => bail!("bitwise op on f32"),
             };
-            // mutate the lhs buffer in place when uniquely owned (hot path)
-            let (dims, mut x) = a.into_f32_owned()?;
+            // mutate the lhs buffer in place when the plan owns it (hot path)
+            let (dims, mut x) = a.into_f32_owned(owned.first().copied().unwrap_or(false))?;
             let rhs = b.as_f32()?;
             for (xi, &yi) in x.iter_mut().zip(rhs.iter()) {
                 *xi = f(*xi, yi);
@@ -556,7 +613,7 @@ enum UnOp {
     Not,
 }
 
-fn unary(mut args: Vec<Val>, op: UnOp) -> Result<Val> {
+fn unary(mut args: Vec<Val>, owned: &[bool], op: UnOp) -> Result<Val> {
     let a = args.remove_first()?;
     match (&a.data, op) {
         (Data::Pred(p), UnOp::Not) => {
@@ -588,7 +645,7 @@ fn unary(mut args: Vec<Val>, op: UnOp) -> Result<Val> {
                 UnOp::Cos => f32::cos,
                 UnOp::Not => return Err(anyhow::anyhow!("'not' on f32")),
             };
-            let (dims, mut x) = a.into_f32_owned()?;
+            let (dims, mut x) = a.into_f32_owned(owned.first().copied().unwrap_or(false))?;
             for xi in x.iter_mut() {
                 *xi = f(*xi);
             }
@@ -628,7 +685,7 @@ fn compare(mut args: Vec<Val>, dir: CmpDir) -> Result<Val> {
     Ok(Val::pred(a.dims.clone(), out))
 }
 
-fn select(mut args: Vec<Val>) -> Result<Val> {
+fn select(mut args: Vec<Val>, owned: &[bool]) -> Result<Val> {
     let b = args.pop().context("select missing on-false")?;
     let a = args.pop().context("select missing on-true")?;
     let p = args.pop().context("select missing predicate")?;
@@ -638,7 +695,8 @@ fn select(mut args: Vec<Val>) -> Result<Val> {
     let pv = p.as_pred()?;
     match (&a.data, &b.data) {
         (Data::F32(_), Data::F32(_)) => {
-            let (dims, mut x) = a.into_f32_owned()?;
+            // the on-true branch (operand #1) is the in-place candidate
+            let (dims, mut x) = a.into_f32_owned(owned.get(1).copied().unwrap_or(false))?;
             let on_false = b.as_f32()?;
             for ((xi, &fi), &pi) in x.iter_mut().zip(on_false.iter()).zip(pv.iter()) {
                 if !pi {
@@ -1117,10 +1175,11 @@ fn dynamic_slice(mut args: Vec<Val>, sizes: &[usize]) -> Result<Val> {
     slice_op(vec![a], &spec)
 }
 
-fn dynamic_update_slice(mut args: Vec<Val>) -> Result<Val> {
+fn dynamic_update_slice(mut args: Vec<Val>, owned: &[bool]) -> Result<Val> {
     if args.len() < 2 {
         bail!("dynamic-update-slice missing operands");
     }
+    let base_owned = owned.first().copied().unwrap_or(false);
     let base = args.remove(0);
     let update = args.remove(0);
     if base.dtype() != update.dtype() {
@@ -1156,8 +1215,19 @@ fn dynamic_update_slice(mut args: Vec<Val>) -> Result<Val> {
                 $variant(a) => a,
                 _ => unreachable!(),
             };
-            // in place when uniquely owned (the decode-loop hot path)
-            let mut buf = Arc::try_unwrap(arc).unwrap_or_else(|a| a.as_ref().clone());
+            // in place when the plan owns the base (the decode-loop hot
+            // path); a broken ownership promise errors instead of copying
+            let mut buf = if base_owned {
+                match Arc::try_unwrap(arc) {
+                    Ok(v) => v,
+                    Err(_) => bail!(
+                        "static plan marked the update base unique but it is \
+                         shared (planner bug)"
+                    ),
+                }
+            } else {
+                arc.as_ref().clone()
+            };
             let mut st = Stepper::new(&update.dims[..outer], &base_strides[..outer]);
             let mut i = 0usize;
             while let Some(off) = st.next() {
@@ -1244,7 +1314,14 @@ fn gather(mut args: Vec<Val>, ins: &Instr, out_shape: &HShape) -> Result<Val> {
             if let Some(k) = g.offset_dims.iter().position(|&a| a == axis) {
                 in_slice_off += coord * op_strides[offset_operand_dims[k]];
             } else {
-                let b = out_batch_axes.iter().position(|&a| a == axis).unwrap();
+                // every non-offset output axis is a batch axis (verified
+                // statically: offset_dims ∪ batch axes cover the output)
+                let b = out_batch_axes
+                    .iter()
+                    .position(|&a| a == axis)
+                    .with_context(|| {
+                        format!("gather output axis {axis} is neither offset nor batch")
+                    })?;
                 batch_lin += coord * batch_strides[b];
             }
         }
@@ -1260,6 +1337,8 @@ fn gather(mut args: Vec<Val>, ins: &Instr, out_shape: &HShape) -> Result<Val> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::disallowed_methods)]
+
     use super::*;
 
     fn run(text: &str, inputs: &[Tensor]) -> Vec<Tensor> {

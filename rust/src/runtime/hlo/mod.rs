@@ -2,7 +2,8 @@
 //! engine-gated test tier run on stock CI runners (no vendored XLA, no
 //! Python toolchain).
 //!
-//! Two layers:
+//! The pipeline is **parse → verify → plan → eval**, with everything
+//! before eval running once per artifact at engine load:
 //!
 //! * [`parser`] — HLO *text* (the interchange format `python/compile/aot.py`
 //!   emits) → [`parser::HloModule`].  Covers the op set the checked-in
@@ -11,11 +12,28 @@
 //!   concatenate/pad, reduce, select/compare, exp/log/tanh/rsqrt/sqrt/
 //!   sin/cos/power, iota, convert, integer bit ops, dynamic-slice/
 //!   dynamic-update-slice and gather — and fails loudly on anything else.
+//!   Opcodes in the documented gap set parse structurally (their
+//!   attributes are ignored) so the verifier can report them as
+//!   diagnostics instead of a parse failure.
+//! * [`verify`] — static analysis over the parsed module: full
+//!   shape/dtype inference per instruction (declared shape must equal the
+//!   shape re-derived from operands + attributes), def-use validation
+//!   (dead values, parameter numbering, reduce-body contracts,
+//!   unreferenced computations), and the manifest I/O cross-check.  All
+//!   findings are structured [`verify::Diagnostic`]s; `gcore hlo-lint`
+//!   renders them as a table over an artifact directory.
+//! * [`plan`] — liveness + alias analysis emitting a [`plan::StaticPlan`]:
+//!   per-value last-use indices, provable buffer uniqueness (what makes
+//!   in-place mutation a checked promise instead of an `Arc::try_unwrap`
+//!   guess), a static peak-live-bytes bound, and the fusible
+//!   elementwise-chain report that seeds future fusion work.
 //! * [`eval`] — a reference evaluator over host tensors.  Values are
 //!   `Arc`-backed so shape-only ops (reshape, same-type convert) are
-//!   zero-copy and buffers are taken at their last use — elementwise ops
-//!   and `dynamic-update-slice` then mutate in place, keeping the stepwise
-//!   decode loop's allocations bounded (asserted in tests/alloc_counts.rs).
+//!   zero-copy and buffers are taken at their plan-computed last use —
+//!   elementwise ops and `dynamic-update-slice` then mutate in place,
+//!   keeping the stepwise decode loop's allocations bounded (asserted in
+//!   tests/alloc_counts.rs and cross-checked by the lint's
+//!   peak-live-bytes column).
 //!
 //! The fixture artifacts themselves (a real 2-layer byte-level transformer:
 //! forward, KV-cached prefill/decode, PPO/SFT/BT/critic gradients, fused
@@ -27,13 +45,23 @@
 //! committed text with this interpreter and compares against the committed
 //! goldens.
 //!
-//! Known op-set gaps (tracked in ROADMAP.md): no `while`/`sort`/`rng-*` /
-//! `scatter`, so the fused `generate_rollout` artifact is not part of the
-//! fixture sets — the coordinator's stepwise `prefill`/`decode_step` path
-//! covers generation.
+//! Known op-set gaps (tracked in ROADMAP.md, reported as structured
+//! `unsupported-op` diagnostics by the verifier): no `while`/`sort`/
+//! `rng-*`/`scatter`, so the fused `generate_rollout` artifact is not part
+//! of the fixture sets — the coordinator's stepwise `prefill`/`decode_step`
+//! path covers generation.
+
+// This module tree interprets untrusted-ish artifact text on the training
+// hot path: a panic here takes down a coordinator thread mid-rollout.
+// `clippy.toml` disallows unwrap/expect and the deny is scoped to
+// runtime/hlo (the workspace-level lint table allows it elsewhere); test
+// submodules opt back in locally.
+#![deny(clippy::disallowed_methods)]
 
 pub mod eval;
 pub mod parser;
+pub mod plan;
+pub mod verify;
 
 pub use eval::Program;
 pub use parser::HloModule;

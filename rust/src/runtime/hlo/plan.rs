@@ -1,0 +1,391 @@
+//! Static execution plan for a *verified* entry computation.
+//!
+//! [`StaticPlan::build`] runs once per artifact (at engine load) and
+//! precomputes what the evaluator used to guess dynamically:
+//!
+//! * **`last_use`** — the instruction index at which each value's slot is
+//!   taken (moved, not cloned).  Root operands are pinned live
+//!   (`usize::MAX`).
+//! * **`unique`** — whether a value's buffer is *provably* uniquely owned
+//!   when its slot is taken.  `reshape` and same-dtype `convert` are
+//!   zero-copy aliases in the evaluator: an alias created *without*
+//!   consuming its operand leaves two live handles on one buffer, so the
+//!   whole alias group is conservatively marked shared forever.  The
+//!   evaluator mutates in place exactly when `taken && unique` — and
+//!   *errors* if an `Arc::try_unwrap` the plan promised would succeed
+//!   fails, instead of silently falling back to a copy (the old
+//!   `unwrap_or_else(clone)` heuristic, which hid sharing bugs as
+//!   allocations).
+//! * **`peak_live_bytes`** — an upper bound on simultaneously-live buffer
+//!   bytes under the slot/alias model, including `dot`'s transient operand
+//!   regroup copies (statically decidable from the dimension numbers).
+//!   The model excludes transient `Vec` growth inside kernels and the
+//!   output tensors' hand-off copies; `gcore hlo-lint` cross-checks it
+//!   against the 3 MB/token decode budget `tests/alloc_counts.rs` pins.
+//! * **`fusible_chains`** — maximal straight-line runs of same-shape
+//!   elementwise instructions where each link is the sole consumer of its
+//!   predecessor: exactly the sequences a future fusion pass can collapse
+//!   into one loop without changing buffer lifetimes.
+//!
+//! The plan is derived from *declared* shapes, which is sound only after
+//! [`super::verify`] has proven declared == inferred for every
+//! instruction; [`super::eval::Program::parse`] enforces that ordering.
+
+use crate::runtime::hlo::parser::{Computation, HDtype, HloModule};
+use crate::runtime::hlo::verify::dtype_bytes;
+
+/// Elementwise opcodes that preserve shape and can fuse / mutate in place.
+const ELEMENTWISE: &[&str] = &[
+    "add",
+    "subtract",
+    "multiply",
+    "divide",
+    "maximum",
+    "minimum",
+    "power",
+    "and",
+    "or",
+    "xor",
+    "shift-left",
+    "shift-right-logical",
+    "negate",
+    "abs",
+    "exponential",
+    "log",
+    "tanh",
+    "rsqrt",
+    "sqrt",
+    "sine",
+    "cosine",
+    "not",
+    "select",
+];
+
+#[derive(Debug, Clone)]
+pub struct StaticPlan {
+    /// `last_use[i]` = index of the last instruction consuming value `i`
+    /// (`usize::MAX` for the root, root operands, and unused values).
+    pub last_use: Vec<usize>,
+    /// `unique[i]` = taking value `i`'s slot yields the only handle on its
+    /// buffer, so in-place mutation is safe.
+    pub unique: Vec<bool>,
+    /// Static bound on simultaneously-live value bytes (see module doc for
+    /// the model).
+    pub peak_live_bytes: usize,
+    /// Maximal fusible elementwise runs (instruction indices, in order);
+    /// only chains of length ≥ 2 are reported.
+    pub fusible_chains: Vec<Vec<usize>>,
+}
+
+impl StaticPlan {
+    /// Build the plan for the entry computation of a verified module.
+    pub fn build(module: &HloModule) -> StaticPlan {
+        let entry = module.entry_computation();
+        let last_use = compute_last_use(entry);
+        let (unique, peak_live_bytes) = alias_and_liveness(entry, &last_use);
+        let fusible_chains = fusible_chains(entry, &last_use);
+        StaticPlan { last_use, unique, peak_live_bytes, fusible_chains }
+    }
+}
+
+/// `true` when instruction `i` *takes* operand `op`'s slot: `i` is the
+/// last use and `op` appears exactly once in the operand list (mirrors the
+/// evaluator's take condition exactly).
+fn takes(entry: &Computation, last_use: &[usize], i: usize, op: usize) -> bool {
+    last_use[op] == i
+        && entry.instrs[i].operands.iter().filter(|&&o| o == op).count() == 1
+}
+
+fn compute_last_use(entry: &Computation) -> Vec<usize> {
+    let mut last_use = vec![usize::MAX; entry.instrs.len()];
+    for (i, ins) in entry.instrs.iter().enumerate() {
+        for &op in &ins.operands {
+            last_use[op] = i;
+        }
+    }
+    // the root and its operands become the caller's outputs — never drop
+    // them early
+    last_use[entry.root] = usize::MAX;
+    for &op in &entry.instrs[entry.root].operands {
+        last_use[op] = usize::MAX;
+    }
+    last_use
+}
+
+/// Is instruction `i` a zero-copy alias of its operand in the evaluator?
+fn is_alias(entry: &Computation, i: usize) -> bool {
+    let ins = &entry.instrs[i];
+    match ins.opcode.as_str() {
+        "reshape" => true,
+        "convert" => {
+            // same-dtype convert returns the value unchanged
+            let out = ins.shape.as_ref();
+            let inp = ins.operands.first().and_then(|&o| entry.instrs[o].shape.as_ref());
+            matches!((out, inp), (Some(a), Some(b)) if a.dtype == b.dtype)
+        }
+        _ => false,
+    }
+}
+
+fn value_bytes(entry: &Computation, i: usize) -> usize {
+    match entry.instrs[i].shape.as_ref() {
+        Some(sh) => sh.num_elements() * dtype_bytes(sh.dtype),
+        None => 0, // tuple root: its elements are the operands' buffers
+    }
+}
+
+/// Which operand the evaluator mutates in place when it owns the buffer
+/// (f32 elementwise ops mutate the lhs / on-true branch;
+/// `dynamic-update-slice` mutates the base for every dtype).
+fn inplace_operand(entry: &Computation, i: usize) -> Option<usize> {
+    let ins = &entry.instrs[i];
+    let f32_out = matches!(
+        ins.shape.as_ref().map(|s| s.dtype),
+        Some(HDtype::F32)
+    );
+    let slot = match ins.opcode.as_str() {
+        "dynamic-update-slice" => 0,
+        "select" if f32_out => 1,
+        op if f32_out && ELEMENTWISE.contains(&op) && op != "select" => 0,
+        _ => return None,
+    };
+    ins.operands.get(slot).copied()
+}
+
+/// `dot` regroups each operand into canonical [batch, free, contract] /
+/// [batch, contract, free] order before the kernel; a non-identity order
+/// materializes a transient copy of that operand.  Statically decidable
+/// from the dimension numbers.
+fn dot_transient_bytes(entry: &Computation, i: usize) -> usize {
+    let ins = &entry.instrs[i];
+    if ins.opcode != "dot" {
+        return 0;
+    }
+    let Some(dd) = ins.dot.as_ref() else { return 0 };
+    let mut transient = 0usize;
+    let sides = [
+        (ins.operands.first(), &dd.lhs_batch, &dd.lhs_contract, false),
+        (ins.operands.get(1), &dd.rhs_batch, &dd.rhs_contract, true),
+    ];
+    for (op, batch, contract, contract_before_free) in sides {
+        let Some(&op) = op else { continue };
+        let Some(sh) = entry.instrs[op].shape.as_ref() else { continue };
+        let rank = sh.dims.len();
+        let free: Vec<usize> =
+            (0..rank).filter(|d| !batch.contains(d) && !contract.contains(d)).collect();
+        let order: Vec<usize> = if contract_before_free {
+            batch.iter().chain(contract.iter()).chain(&free).copied().collect()
+        } else {
+            batch.iter().chain(&free).chain(contract.iter()).copied().collect()
+        };
+        if order.iter().enumerate().any(|(k, &d)| k != d) {
+            transient += sh.num_elements() * dtype_bytes(sh.dtype);
+        }
+    }
+    transient
+}
+
+/// One pass over the entry computation computing (a) per-value buffer
+/// uniqueness via alias groups and (b) the peak-live-bytes bound via a
+/// refcount-per-group simulation in instruction order.
+fn alias_and_liveness(entry: &Computation, last_use: &[usize]) -> (Vec<bool>, usize) {
+    let n = entry.instrs.len();
+    // --- alias groups: gid[i] identifies the underlying buffer; an alias
+    // created without taking its operand leaves the group shared forever
+    let mut gid = vec![usize::MAX; n];
+    let mut shared: Vec<bool> = Vec::new();
+    let mut next_gid = 0usize;
+    let mut fresh = |shared: &mut Vec<bool>| {
+        shared.push(false);
+        next_gid += 1;
+        next_gid - 1
+    };
+    for i in 0..n {
+        let ins = &entry.instrs[i];
+        if ins.opcode == "tuple" {
+            continue;
+        }
+        if is_alias(entry, i) {
+            let op = ins.operands[0];
+            gid[i] = gid[op];
+            if !takes(entry, last_use, i, op) {
+                shared[gid[op]] = true;
+            }
+        } else {
+            gid[i] = fresh(&mut shared);
+        }
+    }
+    let unique: Vec<bool> =
+        (0..n).map(|i| gid[i] != usize::MAX && !shared[gid[i]]).collect();
+
+    // --- liveness simulation: refcount per group, bytes per group
+    let mut refcnt = vec![0usize; next_gid];
+    let mut group_bytes = vec![0usize; next_gid];
+    let mut live = 0usize;
+    let mut peak = 0usize;
+    for i in 0..n {
+        let ins = &entry.instrs[i];
+        if i == entry.root {
+            break; // outputs stay live; the tuple itself owns no buffer
+        }
+        let alias = is_alias(entry, i);
+        let inplace = match inplace_operand(entry, i) {
+            Some(op) => takes(entry, last_use, i, op) && unique[op],
+            None => false,
+        };
+        let alloc = if alias || inplace { 0 } else { value_bytes(entry, i) };
+        peak = peak.max(live + alloc + dot_transient_bytes(entry, i));
+        // release every operand handle this instruction consumes (an alias
+        // that takes its operand *moves* the handle instead)
+        let mut seen_ops: Vec<usize> = Vec::new();
+        for &op in &ins.operands {
+            if seen_ops.contains(&op) {
+                continue;
+            }
+            seen_ops.push(op);
+            if takes(entry, last_use, i, op) && !(alias && op == ins.operands[0]) {
+                let g = gid[op];
+                refcnt[g] -= 1;
+                if refcnt[g] == 0 {
+                    live -= group_bytes[g];
+                }
+            }
+        }
+        // materialize this instruction's handle
+        let g = gid[i];
+        if alias {
+            if !takes(entry, last_use, i, ins.operands[0]) {
+                refcnt[g] += 1; // second handle on the same buffer
+            }
+        } else {
+            refcnt[g] = 1;
+            group_bytes[g] = value_bytes(entry, i);
+            live += group_bytes[g];
+        }
+        peak = peak.max(live);
+    }
+    (unique, peak)
+}
+
+/// Maximal same-shape elementwise runs where each link is the sole
+/// consumer of its predecessor (length ≥ 2).
+fn fusible_chains(entry: &Computation, last_use: &[usize]) -> Vec<Vec<usize>> {
+    let n = entry.instrs.len();
+    // pred[i] = the chain predecessor of i, if any
+    let mut pred = vec![usize::MAX; n];
+    let mut has_succ = vec![false; n];
+    for i in 0..n {
+        let ins = &entry.instrs[i];
+        if !ELEMENTWISE.contains(&ins.opcode.as_str()) {
+            continue;
+        }
+        let dims = match ins.shape.as_ref() {
+            Some(sh) => &sh.dims,
+            None => continue,
+        };
+        for &op in &ins.operands {
+            let prev = &entry.instrs[op];
+            if ELEMENTWISE.contains(&prev.opcode.as_str())
+                && takes(entry, last_use, i, op)
+                && prev.shape.as_ref().map(|s| &s.dims) == Some(dims)
+                && !has_succ[op]
+            {
+                pred[i] = op;
+                has_succ[op] = true;
+                break;
+            }
+        }
+    }
+    let mut chains = Vec::new();
+    for end in 0..n {
+        if has_succ[end] || pred[end] == usize::MAX {
+            continue; // not a chain tail, or a singleton
+        }
+        let mut chain = vec![end];
+        let mut cur = end;
+        while pred[cur] != usize::MAX {
+            cur = pred[cur];
+            chain.push(cur);
+        }
+        chain.reverse();
+        chains.push(chain);
+    }
+    chains
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::disallowed_methods)]
+
+    use super::*;
+    use crate::runtime::hlo::parser::HloModule;
+
+    fn plan(text: &str) -> StaticPlan {
+        StaticPlan::build(&HloModule::parse(text).unwrap())
+    }
+
+    #[test]
+    fn last_use_pins_root_operands() {
+        let p = plan(
+            "ENTRY %m (x: f32[2]) -> (f32[2]) {\n  %x = f32[2] parameter(0)\n  \
+             %n = f32[2] negate(f32[2] %x)\n  ROOT %t = (f32[2]) tuple(f32[2] %n)\n}\n",
+        );
+        assert_eq!(p.last_use[0], 1); // x consumed by negate
+        assert_eq!(p.last_use[1], usize::MAX); // root operand
+        assert!(p.unique[1]);
+    }
+
+    #[test]
+    fn alias_without_take_marks_group_shared() {
+        // %x is used by both the reshape and the add, so the reshape clones
+        // the handle: neither value may be mutated in place.
+        let p = plan(
+            "ENTRY %m (x: f32[4]) -> (f32[4]) {\n  %x = f32[4] parameter(0)\n  \
+             %r = f32[2,2] reshape(f32[4] %x)\n  \
+             %r2 = f32[4] reshape(f32[2,2] %r)\n  \
+             %s = f32[4] add(f32[4] %x, f32[4] %r2)\n  \
+             ROOT %t = (f32[4]) tuple(f32[4] %s)\n}\n",
+        );
+        assert!(!p.unique[0] && !p.unique[1] && !p.unique[2], "{:?}", p.unique);
+        assert!(p.unique[3]); // add output is a fresh buffer
+    }
+
+    #[test]
+    fn alias_with_take_stays_unique() {
+        let p = plan(
+            "ENTRY %m (x: f32[4]) -> (f32[2,2]) {\n  %x = f32[4] parameter(0)\n  \
+             %r = f32[2,2] reshape(f32[4] %x)\n  \
+             %n = f32[2,2] negate(f32[2,2] %r)\n  \
+             ROOT %t = (f32[2,2]) tuple(f32[2,2] %n)\n}\n",
+        );
+        assert!(p.unique[0] && p.unique[1] && p.unique[2], "{:?}", p.unique);
+    }
+
+    #[test]
+    fn peak_live_counts_in_place_once() {
+        // x (16B) negated in place then halved in place: peak = x + the
+        // broadcast 0.5 (16B) + the scalar (4B), never 2 copies of x.
+        let p = plan(
+            "ENTRY %m (x: f32[4]) -> (f32[4]) {\n  %x = f32[4] parameter(0)\n  \
+             %h = f32[] constant(0.5)\n  \
+             %hb = f32[4] broadcast(f32[] %h), dimensions={}\n  \
+             %n = f32[4] negate(f32[4] %x)\n  \
+             %m2 = f32[4] multiply(f32[4] %n, f32[4] %hb)\n  \
+             ROOT %t = (f32[4]) tuple(f32[4] %m2)\n}\n",
+        );
+        assert_eq!(p.peak_live_bytes, 16 + 4 + 16);
+    }
+
+    #[test]
+    fn fusible_chain_found() {
+        let p = plan(
+            "ENTRY %m (x: f32[4], y: f32[4]) -> (f32[4]) {\n  %x = f32[4] parameter(0)\n  \
+             %y = f32[4] parameter(1)\n  \
+             %a = f32[4] add(f32[4] %x, f32[4] %y)\n  \
+             %n = f32[4] negate(f32[4] %a)\n  \
+             %e = f32[4] exponential(f32[4] %n)\n  \
+             ROOT %t = (f32[4]) tuple(f32[4] %e)\n}\n",
+        );
+        assert_eq!(p.fusible_chains, vec![vec![2, 3, 4]]);
+    }
+}

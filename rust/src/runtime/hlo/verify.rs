@@ -1,0 +1,1243 @@
+//! Static HLO verifier: full shape/dtype inference and def-use validation
+//! over parsed [`HloModule`]s, run *before* anything is evaluated.
+//!
+//! The interpreter used to discover malformed programs at eval time — a
+//! shape mismatch deep inside `train_step` surfaced as whatever `bail!`
+//! fired first, mid-decode, with no instruction context.  This pass
+//! re-derives every instruction's output shape from its operands and
+//! attributes and checks it against the declared shape, so a corrupt or
+//! drifted artifact fails at *load* with the instruction name, opcode and
+//! both shapes.  The documented op-set gaps (`while`, `sort`, `scatter`,
+//! `rng-*`) become structured [`Diagnostic`]s instead of runtime errors.
+//!
+//! Entry points:
+//!
+//! * [`verify_module`] — all diagnostics for a parsed module.
+//! * [`verify_text`] — parse + verify; parse failures become diagnostics.
+//! * [`verify_artifact_io`] — cross-check a module's entry signature
+//!   against the manifest's declared input/output specs.
+//! * [`infer_shape`] — per-instruction inference, public so the property
+//!   tests can assert inferred == declared over every fixture instruction.
+//! * [`lint_set`] — verify + [`plan`](super::plan) every artifact in a
+//!   manifest directory (the `gcore hlo-lint` backend).
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::hlo::parser::{Computation, HDtype, HShape, HloModule, Instr, Literal};
+use crate::runtime::hlo::plan::StaticPlan;
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::tensor::Dtype;
+
+/// Opcodes the interpreter is known not to support yet (tracked in
+/// ROADMAP.md).  The verifier reports these as [`DiagKind::UnsupportedOp`]
+/// with a `documented op-set gap` note, which is what the machine-readable
+/// gap report in `gcore hlo-lint` is built from.
+pub const DOCUMENTED_GAPS: &[&str] = &[
+    "while",
+    "sort",
+    "scatter",
+    "rng",
+    "rng-bit-generator",
+    "conditional",
+    "custom-call",
+];
+
+/// Diagnostic category (stable, machine-readable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiagKind {
+    /// HLO text did not parse at all.
+    ParseError,
+    /// Declared output shape disagrees with the inferred shape.
+    ShapeMismatch,
+    /// Operand/output dtypes are inconsistent or illegal for the op.
+    DtypeMismatch,
+    /// Attribute missing, malformed, or out of range.
+    BadAttribute,
+    /// Reduce body computation fails the arity/dtype/fold contract.
+    BadReduce,
+    /// Opcode outside the interpreter's op set.
+    UnsupportedOp,
+    /// Def-use defect: dead value, misplaced tuple, bad parameter
+    /// numbering, unreferenced computation.
+    DefUse,
+    /// Module entry signature disagrees with the manifest spec.
+    IoContract,
+}
+
+impl DiagKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DiagKind::ParseError => "parse-error",
+            DiagKind::ShapeMismatch => "shape-mismatch",
+            DiagKind::DtypeMismatch => "dtype-mismatch",
+            DiagKind::BadAttribute => "bad-attribute",
+            DiagKind::BadReduce => "bad-reduce",
+            DiagKind::UnsupportedOp => "unsupported-op",
+            DiagKind::DefUse => "def-use",
+            DiagKind::IoContract => "io-contract",
+        }
+    }
+}
+
+/// One verifier finding, anchored to an instruction when there is one.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub kind: DiagKind,
+    /// Computation name ("" for module-level findings).
+    pub computation: String,
+    /// Instruction name without the leading `%` ("" for computation-level).
+    pub instr: String,
+    /// Opcode of the offending instruction ("" when not applicable).
+    pub opcode: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    fn module(kind: DiagKind, message: String) -> Diagnostic {
+        Diagnostic {
+            kind,
+            computation: String::new(),
+            instr: String::new(),
+            opcode: String::new(),
+            message,
+        }
+    }
+
+    fn instr(kind: DiagKind, comp: &str, ins: &Instr, message: String) -> Diagnostic {
+        Diagnostic {
+            kind,
+            computation: comp.to_string(),
+            instr: ins.name.clone(),
+            opcode: ins.opcode.clone(),
+            message,
+        }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}]", self.kind.name())?;
+        if !self.computation.is_empty() {
+            write!(f, " %{}", self.computation)?;
+        }
+        if !self.instr.is_empty() {
+            write!(f, " %{} ({})", self.instr, self.opcode)?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+fn scalar(dtype: HDtype) -> HShape {
+    HShape { dtype, dims: Vec::new() }
+}
+
+fn shaped(dtype: HDtype, dims: Vec<usize>) -> HShape {
+    HShape { dtype, dims }
+}
+
+/// Element size in bytes of the evaluator's host representation
+/// (`Vec<f32>`/`Vec<i32>`/`Vec<u32>`/`Vec<bool>`).
+pub fn dtype_bytes(d: HDtype) -> usize {
+    match d {
+        HDtype::Pred => 1,
+        _ => 4,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-instruction shape/dtype inference
+// ---------------------------------------------------------------------------
+
+/// Binary opcodes and the dtypes the evaluator implements them for
+/// (mirrors `eval::binary` exactly — the verifier must not admit programs
+/// the evaluator rejects).
+fn binary_dtype_ok(opcode: &str, d: HDtype) -> bool {
+    match opcode {
+        "add" | "subtract" | "multiply" | "maximum" | "minimum" => {
+            matches!(d, HDtype::F32 | HDtype::S32 | HDtype::U32)
+        }
+        "divide" | "power" => d == HDtype::F32,
+        "and" | "or" | "xor" => matches!(d, HDtype::U32 | HDtype::Pred),
+        "shift-left" | "shift-right-logical" => d == HDtype::U32,
+        _ => false,
+    }
+}
+
+fn unary_dtype_ok(opcode: &str, d: HDtype) -> bool {
+    match opcode {
+        "not" => matches!(d, HDtype::Pred | HDtype::U32),
+        "negate" | "abs" => matches!(d, HDtype::F32 | HDtype::S32),
+        "exponential" | "log" | "tanh" | "rsqrt" | "sqrt" | "sine" | "cosine" => d == HDtype::F32,
+        _ => false,
+    }
+}
+
+fn convert_ok(from: HDtype, to: HDtype) -> bool {
+    use HDtype::*;
+    matches!(
+        (from, to),
+        (F32, F32)
+            | (S32, S32)
+            | (U32, U32)
+            | (Pred, Pred)
+            | (Pred, F32)
+            | (Pred, S32)
+            | (Pred, U32)
+            | (S32, F32)
+            | (U32, F32)
+            | (S32, U32)
+            | (U32, S32)
+            | (F32, S32)
+            | (F32, U32)
+    )
+}
+
+const BINARY_OPS: &[&str] = &[
+    "add",
+    "subtract",
+    "multiply",
+    "divide",
+    "maximum",
+    "minimum",
+    "power",
+    "and",
+    "or",
+    "xor",
+    "shift-left",
+    "shift-right-logical",
+];
+
+const UNARY_OPS: &[&str] = &[
+    "negate",
+    "abs",
+    "exponential",
+    "log",
+    "tanh",
+    "rsqrt",
+    "sqrt",
+    "sine",
+    "cosine",
+    "not",
+];
+
+/// Infer the output shape of instruction `idx` of computation `c` from its
+/// operands' *declared* shapes and its attributes.  `Ok(None)` means a
+/// tuple-shaped value (only the root tuple).  Errors carry the full
+/// mismatch context (operand shapes, attribute values) but not the
+/// instruction identity — [`verify_module`] adds that.
+pub fn infer_shape(m: &HloModule, c: &Computation, idx: usize) -> Result<Option<HShape>> {
+    let ins = &c.instrs[idx];
+    // operand's declared shape (tuple-shaped operands are rejected — only
+    // the root is a tuple and nothing may consume it)
+    let osh = |k: usize| -> Result<&HShape> {
+        let op = *ins
+            .operands
+            .get(k)
+            .ok_or_else(|| anyhow!("missing operand #{k}"))?;
+        c.instrs[op]
+            .shape
+            .as_ref()
+            .ok_or_else(|| anyhow!("operand #{k} (%{}) is tuple-shaped", c.instrs[op].name))
+    };
+    let arity = |n: usize| -> Result<()> {
+        if ins.operands.len() != n {
+            bail!("expected {n} operands, got {}", ins.operands.len());
+        }
+        Ok(())
+    };
+    let declared = ins.shape.as_ref();
+
+    let opcode = ins.opcode.as_str();
+    if opcode == "tuple" {
+        return Ok(None);
+    }
+    if BINARY_OPS.contains(&opcode) {
+        arity(2)?;
+        let (a, b) = (osh(0)?, osh(1)?);
+        if a.dims != b.dims {
+            bail!("operand shapes differ: {} vs {}", a.to_text(), b.to_text());
+        }
+        if a.dtype != b.dtype {
+            bail!(
+                "operand dtypes differ: {} vs {}",
+                a.dtype.name(),
+                b.dtype.name()
+            );
+        }
+        if !binary_dtype_ok(opcode, a.dtype) {
+            bail!("'{opcode}' not supported on {}", a.dtype.name());
+        }
+        return Ok(Some(a.clone()));
+    }
+    if UNARY_OPS.contains(&opcode) {
+        arity(1)?;
+        let a = osh(0)?;
+        if !unary_dtype_ok(opcode, a.dtype) {
+            bail!("'{opcode}' not supported on {}", a.dtype.name());
+        }
+        return Ok(Some(a.clone()));
+    }
+    Ok(Some(match opcode {
+        "parameter" => {
+            if ins.param_idx.is_none() {
+                bail!("parameter without a parameter number");
+            }
+            declared
+                .ok_or_else(|| anyhow!("tuple-shaped parameters unsupported"))?
+                .clone()
+        }
+        "constant" => {
+            let sh = declared.ok_or_else(|| anyhow!("tuple-shaped constants unsupported"))?;
+            let lit_len = match ins.literal.as_ref() {
+                Some(Literal::F32(v)) => v.len(),
+                Some(Literal::S32(v)) => v.len(),
+                Some(Literal::U32(v)) => v.len(),
+                Some(Literal::Pred(v)) => v.len(),
+                None => bail!("constant without a literal"),
+            };
+            if lit_len != sh.num_elements() {
+                bail!(
+                    "literal has {lit_len} elements, declared shape {} needs {}",
+                    sh.to_text(),
+                    sh.num_elements()
+                );
+            }
+            sh.clone()
+        }
+        "compare" => {
+            arity(2)?;
+            let (a, b) = (osh(0)?, osh(1)?);
+            if a.dims != b.dims {
+                bail!("operand shapes differ: {} vs {}", a.to_text(), b.to_text());
+            }
+            if a.dtype != b.dtype || a.dtype == HDtype::Pred {
+                bail!(
+                    "compare needs matching f32/s32/u32 operands, got {} vs {}",
+                    a.dtype.name(),
+                    b.dtype.name()
+                );
+            }
+            if ins.direction.is_none() {
+                bail!("compare without direction=");
+            }
+            shaped(HDtype::Pred, a.dims.clone())
+        }
+        "select" => {
+            arity(3)?;
+            let (p, a, b) = (osh(0)?, osh(1)?, osh(2)?);
+            if p.dtype != HDtype::Pred {
+                bail!("select predicate must be pred, got {}", p.dtype.name());
+            }
+            if p.dims != a.dims || a.dims != b.dims {
+                bail!(
+                    "select shapes differ: pred {}, on-true {}, on-false {}",
+                    p.to_text(),
+                    a.to_text(),
+                    b.to_text()
+                );
+            }
+            if a.dtype != b.dtype {
+                bail!(
+                    "select branch dtypes differ: {} vs {}",
+                    a.dtype.name(),
+                    b.dtype.name()
+                );
+            }
+            a.clone()
+        }
+        "convert" => {
+            arity(1)?;
+            let a = osh(0)?;
+            let out = declared.ok_or_else(|| anyhow!("convert without declared shape"))?;
+            if !convert_ok(a.dtype, out.dtype) {
+                bail!(
+                    "unsupported convert {} -> {}",
+                    a.dtype.name(),
+                    out.dtype.name()
+                );
+            }
+            shaped(out.dtype, a.dims.clone())
+        }
+        "broadcast" => {
+            arity(1)?;
+            let a = osh(0)?;
+            let out = declared.ok_or_else(|| anyhow!("broadcast without declared shape"))?;
+            if ins.dims.len() != a.dims.len() {
+                bail!(
+                    "dimensions={:?} maps {} axes but operand {} has rank {}",
+                    ins.dims,
+                    ins.dims.len(),
+                    a.to_text(),
+                    a.dims.len()
+                );
+            }
+            for (i, &d) in ins.dims.iter().enumerate() {
+                if d >= out.dims.len() {
+                    bail!("dimensions={:?} maps axis {i} out of range", ins.dims);
+                }
+                if out.dims[d] != a.dims[i] {
+                    bail!(
+                        "operand axis {i} (size {}) maps to output axis {d} (size {})",
+                        a.dims[i],
+                        out.dims[d]
+                    );
+                }
+            }
+            shaped(a.dtype, out.dims.clone())
+        }
+        "reshape" => {
+            arity(1)?;
+            let a = osh(0)?;
+            let out = declared.ok_or_else(|| anyhow!("reshape without declared shape"))?;
+            if out.num_elements() != a.num_elements() {
+                bail!(
+                    "element count mismatch: operand {} has {}, declared {} has {}",
+                    a.to_text(),
+                    a.num_elements(),
+                    out.to_text(),
+                    out.num_elements()
+                );
+            }
+            shaped(a.dtype, out.dims.clone())
+        }
+        "transpose" => {
+            arity(1)?;
+            let a = osh(0)?;
+            let perm = &ins.dims;
+            let mut seen = vec![false; a.dims.len()];
+            if perm.len() != a.dims.len() {
+                bail!("permutation {:?} rank-mismatches operand {}", perm, a.to_text());
+            }
+            for &p in perm {
+                if p >= a.dims.len() || seen[p] {
+                    bail!("dimensions={perm:?} is not a permutation of 0..{}", a.dims.len());
+                }
+                seen[p] = true;
+            }
+            shaped(a.dtype, perm.iter().map(|&p| a.dims[p]).collect())
+        }
+        "slice" => {
+            arity(1)?;
+            let a = osh(0)?;
+            if ins.slice.len() != a.dims.len() {
+                bail!("slice spec rank {} != operand rank {}", ins.slice.len(), a.dims.len());
+            }
+            let mut dims = Vec::with_capacity(a.dims.len());
+            for (k, (&(s, l, st), &d)) in ins.slice.iter().zip(&a.dims).enumerate() {
+                if st == 0 {
+                    bail!("slice stride 0 on axis {k}");
+                }
+                if s > l || l > d {
+                    bail!("slice [{s}:{l}] out of range for axis {k} (size {d})");
+                }
+                dims.push((l - s + st - 1) / st);
+            }
+            shaped(a.dtype, dims)
+        }
+        "concatenate" => {
+            if ins.operands.is_empty() {
+                bail!("concatenate with no operands");
+            }
+            // a missing dimensions= attribute used to silently default to
+            // axis 0 (eval.rs pre-verifier); it is a hard error now
+            let axis = match ins.dims.as_slice() {
+                [d] => *d,
+                [] => bail!("concatenate without dimensions= (no silent axis-0 default)"),
+                other => bail!("concatenate with multi-axis dimensions={other:?}"),
+            };
+            let first = osh(0)?;
+            if axis >= first.dims.len() {
+                bail!("concatenate axis {axis} out of range for rank {}", first.dims.len());
+            }
+            let mut dims = first.dims.clone();
+            dims[axis] = 0;
+            for k in 0..ins.operands.len() {
+                let a = osh(k)?;
+                if a.dtype != first.dtype {
+                    bail!(
+                        "operand #{k} dtype {} != {}",
+                        a.dtype.name(),
+                        first.dtype.name()
+                    );
+                }
+                if a.dims.len() != first.dims.len() {
+                    bail!("operand #{k} rank-mismatches {}", first.to_text());
+                }
+                for (ax, (&x, &y)) in a.dims.iter().zip(&first.dims).enumerate() {
+                    if ax != axis && x != y {
+                        bail!(
+                            "operand #{k} size {x} on axis {ax} != {y} (off-axis sizes must match)"
+                        );
+                    }
+                }
+                dims[axis] += a.dims[axis];
+            }
+            shaped(first.dtype, dims)
+        }
+        "pad" => {
+            arity(2)?;
+            let (a, pv) = (osh(0)?, osh(1)?);
+            if !pv.dims.is_empty() {
+                bail!("pad value must be scalar, got {}", pv.to_text());
+            }
+            if pv.dtype != a.dtype {
+                bail!("pad value dtype {} != operand {}", pv.dtype.name(), a.dtype.name());
+            }
+            if ins.pad_cfg.len() != a.dims.len() {
+                bail!("padding spec rank {} != operand rank {}", ins.pad_cfg.len(), a.dims.len());
+            }
+            let mut dims = Vec::with_capacity(a.dims.len());
+            for (k, (&(lo, hi, interior), &d)) in ins.pad_cfg.iter().zip(&a.dims).enumerate() {
+                if lo < 0 || hi < 0 || interior != 0 {
+                    bail!(
+                        "negative/interior padding unsupported (axis {k}: {lo}_{hi}_{interior})"
+                    );
+                }
+                dims.push(d + lo as usize + hi as usize);
+            }
+            shaped(a.dtype, dims)
+        }
+        "reduce" => {
+            arity(2)?;
+            let (a, init) = (osh(0)?, osh(1)?);
+            if !init.dims.is_empty() {
+                bail!("reduce init must be scalar, got {}", init.to_text());
+            }
+            if init.dtype != a.dtype {
+                bail!("reduce init dtype {} != operand {}", init.dtype.name(), a.dtype.name());
+            }
+            let body = ins
+                .to_apply
+                .as_deref()
+                .ok_or_else(|| anyhow!("reduce without to_apply="))?;
+            check_reduce_body(m, body, a.dtype)?;
+            let mut seen = vec![false; a.dims.len()];
+            for &d in &ins.dims {
+                if d >= a.dims.len() || seen[d] {
+                    bail!(
+                        "dimensions={:?} not a set of distinct axes of {}",
+                        ins.dims,
+                        a.to_text()
+                    );
+                }
+                seen[d] = true;
+            }
+            let dims: Vec<usize> = a
+                .dims
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !seen[*i])
+                .map(|(_, &d)| d)
+                .collect();
+            shaped(a.dtype, dims)
+        }
+        "dot" => {
+            arity(2)?;
+            let (a, b) = (osh(0)?, osh(1)?);
+            if a.dtype != HDtype::F32 || b.dtype != HDtype::F32 {
+                bail!(
+                    "dot requires f32 operands, got {} and {}",
+                    a.dtype.name(),
+                    b.dtype.name()
+                );
+            }
+            // a missing dimension-numbers block used to silently default to
+            // "no batch, no contraction" (an outer product); hard error now
+            let dd = ins
+                .dot
+                .as_ref()
+                .ok_or_else(|| anyhow!("dot without dimension numbers (no silent default)"))?;
+            if dd.lhs_batch.len() != dd.rhs_batch.len() {
+                bail!(
+                    "batch dim arity mismatch: lhs {:?} vs rhs {:?}",
+                    dd.lhs_batch,
+                    dd.rhs_batch
+                );
+            }
+            if dd.lhs_contract.len() != dd.rhs_contract.len() {
+                bail!(
+                    "contracting dim arity mismatch: lhs {:?} vs rhs {:?}",
+                    dd.lhs_contract,
+                    dd.rhs_contract
+                );
+            }
+            let check_side = |dims: &[usize], rank: usize, what: &str| -> Result<()> {
+                let mut seen = vec![false; rank];
+                for &d in dims {
+                    if d >= rank || seen[d] {
+                        bail!("{what} dims {dims:?} invalid for rank {rank}");
+                    }
+                    seen[d] = true;
+                }
+                Ok(())
+            };
+            check_side(&dd.lhs_batch, a.dims.len(), "lhs_batch")?;
+            check_side(&dd.lhs_contract, a.dims.len(), "lhs_contracting")?;
+            check_side(&dd.rhs_batch, b.dims.len(), "rhs_batch")?;
+            check_side(&dd.rhs_contract, b.dims.len(), "rhs_contracting")?;
+            for (&lb, &rb) in dd.lhs_batch.iter().zip(&dd.rhs_batch) {
+                if a.dims[lb] != b.dims[rb] {
+                    bail!(
+                        "batch dim size mismatch: lhs axis {lb} (size {}) vs rhs axis {rb} (size {})",
+                        a.dims[lb],
+                        b.dims[rb]
+                    );
+                }
+            }
+            for (&lc, &rc) in dd.lhs_contract.iter().zip(&dd.rhs_contract) {
+                if a.dims[lc] != b.dims[rc] {
+                    bail!(
+                        "contracting dim size mismatch: lhs axis {lc} (size {}) vs rhs axis {rc} (size {})",
+                        a.dims[lc],
+                        b.dims[rc]
+                    );
+                }
+            }
+            let lhs_free = (0..a.dims.len())
+                .filter(|i| !dd.lhs_batch.contains(i) && !dd.lhs_contract.contains(i));
+            let rhs_free = (0..b.dims.len())
+                .filter(|i| !dd.rhs_batch.contains(i) && !dd.rhs_contract.contains(i));
+            let mut dims: Vec<usize> = dd.lhs_batch.iter().map(|&i| a.dims[i]).collect();
+            dims.extend(lhs_free.map(|i| a.dims[i]));
+            dims.extend(rhs_free.map(|i| b.dims[i]));
+            shaped(HDtype::F32, dims)
+        }
+        "iota" => {
+            let out = declared.ok_or_else(|| anyhow!("iota without declared shape"))?;
+            let d = *ins
+                .dims
+                .first()
+                .ok_or_else(|| anyhow!("iota without iota_dimension="))?;
+            if d >= out.dims.len() {
+                bail!("iota_dimension={d} out of range for {}", out.to_text());
+            }
+            if out.dtype == HDtype::Pred {
+                bail!("pred iota unsupported");
+            }
+            out.clone()
+        }
+        "dynamic-slice" => {
+            let a = osh(0)?;
+            if ins.operands.len() != 1 + a.dims.len() {
+                bail!(
+                    "expected operand + {} scalar start indices, got {} operands",
+                    a.dims.len(),
+                    ins.operands.len()
+                );
+            }
+            check_start_indices(c, ins, 1, a.dims.len())?;
+            if ins.dyn_sizes.len() != a.dims.len() {
+                bail!(
+                    "dynamic_slice_sizes={:?} rank-mismatches operand {}",
+                    ins.dyn_sizes,
+                    a.to_text()
+                );
+            }
+            for (k, (&sz, &d)) in ins.dyn_sizes.iter().zip(&a.dims).enumerate() {
+                if sz > d {
+                    bail!("slice size {sz} exceeds operand axis {k} (size {d})");
+                }
+            }
+            shaped(a.dtype, ins.dyn_sizes.clone())
+        }
+        "dynamic-update-slice" => {
+            let base = osh(0)?;
+            let upd = osh(1)?;
+            if ins.operands.len() != 2 + base.dims.len() {
+                bail!(
+                    "expected base + update + {} scalar start indices, got {} operands",
+                    base.dims.len(),
+                    ins.operands.len()
+                );
+            }
+            if upd.dtype != base.dtype {
+                bail!("update dtype {} != base {}", upd.dtype.name(), base.dtype.name());
+            }
+            if upd.dims.len() != base.dims.len() {
+                bail!("update {} rank-mismatches base {}", upd.to_text(), base.to_text());
+            }
+            for (k, (&u, &d)) in upd.dims.iter().zip(&base.dims).enumerate() {
+                if u > d {
+                    bail!("update size {u} exceeds base axis {k} (size {d})");
+                }
+            }
+            check_start_indices(c, ins, 2, base.dims.len())?;
+            base.clone()
+        }
+        "gather" => {
+            arity(2)?;
+            let (a, idxs) = (osh(0)?, osh(1)?);
+            if a.dtype != HDtype::F32 {
+                bail!("gather operand must be f32, got {}", a.dtype.name());
+            }
+            if idxs.dtype != HDtype::S32 {
+                bail!("gather indices must be s32, got {}", idxs.dtype.name());
+            }
+            let g = ins
+                .gather
+                .as_ref()
+                .ok_or_else(|| anyhow!("gather without dimension numbers"))?;
+            let orank = a.dims.len();
+            if g.slice_sizes.len() != orank {
+                bail!("slice_sizes={:?} rank-mismatches operand {}", g.slice_sizes, a.to_text());
+            }
+            for (k, (&sz, &d)) in g.slice_sizes.iter().zip(&a.dims).enumerate() {
+                if sz > d {
+                    bail!("slice size {sz} exceeds operand axis {k} (size {d})");
+                }
+            }
+            if g.index_vector_dim > idxs.dims.len() {
+                bail!(
+                    "index_vector_dim={} out of range for indices {}",
+                    g.index_vector_dim,
+                    idxs.to_text()
+                );
+            }
+            let mut batch_dims = idxs.dims.clone();
+            let ncomp = if g.index_vector_dim < idxs.dims.len() {
+                batch_dims.remove(g.index_vector_dim)
+            } else {
+                1
+            };
+            if ncomp != g.start_index_map.len() {
+                bail!(
+                    "{ncomp} index components != start_index_map={:?}",
+                    g.start_index_map
+                );
+            }
+            for &d in &g.start_index_map {
+                if d >= orank {
+                    bail!("start_index_map={:?} out of range for rank {orank}", g.start_index_map);
+                }
+            }
+            let offset_operand_dims: Vec<usize> =
+                (0..orank).filter(|i| !g.collapsed_slice_dims.contains(i)).collect();
+            if g.offset_dims.len() != offset_operand_dims.len() {
+                bail!(
+                    "offset_dims={:?} must name one output axis per non-collapsed operand dim ({})",
+                    g.offset_dims,
+                    offset_operand_dims.len()
+                );
+            }
+            let out_rank = g.offset_dims.len() + batch_dims.len();
+            let mut dims = vec![0usize; out_rank];
+            let mut is_offset = vec![false; out_rank];
+            for (k, &ax) in g.offset_dims.iter().enumerate() {
+                if ax >= out_rank || is_offset[ax] {
+                    bail!("offset_dims={:?} invalid for output rank {out_rank}", g.offset_dims);
+                }
+                is_offset[ax] = true;
+                dims[ax] = g.slice_sizes[offset_operand_dims[k]];
+            }
+            let mut b = 0;
+            for (ax, d) in dims.iter_mut().enumerate() {
+                if !is_offset[ax] {
+                    *d = batch_dims[b];
+                    b += 1;
+                }
+            }
+            shaped(HDtype::F32, dims)
+        }
+        other => {
+            let gap = if DOCUMENTED_GAPS.contains(&other) {
+                " (documented op-set gap — see ROADMAP.md)"
+            } else {
+                ""
+            };
+            bail!("unsupported opcode '{other}'{gap}");
+        }
+    }))
+}
+
+/// Scalar-integer check for the trailing start-index operands of
+/// dynamic-slice / dynamic-update-slice.
+fn check_start_indices(c: &Computation, ins: &Instr, from: usize, rank: usize) -> Result<()> {
+    for k in 0..rank {
+        let op = ins.operands[from + k];
+        let sh = c.instrs[op]
+            .shape
+            .as_ref()
+            .ok_or_else(|| anyhow!("start index #{k} is tuple-shaped"))?;
+        if !sh.dims.is_empty() || !matches!(sh.dtype, HDtype::S32 | HDtype::U32) {
+            bail!("start index #{k} must be scalar s32/u32, got {}", sh.to_text());
+        }
+    }
+    Ok(())
+}
+
+/// Validate a reduce body: two scalar parameters of the operand dtype and
+/// a root that is one of the supported folds over both parameters.
+fn check_reduce_body(m: &HloModule, name: &str, dtype: HDtype) -> Result<()> {
+    let body = m.computation(name)?;
+    if body.params.len() != 2 {
+        bail!(
+            "reduce body '%{name}' has {} parameters, expected 2",
+            body.params.len()
+        );
+    }
+    for &p in &body.params {
+        let sh = body.instrs[p]
+            .shape
+            .as_ref()
+            .ok_or_else(|| anyhow!("reduce body '%{name}' parameter is tuple-shaped"))?;
+        if !sh.dims.is_empty() || sh.dtype != dtype {
+            bail!(
+                "reduce body '%{name}' parameter %{} is {}, expected {}[]",
+                body.instrs[p].name,
+                sh.to_text(),
+                dtype.name()
+            );
+        }
+    }
+    let root = &body.instrs[body.root];
+    if !matches!(root.opcode.as_str(), "add" | "maximum" | "minimum") {
+        bail!(
+            "reduce body '%{name}' root op '{}' is not a supported fold (add/maximum/minimum)",
+            root.opcode
+        );
+    }
+    if root.operands.len() != 2
+        || !root.operands.iter().all(|&o| body.params.contains(&o))
+    {
+        bail!("reduce body '%{name}' root must combine exactly the two parameters");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Module-level verification
+// ---------------------------------------------------------------------------
+
+/// Run every static check over a parsed module; returns all diagnostics
+/// (empty == verified).
+pub fn verify_module(m: &HloModule) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+
+    // unreferenced non-entry computations (dead reduce bodies usually mean
+    // an emitter bug or a mangled to_apply= reference)
+    let mut referenced = vec![false; m.computations.len()];
+    referenced[m.entry] = true;
+    for c in &m.computations {
+        for ins in &c.instrs {
+            if let Some(name) = ins.to_apply.as_deref() {
+                if let Some(k) = m.computations.iter().position(|cc| cc.name == name) {
+                    referenced[k] = true;
+                }
+            }
+        }
+    }
+    for (k, c) in m.computations.iter().enumerate() {
+        if !referenced[k] {
+            diags.push(Diagnostic::module(
+                DiagKind::DefUse,
+                format!("computation '%{}' is never referenced", c.name),
+            ));
+        }
+    }
+
+    for (ci, c) in m.computations.iter().enumerate() {
+        verify_computation(m, c, ci == m.entry, &mut diags);
+    }
+    diags
+}
+
+fn verify_computation(m: &HloModule, c: &Computation, is_entry: bool, diags: &mut Vec<Diagnostic>) {
+    // parameter numbering must be dense and unique
+    let param_idxs: Vec<usize> = c
+        .instrs
+        .iter()
+        .filter_map(|i| if i.opcode == "parameter" { i.param_idx } else { None })
+        .collect();
+    {
+        let mut sorted = param_idxs.clone();
+        sorted.sort_unstable();
+        if sorted != (0..param_idxs.len()).collect::<Vec<_>>() {
+            diags.push(Diagnostic {
+                kind: DiagKind::DefUse,
+                computation: c.name.clone(),
+                instr: String::new(),
+                opcode: String::new(),
+                message: format!("parameter numbers {param_idxs:?} are not dense 0..{}", param_idxs.len()),
+            });
+        }
+    }
+
+    // def-use: operands resolve before their consumers (the parser builds
+    // indices def-before-use; a violation here means a parser bug) and
+    // every non-parameter value is consumed or is the root
+    let mut used = vec![false; c.instrs.len()];
+    for (i, ins) in c.instrs.iter().enumerate() {
+        for &op in &ins.operands {
+            if op >= i {
+                diags.push(Diagnostic::instr(
+                    DiagKind::DefUse,
+                    &c.name,
+                    ins,
+                    format!("operand %{} is not defined before use", c.instrs[op].name),
+                ));
+            } else {
+                used[op] = true;
+            }
+        }
+    }
+    for (i, ins) in c.instrs.iter().enumerate() {
+        if i != c.root && !used[i] && ins.opcode != "parameter" {
+            diags.push(Diagnostic::instr(
+                DiagKind::DefUse,
+                &c.name,
+                ins,
+                "value is never used (dead instruction)".to_string(),
+            ));
+        }
+    }
+
+    // tuples: the entry root must be a tuple, and nothing else may be one
+    let root = &c.instrs[c.root];
+    if is_entry && root.opcode != "tuple" {
+        diags.push(Diagnostic::instr(
+            DiagKind::DefUse,
+            &c.name,
+            root,
+            format!("entry root must be a tuple, got '{}'", root.opcode),
+        ));
+    }
+    for (i, ins) in c.instrs.iter().enumerate() {
+        if ins.opcode == "tuple" && i != c.root {
+            diags.push(Diagnostic::instr(
+                DiagKind::DefUse,
+                &c.name,
+                ins,
+                "tuples are only supported as the root".to_string(),
+            ));
+        }
+    }
+
+    // per-instruction shape/dtype inference vs declared shape
+    for (i, ins) in c.instrs.iter().enumerate() {
+        match infer_shape(m, c, i) {
+            Ok(None) => {} // tuple root: element shapes are the operands'
+            Ok(Some(inferred)) => match ins.shape.as_ref() {
+                Some(declared) if *declared == inferred => {}
+                Some(declared) => diags.push(Diagnostic::instr(
+                    DiagKind::ShapeMismatch,
+                    &c.name,
+                    ins,
+                    format!(
+                        "declared shape {} but operands/attributes infer {}",
+                        declared.to_text(),
+                        inferred.to_text()
+                    ),
+                )),
+                None => diags.push(Diagnostic::instr(
+                    DiagKind::ShapeMismatch,
+                    &c.name,
+                    ins,
+                    format!("tuple-shaped result declared but '{}' infers {}", ins.opcode, inferred.to_text()),
+                )),
+            },
+            Err(e) => {
+                let msg = format!("{e:#}");
+                let kind = classify_error(&ins.opcode, &msg);
+                diags.push(Diagnostic::instr(kind, &c.name, ins, msg));
+            }
+        }
+    }
+}
+
+/// Map an inference error to a diagnostic category from its opcode/text
+/// (inference reports one error per instruction; the text carries detail).
+fn classify_error(opcode: &str, msg: &str) -> DiagKind {
+    if msg.contains("unsupported opcode") {
+        DiagKind::UnsupportedOp
+    } else if msg.contains("reduce body")
+        || (opcode == "reduce" && msg.contains("computation"))
+    {
+        DiagKind::BadReduce
+    } else if msg.contains("dtype") || msg.contains("not supported on") || msg.contains("must be pred")
+    {
+        DiagKind::DtypeMismatch
+    } else if msg.contains("operand") && msg.contains("shape") {
+        DiagKind::ShapeMismatch
+    } else if opcode == "tuple" {
+        DiagKind::DefUse
+    } else {
+        DiagKind::BadAttribute
+    }
+}
+
+/// Parse + verify HLO text; a parse failure becomes a single diagnostic.
+/// Returns the module too so callers can go on to plan when clean.
+pub fn verify_text(text: &str) -> (Option<HloModule>, Vec<Diagnostic>) {
+    match HloModule::parse(text) {
+        Ok(m) => {
+            let diags = verify_module(&m);
+            (Some(m), diags)
+        }
+        Err(e) => (
+            None,
+            vec![Diagnostic::module(DiagKind::ParseError, format!("{e:#}"))],
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Manifest I/O cross-check
+// ---------------------------------------------------------------------------
+
+fn dtype_to_h(d: Dtype) -> HDtype {
+    match d {
+        Dtype::F32 => HDtype::F32,
+        Dtype::I32 => HDtype::S32,
+        Dtype::U32 => HDtype::U32,
+    }
+}
+
+/// Cross-check a module's entry signature against the manifest's declared
+/// artifact spec: parameter count/shapes/dtypes and root tuple element
+/// shapes must agree exactly (a drifted manifest corrupts training
+/// numerics silently — the engine feeds tensors by position).
+pub fn verify_artifact_io(m: &HloModule, spec: &ArtifactSpec) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let entry = m.entry_computation();
+    let mut io_diag = |message: String| {
+        diags.push(Diagnostic {
+            kind: DiagKind::IoContract,
+            computation: entry.name.clone(),
+            instr: String::new(),
+            opcode: String::new(),
+            message,
+        });
+    };
+
+    if entry.params.len() != spec.inputs.len() {
+        io_diag(format!(
+            "manifest declares {} inputs but entry has {} parameters",
+            spec.inputs.len(),
+            entry.params.len()
+        ));
+    }
+    for (k, (&p, s)) in entry.params.iter().zip(&spec.inputs).enumerate() {
+        match entry.instrs[p].shape.as_ref() {
+            Some(sh) if sh.dims == s.shape && sh.dtype == dtype_to_h(s.dtype) => {}
+            Some(sh) => io_diag(format!(
+                "input #{k} ('{}'): manifest says {:?} {}, HLO parameter %{} is {}",
+                s.name,
+                s.shape,
+                s.dtype.name(),
+                entry.instrs[p].name,
+                sh.to_text()
+            )),
+            None => io_diag(format!("input #{k} ('{}') is tuple-shaped in the HLO", s.name)),
+        }
+    }
+
+    let root = &entry.instrs[entry.root];
+    if root.opcode == "tuple" {
+        if root.operands.len() != spec.outputs.len() {
+            io_diag(format!(
+                "manifest declares {} outputs but root tuple has {} elements",
+                spec.outputs.len(),
+                root.operands.len()
+            ));
+        }
+        for (k, (&op, s)) in root.operands.iter().zip(&spec.outputs).enumerate() {
+            match entry.instrs[op].shape.as_ref() {
+                Some(sh) if sh.dims == s.shape && sh.dtype == dtype_to_h(s.dtype) => {}
+                Some(sh) => io_diag(format!(
+                    "output #{k} ('{}'): manifest says {:?} {}, HLO root element %{} is {}",
+                    s.name,
+                    s.shape,
+                    s.dtype.name(),
+                    entry.instrs[op].name,
+                    sh.to_text()
+                )),
+                None => io_diag(format!("output #{k} ('{}') is tuple-shaped", s.name)),
+            }
+        }
+    }
+    diags
+}
+
+// ---------------------------------------------------------------------------
+// Directory lint (the `gcore hlo-lint` backend)
+// ---------------------------------------------------------------------------
+
+/// Per-artifact lint result.
+#[derive(Debug)]
+pub struct ArtifactLint {
+    pub name: String,
+    /// Entry-computation instruction count (0 when the module never parsed).
+    pub instrs: usize,
+    pub diagnostics: Vec<Diagnostic>,
+    /// Analysis plan when the artifact verified cleanly.
+    pub plan: Option<StaticPlan>,
+}
+
+/// Lint report over one artifact set (manifest + HLO files).
+#[derive(Debug)]
+pub struct LintReport {
+    pub set_name: String,
+    pub artifacts: Vec<ArtifactLint>,
+}
+
+impl LintReport {
+    pub fn total_diagnostics(&self) -> usize {
+        self.artifacts.iter().map(|a| a.diagnostics.len()).sum()
+    }
+}
+
+/// Verify + plan every artifact in a manifest directory.  Missing HLO
+/// files are diagnostics (the set is corrupt), as are parse failures,
+/// verification findings, and manifest-I/O drift.
+pub fn lint_set(dir: &Path) -> Result<LintReport> {
+    let manifest = Manifest::load(dir)?;
+    let mut artifacts = Vec::new();
+    for (name, spec) in &manifest.artifacts {
+        let path = manifest.hlo_path(name)?;
+        let mut lint = ArtifactLint {
+            name: name.clone(),
+            instrs: 0,
+            diagnostics: Vec::new(),
+            plan: None,
+        };
+        match std::fs::read_to_string(&path) {
+            Err(e) => lint.diagnostics.push(Diagnostic::module(
+                DiagKind::ParseError,
+                format!("cannot read {path:?}: {e}"),
+            )),
+            Ok(text) => {
+                let (module, mut diags) = verify_text(&text);
+                if let Some(m) = &module {
+                    lint.instrs = m.entry_computation().instrs.len();
+                    diags.extend(verify_artifact_io(m, spec));
+                }
+                let clean = diags.is_empty();
+                lint.diagnostics = diags;
+                if clean {
+                    if let Some(m) = &module {
+                        lint.plan = Some(StaticPlan::build(m));
+                    }
+                }
+            }
+        }
+        artifacts.push(lint);
+    }
+    Ok(LintReport {
+        set_name: manifest.dims.name.clone(),
+        artifacts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::disallowed_methods)]
+
+    use super::*;
+
+    fn verify_src(text: &str) -> Vec<Diagnostic> {
+        let (_, d) = verify_text(text);
+        d
+    }
+
+    #[test]
+    fn clean_module_verifies() {
+        let text = r#"%radd (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %m (x: f32[2,3]) -> (f32[2]) {
+  %x = f32[2,3] parameter(0)
+  %z = f32[] constant(0)
+  %s = f32[2] reduce(f32[2,3] %x, f32[] %z), dimensions={1}, to_apply=%radd
+  ROOT %t = (f32[2]) tuple(f32[2] %s)
+}
+"#;
+        let diags = verify_src(text);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn shape_mismatch_names_instruction_and_both_shapes() {
+        let text = r#"ENTRY %m (x: f32[2,3]) -> (f32[3,2]) {
+  %x = f32[2,3] parameter(0)
+  %tr = f32[2,3] transpose(f32[2,3] %x), dimensions={1,0}
+  ROOT %t = (f32[3,2]) tuple(f32[2,3] %tr)
+}
+"#;
+        let diags = verify_src(text);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        let d = &diags[0];
+        assert_eq!(d.kind, DiagKind::ShapeMismatch);
+        assert_eq!(d.instr, "tr");
+        assert_eq!(d.opcode, "transpose");
+        assert!(d.message.contains("f32[2,3]") && d.message.contains("f32[3,2]"), "{}", d.message);
+    }
+
+    #[test]
+    fn documented_gaps_are_structured_diagnostics() {
+        for op in ["while", "sort", "scatter", "rng-bit-generator"] {
+            let text = format!(
+                "ENTRY %m (x: f32[2]) -> (f32[2]) {{\n  %x = f32[2] parameter(0)\n  \
+                 %w = f32[2] {op}(f32[2] %x)\n  ROOT %t = (f32[2]) tuple(f32[2] %w)\n}}\n"
+            );
+            let diags = verify_src(&text);
+            assert!(
+                diags.iter().any(|d| d.kind == DiagKind::UnsupportedOp
+                    && d.opcode == op
+                    && d.message.contains("documented op-set gap")),
+                "{op}: {diags:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn dead_values_and_unreferenced_computations_flagged() {
+        let text = r#"%orphan (a: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  ROOT %n = f32[] negate(f32[] %a)
+}
+
+ENTRY %m (x: f32[2]) -> (f32[2]) {
+  %x = f32[2] parameter(0)
+  %dead = f32[2] negate(f32[2] %x)
+  ROOT %t = (f32[2]) tuple(f32[2] %x)
+}
+"#;
+        let diags = verify_src(text);
+        assert!(diags.iter().any(|d| d.message.contains("never referenced")), "{diags:?}");
+        assert!(diags.iter().any(|d| d.instr == "dead" && d.message.contains("never used")), "{diags:?}");
+    }
+
+    #[test]
+    fn io_contract_cross_checks_manifest() {
+        let text = "ENTRY %m (x: f32[2]) -> (f32[2]) {\n  %x = f32[2] parameter(0)\n  \
+                    ROOT %t = (f32[2]) tuple(f32[2] %x)\n}\n";
+        let (m, diags) = verify_text(text);
+        assert!(diags.is_empty());
+        let m = m.unwrap();
+        let spec = ArtifactSpec {
+            name: "echo".into(),
+            file: "echo.hlo.txt".into(),
+            inputs: vec![crate::runtime::manifest::TensorSpec {
+                name: "x".into(),
+                shape: vec![3],
+                dtype: Dtype::F32,
+            }],
+            outputs: vec![crate::runtime::manifest::TensorSpec {
+                name: "y".into(),
+                shape: vec![2],
+                dtype: Dtype::F32,
+            }],
+            hlo_bytes: 0,
+        };
+        let diags = verify_artifact_io(&m, &spec);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].kind, DiagKind::IoContract);
+        assert!(diags[0].message.contains("[3]"), "{}", diags[0].message);
+    }
+}

@@ -117,13 +117,35 @@ pub fn print_table(title: &str, results: &[BenchResult]) {
     }
 }
 
+/// Generic markdown table for paper-shaped (non-timing) tables, returned
+/// as a string so callers can print it, log it, or assert on it
+/// (`gcore hlo-lint` builds its diagnostics table through this).
+pub fn format_rows(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = format!("\n### {title}\n\n");
+    out.push_str(&format!("| {} |\n", header.join(" | ")));
+    out.push_str(&format!(
+        "|{}|\n",
+        header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+    ));
+    for row in rows {
+        out.push_str(&format!("| {} |\n", row.join(" | ")));
+    }
+    out
+}
+
 /// Generic markdown table printer for paper-shaped (non-timing) tables.
 pub fn print_rows(title: &str, header: &[&str], rows: &[Vec<String>]) {
-    println!("\n### {title}\n");
-    println!("| {} |", header.join(" | "));
-    println!("|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
-    for row in rows {
-        println!("| {} |", row.join(" | "));
+    print!("{}", format_rows(title, header, rows));
+}
+
+/// Human-readable byte count (the hlo-lint peak-live-bytes column).
+pub fn fmt_bytes(b: usize) -> String {
+    if b < 1024 {
+        format!("{b} B")
+    } else if b < 1024 * 1024 {
+        format!("{:.1} KiB", b as f64 / 1024.0)
+    } else {
+        format!("{:.2} MiB", b as f64 / (1024.0 * 1024.0))
     }
 }
 
@@ -153,6 +175,17 @@ mod tests {
     fn per_sec_guards_zero_wall() {
         assert_eq!(per_sec(100, 2.0), 50.0);
         assert!(per_sec(1, 0.0).is_finite());
+    }
+
+    #[test]
+    fn byte_and_row_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(3 << 20), "3.00 MiB");
+        let t = format_rows("T", &["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert!(t.contains("### T"));
+        assert!(t.contains("| a | b |"));
+        assert!(t.contains("| 1 | 2 |"));
     }
 
     #[test]

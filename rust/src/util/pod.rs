@@ -9,6 +9,11 @@
 //! memcpy-/SIMD-friendly slice operations.  Misaligned or big-endian
 //! buffers fall back to the per-element decode, so results are identical
 //! everywhere; only the speed differs.
+//!
+//! This is the crate's sole module containing unsafe code (lib.rs pins
+//! that inventory with `deny(unsafe_op_in_unsafe_fn)`): every unsafe
+//! block here is a POD slice reinterpretation with a local SAFETY note,
+//! wrapped in a safe API.
 
 /// `&[f32]` viewed as raw bytes (native order — little-endian on every
 /// supported target, which is also the wire order).

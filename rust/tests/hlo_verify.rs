@@ -1,0 +1,310 @@
+//! Static-verifier tier: a malformed-HLO corpus with golden diagnostics,
+//! plus property tests over the checked-in fixture artifact sets — every
+//! instruction's inferred shape must equal its declared shape, both sets
+//! must lint clean (the same gate `gcore hlo-lint` enforces in CI), and
+//! the planner's static peak-live bound for `decode_step` must sit inside
+//! the 3 MiB/token allocation budget `tests/alloc_counts.rs` asserts
+//! dynamically.
+
+use gcore::runtime::hlo::parser::HloModule;
+use gcore::runtime::hlo::plan::StaticPlan;
+use gcore::runtime::hlo::verify::{self, DiagKind, Diagnostic};
+use gcore::runtime::hlo::Program;
+use gcore::runtime::{artifacts_dir, Manifest};
+
+fn diags(text: &str) -> Vec<Diagnostic> {
+    let (_, d) = verify::verify_text(text);
+    d
+}
+
+/// The corpus asserts one *specific* golden diagnostic per case: kind,
+/// instruction anchor, and the message fragments an operator needs to fix
+/// the artifact without opening the HLO.
+fn assert_golden(ds: &[Diagnostic], kind: DiagKind, instr: &str, fragments: &[&str]) {
+    assert_eq!(ds.len(), 1, "expected exactly one diagnostic, got {ds:?}");
+    let d = &ds[0];
+    assert_eq!(d.kind, kind, "{d}");
+    assert_eq!(d.instr, instr, "{d}");
+    for f in fragments {
+        assert!(d.message.contains(f), "missing {f:?} in: {d}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// malformed corpus
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shape_mismatch_reports_instruction_opcode_and_both_shapes() {
+    let ds = diags(
+        "ENTRY %m (x: f32[2,3], y: f32[2,3]) -> (f32[2,4]) {\n  \
+         %x = f32[2,3] parameter(0)\n  \
+         %y = f32[2,3] parameter(1)\n  \
+         %s = f32[2,4] add(f32[2,3] %x, f32[2,3] %y)\n  \
+         ROOT %t = (f32[2,4]) tuple(f32[2,4] %s)\n}\n",
+    );
+    assert_golden(&ds, DiagKind::ShapeMismatch, "s", &["f32[2,4]", "f32[2,3]"]);
+    assert_eq!(ds[0].opcode, "add");
+    let rendered = ds[0].to_string();
+    assert!(rendered.contains("[shape-mismatch]"), "{rendered}");
+    assert!(rendered.contains("%s (add)"), "{rendered}");
+}
+
+#[test]
+fn undefined_operand_is_a_parse_diagnostic_naming_the_operand() {
+    let ds = diags(
+        "ENTRY %m (x: f32[2]) -> (f32[2]) {\n  \
+         %x = f32[2] parameter(0)\n  \
+         %n = f32[2] negate(f32[2] %ghost)\n  \
+         ROOT %t = (f32[2]) tuple(f32[2] %n)\n}\n",
+    );
+    assert_eq!(ds.len(), 1, "{ds:?}");
+    assert_eq!(ds[0].kind, DiagKind::ParseError);
+    assert!(ds[0].message.contains("ghost"), "{}", ds[0]);
+}
+
+#[test]
+fn bad_reduce_body_is_a_bad_reduce_diagnostic() {
+    // body folds with multiply — not one of the evaluator's add/max/min
+    let ds = diags(
+        "%rmul (a: f32[], b: f32[]) -> f32[] {\n  \
+         %a = f32[] parameter(0)\n  \
+         %b = f32[] parameter(1)\n  \
+         ROOT %r = f32[] multiply(f32[] %a, f32[] %b)\n}\n\n\
+         ENTRY %m (x: f32[2,3]) -> (f32[2]) {\n  \
+         %x = f32[2,3] parameter(0)\n  \
+         %z = f32[] constant(0)\n  \
+         %s = f32[2] reduce(f32[2,3] %x, f32[] %z), dimensions={1}, to_apply=%rmul\n  \
+         ROOT %t = (f32[2]) tuple(f32[2] %s)\n}\n",
+    );
+    assert_golden(
+        &ds,
+        DiagKind::BadReduce,
+        "s",
+        &["reduce body", "rmul", "multiply", "supported fold"],
+    );
+}
+
+#[test]
+fn reduce_body_dtype_mismatch_is_a_bad_reduce_diagnostic() {
+    // s32 reduce folded through an f32 body
+    let ds = diags(
+        "%radd (a: f32[], b: f32[]) -> f32[] {\n  \
+         %a = f32[] parameter(0)\n  \
+         %b = f32[] parameter(1)\n  \
+         ROOT %r = f32[] add(f32[] %a, f32[] %b)\n}\n\n\
+         ENTRY %m (x: s32[4]) -> (s32[]) {\n  \
+         %x = s32[4] parameter(0)\n  \
+         %z = s32[] constant(0)\n  \
+         %s = s32[] reduce(s32[4] %x, s32[] %z), dimensions={0}, to_apply=%radd\n  \
+         ROOT %t = (s32[]) tuple(s32[] %s)\n}\n",
+    );
+    assert_golden(&ds, DiagKind::BadReduce, "s", &["radd", "expected s32[]"]);
+}
+
+#[test]
+fn documented_gap_opcode_is_a_structured_unsupported_op() {
+    let ds = diags(
+        "ENTRY %m (x: f32[2]) -> (f32[2]) {\n  \
+         %x = f32[2] parameter(0)\n  \
+         %w = f32[2] sort(f32[2] %x), dimensions={0}\n  \
+         ROOT %t = (f32[2]) tuple(f32[2] %w)\n}\n",
+    );
+    assert_golden(
+        &ds,
+        DiagKind::UnsupportedOp,
+        "w",
+        &["'sort'", "documented op-set gap", "ROADMAP.md"],
+    );
+}
+
+#[test]
+fn dtype_mismatched_select_is_a_dtype_diagnostic() {
+    let ds = diags(
+        "ENTRY %m (p: pred[2], a: f32[2], b: s32[2]) -> (f32[2]) {\n  \
+         %p = pred[2] parameter(0)\n  \
+         %a = f32[2] parameter(1)\n  \
+         %b = s32[2] parameter(2)\n  \
+         %s = f32[2] select(pred[2] %p, f32[2] %a, s32[2] %b)\n  \
+         ROOT %t = (f32[2]) tuple(f32[2] %s)\n}\n",
+    );
+    assert_golden(
+        &ds,
+        DiagKind::DtypeMismatch,
+        "s",
+        &["select branch dtypes differ", "f32", "s32"],
+    );
+}
+
+#[test]
+fn dead_instruction_is_a_def_use_diagnostic() {
+    let ds = diags(
+        "ENTRY %m (x: f32[2]) -> (f32[2]) {\n  \
+         %x = f32[2] parameter(0)\n  \
+         %dead = f32[2] negate(f32[2] %x)\n  \
+         %n = f32[2] negate(f32[2] %x)\n  \
+         ROOT %t = (f32[2]) tuple(f32[2] %n)\n}\n",
+    );
+    assert_golden(&ds, DiagKind::DefUse, "dead", &["never used"]);
+}
+
+#[test]
+fn silent_defaults_are_now_hard_diagnostics() {
+    // concatenate without dimensions= used to default to axis 0
+    let ds = diags(
+        "ENTRY %m (x: f32[2], y: f32[2]) -> (f32[4]) {\n  \
+         %x = f32[2] parameter(0)\n  \
+         %y = f32[2] parameter(1)\n  \
+         %c = f32[4] concatenate(f32[2] %x, f32[2] %y)\n  \
+         ROOT %t = (f32[4]) tuple(f32[4] %c)\n}\n",
+    );
+    assert_golden(
+        &ds,
+        DiagKind::BadAttribute,
+        "c",
+        &["concatenate without dimensions=", "no silent axis-0 default"],
+    );
+
+    // dot without dimension numbers used to default to an outer product
+    let ds = diags(
+        "ENTRY %m (x: f32[2,3], y: f32[3,4]) -> (f32[2,4]) {\n  \
+         %x = f32[2,3] parameter(0)\n  \
+         %y = f32[3,4] parameter(1)\n  \
+         %d = f32[2,4] dot(f32[2,3] %x, f32[3,4] %y)\n  \
+         ROOT %t = (f32[2,4]) tuple(f32[2,4] %d)\n}\n",
+    );
+    assert_golden(
+        &ds,
+        DiagKind::BadAttribute,
+        "d",
+        &["dot without dimension numbers", "no silent default"],
+    );
+}
+
+#[test]
+fn program_compile_refuses_unverified_modules() {
+    let msg = format!(
+        "{:#}",
+        Program::parse(
+            "ENTRY %m (x: f32[2]) -> (f32[3]) {\n  \
+             %x = f32[2] parameter(0)\n  \
+             %n = f32[3] negate(f32[2] %x)\n  \
+             ROOT %t = (f32[3]) tuple(f32[3] %n)\n}\n",
+        )
+        .unwrap_err()
+    );
+    assert!(msg.contains("failed static verification"), "{msg}");
+    assert!(msg.contains("%n"), "{msg}");
+    assert!(msg.contains("f32[3]") && msg.contains("f32[2]"), "{msg}");
+}
+
+// ---------------------------------------------------------------------------
+// fixture property tests
+// ---------------------------------------------------------------------------
+
+fn fixture_sets() -> Vec<(String, Manifest)> {
+    ["tiny", "synthetic"]
+        .iter()
+        .map(|set| {
+            let dir = artifacts_dir(set);
+            assert!(
+                dir.join("manifest.json").exists(),
+                "checked-in fixture set '{set}' missing at {dir:?} — \
+                 regenerate with `python -m compile.fixturegen`"
+            );
+            (set.to_string(), Manifest::load(&dir).unwrap())
+        })
+        .collect()
+}
+
+#[test]
+fn every_fixture_instruction_inferred_shape_equals_declared() {
+    let mut checked = 0usize;
+    for (set, manifest) in fixture_sets() {
+        for name in manifest.artifacts.keys() {
+            let text = std::fs::read_to_string(manifest.hlo_path(name).unwrap()).unwrap();
+            let m = HloModule::parse(&text).unwrap();
+            for c in &m.computations {
+                for (i, ins) in c.instrs.iter().enumerate() {
+                    let inferred = verify::infer_shape(&m, c, i).unwrap_or_else(|e| {
+                        panic!("{set}/{name} %{}: {e:#}", ins.name)
+                    });
+                    assert_eq!(
+                        inferred.as_ref(),
+                        ins.shape.as_ref(),
+                        "{set}/{name} %{} ({})",
+                        ins.name,
+                        ins.opcode
+                    );
+                    checked += 1;
+                }
+            }
+        }
+    }
+    // the property is vacuous if the walk goes wrong; both sets together
+    // carry north of 9k instructions
+    assert!(checked > 9000, "only {checked} instructions walked");
+}
+
+#[test]
+fn checked_in_fixture_sets_lint_clean() {
+    for (set, manifest) in fixture_sets() {
+        let report = verify::lint_set(&manifest.dir).unwrap();
+        let all: Vec<String> = report
+            .artifacts
+            .iter()
+            .flat_map(|a| a.diagnostics.iter().map(move |d| format!("{}: {d}", a.name)))
+            .collect();
+        assert!(
+            report.total_diagnostics() == 0,
+            "fixture set '{set}' must lint clean:\n{}",
+            all.join("\n")
+        );
+        for a in &report.artifacts {
+            let plan = a.plan.as_ref().unwrap_or_else(|| {
+                panic!("{set}/{} verified clean but has no plan", a.name)
+            });
+            assert_eq!(plan.last_use.len(), a.instrs);
+            assert!(plan.peak_live_bytes > 0, "{set}/{}", a.name);
+        }
+    }
+}
+
+#[test]
+fn decode_step_static_peak_fits_the_alloc_budget() {
+    // tests/alloc_counts.rs asserts < 3 MiB allocated per decoded token at
+    // runtime; the static bound must agree, or the planner's model and the
+    // allocator have drifted apart
+    for (set, manifest) in fixture_sets() {
+        let text =
+            std::fs::read_to_string(manifest.hlo_path("decode_step").unwrap()).unwrap();
+        let program = Program::parse(&text).unwrap();
+        let peak = program.plan().peak_live_bytes;
+        assert!(
+            peak < 3 << 20,
+            "{set}/decode_step static peak {peak} bytes exceeds the 3 MiB budget"
+        );
+    }
+}
+
+#[test]
+fn fixture_plans_pin_root_operands_live() {
+    for (_, manifest) in fixture_sets() {
+        let text =
+            std::fs::read_to_string(manifest.hlo_path("decode_step").unwrap()).unwrap();
+        let m = HloModule::parse(&text).unwrap();
+        let plan = StaticPlan::build(&m);
+        let entry = m.entry_computation();
+        assert_eq!(plan.last_use[entry.root], usize::MAX);
+        for &op in &entry.instrs[entry.root].operands {
+            assert_eq!(plan.last_use[op], usize::MAX, "root operand dropped early");
+        }
+        // decode's elementwise body yields fusible chains — the report must
+        // see them, and each chain link must be a real instruction index
+        assert!(!plan.fusible_chains.is_empty());
+        for chain in &plan.fusible_chains {
+            assert!(chain.len() >= 2);
+            assert!(chain.iter().all(|&i| i < entry.instrs.len()));
+        }
+    }
+}

@@ -10,6 +10,7 @@ use std::path::PathBuf;
 use gcore::coordinator::generation::{self, GenOutput, SamplerConfig};
 use gcore::coordinator::rollout::{self, CancelPolicy, RolloutOptions, RolloutRequest};
 use gcore::data::tokenizer::{EOS, PAD};
+use gcore::runtime::hlo::verify::{self, DiagKind};
 use gcore::runtime::{init_policy, Engine, ParamSet, Tensor};
 use gcore::util::rng::Rng;
 
@@ -211,10 +212,11 @@ enum Gate {
 }
 
 /// Write a 2-row, prompt_len=2, max_seq=6 artifact set whose prefill and
-/// decode_step emit constant logits and zero caches.  `row_target` makes
-/// prefill logits one-hot at column 10+row instead (row 0 → EOS, row 1 →
-/// a non-EOS token) so EOS timing diverges across rows deterministically.
-fn micro_engine(name: &str, vocab: usize, row_target: bool, gate: Gate) -> Engine {
+/// decode_step emit constant logits and zero caches, returning its
+/// directory.  `row_target` makes prefill logits one-hot at column 10+row
+/// instead (row 0 → EOS, row 1 → a non-EOS token) so EOS timing diverges
+/// across rows deterministically.
+fn micro_set_dir(name: &str, vocab: usize, row_target: bool, gate: Gate) -> PathBuf {
     let dir: PathBuf = std::env::temp_dir()
         .join("gcore_rollout_tests")
         .join(format!("{name}_{}", std::process::id()));
@@ -315,7 +317,11 @@ fn micro_engine(name: &str, vocab: usize, row_target: bool, gate: Gate) -> Engin
 }}"#
     );
     std::fs::write(dir.join("manifest.json"), manifest).unwrap();
-    Engine::from_dir(&dir).unwrap()
+    dir
+}
+
+fn micro_engine(name: &str, vocab: usize, row_target: bool, gate: Gate) -> Engine {
+    Engine::from_dir(&micro_set_dir(name, vocab, row_target, gate)).unwrap()
 }
 
 fn micro_params() -> ParamSet {
@@ -610,4 +616,55 @@ fn stop_at_eos_false_decodes_through_eos_identically() {
     for row in &out.rows {
         assert_eq!(&row[2..], &[EOS, EOS, EOS, EOS]);
     }
+}
+
+// ---------------------------------------------------------------------------
+// static lint gate over the generated micro sets (same gate CI runs over the
+// checked-in fixture sets via `gcore hlo-lint`)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn micro_sets_lint_clean() {
+    // both HLO shapes the generator emits: constant logits and the
+    // iota/compare/select row-target variant
+    for (name, vocab, row_target) in
+        [("lint_const", 11, false), ("lint_rowtgt", 12, true)]
+    {
+        let dir = micro_set_dir(name, vocab, row_target, Gate::None);
+        let report = verify::lint_set(&dir).unwrap();
+        assert_eq!(
+            report.total_diagnostics(),
+            0,
+            "micro set {name} must verify clean: {:?}",
+            report
+                .artifacts
+                .iter()
+                .flat_map(|a| &a.diagnostics)
+                .collect::<Vec<_>>()
+        );
+        for a in &report.artifacts {
+            let plan = a.plan.as_ref().expect("clean artifact must carry a plan");
+            assert_eq!(plan.last_use.len(), a.instrs);
+        }
+    }
+}
+
+#[test]
+fn gated_micro_set_lint_reports_only_the_missing_fused_artifact() {
+    // the fused `generate_rollout` entry deliberately has no HLO file on
+    // disk; the lint must flag exactly that and nothing else
+    let dir = micro_set_dir("lint_gated", 11, false, Gate::Baked);
+    let report = verify::lint_set(&dir).unwrap();
+    assert_eq!(report.total_diagnostics(), 1);
+    let bad = report
+        .artifacts
+        .iter()
+        .find(|a| !a.diagnostics.is_empty())
+        .unwrap();
+    assert_eq!(bad.name, "generate_rollout");
+    assert_eq!(bad.diagnostics[0].kind, DiagKind::ParseError);
+    assert!(bad.diagnostics[0].message.contains("cannot read"));
+    // and the engine still loads: eager verification skips artifacts whose
+    // HLO file is absent (the gate bails before touching the fused path)
+    Engine::from_dir(&dir).unwrap();
 }
