@@ -1,0 +1,395 @@
+//! The regression gate: CI's enforcement layer over the bench store.
+//!
+//! For every directed series the gate compares the current commit's
+//! median against the rolling median of the last `window` *distinct
+//! prior commits* (each prior commit contributes its own per-commit
+//! median first, so a commit that ran the bench three times doesn't get
+//! three votes).  A series regresses when it moves in its bad direction
+//! by more than `threshold_pct` percent; any regressed series fails the
+//! gate (`gcore bench gate` exits nonzero).  First-commit bootstrap and
+//! informational series always pass.
+
+use super::store::{median, BenchDb, Direction, Sample};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Within threshold (or an improvement).
+    Pass,
+    /// Moved > threshold in the bad direction — fails the gate.
+    Fail,
+    /// No prior commits to compare against (first run of a series).
+    Bootstrap,
+    /// Not comparable: informational direction, or a ~0 baseline.
+    Skipped,
+}
+
+impl Verdict {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Verdict::Pass => "pass",
+            Verdict::Fail => "FAIL",
+            Verdict::Bootstrap => "bootstrap",
+            Verdict::Skipped => "skip",
+        }
+    }
+}
+
+/// Per-series gate outcome.
+#[derive(Debug, Clone)]
+pub struct SeriesVerdict {
+    pub label: String,
+    pub metric: String,
+    pub direction: Direction,
+    /// Median of the current commit's samples.
+    pub current: f64,
+    /// Rolling median of the prior-commit medians (None on bootstrap).
+    pub baseline: Option<f64>,
+    /// Percent moved in the bad direction (negative = improved).
+    pub regression_pct: Option<f64>,
+    /// How many prior commits the baseline covered (≤ window).
+    pub baseline_commits: usize,
+    pub verdict: Verdict,
+}
+
+#[derive(Debug, Clone)]
+pub struct GateReport {
+    pub commit: String,
+    pub threshold_pct: f64,
+    pub window: usize,
+    pub series: Vec<SeriesVerdict>,
+}
+
+impl GateReport {
+    pub fn failures(&self) -> Vec<&SeriesVerdict> {
+        self.series.iter().filter(|s| s.verdict == Verdict::Fail).collect()
+    }
+
+    pub fn passed(&self) -> bool {
+        self.failures().is_empty()
+    }
+}
+
+/// Per-commit medians of `series`, oldest commit first.  Commit order is
+/// the order of each commit's first appearance in the time-sorted series
+/// (timestamps tie-break within CI runs that share a clock second).
+fn commit_medians(series: &[&Sample]) -> Vec<(String, f64)> {
+    let mut order: Vec<String> = Vec::new();
+    for s in series {
+        if !order.contains(&s.commit) {
+            order.push(s.commit.clone());
+        }
+    }
+    order
+        .into_iter()
+        .filter_map(|c| {
+            let vals: Vec<f64> =
+                series.iter().filter(|s| s.commit == c).map(|s| s.value).collect();
+            median(&vals).map(|m| (c, m))
+        })
+        .collect()
+}
+
+/// How far `current` moved past `baseline` in the bad direction, in
+/// percent.  Positive = regressed, negative = improved.
+pub fn regression_pct(direction: Direction, baseline: f64, current: f64) -> Option<f64> {
+    if baseline.abs() < 1e-12 {
+        return None;
+    }
+    match direction {
+        Direction::LowerIsBetter => Some((current - baseline) / baseline.abs() * 100.0),
+        Direction::HigherIsBetter => Some((baseline - current) / baseline.abs() * 100.0),
+        Direction::Informational => None,
+    }
+}
+
+/// Gate every directed series that has samples for `commit`.
+pub fn gate(db: &BenchDb, commit: &str, threshold_pct: f64, window: usize) -> GateReport {
+    let window = window.max(1);
+    let mut out = Vec::new();
+    for (label, metric) in db.series_keys() {
+        let series = db.series(&label, &metric);
+        let cur_vals: Vec<f64> =
+            series.iter().filter(|s| s.commit == commit).map(|s| s.value).collect();
+        let Some(current) = median(&cur_vals) else {
+            continue; // series has no samples for this commit — nothing to judge
+        };
+        let direction = series
+            .iter()
+            .find(|s| s.commit == commit)
+            .map(|s| s.direction)
+            .unwrap_or(Direction::Informational);
+        if direction == Direction::Informational {
+            out.push(SeriesVerdict {
+                label,
+                metric,
+                direction,
+                current,
+                baseline: None,
+                regression_pct: None,
+                baseline_commits: 0,
+                verdict: Verdict::Skipped,
+            });
+            continue;
+        }
+        let prior: Vec<&Sample> =
+            series.iter().filter(|s| s.commit != commit).copied().collect();
+        let per_commit = commit_medians(&prior);
+        if per_commit.is_empty() {
+            out.push(SeriesVerdict {
+                label,
+                metric,
+                direction,
+                current,
+                baseline: None,
+                regression_pct: None,
+                baseline_commits: 0,
+                verdict: Verdict::Bootstrap,
+            });
+            continue;
+        }
+        let tail: Vec<f64> = per_commit
+            .iter()
+            .rev()
+            .take(window)
+            .map(|(_, m)| *m)
+            .collect();
+        let baseline_commits = tail.len();
+        let baseline = median(&tail).expect("non-empty tail has a median");
+        let reg = regression_pct(direction, baseline, current);
+        let verdict = match reg {
+            // +1e-9 absorbs float noise exactly at the threshold boundary
+            Some(r) if r > threshold_pct + 1e-9 => Verdict::Fail,
+            Some(_) => Verdict::Pass,
+            None => Verdict::Skipped,
+        };
+        out.push(SeriesVerdict {
+            label,
+            metric,
+            direction,
+            current,
+            baseline: Some(baseline),
+            regression_pct: reg,
+            baseline_commits,
+            verdict,
+        });
+    }
+    GateReport {
+        commit: commit.to_string(),
+        threshold_pct,
+        window,
+        series: out,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("gcore_gate_{}_{name}.jsonl", std::process::id()))
+    }
+
+    fn db_with(name: &str, points: &[(&str, u64, f64)]) -> BenchDb {
+        let path = tmp(name);
+        std::fs::remove_file(&path).ok();
+        let mut db = BenchDb::open(&path).unwrap();
+        for (commit, ts, v) in points {
+            db.insert(Sample::scalar(
+                "e/x",
+                "ms",
+                *commit,
+                *ts,
+                *v,
+                "ms",
+                Direction::LowerIsBetter,
+            ))
+            .unwrap();
+        }
+        std::fs::remove_file(&path).ok(); // in-memory view survives unlink
+        db
+    }
+
+    #[test]
+    fn bootstrap_passes() {
+        let db = db_with("boot", &[("c1", 1, 10.0)]);
+        let r = gate(&db, "c1", 20.0, 5);
+        assert_eq!(r.series.len(), 1);
+        assert_eq!(r.series[0].verdict, Verdict::Bootstrap);
+        assert!(r.passed());
+    }
+
+    #[test]
+    fn unchanged_passes_and_regression_fails() {
+        let base: Vec<(&str, u64, f64)> =
+            vec![("c1", 1, 10.0), ("c2", 2, 10.2), ("c3", 3, 9.9)];
+        // unchanged
+        let mut pts = base.clone();
+        pts.push(("c4", 4, 10.0));
+        let r = gate(&db_with("same", &pts), "c4", 20.0, 5);
+        assert_eq!(r.series[0].verdict, Verdict::Pass);
+        // +50% on a lower-is-better metric
+        let mut pts = base.clone();
+        pts.push(("c4", 4, 15.0));
+        let r = gate(&db_with("reg", &pts), "c4", 20.0, 5);
+        assert_eq!(r.series[0].verdict, Verdict::Fail);
+        assert!(!r.passed());
+        assert_eq!(r.failures().len(), 1);
+        // -30% (an improvement) passes
+        let mut pts = base;
+        pts.push(("c4", 4, 7.0));
+        let r = gate(&db_with("imp", &pts), "c4", 20.0, 5);
+        assert_eq!(r.series[0].verdict, Verdict::Pass);
+        assert!(r.series[0].regression_pct.unwrap() < 0.0);
+    }
+
+    #[test]
+    fn injected_pct_fails_iff_above_threshold() {
+        // baseline median of {10, 10, 10} = 10; inject +X%
+        for (x, should_fail) in
+            [(0.0, false), (5.0, false), (19.0, false), (21.0, true), (50.0, true)]
+        {
+            let pts = vec![
+                ("c1", 1, 10.0),
+                ("c2", 2, 10.0),
+                ("c3", 3, 10.0),
+                ("c4", 4, 10.0 * (1.0 + x / 100.0)),
+            ];
+            let r = gate(&db_with(&format!("inj{}", x as i64), &pts), "c4", 20.0, 5);
+            assert_eq!(
+                r.series[0].verdict,
+                if should_fail { Verdict::Fail } else { Verdict::Pass },
+                "+{x}%"
+            );
+        }
+    }
+
+    #[test]
+    fn window_only_sees_last_k_commits() {
+        // old commits were fast (1.0); the last 3 settled at 10.0.  With
+        // window=3 the baseline is 10.0, so 10.5 passes; with window=50
+        // the baseline median over {1,1,1,10,10,10} straddles — make it
+        // odd so the wide window flags what the narrow one accepts.
+        let pts = vec![
+            ("c1", 1, 1.0),
+            ("c2", 2, 1.0),
+            ("c3", 3, 1.0),
+            ("c4", 4, 10.0),
+            ("c5", 5, 10.0),
+            ("c6", 6, 10.0),
+            ("c7", 7, 10.5),
+        ];
+        let narrow = gate(&db_with("win_n", &pts), "c7", 20.0, 3);
+        assert_eq!(narrow.series[0].verdict, Verdict::Pass);
+        assert_eq!(narrow.series[0].baseline, Some(10.0));
+        assert_eq!(narrow.series[0].baseline_commits, 3);
+        let wide = gate(&db_with("win_w", &pts), "c7", 20.0, 50);
+        assert_eq!(wide.series[0].baseline, Some(5.5));
+        assert_eq!(wide.series[0].baseline_commits, 6);
+        assert_eq!(wide.series[0].verdict, Verdict::Fail);
+    }
+
+    #[test]
+    fn fewer_than_window_commits_still_gates() {
+        let pts = vec![("c1", 1, 10.0), ("c2", 2, 20.0)];
+        let r = gate(&db_with("short", &pts), "c2", 20.0, 5);
+        assert_eq!(r.series[0].baseline_commits, 1);
+        assert_eq!(r.series[0].verdict, Verdict::Fail);
+    }
+
+    #[test]
+    fn repeated_runs_of_one_commit_get_one_vote() {
+        // c1 ran 3× (9, 10, 11 → median 10), c2 once at 30: clear fail,
+        // and the baseline is the per-commit median, not the sample pool.
+        let pts = vec![("c1", 1, 9.0), ("c1", 2, 11.0), ("c1", 3, 10.0), ("c2", 4, 30.0)];
+        let r = gate(&db_with("mult", &pts), "c2", 20.0, 5);
+        assert_eq!(r.series[0].baseline, Some(10.0));
+        assert_eq!(r.series[0].baseline_commits, 1);
+        assert_eq!(r.series[0].verdict, Verdict::Fail);
+    }
+
+    #[test]
+    fn higher_is_better_inverts() {
+        let path = tmp("higher");
+        std::fs::remove_file(&path).ok();
+        let mut db = BenchDb::open(&path).unwrap();
+        for (c, ts, v) in [("c1", 1u64, 100.0), ("c2", 2, 100.0), ("c3", 3, 70.0)] {
+            db.insert(Sample::scalar(
+                "e/t",
+                "tokens/s",
+                c,
+                ts,
+                v,
+                "",
+                Direction::HigherIsBetter,
+            ))
+            .unwrap();
+        }
+        let r = gate(&db, "c3", 20.0, 5);
+        assert_eq!(r.series[0].verdict, Verdict::Fail, "throughput drop must fail");
+        let r = gate(&db, "c2", 20.0, 5);
+        assert_eq!(r.series[0].verdict, Verdict::Pass);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn informational_series_never_gate() {
+        let path = tmp("info");
+        std::fs::remove_file(&path).ok();
+        let mut db = BenchDb::open(&path).unwrap();
+        for (c, ts, v) in [("c1", 1u64, 5.0), ("c2", 2, 500.0)] {
+            db.insert(Sample::scalar("e/w", "waves", c, ts, v, "", Direction::Informational))
+                .unwrap();
+        }
+        let r = gate(&db, "c2", 20.0, 5);
+        assert_eq!(r.series[0].verdict, Verdict::Skipped);
+        assert!(r.passed());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bless_resets_the_baseline() {
+        let path = tmp("bless");
+        std::fs::remove_file(&path).ok();
+        let mut db = BenchDb::open(&path).unwrap();
+        let mut put = |c: &str, ts: u64, v: f64| {
+            db.insert(Sample::scalar("e/x", "ms", c, ts, v, "ms", Direction::LowerIsBetter))
+                .unwrap();
+        };
+        put("c1", 1, 10.0);
+        put("c2", 2, 10.0);
+        put("c3", 3, 30.0); // intentional 3× slowdown
+        let r = gate(&db, "c3", 20.0, 5);
+        assert_eq!(r.series[0].verdict, Verdict::Fail);
+        db.bless("e/x", "c3", 3).unwrap();
+        // post-bless: c3 is the only visible history, so c3 re-gates as
+        // bootstrap and c4 gates against the new 30.0 baseline
+        let r = gate(&db, "c3", 20.0, 5);
+        assert_eq!(r.series[0].verdict, Verdict::Bootstrap);
+        db.insert(Sample::scalar("e/x", "ms", "c4", 4, 31.0, "ms", Direction::LowerIsBetter))
+            .unwrap();
+        let r = gate(&db, "c4", 20.0, 5);
+        assert_eq!(r.series[0].verdict, Verdict::Pass);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn zero_baseline_is_skipped_not_divided() {
+        let pts = vec![("c1", 1, 0.0), ("c2", 2, 5.0)];
+        let r = gate(&db_with("zero", &pts), "c2", 20.0, 5);
+        assert_eq!(r.series[0].verdict, Verdict::Skipped);
+        assert!(r.passed());
+    }
+
+    #[test]
+    fn regression_pct_math() {
+        use Direction::*;
+        let close = |got: Option<f64>, want: f64| (got.unwrap() - want).abs() < 1e-9;
+        assert!(close(regression_pct(LowerIsBetter, 10.0, 12.0), 20.0));
+        assert!(close(regression_pct(HigherIsBetter, 10.0, 8.0), 20.0));
+        assert!(close(regression_pct(LowerIsBetter, 10.0, 8.0), -20.0));
+        assert!(close(regression_pct(HigherIsBetter, -10.0, -12.0), 20.0));
+        assert_eq!(regression_pct(Informational, 10.0, 99.0), None);
+        assert_eq!(regression_pct(LowerIsBetter, 0.0, 5.0), None);
+    }
+}

@@ -1,0 +1,268 @@
+//! Typed table cells.
+//!
+//! `experiments::Table` used to carry `rows: Vec<Vec<String>>` — every
+//! measurement was formatted at the point of computation and the numbers
+//! were gone.  `Metric` keeps the value, its display precision and its
+//! unit together, so `to_markdown()`/`to_json()` become *renderers* over
+//! typed data and the bench database (`bench::store`) can ingest the same
+//! cells losslessly instead of re-parsing formatted strings.
+//!
+//! Rendering is pinned bit-identical to the legacy string cells: a
+//! `Metric::f64(x, 3)` renders exactly what `format!("{x:.3}")` used to
+//! produce, so the markdown/JSON output of every experiment table is
+//! unchanged (modulo the versioned schema field on the JSON form).
+
+use crate::util::bench::{fmt_bytes, fmt_dur};
+
+/// One typed table cell: a value plus the unit and formatting it renders
+/// with.  `render()`/`parse()` round-trip at the string level — see
+/// `parse` for the exact guarantee.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Metric {
+    /// Floating-point measurement rendered at a fixed precision, with an
+    /// optional display unit ("MB", "%", …) separated by one space.
+    F64 {
+        v: f64,
+        prec: usize,
+        unit: Option<String>,
+    },
+    /// Exact integer (counts, sizes-as-configured, world sizes, …).
+    Int(i64),
+    /// Byte count rendered human-readable ("512 B", "2.0 KiB", "3.00 MiB").
+    Bytes(u64),
+    /// Wall-clock duration rendered human-readable ("500 ns", "1.50 ms").
+    DurationNs(u64),
+    /// Free-form text (labels, placeholders like "-", composite summaries).
+    Text(String),
+    /// Boolean gates ("identical", "exactly-once", …).
+    Bool(bool),
+}
+
+impl Metric {
+    pub fn f64(v: f64, prec: usize) -> Metric {
+        Metric::F64 { v, prec, unit: None }
+    }
+
+    pub fn f64_unit(v: f64, prec: usize, unit: &str) -> Metric {
+        Metric::F64 { v, prec, unit: Some(unit.to_string()) }
+    }
+
+    pub fn int(v: i64) -> Metric {
+        Metric::Int(v)
+    }
+
+    pub fn text(s: impl Into<String>) -> Metric {
+        Metric::Text(s.into())
+    }
+
+    /// The string this cell displays as — the exact text the legacy
+    /// stringly-typed rows carried.
+    pub fn render(&self) -> String {
+        match self {
+            Metric::F64 { v, prec, unit: None } => format!("{v:.prec$}"),
+            Metric::F64 { v, prec, unit: Some(u) } => format!("{v:.prec$} {u}"),
+            Metric::Int(i) => i.to_string(),
+            Metric::Bytes(b) => fmt_bytes(*b as usize),
+            Metric::DurationNs(ns) => fmt_dur(std::time::Duration::from_nanos(*ns)),
+            Metric::Text(s) => s.clone(),
+            Metric::Bool(b) => (if *b { "true" } else { "false" }).to_string(),
+        }
+    }
+
+    /// The numeric value this cell carries, if any — what the bench
+    /// database stores.  Text and Bool cells are not measurements.
+    pub fn value(&self) -> Option<f64> {
+        match self {
+            Metric::F64 { v, .. } => Some(*v),
+            Metric::Int(i) => Some(*i as f64),
+            Metric::Bytes(b) => Some(*b as f64),
+            Metric::DurationNs(ns) => Some(*ns as f64),
+            Metric::Text(_) | Metric::Bool(_) => None,
+        }
+    }
+
+    /// The display unit, if the cell has one ("MB", "ns", …).
+    pub fn unit_str(&self) -> Option<&str> {
+        match self {
+            Metric::F64 { unit, .. } => unit.as_deref(),
+            Metric::Bytes(_) => Some("B"),
+            Metric::DurationNs(_) => Some("ns"),
+            _ => None,
+        }
+    }
+
+    /// Best-effort inverse of `render` for ingesting legacy string cells
+    /// (e.g. archived `BENCH_*.json` artifacts).  The guarantee is
+    /// *render-level* identity — `Metric::parse(&m.render()).render() ==
+    /// m.render()` for every cell an experiment table produces — not
+    /// variant-level identity ("3.00 MiB" parses as an `F64` with unit
+    /// "MiB", not as `Bytes`).
+    pub fn parse(s: &str) -> Metric {
+        match s {
+            "true" => return Metric::Bool(true),
+            "false" => return Metric::Bool(false),
+            _ => {}
+        }
+        if let Some(m) = parse_number(s) {
+            return m;
+        }
+        // "<number> <unit>": exactly two tokens, unit starts alphabetic-ish
+        if let Some((num, unit)) = s.split_once(' ') {
+            if unit_like(unit) {
+                let parsed = match parse_number(num) {
+                    Some(Metric::Int(i)) => {
+                        Some(Metric::F64 { v: i as f64, prec: 0, unit: Some(unit.to_string()) })
+                    }
+                    Some(Metric::F64 { v, prec, .. }) => {
+                        Some(Metric::F64 { v, prec, unit: Some(unit.to_string()) })
+                    }
+                    _ => None,
+                };
+                if let Some(m) = parsed {
+                    return m;
+                }
+            }
+        }
+        Metric::Text(s.to_string())
+    }
+}
+
+/// Parse a bare fixed-point number, rejecting anything whose re-rendering
+/// would differ from the input (leading zeros, exponents, …).
+fn parse_number(s: &str) -> Option<Metric> {
+    let body = s.strip_prefix('-').unwrap_or(s);
+    if body.is_empty() || !body.as_bytes()[0].is_ascii_digit() {
+        return None;
+    }
+    if let Some((int_part, frac)) = body.split_once('.') {
+        if int_part.is_empty()
+            || frac.is_empty()
+            || !int_part.bytes().all(|b| b.is_ascii_digit())
+            || !frac.bytes().all(|b| b.is_ascii_digit())
+        {
+            return None;
+        }
+        let v: f64 = s.parse().ok()?;
+        let prec = frac.len();
+        if format!("{v:.prec$}") == s {
+            return Some(Metric::F64 { v, prec, unit: None });
+        }
+        return None;
+    }
+    if !body.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        if i.to_string() == s {
+            return Some(Metric::Int(i));
+        }
+    }
+    // integers beyond i64 (or with leading zeros): keep only if the f64
+    // re-render is exact
+    let v: f64 = s.parse().ok()?;
+    if format!("{v:.0}") == s {
+        return Some(Metric::F64 { v, prec: 0, unit: None });
+    }
+    None
+}
+
+/// A display unit is a single short token starting with a letter (or one
+/// of the symbols our formatters emit) — "MB", "µs", "%", "×" — never a
+/// phrase ("train step (tiny)").
+fn unit_like(u: &str) -> bool {
+    !u.is_empty()
+        && u.len() <= 12
+        && !u.contains(' ')
+        && u.chars()
+            .next()
+            .map(|c| c.is_alphabetic() || matches!(c, '×' | 'µ' | '%'))
+            .unwrap_or(false)
+}
+
+impl From<&str> for Metric {
+    fn from(s: &str) -> Metric {
+        Metric::Text(s.to_string())
+    }
+}
+impl From<String> for Metric {
+    fn from(s: String) -> Metric {
+        Metric::Text(s)
+    }
+}
+impl From<bool> for Metric {
+    fn from(b: bool) -> Metric {
+        Metric::Bool(b)
+    }
+}
+impl From<i64> for Metric {
+    fn from(v: i64) -> Metric {
+        Metric::Int(v)
+    }
+}
+impl From<i32> for Metric {
+    fn from(v: i32) -> Metric {
+        Metric::Int(v as i64)
+    }
+}
+impl From<u32> for Metric {
+    fn from(v: u32) -> Metric {
+        Metric::Int(v as i64)
+    }
+}
+impl From<u64> for Metric {
+    fn from(v: u64) -> Metric {
+        Metric::Int(v as i64)
+    }
+}
+impl From<usize> for Metric {
+    fn from(v: usize) -> Metric {
+        Metric::Int(v as i64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_matches_legacy_formatting() {
+        assert_eq!(Metric::f64(0.1234, 3).render(), format!("{:.3}", 0.1234));
+        assert_eq!(Metric::f64(120.0, 0).render(), "120");
+        assert_eq!(Metric::f64_unit(4.19, 2, "MB").render(), "4.19 MB");
+        assert_eq!(Metric::int(-7).render(), "-7");
+        assert_eq!(Metric::Bool(true).render(), "true");
+        assert_eq!(Metric::text("-").render(), "-");
+        assert_eq!(Metric::Bytes(2048).render(), "2.0 KiB");
+        assert_eq!(Metric::DurationNs(500).render(), "500 ns");
+    }
+
+    #[test]
+    fn parse_render_identity_on_typical_cells() {
+        for s in [
+            "true", "false", "-", "?", "OOM", "0", "42", "-3", "0.123", "-0.00", "1.20",
+            "4.19 MB", "512 B", "2.0 KiB", "98.7", "co-locate", "σ=0.7, 8 ranks × 32/rank",
+            "1 (capped)", "— summary —", "2b + cancel", "1 train step (tiny)", "200/200",
+            "dyn makespan 123s", "100000000000000000000", "NaN", "1e9", "007",
+        ] {
+            assert_eq!(Metric::parse(s).render(), s, "round-trip broke on {s:?}");
+        }
+    }
+
+    #[test]
+    fn parse_recovers_values_and_units() {
+        assert_eq!(Metric::parse("4.19 MB").value(), Some(4.19));
+        assert_eq!(Metric::parse("4.19 MB").unit_str(), Some("MB"));
+        assert_eq!(Metric::parse("42").value(), Some(42.0));
+        assert_eq!(Metric::parse("true"), Metric::Bool(true));
+        assert_eq!(Metric::parse("n/a").value(), None);
+        // phrases never parse as numbers
+        assert!(matches!(Metric::parse("1 train step (tiny)"), Metric::Text(_)));
+    }
+
+    #[test]
+    fn text_and_bool_carry_no_value() {
+        assert_eq!(Metric::text("x").value(), None);
+        assert_eq!(Metric::Bool(false).value(), None);
+        assert_eq!(Metric::f64(1.5, 1).value(), Some(1.5));
+    }
+}

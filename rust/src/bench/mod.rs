@@ -1,0 +1,189 @@
+//! Persistent benchmarking: typed experiment tables, a durable results
+//! store, trend reports and the CI regression gate.
+//!
+//! The redesign this module anchors (ISSUE 8): `experiments::Table` rows
+//! are typed `Metric` cells instead of pre-formatted strings, so the
+//! same cells that render the markdown/JSON tables also feed the store
+//! losslessly — `gcore bench run` ingests each run keyed by experiment
+//! label × metric × commit × timestamp, `gcore bench report` renders
+//! per-experiment trends (table / .dat / latex), and `gcore bench gate`
+//! fails CI when a directed metric regresses past the rolling median of
+//! the last K commits.
+
+pub mod gate;
+pub mod metric;
+pub mod report;
+pub mod store;
+pub mod table;
+
+pub use gate::{gate, GateReport, SeriesVerdict, Verdict};
+pub use metric::Metric;
+pub use report::{render as render_report, ReportFormat};
+pub use store::{median, BenchDb, Bless, Direction, Sample};
+pub use table::{Table, TABLE_SCHEMA_VERSION};
+
+use anyhow::Result;
+
+/// Ingest one experiment table into the store.
+///
+/// Row identity: the first `key_cols` cells of each row, rendered and
+/// joined under the experiment id — "e8c/4/4.19 MB/ring (tcp)".  Every
+/// remaining cell that carries a numeric value becomes one sample whose
+/// metric name is its column header; Text/Bool cells are display-only.
+/// Timing distributions attached to the table (`Table::timing`) are
+/// ingested with full percentile columns under their own labels.
+/// Returns the number of samples inserted.
+pub fn ingest_table(
+    db: &mut BenchDb,
+    id: &str,
+    table: &Table,
+    key_cols: usize,
+    commit: &str,
+    timestamp: u64,
+) -> Result<usize> {
+    let mut inserted = 0;
+    for row in &table.rows {
+        if row.is_empty() {
+            continue;
+        }
+        let key_cols = key_cols.clamp(1, row.len());
+        let label = std::iter::once(id.to_string())
+            .chain(row[..key_cols].iter().map(Metric::render))
+            .collect::<Vec<_>>()
+            .join("/");
+        for (col, cell) in row.iter().enumerate().skip(key_cols) {
+            let Some(value) = cell.value() else {
+                continue;
+            };
+            let metric = table
+                .header
+                .get(col)
+                .cloned()
+                .unwrap_or_else(|| format!("col{col}"));
+            let unit = cell.unit_str().unwrap_or("").to_string();
+            let direction = Direction::infer(&metric, &unit);
+            db.insert(Sample::scalar(&label, &metric, commit, timestamp, value, unit, direction))?;
+            inserted += 1;
+        }
+    }
+    for (label, r) in &table.timing {
+        db.insert(timing_sample(label, r, commit, timestamp))?;
+        inserted += 1;
+    }
+    Ok(inserted)
+}
+
+/// A `util::bench::BenchResult` as one store sample: the headline value
+/// is the mean wall-clock in ns, with the measured percentiles alongside.
+pub fn timing_sample(
+    label: &str,
+    r: &crate::util::bench::BenchResult,
+    commit: &str,
+    timestamp: u64,
+) -> Sample {
+    let mut s = Sample::scalar(
+        label,
+        "wall ns",
+        commit,
+        timestamp,
+        r.mean_ns(),
+        "ns",
+        Direction::LowerIsBetter,
+    );
+    s.p50 = Some(r.p50_ns());
+    s.p90 = Some(r.p90_ns());
+    s.p99 = Some(r.p99_ns());
+    s.mean = Some(r.mean_ns());
+    s.iters = Some(r.iters as u64);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("gcore_ingest_{}_{name}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn ingest_keys_rows_and_skips_text() {
+        let path = tmp("rows");
+        std::fs::remove_file(&path).ok();
+        let mut db = BenchDb::open(&path).unwrap();
+        let t = Table {
+            title: "T".into(),
+            header: vec!["world".into(), "payload".into(), "ms/round".into(), "ok".into()],
+            rows: vec![
+                vec![
+                    4usize.into(),
+                    Metric::f64_unit(4.19, 2, "MB"),
+                    Metric::f64(1.5, 3),
+                    true.into(),
+                ],
+                vec![
+                    8usize.into(),
+                    Metric::f64_unit(4.19, 2, "MB"),
+                    Metric::f64(2.5, 3),
+                    true.into(),
+                ],
+            ],
+            ..Table::default()
+        };
+        let n = ingest_table(&mut db, "e8c", &t, 2, "c1", 42).unwrap();
+        // one numeric non-key column per row; Bool column carries no value
+        assert_eq!(n, 2);
+        let keys = db.series_keys();
+        assert_eq!(
+            keys,
+            vec![
+                ("e8c/4/4.19 MB".to_string(), "ms/round".to_string()),
+                ("e8c/8/4.19 MB".to_string(), "ms/round".to_string()),
+            ]
+        );
+        let s = db.series("e8c/4/4.19 MB", "ms/round");
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].value, 1.5);
+        assert_eq!(s[0].direction, Direction::LowerIsBetter);
+        assert_eq!(s[0].commit, "c1");
+        assert_eq!(s[0].timestamp, 42);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn ingest_timing_carries_percentiles() {
+        let path = tmp("timing");
+        std::fs::remove_file(&path).ok();
+        let mut db = BenchDb::open(&path).unwrap();
+        let r = crate::util::bench::BenchResult {
+            name: "decode".into(),
+            iters: 10,
+            mean: Duration::from_micros(100),
+            p50: Duration::from_micros(90),
+            p90: Duration::from_micros(150),
+            p95: Duration::from_micros(160),
+            p99: Duration::from_micros(190),
+            min: Duration::from_micros(80),
+            max: Duration::from_micros(200),
+        };
+        let t = Table {
+            title: "T".into(),
+            header: vec!["case".into()],
+            rows: vec![vec!["a".into()]],
+            timing: vec![("einterp/tiny/decode".into(), r)],
+        };
+        let n = ingest_table(&mut db, "einterp", &t, 1, "c1", 1).unwrap();
+        assert_eq!(n, 1, "text-only row contributes nothing; timing does");
+        let s = db.series("einterp/tiny/decode", "wall ns");
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].value, 100_000.0);
+        assert_eq!(s[0].p50, Some(90_000.0));
+        assert_eq!(s[0].p90, Some(150_000.0));
+        assert_eq!(s[0].p99, Some(190_000.0));
+        assert_eq!(s[0].iters, Some(10));
+        assert_eq!(s[0].direction, Direction::LowerIsBetter);
+        std::fs::remove_file(&path).ok();
+    }
+}

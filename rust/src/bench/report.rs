@@ -1,0 +1,325 @@
+//! Trend rendering over the bench store (`gcore bench report`).
+//!
+//! Follows the bencher CLI idiom: one trend table per experiment label
+//! (cli_table), plus `.dat` (gnuplot columns) and LaTeX tabular exports
+//! for the paper-shaped figures.
+
+use super::gate::regression_pct;
+use super::store::{median, BenchDb, Direction, Sample};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReportFormat {
+    Table,
+    Dat,
+    Latex,
+}
+
+impl ReportFormat {
+    pub fn parse(s: &str) -> anyhow::Result<ReportFormat> {
+        Ok(match s {
+            "table" => ReportFormat::Table,
+            "dat" => ReportFormat::Dat,
+            "latex" => ReportFormat::Latex,
+            other => anyhow::bail!("unknown report format '{other}' (table|dat|latex)"),
+        })
+    }
+}
+
+/// How many trailing per-commit medians the table's history column shows.
+const HISTORY_LEN: usize = 5;
+
+/// Significant-but-compact number formatting for report cells: integers
+/// stay integers, everything else gets enough precision to be readable.
+fn fmt_val(v: f64) -> String {
+    if !v.is_finite() {
+        return format!("{v}");
+    }
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        return format!("{v:.0}");
+    }
+    if v.abs() >= 100.0 {
+        format!("{v:.1}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Per-commit medians (commit, median), oldest first, for one series.
+fn trend(series: &[&Sample]) -> Vec<(String, f64)> {
+    let mut order: Vec<String> = Vec::new();
+    for s in series {
+        if !order.contains(&s.commit) {
+            order.push(s.commit.clone());
+        }
+    }
+    order
+        .into_iter()
+        .filter_map(|c| {
+            let vals: Vec<f64> =
+                series.iter().filter(|s| s.commit == c).map(|s| s.value).collect();
+            median(&vals).map(|m| (c, m))
+        })
+        .collect()
+}
+
+fn labels_matching(db: &BenchDb, filter: Option<&str>) -> Vec<String> {
+    db.labels()
+        .into_iter()
+        .filter(|l| match filter {
+            None => true,
+            Some(f) => l == f || l.starts_with(&format!("{f}/")),
+        })
+        .collect()
+}
+
+/// Render the trend report for every label matching `filter` (None = all;
+/// "e8c" also matches "e8c/…").  `window` is the rolling-median width the
+/// Δ% column compares the latest commit against — keep it equal to the
+/// gate's `--window` so the report explains the gate's verdicts.
+pub fn render(db: &BenchDb, filter: Option<&str>, format: ReportFormat, window: usize) -> String {
+    let labels = labels_matching(db, filter);
+    match format {
+        ReportFormat::Table => render_table(db, &labels, window),
+        ReportFormat::Dat => render_dat(db, &labels),
+        ReportFormat::Latex => render_latex(db, &labels, window),
+    }
+}
+
+/// The Δ% cell: latest commit's median vs the rolling median of the up to
+/// `window` commits before it (the gate's baseline rule).
+fn delta_cell(tr: &[(String, f64)], direction: Direction, window: usize) -> String {
+    if tr.len() < 2 || direction == Direction::Informational {
+        return "-".to_string();
+    }
+    let (_, latest) = &tr[tr.len() - 1];
+    let prior: Vec<f64> = tr[..tr.len() - 1]
+        .iter()
+        .rev()
+        .take(window.max(1))
+        .map(|(_, m)| *m)
+        .collect();
+    let Some(base) = median(&prior) else {
+        return "-".to_string();
+    };
+    match regression_pct(direction, base, *latest) {
+        Some(r) => format!("{:+.1}%", -r), // display improvement as positive
+        None => "-".to_string(),
+    }
+}
+
+fn series_rows(db: &BenchDb, label: &str, window: usize) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    for (l, metric) in db.series_keys() {
+        if l != label {
+            continue;
+        }
+        let series = db.series(&l, &metric);
+        if series.is_empty() {
+            continue;
+        }
+        let direction = series.last().map(|s| s.direction).unwrap_or(Direction::Informational);
+        let unit = series.last().map(|s| s.unit.clone()).unwrap_or_default();
+        let tr = trend(&series);
+        let shown = &tr[tr.len().saturating_sub(HISTORY_LEN)..];
+        let history = shown
+            .iter()
+            .map(|(_, m)| fmt_val(*m))
+            .collect::<Vec<_>>()
+            .join(" → ");
+        let (latest_commit, latest) = match tr.last() {
+            Some(t) => t.clone(),
+            None => continue,
+        };
+        rows.push(vec![
+            metric,
+            direction.as_str().to_string(),
+            unit,
+            tr.len().to_string(),
+            history,
+            format!("{} @ {latest_commit}", fmt_val(latest)),
+            delta_cell(&tr, direction, window),
+        ]);
+    }
+    rows
+}
+
+fn render_table(db: &BenchDb, labels: &[String], window: usize) -> String {
+    if labels.is_empty() {
+        return "bench report: no matching series in the database\n".to_string();
+    }
+    let mut out = String::new();
+    for label in labels {
+        let rows = series_rows(db, label, window);
+        out.push_str(&crate::util::bench::format_rows(
+            label,
+            &[
+                "metric",
+                "dir",
+                "unit",
+                "commits",
+                &format!("last {HISTORY_LEN} medians"),
+                "latest",
+                "Δ%",
+            ],
+            &rows,
+        ));
+    }
+    out
+}
+
+/// Gnuplot-friendly: one block per series, blank-line separated —
+/// `plot 'bench.dat' index N using 1:4` plots series N's trend.
+fn render_dat(db: &BenchDb, labels: &[String]) -> String {
+    let mut out = String::new();
+    for label in labels {
+        for (l, metric) in db.series_keys() {
+            if &l != label {
+                continue;
+            }
+            let series = db.series(&l, &metric);
+            if series.is_empty() {
+                continue;
+            }
+            out.push_str(&format!("# {label} :: {metric}\n"));
+            out.push_str("# idx timestamp commit median\n");
+            for (i, (commit, m)) in trend(&series).iter().enumerate() {
+                let ts = series
+                    .iter()
+                    .filter(|s| &s.commit == commit)
+                    .map(|s| s.timestamp)
+                    .max()
+                    .unwrap_or(0);
+                out.push_str(&format!("{i} {ts} {commit} {m}\n"));
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+fn latex_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '%' => out.push_str("\\%"),
+            '&' => out.push_str("\\&"),
+            '#' => out.push_str("\\#"),
+            '_' => out.push_str("\\_"),
+            '$' => out.push_str("\\$"),
+            '{' => out.push_str("\\{"),
+            '}' => out.push_str("\\}"),
+            '→' => out.push_str("$\\rightarrow$"),
+            'Δ' => out.push_str("$\\Delta$"),
+            '×' => out.push_str("$\\times$"),
+            'µ' => out.push_str("$\\mu$"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn render_latex(db: &BenchDb, labels: &[String], window: usize) -> String {
+    let mut out = String::new();
+    for label in labels {
+        let rows = series_rows(db, label, window);
+        out.push_str(&format!(
+            "% trend table for {label}\n\\begin{{tabular}}{{lllrllr}}\n\\hline\n"
+        ));
+        out.push_str(&format!(
+            "metric & dir & unit & commits & last {HISTORY_LEN} medians & latest & $\\Delta$\\% \\\\\n\\hline\n"
+        ));
+        for row in rows {
+            let cells: Vec<String> = row.iter().map(|c| latex_escape(c)).collect();
+            out.push_str(&format!("{} \\\\\n", cells.join(" & ")));
+        }
+        out.push_str("\\hline\n\\end{tabular}\n\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("gcore_report_{}_{name}.jsonl", std::process::id()))
+    }
+
+    fn sample_db(name: &str) -> BenchDb {
+        let path = tmp(name);
+        std::fs::remove_file(&path).ok();
+        let mut db = BenchDb::open(&path).unwrap();
+        for (c, ts, v) in [("c1", 1u64, 10.0), ("c2", 2, 10.2), ("c3", 3, 9.8)] {
+            let s =
+                Sample::scalar("e8c/4/ring", "ms/round", c, ts, v, "ms", Direction::LowerIsBetter);
+            db.insert(s).unwrap();
+        }
+        db.insert(Sample::scalar(
+            "egen/16",
+            "tokens/s",
+            "c3",
+            3,
+            1234.0,
+            "",
+            Direction::HigherIsBetter,
+        ))
+        .unwrap();
+        std::fs::remove_file(&path).ok();
+        db
+    }
+
+    #[test]
+    fn table_report_renders_all_series() {
+        let db = sample_db("table");
+        let out = render(&db, None, ReportFormat::Table, 5);
+        assert!(out.contains("### e8c/4/ring"));
+        assert!(out.contains("### egen/16"));
+        assert!(out.contains("ms/round"));
+        assert!(out.contains("10 → 10.20 → 9.80"));
+        assert!(out.contains("9.80 @ c3"));
+        // improvement vs median{10, 10.2} = 10.1: shown as positive Δ
+        assert!(out.contains("+3.0%"), "got:\n{out}");
+    }
+
+    #[test]
+    fn label_filter_prefix_matches() {
+        let db = sample_db("filter");
+        let out = render(&db, Some("e8c"), ReportFormat::Table, 5);
+        assert!(out.contains("e8c/4/ring"));
+        assert!(!out.contains("egen/16"));
+        let none = render(&db, Some("nope"), ReportFormat::Table, 5);
+        assert!(none.contains("no matching series"));
+    }
+
+    #[test]
+    fn dat_report_has_one_block_per_series() {
+        let db = sample_db("dat");
+        let out = render(&db, None, ReportFormat::Dat, 5);
+        assert!(out.contains("# e8c/4/ring :: ms/round"));
+        assert!(out.contains("0 1 c1 10\n1 2 c2 10.2\n2 3 c3 9.8\n"));
+        assert!(out.contains("# egen/16 :: tokens/s"));
+    }
+
+    #[test]
+    fn latex_report_escapes_and_tabulates() {
+        let db = sample_db("latex");
+        let out = render(&db, Some("e8c"), ReportFormat::Latex, 5);
+        assert!(out.contains("\\begin{tabular}"));
+        assert!(out.contains("ms/round"));
+        assert!(out.contains("$\\rightarrow$"));
+        assert!(!out.contains('→'));
+        assert!(out.contains("\\end{tabular}"));
+    }
+
+    #[test]
+    fn fmt_val_shapes() {
+        assert_eq!(fmt_val(10.0), "10");
+        assert_eq!(fmt_val(10.2), "10.20");
+        assert_eq!(fmt_val(1234.5), "1234.5");
+        assert_eq!(fmt_val(0.1234), "0.1234");
+        assert_eq!(fmt_val(-3.0), "-3");
+    }
+}

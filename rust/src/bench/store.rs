@@ -1,0 +1,515 @@
+//! Persistent bench results store.
+//!
+//! Schema follows the sqlite-backed results store of `bsdinis/bencher`
+//! (one `results` row per experiment label × metric × commit × timestamp,
+//! with percentile columns), but the storage engine is a from-scratch
+//! crash-safe append-only log: the offline build closure has no `rusqlite`
+//! (same constraint that gave us `util::json` instead of serde and
+//! `util::cli` instead of clap).  The file is line-oriented JSON — a
+//! header line `{"benchdb": 1}` followed by one record per line — so
+//! inserts are O(1) appends, a torn final line from a crashed writer is
+//! detected and dropped, and the file diffs/caches cleanly in CI.
+
+use std::collections::BTreeSet;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// On-disk format version (the `{"benchdb": N}` header line).
+pub const DB_FORMAT_VERSION: i64 = 1;
+
+/// Which way a metric is supposed to move.  Only directed metrics are
+/// eligible for the regression gate; `Informational` series are stored
+/// and reported but never gated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    HigherIsBetter,
+    LowerIsBetter,
+    Informational,
+}
+
+impl Direction {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Direction::HigherIsBetter => "higher",
+            Direction::LowerIsBetter => "lower",
+            Direction::Informational => "info",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Direction> {
+        Ok(match s {
+            "higher" => Direction::HigherIsBetter,
+            "lower" => Direction::LowerIsBetter,
+            "info" => Direction::Informational,
+            other => bail!("unknown direction '{other}'"),
+        })
+    }
+
+    /// Infer polarity from a metric's column name and unit.  Rates and
+    /// utilization go up; latencies, residency and waste go down; counts
+    /// with no obvious polarity stay informational (never gated).
+    pub fn infer(metric: &str, unit: &str) -> Direction {
+        let m = metric.to_ascii_lowercase();
+        let u = unit.to_ascii_lowercase();
+        // rates & ratios first: "agg MB/s" must win over the "mb" rule below
+        if m.ends_with("/s")
+            || m.ends_with("/h")
+            || ["speedup", "util", "throughput", "hits", "per sec"].iter().any(|k| m.contains(k))
+        {
+            return Direction::HigherIsBetter;
+        }
+        if ["ms", "µs", " ns", " s", "wall", "waste", "bubble", "makespan", "swap", "bytes",
+            "mb", "kb", "gb", "peak", "blocked", "latency"]
+        .iter()
+        .any(|k| m.contains(k))
+        {
+            return Direction::LowerIsBetter;
+        }
+        if u.ends_with("/s") {
+            return Direction::HigherIsBetter;
+        }
+        if ["ns", "µs", "ms", "s", "b", "kib", "mib", "gib", "mb", "kb", "gb"].contains(&u.as_str())
+        {
+            return Direction::LowerIsBetter;
+        }
+        Direction::Informational
+    }
+}
+
+/// One measurement: the results-table row of the bencher schema.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    /// Series identity: "<experiment>/<case key>" (e.g. "e8c/4/4.19 MB/ring (tcp)").
+    pub label: String,
+    /// Metric name within the series — the table column ("ms/round").
+    pub metric: String,
+    /// Commit the run measured (short SHA or synthetic id in tests).
+    pub commit: String,
+    /// Unix seconds when the run recorded the sample.
+    pub timestamp: u64,
+    /// Headline scalar (the rendered cell's value).
+    pub value: f64,
+    /// Display unit ("" when the column header carries it).
+    pub unit: String,
+    pub direction: Direction,
+    /// Distribution columns, present when the producer measured a sample
+    /// loop (`util::bench::BenchResult`) rather than a single scalar.
+    pub p50: Option<f64>,
+    pub p90: Option<f64>,
+    pub p99: Option<f64>,
+    pub mean: Option<f64>,
+    pub iters: Option<u64>,
+}
+
+impl Sample {
+    /// A scalar sample with no distribution columns.
+    pub fn scalar(
+        label: impl Into<String>,
+        metric: impl Into<String>,
+        commit: impl Into<String>,
+        timestamp: u64,
+        value: f64,
+        unit: impl Into<String>,
+        direction: Direction,
+    ) -> Sample {
+        Sample {
+            label: label.into(),
+            metric: metric.into(),
+            commit: commit.into(),
+            timestamp,
+            value,
+            unit: unit.into(),
+            direction,
+            p50: None,
+            p90: None,
+            p99: None,
+            mean: None,
+            iters: None,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        Json::obj(vec![(
+            "sample",
+            Json::obj(vec![
+                ("label", Json::Str(self.label.clone())),
+                ("metric", Json::Str(self.metric.clone())),
+                ("commit", Json::Str(self.commit.clone())),
+                ("timestamp", Json::Num(self.timestamp as f64)),
+                ("value", Json::Num(self.value)),
+                ("unit", Json::Str(self.unit.clone())),
+                ("direction", Json::Str(self.direction.as_str().to_string())),
+                ("p50", opt(self.p50)),
+                ("p90", opt(self.p90)),
+                ("p99", opt(self.p99)),
+                ("mean", opt(self.mean)),
+                ("iters", self.iters.map(|i| Json::Num(i as f64)).unwrap_or(Json::Null)),
+            ]),
+        )])
+    }
+
+    fn from_json(j: &Json) -> Result<Sample> {
+        let str_of = |k: &str| -> Result<String> {
+            Ok(j.req(k)?.as_str().with_context(|| format!("'{k}' not a string"))?.to_string())
+        };
+        let opt = |k: &str| j.get(k).and_then(Json::as_f64);
+        Ok(Sample {
+            label: str_of("label")?,
+            metric: str_of("metric")?,
+            commit: str_of("commit")?,
+            timestamp: j.req("timestamp")?.as_f64().context("'timestamp' not a number")? as u64,
+            value: j.req("value")?.as_f64().context("'value' not a number")?,
+            unit: str_of("unit")?,
+            direction: Direction::parse(&str_of("direction")?)?,
+            p50: opt("p50"),
+            p90: opt("p90"),
+            p99: opt("p99"),
+            mean: opt("mean"),
+            iters: j.get("iters").and_then(Json::as_f64).map(|v| v as u64),
+        })
+    }
+}
+
+/// A baseline-reset marker: the gate only considers samples recorded at
+/// or after the newest bless whose scope matches their label.  Blessing
+/// is how an *intentional* regression (a slower-but-correct rewrite, a
+/// changed bench config) is accepted without deleting history.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bless {
+    /// "" blesses every series; otherwise matches labels equal to the
+    /// scope or nested under "<scope>/".
+    pub scope: String,
+    pub commit: String,
+    pub timestamp: u64,
+}
+
+impl Bless {
+    pub fn matches(&self, label: &str) -> bool {
+        self.scope.is_empty()
+            || label == self.scope
+            || label
+                .strip_prefix(&self.scope)
+                .map(|rest| rest.starts_with('/'))
+                .unwrap_or(false)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "bless",
+            Json::obj(vec![
+                ("scope", Json::Str(self.scope.clone())),
+                ("commit", Json::Str(self.commit.clone())),
+                ("timestamp", Json::Num(self.timestamp as f64)),
+            ]),
+        )])
+    }
+
+    fn from_json(j: &Json) -> Result<Bless> {
+        Ok(Bless {
+            scope: j.req("scope")?.as_str().context("'scope' not a string")?.to_string(),
+            commit: j.req("commit")?.as_str().context("'commit' not a string")?.to_string(),
+            timestamp: j.req("timestamp")?.as_f64().context("'timestamp' not a number")? as u64,
+        })
+    }
+}
+
+/// The persistent store: an in-memory view over the append-only log at
+/// `path`.  `insert`/`bless` append to the file before mutating memory,
+/// so a crash never loses acknowledged records.
+#[derive(Debug)]
+pub struct BenchDb {
+    path: PathBuf,
+    samples: Vec<Sample>,
+    blesses: Vec<Bless>,
+}
+
+impl BenchDb {
+    /// Open (creating if absent) the store at `path`.
+    pub fn open(path: impl AsRef<Path>) -> Result<BenchDb> {
+        let path = path.as_ref().to_path_buf();
+        if !path.exists() {
+            if let Some(parent) = path.parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)
+                        .with_context(|| format!("creating bench-db dir {parent:?}"))?;
+                }
+            }
+            std::fs::write(&path, format!("{}\n", header_line()))
+                .with_context(|| format!("creating bench db at {path:?}"))?;
+            return Ok(BenchDb { path, samples: Vec::new(), blesses: Vec::new() });
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading bench db at {path:?}"))?;
+        let mut lines = text.lines().enumerate();
+        let (_, first) = lines.next().with_context(|| format!("bench db {path:?} is empty"))?;
+        let header = Json::parse(first)
+            .map_err(|e| anyhow::anyhow!("bench db {path:?} header: {e}"))?;
+        let version = header.get("benchdb").and_then(Json::as_i64);
+        if version != Some(DB_FORMAT_VERSION) {
+            bail!(
+                "bench db {path:?} has format version {version:?}, this build reads {DB_FORMAT_VERSION}"
+            );
+        }
+        let mut samples = Vec::new();
+        let mut blesses = Vec::new();
+        let mut pending: Vec<(usize, &str)> =
+            lines.filter(|(_, l)| !l.trim().is_empty()).collect();
+        let last = pending.pop();
+        for (ln, line) in pending {
+            Self::parse_record(line, &mut samples, &mut blesses)
+                .with_context(|| format!("bench db {path:?} line {}", ln + 1))?;
+        }
+        if let Some((ln, line)) = last {
+            // a torn final line (writer crashed mid-append) is dropped, not fatal
+            if Self::parse_record(line, &mut samples, &mut blesses).is_err() {
+                eprintln!(
+                    "[gcore] bench db {path:?}: dropping unparseable final record at line {} \
+                     (torn append?)",
+                    ln + 1
+                );
+            }
+        }
+        Ok(BenchDb { path, samples, blesses })
+    }
+
+    fn parse_record(line: &str, samples: &mut Vec<Sample>, blesses: &mut Vec<Bless>) -> Result<()> {
+        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+        if let Some(s) = j.get("sample") {
+            samples.push(Sample::from_json(s)?);
+        } else if let Some(b) = j.get("bless") {
+            blesses.push(Bless::from_json(b)?);
+        } else {
+            bail!("record is neither a sample nor a bless");
+        }
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+
+    pub fn blesses(&self) -> &[Bless] {
+        &self.blesses
+    }
+
+    fn append_line(&self, record: &Json) -> Result<()> {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("opening bench db {:?} for append", self.path))?;
+        writeln!(f, "{record}").with_context(|| format!("appending to bench db {:?}", self.path))
+    }
+
+    /// Insert one sample (durable before acknowledged).
+    pub fn insert(&mut self, sample: Sample) -> Result<()> {
+        self.append_line(&sample.to_json())?;
+        self.samples.push(sample);
+        Ok(())
+    }
+
+    /// Record a baseline reset for `scope` ("" = everything).
+    pub fn bless(&mut self, scope: &str, commit: &str, timestamp: u64) -> Result<()> {
+        let b = Bless { scope: scope.to_string(), commit: commit.to_string(), timestamp };
+        self.append_line(&b.to_json())?;
+        self.blesses.push(b);
+        Ok(())
+    }
+
+    /// Distinct (label, metric) series, sorted.
+    pub fn series_keys(&self) -> Vec<(String, String)> {
+        let set: BTreeSet<(String, String)> = self
+            .samples
+            .iter()
+            .map(|s| (s.label.clone(), s.metric.clone()))
+            .collect();
+        set.into_iter().collect()
+    }
+
+    /// Newest bless timestamp applying to `label` (0 when never blessed).
+    pub fn bless_floor(&self, label: &str) -> u64 {
+        self.blesses
+            .iter()
+            .filter(|b| b.matches(label))
+            .map(|b| b.timestamp)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// One series, bless-filtered and time-ordered (stable on ties).
+    pub fn series(&self, label: &str, metric: &str) -> Vec<&Sample> {
+        let floor = self.bless_floor(label);
+        let mut out: Vec<&Sample> = self
+            .samples
+            .iter()
+            .filter(|s| s.label == label && s.metric == metric && s.timestamp >= floor)
+            .collect();
+        out.sort_by_key(|s| s.timestamp);
+        out
+    }
+
+    /// Labels with at least one sample, sorted.
+    pub fn labels(&self) -> Vec<String> {
+        let set: BTreeSet<String> = self.samples.iter().map(|s| s.label.clone()).collect();
+        set.into_iter().collect()
+    }
+}
+
+fn header_line() -> String {
+    Json::obj(vec![("benchdb", Json::Num(DB_FORMAT_VERSION as f64))]).to_string()
+}
+
+/// Median of the finite values in `xs` (None when empty after filtering).
+pub fn median(xs: &[f64]) -> Option<f64> {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
+        return None;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).expect("finite values compare"));
+    let n = v.len();
+    Some(if n % 2 == 1 { v[n / 2] } else { (v[n / 2 - 1] + v[n / 2]) / 2.0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("gcore_benchdb_{}_{name}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn direction_inference_matches_table_headers() {
+        use Direction::*;
+        for (metric, want) in [
+            ("tokens/s", HigherIsBetter),
+            ("agg MB/s", HigherIsBetter),
+            ("samples/h", HigherIsBetter),
+            ("speedup ×", HigherIsBetter),
+            ("util %", HigherIsBetter),
+            ("live-slot util %", HigherIsBetter),
+            ("shared hits", HigherIsBetter),
+            ("GB/s", HigherIsBetter),
+            ("ms/round", LowerIsBetter),
+            ("stage-4 ms/step", LowerIsBetter),
+            ("parse/compile ms", LowerIsBetter),
+            ("client MB/round", LowerIsBetter),
+            ("peak pages", LowerIsBetter),
+            ("naive mean waste %", LowerIsBetter),
+            ("bubble dev-s", LowerIsBetter),
+            ("wall s", LowerIsBetter),
+            ("comm s", LowerIsBetter),
+            ("blocking ms", LowerIsBetter),
+            ("waves", Informational),
+            ("tokens", Informational),
+            ("decode calls", Informational),
+            ("cancelled", Informational),
+            ("buckets", Informational),
+        ] {
+            assert_eq!(Direction::infer(metric, ""), want, "{metric}");
+        }
+        assert_eq!(Direction::infer("wall", "ns"), LowerIsBetter);
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let path = tmp("roundtrip");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut db = BenchDb::open(&path).unwrap();
+            let mut s = Sample::scalar("e/x", "ms", "c1", 10, 1.5, "ms", Direction::LowerIsBetter);
+            s.p50 = Some(1.4);
+            s.p90 = Some(1.9);
+            s.p99 = Some(2.5);
+            s.mean = Some(1.55);
+            s.iters = Some(100);
+            db.insert(s.clone()).unwrap();
+            db.bless("e", "c1", 11).unwrap();
+            db.insert(Sample::scalar("e/x", "ms", "c2", 12, 1.6, "ms", Direction::LowerIsBetter))
+                .unwrap();
+        }
+        let db = BenchDb::open(&path).unwrap();
+        assert_eq!(db.len(), 2);
+        assert_eq!(db.blesses().len(), 1);
+        assert_eq!(db.samples()[0].p99, Some(2.5));
+        assert_eq!(db.samples()[0].iters, Some(100));
+        // bless at t=11 hides the t=10 sample from the series view
+        let series = db.series("e/x", "ms");
+        assert_eq!(series.len(), 1);
+        assert_eq!(series[0].commit, "c2");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_final_line_is_dropped() {
+        let path = tmp("torn");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut db = BenchDb::open(&path).unwrap();
+            db.insert(Sample::scalar("a", "m", "c1", 1, 2.0, "", Direction::LowerIsBetter))
+                .unwrap();
+        }
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        write!(f, "{{\"sample\": {{\"label\": \"a\", \"met").unwrap();
+        drop(f);
+        let db = BenchDb::open(&path).unwrap();
+        assert_eq!(db.len(), 1, "torn append must not lose earlier records");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_middle_record_is_fatal() {
+        let path = tmp("corrupt");
+        std::fs::remove_file(&path).ok();
+        let body = "{\"benchdb\": 1}\nnot json\n\
+                    {\"bless\": {\"scope\": \"\", \"commit\": \"c\", \"timestamp\": 1}}\n";
+        std::fs::write(&path, body).unwrap();
+        assert!(BenchDb::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn version_mismatch_is_fatal() {
+        let path = tmp("version");
+        std::fs::write(&path, "{\"benchdb\": 99}\n").unwrap();
+        assert!(BenchDb::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bless_scope_matching() {
+        let b = Bless { scope: "e8c".into(), commit: "c".into(), timestamp: 1 };
+        assert!(b.matches("e8c"));
+        assert!(b.matches("e8c/4/ring"));
+        assert!(!b.matches("e8cx"));
+        assert!(!b.matches("egen/16"));
+        let all = Bless { scope: "".into(), commit: "c".into(), timestamp: 1 };
+        assert!(all.matches("anything"));
+    }
+
+    #[test]
+    fn median_math() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), Some(2.0));
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), Some(2.5));
+        assert_eq!(median(&[f64::NAN, 5.0]), Some(5.0));
+        assert_eq!(median(&[]), None);
+        assert_eq!(median(&[f64::NAN]), None);
+    }
+}

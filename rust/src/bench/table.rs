@@ -1,0 +1,136 @@
+//! The experiment table, redesigned over typed cells.
+//!
+//! Formerly `experiments::Table` with `rows: Vec<Vec<String>>`; now rows
+//! are `Vec<Vec<Metric>>` and markdown/JSON are renderers.  The JSON form
+//! stays schema-compatible with the legacy artifact shape (title/header/
+//! rows-of-strings) and adds `schema_version` plus, when an experiment
+//! measured wall-clock distributions, a `timing` block with the
+//! p50/p90/p99 percentiles `util::bench::BenchResult` now surfaces.
+
+use super::metric::Metric;
+use crate::util::bench::BenchResult;
+use crate::util::json::Json;
+
+/// JSON schema version of `Table::to_json`.  Version 1 (implicit — the
+/// field was absent) was title/header/rows-of-strings; version 2 renders
+/// identically, adds this field, and may carry a `timing` array.
+pub const TABLE_SCHEMA_VERSION: i64 = 2;
+
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<Metric>>,
+    /// Wall-clock distributions attached by experiments that time per-case
+    /// sample loops (label, stats).  Ingested into the bench DB with full
+    /// percentile columns; rendered tables only show derived cells.
+    pub timing: Vec<(String, BenchResult)>,
+}
+
+impl Table {
+    /// The legacy stringly rows — every cell rendered.  Rendering is
+    /// bit-identical to what the pre-typed tables carried.
+    pub fn rendered_rows(&self) -> Vec<Vec<String>> {
+        self.rows
+            .iter()
+            .map(|r| r.iter().map(Metric::render).collect())
+            .collect()
+    }
+
+    pub fn print(&self) {
+        let header: Vec<&str> = self.header.iter().map(|s| s.as_str()).collect();
+        crate::util::bench::print_rows(&self.title, &header, &self.rendered_rows());
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!(
+            "### {}\n\n| {} |\n|{}|\n",
+            self.title,
+            self.header.join(" | "),
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for r in self.rendered_rows() {
+            s.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        s
+    }
+
+    /// Machine-readable form (`gcore bench run --json`; uploaded as a CI
+    /// artifact by the bench-smoke job).  Rows render to the same strings
+    /// the legacy schema carried; `schema_version` marks the typed era.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("schema_version".to_string(), Json::Num(TABLE_SCHEMA_VERSION as f64));
+        m.insert("title".to_string(), Json::Str(self.title.clone()));
+        m.insert(
+            "header".to_string(),
+            Json::Arr(self.header.iter().map(|h| Json::Str(h.clone())).collect()),
+        );
+        m.insert(
+            "rows".to_string(),
+            Json::Arr(
+                self.rendered_rows()
+                    .into_iter()
+                    .map(|r| Json::Arr(r.into_iter().map(Json::Str).collect()))
+                    .collect(),
+            ),
+        );
+        if !self.timing.is_empty() {
+            m.insert(
+                "timing".to_string(),
+                Json::Arr(
+                    self.timing
+                        .iter()
+                        .map(|(label, r)| {
+                            Json::obj(vec![
+                                ("label", Json::Str(label.clone())),
+                                ("iters", Json::from(r.iters)),
+                                ("mean_ns", Json::from(r.mean_ns())),
+                                ("p50_ns", Json::from(r.p50_ns())),
+                                ("p90_ns", Json::from(r.p90_ns())),
+                                ("p99_ns", Json::from(r.p99_ns())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_table() -> Table {
+        Table {
+            title: "T".into(),
+            header: vec!["case".into(), "x".into(), "ok".into()],
+            rows: vec![
+                vec!["a".into(), Metric::f64(1.25, 2), true.into()],
+                vec!["b".into(), Metric::f64_unit(2.0, 1, "MB"), false.into()],
+            ],
+            ..Table::default()
+        }
+    }
+
+    #[test]
+    fn markdown_renders_typed_cells() {
+        let md = sample_table().to_markdown();
+        assert!(md.contains("| a | 1.25 | true |"));
+        assert!(md.contains("| b | 2.0 MB | false |"));
+    }
+
+    #[test]
+    fn json_is_legacy_shape_plus_version() {
+        let j = sample_table().to_json();
+        assert_eq!(j.get("schema_version").and_then(Json::as_i64), Some(2));
+        assert_eq!(j.get("title").and_then(Json::as_str), Some("T"));
+        let rows = j.get("rows").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        // rows are still arrays of strings, exactly like schema v1
+        assert_eq!(rows[0].as_arr().unwrap()[1].as_str(), Some("1.25"));
+        assert!(j.get("timing").is_none(), "no timing block when empty");
+    }
+}

@@ -27,52 +27,26 @@ use crate::runtime::tensor::Tensor;
 use crate::storage::dataloader::{Dataloader, LoaderState};
 use crate::util::rng::Rng;
 
-pub struct Table {
-    pub title: String,
-    pub header: Vec<String>,
-    pub rows: Vec<Vec<String>>,
-}
+// The table type moved to `bench::table` when rows became typed `Metric`
+// cells (ISSUE 8); re-exported here so `experiments::Table` stays the
+// spelling every builder and bench binary uses.
+pub use crate::bench::{Metric, Table};
 
-impl Table {
-    pub fn print(&self) {
-        let header: Vec<&str> = self.header.iter().map(|s| s.as_str()).collect();
-        crate::util::bench::print_rows(&self.title, &header, &self.rows);
-    }
-
-    pub fn to_markdown(&self) -> String {
-        let mut s = format!("### {}\n\n| {} |\n|{}|\n", self.title, self.header.join(" | "),
-            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
-        for r in &self.rows {
-            s.push_str(&format!("| {} |\n", r.join(" | ")));
-        }
-        s
-    }
-
-    /// Machine-readable form (`gcore bench --json`; uploaded as a CI
-    /// artifact by the bench-smoke job).
-    pub fn to_json(&self) -> crate::util::json::Json {
-        use crate::util::json::Json;
-        let mut m = std::collections::BTreeMap::new();
-        m.insert("title".to_string(), Json::Str(self.title.clone()));
-        m.insert(
-            "header".to_string(),
-            Json::Arr(self.header.iter().map(|h| Json::Str(h.clone())).collect()),
-        );
-        m.insert(
-            "rows".to_string(),
-            Json::Arr(
-                self.rows
-                    .iter()
-                    .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
-                    .collect(),
-            ),
-        );
-        Json::Obj(m)
+/// How many leading columns of an experiment's table identify the row
+/// (world size, payload, backend, …) rather than measure it.  The bench
+/// store keys each sample by "<id>/<key cells joined by '/'>", so these
+/// widths define series identity across commits.
+pub fn key_columns(id: &str) -> usize {
+    match id {
+        "e1" | "e2" => 2,
+        "e5" | "e8c" | "einterp" => 3,
+        "e9a" => 5,
+        _ => 1,
     }
 }
 
-fn f(x: f64, prec: usize) -> String {
-    format!("{x:.prec$}")
+fn f(x: f64, prec: usize) -> Metric {
+    Metric::f64(x, prec)
 }
 
 /// E1 — single vs parallel controllers under multimodal payload load
@@ -100,8 +74,8 @@ pub fn e1_controller_scaling(quick: bool) -> Table {
             .min_by(|a, b| a.wall_secs.partial_cmp(&b.wall_secs).unwrap())
             .unwrap();
         rows.push(vec![
-            format!("{n}"),
-            format!("{}", r.samples),
+            n.into(),
+            r.samples.into(),
             f(r.peak_bytes_per_controller as f64 / 1e9, 3),
             f(paper.bytes_per_sample() as f64 * (samples / n) as f64 / 1e9, 0),
             f(r.wall_secs, 3),
@@ -110,10 +84,13 @@ pub fn e1_controller_scaling(quick: bool) -> Table {
     }
     rows.push(vec![
         "1 (capped)".into(),
-        format!("{samples}"),
+        samples.into(),
         "OOM".into(),
         f(paper.bytes_per_sample() as f64 * samples as f64 / 1e9, 0),
-        single_capped.err().map(|e| e.to_string().contains("OOM").to_string()).unwrap_or("?".into()),
+        single_capped
+            .err()
+            .map(|e| Metric::Bool(e.to_string().contains("OOM")))
+            .unwrap_or_else(|| "?".into()),
         "-".into(),
     ]);
     Table {
@@ -127,6 +104,7 @@ pub fn e1_controller_scaling(quick: bool) -> Table {
             "GB/s".into(),
         ],
         rows,
+        ..Table::default()
     }
 }
 
@@ -174,6 +152,7 @@ pub fn e2_placement(quick: bool) -> Table {
             "samples/h".into(),
         ],
         rows,
+        ..Table::default()
     }
 }
 
@@ -212,6 +191,7 @@ pub fn e3_longtail(quick: bool) -> Table {
             "speedup ×".into(),
         ],
         rows,
+        ..Table::default()
     }
 }
 
@@ -236,7 +216,7 @@ pub fn e4_balance(quick: bool) -> Table {
                 f(bal.mean_waste * 100.0, 1),
                 f(naive.p95_waste * 100.0, 1),
                 f(bal.p95_waste * 100.0, 1),
-                (bal.mean_waste < 0.10).to_string(),
+                (bal.mean_waste < 0.10).into(),
             ]);
         }
     }
@@ -251,6 +231,7 @@ pub fn e4_balance(quick: bool) -> Table {
             "<10% (paper)".into(),
         ],
         rows,
+        ..Table::default()
     }
 }
 
@@ -271,14 +252,14 @@ pub fn e5_attention(_quick: bool) -> Table {
             allgather_naive_cost(&cfg, &topo),
         ] {
             rows.push(vec![
-                format!("{}k", seq / 1024),
-                format!("{cp}"),
+                format!("{}k", seq / 1024).into(),
+                cp.into(),
                 cost.scheme.into(),
                 f(cost.peak_mem_bytes as f64 / 1e9, 2),
                 f(cost.comm_time, 3),
                 f(cost.step_time, 3),
-                cost.feasible.to_string(),
-                cost.arbitrary_masks.to_string(),
+                cost.feasible.into(),
+                cost.arbitrary_masks.into(),
             ]);
         }
     }
@@ -295,6 +276,7 @@ pub fn e5_attention(_quick: bool) -> Table {
             "any-mask".into(),
         ],
         rows,
+        ..Table::default()
     }
 }
 
@@ -313,7 +295,7 @@ pub fn e7_dynamic_ratio(quick: bool) -> Table {
     let stride = (d.trace.len() / 8).max(1);
     for (step, frac, ug, ur) in d.trace.iter().step_by(stride) {
         rows.push(vec![
-            format!("{step}"),
+            (*step).into(),
             f(spec.gen_len.median_at(*step), 0),
             f(*frac * 100.0, 1),
             f(*ug * 100.0, 1),
@@ -323,9 +305,9 @@ pub fn e7_dynamic_ratio(quick: bool) -> Table {
     rows.push(vec![
         "— summary —".into(),
         "".into(),
-        format!("dyn makespan {}s", d.report.makespan_s.round()),
-        format!("static makespan {}s", stat.makespan_s.round()),
-        format!("speedup {:.2}×", stat.makespan_s / d.report.makespan_s),
+        format!("dyn makespan {}s", d.report.makespan_s.round()).into(),
+        format!("static makespan {}s", stat.makespan_s.round()).into(),
+        format!("speedup {:.2}×", stat.makespan_s / d.report.makespan_s).into(),
     ]);
     Table {
         title: "E7 — dynamic placement tracks response-length growth (§3.2)".into(),
@@ -337,6 +319,7 @@ pub fn e7_dynamic_ratio(quick: bool) -> Table {
             "reward util %".into(),
         ],
         rows,
+        ..Table::default()
     }
 }
 
@@ -375,10 +358,10 @@ pub fn e8_rpc(quick: bool) -> Table {
         let executed = count.load(Ordering::SeqCst);
         rows.push(vec![
             label.into(),
-            format!("{ok}/{calls}"),
-            format!("{executed}"),
-            (executed == calls as u64).to_string(),
-            format!("{}", client.stats().retries),
+            format!("{ok}/{calls}").into(),
+            executed.into(),
+            (executed == calls as u64).into(),
+            client.stats().retries.into(),
             f(calls as f64 / wall, 0),
         ]);
     }
@@ -393,6 +376,7 @@ pub fn e8_rpc(quick: bool) -> Table {
             "calls/s".into(),
         ],
         rows,
+        ..Table::default()
     }
 }
 
@@ -499,7 +483,7 @@ fn e8c_max_rank_mb(stats: &[std::sync::Arc<crate::rpc::transport::TransferStats>
 /// the current executable IS `gcore` — under `cargo test` (or without the
 /// fixture engine) this returns no rows, keeping the in-proc sweep's row
 /// count stable.
-fn e8c_train_dist_rows(quick: bool) -> Vec<Vec<String>> {
+fn e8c_train_dist_rows(quick: bool) -> Vec<Vec<Metric>> {
     let Ok(exe) = std::env::current_exe() else { return Vec::new() };
     if exe.file_stem().and_then(|s| s.to_str()) != Some("gcore") {
         return Vec::new();
@@ -550,7 +534,7 @@ fn e8c_train_dist_rows(quick: bool) -> Vec<Vec<String>> {
         rows.push(vec![
             "2".into(),
             "1 train step (tiny)".into(),
-            format!("train-dist {mode} (os-proc, whole job)"),
+            format!("train-dist {mode} (os-proc, whole job)").into(),
             f(wall * 1e3, 0),
             f(max_total as f64 / 1e6, 2),
             "-".into(),
@@ -608,13 +592,13 @@ pub fn e8_collective(quick: bool) -> Table {
                 ("ring (tcp)", ring_wall, &ring_set, Some(per_round(&ring_stats))),
             ] {
                 rows.push(vec![
-                    format!("{world}"),
-                    format!("{mb:.2} MB"),
+                    world.into(),
+                    Metric::f64_unit(mb, 2, "MB"),
                     backend.into(),
                     f(wall / rounds as f64 * 1e3, 2),
                     rank_mb.map(|m| f(m, 2)).unwrap_or_else(|| "-".into()),
                     f(mb * world as f64 * rounds as f64 / wall, 1),
-                    (set == &ref_set).to_string(),
+                    (set == &ref_set).into(),
                 ]);
             }
         }
@@ -635,6 +619,7 @@ pub fn e8_collective(quick: bool) -> Table {
             "identical".into(),
         ],
         rows,
+        ..Table::default()
     }
 }
 
@@ -888,15 +873,15 @@ pub fn e9a_allreduce(quick: bool) -> Table {
         let (mono_wall, mono_params, mono_mb) =
             e9a_run_mode(&cols, &stats, &shapes, steps, passes, E9aMode::Monolithic);
         rows.push(vec![
-            format!("{world}"),
-            format!("{:.2} MB", total_bytes as f64 / 1e6),
+            world.into(),
+            Metric::f64_unit(total_bytes as f64 / 1e6, 2, "MB"),
             "monolithic".into(),
             "-".into(),
-            "1".into(),
+            Metric::int(1),
             f(mono_wall / steps as f64 * 1e3, 2),
-            "1.00".into(),
+            f(1.0, 2),
             f(mono_mb / steps as f64, 2),
-            "true".into(),
+            true.into(),
         ]);
         for &bb in &bucket_sizes {
             let buckets =
@@ -904,15 +889,15 @@ pub fn e9a_allreduce(quick: bool) -> Table {
             let (wall, params, mb) =
                 e9a_run_mode(&cols, &stats, &shapes, steps, passes, E9aMode::Bucketed(bb));
             rows.push(vec![
-                format!("{world}"),
-                format!("{:.2} MB", total_bytes as f64 / 1e6),
+                world.into(),
+                Metric::f64_unit(total_bytes as f64 / 1e6, 2, "MB"),
                 "bucketed+overlap".into(),
-                format!("{}", bb / 1024),
-                format!("{buckets}"),
+                (bb / 1024).into(),
+                buckets.into(),
                 f(wall / steps as f64 * 1e3, 2),
                 f(mono_wall / wall, 2),
                 f(mb / steps as f64, 2),
-                (e9a_bits(&params) == e9a_bits(&mono_params)).to_string(),
+                (e9a_bits(&params) == e9a_bits(&mono_params)).into(),
             ]);
         }
         drop(hosts);
@@ -932,6 +917,7 @@ pub fn e9a_allreduce(quick: bool) -> Table {
             "identical".into(),
         ],
         rows,
+        ..Table::default()
     }
 }
 
@@ -973,7 +959,7 @@ pub fn e9_checkpoint(quick: bool) -> Table {
         "async save".into(),
         f(block_s * 1e3, 1),
         f(bg_s * 1e3, 1),
-        format!("training blocked {:.0}× less", (sync_s / block_s.max(1e-6)).min(9999.0)),
+        format!("training blocked {:.0}× less", (sync_s / block_s.max(1e-6)).min(9999.0)).into(),
     ]);
 
     // deadline abandon
@@ -1013,8 +999,14 @@ pub fn e9_checkpoint(quick: bool) -> Table {
     std::fs::remove_dir_all(&dir).ok();
     Table {
         title: "E9 — async / on-demand / elastic checkpointing (§4.3)".into(),
-        header: vec!["operation".into(), "blocking ms".into(), "background ms".into(), "outcome".into()],
+        header: vec![
+            "operation".into(),
+            "blocking ms".into(),
+            "background ms".into(),
+            "outcome".into(),
+        ],
         rows,
+        ..Table::default()
     }
 }
 
@@ -1026,12 +1018,13 @@ pub fn e9_checkpoint(quick: bool) -> Table {
 /// EXPERIMENTS.md §Einterp.
 pub fn einterp_engine(quick: bool) -> Table {
     use crate::runtime::Engine;
-    let reps = if quick { 3u32 } else { 10 };
+    let reps = if quick { 3usize } else { 10 };
     let mut rows = Vec::new();
+    let mut timing = Vec::new();
     for config in ["synthetic", "tiny"] {
         let Some(engine) = Engine::try_load(config) else {
             rows.push(vec![
-                config.to_string(),
+                config.into(),
                 "-".into(),
                 "missing".into(),
                 "-".into(),
@@ -1064,23 +1057,25 @@ pub fn einterp_engine(quick: bool) -> Table {
                 })
                 .collect();
             engine.run(&name, &inputs).unwrap(); // warm (parse + first call)
-            let t0 = std::time::Instant::now();
-            for _ in 0..reps {
+            // per-rep timings so the bench DB gets the full wall-clock
+            // distribution (p50/p90/p99), not just the mean the cell shows
+            let r = crate::util::bench::bench_n(&format!("einterp/{config}/{name}"), reps, || {
                 engine.run(&name, &inputs).unwrap();
-            }
-            let ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+            });
+            let ms = r.mean_ns() / 1e6;
             let compile_ms = engine
                 .stats()
                 .get(&name)
                 .map(|s| s.compile_time.as_secs_f64() * 1e3)
                 .unwrap_or(0.0);
             rows.push(vec![
-                config.to_string(),
-                name.clone(),
-                engine.backend_name().to_string(),
-                format!("{compile_ms:.1}"),
-                format!("{ms:.2}"),
+                config.into(),
+                name.clone().into(),
+                engine.backend_name().into(),
+                f(compile_ms, 1),
+                f(ms, 2),
             ]);
+            timing.push((r.name.clone(), r));
         }
     }
     Table {
@@ -1093,6 +1088,7 @@ pub fn einterp_engine(quick: bool) -> Table {
             "ms/call".into(),
         ],
         rows,
+        timing,
     }
 }
 
@@ -1137,10 +1133,11 @@ pub fn egen_generation(quick: bool) -> Table {
             title,
             header,
             rows: vec![{
-                let mut r = vec!["no fixture engine (set GCORE_ENGINE=interp)".to_string()];
+                let mut r = vec![Metric::text("no fixture engine (set GCORE_ENGINE=interp)")];
                 r.resize(n, "-".into());
                 r
             }],
+            ..Table::default()
         };
     };
 
@@ -1184,15 +1181,15 @@ pub fn egen_generation(quick: bool) -> Table {
         }
         let (wall, st) = best.unwrap();
         rows.push(vec![
-            label,
-            format!("{}", st.waves),
-            format!("{}", st.decode_calls),
-            format!("{}", st.generated_tokens),
+            label.into(),
+            st.waves.into(),
+            st.decode_calls.into(),
+            st.generated_tokens.into(),
             f(crate::util::bench::per_sec(st.generated_tokens, wall), 0),
             f(st.live_slot_steps as f64 / st.slot_steps.max(1) as f64 * 100.0, 1),
-            format!("{}", st.peak_pages),
-            format!("{}", st.shared_page_hits),
-            format!("{}", st.cancelled),
+            st.peak_pages.into(),
+            st.shared_page_hits.into(),
+            st.cancelled.into(),
         ]);
     };
 
@@ -1208,7 +1205,7 @@ pub fn egen_generation(quick: bool) -> Table {
         },
     );
 
-    Table { title, header, rows }
+    Table { title, header, rows, ..Table::default() }
 }
 
 /// Run one experiment by id ("e1".."e9a", "egen", "einterp"), print its
@@ -1237,21 +1234,38 @@ pub fn run(id: &str, quick: bool) -> Option<Table> {
 mod tests {
     use super::*;
 
+    /// Every rendered cell must survive `Metric::parse` → `render` — the
+    /// lossless-ingest guarantee the bench store depends on when reading
+    /// archived string cells back.
+    fn assert_cells_roundtrip(id: &str, t: &Table) {
+        for row in t.rendered_rows() {
+            for cell in row {
+                assert_eq!(
+                    Metric::parse(&cell).render(),
+                    cell,
+                    "{id}: parse/render broke on {cell:?}"
+                );
+            }
+        }
+    }
+
     #[test]
     fn all_tables_generate_quick() {
         for id in ["e2", "e3", "e4", "e5", "e7", "e9"] {
             let t = run(id, true).unwrap();
             assert!(!t.rows.is_empty(), "{id}");
             assert!(t.rows.iter().all(|r| r.len() == t.header.len()), "{id}");
+            assert_cells_roundtrip(id, &t);
         }
     }
 
     #[test]
     fn e8_exactly_once_holds() {
         let t = e8_rpc(true);
-        for row in &t.rows {
+        for row in t.rendered_rows() {
             assert_eq!(row[3], "true", "exactly-once violated in {row:?}");
         }
+        assert_cells_roundtrip("e8", &t);
     }
 
     #[test]
@@ -1259,9 +1273,10 @@ mod tests {
         let t = e8_collective(true);
         assert_eq!(t.rows.len(), 12); // 2 worlds × 2 sizes × 3 backends
         let identical = t.header.len() - 1;
-        for row in &t.rows {
+        for row in t.rendered_rows() {
             assert_eq!(row[identical], "true", "backend diverged from in-proc: {row:?}");
         }
+        assert_cells_roundtrip("e8c", &t);
     }
 
     #[test]
@@ -1270,8 +1285,9 @@ mod tests {
         // per-rank bytes grow ~linearly in world size through the rank-0
         // rendezvous, but stay ~flat around the ring
         let t = e8_collective(true);
+        let rendered = t.rendered_rows();
         let mb_of = |world: &str, backend: &str| -> f64 {
-            t.rows
+            rendered
                 .iter()
                 .filter(|r| r[0] == world && r[2] == backend)
                 .map(|r| r[4].parse::<f64>().expect("per-rank MB"))
@@ -1304,13 +1320,14 @@ mod tests {
         let t = e9a_allreduce(true);
         assert_eq!(t.rows.len(), 8); // 2 worlds × (1 monolithic + 3 bucket sizes)
         let identical = t.header.len() - 1;
-        for row in &t.rows {
+        let rendered = t.rendered_rows();
+        for row in &rendered {
             assert_eq!(row[identical], "true", "overlap diverged: {row:?}");
         }
+        assert_cells_roundtrip("e9a", &t);
         // the sweep must include a sub-tensor, a mid, and a whole-set bucket
         // bound (buckets strictly decreasing as the bound grows)
-        let buckets: Vec<usize> = t
-            .rows
+        let buckets: Vec<usize> = rendered
             .iter()
             .filter(|r| r[2] == "bucketed+overlap" && r[0] == "2")
             .map(|r| r[4].parse().unwrap())
@@ -1331,12 +1348,14 @@ mod tests {
         let t = egen_generation(true);
         assert!(t.rows.len() >= 4, "3 depths + 1 cancel row, got {:?}", t.rows);
         assert!(t.rows.iter().all(|r| r.len() == t.header.len()));
-        for row in &t.rows {
+        let rendered = t.rendered_rows();
+        for row in &rendered {
             let toks: f64 = row[4].parse().expect("tokens/s cell");
             assert!(toks > 0.0, "throughput must be positive: {row:?}");
         }
+        assert_cells_roundtrip("egen", &t);
         // the cancel row must actually preempt someone
-        let cancel_row = t.rows.last().unwrap();
+        let cancel_row = rendered.last().unwrap();
         assert!(
             cancel_row[8].parse::<usize>().unwrap() > 0,
             "cancel policy preempted nothing: {cancel_row:?}"
@@ -1346,7 +1365,7 @@ mod tests {
     #[test]
     fn e4_balanced_meets_paper_bound() {
         let t = e4_balance(true);
-        for row in &t.rows {
+        for row in t.rendered_rows() {
             if row[0].contains("× 32/rank") {
                 assert_eq!(row[5], "true", "balanced waste must be <10%: {row:?}");
             }
@@ -1359,5 +1378,59 @@ mod tests {
         let md = t.to_markdown();
         assert!(md.contains("### E5"));
         assert!(md.lines().count() > 5);
+    }
+
+    #[test]
+    fn json_keeps_legacy_shape_with_schema_version() {
+        use crate::util::json::Json;
+        let t = e5_attention(true);
+        let j = t.to_json();
+        assert_eq!(
+            j.get("schema_version").and_then(Json::as_i64),
+            Some(crate::bench::TABLE_SCHEMA_VERSION)
+        );
+        assert_eq!(j.get("title").and_then(Json::as_str), Some(t.title.as_str()));
+        // rows are still arrays of strings, cell-for-cell what the
+        // stringly-typed schema v1 emitted
+        let rows = j.get("rows").and_then(Json::as_arr).unwrap();
+        let rendered = t.rendered_rows();
+        assert_eq!(rows.len(), rendered.len());
+        for (jr, rr) in rows.iter().zip(&rendered) {
+            let cells: Vec<&str> =
+                jr.as_arr().unwrap().iter().map(|c| c.as_str().unwrap()).collect();
+            assert_eq!(&cells, &rr.iter().map(String::as_str).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn key_columns_stay_within_table_width() {
+        // key widths must leave at least one non-key column in every table
+        for (id, width) in
+            [("e2", 7), ("e3", 6), ("e4", 6), ("e5", 8), ("e7", 5), ("e9", 4)]
+        {
+            assert!(key_columns(id) < width, "{id}");
+        }
+        assert_eq!(key_columns("unknown"), 1);
+    }
+
+    #[test]
+    fn typed_cells_ingest_losslessly() {
+        // the redesign's point: the store sees the same numbers the cells
+        // carry, with no string re-parsing in between
+        let t = e4_balance(true);
+        let path = std::env::temp_dir()
+            .join(format!("gcore_exp_ingest_{}.jsonl", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        let mut db = crate::bench::BenchDb::open(&path).unwrap();
+        let n = crate::bench::ingest_table(&mut db, "e4", &t, key_columns("e4"), "c1", 1).unwrap();
+        // 4 numeric columns per row (the Bool gate column carries no value)
+        assert_eq!(n, t.rows.len() * 4);
+        for (row, rendered) in t.rows.iter().zip(t.rendered_rows()) {
+            let label = format!("e4/{}", rendered[0]);
+            let series = db.series(&label, "naive mean waste %");
+            assert_eq!(series.len(), 1, "{label}");
+            assert_eq!(Some(series[0].value), row[1].value());
+        }
+        std::fs::remove_file(&path).ok();
     }
 }

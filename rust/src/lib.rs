@@ -19,6 +19,7 @@
 
 pub mod attention;
 pub mod balance;
+pub mod bench;
 pub mod checkpoint;
 pub mod cluster;
 pub mod config;

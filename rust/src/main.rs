@@ -6,7 +6,11 @@
 //!   train-dist         multi-process training: hosts the rendezvous
 //!                      service and spawns one worker process per rank
 //!   train-worker       one rank of a train-dist job (internal)
-//!   bench <e1..e9|all> regenerate an experiment table (DESIGN.md §4)
+//!   bench run          regenerate experiment tables (DESIGN.md §4) and
+//!                      ingest every numeric cell into the bench database
+//!   bench report       per-series trend tables over recorded commits
+//!   bench gate         CI regression gate over the bench database
+//!   bench bless        accept an intentional regression (baseline reset)
 //!   simulate           run a placement simulation (colocate/coexist/dynamic)
 //!   inspect-artifacts  print the manifest of an artifact set
 //!   hlo-lint           statically verify an artifact set's HLO (shape/dtype
@@ -47,10 +51,30 @@ USAGE:
               collectives through the rank-0 rendezvous, --collective ring
               streams chunked frames rank-to-rank (bootstrap via the
               rendezvous, then O(payload)/rank; rank 0 prints the report)
-  gcore bench <e1|e2|e3|e4|e5|e7|e8|e8c|e9|e9a|egen|einterp|all> [--full]
-              [--json out.json]   (egen: continuous-batching rollout
-              scheduler tokens/s vs queue depth; einterp: HLO-interpreter
-              engine timings over the checked-in fixture artifact sets)
+  gcore bench run [<id>... | all] [--full] [--json out.json] [--db FILE]
+              [--commit SHA]
+              regenerate experiment tables (ids: e1 e2 e3 e4 e5 e7 e8 e8c
+              e9 e9a egen einterp), print them, optionally write the JSON
+              artifact, and ingest every numeric cell into the bench
+              database (default db: .gcore-bench-db.jsonl; commit resolves
+              from --commit, $GCORE_COMMIT, $GITHUB_SHA, then git)
+  gcore bench report [--label L] [--format table|dat|latex] [--window K]
+              [--db FILE] [--out FILE]
+              per-series trend tables (per-commit medians) over the bench
+              database; L matches an experiment label exactly or as a
+              'L/...' prefix
+  gcore bench gate [--threshold-pct N] [--window K] [--commit SHA]
+              [--db FILE]
+              exits nonzero when any directed metric regresses more than
+              N% (default 10) against the rolling median of the last K
+              (default 5) prior commits; series with no history bootstrap-
+              pass
+  gcore bench bless [--scope S] [--commit SHA] [--db FILE]
+              accept an intentional regression: gate baselines restart at
+              samples recorded after the bless (S empty = everything, else
+              an experiment label or label prefix)
+  gcore bench <id|all> [--full] [--json out.json]
+              deprecated alias for `gcore bench run` that skips DB ingest
   gcore simulate [--placement colocate|coexist|dynamic] [--devices N]
                  [--steps N] [--dapo]
   gcore inspect-artifacts [--artifacts tiny]
@@ -283,31 +307,252 @@ fn cmd_train_worker(args: &Args) -> Result<()> {
     }
 }
 
+/// Every experiment id `bench run all` expands to.
+const BENCH_IDS: &[&str] =
+    &["e1", "e2", "e3", "e4", "e5", "e7", "e8", "e8c", "e9", "e9a", "egen", "einterp"];
+
+/// Where bench samples accumulate unless `--db` says otherwise; CI caches
+/// this file per branch so the gate sees a rolling commit history.
+const DEFAULT_DB: &str = ".gcore-bench-db.jsonl";
+
 fn cmd_bench(args: &Args) -> Result<()> {
-    let quick = !args.has("full");
-    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
-    let ids: Vec<&str> = if which == "all" {
-        vec!["e1", "e2", "e3", "e4", "e5", "e7", "e8", "e8c", "e9", "e9a", "egen", "einterp"]
-    } else {
-        vec![which]
-    };
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("run") => bench_run(args),
+        Some("report") => bench_report(args),
+        Some("gate") => bench_gate(args),
+        Some("bless") => bench_bless(args),
+        which => bench_legacy(args, which.unwrap_or("all")),
+    }
+}
+
+fn expand_ids<'a>(ids: &[&'a str]) -> Result<Vec<&'a str>> {
+    let mut out: Vec<&str> = Vec::new();
+    for id in ids {
+        if *id == "all" {
+            out.extend_from_slice(BENCH_IDS);
+        } else if BENCH_IDS.contains(id) {
+            out.push(id);
+        } else {
+            bail!("unknown experiment '{id}' (e6/e10 are examples: genrm_vs_bt, rlhf_e2e)")
+        }
+    }
+    Ok(out)
+}
+
+fn run_experiments<'a>(
+    ids: &[&'a str],
+    quick: bool,
+) -> Result<Vec<(&'a str, experiments::Table)>> {
     let mut tables = Vec::new();
     for id in ids {
         match experiments::run(id, quick) {
-            Some(t) => tables.push(t),
-            None => {
-                bail!("unknown experiment '{id}' (e6/e10 are examples: genrm_vs_bt, rlhf_e2e)")
-            }
+            Some(t) => tables.push((*id, t)),
+            None => bail!("experiment '{id}' failed to run"),
         }
     }
-    // machine-readable results (the CI bench-smoke job uploads this file as
-    // a workflow artifact, so perf trajectory is captured on every PR)
+    Ok(tables)
+}
+
+/// Machine-readable results (the CI bench-smoke job uploads this file as
+/// a workflow artifact, so perf trajectory is captured on every PR).
+fn write_bench_json(args: &Args, tables: &[(&str, experiments::Table)]) -> Result<()> {
     if let Some(path) = args.get("json") {
-        let doc = Json::Arr(tables.iter().map(|t| t.to_json()).collect());
+        let doc = Json::Arr(tables.iter().map(|(_, t)| t.to_json()).collect());
         std::fs::write(path, doc.to_string_pretty())
             .with_context(|| format!("writing bench results to {path}"))?;
         println!("[gcore] wrote {} table(s) to {path}", tables.len());
     }
+    Ok(())
+}
+
+/// The commit every ingested sample and every gate verdict is keyed by:
+/// `--commit`, then $GCORE_COMMIT, then $GITHUB_SHA (both truncated to 12
+/// chars), then `git rev-parse`, then the "local" sentinel.
+fn resolve_commit(args: &Args) -> String {
+    fn short12(s: &str) -> String {
+        s.trim().chars().take(12).collect()
+    }
+    if let Some(c) = args.get("commit") {
+        return c.to_string();
+    }
+    for var in ["GCORE_COMMIT", "GITHUB_SHA"] {
+        if let Ok(c) = std::env::var(var) {
+            if !c.trim().is_empty() {
+                return short12(&c);
+            }
+        }
+    }
+    if let Ok(out) =
+        std::process::Command::new("git").args(["rev-parse", "--short=12", "HEAD"]).output()
+    {
+        if out.status.success() {
+            let c = String::from_utf8_lossy(&out.stdout).trim().to_string();
+            if !c.is_empty() {
+                return c;
+            }
+        }
+    }
+    "local".to_string()
+}
+
+fn now_unix() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// `bench run <id>... `: run the tables, print them, write the optional
+/// JSON artifact, and ingest every numeric cell into the bench database.
+fn bench_run(args: &Args) -> Result<()> {
+    let quick = !args.has("full");
+    let raw: Vec<&str> = if args.positional.len() > 2 {
+        args.positional[2..].iter().map(|s| s.as_str()).collect()
+    } else {
+        vec!["all"]
+    };
+    let ids = expand_ids(&raw)?;
+    let tables = run_experiments(&ids, quick)?;
+    write_bench_json(args, &tables)?;
+
+    let db_path = args.get_or("db", DEFAULT_DB);
+    let commit = resolve_commit(args);
+    let ts = now_unix();
+    let mut db = gcore::bench::BenchDb::open(db_path)?;
+    let mut ingested = 0;
+    for (id, t) in &tables {
+        ingested +=
+            gcore::bench::ingest_table(&mut db, id, t, experiments::key_columns(id), &commit, ts)?;
+    }
+    println!(
+        "[gcore] bench run: ingested {ingested} sample(s) at commit {commit} into {db_path}"
+    );
+    Ok(())
+}
+
+/// The pre-subcommand spelling `gcore bench <id|all>`: still runs, never
+/// ingests (so ad-hoc local runs don't pollute a cached CI database).
+fn bench_legacy(args: &Args, which: &str) -> Result<()> {
+    eprintln!(
+        "[gcore] warning: `gcore bench {which}` is deprecated; use `gcore bench run {which}` \
+         (and `bench report` / `bench gate` for trends and CI gating)"
+    );
+    let ids = expand_ids(&[which])?;
+    let tables = run_experiments(&ids, !args.has("full"))?;
+    write_bench_json(args, &tables)
+}
+
+fn bench_report(args: &Args) -> Result<()> {
+    let db = gcore::bench::BenchDb::open(args.get_or("db", DEFAULT_DB))?;
+    let format = gcore::bench::ReportFormat::parse(args.get_or("format", "table"))?;
+    let window: usize = args.parse_or("window", 5);
+    let rendered = gcore::bench::render_report(&db, args.get("label"), format, window);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &rendered)
+                .with_context(|| format!("writing bench report to {path}"))?;
+            println!("[gcore] wrote bench report to {path}");
+        }
+        None => print!("{rendered}"),
+    }
+    Ok(())
+}
+
+fn bench_gate(args: &Args) -> Result<()> {
+    let db_path = args.get_or("db", DEFAULT_DB);
+    let db = gcore::bench::BenchDb::open(db_path)?;
+    let threshold: f64 = args.parse_or("threshold-pct", 10.0);
+    let window: usize = args.parse_or("window", 5);
+    let commit = resolve_commit(args);
+    let report = gcore::bench::gate(&db, &commit, threshold, window);
+
+    let rows: Vec<Vec<String>> = report
+        .series
+        .iter()
+        .map(|s| {
+            vec![
+                s.label.clone(),
+                s.metric.clone(),
+                s.direction.as_str().to_string(),
+                s.baseline.map(|b| format!("{b:.4}")).unwrap_or_else(|| "-".to_string()),
+                format!("{:.4}", s.current),
+                s.regression_pct.map(|r| format!("{r:+.1}%")).unwrap_or_else(|| "-".to_string()),
+                s.baseline_commits.to_string(),
+                s.verdict.as_str().to_string(),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        gcore::util::bench::format_rows(
+            &format!(
+                "bench gate: commit {commit} vs rolling median of up to {window} prior \
+                 commit(s), threshold {threshold}%"
+            ),
+            &[
+                "series",
+                "metric",
+                "dir",
+                "baseline",
+                "current",
+                "regression",
+                "base commits",
+                "verdict",
+            ],
+            &rows,
+        )
+    );
+
+    if report.series.is_empty() {
+        println!(
+            "[gcore] bench gate: no samples recorded at commit {commit} in {db_path} — \
+             nothing to gate (bootstrap pass)"
+        );
+        return Ok(());
+    }
+    let failures = report.failures();
+    if !failures.is_empty() {
+        for s in &failures {
+            eprintln!(
+                "[gcore] bench gate FAIL: {} [{}] regressed {:.1}% (current {:.4} vs baseline \
+                 {:.4} over {} commit(s), threshold {threshold}%)",
+                s.label,
+                s.metric,
+                s.regression_pct.unwrap_or(f64::NAN),
+                s.current,
+                s.baseline.unwrap_or(f64::NAN),
+                s.baseline_commits,
+            );
+        }
+        bail!(
+            "bench gate: {} of {} series regressed more than {threshold}% at commit {commit} \
+             (use `gcore bench bless` to accept an intentional regression)",
+            failures.len(),
+            report.series.len()
+        );
+    }
+    println!(
+        "[gcore] bench gate: {} series pass at commit {commit} (threshold {threshold}%, \
+         window {window})",
+        report.series.len()
+    );
+    Ok(())
+}
+
+fn bench_bless(args: &Args) -> Result<()> {
+    let mut db = gcore::bench::BenchDb::open(args.get_or("db", DEFAULT_DB))?;
+    let scope = args.get_or("scope", "");
+    let commit = resolve_commit(args);
+    db.bless(scope, &commit, now_unix())?;
+    let what = if scope.is_empty() {
+        "all series".to_string()
+    } else {
+        format!("scope '{scope}'")
+    };
+    println!(
+        "[gcore] bench bless: {what} re-baselined at commit {commit} — the gate only \
+         considers samples recorded after this bless"
+    );
     Ok(())
 }
 

@@ -13,7 +13,9 @@ pub struct BenchResult {
     pub iters: usize,
     pub mean: Duration,
     pub p50: Duration,
+    pub p90: Duration,
     pub p95: Duration,
+    pub p99: Duration,
     pub min: Duration,
     pub max: Duration,
 }
@@ -23,12 +25,26 @@ impl BenchResult {
         self.mean.as_nanos() as f64
     }
 
+    pub fn p50_ns(&self) -> f64 {
+        self.p50.as_nanos() as f64
+    }
+
+    pub fn p90_ns(&self) -> f64 {
+        self.p90.as_nanos() as f64
+    }
+
+    pub fn p99_ns(&self) -> f64 {
+        self.p99.as_nanos() as f64
+    }
+
     pub fn throughput_per_sec(&self) -> f64 {
         1e9 / self.mean_ns().max(1.0)
     }
 }
 
-fn fmt_dur(d: Duration) -> String {
+/// Human-readable wall-clock duration ("500 ns", "1.50 ms") — also the
+/// renderer behind `bench::Metric::DurationNs`.
+pub fn fmt_dur(d: Duration) -> String {
     let ns = d.as_nanos() as f64;
     if ns < 1e3 {
         format!("{ns:.0} ns")
@@ -75,12 +91,15 @@ fn summarize(name: &str, mut samples: Vec<Duration>) -> BenchResult {
     samples.sort();
     let n = samples.len();
     let total: Duration = samples.iter().sum();
+    let pct = |q: f64| samples[(n as f64 * q) as usize % n];
     BenchResult {
         name: name.to_string(),
         iters: n,
         mean: total / n as u32,
         p50: samples[n / 2],
-        p95: samples[(n as f64 * 0.95) as usize % n],
+        p90: pct(0.90),
+        p95: pct(0.95),
+        p99: pct(0.99),
         min: samples[0],
         max: samples[n - 1],
     }
@@ -101,16 +120,18 @@ pub fn per_sec(n: usize, wall_secs: f64) -> f64 {
 /// Markdown table over results — the bench binaries' standard output format.
 pub fn print_table(title: &str, results: &[BenchResult]) {
     println!("\n### {title}\n");
-    println!("| case | iters | mean | p50 | p95 | min | max |");
-    println!("|---|---|---|---|---|---|---|");
+    println!("| case | iters | mean | p50 | p90 | p95 | p99 | min | max |");
+    println!("|---|---|---|---|---|---|---|---|---|");
     for r in results {
         println!(
-            "| {} | {} | {} | {} | {} | {} | {} |",
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} |",
             r.name,
             r.iters,
             fmt_dur(r.mean),
             fmt_dur(r.p50),
+            fmt_dur(r.p90),
             fmt_dur(r.p95),
+            fmt_dur(r.p99),
             fmt_dur(r.min),
             fmt_dur(r.max),
         );
@@ -159,8 +180,25 @@ mod tests {
             black_box(1 + 1);
         });
         assert!(r.iters >= 5);
-        assert!(r.min <= r.p50 && r.p50 <= r.max);
+        assert!(r.min <= r.p50 && r.p50 <= r.p90);
+        assert!(r.p90 <= r.p95 && r.p95 <= r.p99 && r.p99 <= r.max);
         assert!(r.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn percentiles_over_known_samples() {
+        // 1..=100 ms, one of each: the index rule picks p50=51ms (upper
+        // median), p90=91ms, p95=96ms, p99=100ms.
+        let samples: Vec<Duration> = (1..=100u64).map(Duration::from_millis).collect();
+        let r = summarize("known", samples);
+        assert_eq!(r.iters, 100);
+        assert_eq!(r.p50, Duration::from_millis(51));
+        assert_eq!(r.p90, Duration::from_millis(91));
+        assert_eq!(r.p95, Duration::from_millis(96));
+        assert_eq!(r.p99, Duration::from_millis(100));
+        assert_eq!(r.min, Duration::from_millis(1));
+        assert_eq!(r.max, Duration::from_millis(100));
+        assert_eq!(r.mean, Duration::from_micros(50_500));
     }
 
     #[test]

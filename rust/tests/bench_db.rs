@@ -1,0 +1,243 @@
+//! Integration tier for the persistent bench database: the store
+//! round-tripping real experiment tables through a real file, gate
+//! semantics as properties (injected regressions, window edges,
+//! bootstrap), Metric render/parse over live tables, and the `gcore
+//! bench` CLI surface — run-ingests, report rendering, gate exit codes
+//! and the deprecated legacy alias.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use gcore::bench::{gate, ingest_table, BenchDb, Direction, Metric, Sample, Verdict};
+use gcore::experiments;
+
+/// Temp DB file that cleans up after itself even on assertion failure.
+struct TempDb(PathBuf);
+
+impl TempDb {
+    fn new(name: &str) -> TempDb {
+        let p = std::env::temp_dir()
+            .join(format!("gcore_bench_it_{}_{name}.jsonl", std::process::id()));
+        std::fs::remove_file(&p).ok();
+        TempDb(p)
+    }
+
+    fn path(&self) -> &Path {
+        &self.0
+    }
+
+    fn path_str(&self) -> &str {
+        self.0.to_str().expect("temp path is utf-8")
+    }
+}
+
+impl Drop for TempDb {
+    fn drop(&mut self) {
+        std::fs::remove_file(&self.0).ok();
+    }
+}
+
+fn lower(label: &str, commit: &str, ts: u64, v: f64) -> Sample {
+    Sample::scalar(label, "ms", commit, ts, v, "ms", Direction::LowerIsBetter)
+}
+
+#[test]
+fn store_roundtrips_experiment_tables_through_a_real_file() {
+    let t = TempDb::new("roundtrip");
+    let inserted = {
+        let mut db = BenchDb::open(t.path()).unwrap();
+        let mut n = 0;
+        for id in ["e4", "e7"] {
+            let table = experiments::run(id, true).unwrap();
+            n += ingest_table(&mut db, id, &table, experiments::key_columns(id), "c1", 1)
+                .unwrap();
+        }
+        n
+    };
+    assert!(inserted > 0, "typed tables must produce gateable samples");
+
+    // a second open() reads everything back from disk
+    let db = BenchDb::open(t.path()).unwrap();
+    assert_eq!(db.len(), inserted);
+    for (label, metric) in db.series_keys() {
+        let series = db.series(&label, &metric);
+        assert!(!series.is_empty(), "{label} [{metric}]");
+        assert!(series.iter().all(|s| s.commit == "c1"));
+    }
+
+    // a fresh series has no history: the gate bootstrap-passes
+    let r = gate(&db, "c1", 10.0, 5);
+    assert!(r.passed());
+    assert!(r
+        .series
+        .iter()
+        .all(|s| matches!(s.verdict, Verdict::Bootstrap | Verdict::Skipped)));
+}
+
+#[test]
+fn injected_regression_fails_iff_above_threshold() {
+    for threshold in [5.0_f64, 10.0, 25.0] {
+        for inject in [0.0, threshold - 1.0, threshold + 1.0, threshold * 3.0] {
+            let t = TempDb::new(&format!("inj_{}_{}", threshold as i64, inject as i64));
+            let mut db = BenchDb::open(t.path()).unwrap();
+            for (i, c) in ["c1", "c2", "c3"].iter().enumerate() {
+                db.insert(lower("e/x", c, i as u64 + 1, 100.0)).unwrap();
+            }
+            db.insert(lower("e/x", "c9", 9, 100.0 * (1.0 + inject / 100.0))).unwrap();
+            let r = gate(&db, "c9", threshold, 5);
+            assert_eq!(
+                !r.passed(),
+                inject > threshold,
+                "inject +{inject}% at threshold {threshold}%"
+            );
+        }
+    }
+}
+
+#[test]
+fn gate_window_edges() {
+    let t = TempDb::new("window");
+    let mut db = BenchDb::open(t.path()).unwrap();
+    // ancient history was 100× faster; the last commit before HEAD is flat
+    db.insert(lower("e/x", "c1", 1, 1.0)).unwrap();
+    db.insert(lower("e/x", "c2", 2, 100.0)).unwrap();
+    db.insert(lower("e/x", "c3", 3, 101.0)).unwrap();
+    // window=1 sees only c2: +1% passes
+    assert!(gate(&db, "c3", 10.0, 1).passed());
+    // window=2 pulls in c1: baseline median{1, 100} = 50.5 → fail
+    assert!(!gate(&db, "c3", 10.0, 2).passed());
+    // window far larger than history degrades to "all prior commits"
+    assert!(!gate(&db, "c3", 10.0, 999).passed());
+    // window=0 is clamped to 1, not a panic or a vacuous pass
+    assert!(gate(&db, "c3", 10.0, 0).passed());
+}
+
+#[test]
+fn metric_cells_roundtrip_and_ingest_under_experiment_labels() {
+    for id in ["e2", "e3", "e4", "e5", "e7", "e9"] {
+        let table = experiments::run(id, true).unwrap();
+        for row in table.rendered_rows() {
+            for cell in row {
+                assert_eq!(
+                    Metric::parse(&cell).render(),
+                    cell,
+                    "{id}: parse/render broke on {cell:?}"
+                );
+            }
+        }
+        let t = TempDb::new(&format!("lossless_{id}"));
+        let mut db = BenchDb::open(t.path()).unwrap();
+        ingest_table(&mut db, id, &table, experiments::key_columns(id), "c1", 1).unwrap();
+        for s in db.samples() {
+            assert!(s.label.starts_with(&format!("{id}/")), "bad label {:?}", s.label);
+        }
+    }
+}
+
+fn gcore() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_gcore"))
+}
+
+#[test]
+fn cli_gate_exits_zero_on_unchanged_and_nonzero_on_regression() {
+    let t = TempDb::new("cli_gate");
+    {
+        let mut db = BenchDb::open(t.path()).unwrap();
+        for (c, ts) in [("c1", 1u64), ("c2", 2), ("c3", 3)] {
+            db.insert(lower("e/x", c, ts, 10.0)).unwrap();
+        }
+        db.insert(lower("e/x", "c4", 4, 10.1)).unwrap();
+    }
+    let ok = gcore()
+        .args(["bench", "gate", "--db", t.path_str(), "--commit", "c4",
+               "--threshold-pct", "20", "--window", "5"])
+        .output()
+        .unwrap();
+    assert!(
+        ok.status.success(),
+        "+1% must pass a 20% gate\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&ok.stdout),
+        String::from_utf8_lossy(&ok.stderr)
+    );
+
+    {
+        let mut db = BenchDb::open(t.path()).unwrap();
+        db.insert(lower("e/x", "c5", 5, 20.0)).unwrap();
+    }
+    let bad = gcore()
+        .args(["bench", "gate", "--db", t.path_str(), "--commit", "c5",
+               "--threshold-pct", "20", "--window", "5"])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success(), "+100% must fail a 20% gate");
+    let stderr = String::from_utf8_lossy(&bad.stderr);
+    assert!(stderr.contains("bench gate"), "stderr: {stderr}");
+    assert!(stderr.contains("e/x"), "failing series named on stderr: {stderr}");
+}
+
+#[test]
+fn cli_gate_bootstraps_on_an_empty_db() {
+    let t = TempDb::new("cli_boot");
+    let out = gcore()
+        .args(["bench", "gate", "--db", t.path_str(), "--commit", "c1"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("bootstrap"));
+}
+
+#[test]
+fn cli_run_ingests_then_reports_and_gates() {
+    let t = TempDb::new("cli_run");
+    let run = gcore()
+        .args(["bench", "run", "e4", "--db", t.path_str(), "--commit", "abc123def456"])
+        .output()
+        .unwrap();
+    assert!(
+        run.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&run.stderr)
+    );
+    assert!(String::from_utf8_lossy(&run.stdout).contains("ingested"));
+
+    let db = BenchDb::open(t.path()).unwrap();
+    assert!(!db.is_empty());
+    assert!(db.samples().iter().all(|s| s.commit == "abc123def456"));
+
+    let report = gcore().args(["bench", "report", "--db", t.path_str()]).output().unwrap();
+    assert!(report.status.success());
+    assert!(String::from_utf8_lossy(&report.stdout).contains("e4/"));
+
+    let dat = gcore()
+        .args(["bench", "report", "--db", t.path_str(), "--format", "dat"])
+        .output()
+        .unwrap();
+    assert!(dat.status.success());
+    assert!(String::from_utf8_lossy(&dat.stdout).contains("# e4/"));
+
+    let gated = gcore()
+        .args(["bench", "gate", "--db", t.path_str(), "--commit", "abc123def456"])
+        .output()
+        .unwrap();
+    assert!(gated.status.success(), "first ingest must bootstrap-pass the gate");
+}
+
+#[test]
+fn cli_legacy_alias_still_runs_but_warns() {
+    let out = gcore()
+        .args(["bench", "e4"])
+        .current_dir(std::env::temp_dir())
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("deprecated"),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let bad = gcore().args(["bench", "nope"]).output().unwrap();
+    assert!(!bad.status.success());
+    let bad_run = gcore().args(["bench", "run", "nope"]).output().unwrap();
+    assert!(!bad_run.status.success());
+}
