@@ -27,14 +27,65 @@ use crate::runtime::tensor::Tensor;
 use crate::storage::dataloader::LoaderState;
 use crate::util::codec::{Reader, Writer};
 use crate::util::json::Json;
+use crate::util::rng::RngState;
 
 /// Everything one controller shard persists.
+///
+/// Besides the named parameter sets, a shard carries the exact RNG stream
+/// positions of its controller (sampling RNG + task generator) and the
+/// optimizer step count.  Those are what make crash-restart resume
+/// **bit-identical** to an uninterrupted run: a resumed rank picks up the
+/// random streams mid-sentence instead of replaying them from the seed.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ShardState {
     pub rank: usize,
     /// named parameter sets: policy, ref, reward, adam m/v, ...
     pub params: Vec<(String, ParamSet)>,
     pub rng_seed: u64,
+    /// optimizer step count at the checkpoint boundary (`TrainState.step`)
+    pub opt_step: u64,
+    /// controller sampling RNG, exact stream position
+    pub controller_rng: Option<RngState>,
+    /// task-generator RNG, exact stream position
+    pub taskgen_rng: Option<RngState>,
+}
+
+fn encode_rng_state(w: &mut Writer, state: &Option<RngState>) {
+    match state {
+        None => w.u8(0),
+        Some(s) => {
+            w.u8(1);
+            for word in s.s {
+                w.u64(word);
+            }
+            match s.spare_normal_bits {
+                None => w.u8(0),
+                Some(bits) => {
+                    w.u8(1);
+                    w.u64(bits);
+                }
+            }
+        }
+    }
+}
+
+fn decode_rng_state(r: &mut Reader) -> Result<Option<RngState>> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => {
+            let mut s = [0u64; 4];
+            for word in &mut s {
+                *word = r.u64()?;
+            }
+            let spare_normal_bits = match r.u8()? {
+                0 => None,
+                1 => Some(r.u64()?),
+                t => bail!("bad spare-normal tag {t}"),
+            };
+            Ok(Some(RngState { s, spare_normal_bits }))
+        }
+        t => bail!("bad rng-state tag {t}"),
+    }
 }
 
 impl ShardState {
@@ -42,6 +93,9 @@ impl ShardState {
         let mut w = Writer::new();
         w.u64(self.rank as u64);
         w.u64(self.rng_seed);
+        w.u64(self.opt_step);
+        encode_rng_state(&mut w, &self.controller_rng);
+        encode_rng_state(&mut w, &self.taskgen_rng);
         w.u32(self.params.len() as u32);
         for (name, set) in &self.params {
             w.str(name);
@@ -54,6 +108,9 @@ impl ShardState {
         let mut r = Reader::new(bytes);
         let rank = r.u64()? as usize;
         let rng_seed = r.u64()?;
+        let opt_step = r.u64()?;
+        let controller_rng = decode_rng_state(&mut r)?;
+        let taskgen_rng = decode_rng_state(&mut r)?;
         let n = r.u32()? as usize;
         let mut params = Vec::with_capacity(n);
         for _ in 0..n {
@@ -62,7 +119,22 @@ impl ShardState {
             params.push((name, ParamSet::new(tensors)));
         }
         r.expect_end()?;
-        Ok(ShardState { rank, params, rng_seed })
+        Ok(ShardState {
+            rank,
+            params,
+            rng_seed,
+            opt_step,
+            controller_rng,
+            taskgen_rng,
+        })
+    }
+
+    /// Look up a named parameter set.
+    pub fn param_set(&self, name: &str) -> Option<&ParamSet> {
+        self.params
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, set)| set)
     }
 }
 
@@ -185,6 +257,28 @@ impl CheckpointManager {
         steps.pop()
     }
 
+    /// Latest step whose checkpoint is complete for a `world`-rank resume:
+    /// meta.json AND every `shard_<r>.bin` for r in 0..world must exist.
+    /// This is the recovery anchor — a crash mid-save leaves a step with
+    /// missing shards, which must never be chosen over an older complete
+    /// one.
+    pub fn latest_complete_step(&self, world: usize) -> Option<u64> {
+        let entries = std::fs::read_dir(&self.dir).ok()?;
+        let mut steps: Vec<u64> = entries
+            .flatten()
+            .filter_map(|e| {
+                let name = e.file_name().into_string().ok()?;
+                let step: u64 = name.strip_prefix("step_")?.parse().ok()?;
+                let dir = e.path();
+                let complete = dir.join("meta.json").exists()
+                    && (0..world).all(|r| dir.join(format!("shard_{r}.bin")).exists());
+                complete.then_some(step)
+            })
+            .collect();
+        steps.sort_unstable();
+        steps.pop()
+    }
+
     pub fn load_meta(&self, step: u64) -> Result<CheckpointMeta> {
         let path = self.step_dir(step).join("meta.json");
         let text = std::fs::read_to_string(&path)
@@ -275,6 +369,9 @@ mod tests {
                 ParamSet::new(vec![Tensor::f32(vec![n], (0..n).map(|i| i as f32).collect())]),
             )],
             rng_seed: 42,
+            opt_step: 7,
+            controller_rng: Some(crate::util::rng::Rng::new(9).state()),
+            taskgen_rng: None,
         }
     }
 
@@ -353,5 +450,47 @@ mod tests {
         for rank in 0..4 {
             assert_eq!(mgr.load_shard(2, rank).unwrap().rank, rank);
         }
+    }
+
+    #[test]
+    fn shard_rng_states_roundtrip_exactly() {
+        // the resume-critical payload: a drained RNG state must come back
+        // bit-identical, spare normal included
+        let mut rng = crate::util::rng::Rng::new(1234);
+        let _ = rng.normal(); // arm the spare-normal slot
+        let s = ShardState {
+            rank: 3,
+            params: vec![],
+            rng_seed: 77,
+            opt_step: 12,
+            controller_rng: Some(rng.state()),
+            taskgen_rng: Some(crate::util::rng::Rng::new(5).state()),
+        };
+        let back = ShardState::decode(&s.encode()).unwrap();
+        assert_eq!(back, s);
+        let mut a = crate::util::rng::Rng::from_state(back.controller_rng.unwrap());
+        let mut b = rng;
+        for _ in 0..16 {
+            assert_eq!(a.next_u64(), b.next_u64());
+            assert_eq!(a.normal().to_bits(), b.normal().to_bits());
+        }
+    }
+
+    #[test]
+    fn latest_complete_step_requires_all_shards() {
+        let mgr = CheckpointManager::new(tmpdir("complete"));
+        // step 4: full 2-rank checkpoint
+        mgr.save_shard(4, &meta(4), &shard(0, 8)).unwrap();
+        mgr.save_shard(4, &meta(4), &shard(1, 8)).unwrap();
+        // step 6: rank 0 landed, rank 1's shard is missing (crash mid-save)
+        mgr.save_shard(6, &meta(6), &shard(0, 8)).unwrap();
+        assert_eq!(mgr.latest_step(), Some(6), "meta-only view sees step 6");
+        assert_eq!(
+            mgr.latest_complete_step(2),
+            Some(4),
+            "recovery must fall back to the last step with every shard"
+        );
+        assert_eq!(mgr.latest_complete_step(1), Some(6), "world=1 needs only shard 0");
+        assert_eq!(mgr.latest_complete_step(3), None, "no 3-rank checkpoint exists");
     }
 }

@@ -41,6 +41,37 @@ impl CollectiveMode {
     }
 }
 
+/// What the `train-dist` supervisor does when a worker dies mid-run
+/// (heartbeat lease expiry or process exit): nothing (fail-fast, the
+/// pre-elastic behaviour), respawn the full world from the latest
+/// complete checkpoint, or renegotiate the world size down to a divisor
+/// and resume (the checkpoint module's elastic-resume rule).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoverPolicy {
+    None,
+    Restart,
+    Shrink,
+}
+
+impl RecoverPolicy {
+    pub fn parse(s: &str) -> Result<RecoverPolicy> {
+        Ok(match s {
+            "none" => RecoverPolicy::None,
+            "restart" => RecoverPolicy::Restart,
+            "shrink" => RecoverPolicy::Shrink,
+            other => bail!("unknown recover policy '{other}' (none|restart|shrink)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoverPolicy::None => "none",
+            RecoverPolicy::Restart => "restart",
+            RecoverPolicy::Shrink => "shrink",
+        }
+    }
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
     /// artifact set name (tiny / quickstart / e2e / path)
@@ -103,6 +134,31 @@ pub struct RunConfig {
     /// partition; bucket k reduces on the communicator thread while bucket
     /// k+1 serializes)
     pub allreduce_bucket_bytes: usize,
+    // -- fault tolerance ------------------------------------------------------
+    /// interval between worker heartbeats to the rendezvous host (0 =
+    /// heartbeats off; multi-process `train-dist` workers only — thread
+    /// launches share one failure domain already)
+    pub heartbeat_interval_ms: u64,
+    /// heartbeat lease TTL: a rank whose lease lapses this long is marked
+    /// dead and every surviving rank's next collective poll fails with
+    /// `PeerDead` (must comfortably exceed `heartbeat_interval_ms`)
+    pub lease_ttl_ms: u64,
+    /// TCP connect timeout for client transports (0 = OS default, blocking)
+    pub tcp_connect_timeout_ms: u64,
+    /// TCP per-frame read/write timeout for client transports (0 = none) —
+    /// distinguishes a wedged-but-alive peer from a dead one so the retry
+    /// loop actually runs
+    pub tcp_io_timeout_ms: u64,
+    /// `train-dist` supervisor action on worker death
+    pub recover: RecoverPolicy,
+    /// bound on recovery attempts before the supervisor gives up
+    pub max_restarts: usize,
+    /// resume training from this checkpoint step (workers skip warm-start
+    /// and replay `resume_step..steps`); set by the supervisor on respawn
+    pub resume_step: Option<u64>,
+    /// rendezvous generation: the supervisor bumps this on every recovery
+    /// respawn so frames from a pre-crash epoch are rejected as stale
+    pub coord_epoch: u64,
 }
 
 impl Default for RunConfig {
@@ -140,6 +196,14 @@ impl Default for RunConfig {
             rpc_tombstone_capacity: crate::rpc::server::DEFAULT_TOMBSTONE_CAPACITY,
             rpc_tombstone_ttl_ms: 0,
             allreduce_bucket_bytes: 4 * 1024 * 1024,
+            heartbeat_interval_ms: 100,
+            lease_ttl_ms: 1000,
+            tcp_connect_timeout_ms: 10_000,
+            tcp_io_timeout_ms: 30_000,
+            recover: RecoverPolicy::None,
+            max_restarts: 2,
+            resume_step: None,
+            coord_epoch: 0,
         }
     }
 }
@@ -231,6 +295,20 @@ impl RunConfig {
                 "allreduce_bucket_bytes" => {
                     cfg.allreduce_bucket_bytes = req_usize(val, key)?
                 }
+                "heartbeat_interval_ms" => {
+                    cfg.heartbeat_interval_ms = req_usize(val, key)? as u64
+                }
+                "lease_ttl_ms" => cfg.lease_ttl_ms = req_usize(val, key)? as u64,
+                "tcp_connect_timeout_ms" => {
+                    cfg.tcp_connect_timeout_ms = req_usize(val, key)? as u64
+                }
+                "tcp_io_timeout_ms" => {
+                    cfg.tcp_io_timeout_ms = req_usize(val, key)? as u64
+                }
+                "recover" => cfg.recover = RecoverPolicy::parse(&req_str(val, key)?)?,
+                "max_restarts" => cfg.max_restarts = req_usize(val, key)?,
+                "resume_step" => cfg.resume_step = Some(req_usize(val, key)? as u64),
+                "coord_epoch" => cfg.coord_epoch = req_usize(val, key)? as u64,
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -318,6 +396,22 @@ impl RunConfig {
             "allreduce_bucket_bytes",
             Json::Num(self.allreduce_bucket_bytes as f64),
         );
+        put(
+            "heartbeat_interval_ms",
+            Json::Num(self.heartbeat_interval_ms as f64),
+        );
+        put("lease_ttl_ms", Json::Num(self.lease_ttl_ms as f64));
+        put(
+            "tcp_connect_timeout_ms",
+            Json::Num(self.tcp_connect_timeout_ms as f64),
+        );
+        put("tcp_io_timeout_ms", Json::Num(self.tcp_io_timeout_ms as f64));
+        put("recover", Json::Str(self.recover.name().into()));
+        put("max_restarts", Json::Num(self.max_restarts as f64));
+        put("coord_epoch", Json::Num(self.coord_epoch as f64));
+        if let Some(s) = self.resume_step {
+            put("resume_step", Json::Num(s as f64));
+        }
         Json::Obj(m)
     }
 
@@ -345,6 +439,14 @@ impl RunConfig {
         }
         if self.rollout_cancel && !self.dynamic_sampling {
             bail!("rollout_cancel requires dynamic_sampling (cancelled groups are re-sampled)");
+        }
+        if self.heartbeat_interval_ms > 0 && self.lease_ttl_ms <= self.heartbeat_interval_ms {
+            bail!(
+                "lease_ttl_ms ({}) must exceed heartbeat_interval_ms ({}) or every \
+                 scheduling hiccup reads as rank death",
+                self.lease_ttl_ms,
+                self.heartbeat_interval_ms
+            );
         }
         Ok(())
     }
@@ -505,6 +607,35 @@ mod tests {
             ..RunConfig::default()
         };
         assert_eq!(RunConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+    }
+
+    #[test]
+    fn fault_tolerance_knobs_roundtrip_and_validate() {
+        let cfg = RunConfig {
+            heartbeat_interval_ms: 50,
+            lease_ttl_ms: 400,
+            tcp_connect_timeout_ms: 2_000,
+            tcp_io_timeout_ms: 5_000,
+            recover: RecoverPolicy::Restart,
+            max_restarts: 5,
+            resume_step: Some(7),
+            coord_epoch: 2,
+            ..RunConfig::default()
+        };
+        assert_eq!(RunConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+        // resume_step is omitted when unset, like checkpoint_dir
+        let cfg = RunConfig { resume_step: None, ..cfg };
+        assert_eq!(RunConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+        // a TTL at or below the heartbeat interval is a misconfiguration…
+        let bad = r#"{"heartbeat_interval_ms":200,"lease_ttl_ms":200}"#;
+        assert!(RunConfig::from_json(&Json::parse(bad).unwrap()).is_err());
+        // …but heartbeats off ignores the TTL entirely
+        let off = r#"{"heartbeat_interval_ms":0,"lease_ttl_ms":0}"#;
+        assert!(RunConfig::from_json(&Json::parse(off).unwrap()).is_ok());
+        assert!(RunConfig::from_json(&Json::parse(r#"{"recover":"maybe"}"#).unwrap()).is_err());
+        for p in ["none", "restart", "shrink"] {
+            assert_eq!(RecoverPolicy::parse(p).unwrap().name(), p);
+        }
     }
 
     #[test]

@@ -42,7 +42,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::collective::{CollectiveBackend, ReduceOp};
-use crate::coordinator::rpc_collective::CollectiveStatus;
+use crate::coordinator::rpc_collective::{CollectiveStatus, LivenessProbe};
 use crate::rpc::client::{RetryPolicy, RpcClient};
 use crate::rpc::server::{RpcServer, Service};
 use crate::rpc::transport::Transport;
@@ -138,23 +138,32 @@ impl RingInbox {
     /// Block until the chunk at `key` arrives (or `timeout` passes) and
     /// remove it from the inbox.
     fn take(&self, key: (u64, u8, u32, u32), timeout: Duration) -> Result<StoredChunk> {
+        match self.try_take(key, timeout) {
+            Some(chunk) => Ok(chunk),
+            None => bail!(
+                "{} ring chunk (round {} phase {} origin {} chunk {}) timed out — \
+                 a peer is likely dead; failing fast (§4.2)",
+                CollectiveStatus::RoundTimeout.marker(),
+                key.0,
+                key.1,
+                key.2,
+                key.3
+            ),
+        }
+    }
+
+    /// `take` without the typed error: `None` on timeout.  Lets the backend
+    /// wait in bounded slices, probing coordinator liveness between them.
+    fn try_take(&self, key: (u64, u8, u32, u32), timeout: Duration) -> Option<StoredChunk> {
         let deadline = Instant::now() + timeout;
         let mut state = self.state.lock().unwrap();
         loop {
             if let Some(chunk) = state.slots.remove(&key) {
-                return Ok(chunk);
+                return Some(chunk);
             }
             let now = Instant::now();
             if now >= deadline {
-                bail!(
-                    "{} ring chunk (round {} phase {} origin {} chunk {}) timed out — \
-                     a peer is likely dead; failing fast (§4.2)",
-                    CollectiveStatus::RoundTimeout.marker(),
-                    key.0,
-                    key.1,
-                    key.2,
-                    key.3
-                );
+                return None;
             }
             let (guard, _) = self.cv.wait_timeout(state, deadline - now).unwrap();
             state = guard;
@@ -210,6 +219,13 @@ pub struct RingCollective<T: Transport> {
     pub poll_interval: Duration,
     /// give up waiting on a chunk after this long (fail-fast, §4.2)
     pub round_timeout: Duration,
+    /// optional coordinator liveness probe: the ring's data path never
+    /// touches the rendezvous host, so without this a dead peer only
+    /// surfaces after `round_timeout`; with it, chunk waits are sliced and
+    /// the lease verdict checked between slices (millisecond abort fanout)
+    probe: Option<Arc<LivenessProbe>>,
+    /// slice length for probed chunk waits
+    probe_slice: Duration,
 }
 
 impl<T: Transport> RingCollective<T> {
@@ -221,10 +237,8 @@ impl<T: Transport> RingCollective<T> {
     ) -> RingCollective<T> {
         assert!(world >= 1, "world must be >= 1");
         assert!(rank < world, "rank {rank} out of range for world {world}");
-        let succ = RpcClient::new(successor).with_retry(RetryPolicy {
-            max_attempts: 64,
-            backoff: Duration::from_micros(50),
-        });
+        let succ = RpcClient::new(successor)
+            .with_retry(RetryPolicy::exponential(64, Duration::from_micros(50)));
         RingCollective {
             rank,
             world,
@@ -235,7 +249,15 @@ impl<T: Transport> RingCollective<T> {
             window: DEFAULT_WINDOW,
             poll_interval: Duration::from_micros(200),
             round_timeout: Duration::from_secs(300),
+            probe: None,
+            probe_slice: Duration::from_millis(25),
         }
+    }
+
+    /// Attach a coordinator liveness probe (multi-process ring workers).
+    pub fn with_probe(mut self, probe: Arc<LivenessProbe>) -> Self {
+        self.probe = Some(probe);
+        self
     }
 
     pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
@@ -294,6 +316,9 @@ impl<T: Transport> RingCollective<T> {
         }
         let t0 = Instant::now();
         while backlog > self.window {
+            if let Some(probe) = &self.probe {
+                probe.check()?;
+            }
             if t0.elapsed() > self.round_timeout {
                 bail!(
                     "{} ring successor backlog stuck at {backlog} (> window {}) for \
@@ -354,8 +379,28 @@ impl<T: Transport> RingCollective<T> {
         tag: &str,
         deadline: Instant,
     ) -> Result<StoredChunk> {
-        let remaining = deadline.saturating_duration_since(Instant::now());
-        let stored = self.inbox.take((round, phase, origin, chunk), remaining)?;
+        let key = (round, phase, origin, chunk);
+        let stored = match &self.probe {
+            // no probe: one blocking wait for the whole budget
+            None => {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                self.inbox.take(key, remaining)?
+            }
+            // probed: wait in slices, checking the coordinator's lease
+            // verdict between them — a latched peer death aborts the wait
+            // in ~one slice instead of the full round timeout
+            Some(probe) => loop {
+                probe.check()?;
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    // produce the canonical typed timeout error
+                    break self.inbox.take(key, Duration::ZERO)?;
+                }
+                if let Some(found) = self.inbox.try_take(key, remaining.min(self.probe_slice)) {
+                    break found;
+                }
+            },
+        };
         if stored.tag != tag {
             bail!(
                 "{} collective lockstep violation at ring round {round}: rank {} is in \

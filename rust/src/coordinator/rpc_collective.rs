@@ -25,7 +25,7 @@
 //! operation.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -35,10 +35,14 @@ use crate::coordinator::collective::CollectiveBackend;
 use crate::rpc::client::{RetryPolicy, RpcClient};
 use crate::rpc::server::{RpcServer, Service};
 use crate::rpc::transport::Transport;
-use crate::rpc::wire::{GatherFrame, GatherReply, PollFrame};
+use crate::rpc::wire::{GatherFrame, GatherReply, HeartbeatFrame, LivenessReply, PollFrame};
 
 pub const METHOD_OFFER: &str = "collective.offer";
 pub const METHOD_POLL: &str = "collective.poll";
+/// Renew a rank's liveness lease (see [`RendezvousHost::with_lease_ttl`]).
+pub const METHOD_HEARTBEAT: &str = "collective.heartbeat";
+/// Read the group's liveness verdict without renewing any lease.
+pub const METHOD_ALIVE: &str = "collective.alive";
 
 /// Typed collective status, replacing substring matching on error text.
 ///
@@ -58,14 +62,24 @@ pub enum CollectiveStatus {
     RoundTimeout,
     /// Malformed protocol use (poll for a drained round, rank out of range).
     ProtocolViolation,
+    /// A peer's heartbeat lease expired at the rendezvous host — abort
+    /// fanout in milliseconds instead of waiting out the round timeout.
+    /// The rank travels as `rank=N` text right after the marker (exit
+    /// codes cannot carry it, so `from_exit_code` recovers rank 0).
+    PeerDead { rank: u32 },
+    /// A frame from a pre-recovery rendezvous generation was rejected
+    /// (stale traffic from before a crash-restart, like a tombstoned RPC).
+    StaleEpoch,
 }
 
 impl CollectiveStatus {
-    pub const ALL: [CollectiveStatus; 4] = [
+    pub const ALL: [CollectiveStatus; 6] = [
         CollectiveStatus::Poisoned,
         CollectiveStatus::WorldMismatch,
         CollectiveStatus::RoundTimeout,
         CollectiveStatus::ProtocolViolation,
+        CollectiveStatus::PeerDead { rank: 0 },
+        CollectiveStatus::StaleEpoch,
     ];
 
     /// The stable wire marker embedded in error text.
@@ -75,6 +89,8 @@ impl CollectiveStatus {
             CollectiveStatus::WorldMismatch => "[COLLECTIVE:world-mismatch]",
             CollectiveStatus::RoundTimeout => "[COLLECTIVE:timeout]",
             CollectiveStatus::ProtocolViolation => "[COLLECTIVE:protocol]",
+            CollectiveStatus::PeerDead { .. } => "[COLLECTIVE:peer-dead]",
+            CollectiveStatus::StaleEpoch => "[COLLECTIVE:stale-epoch]",
         }
     }
 
@@ -84,6 +100,8 @@ impl CollectiveStatus {
             CollectiveStatus::WorldMismatch => "world-size mismatch with the rendezvous host",
             CollectiveStatus::RoundTimeout => "collective round timed out (dead peer)",
             CollectiveStatus::ProtocolViolation => "collective protocol violation",
+            CollectiveStatus::PeerDead { .. } => "a peer's heartbeat lease expired (rank dead)",
+            CollectiveStatus::StaleEpoch => "stale rendezvous epoch (pre-recovery frame)",
         }
     }
 
@@ -95,6 +113,8 @@ impl CollectiveStatus {
             CollectiveStatus::WorldMismatch => 66,
             CollectiveStatus::RoundTimeout => 67,
             CollectiveStatus::ProtocolViolation => 68,
+            CollectiveStatus::PeerDead { .. } => 69,
+            CollectiveStatus::StaleEpoch => 70,
         }
     }
 
@@ -103,8 +123,27 @@ impl CollectiveStatus {
     }
 
     /// Recover the typed status from error text that crossed the RPC wire.
+    /// `PeerDead` additionally parses the casualty rank out of the
+    /// `rank=N` text the marker is always followed by.
     pub fn classify(text: &str) -> Option<CollectiveStatus> {
-        Self::ALL.into_iter().find(|s| text.contains(s.marker()))
+        let status = Self::ALL.into_iter().find(|s| text.contains(s.marker()))?;
+        Some(match status {
+            CollectiveStatus::PeerDead { .. } => {
+                let after = &text[text.find(status.marker()).unwrap() + status.marker().len()..];
+                let rank = after
+                    .find("rank=")
+                    .map(|ix| {
+                        after[ix + "rank=".len()..]
+                            .chars()
+                            .take_while(char::is_ascii_digit)
+                            .collect::<String>()
+                    })
+                    .and_then(|d| d.parse().ok())
+                    .unwrap_or(0);
+                CollectiveStatus::PeerDead { rank }
+            }
+            other => other,
+        })
     }
 
     /// `classify` over a full anyhow error chain.
@@ -139,17 +178,72 @@ impl Round {
     }
 }
 
+/// Per-rank heartbeat leases.  A lease starts at a rank's FIRST heartbeat
+/// (slow process startup can never read as death) and lapses when no
+/// renewal arrives within the TTL; the first lapse latches that rank as
+/// dead for the lifetime of the host, so every later offer/poll/probe
+/// from any rank fails immediately with the `PeerDead` marker.
+struct LeaseTable {
+    ttl: Duration,
+    last_beat: HashMap<u32, Instant>,
+    dead: Option<u32>,
+}
+
+impl LeaseTable {
+    /// Latched liveness check: returns the first expired rank, forever.
+    fn check(&mut self) -> Option<u32> {
+        if self.dead.is_some() {
+            return self.dead;
+        }
+        let now = Instant::now();
+        self.dead = self
+            .last_beat
+            .iter()
+            .filter(|(_, &t)| now.duration_since(t) > self.ttl)
+            .map(|(&r, _)| r)
+            .min();
+        self.dead
+    }
+}
+
 /// The rank-0 rendezvous service: accumulates per-round contributions and
-/// hands the gathered payloads back to every rank.
+/// hands the gathered payloads back to every rank.  Optionally (multi-
+/// process launches) it also runs heartbeat leases and stamps every frame
+/// with a recovery generation (`epoch`).
 pub struct RendezvousHost {
     world: usize,
+    /// recovery generation this host serves; frames from other epochs are
+    /// rejected with `StaleEpoch`
+    epoch: u64,
     rounds: Mutex<HashMap<u64, Round>>,
+    leases: Option<Mutex<LeaseTable>>,
 }
 
 impl RendezvousHost {
     pub fn new(world: usize) -> RendezvousHost {
         assert!(world >= 1, "world must be >= 1");
-        RendezvousHost { world, rounds: Mutex::new(HashMap::new()) }
+        RendezvousHost {
+            world,
+            epoch: 0,
+            rounds: Mutex::new(HashMap::new()),
+            leases: None,
+        }
+    }
+
+    /// Serve a specific recovery generation (supervisor respawns bump this).
+    pub fn with_epoch(mut self, epoch: u64) -> Self {
+        self.epoch = epoch;
+        self
+    }
+
+    /// Enable heartbeat leases with the given TTL.
+    pub fn with_lease_ttl(mut self, ttl: Duration) -> Self {
+        self.leases = Some(Mutex::new(LeaseTable {
+            ttl,
+            last_beat: HashMap::new(),
+            dead: None,
+        }));
+        self
     }
 
     /// Convenience: the host already wrapped in an `RpcServer`, ready for
@@ -162,12 +256,64 @@ impl RendezvousHost {
         self.world
     }
 
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
     /// Rounds currently buffered (0 once all ranks drained — test hook).
     pub fn open_rounds(&self) -> usize {
         self.rounds.lock().unwrap().len()
     }
 
+    /// The latched liveness verdict (None with leases disabled).
+    pub fn dead_rank(&self) -> Option<u32> {
+        self.leases.as_ref().and_then(|l| l.lock().unwrap().check())
+    }
+
+    /// Fail fast when any lease has lapsed — the gate in front of every
+    /// offer/poll, which is what turns one rank's death into millisecond
+    /// abort fanout across all survivors (they poll every ~200 µs).
+    fn check_liveness(&self) -> Result<()> {
+        if let Some(rank) = self.dead_rank() {
+            bail!(
+                "{} rank={rank} heartbeat lease expired — peer declared dead; \
+                 aborting the collective (fail-fast, §4.2)",
+                CollectiveStatus::PeerDead { rank }.marker()
+            );
+        }
+        Ok(())
+    }
+
+    fn check_epoch(&self, frame_epoch: u64) -> Result<()> {
+        if frame_epoch != self.epoch {
+            bail!(
+                "{} frame from rendezvous epoch {frame_epoch} rejected: host \
+                 serves epoch {} (stale pre-recovery traffic)",
+                CollectiveStatus::StaleEpoch.marker(),
+                self.epoch
+            );
+        }
+        Ok(())
+    }
+
+    fn heartbeat(&self, frame: HeartbeatFrame) -> Result<Vec<u8>> {
+        self.check_epoch(frame.epoch)?;
+        if let Some(leases) = &self.leases {
+            let mut t = leases.lock().unwrap();
+            t.last_beat.insert(frame.rank, Instant::now());
+            return Ok(LivenessReply { dead: t.check() }.encode());
+        }
+        Ok(LivenessReply { dead: None }.encode())
+    }
+
+    fn alive(&self, frame: HeartbeatFrame) -> Result<Vec<u8>> {
+        self.check_epoch(frame.epoch)?;
+        Ok(LivenessReply { dead: self.dead_rank() }.encode())
+    }
+
     fn offer(&self, frame: GatherFrame) -> Result<Vec<u8>> {
+        self.check_epoch(frame.epoch)?;
+        self.check_liveness()?;
         if frame.world as usize != self.world {
             bail!(
                 "{} world mismatch: rank {} believes world={}, host has {}",
@@ -212,6 +358,8 @@ impl RendezvousHost {
     }
 
     fn poll(&self, frame: PollFrame) -> Result<Vec<u8>> {
+        self.check_epoch(frame.epoch)?;
+        self.check_liveness()?;
         let rank = frame.rank as usize;
         if rank >= self.world {
             bail!(
@@ -265,7 +413,103 @@ impl Service for RendezvousHost {
         match method {
             METHOD_OFFER => self.offer(GatherFrame::decode(payload)?),
             METHOD_POLL => self.poll(PollFrame::decode(payload)?),
+            METHOD_HEARTBEAT => self.heartbeat(HeartbeatFrame::decode(payload)?),
+            METHOD_ALIVE => self.alive(HeartbeatFrame::decode(payload)?),
             other => bail!("unknown collective method '{other}'"),
+        }
+    }
+}
+
+/// A worker's background heartbeat: renews this rank's lease at the
+/// rendezvous host every `interval` until dropped.  Best-effort by design —
+/// a send failure here never kills training (the collective path carries
+/// the authoritative errors); what matters is that a LIVE rank keeps its
+/// lease fresh and a dead one simply stops.
+pub struct Heartbeat {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Heartbeat {
+    pub fn start<T: Transport + Send + 'static>(
+        client: RpcClient<T>,
+        rank: u32,
+        epoch: u64,
+        interval: Duration,
+    ) -> Heartbeat {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            let frame = HeartbeatFrame { rank, epoch }.encode();
+            while !stop2.load(Ordering::Relaxed) {
+                let _ = client.call(METHOD_HEARTBEAT, frame.clone());
+                // sleep in short slices so drop doesn't block a full interval
+                let deadline = Instant::now() + interval;
+                while Instant::now() < deadline && !stop2.load(Ordering::Relaxed) {
+                    std::thread::sleep(interval.min(Duration::from_millis(10)));
+                }
+            }
+        });
+        Heartbeat { stop, handle: Some(handle) }
+    }
+}
+
+impl Drop for Heartbeat {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A rank's read-only view of the group's liveness verdict — what the ring
+/// backend (which never talks to the rendezvous host on its data path)
+/// polls between chunk waits so a dead peer surfaces in milliseconds
+/// instead of the full ring round timeout.
+pub struct LivenessProbe {
+    client: Box<dyn Fn() -> Result<LivenessReply> + Send + Sync>,
+    /// floor between actual probes: callers may invoke `check` per chunk
+    /// wait slice; probes cheaper than this floor short-circuit to Ok
+    min_interval: Duration,
+    last_probe: Mutex<Option<Instant>>,
+}
+
+impl LivenessProbe {
+    pub fn new<T: Transport + Send + Sync + 'static>(
+        client: RpcClient<T>,
+        rank: u32,
+        epoch: u64,
+        min_interval: Duration,
+    ) -> LivenessProbe {
+        let frame = HeartbeatFrame { rank, epoch }.encode();
+        LivenessProbe {
+            client: Box::new(move || {
+                LivenessReply::decode(&client.call(METHOD_ALIVE, frame.clone())?)
+            }),
+            min_interval,
+            last_probe: Mutex::new(None),
+        }
+    }
+
+    /// Errors with the `PeerDead` marker when the host has latched a death;
+    /// probe failures themselves are swallowed (the data path will time out
+    /// on its own if the coordinator is truly gone).
+    pub fn check(&self) -> Result<()> {
+        {
+            let mut last = self.last_probe.lock().unwrap();
+            match *last {
+                Some(t) if t.elapsed() < self.min_interval => return Ok(()),
+                _ => *last = Some(Instant::now()),
+            }
+        }
+        match (self.client)() {
+            Ok(LivenessReply { dead: Some(rank) }) => bail!(
+                "{} rank={rank} heartbeat lease expired — peer declared dead; \
+                 aborting the ring collective (fail-fast, §4.2)",
+                CollectiveStatus::PeerDead { rank }.marker()
+            ),
+            _ => Ok(()),
         }
     }
 }
@@ -275,6 +519,8 @@ impl Service for RendezvousHost {
 pub struct RpcCollective<T: Transport> {
     client: RpcClient<T>,
     world: usize,
+    /// recovery generation stamped on every frame (must match the host's)
+    epoch: u64,
     next_seq: AtomicU64,
     /// sleep between result polls
     pub poll_interval: Duration,
@@ -285,17 +531,21 @@ pub struct RpcCollective<T: Transport> {
 
 impl<T: Transport> RpcCollective<T> {
     pub fn new(transport: T, world: usize) -> RpcCollective<T> {
-        let client = RpcClient::new(transport).with_retry(RetryPolicy {
-            max_attempts: 64,
-            backoff: Duration::from_micros(50),
-        });
+        let client = RpcClient::new(transport)
+            .with_retry(RetryPolicy::exponential(64, Duration::from_micros(50)));
         RpcCollective {
             client,
             world,
+            epoch: 0,
             next_seq: AtomicU64::new(0),
             poll_interval: Duration::from_micros(200),
             round_timeout: Duration::from_secs(300),
         }
+    }
+
+    pub fn with_epoch(mut self, epoch: u64) -> Self {
+        self.epoch = epoch;
+        self
     }
 
     pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
@@ -336,6 +586,7 @@ impl<T: Transport> CollectiveBackend for RpcCollective<T> {
             seq,
             rank: rank as u32,
             world: self.world as u32,
+            epoch: self.epoch,
             tag: tag.to_string(),
             payload,
         }
@@ -360,7 +611,7 @@ impl<T: Transport> CollectiveBackend for RpcCollective<T> {
                     std::thread::sleep(self.poll_interval);
                 }
             }
-            let poll = PollFrame { seq, rank: rank as u32 }.encode();
+            let poll = PollFrame { seq, rank: rank as u32, epoch: self.epoch }.encode();
             reply = self
                 .client
                 .call(METHOD_POLL, poll)
@@ -500,6 +751,113 @@ mod tests {
             3, // lies about world size
         )));
         assert!(col.barrier(0).is_err());
+    }
+
+    #[test]
+    fn lease_expiry_latches_death_and_fails_offers_with_peer_dead() {
+        let server = Arc::new(RpcServer::new(
+            RendezvousHost::new(2).with_lease_ttl(Duration::from_millis(30)),
+        ));
+        let client = RpcClient::new(InProcTransport::new(server.clone()));
+        // before any heartbeat: nobody holds a lease, nobody can be dead
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(server.service().dead_rank(), None, "no lease, no death");
+
+        // rank 1 beats once, then goes silent past the TTL
+        let beat = HeartbeatFrame { rank: 1, epoch: 0 }.encode();
+        let reply = LivenessReply::decode(&client.call(METHOD_HEARTBEAT, beat).unwrap()).unwrap();
+        assert_eq!(reply.dead, None);
+        std::thread::sleep(Duration::from_millis(80));
+        assert_eq!(server.service().dead_rank(), Some(1));
+
+        // every collective call now fails immediately with the typed status
+        let offer = GatherFrame {
+            seq: 0,
+            rank: 0,
+            world: 2,
+            epoch: 0,
+            tag: "barrier".into(),
+            payload: vec![],
+        }
+        .encode();
+        let err = client.call(METHOD_OFFER, offer).unwrap_err();
+        assert_eq!(
+            CollectiveStatus::classify_error(&err),
+            Some(CollectiveStatus::PeerDead { rank: 1 }),
+            "{err:#}"
+        );
+
+        // a late heartbeat from the casualty cannot resurrect it (latched)
+        let beat = HeartbeatFrame { rank: 1, epoch: 0 }.encode();
+        let reply = LivenessReply::decode(&client.call(METHOD_HEARTBEAT, beat).unwrap()).unwrap();
+        assert_eq!(reply.dead, Some(1), "death must latch");
+    }
+
+    #[test]
+    fn heartbeats_within_ttl_keep_everyone_alive() {
+        let server = Arc::new(RpcServer::new(
+            RendezvousHost::new(2).with_lease_ttl(Duration::from_millis(100)),
+        ));
+        let client = RpcClient::new(InProcTransport::new(server.clone()));
+        for _ in 0..10 {
+            for rank in 0..2u32 {
+                let beat = HeartbeatFrame { rank, epoch: 0 }.encode();
+                let r =
+                    LivenessReply::decode(&client.call(METHOD_HEARTBEAT, beat).unwrap()).unwrap();
+                assert_eq!(r.dead, None);
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(server.service().dead_rank(), None);
+    }
+
+    #[test]
+    fn stale_epoch_frames_are_rejected() {
+        let server = Arc::new(RpcServer::new(RendezvousHost::new(1).with_epoch(3)));
+        let client = RpcClient::new(InProcTransport::new(server.clone()));
+        let offer = GatherFrame {
+            seq: 0,
+            rank: 0,
+            world: 1,
+            epoch: 2, // pre-recovery generation
+            tag: "barrier".into(),
+            payload: vec![],
+        }
+        .encode();
+        let err = client.call(METHOD_OFFER, offer).unwrap_err();
+        assert_eq!(
+            CollectiveStatus::classify_error(&err),
+            Some(CollectiveStatus::StaleEpoch),
+            "{err:#}"
+        );
+        // the matching epoch sails through
+        let col = Collective::with_backend(Arc::new(
+            RpcCollective::new(InProcTransport::new(server), 1).with_epoch(3),
+        ));
+        col.barrier(0).unwrap();
+    }
+
+    #[test]
+    fn liveness_probe_reports_latched_death() {
+        let server = Arc::new(RpcServer::new(
+            RendezvousHost::new(2).with_lease_ttl(Duration::from_millis(20)),
+        ));
+        let beat_client = RpcClient::new(InProcTransport::new(server.clone()));
+        let beat = HeartbeatFrame { rank: 0, epoch: 0 }.encode();
+        beat_client.call(METHOD_HEARTBEAT, beat).unwrap();
+        let probe = LivenessProbe::new(
+            RpcClient::new(InProcTransport::new(server.clone())),
+            1,
+            0,
+            Duration::from_millis(1),
+        );
+        assert!(probe.check().is_ok(), "alive while the lease is fresh");
+        std::thread::sleep(Duration::from_millis(60));
+        let err = probe.check().unwrap_err();
+        assert_eq!(
+            CollectiveStatus::classify_error(&err),
+            Some(CollectiveStatus::PeerDead { rank: 0 })
+        );
     }
 
     #[test]

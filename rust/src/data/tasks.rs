@@ -132,6 +132,20 @@ impl TaskGen {
         (0..n).map(|_| self.sample()).collect()
     }
 
+    /// Snapshot the generator's RNG mid-stream (checkpoint-resume: the
+    /// restored generator continues with exactly the next task the
+    /// original would have produced).
+    pub fn rng_state(&self) -> crate::util::rng::RngState {
+        self.rng.state()
+    }
+
+    /// Restore a mid-stream RNG snapshot taken with [`rng_state`].
+    ///
+    /// [`rng_state`]: TaskGen::rng_state
+    pub fn restore_rng(&mut self, state: crate::util::rng::RngState) {
+        self.rng = Rng::from_state(state);
+    }
+
     fn rand_word(&mut self, len: usize) -> String {
         (0..len)
             .map(|_| (b'a' + self.rng.below(26) as u8) as char)

@@ -14,8 +14,10 @@ use crate::balance::evaluate_epoch;
 use crate::checkpoint::{CheckpointManager, CheckpointMeta, ShardState};
 use crate::cluster::topology::Topology;
 use crate::cluster::workload::{GenLenModel, TrainTimeModel};
-use crate::coordinator::collective::Collective;
-use crate::coordinator::rpc_collective::{RendezvousHost, RpcCollective};
+use crate::coordinator::collective::{Collective, CollectiveBackend};
+use crate::coordinator::rpc_collective::{
+    CollectiveStatus, Heartbeat, RendezvousHost, RpcCollective,
+};
 use crate::coordinator::single::{route_parallel, route_single};
 use crate::data::payload::PayloadSpec;
 use crate::placement::{run_coexist_static, run_colocate, run_dynamic, PlacementSpec};
@@ -39,7 +41,7 @@ pub use crate::bench::{Metric, Table};
 pub fn key_columns(id: &str) -> usize {
     match id {
         "e1" | "e2" => 2,
-        "e5" | "e8c" | "einterp" => 3,
+        "e5" | "e8c" | "einterp" | "echaos" => 3,
         "e9a" => 5,
         _ => 1,
     }
@@ -343,10 +345,8 @@ pub fn e8_rpc(quick: bool) -> Table {
         }));
         let flaky = FlakyTransport::new(InProcTransport::new(server.clone()), 99)
             .with_probs(dreq, dresp, dup);
-        let client = RpcClient::new(flaky).with_retry(RetryPolicy {
-            max_attempts: 64,
-            backoff: std::time::Duration::from_micros(5),
-        });
+        let client = RpcClient::new(flaky)
+            .with_retry(RetryPolicy::exponential(64, std::time::Duration::from_micros(5)));
         let t0 = std::time::Instant::now();
         let mut ok = 0usize;
         for i in 0..calls {
@@ -934,6 +934,9 @@ pub fn e9_checkpoint(quick: bool) -> Table {
             ParamSet::new(vec![Tensor::f32(vec![n_elems], vec![0.5; n_elems])]),
         )],
         rng_seed: 1,
+        opt_step: 0,
+        controller_rng: None,
+        taskgen_rng: None,
     };
     let meta = CheckpointMeta {
         step: 1,
@@ -1004,6 +1007,135 @@ pub fn e9_checkpoint(quick: bool) -> Table {
             "blocking ms".into(),
             "background ms".into(),
             "outcome".into(),
+        ],
+        rows,
+        ..Table::default()
+    }
+}
+
+/// One chaos round-trip at a given lease TTL: a world of 3 rendezvouses
+/// through a lease-armed host, the last rank "crashes" (stops
+/// heartbeating and never offers its round), and the survivors' blocked
+/// polls must fail with a typed `PeerDead` in roughly one TTL.  Returns
+/// (detection ms — slowest survivor, recovery ms — wall time for an
+/// epoch-bumped fresh host to re-rendezvous the full world).
+fn echaos_once(world: usize, ttl_ms: u64, kill_round: usize) -> (f64, f64) {
+    use crate::rpc::transport::InProcTransport;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let server = Arc::new(RpcServer::new(
+        RendezvousHost::new(world).with_lease_ttl(Duration::from_millis(ttl_ms)),
+    ));
+    let beat = Duration::from_millis((ttl_ms / 5).max(5));
+    let rounds = kill_round + 2;
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            let server = server.clone();
+            std::thread::spawn(move || -> Option<f64> {
+                let col =
+                    RpcCollective::for_rank(InProcTransport::new(server.clone()), world, rank);
+                let hb = Heartbeat::start(
+                    RpcClient::new(InProcTransport::new(server.clone())),
+                    rank as u32,
+                    0,
+                    beat,
+                );
+                for round in 0..rounds {
+                    if rank == world - 1 && round == kill_round {
+                        // the "crash": stop beating, never offer this round
+                        drop(hb);
+                        return None;
+                    }
+                    let t0 = Instant::now();
+                    if let Err(err) = col.exchange(rank, "chaos.round", vec![rank as u8]) {
+                        let dead = matches!(
+                            CollectiveStatus::classify_error(&err),
+                            Some(CollectiveStatus::PeerDead { .. })
+                        );
+                        assert!(dead, "survivor failed without PeerDead: {err:#}");
+                        return Some(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                }
+                None
+            })
+        })
+        .collect();
+    let detect_ms = handles
+        .into_iter()
+        .filter_map(|h| h.join().unwrap())
+        .fold(0.0_f64, f64::max);
+    assert!(detect_ms > 0.0, "no survivor reported a typed PeerDead");
+
+    // recovery: a fresh host one epoch up, the full world re-rendezvouses
+    let t0 = Instant::now();
+    let server = Arc::new(RpcServer::new(
+        RendezvousHost::new(world)
+            .with_epoch(1)
+            .with_lease_ttl(Duration::from_millis(ttl_ms)),
+    ));
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            let server = server.clone();
+            std::thread::spawn(move || {
+                let col =
+                    RpcCollective::for_rank(InProcTransport::new(server.clone()), world, rank)
+                        .with_epoch(1);
+                let _hb = Heartbeat::start(
+                    RpcClient::new(InProcTransport::new(server)),
+                    rank as u32,
+                    1,
+                    beat,
+                );
+                col.exchange(rank, "chaos.recover", vec![rank as u8])
+                    .expect("recovered round");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (detect_ms, t0.elapsed().as_secs_f64() * 1e3)
+}
+
+/// Echaos — rank-death detection latency and epoch-bumped recovery time
+/// for the elastic `train-dist` path (EXPERIMENTS.md §Echaos): detection
+/// must track the heartbeat lease TTL, three orders of magnitude under
+/// the 300 s collective round timeout that used to be the only backstop.
+pub fn echaos_recovery(quick: bool) -> Table {
+    let world = 3;
+    let kill_round = 2;
+    let reps = if quick { 3 } else { 5 };
+    let ttls: &[u64] = if quick { &[100, 250] } else { &[100, 250, 500] };
+    let mut rows = Vec::new();
+    for &ttl in ttls {
+        // min-of-reps damps scheduler noise: detection's floor is the TTL
+        // itself, recovery's is one rendezvous round
+        let (mut detect, mut recover) = (f64::MAX, f64::MAX);
+        for _ in 0..reps {
+            let (d, r) = echaos_once(world, ttl, kill_round);
+            detect = detect.min(d);
+            recover = recover.min(r);
+        }
+        rows.push(vec![
+            "restart".into(),
+            ttl.into(),
+            kill_round.into(),
+            f(detect, 1),
+            Metric::Bool(detect < 30_000.0),
+            f(recover, 1),
+        ]);
+    }
+    Table {
+        title: "Echaos — rank-death detection + epoch-bumped recovery (elastic train-dist)"
+            .into(),
+        header: vec![
+            "policy".into(),
+            "lease ttl".into(),
+            "kill round".into(),
+            "detect ms".into(),
+            "detect \u{226a} 300s timeout".into(),
+            "recover ms".into(),
         ],
         rows,
         ..Table::default()
@@ -1208,8 +1340,8 @@ pub fn egen_generation(quick: bool) -> Table {
     Table { title, header, rows, ..Table::default() }
 }
 
-/// Run one experiment by id ("e1".."e9a", "egen", "einterp"), print its
-/// table, and return it.
+/// Run one experiment by id ("e1".."e9a", "egen", "einterp", "echaos"),
+/// print its table, and return it.
 pub fn run(id: &str, quick: bool) -> Option<Table> {
     let t = match id {
         "e1" => e1_controller_scaling(quick),
@@ -1224,6 +1356,7 @@ pub fn run(id: &str, quick: bool) -> Option<Table> {
         "e9a" => e9a_allreduce(quick),
         "egen" => egen_generation(quick),
         "einterp" => einterp_engine(quick),
+        "echaos" => echaos_recovery(quick),
         _ => return None,
     };
     t.print();
@@ -1277,6 +1410,17 @@ mod tests {
             assert_eq!(row[identical], "true", "backend diverged from in-proc: {row:?}");
         }
         assert_cells_roundtrip("e8c", &t);
+    }
+
+    #[test]
+    fn echaos_detection_tracks_lease_ttl() {
+        let (detect_ms, recover_ms) = echaos_once(3, 150, 1);
+        // detection's floor is one lease TTL (a lease can only lapse after
+        // the victim has been silent that long); its ceiling must be
+        // nowhere near the 300 s round timeout, the pre-lease backstop
+        assert!(detect_ms >= 50.0, "died before any lease could lapse: {detect_ms} ms");
+        assert!(detect_ms < 10_000.0, "lease gating broken: detection took {detect_ms} ms");
+        assert!(recover_ms < 10_000.0, "epoch-bumped recovery took {recover_ms} ms");
     }
 
     #[test]

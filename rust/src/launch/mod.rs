@@ -31,6 +31,21 @@
 //! ([`CollectiveStatus`]): [`worker_exit_code`] maps them to stable exit
 //! codes, which `train-dist` decodes back into a reason instead of
 //! grepping stderr.
+//!
+//! Fault tolerance (multi-process path): each worker runs a [`Heartbeat`]
+//! thread against the rendezvous host for its whole life.  When a lease
+//! lapses the host latches the dead rank, and every later collective
+//! `offer`/`poll` from the survivors fails in milliseconds with a typed
+//! `PeerDead` status — nobody waits out the 300 s round timeout.  The ring
+//! backend never revisits the coordinator after bootstrap, so it carries a
+//! throttled [`LivenessProbe`] instead, checked between streaming waits.
+//! The `train-dist` supervisor can then `--recover restart` from the
+//! latest COMPLETE checkpoint: every rank persists its own shard (policy,
+//! Adam moments, frozen reference, and both RNG stream positions), so a
+//! respawned worker resumes mid-run bit-identically, while a bumped
+//! rendezvous epoch rejects frames from stale processes.
+//! `GCORE_CHAOS=kill:rank=R,step=S` injects the crash the chaos tier
+//! recovers from.
 
 use std::net::SocketAddr;
 use std::sync::Arc;
@@ -46,14 +61,18 @@ use crate::coordinator::collective::{
 use crate::coordinator::controller::{Controller, StepStats};
 use crate::coordinator::pretrain;
 use crate::coordinator::ring_collective::{RingCollective, RingInbox, RingPeer};
-use crate::coordinator::rpc_collective::{CollectiveStatus, RendezvousHost, RpcCollective};
+use crate::coordinator::rpc_collective::{
+    CollectiveStatus, Heartbeat, LivenessProbe, RendezvousHost, RpcCollective,
+};
 use crate::reward::{RewardKind, Rewarder};
+use crate::rpc::client::RpcClient;
 use crate::rpc::server::RpcServer;
 use crate::rpc::transport::{MeteredTransport, TcpRpcHost, TcpTransport, TransferStats};
 use crate::runtime::engine::Engine;
 use crate::runtime::params::{init_policy, ParamSet};
 use crate::storage::dataloader::LoaderState;
 use crate::util::codec::{Reader, Writer};
+use crate::util::rng::Rng;
 
 #[derive(Debug, Clone, Default)]
 pub struct TrainReport {
@@ -177,9 +196,108 @@ pub fn broadcast_rewarder(
     decode_rewarder(cfg, &bytes)
 }
 
-/// The full per-rank training body: SFT warm-start → RLHF steps →
-/// (rank 0) evaluation + checkpointing.  Identical across launch modes —
-/// the collective is the only thing that knows where the peers live.
+/// Exit code a chaos-killed worker dies with — distinct from the typed
+/// collective codes (65..=70) so supervisors and tests can tell "injected
+/// crash" from "collective failure".
+pub const CHAOS_EXIT_CODE: i32 = 86;
+
+/// A `TcpTransport` to `addr` carrying the config's connect/IO timeouts
+/// (0 = unbounded): the one choke point through which every transport the
+/// multi-process path opens — rendezvous, ring successor, heartbeat,
+/// liveness probe — picks up its bounds.
+pub fn tcp_transport(cfg: &RunConfig, addr: SocketAddr) -> TcpTransport {
+    TcpTransport::connect(addr).with_timeouts(
+        Duration::from_millis(cfg.tcp_connect_timeout_ms),
+        Duration::from_millis(cfg.tcp_io_timeout_ms),
+    )
+}
+
+/// Parse a `GCORE_CHAOS` spec: `kill:rank=R,step=S` crashes rank R with
+/// [`CHAOS_EXIT_CODE`] right before RLHF step S runs (steps are 0-based,
+/// so `step=0` dies before any optimiser update).
+pub fn parse_chaos(spec: &str) -> Result<(usize, usize)> {
+    let rest = spec
+        .strip_prefix("kill:")
+        .with_context(|| format!("unsupported GCORE_CHAOS {spec:?} (want kill:rank=R,step=S)"))?;
+    let (mut rank, mut step) = (None, None);
+    for part in rest.split(',') {
+        let (key, val) = part
+            .split_once('=')
+            .with_context(|| format!("malformed GCORE_CHAOS field {part:?} (want key=value)"))?;
+        let n: usize = val
+            .parse()
+            .with_context(|| format!("GCORE_CHAOS {key}={val:?} is not a number"))?;
+        match key {
+            "rank" => rank = Some(n),
+            "step" => step = Some(n),
+            other => bail!("unknown GCORE_CHAOS field {other:?} (want rank= or step=)"),
+        }
+    }
+    Ok((
+        rank.context("GCORE_CHAOS is missing rank=")?,
+        step.context("GCORE_CHAOS is missing step=")?,
+    ))
+}
+
+fn chaos_from_env() -> Result<Option<(usize, usize)>> {
+    match std::env::var("GCORE_CHAOS") {
+        Ok(spec) if !spec.is_empty() => Ok(Some(parse_chaos(&spec)?)),
+        _ => Ok(None),
+    }
+}
+
+/// Snapshot everything a rank needs to resume bit-identically: policy +
+/// Adam moments, the frozen reference policy, the optimiser step count,
+/// and both RNG stream positions (controller sampling + task generation).
+fn snapshot_shard(rank: usize, cfg: &RunConfig, c: &Controller) -> ShardState {
+    ShardState {
+        rank,
+        params: vec![
+            ("policy".into(), c.state.params.clone()),
+            ("adam_m".into(), c.state.m.clone()),
+            ("adam_v".into(), c.state.v.clone()),
+            ("ref".into(), c.ref_params.clone()),
+        ],
+        rng_seed: cfg.seed,
+        opt_step: c.state.step,
+        controller_rng: Some(c.rng.state()),
+        taskgen_rng: Some(c.taskgen.rng_state()),
+    }
+}
+
+/// Inverse of [`snapshot_shard`]: load a shard back into a fresh
+/// controller.  Shards from before the RNG-carrying format bail —
+/// resuming without the stream positions would silently fork the
+/// trajectory instead of replaying it.
+fn restore_controller(c: &mut Controller, shard: &ShardState) -> Result<()> {
+    let set = |name: &str| {
+        shard
+            .param_set(name)
+            .cloned()
+            .with_context(|| format!("checkpoint shard carries no {name:?} param set"))
+    };
+    c.state.params = set("policy")?;
+    c.state.m = set("adam_m")?;
+    c.state.v = set("adam_v")?;
+    c.ref_params = set("ref")?;
+    c.state.step = shard.opt_step;
+    c.rng = Rng::from_state(
+        shard
+            .controller_rng
+            .context("checkpoint shard predates RNG snapshots (no controller stream)")?,
+    );
+    c.taskgen.restore_rng(
+        shard
+            .taskgen_rng
+            .context("checkpoint shard predates RNG snapshots (no taskgen stream)")?,
+    );
+    Ok(())
+}
+
+/// The full per-rank training body: SFT warm-start (or checkpoint resume)
+/// → RLHF steps → (rank 0) evaluation + checkpointing.  Identical across
+/// launch modes — the collective is the only thing that knows where the
+/// peers live.
 pub fn run_rank(
     rank: usize,
     engine: Arc<Engine>,
@@ -192,49 +310,73 @@ pub fn run_rank(
     let mut c = Controller::new(rank, engine, collective, cfg.clone(), policy, rewarder)?;
     let mut report = TrainReport::default();
     let mut pending_ckpt: Option<crate::checkpoint::AsyncSaveHandle> = None;
+    let chaos = chaos_from_env()?;
 
-    // SFT warm-start
-    for _ in 0..cfg.sft_steps {
-        let loss = c.sft_step()?;
-        report.sft_losses.push(loss);
-    }
-    c.freeze_reference();
-    if rank == 0 {
-        report.eval_before = c.evaluate(4)?;
-    }
+    let start_step = match cfg.resume_step {
+        // Crash-restart resume: restore exactly what this rank's shard
+        // captured at the checkpoint boundary and skip the warm-start
+        // phases the first life already ran.  Evaluation draws nothing
+        // from the controller RNG (greedy decode, fresh eval taskgen), so
+        // skipping eval_before leaves the replayed trajectory untouched.
+        Some(step) => {
+            let mgr = ckpt
+                .as_ref()
+                .context("resume_step is set but no checkpoint_dir is configured")?;
+            let shard = mgr
+                .load_shard(step, rank)
+                .with_context(|| format!("rank {rank}: loading resume shard at step {step}"))?;
+            restore_controller(&mut c, &shard)
+                .with_context(|| format!("rank {rank}: restoring checkpoint step {step}"))?;
+            step as usize
+        }
+        None => {
+            // SFT warm-start
+            for _ in 0..cfg.sft_steps {
+                let loss = c.sft_step()?;
+                report.sft_losses.push(loss);
+            }
+            c.freeze_reference();
+            if rank == 0 {
+                report.eval_before = c.evaluate(4)?;
+            }
+            0
+        }
+    };
 
     // RLHF steps
-    for step in 0..cfg.steps {
+    for step in start_step..cfg.steps {
+        if let Some((kill_rank, kill_step)) = chaos {
+            if rank == kill_rank && step == kill_step {
+                eprintln!("[gcore] chaos: killing rank {rank} before rlhf step {step}");
+                std::process::exit(CHAOS_EXIT_CODE);
+            }
+        }
         let stats = c.rlhf_step(step)?;
         if rank == 0 {
             report.steps.push(stats);
-            if let Some(ckpt) = &ckpt {
-                if cfg.checkpoint_every > 0 && (step + 1) % cfg.checkpoint_every == 0 {
-                    let meta = CheckpointMeta {
-                        step: step as u64 + 1,
-                        world_size: cfg.world,
-                        loader: LoaderState {
-                            seed: cfg.seed,
-                            epoch: 0,
-                            cursor: (step + 1) * c.engine.manifest().dims.batch,
-                        },
-                    };
-                    let shard = ShardState {
-                        rank,
-                        params: vec![
-                            ("policy".into(), c.state.params.clone()),
-                            ("adam_m".into(), c.state.m.clone()),
-                            ("adam_v".into(), c.state.v.clone()),
-                        ],
-                        rng_seed: cfg.seed,
-                    };
-                    // async: training continues while it writes; awaiting
-                    // the PREVIOUS save here caps us at one write in flight
-                    if let Some(h) = pending_ckpt.take() {
-                        h.wait()?;
-                    }
-                    pending_ckpt = Some(ckpt.save_async(step as u64 + 1, meta, shard));
+        }
+        if let Some(mgr) = &ckpt {
+            if cfg.checkpoint_every > 0 && (step + 1) % cfg.checkpoint_every == 0 {
+                // EVERY rank saves its shard — recovery only trusts a step
+                // once all `world` shards landed (`latest_complete_step`),
+                // and each rank's RNG streams are rank-specific.  Rank 0's
+                // save also writes the meta.
+                let meta = CheckpointMeta {
+                    step: step as u64 + 1,
+                    world_size: cfg.world,
+                    loader: LoaderState {
+                        seed: cfg.seed,
+                        epoch: 0,
+                        cursor: (step + 1) * c.engine.manifest().dims.batch,
+                    },
+                };
+                let shard = snapshot_shard(rank, &cfg, &c);
+                // async: training continues while it writes; awaiting
+                // the PREVIOUS save here caps us at one write in flight
+                if let Some(h) = pending_ckpt.take() {
+                    h.wait()?;
                 }
+                pending_ckpt = Some(mgr.save_async(step as u64 + 1, meta, shard));
             }
         }
     }
@@ -412,14 +554,25 @@ pub fn run_training_ring(cfg: &RunConfig) -> Result<TrainReport> {
 /// binds 127.0.0.1:`port` (0 = ephemeral; read the actual address off the
 /// returned host) and serves until dropped.  `tombstone_capacity` bounds
 /// the server's cleanup-tombstone set (`rpc_tombstone_capacity` knob).
+/// `epoch` is the recovery generation the host accepts (supervisor
+/// respawns bump it, so frames from pre-crash processes are rejected as
+/// stale); a non-zero `lease_ttl_ms` arms heartbeat leases — a rank that
+/// stops beating for that long is latched dead and every survivor's next
+/// collective call fails fast with a typed `PeerDead` status.
 pub fn serve_coordinator(
     world: usize,
     port: u16,
     tombstone_capacity: usize,
     tombstone_ttl_ms: u64,
+    epoch: u64,
+    lease_ttl_ms: u64,
 ) -> Result<TcpRpcHost> {
+    let mut rendezvous = RendezvousHost::new(world).with_epoch(epoch);
+    if lease_ttl_ms > 0 {
+        rendezvous = rendezvous.with_lease_ttl(Duration::from_millis(lease_ttl_ms));
+    }
     let server = Arc::new(
-        RpcServer::new(RendezvousHost::new(world))
+        RpcServer::new(rendezvous)
             .with_tombstone_capacity(tombstone_capacity)
             .with_tombstone_ttl(Duration::from_millis(tombstone_ttl_ms)),
     );
@@ -445,10 +598,11 @@ fn build_worker_collective(
     match cfg.collective {
         CollectiveMode::Ring => {
             let boot = RpcCollective::for_rank(
-                MeteredTransport::with_stats(TcpTransport::connect(coord), stats.clone()),
+                MeteredTransport::with_stats(tcp_transport(cfg, coord), stats.clone()),
                 cfg.world,
                 rank,
-            );
+            )
+            .with_epoch(cfg.coord_epoch);
             let inbox = RingInbox::new();
             let server = Arc::new(
                 RpcServer::new(RingPeer::new(inbox.clone()))
@@ -464,21 +618,36 @@ fn build_worker_collective(
                 .context("ring bootstrap address is not utf8")?
                 .parse()
                 .context("ring bootstrap address did not parse")?;
-            let backend = RingCollective::new(
+            let mut backend = RingCollective::new(
                 rank,
                 cfg.world,
                 inbox,
-                MeteredTransport::with_stats(TcpTransport::connect(succ), stats.clone()),
+                MeteredTransport::with_stats(tcp_transport(cfg, succ), stats.clone()),
             )
             .with_chunk_bytes(cfg.ring_chunk_bytes);
+            if cfg.heartbeat_interval_ms > 0 && cfg.world > 1 {
+                // after bootstrap the ring never revisits the coordinator,
+                // so a dead peer would otherwise only surface as a 300 s
+                // inbox timeout — poll the host's latched liveness verdict
+                // (throttled, unmetered control plane) between chunk waits
+                let probe_client = RpcClient::new(tcp_transport(cfg, coord))
+                    .with_id_base((3u64 << 62) | ((rank as u64) << 40));
+                backend = backend.with_probe(Arc::new(LivenessProbe::new(
+                    probe_client,
+                    rank as u32,
+                    cfg.coord_epoch,
+                    Duration::from_millis(cfg.heartbeat_interval_ms),
+                )));
+            }
             Ok((Collective::with_backend(Arc::new(backend)), Some(host), stats))
         }
         _ => {
             let backend = RpcCollective::for_rank(
-                MeteredTransport::with_stats(TcpTransport::connect(coord), stats.clone()),
+                MeteredTransport::with_stats(tcp_transport(cfg, coord), stats.clone()),
                 cfg.world,
                 rank,
-            );
+            )
+            .with_epoch(cfg.coord_epoch);
             Ok((Collective::with_backend(Arc::new(backend)), None, stats))
         }
     }
@@ -492,6 +661,24 @@ fn build_worker_collective(
 /// streaming makes the multi-MB weight frame O(payload) per rank), so all
 /// ranks still start bit-identical.
 pub fn run_worker(cfg: &RunConfig, rank: usize, coord: SocketAddr) -> Result<TrainReport> {
+    // Heartbeat lease: this rank's liveness thread beats the rendezvous
+    // host for the worker's whole life — engine load, reward pre-training,
+    // every training phase — so a crash ANYWHERE lapses the lease.  The
+    // lease only starts at the FIRST beat (no false positives while other
+    // ranks are still spawning), and dropping the guard joins the thread
+    // on clean exit.  A killed process simply stops beating.
+    let _heartbeat = if cfg.world > 1 && cfg.heartbeat_interval_ms > 0 {
+        let client = RpcClient::new(tcp_transport(cfg, coord))
+            .with_id_base((1u64 << 62) | ((rank as u64) << 40));
+        Some(Heartbeat::start(
+            client,
+            rank as u32,
+            cfg.coord_epoch,
+            Duration::from_millis(cfg.heartbeat_interval_ms),
+        ))
+    } else {
+        None
+    };
     let engine = Arc::new(Engine::load(&cfg.artifacts)?);
     let policy = init_policy(&engine, cfg.seed as u32)?;
     // `_ring_host` keeps this rank's inbox service alive until training ends
@@ -516,7 +703,7 @@ pub fn run_worker(cfg: &RunConfig, rank: usize, coord: SocketAddr) -> Result<Tra
 
 /// The process exit code a `train-worker` reports for `err`: typed
 /// collective statuses map to stable codes (`CollectiveStatus::exit_code`,
-/// 65..=68) the parent matches on; anything else is 1.
+/// 65..=70) the parent matches on; anything else is 1.
 pub fn worker_exit_code(err: &anyhow::Error) -> i32 {
     match CollectiveStatus::classify_error(err) {
         Some(status) => status.exit_code(),
@@ -542,6 +729,23 @@ mod tests {
             Tensor::f32(vec![2, 2], vec![0.5, -1.25, f32::MIN_POSITIVE, 3.0]),
             Tensor::f32(vec![3], vec![-0.0, 9.0, 1e-30]),
         ]))
+    }
+
+    #[test]
+    fn chaos_spec_parses_and_rejects_garbage() {
+        assert_eq!(parse_chaos("kill:rank=1,step=3").unwrap(), (1, 3));
+        assert_eq!(parse_chaos("kill:step=0,rank=2").unwrap(), (2, 0));
+        for bad in [
+            "rank=1,step=3",        // missing action
+            "pause:rank=1,step=3",  // unknown action
+            "kill:rank=1",          // missing step
+            "kill:step=3",          // missing rank
+            "kill:rank=x,step=3",   // non-numeric
+            "kill:rank=1,step=3,victim=2", // unknown field
+            "kill:rank1,step=3",    // malformed field
+        ] {
+            assert!(parse_chaos(bad).is_err(), "{bad:?} should not parse");
+        }
     }
 
     #[test]

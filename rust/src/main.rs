@@ -23,7 +23,8 @@ use std::net::SocketAddr;
 
 use anyhow::{bail, Context, Result};
 
-use gcore::config::{CollectiveMode, RunConfig};
+use gcore::checkpoint::CheckpointManager;
+use gcore::config::{CollectiveMode, RecoverPolicy, RunConfig};
 use gcore::experiments;
 use gcore::launch::{self, TrainReport};
 use gcore::placement::{run_coexist_static, run_colocate, run_dynamic, PlacementSpec};
@@ -47,14 +48,23 @@ USAGE:
               preempts long-tail stragglers once a round has enough accepted
               rollouts — requires --dynamic-sampling)
   gcore train-dist [same flags as train] [--coord-port P]
+              [--recover none|restart|shrink] [--max-restarts N]
+              [--heartbeat-interval-ms N] [--lease-ttl-ms N]
+              [--tcp-connect-timeout-ms N] [--tcp-io-timeout-ms N]
               spawns N=world OS processes; --collective tcp funnels
               collectives through the rank-0 rendezvous, --collective ring
               streams chunked frames rank-to-rank (bootstrap via the
-              rendezvous, then O(payload)/rank; rank 0 prints the report)
+              rendezvous, then O(payload)/rank; rank 0 prints the report).
+              Workers heartbeat the rendezvous host; a rank silent past the
+              lease TTL is declared dead and every survivor fails fast with
+              a typed PeerDead status.  --recover restart respawns the job
+              from the latest COMPLETE checkpoint (bit-identical replay);
+              --recover shrink renegotiates the world down to a divisor.
+              GCORE_CHAOS=kill:rank=R,step=S injects a one-shot crash
   gcore bench run [<id>... | all] [--full] [--json out.json] [--db FILE]
               [--commit SHA]
               regenerate experiment tables (ids: e1 e2 e3 e4 e5 e7 e8 e8c
-              e9 e9a egen einterp), print them, optionally write the JSON
+              e9 e9a egen einterp echaos), print them, optionally write the JSON
               artifact, and ingest every numeric cell into the bench
               database (default db: .gcore-bench-db.jsonl; commit resolves
               from --commit, $GCORE_COMMIT, $GITHUB_SHA, then git)
@@ -130,6 +140,20 @@ fn cfg_from_args(args: &Args) -> Result<RunConfig> {
     cfg.kv_page_size = args.parse_or("kv-page-size", cfg.kv_page_size);
     cfg.kv_cache_pages = args.parse_or("kv-cache-pages", cfg.kv_cache_pages);
     cfg.rollout_cancel_grace = args.parse_or("rollout-cancel-grace", cfg.rollout_cancel_grace);
+    cfg.heartbeat_interval_ms =
+        args.parse_or("heartbeat-interval-ms", cfg.heartbeat_interval_ms);
+    cfg.lease_ttl_ms = args.parse_or("lease-ttl-ms", cfg.lease_ttl_ms);
+    cfg.tcp_connect_timeout_ms =
+        args.parse_or("tcp-connect-timeout-ms", cfg.tcp_connect_timeout_ms);
+    cfg.tcp_io_timeout_ms = args.parse_or("tcp-io-timeout-ms", cfg.tcp_io_timeout_ms);
+    cfg.max_restarts = args.parse_or("max-restarts", cfg.max_restarts);
+    if let Some(r) = args.get("recover") {
+        cfg.recover = RecoverPolicy::parse(r)?;
+    }
+    if let Some(s) = args.get("resume-step") {
+        cfg.resume_step =
+            Some(s.parse().context("--resume-step must be a checkpoint step number")?);
+    }
     if args.has("rollout-cancel") {
         cfg.rollout_cancel = true;
     }
@@ -189,8 +213,89 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The shrink policy's new world size: the largest proper divisor, so the
+/// surviving group keeps a balanced share of the old rank layout.
+fn shrink_world(world: usize) -> Option<usize> {
+    (1..world).rev().find(|w| world % w == 0)
+}
+
+/// Elastic `train-dist` supervisor: run attempts until one succeeds, the
+/// restart budget runs out, or the recover policy says give up.  Every
+/// recovery bumps the rendezvous epoch (frames from not-yet-dead processes
+/// of the old generation are rejected as stale) and resumes from the
+/// latest checkpoint step for which EVERY rank's shard landed.
 fn cmd_train_dist(args: &Args) -> Result<()> {
-    let cfg = cfg_from_args(args)?;
+    let mut cfg = cfg_from_args(args)?;
+    println!(
+        "[gcore] train-dist: world={} artifacts={} collective={} recover={}",
+        cfg.world,
+        cfg.artifacts,
+        cfg.collective.name(),
+        cfg.recover.name()
+    );
+
+    // hand each worker the fully-resolved config (rewritten per attempt:
+    // recovery changes epoch / resume-step / possibly world)
+    let dir = std::env::temp_dir().join(format!("gcore_dist_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let cfg_path = dir.join("run.json");
+    let exe = std::env::current_exe().context("locating gcore binary")?;
+
+    let mut restarts_left = cfg.max_restarts;
+    let mut recovering = false;
+    let result = loop {
+        match train_dist_attempt(&cfg, &cfg_path, &exe, recovering) {
+            Ok(()) => break Ok(()),
+            Err(err) if cfg.recover != RecoverPolicy::None && restarts_left > 0 => {
+                restarts_left -= 1;
+                recovering = true;
+                cfg.coord_epoch += 1;
+                if cfg.recover == RecoverPolicy::Shrink {
+                    match shrink_world(cfg.world) {
+                        Some(w) => {
+                            println!(
+                                "[gcore] train-dist: shrinking world {} -> {w}",
+                                cfg.world
+                            );
+                            cfg.world = w;
+                        }
+                        None => break Err(err.context("cannot shrink a world of 1")),
+                    }
+                }
+                // resume only from a step where ALL (new-)world shards
+                // landed; no complete checkpoint ⇒ restart from scratch
+                cfg.resume_step = cfg
+                    .checkpoint_dir
+                    .as_ref()
+                    .and_then(|d| CheckpointManager::new(d).latest_complete_step(cfg.world));
+                println!(
+                    "[gcore] train-dist: attempt failed ({err:#}); recovering via {} at \
+                     epoch {} from {} ({} restart(s) left)",
+                    cfg.recover.name(),
+                    cfg.coord_epoch,
+                    match cfg.resume_step {
+                        Some(s) => format!("checkpoint step {s}"),
+                        None => "scratch (no complete checkpoint)".to_string(),
+                    },
+                    restarts_left
+                );
+            }
+            Err(err) => break Err(err),
+        }
+    };
+    std::fs::remove_dir_all(&dir).ok();
+    result
+}
+
+/// One generation of a `train-dist` job: host the rendezvous (with the
+/// current epoch + heartbeat leases), spawn every rank, reap in completion
+/// order, and kill the survivors the moment anything fails (§4.2).
+fn train_dist_attempt(
+    cfg: &RunConfig,
+    cfg_path: &std::path::Path,
+    exe: &std::path::Path,
+    suppress_chaos: bool,
+) -> Result<()> {
     // the parent hosts the rendezvous service every worker coordinates
     // through (for --collective ring it is only the address bootstrap);
     // workers are full OS processes that never share memory
@@ -199,39 +304,42 @@ fn cmd_train_dist(args: &Args) -> Result<()> {
         cfg.coordinator_port,
         cfg.rpc_tombstone_capacity,
         cfg.rpc_tombstone_ttl_ms,
+        cfg.coord_epoch,
+        if cfg.heartbeat_interval_ms > 0 { cfg.lease_ttl_ms } else { 0 },
     )?;
     let addr = host.addr;
     println!(
-        "[gcore] train-dist: world={} coordinator={addr} artifacts={} collective={}",
-        cfg.world,
-        cfg.artifacts,
-        cfg.collective.name()
+        "[gcore] train-dist: coordinator={addr} epoch={}{}",
+        cfg.coord_epoch,
+        cfg.resume_step
+            .map(|s| format!(" resume-step={s}"))
+            .unwrap_or_default()
     );
+    std::fs::write(cfg_path, cfg.to_json().to_string())?;
 
-    // hand each worker the fully-resolved config
-    let dir = std::env::temp_dir().join(format!("gcore_dist_{}", std::process::id()));
-    std::fs::create_dir_all(&dir)?;
-    let cfg_path = dir.join("run.json");
-    std::fs::write(&cfg_path, cfg.to_json().to_string())?;
-
-    let exe = std::env::current_exe().context("locating gcore binary")?;
     let mut slots: Vec<Option<(usize, std::process::Child)>> = Vec::new();
 
     // Everything that can fail after the first spawn runs in this closure so
     // a mid-flight error (spawn failure, wait error, worker failure) always
-    // reaches the cleanup below — no orphaned workers, no leaked temp dir.
+    // reaches the cleanup below — no orphaned workers.
     let result = (|| -> Result<()> {
         for rank in 0..cfg.world {
-            let child = std::process::Command::new(&exe)
-                .arg("train-worker")
+            let mut cmd = std::process::Command::new(exe);
+            cmd.arg("train-worker")
                 .arg("--config")
-                .arg(&cfg_path)
+                .arg(cfg_path)
                 .arg("--rank")
                 .arg(rank.to_string())
                 .arg("--coord")
-                .arg(addr.to_string())
-                .spawn()
-                .with_context(|| format!("spawning worker {rank}"))?;
+                .arg(addr.to_string());
+            if suppress_chaos {
+                // an injected one-shot crash (GCORE_CHAOS) must not
+                // re-fire in the respawned generation — it would kill the
+                // same rank at the same step forever
+                cmd.env_remove("GCORE_CHAOS");
+            }
+            let child =
+                cmd.spawn().with_context(|| format!("spawning worker {rank}"))?;
             slots.push(Some((rank, child)));
         }
 
@@ -279,7 +387,6 @@ fn cmd_train_dist(args: &Args) -> Result<()> {
         slot.1.kill().ok();
         slot.1.wait().ok();
     }
-    std::fs::remove_dir_all(&dir).ok();
     drop(host);
     result
 }
@@ -308,8 +415,9 @@ fn cmd_train_worker(args: &Args) -> Result<()> {
 }
 
 /// Every experiment id `bench run all` expands to.
-const BENCH_IDS: &[&str] =
-    &["e1", "e2", "e3", "e4", "e5", "e7", "e8", "e8c", "e9", "e9a", "egen", "einterp"];
+const BENCH_IDS: &[&str] = &[
+    "e1", "e2", "e3", "e4", "e5", "e7", "e8", "e8c", "e9", "e9a", "egen", "einterp", "echaos",
+];
 
 /// Where bench samples accumulate unless `--db` says otherwise; CI caches
 /// this file per branch so the gate sees a rolling commit history.

@@ -6,22 +6,83 @@
 //! escalates into full job termination.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::rpc::transport::Transport;
 use crate::rpc::wire::{Request, Response, Status};
+use crate::util::rng::Rng;
 
+/// Exponential backoff with decorrelated jitter and an overall per-call
+/// deadline.  Jitter is seeded (per call: `seed ^ request id`), so retry
+/// schedules are deterministic in tests while still decorrelating real
+/// clients hammering one recovering server.  `fixed` recovers the old
+/// constant-interval behaviour (base == cap ⇒ no growth, no jitter).
 #[derive(Debug, Clone)]
 pub struct RetryPolicy {
     pub max_attempts: usize,
-    pub backoff: Duration,
+    /// first-retry sleep, and the floor of every jittered draw
+    pub base: Duration,
+    /// ceiling on any single backoff sleep
+    pub cap: Duration,
+    /// overall wall-clock bound across all attempts of one call (delivery
+    /// stops retrying once exceeded, even with attempts left)
+    pub deadline: Option<Duration>,
+    /// jitter stream seed
+    pub seed: u64,
+}
+
+impl RetryPolicy {
+    /// Constant-interval retries (the pre-backoff behaviour).
+    pub fn fixed(max_attempts: usize, interval: Duration) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts,
+            base: interval,
+            cap: interval,
+            deadline: None,
+            seed: 0x5EED,
+        }
+    }
+
+    /// Decorrelated-jitter exponential backoff: each sleep draws uniformly
+    /// from [base, 3 × previous], clamped to a cap of 64 × base.
+    pub fn exponential(max_attempts: usize, base: Duration) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts,
+            base,
+            cap: base.saturating_mul(64),
+            deadline: None,
+            seed: 0x5EED,
+        }
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// The next backoff sleep given the previous one (decorrelated jitter:
+    /// `min(cap, uniform(base, prev * 3))`).
+    fn next_backoff(&self, prev: Duration, rng: &mut Rng) -> Duration {
+        if self.cap <= self.base {
+            return self.base; // fixed-interval degenerate case
+        }
+        let lo = self.base.as_nanos() as f64;
+        let hi = (prev.as_nanos() as f64 * 3.0).max(lo);
+        let draw = rng.range(lo, hi);
+        Duration::from_nanos(draw as u64).min(self.cap)
+    }
 }
 
 impl Default for RetryPolicy {
     fn default() -> Self {
-        RetryPolicy { max_attempts: 8, backoff: Duration::from_millis(1) }
+        RetryPolicy::exponential(8, Duration::from_millis(1))
     }
 }
 
@@ -110,18 +171,38 @@ impl<T: Transport> RpcClient<T> {
     }
 
     fn deliver_with_retry(&self, req: &Request) -> Result<Response> {
+        let t0 = Instant::now();
+        // per-call jitter stream: deterministic given (policy seed, id)
+        let mut rng = Rng::new(self.retry.seed ^ req.id);
+        let mut backoff = self.retry.base;
         let mut last_err = None;
-        for attempt in 0..self.retry.max_attempts {
+        let mut attempts = 0usize;
+        while attempts < self.retry.max_attempts {
+            attempts += 1;
             match self.transport.deliver(req) {
                 Ok(resp) => return Ok(resp),
-                Err(e) => {
-                    last_err = Some(e);
-                    if attempt + 1 < self.retry.max_attempts {
-                        self.stats.lock().unwrap().retries += 1;
-                        std::thread::sleep(self.retry.backoff);
-                    }
+                Err(e) => last_err = Some(e),
+            }
+            if attempts == self.retry.max_attempts {
+                break;
+            }
+            if let Some(deadline) = self.retry.deadline {
+                if t0.elapsed() + backoff >= deadline {
+                    self.stats.lock().unwrap().failures += 1;
+                    bail!(
+                        "rpc '{}' (id {}) undeliverable after {} attempts \
+                         (per-call deadline {:?} exhausted): {:#}",
+                        req.method,
+                        req.id,
+                        attempts,
+                        deadline,
+                        last_err.unwrap()
+                    );
                 }
             }
+            self.stats.lock().unwrap().retries += 1;
+            std::thread::sleep(backoff);
+            backoff = self.retry.next_backoff(backoff, &mut rng);
         }
         self.stats.lock().unwrap().failures += 1;
         bail!(
@@ -169,10 +250,8 @@ mod tests {
         let (server, count) = counting_server();
         let flaky = FlakyTransport::new(InProcTransport::new(server.clone()), 99)
             .with_probs(0.2, 0.4, 0.2);
-        let client = RpcClient::new(flaky).with_retry(RetryPolicy {
-            max_attempts: 64,
-            backoff: Duration::from_micros(10),
-        });
+        let client = RpcClient::new(flaky)
+            .with_retry(RetryPolicy::exponential(64, Duration::from_micros(10)));
         let calls = 50;
         for i in 0..calls {
             let out = client.call("work", vec![i as u8]).unwrap();
@@ -202,12 +281,57 @@ mod tests {
         let (server, _) = counting_server();
         let flaky = FlakyTransport::new(InProcTransport::new(server), 7)
             .with_probs(1.0, 0.0, 0.0);
-        let client = RpcClient::new(flaky).with_retry(RetryPolicy {
-            max_attempts: 3,
-            backoff: Duration::from_micros(1),
-        });
+        let client = RpcClient::new(flaky)
+            .with_retry(RetryPolicy::fixed(3, Duration::from_micros(1)));
         let err = client.call("m", vec![]).unwrap_err().to_string();
         assert!(err.contains("3 attempts"), "{err}");
+    }
+
+    #[test]
+    fn backoff_grows_within_bounds_and_is_deterministic() {
+        let policy = RetryPolicy::exponential(16, Duration::from_micros(100)).with_seed(42);
+        let walk = |policy: &RetryPolicy, seed: u64| -> Vec<Duration> {
+            let mut rng = Rng::new(seed);
+            let mut prev = policy.base;
+            (0..12)
+                .map(|_| {
+                    prev = policy.next_backoff(prev, &mut rng);
+                    prev
+                })
+                .collect()
+        };
+        let a = walk(&policy, 7);
+        let b = walk(&policy, 7);
+        assert_eq!(a, b, "same seed must give the same schedule");
+        let c = walk(&policy, 8);
+        assert_ne!(a, c, "different seeds must decorrelate");
+        for d in &a {
+            assert!(*d >= policy.base && *d <= policy.cap, "{d:?} out of bounds");
+        }
+        // the schedule must actually grow away from the base at some point
+        assert!(a.iter().any(|d| *d > policy.base * 2), "{a:?}");
+        // fixed policies never jitter
+        let fixed = RetryPolicy::fixed(8, Duration::from_micros(50));
+        assert!(walk(&fixed, 9).iter().all(|d| *d == fixed.base));
+    }
+
+    #[test]
+    fn per_call_deadline_cuts_retries_short() {
+        let (server, _) = counting_server();
+        let flaky = FlakyTransport::new(InProcTransport::new(server), 13)
+            .with_probs(1.0, 0.0, 0.0); // nothing ever delivers
+        let client = RpcClient::new(flaky).with_retry(
+            RetryPolicy::fixed(1_000_000, Duration::from_millis(5))
+                .with_deadline(Duration::from_millis(30)),
+        );
+        let t0 = std::time::Instant::now();
+        let err = client.call("m", vec![]).unwrap_err().to_string();
+        assert!(t0.elapsed() < Duration::from_secs(5), "deadline must bound the call");
+        assert!(err.contains("deadline"), "{err}");
+        let stats = client.stats();
+        assert_eq!(stats.calls, 1);
+        assert!(stats.failures >= 1, "deadline exhaustion must count as failure");
+        assert!(stats.retries >= 1 && stats.retries < 100, "{}", stats.retries);
     }
 
     #[test]

@@ -148,14 +148,44 @@ impl Drop for TcpRpcHost {
 }
 
 /// TCP client transport: one persistent connection, re-established on error.
+///
+/// Every socket operation is bounded: `connect_timeout` caps the handshake
+/// and `io_timeout` caps each read/write.  A hung peer therefore surfaces as
+/// a deliver error (which the retry layer turns into a reconnect) instead of
+/// wedging the caller forever.  Defaults are generous — they exist to bound
+/// pathologies, not to race healthy servers.
 pub struct TcpTransport {
     addr: std::net::SocketAddr,
     conn: Mutex<Option<TcpStream>>,
+    connect_timeout: std::time::Duration,
+    io_timeout: std::time::Duration,
 }
 
 impl TcpTransport {
+    pub const DEFAULT_CONNECT_TIMEOUT: std::time::Duration =
+        std::time::Duration::from_millis(10_000);
+    pub const DEFAULT_IO_TIMEOUT: std::time::Duration =
+        std::time::Duration::from_millis(30_000);
+
     pub fn connect(addr: std::net::SocketAddr) -> TcpTransport {
-        TcpTransport { addr, conn: Mutex::new(None) }
+        TcpTransport {
+            addr,
+            conn: Mutex::new(None),
+            connect_timeout: Self::DEFAULT_CONNECT_TIMEOUT,
+            io_timeout: Self::DEFAULT_IO_TIMEOUT,
+        }
+    }
+
+    /// Override both timeouts (config-plumbed from `tcp_connect_timeout_ms`
+    /// / `tcp_io_timeout_ms`).  Zero means "no bound" for that class.
+    pub fn with_timeouts(
+        mut self,
+        connect: std::time::Duration,
+        io: std::time::Duration,
+    ) -> TcpTransport {
+        self.connect_timeout = connect;
+        self.io_timeout = io;
+        self
     }
 }
 
@@ -163,7 +193,17 @@ impl Transport for TcpTransport {
     fn deliver(&self, request: &Request) -> Result<Response> {
         let mut guard = self.conn.lock().unwrap();
         if guard.is_none() {
-            *guard = Some(TcpStream::connect(self.addr).context("connecting")?);
+            let stream = if self.connect_timeout.is_zero() {
+                TcpStream::connect(self.addr).context("connecting")?
+            } else {
+                TcpStream::connect_timeout(&self.addr, self.connect_timeout)
+                    .context("connecting")?
+            };
+            if !self.io_timeout.is_zero() {
+                stream.set_read_timeout(Some(self.io_timeout)).ok();
+                stream.set_write_timeout(Some(self.io_timeout)).ok();
+            }
+            *guard = Some(stream);
         }
         let stream = guard.as_mut().unwrap();
         let result = (|| -> Result<Response> {
@@ -382,6 +422,31 @@ mod tests {
             resp.encode().len() as u64
         );
         assert_eq!(stats.total(), (req.encode().len() + resp.encode().len()) as u64);
+    }
+
+    #[test]
+    fn io_timeout_bounds_a_silent_server() {
+        // A listener that accepts but never replies: the read must time out
+        // instead of blocking forever, and the error forces a reconnect.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let hold = std::thread::spawn(move || {
+            let (_stream, _) = listener.accept().unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(500));
+        });
+        let t = TcpTransport::connect(addr).with_timeouts(
+            std::time::Duration::from_millis(1000),
+            std::time::Duration::from_millis(50),
+        );
+        let t0 = std::time::Instant::now();
+        let r = t.deliver(&Request { id: 1, method: "e".into(), payload: vec![] });
+        assert!(r.is_err(), "silent server must surface as a deliver error");
+        assert!(
+            t0.elapsed() < std::time::Duration::from_millis(450),
+            "read should be cut by the io timeout, took {:?}",
+            t0.elapsed()
+        );
+        hold.join().unwrap();
     }
 
     #[test]

@@ -92,6 +92,10 @@ pub struct GatherFrame {
     pub seq: u64,
     pub rank: u32,
     pub world: u32,
+    /// Rendezvous generation: bumped by the supervisor on every recovery
+    /// respawn so frames from a pre-crash epoch are rejected instead of
+    /// contaminating the restarted job's rounds.
+    pub epoch: u64,
     /// Logical channel ("params", "scalars", …) — checked by the host to
     /// catch collective-order mismatches early.
     pub tag: String,
@@ -104,6 +108,7 @@ impl GatherFrame {
         w.u64(self.seq);
         w.u32(self.rank);
         w.u32(self.world);
+        w.u64(self.epoch);
         w.str(&self.tag);
         w.bytes(&self.payload);
         w.into_bytes()
@@ -115,6 +120,7 @@ impl GatherFrame {
             seq: r.u64()?,
             rank: r.u32()?,
             world: r.u32()?,
+            epoch: r.u64()?,
             tag: r.str()?,
             payload: r.bytes()?.to_vec(),
         };
@@ -128,6 +134,7 @@ impl GatherFrame {
 pub struct PollFrame {
     pub seq: u64,
     pub rank: u32,
+    pub epoch: u64,
 }
 
 impl PollFrame {
@@ -135,14 +142,75 @@ impl PollFrame {
         let mut w = Writer::new();
         w.u64(self.seq);
         w.u32(self.rank);
+        w.u64(self.epoch);
         w.into_bytes()
     }
 
     pub fn decode(bytes: &[u8]) -> Result<PollFrame> {
         let mut r = Reader::new(bytes);
-        let f = PollFrame { seq: r.u64()?, rank: r.u32()? };
+        let f = PollFrame { seq: r.u64()?, rank: r.u32()?, epoch: r.u64()? };
         r.expect_end()?;
         Ok(f)
+    }
+}
+
+/// A worker's heartbeat (or liveness probe) to the rendezvous host:
+/// "rank R of generation E is alive".  The same frame doubles as the
+/// payload of `collective.alive` probes, which read the lease table
+/// without renewing any lease.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HeartbeatFrame {
+    pub rank: u32,
+    pub epoch: u64,
+}
+
+impl HeartbeatFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u32(self.rank);
+        w.u64(self.epoch);
+        w.into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<HeartbeatFrame> {
+        let mut r = Reader::new(bytes);
+        let f = HeartbeatFrame { rank: r.u32()?, epoch: r.u64()? };
+        r.expect_end()?;
+        Ok(f)
+    }
+}
+
+/// The rendezvous host's view of group liveness, returned to heartbeats
+/// and `collective.alive` probes: the first rank whose lease expired, if
+/// any.  Latched — once a rank is declared dead the verdict never reverts,
+/// so every prober observes the same casualty.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LivenessReply {
+    pub dead: Option<u32>,
+}
+
+impl LivenessReply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self.dead {
+            None => w.u8(0),
+            Some(rank) => {
+                w.u8(1);
+                w.u32(rank);
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<LivenessReply> {
+        let mut r = Reader::new(bytes);
+        let reply = match r.u8()? {
+            0 => LivenessReply { dead: None },
+            1 => LivenessReply { dead: Some(r.u32()?) },
+            t => bail!("bad liveness-reply tag {t}"),
+        };
+        r.expect_end()?;
+        Ok(reply)
     }
 }
 
@@ -305,11 +373,12 @@ mod tests {
             seq: 9,
             rank: 2,
             world: 4,
+            epoch: 3,
             tag: "params".into(),
             payload: vec![1, 2, 3, 4, 5],
         };
         assert_eq!(GatherFrame::decode(&f.encode()).unwrap(), f);
-        let p = PollFrame { seq: 9, rank: 2 };
+        let p = PollFrame { seq: 9, rank: 2, epoch: 3 };
         assert_eq!(PollFrame::decode(&p.encode()).unwrap(), p);
         for reply in [
             GatherReply::Pending,
@@ -318,6 +387,18 @@ mod tests {
             assert_eq!(GatherReply::decode(&reply.encode()).unwrap(), reply);
         }
         assert!(GatherReply::decode(&[9]).is_err());
+    }
+
+    #[test]
+    fn heartbeat_frames_roundtrip() {
+        let h = HeartbeatFrame { rank: 3, epoch: 2 };
+        assert_eq!(HeartbeatFrame::decode(&h.encode()).unwrap(), h);
+        for reply in [LivenessReply { dead: None }, LivenessReply { dead: Some(1) }] {
+            assert_eq!(LivenessReply::decode(&reply.encode()).unwrap(), reply);
+        }
+        assert!(LivenessReply::decode(&[7]).is_err());
+        let enc = h.encode();
+        assert!(HeartbeatFrame::decode(&enc[..enc.len() - 1]).is_err());
     }
 
     #[test]

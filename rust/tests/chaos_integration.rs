@@ -1,0 +1,266 @@
+//! Chaos integration: injected rank crashes (`GCORE_CHAOS=kill:rank=R,step=S`)
+//! against the elastic `train-dist` supervisor.  The acceptance bar for the
+//! fault-tolerance layer: a killed-and-restarted job must produce a final
+//! checkpoint **bit-identical** to an uninterrupted run of the same config —
+//! on the rendezvous (tcp) AND ring collectives — and a job without a
+//! recover policy must fail fast with the worker's typed exit reason, not
+//! stall toward the 300 s round timeout.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::Arc;
+use std::time::Instant;
+
+use gcore::config::{CollectiveMode, RecoverPolicy, RunConfig};
+use gcore::runtime::Engine;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join("gcore_chaos_tests")
+        .join(format!("{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Loads the tiny artifact set.  PANICS when the set is missing: the
+/// fixture set is checked in (rust/tests/fixtures/artifacts/tiny) and the
+/// interpreter backend is always available, so there is no legitimate
+/// skip reason left — the tier fails loudly if either regresses.
+fn try_engine() -> Arc<Engine> {
+    match Engine::try_load("tiny") {
+        Some(e) => Arc::new(e),
+        None => panic!(
+            "tiny artifact set not found — regenerate the checked-in \
+             fixtures with `python -m compile.fixturegen`"
+        ),
+    }
+}
+
+/// A small but checkpoint-carrying distributed run: 2 ranks, 4 RLHF steps,
+/// a shard snapshot every 2 steps, fast heartbeats.  The chaos kill at
+/// step 3 lands BETWEEN the step-2 and step-4 checkpoints, so restart
+/// recovery must replay steps 2..4 from the step-2 shards.
+fn base_cfg(collective: &str, ckpt: &Path) -> RunConfig {
+    RunConfig {
+        artifacts: "tiny".into(),
+        world: 2,
+        steps: 4,
+        sft_steps: 2,
+        group_size: 4,
+        seed: 23,
+        collective: CollectiveMode::parse(collective).unwrap(),
+        ring_chunk_bytes: 64, // force multi-chunk gradient streams on ring
+        checkpoint_dir: Some(ckpt.to_string_lossy().into_owned()),
+        checkpoint_every: 2,
+        heartbeat_interval_ms: 25,
+        lease_ttl_ms: 500,
+        max_restarts: 2,
+        ..RunConfig::default()
+    }
+}
+
+/// Run `gcore train-dist --config <cfg>` as a real OS process tree,
+/// optionally with a one-shot chaos kill injected through the environment.
+fn run_dist(cfg: &RunConfig, dir: &Path, chaos: Option<&str>) -> std::process::Output {
+    let cfg_path = dir.join("run.json");
+    std::fs::write(&cfg_path, cfg.to_json().to_string()).unwrap();
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_gcore"));
+    cmd.arg("train-dist").arg("--config").arg(&cfg_path);
+    // never inherit a kill spec from the surrounding environment
+    cmd.env_remove("GCORE_CHAOS");
+    if let Some(spec) = chaos {
+        cmd.env("GCORE_CHAOS", spec);
+    }
+    cmd.output().unwrap()
+}
+
+fn shard_bytes(ckpt: &Path, step: u64, rank: usize) -> Vec<u8> {
+    let p = ckpt.join(format!("step_{step:010}")).join(format!("shard_{rank}.bin"));
+    std::fs::read(&p).unwrap_or_else(|e| panic!("missing checkpoint shard {p:?}: {e}"))
+}
+
+fn expect_success(out: &std::process::Output, what: &str) {
+    assert!(
+        out.status.success(),
+        "{what} failed ({})\nstdout:\n{}\nstderr:\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+/// Kill rank 1 before RLHF step 3, restart-recover, and demand the final
+/// checkpoint match an uninterrupted run byte for byte — params, Adam
+/// moments, reference policy, and both RNG stream positions.
+fn chaos_restart_bit_identical(collective: &str) {
+    let _e = try_engine();
+    let base = tmpdir(&format!("restart_{collective}"));
+    let ckpt_ref = base.join("ref_ckpt");
+    let ckpt_chaos = base.join("chaos_ckpt");
+
+    let cfg_ref = base_cfg(collective, &ckpt_ref);
+    expect_success(&run_dist(&cfg_ref, &base, None), "uninterrupted train-dist");
+
+    let mut cfg_chaos = base_cfg(collective, &ckpt_chaos);
+    cfg_chaos.recover = RecoverPolicy::Restart;
+    let out = run_dist(&cfg_chaos, &base, Some("kill:rank=1,step=3"));
+    expect_success(&out, "chaos train-dist with --recover restart");
+
+    // the kill really fired and recovery really resumed from step 2
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("recovering via restart"),
+        "no recovery happened — chaos kill did not fire?\n{stdout}"
+    );
+    assert!(
+        stdout.contains("checkpoint step 2"),
+        "recovery did not resume from the step-2 checkpoint\n{stdout}"
+    );
+
+    // bit-identical final state on every rank
+    for rank in 0..cfg_ref.world {
+        assert_eq!(
+            shard_bytes(&ckpt_ref, 4, rank),
+            shard_bytes(&ckpt_chaos, 4, rank),
+            "{collective}: rank {rank} final shard diverged after crash-restart"
+        );
+    }
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn chaos_kill_restart_recovers_bit_identical_tcp() {
+    chaos_restart_bit_identical("tcp");
+}
+
+#[test]
+fn chaos_kill_restart_recovers_bit_identical_ring() {
+    chaos_restart_bit_identical("ring");
+}
+
+#[test]
+fn chaos_without_recover_fails_fast_with_worker_reason() {
+    // no recover policy: the job must die promptly with the failed worker
+    // named — far under the 300 s collective round timeout the survivors
+    // would otherwise sit in.
+    let _e = try_engine();
+    let base = tmpdir("norecover");
+    let mut cfg = base_cfg("tcp", &base.join("ckpt"));
+    cfg.checkpoint_dir = None;
+    cfg.checkpoint_every = 0;
+
+    let t0 = Instant::now();
+    let out = run_dist(&cfg, &base, Some("kill:rank=1,step=1"));
+    let elapsed = t0.elapsed();
+    assert!(!out.status.success(), "a killed rank must fail the job");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("worker 1 failed"),
+        "supervisor must name the dead rank\nstderr:\n{stderr}"
+    );
+    assert!(
+        elapsed.as_secs() < 120,
+        "fail-fast took {elapsed:?} — survivors stalled instead of aborting"
+    );
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn chaos_shrink_renegotiates_world_down() {
+    // --recover shrink: after the kill the job re-rendezvouses at world 1
+    // (the largest proper divisor of 2) from the last complete checkpoint
+    // and runs to completion.
+    let _e = try_engine();
+    let base = tmpdir("shrink");
+    let ckpt = base.join("ckpt");
+    let mut cfg = base_cfg("tcp", &ckpt);
+    cfg.recover = RecoverPolicy::Shrink;
+    let out = run_dist(&cfg, &base, Some("kill:rank=1,step=3"));
+    expect_success(&out, "chaos train-dist with --recover shrink");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("shrinking world 2 -> 1"),
+        "shrink policy did not renegotiate the world\n{stdout}"
+    );
+    // the surviving world finished training and landed its final shard
+    let _ = shard_bytes(&ckpt, 4, 0);
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn thread_mode_resume_replays_bit_identical() {
+    // the same resume path without process spawning: train 4 steps with
+    // checkpoints, then resume a FRESH launch from the step-2 shards and
+    // demand the replayed half reproduce the original trajectory exactly.
+    let _e = try_engine();
+    let base = tmpdir("thread_resume");
+    let ckpt_a = base.join("a");
+    let ckpt_b = base.join("b");
+
+    let cfg_a = RunConfig {
+        artifacts: "tiny".into(),
+        world: 2,
+        steps: 4,
+        sft_steps: 2,
+        group_size: 4,
+        seed: 23,
+        checkpoint_dir: Some(ckpt_a.to_string_lossy().into_owned()),
+        checkpoint_every: 2,
+        ..RunConfig::default()
+    };
+    let full = gcore::launch::run_training(&cfg_a).unwrap();
+
+    // hand the resumed run ONLY the step-2 checkpoint
+    let step2 = "step_0000000002";
+    std::fs::create_dir_all(ckpt_b.join(step2)).unwrap();
+    for f in ["meta.json", "shard_0.bin", "shard_1.bin"] {
+        std::fs::copy(ckpt_a.join(step2).join(f), ckpt_b.join(step2).join(f)).unwrap();
+    }
+    let cfg_b = RunConfig {
+        checkpoint_dir: Some(ckpt_b.to_string_lossy().into_owned()),
+        resume_step: Some(2),
+        ..cfg_a.clone()
+    };
+    let resumed = gcore::launch::run_training(&cfg_b).unwrap();
+
+    // the replayed steps 2..4 must match the uninterrupted trajectory ULP
+    // for ULP, and so must the final evaluation
+    assert_eq!(resumed.steps.len(), 2, "resume must replay exactly steps 2..4");
+    for s in &resumed.steps {
+        let orig = full
+            .steps
+            .iter()
+            .find(|o| o.step == s.step)
+            .unwrap_or_else(|| panic!("step {} missing from the full run", s.step));
+        assert_eq!(
+            orig.loss.to_bits(),
+            s.loss.to_bits(),
+            "step {} loss diverged on resume: {} vs {}",
+            s.step,
+            orig.loss,
+            s.loss
+        );
+        assert_eq!(orig.kl.to_bits(), s.kl.to_bits(), "step {} kl", s.step);
+        assert_eq!(
+            orig.mean_reward.to_bits(),
+            s.mean_reward.to_bits(),
+            "step {} reward",
+            s.step
+        );
+    }
+    assert_eq!(
+        full.eval_after.to_bits(),
+        resumed.eval_after.to_bits(),
+        "final evaluation diverged on resume"
+    );
+    // and the step-4 checkpoints are byte-identical shard for shard
+    for rank in 0..2 {
+        assert_eq!(
+            shard_bytes(&ckpt_a, 4, rank),
+            shard_bytes(&ckpt_b, 4, rank),
+            "rank {rank} final shard diverged on thread-mode resume"
+        );
+    }
+    std::fs::remove_dir_all(&base).ok();
+}

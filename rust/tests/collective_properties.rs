@@ -5,13 +5,15 @@
 //! retry-until-cached protocol (§4.2) applied to collectives (§3.1).
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use gcore::coordinator::collective::{Collective, CollectiveBackend};
 use gcore::coordinator::ring_collective::{RingCollective, RingInbox, RingPeer};
-use gcore::coordinator::rpc_collective::{RendezvousHost, RpcCollective};
+use gcore::coordinator::rpc_collective::{
+    CollectiveStatus, Heartbeat, RendezvousHost, RpcCollective,
+};
 use gcore::prop_assert;
-use gcore::rpc::client::RetryPolicy;
+use gcore::rpc::client::{RetryPolicy, RpcClient};
 use gcore::rpc::transport::{FlakyTransport, InProcTransport, TcpRpcHost, TcpTransport};
 use gcore::runtime::{ParamSet, Tensor};
 use gcore::util::prop;
@@ -94,10 +96,7 @@ fn rpc_collective_bitwise_matches_inproc_under_faults() {
                 )
                 .with_probs(0.15, 0.25, 0.15);
                 let backend = RpcCollective::new(flaky, world)
-                    .with_retry(RetryPolicy {
-                        max_attempts: 256,
-                        backoff: Duration::from_micros(10),
-                    })
+                    .with_retry(RetryPolicy::exponential(256, Duration::from_micros(10)))
                     .with_round_timeout(Duration::from_secs(60));
                 Collective::with_backend(Arc::new(backend))
             })
@@ -290,10 +289,7 @@ fn bucketed_allreduce_bitwise_matches_monolithic_across_backends() {
                 .with_probs(0.1, 0.2, 0.1);
                 Collective::with_backend(Arc::new(
                     RpcCollective::new(flaky, world)
-                        .with_retry(RetryPolicy {
-                            max_attempts: 256,
-                            backoff: Duration::from_micros(10),
-                        })
+                        .with_retry(RetryPolicy::exponential(256, Duration::from_micros(10)))
                         .with_round_timeout(Duration::from_secs(60)),
                 ))
             })
@@ -358,10 +354,8 @@ fn broadcast_bytes_survives_faults_on_every_backend() {
                 FlakyTransport::new(InProcTransport::new(server.clone()), 0xB0 + rank as u64)
                     .with_probs(0.15, 0.25, 0.15);
             Collective::with_backend(Arc::new(
-                RpcCollective::new(flaky, world).with_retry(RetryPolicy {
-                    max_attempts: 256,
-                    backoff: Duration::from_micros(10),
-                }),
+                RpcCollective::new(flaky, world)
+                    .with_retry(RetryPolicy::exponential(256, Duration::from_micros(10))),
             ))
         })
         .collect();
@@ -438,10 +432,8 @@ fn faults_are_actually_injected_and_absorbed() {
     let collectives: Vec<Arc<Collective>> = transports
         .iter()
         .map(|t| {
-            let backend = RpcCollective::new(t.clone(), world).with_retry(RetryPolicy {
-                max_attempts: 512,
-                backoff: Duration::from_micros(10),
-            });
+            let backend = RpcCollective::new(t.clone(), world)
+                .with_retry(RetryPolicy::exponential(512, Duration::from_micros(10)));
             Collective::with_backend(Arc::new(backend))
         })
         .collect();
@@ -505,6 +497,120 @@ fn full_collective_surface_over_real_tcp_matches_inproc() {
         assert_eq!(ta, tb, "rank {rank} tokens diverged");
     }
     drop(host);
+}
+
+/// A lease-armed rendezvous server plus one fault-injected heartbeat per
+/// rank (interval ≪ TTL).  The tight retry policy keeps a lossy renewal
+/// well inside one TTL, so drops must never read as death.
+fn lease_server_with_beats(
+    world: usize,
+    ttl: Duration,
+    seed: u64,
+) -> (Arc<gcore::rpc::server::RpcServer<RendezvousHost>>, Vec<Heartbeat>) {
+    let server = Arc::new(gcore::rpc::server::RpcServer::new(
+        RendezvousHost::new(world).with_lease_ttl(ttl),
+    ));
+    let beats = (0..world)
+        .map(|rank| {
+            let flaky = FlakyTransport::new(
+                InProcTransport::new(server.clone()),
+                seed ^ (0x8EA7 + rank as u64),
+            )
+            .with_probs(0.2, 0.25, 0.2);
+            Heartbeat::start(
+                RpcClient::new(flaky)
+                    .with_retry(RetryPolicy::exponential(64, Duration::from_micros(50))),
+                rank as u32,
+                0,
+                Duration::from_millis(10),
+            )
+        })
+        .collect();
+    (server, beats)
+}
+
+#[test]
+fn heartbeats_through_faults_never_read_as_death_below_ttl() {
+    // No false positives: as long as every rank keeps beating — even
+    // through a transport dropping ~40% of deliveries — no lease may
+    // lapse, across several full TTL windows.
+    prop::check_n("lease-no-false-death", 6, |rng| {
+        let world = 2 + rng.below(2); // 2..=3 ranks
+        let ttl = Duration::from_millis(150 + 10 * rng.below(10) as u64);
+        let seed = rng.next_u64();
+        let (server, beats) = lease_server_with_beats(world, ttl, seed);
+        std::thread::sleep(ttl * 3);
+        prop_assert!(
+            server.service().dead_rank().is_none(),
+            "a live, beating rank was declared dead below the TTL"
+        );
+        // and the group still completes a faultless collective round
+        let cols: Vec<Arc<Collective>> = (0..world)
+            .map(|_| {
+                Collective::with_backend(Arc::new(RpcCollective::new(
+                    InProcTransport::new(server.clone()),
+                    world,
+                )))
+            })
+            .collect();
+        drive(cols, vec![8], 1, seed)?;
+        drop(beats);
+        Ok(())
+    });
+}
+
+#[test]
+fn lease_expiry_fans_out_promptly_as_typed_peer_dead() {
+    // One rank goes silent; every survivor blocked in a collective round
+    // must get a typed PeerDead well under the 300 s round timeout — in
+    // TTL-scale time — even with faults on the survivors' transports.
+    prop::check_n("lease-prompt-peer-dead", 5, |rng| {
+        let world = 2 + rng.below(2); // 2..=3 ranks
+        let ttl = Duration::from_millis(80 + 10 * rng.below(8) as u64);
+        let seed = rng.next_u64();
+        let (server, mut beats) = lease_server_with_beats(world, ttl, seed);
+
+        // the crash: the last rank's heartbeat thread stops (Drop joins it)
+        let victim = world - 1;
+        std::thread::sleep(Duration::from_millis(20));
+        drop(beats.pop());
+
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..world - 1)
+            .map(|rank| {
+                let server = server.clone();
+                std::thread::spawn(move || {
+                    let flaky = FlakyTransport::new(
+                        InProcTransport::new(server),
+                        seed ^ (0xDEAD + rank as u64),
+                    )
+                    .with_probs(0.15, 0.2, 0.15);
+                    let col = RpcCollective::new(flaky, world)
+                        .with_retry(RetryPolicy::exponential(256, Duration::from_micros(10)))
+                        .with_round_timeout(Duration::from_secs(60));
+                    col.exchange(rank, "doomed", vec![rank as u8])
+                })
+            })
+            .collect();
+        for h in handles {
+            let err = match h.join().unwrap() {
+                Ok(_) => return Err("round completed without the victim".to_string()),
+                Err(e) => e,
+            };
+            let status = CollectiveStatus::classify_error(&err);
+            prop_assert!(
+                matches!(status, Some(CollectiveStatus::PeerDead { rank }) if rank == victim as u32),
+                "survivor failed without a typed PeerDead({victim}): {err:#}"
+            );
+        }
+        let elapsed = t0.elapsed();
+        prop_assert!(
+            elapsed < ttl * 20 + Duration::from_secs(5),
+            "fanout took {elapsed:?} for a {ttl:?} lease — not TTL-scale"
+        );
+        drop(beats);
+        Ok(())
+    });
 }
 
 #[test]

@@ -80,6 +80,9 @@ fn checkpoint_resume_continues_training() {
             ("reference".into(), c.ref_params.clone()),
         ],
         rng_seed: cfg.seed,
+        opt_step: c.state.step,
+        controller_rng: Some(c.rng.state()),
+        taskgen_rng: Some(c.taskgen.rng_state()),
     };
     mgr.save_shard(1, &meta, &shard).unwrap();
 
@@ -118,10 +121,8 @@ fn tcp_rpc_exactly_once_under_faults() {
     let host = TcpRpcHost::spawn(server.clone()).unwrap();
     let flaky = FlakyTransport::new(TcpTransport::connect(host.addr), 42)
         .with_probs(0.15, 0.25, 0.1);
-    let client = RpcClient::new(flaky).with_retry(RetryPolicy {
-        max_attempts: 64,
-        backoff: Duration::from_micros(50),
-    });
+    let client = RpcClient::new(flaky)
+        .with_retry(RetryPolicy::exponential(64, Duration::from_micros(50)));
     let calls = 60u64;
     for i in 0..calls {
         let out = client.call("work", i.to_le_bytes().to_vec()).unwrap();
