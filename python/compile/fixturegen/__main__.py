@@ -55,8 +55,12 @@ def main():
 
         gold_dir = os.path.join(out, "goldens", cfg.name)
         os.makedirs(gold_dir, exist_ok=True)
+        # generate_rollout has no jax reference (jax PRNG lowers to a
+        # custom-call); it is pinned by the stepwise differential in
+        # validate.py and the Rust fused-vs-stepwise bit-identity test.
         wanted = (TINY_GOLDENS if cfg.name == "tiny"
-                  else [name for name, _, _, _ in arts])
+                  else [name for name, _, _, _ in arts
+                        if name != "generate_rollout"])
         n = 0
         for name, text, ins, _ in arts:
             if name not in wanted:

@@ -32,6 +32,16 @@ def sh(dtype, *dims):
     return Shape(dtype, tuple(int(d) for d in dims))
 
 
+@dataclass(frozen=True)
+class TupleShape:
+    """Shape of a tuple-valued instruction (`while` results)."""
+
+    parts: tuple  # of Shape
+
+    def text(self) -> str:
+        return "(" + ", ".join(p.text() for p in self.parts) + ")"
+
+
 @dataclass
 class Node:
     op: str
@@ -125,6 +135,12 @@ class Graph:
     def shr(self, a, b):
         return self._ew2("shift-right-logical", a, b)
 
+    def and_(self, a, b):
+        return self._ew2("and", a, b)
+
+    def or_(self, a, b):
+        return self._ew2("or", a, b)
+
     def _ew1(self, op, a):
         return self._push(op, [a], self.nodes[a].shape)
 
@@ -216,6 +232,63 @@ class Graph:
     def reduce_max(self, a, dims):
         return self._reduce("reduce_max", a, list(dims))
 
+    def reduce_min(self, a, dims):
+        assert self.dtype(a) == "s32", "reduce_min emitted for s32 only"
+        return self._reduce("reduce_min", a, list(dims))
+
+    def sort(self, a, dim):
+        """Descending sort along `dim` (GT comparator, f32 only)."""
+        assert self.dtype(a) == "f32"
+        assert 0 <= dim < len(self.dims(a))
+        return self._push("sort", [a], self.nodes[a].shape, dim=dim)
+
+    def rng_bits(self, state, dims):
+        """Counter-based PRNG: u32 bits keyed off a scalar u32 state.
+
+        bits[j] = hash_u32(state + j) over the row-major linear index j,
+        matching the fixture `_hash`/lowbias32 scheme. The state operand is
+        a plain scalar; callers advance it in-graph with `add`.
+        """
+        assert self.dtype(state) == "u32" and self.dims(state) == ()
+        return self._push("rng-bit-generator", [state], sh("u32", *dims))
+
+    def rng_uniform(self, a, b, dims):
+        """Old-style `rng` op, uniform distribution (deterministic counter)."""
+        assert self.dims(a) == () == self.dims(b)
+        assert self.dtype(a) == "f32" == self.dtype(b)
+        return self._push("rng", [a, b], sh("f32", *dims))
+
+    def scatter_add(self, operand, indices, updates, uwd, iwd, sdod, ivd):
+        """Scatter with an add update computation (jax embedding-grad form)."""
+        assert self.dtype(operand) == "f32" == self.dtype(updates)
+        assert self.dtype(indices) == "s32"
+        return self._push("scatter", [operand, indices, updates],
+                          self.nodes[operand].shape,
+                          uwd=list(uwd), iwd=list(iwd), sdod=list(sdod),
+                          ivd=int(ivd))
+
+    def while_(self, operands, cond, cond_root, body, body_outs, label):
+        """Loop-carried flattened state: N operands, cond/body take N params.
+
+        `cond`/`body` are separate Graphs whose parameters mirror the operand
+        shapes 1:1; the body returns the next state as `body_outs` (emitted as
+        a ROOT tuple), the cond returns a scalar pred at `cond_root`.
+        """
+        parts = tuple(self.nodes[o].shape for o in operands)
+        assert cond.n_params == len(operands), "while: cond param count"
+        assert body.n_params == len(operands), "while: body param count"
+        body_parts = tuple(body.nodes[o].shape for o in body_outs)
+        assert parts == body_parts, "while: body output shapes must match state"
+        assert cond.nodes[cond_root].shape == sh("pred"), "while: cond root pred[]"
+        return self._push("while", list(operands), TupleShape(parts),
+                          cond=(cond, cond_root), body=(body, list(body_outs)),
+                          label=str(label))
+
+    def gte(self, a, k):
+        shp = self.nodes[a].shape
+        assert isinstance(shp, TupleShape)
+        return self._push("get-tuple-element", [a], shp.parts[k], index=int(k))
+
     def dot_general(self, lhs, rhs, lb, rb, lc, rc):
         ld, rd = self.dims(lhs), self.dims(rhs)
         for a, b in zip(lc, rc):
@@ -243,7 +316,7 @@ class Graph:
 
     # -- emission -----------------------------------------------------------
 
-    def emit_hlo(self, module_name, outputs):
+    def _liveness(self, outputs):
         live = [False] * len(self.nodes)
         stack = list(outputs)
         while stack:
@@ -255,79 +328,131 @@ class Graph:
         for i, n in enumerate(self.nodes):
             if n.op == "parameter":
                 live[i] = True
+        return live
 
-        uses_add = any(live[i] and n.op == "reduce_add"
-                       for i, n in enumerate(self.nodes))
-        uses_max = any(live[i] and n.op == "reduce_max"
-                       for i, n in enumerate(self.nodes))
+    def _collect_helpers(self, live, acc):
+        for i, n in enumerate(self.nodes):
+            if not live[i]:
+                continue
+            if n.op in ("reduce_add", "reduce_max"):
+                acc.add(n.op)
+            elif n.op == "reduce_min":
+                acc.add("reduce_min_s32")
+            elif n.op == "sort":
+                acc.add("sort_gt_f32")
+            elif n.op == "scatter":
+                acc.add("scatter_add_f32")
+
+    def emit_hlo(self, module_name, outputs):
+        live = self._liveness(outputs)
+        subs = []  # (name, graph, outputs, value-prefix, tuple_root)
+        for i, n in enumerate(self.nodes):
+            if live[i] and n.op == "while":
+                lbl = n.attrs["label"]
+                cg, croot = n.attrs["cond"]
+                bg, bouts = n.attrs["body"]
+                assert not any(m.op == "while" for m in cg.nodes + bg.nodes), \
+                    "nested while is not supported"
+                subs.append((f"{lbl}_cond", cg, [croot], "c", False))
+                subs.append((f"{lbl}_body", bg, list(bouts), "w", True))
+
+        helpers = set()
+        self._collect_helpers(live, helpers)
+        sub_lives = []
+        for _, g, souts, _, _ in subs:
+            sl = g._liveness(souts)
+            g._collect_helpers(sl, helpers)
+            sub_lives.append(sl)
 
         out = [f"HloModule {module_name}"]
-        if uses_add:
-            out.append("""
-%reduce_add (ra_lhs: f32[], ra_rhs: f32[]) -> f32[] {
-  %ra_lhs = f32[] parameter(0)
-  %ra_rhs = f32[] parameter(1)
-  ROOT %ra_out = f32[] add(f32[] %ra_lhs, f32[] %ra_rhs)
-}""")
-        if uses_max:
-            out.append("""
-%reduce_max (rm_lhs: f32[], rm_rhs: f32[]) -> f32[] {
-  %rm_lhs = f32[] parameter(0)
-  %rm_rhs = f32[] parameter(1)
-  ROOT %rm_out = f32[] maximum(f32[] %rm_lhs, f32[] %rm_rhs)
-}""")
+        for key, block in _HELPER_BLOCKS:
+            if key in helpers:
+                out.append(block)
+        for (name, g, souts, vp, tup), sl in zip(subs, sub_lives):
+            out.append(g._computation_text(name, souts, vp, tup, sl))
+        out.append(self._entry_text(outputs, live))
+        return "\n".join(out) + "\n"
 
+    def _param_sig(self):
         params = sorted(
             (n.attrs["index"], i) for i, n in enumerate(self.nodes)
             if n.op == "parameter")
-        sig = ", ".join(f"p{idx}: {self.nodes[i].shape.text()}"
-                        for idx, i in params)
+        return ", ".join(f"p{idx}: {self.nodes[i].shape.text()}"
+                         for idx, i in params)
+
+    def _entry_text(self, outputs, live):
         out_sig = ", ".join(self.nodes[o].shape.text() for o in outputs)
-        out.append(f"\nENTRY %entry ({sig}) -> ({out_sig}) {{")
+        lines = [f"\nENTRY %entry ({self._param_sig()}) -> ({out_sig}) {{"]
         for i, n in enumerate(self.nodes):
             if live[i]:
-                out.append("  " + self._instr_text(i, n))
+                lines.append("  " + self._instr_text(i, n, "v"))
         tuple_ops = ", ".join(f"{self.nodes[o].shape.text()} %v{o}"
                               for o in outputs)
-        out.append(f"  ROOT %result = ({out_sig}) tuple({tuple_ops})")
-        out.append("}")
-        return "\n".join(out) + "\n"
+        lines.append(f"  ROOT %result = ({out_sig}) tuple({tuple_ops})")
+        lines.append("}")
+        return "\n".join(lines)
 
-    def _opn(self, i):
-        return f"{self.nodes[i].shape.text()} %v{i}"
+    def _computation_text(self, name, outputs, vp, tuple_root, live):
+        if tuple_root:
+            ret = "(" + ", ".join(self.nodes[o].shape.text()
+                                  for o in outputs) + ")"
+        else:
+            assert len(outputs) == 1
+            assert not self.nodes[outputs[0]].op.startswith("reduce_"), \
+                "non-tuple computation root must be a single-line instruction"
+            ret = self.nodes[outputs[0]].shape.text()
+        lines = [f"\n%{name} ({self._param_sig()}) -> {ret} {{"]
+        for i, n in enumerate(self.nodes):
+            if live[i]:
+                prefix = "ROOT " if (not tuple_root and i == outputs[0]) else ""
+                lines.append("  " + prefix + self._instr_text(i, n, vp))
+        if tuple_root:
+            tuple_ops = ", ".join(f"{self.nodes[o].shape.text()} %{vp}{o}"
+                                  for o in outputs)
+            lines.append(f"  ROOT %{vp}root = {ret} tuple({tuple_ops})")
+        lines.append("}")
+        return "\n".join(lines)
 
-    def _instr_text(self, i, n):
+    def _opn(self, i, vp="v"):
+        return f"{self.nodes[i].shape.text()} %{vp}{i}"
+
+    def _instr_text(self, i, n, vp):
         s = n.shape.text()
-        ops = ", ".join(self._opn(o) for o in n.operands)
+        ops = ", ".join(self._opn(o, vp) for o in n.operands)
         dl = lambda d: ",".join(str(x) for x in d)  # noqa: E731
         op = n.op
         if op == "parameter":
-            return f"%v{i} = {s} parameter({n.attrs['index']})"
+            return f"%{vp}{i} = {s} parameter({n.attrs['index']})"
         if op == "constant":
             v = n.attrs["value"]
             lit = _f32_lit(v) if n.shape.dtype == "f32" else str(v)
-            return f"%v{i} = {s} constant({lit})"
+            return f"%{vp}{i} = {s} constant({lit})"
         if op == "compare":
-            return f"%v{i} = {s} compare({ops}), direction={n.attrs['direction']}"
+            return f"%{vp}{i} = {s} compare({ops}), direction={n.attrs['direction']}"
         if op == "broadcast":
-            return f"%v{i} = {s} broadcast({ops}), dimensions={{{dl(n.attrs['dims'])}}}"
+            return f"%{vp}{i} = {s} broadcast({ops}), dimensions={{{dl(n.attrs['dims'])}}}"
         if op == "transpose":
-            return f"%v{i} = {s} transpose({ops}), dimensions={{{dl(n.attrs['perm'])}}}"
+            return f"%{vp}{i} = {s} transpose({ops}), dimensions={{{dl(n.attrs['perm'])}}}"
         if op == "slice":
             spec = ", ".join(f"[{a}:{b}]" for a, b in n.attrs["spec"])
-            return f"%v{i} = {s} slice({ops}), slice={{{spec}}}"
+            return f"%{vp}{i} = {s} slice({ops}), slice={{{spec}}}"
         if op == "concatenate":
-            return f"%v{i} = {s} concatenate({ops}), dimensions={{{n.attrs['dim']}}}"
+            return f"%{vp}{i} = {s} concatenate({ops}), dimensions={{{n.attrs['dim']}}}"
         if op == "pad":
             spec = "x".join(f"{lo}_{hi}" for lo, hi in
                             zip(n.attrs["low"], n.attrs["high"]))
-            return f"%v{i} = {s} pad({ops}), padding={spec}"
-        if op in ("reduce_add", "reduce_max"):
-            init = "0" if op == "reduce_add" else "-inf"
-            body = op
-            src = self._opn(n.operands[0])
-            return (f"%vc{i} = f32[] constant({init})\n"
-                    f"  %v{i} = {s} reduce({src}, f32[] %vc{i}), "
+            return f"%{vp}{i} = {s} pad({ops}), padding={spec}"
+        if op in ("reduce_add", "reduce_max", "reduce_min"):
+            dt = n.shape.dtype
+            if op == "reduce_add":
+                init, body = "0", "reduce_add"
+            elif op == "reduce_max":
+                init, body = "-inf", "reduce_max"
+            else:
+                init, body = "2147483647", "reduce_min_s32"
+            src = self._opn(n.operands[0], vp)
+            return (f"%{vp}c{i} = {dt}[] constant({init})\n"
+                    f"  %{vp}{i} = {s} reduce({src}, {dt}[] %{vp}c{i}), "
                     f"dimensions={{{dl(n.attrs['dims'])}}}, to_apply=%{body}")
         if op == "dot":
             attrs = []
@@ -336,10 +461,64 @@ class Graph:
                 attrs.append(f"rhs_batch_dims={{{dl(n.attrs['rb'])}}}")
             attrs.append(f"lhs_contracting_dims={{{dl(n.attrs['lc'])}}}")
             attrs.append(f"rhs_contracting_dims={{{dl(n.attrs['rc'])}}}")
-            return f"%v{i} = {s} dot({ops}), {', '.join(attrs)}"
+            return f"%{vp}{i} = {s} dot({ops}), {', '.join(attrs)}"
         if op == "iota":
-            return f"%v{i} = {s} iota(), iota_dimension={n.attrs['dim']}"
+            return f"%{vp}{i} = {s} iota(), iota_dimension={n.attrs['dim']}"
         if op == "dynamic-slice":
-            return (f"%v{i} = {s} dynamic-slice({ops}), "
+            return (f"%{vp}{i} = {s} dynamic-slice({ops}), "
                     f"dynamic_slice_sizes={{{dl(n.attrs['sizes'])}}}")
-        return f"%v{i} = {s} {op}({ops})"
+        if op == "sort":
+            return (f"%{vp}{i} = {s} sort({ops}), "
+                    f"dimensions={{{n.attrs['dim']}}}, to_apply=%sort_gt_f32")
+        if op == "rng-bit-generator":
+            return f"%{vp}{i} = {s} rng-bit-generator({ops}), algorithm=rng_default"
+        if op == "rng":
+            return f"%{vp}{i} = {s} rng({ops}), distribution=rng_uniform"
+        if op == "scatter":
+            return (f"%{vp}{i} = {s} scatter({ops}), "
+                    f"update_window_dims={{{dl(n.attrs['uwd'])}}}, "
+                    f"inserted_window_dims={{{dl(n.attrs['iwd'])}}}, "
+                    f"scatter_dims_to_operand_dims={{{dl(n.attrs['sdod'])}}}, "
+                    f"index_vector_dim={n.attrs['ivd']}, "
+                    f"to_apply=%scatter_add_f32")
+        if op == "while":
+            lbl = n.attrs["label"]
+            return (f"%{vp}{i} = {s} while({ops}), "
+                    f"condition=%{lbl}_cond, body=%{lbl}_body")
+        if op == "get-tuple-element":
+            return f"%{vp}{i} = {s} get-tuple-element({ops}), index={n.attrs['index']}"
+        return f"%{vp}{i} = {s} {op}({ops})"
+
+
+_HELPER_BLOCKS = [
+    ("reduce_add", """
+%reduce_add (ra_lhs: f32[], ra_rhs: f32[]) -> f32[] {
+  %ra_lhs = f32[] parameter(0)
+  %ra_rhs = f32[] parameter(1)
+  ROOT %ra_out = f32[] add(f32[] %ra_lhs, f32[] %ra_rhs)
+}"""),
+    ("reduce_max", """
+%reduce_max (rm_lhs: f32[], rm_rhs: f32[]) -> f32[] {
+  %rm_lhs = f32[] parameter(0)
+  %rm_rhs = f32[] parameter(1)
+  ROOT %rm_out = f32[] maximum(f32[] %rm_lhs, f32[] %rm_rhs)
+}"""),
+    ("reduce_min_s32", """
+%reduce_min_s32 (rms_lhs: s32[], rms_rhs: s32[]) -> s32[] {
+  %rms_lhs = s32[] parameter(0)
+  %rms_rhs = s32[] parameter(1)
+  ROOT %rms_out = s32[] minimum(s32[] %rms_lhs, s32[] %rms_rhs)
+}"""),
+    ("sort_gt_f32", """
+%sort_gt_f32 (sg_lhs: f32[], sg_rhs: f32[]) -> pred[] {
+  %sg_lhs = f32[] parameter(0)
+  %sg_rhs = f32[] parameter(1)
+  ROOT %sg_out = pred[] compare(f32[] %sg_lhs, f32[] %sg_rhs), direction=GT
+}"""),
+    ("scatter_add_f32", """
+%scatter_add_f32 (sa_lhs: f32[], sa_rhs: f32[]) -> f32[] {
+  %sa_lhs = f32[] parameter(0)
+  %sa_rhs = f32[] parameter(1)
+  ROOT %sa_out = f32[] add(f32[] %sa_lhs, f32[] %sa_rhs)
+}"""),
+]

@@ -160,7 +160,9 @@ class Module:
             if k in ("dimensions", "dynamic_slice_sizes", "lhs_batch_dims",
                      "rhs_batch_dims", "lhs_contracting_dims",
                      "rhs_contracting_dims", "offset_dims",
-                     "collapsed_slice_dims", "start_index_map", "slice_sizes"):
+                     "collapsed_slice_dims", "start_index_map", "slice_sizes",
+                     "update_window_dims", "inserted_window_dims",
+                     "scatter_dims_to_operand_dims"):
                 attrs[k] = _int_list(v)
             elif k in ("iota_dimension", "index_vector_dim", "index"):
                 attrs[k] = int(v)
@@ -173,8 +175,8 @@ class Module:
                                     for p in v.split("x")]
             elif k == "direction":
                 attrs["direction"] = v
-            elif k == "to_apply":
-                attrs["to_apply"] = v.lstrip("%")
+            elif k in ("to_apply", "condition", "body"):
+                attrs[k] = v.lstrip("%")
         ins = Instr(name, dtype, dims, opcode, operands, attrs)
         idx = len(comp.instrs)
         comp.instrs.append(ins)
@@ -195,24 +197,42 @@ _U32 = np.uint32
 def evaluate(module: Module, inputs):
     """Evaluate the ENTRY computation; returns list of np arrays."""
     comp = module.entry
-    params = {idx: inputs[pnum] for pnum, idx in sorted(comp.params)}
-    assert len(params) == len(inputs), (len(comp.params), len(inputs))
-    vals = [None] * len(comp.instrs)
+    assert len(comp.params) == len(inputs), (len(comp.params), len(inputs))
     err = np.seterr(all="ignore")  # inf/0*inf semantics mirror f32 hardware
     try:
-        for i, ins in enumerate(comp.instrs):
-            if i == comp.root:
-                break
-            vals[i] = _exec(module, ins, [vals[o] for o in ins.operands],
-                            params.get(i))
-            if ins.dims is not None and vals[i] is not None:
-                assert tuple(vals[i].shape) == ins.dims, (
-                    ins.name, ins.opcode, vals[i].shape, ins.dims)
+        result = _run_comp(module, comp, list(inputs))
     finally:
         np.seterr(**err)
-    root = comp.instrs[comp.root]
-    assert root.opcode == "tuple"
-    return [vals[o] for o in root.operands]
+    assert isinstance(result, list), "entry root must be a tuple"
+    return result
+
+
+def _run_comp(module, comp, inputs):
+    """Run one computation with flat positional inputs.
+
+    Returns the root value: a list for a tuple root, an ndarray otherwise.
+    Shared by the ENTRY path and `while` cond/body recursion.
+    """
+    params = {idx: inputs[pnum] for pnum, idx in sorted(comp.params)}
+    vals = [None] * len(comp.instrs)
+    for i, ins in enumerate(comp.instrs):
+        if ins.opcode == "tuple":
+            vals[i] = [vals[o] for o in ins.operands]
+            continue
+        vals[i] = _exec(module, ins, [vals[o] for o in ins.operands],
+                        params.get(i))
+        if ins.dims is not None and isinstance(vals[i], np.ndarray):
+            assert tuple(vals[i].shape) == ins.dims, (
+                ins.name, ins.opcode, vals[i].shape, ins.dims)
+    return vals[comp.root]
+
+
+def _hash_u32(z):
+    """lowbias32-style mixer over uint32; mirrors `modelgen.M.hash_u32`."""
+    z = np.asarray(z, dtype=_U32)
+    for mul, shift in ((0xED5AD4BB, 17), (0xAC4C1B51, 11), (0x31848BAB, 15)):
+        z = (z ^ (z >> _U32(shift))) * _U32(mul)
+    return z ^ (z >> _U32(14))
 
 
 def _f32(x):
@@ -335,6 +355,39 @@ def _exec(module, ins, args, param_val):
         return out
     if op == "gather":
         return _gather(ins, args[0], args[1])
+    if op == "while":
+        cond = module.computations[ins.attrs["condition"]]
+        body = module.computations[ins.attrs["body"]]
+        state = list(args)
+        while bool(_run_comp(module, cond, state)):
+            state = _run_comp(module, body, state)
+        return state
+    if op == "get-tuple-element":
+        return args[0][ins.attrs["index"]]
+    if op == "sort":
+        comparator = module.computations[ins.attrs["to_apply"]]
+        direction = comparator.instrs[comparator.root].attrs["direction"]
+        dim = ins.attrs["dimensions"][0]
+        srt = np.sort(a, axis=dim)
+        if direction in ("GT", "GE"):
+            srt = np.flip(srt, axis=dim)
+        return srt.copy()
+    if op == "rng-bit-generator":
+        base = np.asarray(a, dtype=_U32).reshape(())
+        n = int(np.prod(ins.dims, dtype=np.int64)) if ins.dims else 1
+        ctr = base + np.arange(n, dtype=_U32)
+        return _hash_u32(ctr).reshape(ins.dims)
+    if op == "rng":
+        # deterministic counter-based uniform over [a, b)
+        n = int(np.prod(ins.dims, dtype=np.int64)) if ins.dims else 1
+        bits = _hash_u32(np.arange(n, dtype=_U32))
+        u = ((bits >> _U32(8)).astype(np.float32) + np.float32(0.5)) \
+            * np.float32(1.0 / 16777216.0)
+        lo = np.float32(args[0])
+        hi = np.float32(args[1])
+        return (lo + u.reshape(ins.dims) * (hi - lo)).astype(np.float32)
+    if op == "scatter":
+        return _scatter(module, ins, args[0], args[1], args[2])
     raise ValueError(f"unsupported opcode {op}")
 
 
@@ -356,6 +409,41 @@ def _dot(ins, lhs, rhs):
                  + tuple(lhs.shape[d] for d in lhs_free)
                  + tuple(rhs.shape[d] for d in rhs_free))
     return out.reshape(out_shape).astype(np.float32)
+
+
+def _scatter(module, ins, operand, indices, updates):
+    g = ins.attrs
+    uwd = g["update_window_dims"]
+    inserted = g["inserted_window_dims"]
+    sdod = g["scatter_dims_to_operand_dims"]
+    ivd = g["index_vector_dim"]
+    combiner = module.computations[ins.attrs["to_apply"]]
+    root_op = combiner.instrs[combiner.root].opcode
+    window_operand_dims = [d for d in range(operand.ndim) if d not in inserted]
+    update_batch_axes = [a for a in range(updates.ndim) if a not in uwd]
+    idx_shape = list(indices.shape)
+    out = operand.copy()
+    for upd_idx in np.ndindex(*updates.shape):
+        batch_idx = [upd_idx[a] for a in update_batch_axes]
+        start = [0] * operand.ndim
+        for c, od in enumerate(sdod):
+            if ivd < len(idx_shape):
+                iidx = batch_idx[:ivd] + [c] + batch_idx[ivd:]
+            else:
+                iidx = batch_idx
+            raw = int(indices[tuple(iidx)])
+            start[od] = min(max(raw, 0), operand.shape[od] - 1)
+        dst = list(start)
+        for w_axis, op_dim in zip(uwd, window_operand_dims):
+            dst[op_dim] += upd_idx[w_axis]
+        dst = tuple(dst)
+        if root_op == "add":
+            out[dst] = operand.dtype.type(out[dst] + updates[upd_idx])
+        elif root_op == "maximum":
+            out[dst] = max(out[dst], updates[upd_idx])
+        else:
+            out[dst] = min(out[dst], updates[upd_idx])
+    return out
 
 
 def _gather(ins, operand, indices):

@@ -8,9 +8,14 @@ graphs, with gradient artifacts derived by `hlo_autodiff`.  The 17-tensor
 flat parameter tree is the sorted-pytree-key order `aot.py` pins in the
 manifest, so the Rust coordinator code runs unchanged.
 
-`generate_rollout` is intentionally not emitted: it needs `while` +
-in-graph RNG, which the Rust interpreter does not model (ROADMAP op-set
-gap).  The coordinator's stepwise `prefill`/`decode_step` path covers it.
+`generate_rollout` is the fused prefill + while(sample → decode) module:
+loop-carried state is the flattened 25-tuple [17 params, pos, rows, ck,
+cv, logits, rng base, done, temp]; sampling is counter-based Gumbel-max
+over `rng-bit-generator` bits (bits[j] = lowbias32(base + j), base0 =
+seed·0x9E3779B1, advanced by B·V per step) with the top-k threshold from
+a descending `sort`, so fused, stepwise and scheduler paths draw the
+same tokens from the same u32 seed.  The baked sampler parameters
+(top_k / stop_at_eos) are recorded in the manifest `"sampler"` block.
 
 Init differs from model.py's `jax.random.normal` (which lowers to a CPU
 custom-call the interpreter can't execute): parameters are drawn with a
@@ -89,6 +94,13 @@ SYNTHETIC = GenConfig("synthetic", vocab=32, d_model=8, n_layers=2, n_heads=2,
 (B1, B2, LN1B, LN1G, LN2B, LN2G, W1, W2, WK, WO, WQ, WV,
  HEAD, LNFB, LNFG, POS, TOK) = range(17)
 NP17 = 17
+
+# Mirror of rust data::tokenizer::{PAD, EOS} and the default SamplerConfig
+# baked into the fused generate_rollout artifact.
+PAD_ID = 0
+EOS_ID = 10
+SAMPLER_TOP_K = 16
+SAMPLER_STOP_AT_EOS = True
 
 
 class M:
@@ -649,7 +661,107 @@ def emit_artifacts(cfg: GenConfig):
          ("v", [b, hn, s, dh], "f32")],
         [("out", [b, hn, s, dh], "f32")])
 
+    arts.append(emit_generate_rollout(cfg))
+
     return arts
+
+
+def emit_generate_rollout(cfg: GenConfig):
+    """Fused rollout: prefill + while(sample → decode) as ONE artifact.
+
+    Loop state (flattened while operands, 25 entries):
+      [0..16] params, 17 pos s32[], 18 rows s32[b,s], 19/20 cache k/v,
+      21 logits f32[b,v], 22 rng base u32[], 23 done pred[b], 24 temp f32[].
+    The body reuses the same `forward_cached` builder code as the
+    `decode_step` artifact, so decode logits are op-for-op identical; the
+    Gumbel-max sampler draws `rng-bit-generator` bits keyed by the
+    loop-carried base counter (advanced by B·V per step), which is exactly
+    the formula the host-side stepwise/scheduler sampler uses.
+    """
+    b, s, p_len, v = cfg.batch, cfg.max_seq, cfg.prompt_len, cfg.vocab
+    cache = [cfg.n_layers, b, cfg.n_heads, s, cfg.d_head]
+
+    # -- body: sample next token from carried logits, then decode ----------
+    body_m = M(cfg)
+    bg = body_m.g
+    bparams = body_m.tree_params(False)
+    bpos = bg.param("s32", [])
+    brows = bg.param("s32", [b, s])
+    bck = bg.param("f32", cache)
+    bcv = bg.param("f32", cache)
+    blogits = bg.param("f32", [b, v])
+    bbase = bg.param("u32", [])
+    bdone = bg.param("pred", [b])
+    btemp = bg.param("f32", [])
+
+    bits = bg.rng_bits(bbase, [b, v])
+    u = body_m.to_unit(bits)
+    gum = bg.neg(bg.log(bg.neg(bg.log(u))))
+    tb = bg.broadcast(btemp, [], [b, v])
+    scores = bg.add(bg.div(blogits, tb), gum)
+    k = SAMPLER_TOP_K
+    if 0 < k < v:
+        srt = bg.sort(blogits, 1)  # descending
+        th = bg.reshape(bg.slice(srt, [(0, b), (k - 1, k)]), [b])
+        keep = bg.compare("GE", blogits, bg.broadcast(th, [0], [b, v]))
+        scores = bg.select(keep, scores, bg.full_f32(float("-inf"), [b, v]))
+    mx = bg.reduce_max(scores, [1])
+    eq = bg.compare("EQ", scores, bg.broadcast(mx, [0], [b, v]))
+    iv = bg.iota("s32", [b, v], 1)
+    vb = bg.broadcast(bg.c_s32(v), [], [b, v])
+    sampled = bg.reduce_min(bg.select(eq, iv, vb), [1])  # first argmax
+    padv = bg.broadcast(bg.c_s32(PAD_ID), [], [b])
+    tok = bg.select(bdone, padv, sampled)
+    rows2 = bg.dyn_update_slice(brows, bg.reshape(tok, [b, 1]),
+                                [bg.c_s32(0), bpos])
+    eosb = bg.broadcast(bg.c_s32(EOS_ID), [], [b])
+    done2 = bg.or_(bdone, bg.compare("EQ", tok, eosb))
+    logits2, ck2, cv2 = body_m.forward_cached(
+        bparams, bg.reshape(tok, [b, 1]), (bck, bcv), ("dynamic", bpos))
+    base2 = bg.add(bbase, bg.c_u32(b * v))
+    pos2 = bg.add(bpos, bg.c_s32(1))
+    body_outs = bparams + [pos2, rows2, ck2, cv2, logits2, base2, done2, btemp]
+
+    # -- cond: pos < max_seq AND not all rows done --------------------------
+    cond_m = M(cfg)
+    cg = cond_m.g
+    cond_m.tree_params(False)  # params carried through, unused here
+    cpos = cg.param("s32", [])
+    cg.param("s32", [b, s])
+    cg.param("f32", cache)
+    cg.param("f32", cache)
+    cg.param("f32", [b, v])
+    cg.param("u32", [])
+    cdone = cg.param("pred", [b])
+    cg.param("f32", [])
+    in_range = cg.compare("LT", cpos, cg.c_s32(s))
+    ndone = cg.reduce_add(cg.convert(cdone, "f32"), [0])
+    not_all = cg.compare("LT", ndone, cg.c_f32(float(b)))
+    croot = cg.and_(in_range, not_all)
+
+    # -- entry: prefill, seed the state, loop, project out the rows --------
+    m = M(cfg)
+    eg = m.g
+    eparams = m.tree_params(False)
+    prompts = eg.param("s32", [b, p_len])
+    seed = eg.param("u32", [])
+    temp = eg.param("f32", [])
+    logits0, ck0, cv0 = m.forward_cached(eparams, prompts, None, ("static", 0))
+    fill = eg.broadcast(eg.c_s32(PAD_ID), [], [b, s - p_len])
+    rows0 = eg.concat([prompts, fill], 1)
+    base0 = eg.mul(seed, eg.c_u32(0x9E3779B1))
+    zb = eg.broadcast(eg.c_s32(0), [], [b])
+    ob = eg.broadcast(eg.c_s32(1), [], [b])
+    done0 = eg.compare("EQ", zb, ob)  # all-false
+    state = eparams + [eg.c_s32(p_len), rows0, ck0, cv0, logits0, base0,
+                       done0, temp]
+    w = eg.while_(state, cg, croot, bg, body_outs, "gen")
+    rows_f = eg.gte(w, NP17 + 1)
+    return ("generate_rollout", eg.emit_hlo("generate_rollout", [rows_f]),
+            _tree_io(cfg, "params", False) + [
+                ("prompts", [b, p_len], "i32"), ("seed", [], "u32"),
+                ("temp", [], "f32")],
+            [("out", [b, s], "i32")])
 
 
 # ---------------------------------------------------------------------------
@@ -681,12 +793,15 @@ def manifest_json(cfg: GenConfig, arts):
               f'"n_heads": {cfg.n_heads}, "d_ff": {cfg.d_ff}, '
               f'"max_seq": {cfg.max_seq}, "prompt_len": {cfg.prompt_len}, '
               f'"batch": {cfg.batch}, "use_pallas": false}}')
+    sampler = (f'{{"top_k": {SAMPLER_TOP_K}, '
+               f'"stop_at_eos": {"true" if SAMPLER_STOP_AT_EOS else "false"}}}')
     return ('{\n"format_version": 1,\n'
             '"generator": "python -m compile.fixturegen '
             '(HLO emitter for the pure-Rust interpreter backend)",\n'
             f'"config": {config},\n'
             f'"param_count": {cfg.param_count()},\n'
             f'"scalar_param_count": {cfg.scalar_param_count()},\n'
+            f'"sampler": {sampler},\n'
             f'"policy_tree": {_io_json(policy, "path")},\n'
             f'"scalar_tree": {_io_json(scalar, "path")},\n'
             '"artifacts": {\n' + ",\n".join(entries) + "\n}\n}\n")

@@ -21,7 +21,7 @@ from ..config import ModelConfig
 from .. import model
 from ..kernels import ref
 from . import hlo_eval
-from .modelgen import GenConfig
+from .modelgen import EOS_ID, PAD_ID, SAMPLER_TOP_K, GenConfig
 
 
 def model_config(cfg: GenConfig) -> ModelConfig:
@@ -223,7 +223,74 @@ def validate(cfg: GenConfig, arts, tol=5e-4, verbose=True):
         if verbose:
             print(f"  {name:<14} deterministic, std(wq)={wq.std():.4f}")
 
+    # fused rollout: the while-loop artifact must be BIT-identical to a
+    # stepwise composition of prefill/decode_step + the counter-based
+    # Gumbel-max sampler (the same formula the Rust host sampler uses).
+    # No jax reference exists (jax PRNG lowers to a custom-call), so this
+    # differential is the pin, mirrored in Rust by rollout_integration.rs.
+    seed32 = np.uint32(20260808)
+    gtemp = np.float32(0.8)
+    fused = hlo_eval.evaluate(mods["generate_rollout"],
+                              policy + [prompts, seed32, gtemp])[0]
+    ref_rows = _stepwise_rollout(mods, policy, prompts, seed32, gtemp,
+                                 SAMPLER_TOP_K, s, v)
+    assert np.array_equal(fused, ref_rows), (fused.tolist(),
+                                             ref_rows.tolist())
+    assert np.array_equal(fused[:, :p_len], prompts)
+    for r in range(b):
+        gen = fused[r, p_len:]
+        eos_at = np.where(gen == EOS_ID)[0]
+        if eos_at.size:
+            assert np.all(gen[eos_at[0] + 1:] == PAD_ID), gen.tolist()
+    worst["generate_rollout"] = 0.0
+    if verbose:
+        print("  generate_rollout fused == stepwise, bit-identical")
+
     return worst
+
+
+def _counter_sample(logits_row, temp, top_k, base, row):
+    """One Gumbel-max draw; mirrors the in-graph sampler op-for-op (f32)."""
+    v = logits_row.shape[0]
+    ctr = np.uint32(base) + np.arange(row * v, (row + 1) * v, dtype=np.uint32)
+    bits = hlo_eval._hash_u32(ctr)
+    u = ((bits >> np.uint32(8)).astype(np.float32) + np.float32(0.5)) \
+        * np.float32(1.0 / 16777216.0)
+    gum = -np.log(-np.log(u))
+    scores = logits_row / temp + gum
+    if 0 < top_k < v:
+        thresh = np.sort(logits_row)[::-1][top_k - 1]
+        scores = np.where(logits_row >= thresh, scores, np.float32("-inf"))
+    return int(np.argmax(scores))  # first index on ties, like the graph
+
+
+def _stepwise_rollout(mods, policy, prompts, seed32, temp, top_k, s, v):
+    """generate_stepwise semantics over the hlo_eval artifacts."""
+    b, p = prompts.shape
+    logits, ck, cv = hlo_eval.evaluate(mods["prefill"], policy + [prompts])
+    rows = [[int(t) for t in prompts[r]] for r in range(b)]
+    done = [False] * b
+    base = np.uint32((int(seed32) * 0x9E3779B1) & 0xFFFFFFFF)
+    for pos in range(p, s):
+        toks = []
+        for r in range(b):
+            if done[r]:
+                tok = PAD_ID
+            else:
+                tok = _counter_sample(logits[r], temp, top_k, base, r)
+                if tok == EOS_ID:
+                    done[r] = True
+            rows[r].append(tok)
+            toks.append(tok)
+        base = np.uint32((int(base) + b * v) & 0xFFFFFFFF)
+        if all(done) or pos == s - 1:
+            for r in range(b):
+                rows[r].extend([PAD_ID] * (s - len(rows[r])))
+            break
+        logits, ck, cv = hlo_eval.evaluate(
+            mods["decode_step"],
+            policy + [ck, cv, np.asarray(toks, np.int32), np.int32(pos)])
+    return np.asarray(rows, np.int32)
 
 
 def main():

@@ -14,8 +14,33 @@
 //! `waste_fraction` measures the claim: "the proportion of wasted compute
 //! is less than 10%" vs naive random assignment.
 
+use anyhow::{bail, Result};
+
 use crate::cluster::workload::TrainTimeModel;
 use crate::util::rng::Rng;
+
+/// Assignment strategy for one global batch.  Parsed up front so an
+/// unknown name surfaces as a config error on the CLI error path instead
+/// of a panic mid-epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Random deal-by-count (the baseline the paper improves on).
+    Naive,
+    /// Sort-by-simulated-workload dealing (paper §4.4).
+    Balanced,
+}
+
+impl Strategy {
+    pub fn parse(name: &str) -> Result<Strategy> {
+        match name {
+            "naive" => Ok(Strategy::Naive),
+            "balanced" => Ok(Strategy::Balanced),
+            other => bail!(
+                "unknown balance strategy '{other}' (expected 'naive' or 'balanced')"
+            ),
+        }
+    }
+}
 
 /// Simulated workload of one sequence (seconds on the reference model).
 pub fn simulated_workload(model: &TrainTimeModel, len: usize) -> f64 {
@@ -146,7 +171,8 @@ pub struct BalanceReport {
     pub max_waste: f64,
 }
 
-/// Evaluate a strategy over an epoch of length samples.
+/// Evaluate a strategy over an epoch of length samples.  An unknown
+/// strategy name is a config error, not a panic.
 pub fn evaluate_epoch(
     strategy: &str,
     lens: &[usize],
@@ -154,27 +180,27 @@ pub fn evaluate_epoch(
     global_batch: usize,
     n_ranks: usize,
     seed: u64,
-) -> BalanceReport {
+) -> Result<BalanceReport> {
+    let strategy_kind = Strategy::parse(strategy)?;
     let costs: Vec<f64> = lens.iter().map(|&l| simulated_workload(model, l)).collect();
     let mut rng = Rng::new(seed);
     let buckets = plan_epoch(lens.len(), global_batch, &mut rng);
     let mut wastes = Vec::with_capacity(buckets.len());
     for bucket in &buckets {
-        let a = match strategy {
-            "naive" => assign_naive(bucket, n_ranks, &mut rng),
-            "balanced" => assign_balanced(bucket, &costs, n_ranks),
-            other => panic!("unknown strategy {other}"),
+        let a = match strategy_kind {
+            Strategy::Naive => assign_naive(bucket, n_ranks, &mut rng),
+            Strategy::Balanced => assign_balanced(bucket, &costs, n_ranks),
         };
         wastes.push(a.waste_fraction(&costs));
     }
     wastes.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = wastes.len();
-    BalanceReport {
+    Ok(BalanceReport {
         strategy: strategy.to_string(),
         mean_waste: wastes.iter().sum::<f64>() / n as f64,
         p95_waste: wastes[(n as f64 * 0.95) as usize % n],
         max_waste: wastes[n - 1],
-    }
+    })
 }
 
 #[cfg(test)]
@@ -193,8 +219,8 @@ mod tests {
     fn balanced_beats_naive() {
         let lens = longtail_lens(1024, 1);
         let model = TrainTimeModel::default_7b();
-        let naive = evaluate_epoch("naive", &lens, &model, 128, 8, 2);
-        let bal = evaluate_epoch("balanced", &lens, &model, 128, 8, 2);
+        let naive = evaluate_epoch("naive", &lens, &model, 128, 8, 2).unwrap();
+        let bal = evaluate_epoch("balanced", &lens, &model, 128, 8, 2).unwrap();
         assert!(
             bal.mean_waste < naive.mean_waste * 0.5,
             "balanced {:?} vs naive {:?}",
@@ -207,8 +233,24 @@ mod tests {
     fn paper_claim_under_10_percent() {
         let lens = longtail_lens(2048, 3);
         let model = TrainTimeModel::default_7b();
-        let bal = evaluate_epoch("balanced", &lens, &model, 256, 8, 4);
+        let bal = evaluate_epoch("balanced", &lens, &model, 256, 8, 4).unwrap();
         assert!(bal.mean_waste < 0.10, "mean waste {}", bal.mean_waste);
+    }
+
+    #[test]
+    fn unknown_strategy_is_a_config_error_not_a_panic() {
+        let lens = longtail_lens(256, 6);
+        let model = TrainTimeModel::default_7b();
+        let err = evaluate_epoch("frobnicate", &lens, &model, 64, 4, 1)
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("unknown balance strategy 'frobnicate'"),
+            "error should name the bad strategy and the valid set: {err}"
+        );
+        assert!(err.contains("naive") && err.contains("balanced"), "{err}");
+        assert_eq!(Strategy::parse("naive").unwrap(), Strategy::Naive);
+        assert_eq!(Strategy::parse("balanced").unwrap(), Strategy::Balanced);
     }
 
     #[test]

@@ -240,6 +240,11 @@ pub fn generate_stepwise(
     let mut done = vec![false; b];
     let mut gen_lens = vec![0usize; b];
 
+    // One seed draw per call — the same single `next_u64` the fused path
+    // feeds the graph — then the counter-based Gumbel stream, keyed by
+    // (position, row), replays exactly the fused sampler's draws.
+    let mut base = crate::util::rng::sampler_base(rng.next_u64() as u32);
+
     for pos in p..s {
         // sample next token per row from `logits` [B, V]
         let ld = logits.as_f32()?;
@@ -249,7 +254,13 @@ pub fn generate_stepwise(
                 PAD
             } else {
                 let slice = &ld[row * v..(row + 1) * v];
-                let t = rng.sample_logits(slice, cfg.temperature, cfg.top_k) as i32;
+                let t = crate::util::rng::counter_sample_logits(
+                    slice,
+                    cfg.temperature,
+                    cfg.top_k,
+                    base,
+                    row,
+                ) as i32;
                 gen_lens[row] += 1;
                 if cfg.stop_at_eos && t == EOS {
                     done[row] = true;
@@ -259,6 +270,9 @@ pub fn generate_stepwise(
             rows[row].push(tok);
             step_tokens.push(tok);
         }
+        // the fused graph advances the counter for every row each step,
+        // finished or not
+        base = base.wrapping_add((b * v) as u32);
         if done.iter().all(|&d| d) || pos == s - 1 {
             // pad the remaining columns
             for row in rows.iter_mut() {

@@ -309,7 +309,7 @@ pub fn run(
             let dense = (ck.as_f32()?, cv.as_f32()?);
             let full_prompt_pages = p / spec.page_size;
             for k in sl.shared..full_prompt_pages {
-                let id = cache.alloc_reserved();
+                let id = cache.alloc_reserved()?;
                 sl.reserved -= 1;
                 scatter_cols(&mut cache, &lay, id, si, k * spec.page_size, spec.page_size, dense);
                 if opts.share_prefixes {
@@ -319,7 +319,7 @@ pub fn run(
             }
             let tail = p % spec.page_size;
             if tail > 0 {
-                let id = cache.alloc_reserved();
+                let id = cache.alloc_reserved()?;
                 sl.reserved -= 1;
                 scatter_cols(&mut cache, &lay, id, si, full_prompt_pages * spec.page_size, tail, dense);
                 sl.pages.push(id);
@@ -328,6 +328,10 @@ pub fn run(
         }
 
         // ---- lockstep decode with token-granular retirement --------------
+        // one seed draw per wave; the counter stream is keyed by
+        // (position, slot row), mirroring the fused graph's sampler so a
+        // single-wave run is bit-identical to the fused/stepwise paths
+        let mut sample_base = crate::util::rng::sampler_base(rng.next_u64() as u32);
         let mut grace: Option<usize> = None;
         for pos in p..s {
             let ld = logits.as_f32()?;
@@ -339,7 +343,13 @@ pub fn run(
                     continue;
                 }
                 let slice = &ld[si * v..(si + 1) * v];
-                let tok = rng.sample_logits(slice, cfg.temperature, cfg.top_k) as i32;
+                let tok = crate::util::rng::counter_sample_logits(
+                    slice,
+                    cfg.temperature,
+                    cfg.top_k,
+                    sample_base,
+                    si,
+                ) as i32;
                 sl.gen_len += 1;
                 stats.generated_tokens += 1;
                 if cfg.stop_at_eos && tok == EOS {
@@ -351,6 +361,9 @@ pub fn run(
                 sl.row.push(tok);
                 step_tokens[si] = tok;
             }
+            // the fused graph advances the counter for every row each
+            // step, finished or not
+            sample_base = sample_base.wrapping_add((b * v) as u32);
             let live = slots
                 .iter()
                 .flatten()
@@ -427,7 +440,7 @@ pub fn run(
                 }
                 let page_slot = pos / spec.page_size;
                 if page_slot == sl.pages.len() {
-                    let id = cache.alloc_reserved();
+                    let id = cache.alloc_reserved()?;
                     sl.reserved -= 1;
                     sl.pages.push(id);
                 }

@@ -11,8 +11,36 @@
 //! artifacts exchange.
 
 use std::collections::HashMap;
+use std::fmt;
 
 use anyhow::{bail, Result};
+
+/// Typed pool-exhaustion error: a held reservation could not be honored
+/// because the free list drained and every cached shared page was pinned
+/// (refs > 0) between `try_reserve` and `alloc_reserved` — reachable when
+/// later admissions map shared prefixes onto pages an earlier reservation
+/// counted as evictable.  Surfaced as an error so the scheduler can fail
+/// the wave cleanly instead of panicking mid-rollout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolExhausted {
+    pub capacity: usize,
+    pub in_use: usize,
+    pub reserved: usize,
+}
+
+impl fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "kv page pool exhausted: all {} pages pinned ({} mapped, {} still \
+             reserved) — no free or evictable page to honor a reservation; \
+             raise kv_cache_pages or reduce prefix sharing pressure",
+            self.capacity, self.in_use, self.reserved
+        )
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
 
 /// Geometry of one sequence's KV store, derived from the `decode_step`
 /// artifact's cache operands (`Engine::kv_cache_spec`).
@@ -68,8 +96,9 @@ pub struct PageStats {
 /// The page pool.  Invariant: every page is exactly one of
 /// free-listed, cached-in-index (refs == 0, evictable), or mapped
 /// (refs > 0).  `reserved` pages are spoken for by admitted sequences but
-/// not yet allocated; `try_reserve` is the only admission gate, so
-/// `alloc_reserved` cannot fail for a holder of a reservation.
+/// not yet allocated; `try_reserve` is the admission gate, but shared-page
+/// pins taken after a reservation can still starve `alloc_reserved`
+/// (→ [`PoolExhausted`]).
 #[derive(Debug)]
 pub struct PagedKvCache {
     spec: KvSpec,
@@ -170,20 +199,28 @@ impl PagedKvCache {
         self.index.contains_key(prefix)
     }
 
-    /// Allocate one page against a held reservation.  Panics only if the
-    /// reservation protocol was violated (a bug, not pool pressure).
-    pub fn alloc_reserved(&mut self) -> usize {
+    /// Allocate one page against a held reservation.  Reservations count
+    /// cached shared pages as obtainable, but a later `lookup_shared` can
+    /// pin those pages before this call runs — so exhaustion here is a
+    /// reportable runtime condition ([`PoolExhausted`]), not a panic.
+    pub fn alloc_reserved(&mut self) -> Result<usize, PoolExhausted> {
         debug_assert!(self.reserved > 0, "alloc without reservation");
         self.reserved = self.reserved.saturating_sub(1);
-        let id = match self.free.pop() {
+        let id = match self.free.pop().or_else(|| self.evict()) {
             Some(id) => id,
-            None => self.evict().expect("reservation invariant: no page to evict"),
+            None => {
+                return Err(PoolExhausted {
+                    capacity: self.pages.len(),
+                    in_use: self.in_use,
+                    reserved: self.reserved,
+                })
+            }
         };
         let page = &mut self.pages[id];
         page.refs = 1;
         page.key = None;
         self.bump();
-        id
+        Ok(id)
     }
 
     /// Reclaim some cached (refs == 0) shared page.
@@ -264,8 +301,8 @@ mod tests {
         assert!(c.try_reserve(3));
         assert_eq!(c.available(), 1);
         assert!(!c.try_reserve(2), "over-reservation must be refused");
-        let a = c.alloc_reserved();
-        let b = c.alloc_reserved();
+        let a = c.alloc_reserved().unwrap();
+        let b = c.alloc_reserved().unwrap();
         c.unreserve(1); // sequence finished early, one reservation unused
         assert_eq!(c.in_use(), 2);
         c.release(a);
@@ -279,7 +316,7 @@ mod tests {
     fn shared_pages_cache_and_evict() {
         let mut c = PagedKvCache::new(spec(), 2).unwrap();
         assert!(c.try_reserve(1));
-        let p0 = c.alloc_reserved();
+        let p0 = c.alloc_reserved().unwrap();
         c.register_shared(p0, &[1, 2, 3, 4]);
         assert!(c.lookup_shared(&[9, 9]).is_none());
         let hit = c.lookup_shared(&[1, 2, 3, 4]).unwrap();
@@ -295,8 +332,8 @@ mod tests {
         assert_eq!(c.available(), 2);
         // exhaust the free list; the cached page gets evicted
         assert!(c.try_reserve(2));
-        let _x = c.alloc_reserved();
-        let _y = c.alloc_reserved();
+        let _x = c.alloc_reserved().unwrap();
+        let _y = c.alloc_reserved().unwrap();
         assert_eq!(c.stats().evictions, 1);
         assert!(!c.is_resident(&[1, 2, 3, 4]));
     }
@@ -305,7 +342,7 @@ mod tests {
     fn mapped_shared_pages_are_not_evictable() {
         let mut c = PagedKvCache::new(spec(), 2).unwrap();
         assert!(c.try_reserve(1));
-        let p0 = c.alloc_reserved();
+        let p0 = c.alloc_reserved().unwrap();
         c.register_shared(p0, &[7]);
         // still mapped (refs 1): only the one free page is obtainable
         assert_eq!(c.available(), 1);
@@ -313,10 +350,42 @@ mod tests {
     }
 
     #[test]
+    fn all_pages_pinned_by_shared_prefixes_is_an_error_not_a_panic() {
+        // Regression: a reservation counts cached (refs == 0) shared pages
+        // as obtainable, but lookup_shared pins taken AFTER the
+        // reservation can consume them.  alloc_reserved must then report
+        // PoolExhausted, not hit an evict().expect panic.
+        let mut c = PagedKvCache::new(spec(), 2).unwrap();
+        assert!(c.try_reserve(2));
+        let a = c.alloc_reserved().unwrap();
+        let b = c.alloc_reserved().unwrap();
+        c.register_shared(a, &[1, 2, 3, 4]);
+        c.register_shared(b, &[5, 6, 7, 8]);
+        c.release(a);
+        c.release(b);
+        // both pages cached + evictable: a 1-page reservation is granted
+        assert_eq!(c.available(), 2);
+        assert!(c.try_reserve(1));
+        // ...but refcounted shared mappings then pin BOTH pages
+        assert_eq!(c.lookup_shared(&[1, 2, 3, 4]), Some(a));
+        assert_eq!(c.lookup_shared(&[5, 6, 7, 8]), Some(b));
+        let err = c.alloc_reserved().unwrap_err();
+        assert_eq!(err, PoolExhausted { capacity: 2, in_use: 2, reserved: 0 });
+        assert!(err.to_string().contains("kv page pool exhausted"), "{err}");
+        // releasing a pin makes the pool usable again (page is evicted on
+        // the next allocation rather than leaked)
+        c.release(a);
+        assert!(c.try_reserve(1));
+        let again = c.alloc_reserved().unwrap();
+        assert_eq!(again, a);
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
     fn page_buffers_are_stable_across_alloc() {
         let mut c = PagedKvCache::new(spec(), 2).unwrap();
         assert!(c.try_reserve(1));
-        let id = c.alloc_reserved();
+        let id = c.alloc_reserved().unwrap();
         c.page_mut(id).0[0] = 42.0;
         c.page_mut(id).1[1] = -1.0;
         let (k, v) = c.page(id);

@@ -210,8 +210,10 @@ pub fn e4_balance(quick: bool) -> Table {
             let n = gb * if quick { 8 } else { 24 };
             let mut rng = Rng::new(4);
             let lens = glm.sample_batch(&mut rng, 0, n);
-            let naive = evaluate_epoch("naive", &lens, &model, gb, ranks, 5);
-            let bal = evaluate_epoch("balanced", &lens, &model, gb, ranks, 5);
+            let naive =
+                evaluate_epoch("naive", &lens, &model, gb, ranks, 5).expect("known strategy");
+            let bal =
+                evaluate_epoch("balanced", &lens, &model, gb, ranks, 5).expect("known strategy");
             rows.push(vec![
                 format!("{label}, {ranks} ranks × {per_rank}/rank"),
                 f(naive.mean_waste * 100.0, 1),
@@ -1161,6 +1163,8 @@ pub fn einterp_engine(quick: bool) -> Table {
                 "missing".into(),
                 "-".into(),
                 "-".into(),
+                "-".into(),
+                "-".into(),
             ]);
             continue;
         };
@@ -1200,10 +1204,16 @@ pub fn einterp_engine(quick: bool) -> Table {
                 .get(&name)
                 .map(|s| s.compile_time.as_secs_f64() * 1e3)
                 .unwrap_or(0.0);
+            let fused = engine
+                .fused_chains(&name)
+                .map(|n| Metric::int(n as i64))
+                .unwrap_or_else(|| "-".into());
             rows.push(vec![
                 config.into(),
                 name.clone().into(),
                 engine.backend_name().into(),
+                fused,
+                Metric::int(crate::runtime::hlo::pool::threads() as i64),
                 f(compile_ms, 1),
                 f(ms, 2),
             ]);
@@ -1216,6 +1226,8 @@ pub fn einterp_engine(quick: bool) -> Table {
             "config".into(),
             "artifact".into(),
             "backend".into(),
+            "fused chains".into(),
+            "threads".into(),
             "parse/compile ms".into(),
             "ms/call".into(),
         ],

@@ -83,8 +83,11 @@ USAGE:
               accept an intentional regression: gate baselines restart at
               samples recorded after the bless (S empty = everything, else
               an experiment label or label prefix)
+  gcore bench [--full] [--json out.json] [--db FILE]
+              same as `gcore bench run all` (tables + DB ingest)
   gcore bench <id|all> [--full] [--json out.json]
-              deprecated alias for `gcore bench run` that skips DB ingest
+              deprecated pre-subcommand spelling: still runs, but skips
+              DB ingest and warns; use `gcore bench run <id>`
   gcore simulate [--placement colocate|coexist|dynamic] [--devices N]
                  [--steps N] [--dapo]
   gcore inspect-artifacts [--artifacts tiny]
@@ -429,7 +432,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
         Some("report") => bench_report(args),
         Some("gate") => bench_gate(args),
         Some("bless") => bench_bless(args),
-        which => bench_legacy(args, which.unwrap_or("all")),
+        // bare `gcore bench` means `bench run all` — the modern path with
+        // DB ingest.  Only an explicit pre-subcommand id spelling
+        // (`gcore bench e1`) takes the deprecated no-ingest path.
+        None => bench_run(args),
+        Some(which) => bench_legacy(args, which),
     }
 }
 

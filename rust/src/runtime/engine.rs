@@ -172,9 +172,9 @@ impl Engine {
     /// artifact whose HLO file is present, so a corrupt set fails at load
     /// (`try_load` then panics at startup) instead of mid-rollout on a
     /// coordinator thread.  Artifacts whose HLO file is *missing* are
-    /// skipped on purpose: gated sets omit files by design (e.g. no fused
-    /// `generate_rollout` in the fixtures) and the lazy `ensure_compiled`
-    /// error for them is the actionable one.
+    /// skipped on purpose: gated sets may omit files by design (the
+    /// micro-set tests in rollout_integration.rs do) and the lazy
+    /// `ensure_compiled` error for them is the actionable one.
     fn preverify_interp(&self) -> Result<()> {
         if self.backend_name() != "interp" {
             return Ok(());
@@ -452,6 +452,20 @@ impl Engine {
         program
             .evaluate_refs(inputs)
             .map_err(|e| e.context(format!("interpreting '{name}'")))
+    }
+
+    /// Fused elementwise-chain count of a compiled artifact (interp
+    /// backend only; `None` before `ensure_compiled` or on PJRT, where
+    /// XLA does its own fusion).
+    pub fn fused_chains(&self, name: &str) -> Option<usize> {
+        let inner = self.inner.lock().unwrap();
+        match &*inner {
+            ExecBackend::Interp { programs } => {
+                programs.get(name).map(|p| p.fused_chain_count())
+            }
+            #[cfg(feature = "pjrt")]
+            ExecBackend::Pjrt { .. } => None,
+        }
     }
 
     /// Snapshot of per-artifact stats.

@@ -15,17 +15,33 @@
 //! buffer uniqueness come from the plan, so in-place mutation is a
 //! *checked promise* — an `Arc::try_unwrap` the plan said would succeed
 //! erroring out is a planner bug surfaced loudly, not a silent copy.
+//!
+//! Control flow and speed, layered on the same machinery:
+//!
+//! * `while` runs its condition over cheap clones of the flattened loop
+//!   state and threads the state through the body *by move*, so the
+//!   body's in-place paths (KV-cache `dynamic-update-slice`, fused Adam
+//!   chains) work across iterations exactly as at the entry level.
+//! * the planner's fusible elementwise chains are compiled into
+//!   [`CompFused`] kernels at parse time: one blocked pass per chain,
+//!   no intermediate materialization.
+//! * `dot` and f32 `reduce` fan out over [`super::pool`]
+//!   (`GCORE_EVAL_THREADS`), partitioned by output rows so any thread
+//!   count is bit-identical to sequential execution.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::hlo::parser::{
-    CmpDir, DotDims, HDtype, HShape, HloModule, Instr, Literal, ReduceKind,
+    CmpDir, Computation, DotDims, HDtype, HShape, HloModule, Instr, Literal, ReduceKind,
 };
-use crate::runtime::hlo::plan::StaticPlan;
+use crate::runtime::hlo::plan::{CompPlan, StaticPlan};
+use crate::runtime::hlo::pool;
 use crate::runtime::hlo::verify;
 use crate::runtime::tensor::{Tensor, TensorData};
+use crate::util::rng::hash_u32;
 
 /// A compiled-for-evaluation module: parse + verify + plan once, evaluate
 /// many times.
@@ -33,6 +49,9 @@ use crate::runtime::tensor::{Tensor, TensorData};
 pub struct Program {
     module: HloModule,
     plan: StaticPlan,
+    /// Per-computation fused elementwise kernels (indexed like
+    /// `module.computations`), compiled from the plan's fusible chains.
+    fused: Vec<CompFused>,
 }
 
 impl Program {
@@ -55,7 +74,13 @@ impl Program {
             );
         }
         let plan = StaticPlan::build(&module);
-        Ok(Program { module, plan })
+        let fused = module
+            .computations
+            .iter()
+            .zip(&plan.comps)
+            .map(|(c, p)| CompFused::build(c, p))
+            .collect();
+        Ok(Program { module, plan, fused })
     }
 
     pub fn module(&self) -> &HloModule {
@@ -70,6 +95,12 @@ impl Program {
     /// Instruction count of the entry computation (interp "compile" stat).
     pub fn num_instructions(&self) -> usize {
         self.module.entry_computation().instrs.len()
+    }
+
+    /// Fused elementwise chains compiled across all computations (the
+    /// Einterp table's fusion column).
+    pub fn fused_chain_count(&self) -> usize {
+        self.fused.iter().map(|f| f.tails.len()).sum()
     }
 
     /// Evaluate the entry computation.  The root must be a tuple; its
@@ -91,18 +122,47 @@ impl Program {
                 inputs.len()
             );
         }
-        let mut slots: Vec<Option<Val>> = vec![None; entry.instrs.len()];
-        for (i, ins) in entry.instrs.iter().enumerate() {
-            if i == entry.root {
+        let root = &entry.instrs[entry.root];
+        if root.opcode != "tuple" {
+            bail!("entry root must be a tuple, got '{}'", root.opcode);
+        }
+        let params: Vec<Option<Val>> =
+            inputs.iter().map(|t| Some(Val::from_tensor(t))).collect();
+        let outs = self.eval_comp(self.module.entry, params)?;
+        outs.into_iter().map(|(v, owned)| v.into_tensor(owned)).collect()
+    }
+
+    /// Run one computation with positional parameter values.  Returns the
+    /// root values: every tuple element for a tuple root (the entry /
+    /// `while`-body contract), or the single root value otherwise
+    /// (`while` conditions).  The `bool` per value is the plan's
+    /// ownership promise — `true` means the returned handle is provably
+    /// the only one on its buffer.
+    fn eval_comp(&self, ci: usize, mut params: Vec<Option<Val>>) -> Result<Vec<(Val, bool)>> {
+        let comp = &self.module.computations[ci];
+        let plan = &self.plan.comps[ci];
+        let fused = &self.fused[ci];
+        let mut slots: Vec<Option<SlotVal>> = vec![None; comp.instrs.len()];
+        for (i, ins) in comp.instrs.iter().enumerate() {
+            if i == comp.root {
                 break;
             }
-            let val = self
-                .exec(i, ins, inputs, &mut slots)
-                .with_context(|| format!("evaluating %{} ({})", ins.name, ins.opcode))?;
+            if fused.interior[i] {
+                continue; // computed by the fused kernel at its chain tail
+            }
+            let val = if let Some(chain) = fused.tails.get(&i) {
+                let v = self.exec_fused(comp, plan, chain, &mut slots).with_context(|| {
+                    format!("evaluating fused chain ending at %{} ({})", ins.name, ins.opcode)
+                })?;
+                Some(SlotVal::One(v))
+            } else {
+                self.exec(plan, i, ins, &mut params, &mut slots)
+                    .with_context(|| format!("evaluating %{} ({})", ins.name, ins.opcode))?
+            };
             if let Some(v) = val {
-                if let Some(shape) = &ins.shape {
+                if let (SlotVal::One(one), Some(shape)) = (&v, &ins.shape) {
                     debug_assert_eq!(
-                        v.dims,
+                        one.dims,
                         shape.dims,
                         "%{}: result shape mismatch",
                         ins.name
@@ -111,14 +171,21 @@ impl Program {
                 slots[i] = Some(v);
             }
         }
-        let root = &entry.instrs[entry.root];
+        let root = &comp.instrs[comp.root];
         if root.opcode != "tuple" {
-            bail!("entry root must be a tuple, got '{}'", root.opcode);
+            // non-tuple root (a `while` condition): execute it like any
+            // other instruction and hand back the single value
+            let v = self
+                .exec(plan, comp.root, root, &mut params, &mut slots)
+                .with_context(|| format!("evaluating root %{} ({})", root.name, root.opcode))?
+                .context("root produced no value")?
+                .into_val()?;
+            return Ok(vec![(v, plan.unique[comp.root])]);
         }
         // take (not clone) each root operand at its LAST occurrence so
-        // uniquely-owned buffers move straight into the output tensors
-        // without a copy; earlier duplicate occurrences clone (legal HLO
-        // may repeat a tuple element)
+        // uniquely-owned buffers move straight into the outputs without a
+        // copy; earlier duplicate occurrences clone (legal HLO may repeat
+        // a tuple element)
         root.operands
             .iter()
             .enumerate()
@@ -129,20 +196,27 @@ impl Program {
                 } else {
                     slots[op].take()
                 };
-                let owned = !dup_later && self.plan.unique[op];
-                v.context("root operand missing")?.into_tensor(owned)
+                let owned = !dup_later && plan.unique[op];
+                Ok((v.context("root operand missing")?.into_val()?, owned))
             })
             .collect()
     }
 
-    /// Execute one instruction.  Returns `None` only for the root tuple.
+    /// Execute one instruction.  Returns `None` only for non-root tuples
+    /// (which own nothing) — every other opcode yields a value.
     fn exec(
         &self,
+        plan: &CompPlan,
         idx: usize,
         ins: &Instr,
-        inputs: &[&Tensor],
-        slots: &mut [Option<Val>],
-    ) -> Result<Option<Val>> {
+        params: &mut [Option<Val>],
+        slots: &mut [Option<SlotVal>],
+    ) -> Result<Option<SlotVal>> {
+        // tuple-shaped slots (`while` results) are only consumed by
+        // `get-tuple-element`, which moves an element out of a taken tuple
+        if ins.opcode == "get-tuple-element" {
+            return Ok(Some(SlotVal::One(gte(plan, idx, ins, slots)?)));
+        }
         // Take operands out of their slots at their plan-computed last use
         // so uniquely-owned buffers can be mutated in place downstream.
         // `owned[k]` = the take yields the only handle on the buffer (per
@@ -150,21 +224,21 @@ impl Program {
         let mut args: Vec<Val> = Vec::with_capacity(ins.operands.len());
         let mut owned: Vec<bool> = Vec::with_capacity(ins.operands.len());
         for &op in &ins.operands {
-            let take = self.plan.last_use[op] == idx
-                && ins.operands.iter().filter(|&&o| o == op).count() == 1;
-            let v = if take {
-                slots[op].take()
-            } else {
-                slots[op].clone()
-            };
-            args.push(v.with_context(|| format!("operand #{op} missing"))?);
-            owned.push(take && self.plan.unique[op]);
+            let (v, own) = grab(plan, ins, idx, op, slots)?;
+            args.push(v);
+            owned.push(own);
+        }
+        if ins.opcode == "while" {
+            return Ok(Some(SlotVal::Tuple(self.exec_while(ins, args)?)));
         }
         let out_shape = ins.shape.as_ref();
         let v = match ins.opcode.as_str() {
             "parameter" => {
                 let p = ins.param_idx.context("parameter without number")?;
-                Val::from_tensor(inputs[p])
+                params
+                    .get_mut(p)
+                    .and_then(|s| s.take())
+                    .with_context(|| format!("parameter {p} missing or consumed twice"))?
             }
             "constant" => Val::from_literal(
                 ins.literal.as_ref().context("constant without literal")?,
@@ -242,11 +316,546 @@ impl Program {
             "dynamic-slice" => dynamic_slice(args, &ins.dyn_sizes)?,
             "dynamic-update-slice" => dynamic_update_slice(args, &owned)?,
             "gather" => gather(args, ins, out_shape.context("gather without shape")?)?,
-            "get-tuple-element" => bail!("tuples only supported at the root"),
+            "sort" => self.sort(args, &owned, ins)?,
+            "scatter" => self.scatter(args, &owned, ins)?,
+            "rng-bit-generator" => {
+                rng_bit_generator(args, out_shape.context("rng-bit-generator without shape")?)?
+            }
+            "rng" => rng_uniform(args, out_shape.context("rng without shape")?, ins)?,
             other => bail!("unsupported opcode '{other}'"),
         };
-        Ok(Some(v))
+        Ok(Some(SlotVal::One(v)))
     }
+
+    /// `while` over flattened loop state.  The condition sees the state
+    /// through cheap `Arc` clones (the body still needs it); the body
+    /// consumes the state by move, with each element made uniquely owned
+    /// first so the body plan's in-place promises hold across iterations
+    /// (weights pass through as moves, the KV caches mutate in place).
+    fn exec_while(&self, ins: &Instr, args: Vec<Val>) -> Result<Vec<Val>> {
+        let cond =
+            self.comp_index(ins.condition.as_deref().context("while without condition=")?)?;
+        let body = self.comp_index(ins.body.as_deref().context("while without body=")?)?;
+        let mut state: Vec<Val> = args.into_iter().map(ensure_owned).collect();
+        loop {
+            let cond_params: Vec<Option<Val>> =
+                state.iter().map(|v| Some(v.clone())).collect();
+            let out = self.eval_comp(cond, cond_params)?;
+            let go = match out.first() {
+                Some((v, _)) => *v.as_pred()?.first().context("empty while condition")?,
+                None => bail!("while condition produced no value"),
+            };
+            if !go {
+                return Ok(state);
+            }
+            let body_params: Vec<Option<Val>> = state.into_iter().map(Some).collect();
+            let outs = self.eval_comp(body, body_params)?;
+            state = outs.into_iter().map(|(v, _)| ensure_owned(v)).collect();
+        }
+    }
+
+    fn comp_index(&self, name: &str) -> Result<usize> {
+        self.module
+            .computations
+            .iter()
+            .position(|c| c.name == name)
+            .with_context(|| {
+                format!("no computation '{name}' in module '{}'", self.module.name)
+            })
+    }
+
+    /// `sort` along one axis; the comparator's compare direction keys the
+    /// order (GT/GE descending, LT/LE ascending — the verifier admits
+    /// only ordered comparators over the two parameters).  Matches
+    /// `np.sort` / flipped `np.sort` on the fixture value domain.
+    fn sort(&self, mut args: Vec<Val>, owned: &[bool], ins: &Instr) -> Result<Val> {
+        let name = ins.to_apply.as_deref().context("sort without to_apply")?;
+        let cmpc = self.module.computation(name)?;
+        let dir = cmpc.instrs[cmpc.root]
+            .direction
+            .context("sort comparator without direction")?;
+        let descending = matches!(dir, CmpDir::Gt | CmpDir::Ge);
+        let axis = ins.dims.first().copied().context("sort without dimensions=")?;
+        let a = args.remove_first()?;
+        let (dims, mut v) = a.into_f32_owned(owned.first().copied().unwrap_or(false))?;
+        if axis >= dims.len() {
+            bail!("sort dimension out of range");
+        }
+        let st = strides(&dims);
+        let axis_len = dims[axis];
+        let stride = st[axis];
+        if stride == 1 {
+            for lane in v.chunks_mut(axis_len.max(1)) {
+                lane.sort_unstable_by(f32::total_cmp);
+                if descending {
+                    lane.reverse();
+                }
+            }
+        } else {
+            let mut lane = vec![0f32; axis_len];
+            let mut lane_dims = dims.clone();
+            lane_dims[axis] = 1;
+            let mut it = Stepper::new(&lane_dims, &st);
+            while let Some(base) = it.next() {
+                for (t, l) in lane.iter_mut().enumerate() {
+                    *l = v[base + t * stride];
+                }
+                lane.sort_unstable_by(f32::total_cmp);
+                if descending {
+                    lane.reverse();
+                }
+                for (t, &l) in lane.iter().enumerate() {
+                    v[base + t * stride] = l;
+                }
+            }
+        }
+        Ok(Val::f32(dims, v))
+    }
+
+    /// XLA `scatter` (the jax embedding-gradient lowering plus add/max/min
+    /// combiners).  Start coordinates are clamped to the operand domain
+    /// per element, mirroring `fixturegen/hlo_eval.py::_scatter` exactly.
+    /// The operand is the in-place candidate — the embedding-grad call
+    /// accumulates straight into the consumed zeros buffer.
+    fn scatter(&self, mut args: Vec<Val>, owned: &[bool], ins: &Instr) -> Result<Val> {
+        let sd = ins.scatter.as_ref().context("scatter without dimension numbers")?;
+        let kind = self
+            .module
+            .reduce_kind(ins.to_apply.as_deref().context("scatter without to_apply")?)?;
+        if args.len() != 3 {
+            bail!("scatter expects operand, indices, updates");
+        }
+        let updates = args.pop().context("scatter missing updates")?;
+        let indices = args.pop().context("scatter missing indices")?;
+        let operand = args.pop().context("scatter missing operand")?;
+        let orank = operand.dims.len();
+        let urank = updates.dims.len();
+        let window_operand_dims: Vec<usize> =
+            (0..orank).filter(|d| !sd.inserted_window_dims.contains(d)).collect();
+        let update_batch_axes: Vec<usize> =
+            (0..urank).filter(|a| !sd.update_window_dims.contains(a)).collect();
+        let idx = indices.as_s32()?;
+        let istrides = strides(&indices.dims);
+        let irank = indices.dims.len();
+        let upd_dims = updates.dims.clone();
+        let ustrides = strides(&upd_dims);
+        let upd = updates.as_f32()?;
+        let (odims, mut out) =
+            operand.into_f32_owned(owned.first().copied().unwrap_or(false))?;
+        let ostrides = strides(&odims);
+        let ivd = sd.index_vector_dim;
+        let mut ucoord = vec![0usize; urank];
+        let mut start = vec![0usize; orank];
+        for (lin, &uval) in upd.iter().enumerate() {
+            for (a2, c) in ucoord.iter_mut().enumerate() {
+                *c = (lin / ustrides[a2]) % upd_dims[a2];
+            }
+            start.fill(0);
+            for (c, &od) in sd.scatter_dims_to_operand_dims.iter().enumerate() {
+                // flat offset of this element's index row: batch coords
+                // with the component axis spliced in at index_vector_dim
+                let mut flat = 0usize;
+                let mut b = 0usize;
+                for (ax, &istr) in istrides.iter().enumerate().take(irank) {
+                    let coord = if ax == ivd {
+                        c
+                    } else {
+                        let v = ucoord[update_batch_axes[b]];
+                        b += 1;
+                        v
+                    };
+                    flat += coord * istr;
+                }
+                let raw = idx[flat];
+                let hi = odims[od].saturating_sub(1);
+                start[od] = raw.max(0).min(hi as i32) as usize;
+            }
+            for (&w_axis, &op_dim) in
+                sd.update_window_dims.iter().zip(&window_operand_dims)
+            {
+                start[op_dim] += ucoord[w_axis];
+            }
+            let mut dst = 0usize;
+            for (d2, &s) in start.iter().enumerate() {
+                if s >= odims[d2] {
+                    bail!("scatter write out of bounds (dim {d2})");
+                }
+                dst += s * ostrides[d2];
+            }
+            out[dst] = match kind {
+                ReduceKind::Add => out[dst] + uval,
+                ReduceKind::Max => out[dst].max(uval),
+                ReduceKind::Min => out[dst].min(uval),
+            };
+        }
+        Ok(Val::f32(odims, out))
+    }
+
+    /// Execute a fused elementwise chain in one blocked pass.  The carried
+    /// buffer is acquired once (in place when the plan owns it) and every
+    /// chain op is applied block by block, so chain intermediates never
+    /// materialize and the working set stays cache-resident.  Per element
+    /// the applied functions are *exactly* the ones [`binary`]/[`unary`]/
+    /// [`select`] use, so fused results are bit-identical to stepwise.
+    fn exec_fused(
+        &self,
+        comp: &Computation,
+        plan: &CompPlan,
+        chain: &[usize],
+        slots: &mut [Option<SlotVal>],
+    ) -> Result<Val> {
+        let mut exts: Vec<Val> = Vec::new();
+        let mut steps: Vec<FusedStep> = Vec::with_capacity(chain.len());
+        let mut carried: Option<(Val, bool)> = None;
+        for (k, &i) in chain.iter().enumerate() {
+            let ins = &comp.instrs[i];
+            let kind = fused_fn(ins).context("non-fusible op in fused chain (compiler bug)")?;
+            let prev = if k == 0 { usize::MAX } else { chain[k - 1] };
+            match kind {
+                FusedKind::Un(f) => {
+                    let op = *ins.operands.first().context("unary without operand")?;
+                    if k == 0 {
+                        carried = Some(grab(plan, ins, i, op, slots)?);
+                    } else if op != prev {
+                        bail!("fused unary link mismatch");
+                    }
+                    steps.push(FusedStep::Un(f));
+                }
+                FusedKind::Bin(f) => {
+                    let (a, b) = match (ins.operands.first(), ins.operands.get(1)) {
+                        (Some(&a), Some(&b)) => (a, b),
+                        _ => bail!("binary op missing operands"),
+                    };
+                    if k == 0 {
+                        carried = Some(grab(plan, ins, i, a, slots)?);
+                        exts.push(grab(plan, ins, i, b, slots)?.0);
+                        steps.push(FusedStep::BinL(f, exts.len() - 1));
+                    } else if a == prev {
+                        exts.push(grab(plan, ins, i, b, slots)?.0);
+                        steps.push(FusedStep::BinL(f, exts.len() - 1));
+                    } else if b == prev {
+                        exts.push(grab(plan, ins, i, a, slots)?.0);
+                        steps.push(FusedStep::BinR(f, exts.len() - 1));
+                    } else {
+                        bail!("fused binary link mismatch");
+                    }
+                }
+                FusedKind::Select => {
+                    let (p, t, fo) = match (
+                        ins.operands.first(),
+                        ins.operands.get(1),
+                        ins.operands.get(2),
+                    ) {
+                        (Some(&p), Some(&t), Some(&fo)) => (p, t, fo),
+                        _ => bail!("select missing operands"),
+                    };
+                    if k == 0 || t == prev {
+                        if k == 0 {
+                            carried = Some(grab(plan, ins, i, t, slots)?);
+                        }
+                        exts.push(grab(plan, ins, i, p, slots)?.0);
+                        let pe = exts.len() - 1;
+                        exts.push(grab(plan, ins, i, fo, slots)?.0);
+                        steps.push(FusedStep::SelT(pe, exts.len() - 1));
+                    } else if fo == prev {
+                        exts.push(grab(plan, ins, i, p, slots)?.0);
+                        let pe = exts.len() - 1;
+                        exts.push(grab(plan, ins, i, t, slots)?.0);
+                        steps.push(FusedStep::SelF(pe, exts.len() - 1));
+                    } else {
+                        bail!("fused select link mismatch");
+                    }
+                }
+            }
+        }
+        let (head, head_owned) = carried.context("fused chain has no head value")?;
+        let (dims, mut buf) = head.into_f32_owned(head_owned)?;
+        let n = buf.len();
+        if exts.iter().any(|e| e.len() != n) {
+            bail!("fused chain operand length mismatch");
+        }
+        const BLOCK: usize = 1024;
+        let mut at = 0usize;
+        while at < n {
+            let end = (at + BLOCK).min(n);
+            for step in &steps {
+                match step {
+                    FusedStep::Un(f) => {
+                        for x in &mut buf[at..end] {
+                            *x = f(*x);
+                        }
+                    }
+                    FusedStep::BinL(f, e) => {
+                        let ext = exts[*e].as_f32()?;
+                        for (x, &y) in buf[at..end].iter_mut().zip(&ext[at..end]) {
+                            *x = f(*x, y);
+                        }
+                    }
+                    FusedStep::BinR(f, e) => {
+                        let ext = exts[*e].as_f32()?;
+                        for (x, &y) in buf[at..end].iter_mut().zip(&ext[at..end]) {
+                            *x = f(y, *x);
+                        }
+                    }
+                    FusedStep::SelT(pe, fe) => {
+                        let pv = exts[*pe].as_pred()?;
+                        let fv = exts[*fe].as_f32()?;
+                        for ((x, &pi), &fi) in
+                            buf[at..end].iter_mut().zip(&pv[at..end]).zip(&fv[at..end])
+                        {
+                            if !pi {
+                                *x = fi;
+                            }
+                        }
+                    }
+                    FusedStep::SelF(pe, te) => {
+                        let pv = exts[*pe].as_pred()?;
+                        let tv = exts[*te].as_f32()?;
+                        for ((x, &pi), &ti) in
+                            buf[at..end].iter_mut().zip(&pv[at..end]).zip(&tv[at..end])
+                        {
+                            if pi {
+                                *x = ti;
+                            }
+                        }
+                    }
+                }
+            }
+            at = end;
+        }
+        Ok(Val::f32(dims, buf))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parse-time fusion of elementwise chains
+// ---------------------------------------------------------------------------
+
+/// How a fusible opcode combines the carried value with its externals.
+enum FusedKind {
+    Un(fn(f32) -> f32),
+    Bin(fn(f32, f32) -> f32),
+    Select,
+}
+
+/// One compiled chain link: the op plus indices into the chain's gathered
+/// external-operand list (`BinR` = carried value is the *rhs*).
+#[derive(Debug, Clone, Copy)]
+enum FusedStep {
+    Un(fn(f32) -> f32),
+    BinL(fn(f32, f32) -> f32, usize),
+    BinR(fn(f32, f32) -> f32, usize),
+    /// carried value is the on-true branch: (pred ext, on-false ext)
+    SelT(usize, usize),
+    /// carried value is the on-false branch: (pred ext, on-true ext)
+    SelF(usize, usize),
+}
+
+/// The per-element functions MUST match the [`binary`]/[`unary`] tables
+/// exactly — fused and stepwise execution are asserted bit-identical.
+fn fused_fn(ins: &Instr) -> Option<FusedKind> {
+    Some(match ins.opcode.as_str() {
+        "add" => FusedKind::Bin(|x, y| x + y),
+        "subtract" => FusedKind::Bin(|x, y| x - y),
+        "multiply" => FusedKind::Bin(|x, y| x * y),
+        "divide" => FusedKind::Bin(|x, y| x / y),
+        "maximum" => FusedKind::Bin(f32::max),
+        "minimum" => FusedKind::Bin(f32::min),
+        "power" => FusedKind::Bin(f32::powf),
+        "negate" => FusedKind::Un(|x| -x),
+        "abs" => FusedKind::Un(f32::abs),
+        "exponential" => FusedKind::Un(f32::exp),
+        "log" => FusedKind::Un(f32::ln),
+        "tanh" => FusedKind::Un(f32::tanh),
+        "rsqrt" => FusedKind::Un(|x| 1.0 / x.sqrt()),
+        "sqrt" => FusedKind::Un(f32::sqrt),
+        "sine" => FusedKind::Un(f32::sin),
+        "cosine" => FusedKind::Un(f32::cos),
+        "select" => FusedKind::Select,
+        _ => return None,
+    })
+}
+
+/// Fused-kernel schedule for one computation, compiled once at
+/// [`Program::compile`] from the plan's fusible chains.
+#[derive(Debug, Clone, Default)]
+struct CompFused {
+    /// Chain-interior instructions: skipped by the interpreter loop, their
+    /// values exist only inside the fused kernel's blocked pass.
+    interior: Vec<bool>,
+    /// Chain tail instruction index → the full chain (indices in order).
+    tails: HashMap<usize, Vec<usize>>,
+}
+
+impl CompFused {
+    /// Admit a planner chain only when every link is an f32 op with a
+    /// fused implementation and every *interior* link has exactly one
+    /// consumer in the whole computation — the planner's `takes`
+    /// condition proves the successor is the *last* use, but an earlier
+    /// instruction may also read the link, and that read needs the
+    /// intermediate materialized.
+    fn build(c: &Computation, plan: &CompPlan) -> CompFused {
+        let n = c.instrs.len();
+        let mut use_count = vec![0usize; n];
+        for ins in &c.instrs {
+            for &op in &ins.operands {
+                use_count[op] += 1;
+            }
+        }
+        let mut interior = vec![false; n];
+        let mut tails = HashMap::new();
+        'chains: for chain in &plan.fusible_chains {
+            // The evaluator executes the root through its dedicated path
+            // (tuple unpack / single-value return), which never consults
+            // the fused schedule — a chain ending at the root must stay
+            // stepwise so its interior values actually materialize.
+            if chain.len() < 2 || chain.last() == Some(&c.root) {
+                continue;
+            }
+            for (k, &i) in chain.iter().enumerate() {
+                let ins = &c.instrs[i];
+                if !matches!(ins.shape.as_ref().map(|s| s.dtype), Some(HDtype::F32)) {
+                    continue 'chains;
+                }
+                if fused_fn(ins).is_none() {
+                    continue 'chains;
+                }
+                if k + 1 < chain.len() && use_count[i] != 1 {
+                    continue 'chains;
+                }
+            }
+            for &i in &chain[..chain.len() - 1] {
+                interior[i] = true;
+            }
+            if let Some(&tail) = chain.last() {
+                tails.insert(tail, chain.clone());
+            }
+        }
+        CompFused { interior, tails }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Slots and operand acquisition
+// ---------------------------------------------------------------------------
+
+/// What an instruction slot holds: one tensor value, or — for `while`
+/// results — the flattened loop-state tuple.
+#[derive(Debug, Clone)]
+enum SlotVal {
+    One(Val),
+    Tuple(Vec<Val>),
+}
+
+impl SlotVal {
+    fn into_val(self) -> Result<Val> {
+        match self {
+            SlotVal::One(v) => Ok(v),
+            SlotVal::Tuple(_) => {
+                bail!("tuple-shaped value used where a tensor is required")
+            }
+        }
+    }
+}
+
+/// Acquire instruction `i`'s operand `op` from its slot: take at the
+/// plan-computed last use (when `op` appears exactly once in `i`'s
+/// operand list), clone otherwise.  The returned `bool` is the in-place
+/// promise: taken *and* statically unique.
+fn grab(
+    plan: &CompPlan,
+    ins: &Instr,
+    i: usize,
+    op: usize,
+    slots: &mut [Option<SlotVal>],
+) -> Result<(Val, bool)> {
+    let take = plan.last_use[op] == i
+        && ins.operands.iter().filter(|&&o| o == op).count() == 1;
+    let v = if take { slots[op].take() } else { slots[op].clone() };
+    let v = v.with_context(|| format!("operand #{op} missing"))?.into_val()?;
+    Ok((v, take && plan.unique[op]))
+}
+
+/// `get-tuple-element`: move element `k` out of a taken tuple (the
+/// common case — the plan pins the `while` slot to its last `gte`), or
+/// clone the element's `Arc` handle from a shared one.
+fn gte(
+    plan: &CompPlan,
+    idx: usize,
+    ins: &Instr,
+    slots: &mut [Option<SlotVal>],
+) -> Result<Val> {
+    let op = *ins.operands.first().context("get-tuple-element without operand")?;
+    let k = ins.tuple_index.context("get-tuple-element without index=")?;
+    let take = plan.last_use[op] == idx
+        && ins.operands.iter().filter(|&&o| o == op).count() == 1;
+    let v = if take { slots[op].take() } else { slots[op].clone() };
+    match v.with_context(|| format!("operand #{op} missing"))? {
+        SlotVal::Tuple(mut els) => {
+            if k >= els.len() {
+                bail!("tuple index {k} out of range ({} elements)", els.len());
+            }
+            Ok(els.swap_remove(k))
+        }
+        SlotVal::One(_) => bail!("get-tuple-element of a non-tuple value"),
+    }
+}
+
+/// Make a value's buffer uniquely owned, deep-copying only when the
+/// handle is shared.  Loop state crossing a `while` iteration boundary
+/// goes through this so the body plan's uniqueness promises always hold
+/// at runtime (weights that pass through untouched stay zero-copy).
+fn ensure_owned(v: Val) -> Val {
+    let Val { dims, data } = v;
+    let data = match data {
+        Data::F32(a) if Arc::strong_count(&a) > 1 => Data::F32(Arc::new(a.as_ref().clone())),
+        Data::S32(a) if Arc::strong_count(&a) > 1 => Data::S32(Arc::new(a.as_ref().clone())),
+        Data::U32(a) if Arc::strong_count(&a) > 1 => Data::U32(Arc::new(a.as_ref().clone())),
+        Data::Pred(a) if Arc::strong_count(&a) > 1 => {
+            Data::Pred(Arc::new(a.as_ref().clone()))
+        }
+        other => other,
+    };
+    Val { dims, data }
+}
+
+// ---------------------------------------------------------------------------
+// Counter-based RNG ops (the fixture PRNG scheme)
+// ---------------------------------------------------------------------------
+
+/// `rng-bit-generator` over the fixture scheme: a scalar u32 counter
+/// base, element `j` (row-major) drawing `hash_u32(base + j)`.  The state
+/// advance is an explicit u32 add in the graph, not part of this op.
+fn rng_bit_generator(mut args: Vec<Val>, shape: &HShape) -> Result<Val> {
+    let base = args.pop().context("rng-bit-generator missing state operand")?;
+    let b = match &base.data {
+        Data::U32(v) => *v.first().context("rng-bit-generator empty state")?,
+        _ => bail!("rng-bit-generator state must be u32"),
+    };
+    let n = shape.num_elements();
+    let out: Vec<u32> = (0..n).map(|j| hash_u32(b.wrapping_add(j as u32))).collect();
+    Ok(Val::u32(shape.dims.clone(), out))
+}
+
+/// Legacy `rng(distribution=rng_uniform)`: deterministic counter-based
+/// uniform over `[lo, hi)` — element `j` hashes its own flat index (this
+/// form carries no seed operand; the fixture goldens pin the stream).
+fn rng_uniform(mut args: Vec<Val>, shape: &HShape, ins: &Instr) -> Result<Val> {
+    if ins.distribution.as_deref() != Some("rng_uniform") {
+        bail!("rng distribution {:?} unsupported", ins.distribution);
+    }
+    let hi = args.pop().context("rng missing upper bound")?;
+    let lo = args.pop().context("rng missing lower bound")?;
+    let lo = *lo.as_f32()?.first().context("rng lower bound empty")?;
+    let hi = *hi.as_f32()?.first().context("rng upper bound empty")?;
+    let n = shape.num_elements();
+    let out: Vec<f32> = (0..n)
+        .map(|j| {
+            let u = ((hash_u32(j as u32) >> 8) as f32 + 0.5) * (1.0 / 16777216.0);
+            lo + u * (hi - lo)
+        })
+        .collect();
+    Ok(Val::f32(shape.dims.clone(), out))
 }
 
 // ---------------------------------------------------------------------------
@@ -971,6 +1580,52 @@ fn reduce(mut args: Vec<Val>, dims: &[usize], kind: ReduceKind) -> Result<Val> {
         }
     }
     let n_out: usize = out_dims.iter().product();
+    // Threaded f32 path: output-major, one out element per unit, with the
+    // reduced coordinates visited in row-major axis order — for each out
+    // element that is exactly the order the sequential input-major sweep
+    // combines them in, so both paths are bit-identical for every thread
+    // count.  Integer reduce stays sequential (wrapping adds are
+    // order-insensitive anyway, and the hot reductions are f32).
+    if pool::threads() > 1 && n_out > 0 {
+        if let (Data::F32(v), Data::F32(iv)) = (&a.data, &init.data) {
+            let ist = strides(&a.dims);
+            let keep_strides: Vec<usize> = (0..a.dims.len())
+                .filter(|&i| !reduce_set[i])
+                .map(|i| ist[i])
+                .collect();
+            let red_dims: Vec<usize> = (0..a.dims.len())
+                .filter(|&i| reduce_set[i])
+                .map(|i| a.dims[i])
+                .collect();
+            let red_strides: Vec<usize> = (0..a.dims.len())
+                .filter(|&i| reduce_set[i])
+                .map(|i| ist[i])
+                .collect();
+            let comb: fn(f32, f32) -> f32 = match kind {
+                ReduceKind::Add => |x, y| x + y,
+                ReduceKind::Max => f32::max,
+                ReduceKind::Min => f32::min,
+            };
+            let init0 = *iv.first().context("reduce init empty")?;
+            let mut out = vec![init0; n_out];
+            pool::run_parts(pool::threads(), &mut out, 1, |row0, part| {
+                for (t, o) in part.iter_mut().enumerate() {
+                    let oi = row0 + t;
+                    let mut base = 0usize;
+                    for (kk, &kd) in out_dims.iter().enumerate() {
+                        base += ((oi / out_strides_full[kk]) % kd) * keep_strides[kk];
+                    }
+                    let mut acc = *o;
+                    let mut st = Stepper::new(&red_dims, &red_strides);
+                    while let Some(off) = st.next() {
+                        acc = comb(acc, v[base + off]);
+                    }
+                    *o = acc;
+                }
+            });
+            return Ok(Val::f32(out_dims, out));
+        }
+    }
     macro_rules! red {
         ($src:expr, $iv:expr, $mk:path, $t:ty, $comb:expr) => {{
             let comb: fn($t, $t) -> $t = $comb;
@@ -1103,32 +1758,54 @@ fn dot(mut args: Vec<Val>, dd: DotDims) -> Result<Val> {
     let k: usize = dd.lhs_contract.iter().map(|&i| lhs.dims[i]).product();
     let n: usize = rhs_free.iter().map(|&i| rhs.dims[i]).product();
 
+    // Output rows are independent, so the pool partitions them across
+    // workers; within a part, up to four rows sharing one batch's rhs
+    // panel advance together so each `rrow` load is amortized 4x (the
+    // train-step matmuls are rhs-bandwidth bound).  Per output element
+    // the ki-ascending accumulation order — and the zero-skip below — are
+    // exactly the single-row kernel's, so any thread count and any block
+    // shape produce bit-identical results.
     let mut out = vec![0f32; nb * m * n];
-    for b in 0..nb {
-        let lbase = b * m * k;
-        let rbase = b * k * n;
-        let obase = b * m * n;
-        for mi in 0..m {
-            let lrow = &ldata[lbase + mi * k..lbase + (mi + 1) * k];
-            let orow = &mut out[obase + mi * n..obase + (mi + 1) * n];
-            for (ki, &a) in lrow.iter().enumerate() {
-                // Deliberate deviation from strict IEEE dot semantics: an
-                // exactly-zero lhs element contributes nothing, even
-                // against a non-finite rhs row (XLA would produce NaN from
-                // 0·inf).  This makes one-hot embedding matmuls O(rows)
-                // instead of O(rows·V), and every fixture artifact is
-                // finite-valued, so the two semantics agree there
-                // (asserted by the jax goldens + interp==pjrt tests).
-                if a == 0.0 {
-                    continue;
-                }
-                let rrow = &rdata[rbase + ki * n..rbase + (ki + 1) * n];
-                for (o, &r) in orow.iter_mut().zip(rrow.iter()) {
-                    *o += a * r;
+    let ld: &[f32] = &ldata;
+    let rd: &[f32] = &rdata;
+    pool::run_parts(pool::threads(), &mut out, n, |row0, part| {
+        let total = part.len() / n.max(1);
+        let mut g = row0; // global output row: b * m + mi
+        let mut done = 0usize;
+        let mut rest = part;
+        while done < total {
+            let b = g / m.max(1);
+            let mi = g % m.max(1);
+            let bs = (m - mi).min(4).min(total - done);
+            let (block, tail) = rest.split_at_mut(bs * n);
+            rest = tail;
+            let lbase = b * m * k;
+            let rbase = b * k * n;
+            let mut rows: Vec<&mut [f32]> = block.chunks_mut(n.max(1)).collect();
+            for ki in 0..k {
+                let rrow = &rd[rbase + ki * n..rbase + (ki + 1) * n];
+                for (t, orow) in rows.iter_mut().enumerate() {
+                    // Deliberate deviation from strict IEEE dot semantics:
+                    // an exactly-zero lhs element contributes nothing, even
+                    // against a non-finite rhs row (XLA would produce NaN
+                    // from 0·inf).  This makes one-hot embedding matmuls
+                    // O(rows) instead of O(rows·V), and every fixture
+                    // artifact is finite-valued, so the two semantics agree
+                    // there (asserted by the jax goldens + interp==pjrt
+                    // tests).
+                    let a = ld[lbase + (mi + t) * k + ki];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    for (o, &r) in orow.iter_mut().zip(rrow.iter()) {
+                        *o += a * r;
+                    }
                 }
             }
+            g += bs;
+            done += bs;
         }
-    }
+    });
     let mut out_dims: Vec<usize> = dd.lhs_batch.iter().map(|&i| lhs.dims[i]).collect();
     out_dims.extend(lhs_free.iter().map(|&i| lhs.dims[i]));
     out_dims.extend(rhs_free.iter().map(|&i| rhs.dims[i]));
@@ -1605,5 +2282,321 @@ ENTRY %m (x: f32[2,4]) -> (f32[2,4]) {
         )
         .unwrap();
         assert!(p.evaluate(&[]).is_err());
+    }
+
+    #[test]
+    fn while_doubles_until_counter_stops() {
+        // 3 iterations: i 0→3, x doubles each time, both tuple elements
+        // extracted (the first gte clones the loop state, the second
+        // takes it)
+        let text = r#"HloModule loopy
+
+%cond (ci: s32[], cx: f32[4]) -> pred[] {
+  %ci = s32[] parameter(0)
+  %cx = f32[4] parameter(1)
+  %cl = s32[] constant(3)
+  ROOT %cp = pred[] compare(s32[] %ci, s32[] %cl), direction=LT
+}
+
+%body (bi: s32[], bx: f32[4]) -> (s32[], f32[4]) {
+  %bi = s32[] parameter(0)
+  %bx = f32[4] parameter(1)
+  %b1 = s32[] constant(1)
+  %bn = s32[] add(s32[] %bi, s32[] %b1)
+  %bx2 = f32[4] add(f32[4] %bx, f32[4] %bx)
+  ROOT %bt = (s32[], f32[4]) tuple(s32[] %bn, f32[4] %bx2)
+}
+
+ENTRY %m (i: s32[], x: f32[4]) -> (s32[], f32[4]) {
+  %i = s32[] parameter(0)
+  %x = f32[4] parameter(1)
+  %w = (s32[], f32[4]) while(s32[] %i, f32[4] %x), condition=%cond, body=%body
+  %g0 = s32[] get-tuple-element((s32[], f32[4]) %w), index=0
+  %g1 = f32[4] get-tuple-element((s32[], f32[4]) %w), index=1
+  ROOT %t = (s32[], f32[4]) tuple(s32[] %g0, f32[4] %g1)
+}
+"#;
+        let out = run(
+            text,
+            &[Tensor::scalar_i32(0), Tensor::f32(vec![4], vec![1., -2., 0.5, 3.])],
+        );
+        assert_eq!(out[0].as_i32().unwrap(), &[3]);
+        assert_eq!(out[1].as_f32().unwrap(), &[8., -16., 4., 24.]);
+    }
+
+    #[test]
+    fn while_zero_iterations_passes_state_through() {
+        let text = r#"HloModule noloop
+
+%cond (ci: s32[], cx: f32[2]) -> pred[] {
+  %ci = s32[] parameter(0)
+  %cx = f32[2] parameter(1)
+  %cl = s32[] constant(0)
+  ROOT %cp = pred[] compare(s32[] %ci, s32[] %cl), direction=LT
+}
+
+%body (bi: s32[], bx: f32[2]) -> (s32[], f32[2]) {
+  %bi = s32[] parameter(0)
+  %bx = f32[2] parameter(1)
+  ROOT %bt = (s32[], f32[2]) tuple(s32[] %bi, f32[2] %bx)
+}
+
+ENTRY %m (i: s32[], x: f32[2]) -> (f32[2]) {
+  %i = s32[] parameter(0)
+  %x = f32[2] parameter(1)
+  %w = (s32[], f32[2]) while(s32[] %i, f32[2] %x), condition=%cond, body=%body
+  %g1 = f32[2] get-tuple-element((s32[], f32[2]) %w), index=1
+  ROOT %t = (f32[2]) tuple(f32[2] %g1)
+}
+"#;
+        let out = run(text, &[Tensor::scalar_i32(5), Tensor::f32(vec![2], vec![7., 9.])]);
+        assert_eq!(out[0].as_f32().unwrap(), &[7., 9.]);
+    }
+
+    #[test]
+    fn sort_ascending_descending_and_inner_axis() {
+        let text = r#"HloModule sorty
+
+%cmp_lt (la: f32[], lb: f32[]) -> pred[] {
+  %la = f32[] parameter(0)
+  %lb = f32[] parameter(1)
+  ROOT %l = pred[] compare(f32[] %la, f32[] %lb), direction=LT
+}
+
+%cmp_gt (ga: f32[], gb: f32[]) -> pred[] {
+  %ga = f32[] parameter(0)
+  %gb = f32[] parameter(1)
+  ROOT %g = pred[] compare(f32[] %ga, f32[] %gb), direction=GT
+}
+
+ENTRY %m (x: f32[5], y: f32[2,3]) -> (f32[5], f32[5], f32[2,3]) {
+  %x = f32[5] parameter(0)
+  %y = f32[2,3] parameter(1)
+  %asc = f32[5] sort(f32[5] %x), dimensions={0}, to_apply=%cmp_lt
+  %dsc = f32[5] sort(f32[5] %x), dimensions={0}, to_apply=%cmp_gt
+  %cols = f32[2,3] sort(f32[2,3] %y), dimensions={0}, to_apply=%cmp_lt
+  ROOT %t = (f32[5], f32[5], f32[2,3]) tuple(f32[5] %asc, f32[5] %dsc, f32[2,3] %cols)
+}
+"#;
+        let x = Tensor::f32(vec![5], vec![3., -1., 2., -1.5, 0.]);
+        let y = Tensor::f32(vec![2, 3], vec![4., -2., 1., -3., 5., 0.]);
+        let out = run(text, &[x, y]);
+        assert_eq!(out[0].as_f32().unwrap(), &[-1.5, -1., 0., 2., 3.]);
+        assert_eq!(out[1].as_f32().unwrap(), &[3., 2., 0., -1., -1.5]);
+        // axis-0 sort: each column sorted independently (strided lanes)
+        assert_eq!(out[2].as_f32().unwrap(), &[-3., -2., 0., 4., 5., 1.]);
+    }
+
+    #[test]
+    fn scatter_accumulates_embedding_grad_rows() {
+        // The jax embedding-grad lowering shape: duplicate index rows
+        // accumulate, and an out-of-range row clamps to the last row
+        // (mirroring fixturegen/hlo_eval.py::_scatter).
+        let text = r#"HloModule scat
+
+%scatter_add_f32 (sa: f32[], sb: f32[]) -> f32[] {
+  %sa = f32[] parameter(0)
+  %sb = f32[] parameter(1)
+  ROOT %s = f32[] add(f32[] %sa, f32[] %sb)
+}
+
+ENTRY %m (tbl: f32[4,2], idx: s32[3], upd: f32[3,2]) -> (f32[4,2]) {
+  %tbl = f32[4,2] parameter(0)
+  %idx = s32[3] parameter(1)
+  %upd = f32[3,2] parameter(2)
+  %sc = f32[4,2] scatter(f32[4,2] %tbl, s32[3] %idx, f32[3,2] %upd), update_window_dims={1}, inserted_window_dims={0}, scatter_dims_to_operand_dims={0}, index_vector_dim=1, to_apply=%scatter_add_f32
+  ROOT %t = (f32[4,2]) tuple(f32[4,2] %sc)
+}
+"#;
+        let tbl = Tensor::zeros_f32(vec![4, 2]);
+        let idx = Tensor::i32(vec![3], vec![1, 9, 1]);
+        let upd = Tensor::f32(vec![3, 2], vec![1., 2., 10., 20., 100., 200.]);
+        let out = run(text, &[tbl, idx, upd]);
+        assert_eq!(
+            out[0].as_f32().unwrap(),
+            &[0., 0., 101., 202., 0., 0., 10., 20.]
+        );
+    }
+
+    #[test]
+    fn rng_bit_generator_matches_counter_hash_stream() {
+        let text = r#"ENTRY %m (seed: u32[]) -> (s32[4]) {
+  %seed = u32[] parameter(0)
+  %bits = u32[4] rng-bit-generator(u32[] %seed), algorithm=rng_default
+  %s = s32[4] convert(u32[4] %bits)
+  ROOT %t = (s32[4]) tuple(s32[4] %s)
+}
+"#;
+        let out = run(text, &[Tensor::scalar_u32(7)]);
+        let want: Vec<i32> = (0u32..4).map(|j| hash_u32(7 + j) as i32).collect();
+        assert_eq!(out[0].as_i32().unwrap(), &want[..]);
+    }
+
+    #[test]
+    fn rng_uniform_is_the_fixture_counter_stream() {
+        let text = r#"ENTRY %m (lo: f32[], hi: f32[]) -> (f32[6]) {
+  %lo = f32[] parameter(0)
+  %hi = f32[] parameter(1)
+  %r = f32[6] rng(f32[] %lo, f32[] %hi), distribution=rng_uniform
+  ROOT %t = (f32[6]) tuple(f32[6] %r)
+}
+"#;
+        let out = run(text, &[Tensor::scalar_f32(2.0), Tensor::scalar_f32(4.0)]);
+        for (j, &got) in out[0].as_f32().unwrap().iter().enumerate() {
+            let u = ((hash_u32(j as u32) >> 8) as f32 + 0.5) * (1.0 / 16777216.0);
+            assert_eq!(got, 2.0 + u * 2.0);
+            assert!((2.0..4.0).contains(&got));
+        }
+    }
+
+    #[test]
+    fn fused_chain_matches_stepwise_semantics() {
+        // multiply → add → tanh is a planner chain; the fused kernel must
+        // produce exactly what the stepwise ops would.
+        let text = r#"ENTRY %m (a: f32[8], b: f32[8], c: f32[8]) -> (f32[8]) {
+  %a = f32[8] parameter(0)
+  %b = f32[8] parameter(1)
+  %c = f32[8] parameter(2)
+  %y = f32[8] multiply(f32[8] %a, f32[8] %b)
+  %z = f32[8] add(f32[8] %y, f32[8] %c)
+  %w = f32[8] tanh(f32[8] %z)
+  ROOT %t = (f32[8]) tuple(f32[8] %w)
+}
+"#;
+        let p = Program::parse(text).unwrap();
+        // the chain must actually be compiled (not silently rejected)
+        let ef = &p.fused[p.module.entry];
+        assert_eq!(ef.tails.len(), 1, "expected one fused chain");
+        let chain = ef.tails.values().next().unwrap();
+        assert_eq!(chain.len(), 3);
+        assert_eq!(ef.interior.iter().filter(|&&x| x).count(), 2);
+
+        let a: Vec<f32> = (0..8).map(|i| (i as f32) * 0.25 - 1.0).collect();
+        let b: Vec<f32> = (0..8).map(|i| 1.5 - (i as f32) * 0.5).collect();
+        let c: Vec<f32> = (0..8).map(|i| (i as f32) * 0.1).collect();
+        let out = p
+            .evaluate(&[
+                Tensor::f32(vec![8], a.clone()),
+                Tensor::f32(vec![8], b.clone()),
+                Tensor::f32(vec![8], c.clone()),
+            ])
+            .unwrap();
+        for i in 0..8 {
+            assert_eq!(out[0].as_f32().unwrap()[i], (a[i] * b[i] + c[i]).tanh());
+        }
+    }
+
+    #[test]
+    fn fused_select_and_rhs_carry_links() {
+        // chain where the carried value enters a subtract as the *rhs*
+        // and then a select as the on-true branch (pred driven by an
+        // in-graph compare, as in the real artifacts)
+        let text = r#"ENTRY %m (a: f32[4], b: f32[4], g: f32[4], f: f32[4]) -> (f32[4]) {
+  %a = f32[4] parameter(0)
+  %b = f32[4] parameter(1)
+  %g = f32[4] parameter(2)
+  %f = f32[4] parameter(3)
+  %zero = f32[] constant(0)
+  %zb = f32[4] broadcast(f32[] %zero), dimensions={}
+  %p = pred[4] compare(f32[4] %g, f32[4] %zb), direction=GT
+  %n = f32[4] negate(f32[4] %a)
+  %d = f32[4] subtract(f32[4] %b, f32[4] %n)
+  %s = f32[4] select(pred[4] %p, f32[4] %d, f32[4] %f)
+  ROOT %t = (f32[4]) tuple(f32[4] %s)
+}
+"#;
+        let p = Program::parse(text).unwrap();
+        let a = vec![1., -2., 3., -4.];
+        let b = vec![0.5, 0.5, 0.5, 0.5];
+        let g = vec![1., -1., 1., -1.];
+        let f = vec![9., 9., 9., 9.];
+        let out = p
+            .evaluate(&[
+                Tensor::f32(vec![4], a.clone()),
+                Tensor::f32(vec![4], b.clone()),
+                Tensor::f32(vec![4], g.clone()),
+                Tensor::f32(vec![4], f.clone()),
+            ])
+            .unwrap();
+        for i in 0..4 {
+            let want = if g[i] > 0.0 { b[i] - (-a[i]) } else { f[i] };
+            assert_eq!(out[0].as_f32().unwrap()[i], want);
+        }
+    }
+
+    #[test]
+    fn fused_chain_with_extra_interior_consumer_stays_stepwise() {
+        // %ex feeds both the reduce and the divide: the planner still
+        // chains sub→ex→p, but the fused compiler must reject it so the
+        // reduce can read the materialized %ex (the softmax shape)
+        let text = r#"%radd (ra: f32[], rb: f32[]) -> f32[] {
+  %ra = f32[] parameter(0)
+  %rb = f32[] parameter(1)
+  ROOT %r = f32[] add(f32[] %ra, f32[] %rb)
+}
+
+ENTRY %m (x: f32[2,4], m0: f32[2,4]) -> (f32[2,4]) {
+  %x = f32[2,4] parameter(0)
+  %m0 = f32[2,4] parameter(1)
+  %zero = f32[] constant(0)
+  %sub = f32[2,4] subtract(f32[2,4] %x, f32[2,4] %m0)
+  %ex = f32[2,4] exponential(f32[2,4] %sub)
+  %sm = f32[2] reduce(f32[2,4] %ex, f32[] %zero), dimensions={1}, to_apply=%radd
+  %smb = f32[2,4] broadcast(f32[2] %sm), dimensions={0}
+  %p = f32[2,4] divide(f32[2,4] %ex, f32[2,4] %smb)
+  ROOT %t = (f32[2,4]) tuple(f32[2,4] %p)
+}
+"#;
+        let p = Program::parse(text).unwrap();
+        assert!(
+            p.fused[p.module.entry].tails.is_empty(),
+            "chain with a second interior consumer must not fuse"
+        );
+        let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let m0 = vec![3., 3., 3., 3., 7., 7., 7., 7.];
+        let out = p
+            .evaluate(&[Tensor::f32(vec![2, 4], x.clone()), Tensor::f32(vec![2, 4], m0.clone())])
+            .unwrap();
+        for r in 0..2 {
+            let ex: Vec<f32> = (0..4).map(|c| (x[r * 4 + c] - m0[r * 4 + c]).exp()).collect();
+            let s: f32 = ex.iter().sum();
+            for c in 0..4 {
+                assert_eq!(out[0].as_f32().unwrap()[r * 4 + c], ex[c] / s);
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_dot_handles_odd_rows_and_batch_boundaries() {
+        // m=5 forces a 4-row block + a 1-row remainder per batch; nb=2
+        // checks blocks never straddle a batch boundary
+        let text = r#"ENTRY %m (q: f32[2,5,3], k: f32[2,3,2]) -> (f32[2,5,2]) {
+  %q = f32[2,5,3] parameter(0)
+  %k = f32[2,3,2] parameter(1)
+  %o = f32[2,5,2] dot(f32[2,5,3] %q, f32[2,3,2] %k), lhs_batch_dims={0}, rhs_batch_dims={0}, lhs_contracting_dims={2}, rhs_contracting_dims={1}
+  ROOT %t = (f32[2,5,2]) tuple(f32[2,5,2] %o)
+}
+"#;
+        let qv: Vec<f32> = (0..30).map(|i| ((i % 11) as f32) - 4.0).collect();
+        let kv: Vec<f32> = (0..12).map(|i| ((i % 5) as f32) * 0.5 - 1.0).collect();
+        let out = run(
+            text,
+            &[Tensor::f32(vec![2, 5, 3], qv.clone()), Tensor::f32(vec![2, 3, 2], kv.clone())],
+        );
+        for b in 0..2 {
+            for i in 0..5 {
+                for j in 0..2 {
+                    let mut want = 0f32;
+                    for l in 0..3 {
+                        let a = qv[b * 15 + i * 3 + l];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        want += a * kv[b * 6 + l * 2 + j];
+                    }
+                    assert_eq!(out[0].as_f32().unwrap()[b * 10 + i * 2 + j], want);
+                }
+            }
+        }
     }
 }

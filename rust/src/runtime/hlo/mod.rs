@@ -11,7 +11,10 @@
 //!   arithmetic, `dot` (general), reshape/broadcast/transpose/slice/
 //!   concatenate/pad, reduce, select/compare, exp/log/tanh/rsqrt/sqrt/
 //!   sin/cos/power, iota, convert, integer bit ops, dynamic-slice/
-//!   dynamic-update-slice and gather — and fails loudly on anything else.
+//!   dynamic-update-slice, gather, scatter, sort, `while` over flattened
+//!   tuple state (+ get-tuple-element), and the counter-based
+//!   `rng`/`rng-bit-generator` lowerings — and fails loudly on anything
+//!   else.
 //!   Opcodes in the documented gap set parse structurally (their
 //!   attributes are ignored) so the verifier can report them as
 //!   diagnostics instead of a parse failure.
@@ -26,14 +29,18 @@
 //!   per-value last-use indices, provable buffer uniqueness (what makes
 //!   in-place mutation a checked promise instead of an `Arc::try_unwrap`
 //!   guess), a static peak-live-bytes bound, and the fusible
-//!   elementwise-chain report that seeds future fusion work.
+//!   elementwise-chain report the evaluator compiles into fused kernels.
 //! * [`eval`] — a reference evaluator over host tensors.  Values are
 //!   `Arc`-backed so shape-only ops (reshape, same-type convert) are
 //!   zero-copy and buffers are taken at their plan-computed last use —
 //!   elementwise ops and `dynamic-update-slice` then mutate in place,
 //!   keeping the stepwise decode loop's allocations bounded (asserted in
 //!   tests/alloc_counts.rs and cross-checked by the lint's
-//!   peak-live-bytes column).
+//!   peak-live-bytes column).  The planner's fusible chains run as
+//!   parse-time-compiled blocked kernels (no chain intermediates), and
+//!   `dot`/f32 `reduce` partition output rows over [`pool`]
+//!   (`GCORE_EVAL_THREADS`) with bit-identical results at any thread
+//!   count.
 //!
 //! The fixture artifacts themselves (a real 2-layer byte-level transformer:
 //! forward, KV-cached prefill/decode, PPO/SFT/BT/critic gradients, fused
@@ -46,10 +53,11 @@
 //! goldens.
 //!
 //! Known op-set gaps (tracked in ROADMAP.md, reported as structured
-//! `unsupported-op` diagnostics by the verifier): no `while`/`sort`/
-//! `rng-*`/`scatter`, so the fused `generate_rollout` artifact is not part
-//! of the fixture sets — the coordinator's stepwise `prefill`/`decode_step`
-//! path covers generation.
+//! `unsupported-op` diagnostics by the verifier): `conditional` and
+//! `custom-call` only.  With `while`/`sort`/`scatter`/`rng-*` closed, the
+//! fused `generate_rollout` artifact ships in both fixture sets and
+//! `tests/rollout_integration.rs` holds it bit-identical to the
+//! coordinator's stepwise `prefill`/`decode_step` path.
 
 // This module tree interprets untrusted-ish artifact text on the training
 // hot path: a panic here takes down a coordinator thread mid-rollout.
@@ -61,6 +69,7 @@
 pub mod eval;
 pub mod parser;
 pub mod plan;
+pub mod pool;
 pub mod verify;
 
 pub use eval::Program;

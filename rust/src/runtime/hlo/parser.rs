@@ -112,6 +112,15 @@ pub struct GatherDims {
     pub slice_sizes: Vec<usize>,
 }
 
+/// `scatter` dimension numbers (the jax embedding-grad lowering subset).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ScatterDims {
+    pub update_window_dims: Vec<usize>,
+    pub inserted_window_dims: Vec<usize>,
+    pub scatter_dims_to_operand_dims: Vec<usize>,
+    pub index_vector_dim: usize,
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum Literal {
     F32(Vec<f32>),
@@ -137,10 +146,16 @@ pub struct Instr {
     pub pad_cfg: Vec<(i64, i64, i64)>,
     pub dot: Option<DotDims>,
     pub gather: Option<GatherDims>,
+    pub scatter: Option<ScatterDims>,
     /// `dynamic_slice_sizes={...}`.
     pub dyn_sizes: Vec<usize>,
     pub direction: Option<CmpDir>,
     pub to_apply: Option<String>,
+    /// `while` loop computations: `condition=%name`, `body=%name`.
+    pub condition: Option<String>,
+    pub body: Option<String>,
+    /// Old-style `rng` op: `distribution=rng_uniform`.
+    pub distribution: Option<String>,
     pub literal: Option<Literal>,
     pub param_idx: Option<usize>,
     pub tuple_index: Option<usize>,
@@ -474,9 +489,13 @@ fn parse_instr(line: &str, by_name: &HashMap<String, usize>) -> Result<(bool, In
         pad_cfg: Vec::new(),
         dot: None,
         gather: None,
+        scatter: None,
         dyn_sizes: Vec::new(),
         direction: None,
         to_apply: None,
+        condition: None,
+        body: None,
+        distribution: None,
         literal: None,
         param_idx: None,
         tuple_index: None,
@@ -516,6 +535,8 @@ fn parse_instr(line: &str, by_name: &HashMap<String, usize>) -> Result<(bool, In
     let mut has_dot = false;
     let mut gather = GatherDims::default();
     let mut has_gather = false;
+    let mut scatter = ScatterDims::default();
+    let mut has_scatter = false;
     for attr in split_top(attr_str) {
         if attr.is_empty() {
             continue;
@@ -535,6 +556,9 @@ fn parse_instr(line: &str, by_name: &HashMap<String, usize>) -> Result<(bool, In
             "dynamic_slice_sizes" => instr.dyn_sizes = parse_usize_list(val)?,
             "direction" => instr.direction = Some(CmpDir::parse(val)?),
             "to_apply" => instr.to_apply = Some(val.trim_start_matches('%').to_string()),
+            "condition" => instr.condition = Some(val.trim_start_matches('%').to_string()),
+            "body" => instr.body = Some(val.trim_start_matches('%').to_string()),
+            "distribution" => instr.distribution = Some(val.to_string()),
             "lhs_batch_dims" => {
                 dot.lhs_batch = parse_usize_list(val)?;
                 has_dot = true;
@@ -564,22 +588,42 @@ fn parse_instr(line: &str, by_name: &HashMap<String, usize>) -> Result<(bool, In
                 has_gather = true;
             }
             "index_vector_dim" => {
-                gather.index_vector_dim = val.parse().context("index_vector_dim")?;
-                has_gather = true;
+                let v = val.parse().context("index_vector_dim")?;
+                if opcode == "scatter" {
+                    scatter.index_vector_dim = v;
+                    has_scatter = true;
+                } else {
+                    gather.index_vector_dim = v;
+                    has_gather = true;
+                }
+            }
+            "update_window_dims" => {
+                scatter.update_window_dims = parse_usize_list(val)?;
+                has_scatter = true;
+            }
+            "inserted_window_dims" => {
+                scatter.inserted_window_dims = parse_usize_list(val)?;
+                has_scatter = true;
+            }
+            "scatter_dims_to_operand_dims" => {
+                scatter.scatter_dims_to_operand_dims = parse_usize_list(val)?;
+                has_scatter = true;
             }
             "slice_sizes" => {
                 gather.slice_sizes = parse_usize_list(val)?;
                 has_gather = true;
             }
-            // metadata we can safely ignore
+            // metadata we can safely ignore (`algorithm`: rng-bit-generator
+            // is pinned to the counter-based scheme; `is_stable`: our sort
+            // comparators are strict total orders over distinct keys)
             "metadata" | "sharding" | "frontend_attributes" | "backend_config"
-            | "operand_precision" | "indices_are_sorted" | "entry_computation_layout" => {}
+            | "operand_precision" | "indices_are_sorted" | "entry_computation_layout"
+            | "algorithm" | "is_stable" => {}
             other => {
-                // documented-gap opcodes (`while`, `sort`, ...) carry
-                // attributes we don't model (condition=, body=, ...);
-                // parse them structurally so the verifier can report a
-                // structured unsupported-op diagnostic instead of this
-                // being a parse failure
+                // documented-gap opcodes (`conditional`, `custom-call`)
+                // carry attributes we don't model; parse them structurally
+                // so the verifier can report a structured unsupported-op
+                // diagnostic instead of this being a parse failure
                 if !super::verify::DOCUMENTED_GAPS.contains(&opcode.as_str()) {
                     bail!("unsupported attribute '{other}' on op '{opcode}'");
                 }
@@ -591,6 +635,9 @@ fn parse_instr(line: &str, by_name: &HashMap<String, usize>) -> Result<(bool, In
     }
     if has_gather {
         instr.gather = Some(gather);
+    }
+    if has_scatter {
+        instr.scatter = Some(scatter);
     }
     Ok((is_root, instr))
 }
@@ -681,6 +728,106 @@ ENTRY %main (p0: f32[2,3]) -> (f32[2]) {
             "ENTRY %m (a: f32[1]) -> f32[1] {\n  %a = f32[1] frobnicate(%z)\n}\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn parses_while_sort_scatter_rng_attrs() {
+        let text = r#"HloModule loopy
+
+%sort_gt_f32 (ga: f32[], gb: f32[]) -> pred[] {
+  %ga = f32[] parameter(0)
+  %gb = f32[] parameter(1)
+  ROOT %g = pred[] compare(f32[] %ga, f32[] %gb), direction=GT
+}
+
+%scatter_add_f32 (sa: f32[], sb: f32[]) -> f32[] {
+  %sa = f32[] parameter(0)
+  %sb = f32[] parameter(1)
+  ROOT %s = f32[] add(f32[] %sa, f32[] %sb)
+}
+
+%loop_cond (ci: s32[], cx: f32[4]) -> pred[] {
+  %ci = s32[] parameter(0)
+  %cx = f32[4] parameter(1)
+  %cl = s32[] constant(3)
+  ROOT %cp = pred[] compare(s32[] %ci, s32[] %cl), direction=LT
+}
+
+%loop_body (bi: s32[], bx: f32[4]) -> (s32[], f32[4]) {
+  %bi = s32[] parameter(0)
+  %bx = f32[4] parameter(1)
+  %b1 = s32[] constant(1)
+  %bn = s32[] add(s32[] %bi, s32[] %b1)
+  %bneg = f32[4] negate(f32[4] %bx)
+  ROOT %bt = (s32[], f32[4]) tuple(s32[] %bn, f32[4] %bneg)
+}
+
+ENTRY %m (i: s32[], x: f32[4], tbl: f32[8,4], idx: s32[2], upd: f32[2,4], seed: u32[]) -> (f32[4]) {
+  %i = s32[] parameter(0)
+  %x = f32[4] parameter(1)
+  %tbl = f32[8,4] parameter(2)
+  %idx = s32[2] parameter(3)
+  %upd = f32[2,4] parameter(4)
+  %seed = u32[] parameter(5)
+  %srt = f32[4] sort(f32[4] %x), dimensions={0}, to_apply=%sort_gt_f32
+  %sc = f32[8,4] scatter(f32[8,4] %tbl, s32[2] %idx, f32[2,4] %upd), update_window_dims={1}, inserted_window_dims={0}, scatter_dims_to_operand_dims={0}, index_vector_dim=1, to_apply=%scatter_add_f32
+  %bits = u32[4] rng-bit-generator(u32[] %seed), algorithm=rng_default
+  %bf = f32[4] convert(u32[4] %bits)
+  %z0 = f32[] constant(0)
+  %scf = f32[4] reduce(f32[8,4] %sc, f32[] %z0), dimensions={0}, to_apply=%scatter_add_f32
+  %w = (s32[], f32[4]) while(s32[] %i, f32[4] %srt), condition=%loop_cond, body=%loop_body
+  %out = f32[4] get-tuple-element((s32[], f32[4]) %w), index=1
+  ROOT %t = (f32[4]) tuple(f32[4] %out)
+}
+"#;
+        let m = HloModule::parse(text).unwrap();
+        let e = m.entry_computation();
+        let by = |n: &str| e.instrs.iter().find(|i| i.name == n).unwrap();
+
+        let srt = by("srt");
+        assert_eq!(srt.opcode, "sort");
+        assert_eq!(srt.dims, vec![0]);
+        assert_eq!(srt.to_apply.as_deref(), Some("sort_gt_f32"));
+
+        let sc = by("sc");
+        let sd = sc.scatter.clone().unwrap();
+        assert_eq!(sd.update_window_dims, vec![1]);
+        assert_eq!(sd.inserted_window_dims, vec![0]);
+        assert_eq!(sd.scatter_dims_to_operand_dims, vec![0]);
+        assert_eq!(sd.index_vector_dim, 1);
+        assert!(sc.gather.is_none(), "scatter attrs must not populate gather dims");
+        assert_eq!(sc.to_apply.as_deref(), Some("scatter_add_f32"));
+
+        let bits = by("bits");
+        assert_eq!(bits.opcode, "rng-bit-generator");
+        assert_eq!(bits.operands.len(), 1);
+
+        let w = by("w");
+        assert_eq!(w.opcode, "while");
+        assert!(w.shape.is_none(), "while result is tuple-shaped");
+        assert_eq!(w.operands.len(), 2);
+        assert_eq!(w.condition.as_deref(), Some("loop_cond"));
+        assert_eq!(w.body.as_deref(), Some("loop_body"));
+
+        let out = by("out");
+        assert_eq!(out.opcode, "get-tuple-element");
+        assert_eq!(out.tuple_index, Some(1));
+        assert_eq!(out.operands, vec![e.instrs.iter().position(|i| i.name == "w").unwrap()]);
+    }
+
+    #[test]
+    fn parses_rng_distribution_attr() {
+        let text = r#"ENTRY %m (a: f32[], b: f32[]) -> (f32[3]) {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  %r = f32[3] rng(f32[] %a, f32[] %b), distribution=rng_uniform
+  ROOT %t = (f32[3]) tuple(f32[3] %r)
+}
+"#;
+        let m = HloModule::parse(text).unwrap();
+        let r = &m.entry_computation().instrs[2];
+        assert_eq!(r.opcode, "rng");
+        assert_eq!(r.distribution.as_deref(), Some("rng_uniform"));
     }
 
     #[test]

@@ -24,8 +24,14 @@
 //!   against the 3 MB/token decode budget `tests/alloc_counts.rs` pins.
 //! * **`fusible_chains`** — maximal straight-line runs of same-shape
 //!   elementwise instructions where each link is the sole consumer of its
-//!   predecessor: exactly the sequences a future fusion pass can collapse
-//!   into one loop without changing buffer lifetimes.
+//!   predecessor: exactly the sequences the evaluator collapses into one
+//!   fused loop at parse time without changing buffer lifetimes.
+//! * **`comps`** — a [`CompPlan`] per computation, so `while`
+//!   condition/body computations get the same liveness/alias treatment as
+//!   the entry.  A `while` result owns its loop state (tuple element `k`
+//!   has loop-operand `k`'s shape); `get-tuple-element` is an alias onto
+//!   that state, and the while's transient charge is the larger of its
+//!   sub-computation peaks.
 //!
 //! The plan is derived from *declared* shapes, which is sound only after
 //! [`super::verify`] has proven declared == inferred for every
@@ -61,30 +67,84 @@ const ELEMENTWISE: &[&str] = &[
     "select",
 ];
 
+/// Plan for a single computation (see [`StaticPlan`] for field semantics).
+/// `while` bodies and conditions get their own plans so the evaluator can
+/// move/mutate loop-local buffers exactly as it does at the entry level.
+#[derive(Debug, Clone)]
+pub struct CompPlan {
+    pub last_use: Vec<usize>,
+    pub unique: Vec<bool>,
+    pub peak_live_bytes: usize,
+    pub fusible_chains: Vec<Vec<usize>>,
+}
+
+impl CompPlan {
+    /// `shared_params` marks every parameter buffer as shared: `while`
+    /// condition computations observe the live loop state through cheap
+    /// clones (the body still needs it afterwards), so nothing reachable
+    /// from a condition parameter may be mutated in place.
+    fn build(
+        module: &HloModule,
+        c: &Computation,
+        allow_while: bool,
+        shared_params: bool,
+    ) -> CompPlan {
+        let last_use = compute_last_use(c);
+        let (unique, peak_live_bytes) =
+            alias_and_liveness(module, c, &last_use, allow_while, shared_params);
+        let fusible_chains = fusible_chains(c, &last_use);
+        CompPlan { last_use, unique, peak_live_bytes, fusible_chains }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct StaticPlan {
-    /// `last_use[i]` = index of the last instruction consuming value `i`
-    /// (`usize::MAX` for the root, root operands, and unused values).
+    /// `last_use[i]` = index of the last *entry* instruction consuming
+    /// value `i` (`usize::MAX` for the root, root operands, and unused
+    /// values).
     pub last_use: Vec<usize>,
     /// `unique[i]` = taking value `i`'s slot yields the only handle on its
     /// buffer, so in-place mutation is safe.
     pub unique: Vec<bool>,
     /// Static bound on simultaneously-live value bytes (see module doc for
-    /// the model).
+    /// the model).  For `while`, the bound charges the loop state once plus
+    /// the larger of the condition/body sub-computation peaks.
     pub peak_live_bytes: usize,
     /// Maximal fusible elementwise runs (instruction indices, in order);
     /// only chains of length ≥ 2 are reported.
     pub fusible_chains: Vec<Vec<usize>>,
+    /// One plan per computation, indexed like `module.computations`
+    /// (the entry's is duplicated into the flat fields above).
+    pub comps: Vec<CompPlan>,
 }
 
 impl StaticPlan {
-    /// Build the plan for the entry computation of a verified module.
+    /// Build the plan for every computation of a verified module.
     pub fn build(module: &HloModule) -> StaticPlan {
-        let entry = module.entry_computation();
-        let last_use = compute_last_use(entry);
-        let (unique, peak_live_bytes) = alias_and_liveness(entry, &last_use);
-        let fusible_chains = fusible_chains(entry, &last_use);
-        StaticPlan { last_use, unique, peak_live_bytes, fusible_chains }
+        // computations referenced as a `while` condition= get shared
+        // parameter groups (see `CompPlan::build`)
+        let cond_names: Vec<&str> = module
+            .computations
+            .iter()
+            .flat_map(|c| c.instrs.iter())
+            .filter(|ins| ins.opcode == "while")
+            .filter_map(|ins| ins.condition.as_deref())
+            .collect();
+        let comps: Vec<CompPlan> = module
+            .computations
+            .iter()
+            .map(|c| {
+                CompPlan::build(module, c, true, cond_names.contains(&c.name.as_str()))
+            })
+            .collect();
+        let e = &comps[module.entry];
+        StaticPlan {
+            last_use: e.last_use.clone(),
+            unique: e.unique.clone(),
+            peak_live_bytes: e.peak_live_bytes,
+            fusible_chains: e.fusible_chains.clone(),
+            comps,
+        }
     }
 }
 
@@ -117,6 +177,9 @@ fn is_alias(entry: &Computation, i: usize) -> bool {
     let ins = &entry.instrs[i];
     match ins.opcode.as_str() {
         "reshape" => true,
+        // extracting a tuple element hands out another handle on the loop
+        // state's buffers (or moves one out, when the tuple is taken)
+        "get-tuple-element" => true,
         "convert" => {
             // same-dtype convert returns the value unchanged
             let out = ins.shape.as_ref();
@@ -128,15 +191,24 @@ fn is_alias(entry: &Computation, i: usize) -> bool {
 }
 
 fn value_bytes(entry: &Computation, i: usize) -> usize {
-    match entry.instrs[i].shape.as_ref() {
+    let ins = &entry.instrs[i];
+    match ins.shape.as_ref() {
         Some(sh) => sh.num_elements() * dtype_bytes(sh.dtype),
-        None => 0, // tuple root: its elements are the operands' buffers
+        // a while result owns its loop state (element k has operand k's
+        // shape); other tuple-shaped values (the root) own nothing
+        None if ins.opcode == "while" => ins
+            .operands
+            .iter()
+            .filter_map(|&o| entry.instrs[o].shape.as_ref())
+            .map(|sh| sh.num_elements() * dtype_bytes(sh.dtype))
+            .sum(),
+        None => 0,
     }
 }
 
 /// Which operand the evaluator mutates in place when it owns the buffer
 /// (f32 elementwise ops mutate the lhs / on-true branch;
-/// `dynamic-update-slice` mutates the base for every dtype).
+/// `dynamic-update-slice` and `scatter` mutate the base/operand).
 fn inplace_operand(entry: &Computation, i: usize) -> Option<usize> {
     let ins = &entry.instrs[i];
     let f32_out = matches!(
@@ -145,11 +217,37 @@ fn inplace_operand(entry: &Computation, i: usize) -> Option<usize> {
     );
     let slot = match ins.opcode.as_str() {
         "dynamic-update-slice" => 0,
+        "scatter" => 0,
         "select" if f32_out => 1,
         op if f32_out && ELEMENTWISE.contains(&op) && op != "select" => 0,
         _ => return None,
     };
     ins.operands.get(slot).copied()
+}
+
+/// Per-iteration transient bound for a `while`: the larger of the
+/// condition/body sub-computation peaks (the loop state itself is charged
+/// as the while's own bytes).  `allow_while` is false when already inside
+/// a sub-computation — the verifier rejects nested `while`, so this only
+/// guards unverified input against unbounded recursion.
+fn while_transient_bytes(
+    module: &HloModule,
+    entry: &Computation,
+    i: usize,
+    allow_while: bool,
+) -> usize {
+    let ins = &entry.instrs[i];
+    if ins.opcode != "while" || !allow_while {
+        return 0;
+    }
+    [(ins.condition.as_deref(), true), (ins.body.as_deref(), false)]
+        .into_iter()
+        .filter_map(|(name, shared)| {
+            let sub = module.computation(name?).ok()?;
+            Some(CompPlan::build(module, sub, false, shared).peak_live_bytes)
+        })
+        .max()
+        .unwrap_or(0)
 }
 
 /// `dot` regroups each operand into canonical [batch, free, contract] /
@@ -185,10 +283,16 @@ fn dot_transient_bytes(entry: &Computation, i: usize) -> usize {
     transient
 }
 
-/// One pass over the entry computation computing (a) per-value buffer
-/// uniqueness via alias groups and (b) the peak-live-bytes bound via a
+/// One pass over a computation computing (a) per-value buffer uniqueness
+/// via alias groups and (b) the peak-live-bytes bound via a
 /// refcount-per-group simulation in instruction order.
-fn alias_and_liveness(entry: &Computation, last_use: &[usize]) -> (Vec<bool>, usize) {
+fn alias_and_liveness(
+    module: &HloModule,
+    entry: &Computation,
+    last_use: &[usize],
+    allow_while: bool,
+    shared_params: bool,
+) -> (Vec<bool>, usize) {
     let n = entry.instrs.len();
     // --- alias groups: gid[i] identifies the underlying buffer; an alias
     // created without taking its operand leaves the group shared forever
@@ -213,6 +317,9 @@ fn alias_and_liveness(entry: &Computation, last_use: &[usize]) -> (Vec<bool>, us
             }
         } else {
             gid[i] = fresh(&mut shared);
+            if shared_params && ins.opcode == "parameter" {
+                shared[gid[i]] = true;
+            }
         }
     }
     let unique: Vec<bool> =
@@ -234,7 +341,11 @@ fn alias_and_liveness(entry: &Computation, last_use: &[usize]) -> (Vec<bool>, us
             None => false,
         };
         let alloc = if alias || inplace { 0 } else { value_bytes(entry, i) };
-        peak = peak.max(live + alloc + dot_transient_bytes(entry, i));
+        peak = peak.max(
+            live + alloc
+                + dot_transient_bytes(entry, i)
+                + while_transient_bytes(module, entry, i, allow_while),
+        );
         // release every operand handle this instruction consumes (an alias
         // that takes its operand *moves* the handle instead)
         let mut seen_ops: Vec<usize> = Vec::new();
@@ -374,6 +485,54 @@ mod tests {
              ROOT %t = (f32[4]) tuple(f32[4] %m2)\n}\n",
         );
         assert_eq!(p.peak_live_bytes, 16 + 4 + 16);
+    }
+
+    #[test]
+    fn while_gets_sub_plans_and_charges_state_plus_body_peak() {
+        let text = r#"%wc (ci: s32[], cx: f32[4]) -> pred[] {
+  %ci = s32[] parameter(0)
+  %cx = f32[4] parameter(1)
+  %cl = s32[] constant(3)
+  ROOT %cp = pred[] compare(s32[] %ci, s32[] %cl), direction=LT
+}
+
+%wb (bi: s32[], bx: f32[4]) -> (s32[], f32[4]) {
+  %bi = s32[] parameter(0)
+  %bx = f32[4] parameter(1)
+  %b1 = s32[] constant(1)
+  %bn = s32[] add(s32[] %bi, s32[] %b1)
+  %bneg = f32[4] negate(f32[4] %bx)
+  ROOT %bt = (s32[], f32[4]) tuple(s32[] %bn, f32[4] %bneg)
+}
+
+ENTRY %m (i: s32[], x: f32[4]) -> (f32[4]) {
+  %i = s32[] parameter(0)
+  %x = f32[4] parameter(1)
+  %w = (s32[], f32[4]) while(s32[] %i, f32[4] %x), condition=%wc, body=%wb
+  %out = f32[4] get-tuple-element((s32[], f32[4]) %w), index=1
+  ROOT %t = (f32[4]) tuple(f32[4] %out)
+}
+"#;
+        let m = HloModule::parse(text).unwrap();
+        let p = StaticPlan::build(&m);
+        assert_eq!(p.comps.len(), 3);
+        // the entry plan is the flat one
+        assert_eq!(p.comps[2].last_use, p.last_use);
+        // gte takes the while's only handle — state stays uniquely owned
+        let entry = m.entry_computation();
+        assert_eq!(p.last_use[2], 3); // while consumed by the gte
+        assert!(p.unique[3], "{:?}", p.unique);
+        assert_eq!(p.last_use[entry.root], usize::MAX);
+        // the peak charges the 20-byte loop state (4B counter + 16B vec)
+        // at the while, on top of the live operands
+        assert!(p.peak_live_bytes >= 20, "{}", p.peak_live_bytes);
+        // body plan sees its own elementwise structure
+        let body = &p.comps[1];
+        assert_eq!(body.last_use.len(), 6);
+        // condition parameters are statically shared (the loop state must
+        // survive the condition for the body), body parameters are not
+        assert!(p.comps[0].unique.iter().take(2).all(|u| !u), "{:?}", p.comps[0].unique);
+        assert!(p.comps[1].unique[1], "{:?}", p.comps[1].unique);
     }
 
     #[test]

@@ -1,0 +1,116 @@
+//! Deterministic fork–join helper for the evaluator's data-parallel
+//! kernels (`dot`, `reduce`).
+//!
+//! `GCORE_EVAL_THREADS` (default 1) sets the worker count.  Work is
+//! partitioned into contiguous spans of *output* rows, and each row is
+//! computed exactly as the sequential kernel would compute it — the
+//! partition never changes any per-element accumulation order, so results
+//! are bit-identical for every thread count.  That invariant is what lets
+//! the nightly TSan job hammer the pool while the golden tests keep
+//! asserting exact equality.
+//!
+//! Threads are scoped (`std::thread::scope`), so the pool holds no global
+//! state, needs no shutdown, and borrows the caller's buffers directly.
+//! With one thread (the default, and the right choice on single-core CI
+//! runners) no thread is ever spawned.
+
+use std::sync::OnceLock;
+
+/// Worker count from `GCORE_EVAL_THREADS`, clamped to `[1, 64]`.
+/// Unset/unparseable means 1: fully sequential, no spawns.
+pub fn threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("GCORE_EVAL_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .map(|n| n.clamp(1, 64))
+            .unwrap_or(1)
+    })
+}
+
+/// Split `data` into at most `threads` contiguous parts aligned to `unit`
+/// elements and run `f(first_row, part)` over each part — in parallel
+/// when `threads > 1`.
+///
+/// `f` must compute every `unit`-sized row of its part independently of
+/// rows outside the part; since the parts tile the rows exactly, the
+/// result is identical to `f(0, data)` for any thread count.  `data.len()`
+/// must be a multiple of `unit`.
+pub fn run_parts<T, F>(threads: usize, data: &mut [T], unit: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() || unit == 0 {
+        return;
+    }
+    debug_assert_eq!(data.len() % unit, 0, "partial trailing row");
+    let rows = data.len() / unit;
+    let nthreads = threads.clamp(1, rows);
+    if nthreads <= 1 {
+        f(0, data);
+        return;
+    }
+    let per = rows.div_ceil(nthreads);
+    std::thread::scope(|s| {
+        let fr = &f;
+        let mut rest = data;
+        let mut row0 = 0usize;
+        while !rest.is_empty() {
+            let take = (per * unit).min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let r0 = row0;
+            row0 += take / unit;
+            s.spawn(move || fr(r0, head));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::disallowed_methods)]
+
+    use super::*;
+
+    fn square_rows(threads: usize, n_rows: usize, unit: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..n_rows * unit).map(|i| i as f32).collect();
+        run_parts(threads, &mut v, unit, |row0, part| {
+            for (k, chunk) in part.chunks_mut(unit).enumerate() {
+                let row = row0 + k;
+                for x in chunk.iter_mut() {
+                    *x = *x * *x + row as f32;
+                }
+            }
+        });
+        v
+    }
+
+    #[test]
+    fn any_thread_count_is_bit_identical() {
+        let want = square_rows(1, 13, 7);
+        for threads in [2, 3, 4, 8, 64] {
+            assert_eq!(square_rows(threads, 13, 7), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn more_threads_than_rows_is_fine() {
+        assert_eq!(square_rows(16, 2, 3), square_rows(1, 2, 3));
+    }
+
+    #[test]
+    fn empty_and_zero_unit_are_no_ops() {
+        let mut v: Vec<f32> = vec![];
+        run_parts(4, &mut v, 4, |_, _| panic!("must not run"));
+        let mut v2 = vec![1.0f32];
+        run_parts(4, &mut v2, 0, |_, _| panic!("must not run"));
+        assert_eq!(v2, vec![1.0]);
+    }
+
+    #[test]
+    fn default_thread_count_is_at_least_one() {
+        assert!(threads() >= 1);
+    }
+}

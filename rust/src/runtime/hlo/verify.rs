@@ -7,8 +7,8 @@
 //! re-derives every instruction's output shape from its operands and
 //! attributes and checks it against the declared shape, so a corrupt or
 //! drifted artifact fails at *load* with the instruction name, opcode and
-//! both shapes.  The documented op-set gaps (`while`, `sort`, `scatter`,
-//! `rng-*`) become structured [`Diagnostic`]s instead of runtime errors.
+//! both shapes.  The remaining op-set gaps (`conditional`, `custom-call`)
+//! become structured [`Diagnostic`]s instead of runtime errors.
 //!
 //! Entry points:
 //!
@@ -35,15 +35,7 @@ use crate::runtime::tensor::Dtype;
 /// ROADMAP.md).  The verifier reports these as [`DiagKind::UnsupportedOp`]
 /// with a `documented op-set gap` note, which is what the machine-readable
 /// gap report in `gcore hlo-lint` is built from.
-pub const DOCUMENTED_GAPS: &[&str] = &[
-    "while",
-    "sort",
-    "scatter",
-    "rng",
-    "rng-bit-generator",
-    "conditional",
-    "custom-call",
-];
+pub const DOCUMENTED_GAPS: &[&str] = &["conditional", "custom-call"];
 
 /// Diagnostic category (stable, machine-readable).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -252,6 +244,90 @@ pub fn infer_shape(m: &HloModule, c: &Computation, idx: usize) -> Result<Option<
 
     let opcode = ins.opcode.as_str();
     if opcode == "tuple" {
+        return Ok(None);
+    }
+    if opcode == "while" {
+        // flattened loop-carried state: N operands; condition/body each
+        // take N matching parameters (no tuple-shaped parameters), the
+        // body root is a tuple of N values with the same shapes, and the
+        // condition root is a scalar pred.  The result is tuple-shaped;
+        // element k has loop-state shape k (consumed via get-tuple-element).
+        if ins.operands.is_empty() {
+            bail!("while with no loop-carried state");
+        }
+        let cond_name = ins
+            .condition
+            .as_deref()
+            .ok_or_else(|| anyhow!("while without condition="))?;
+        let body_name = ins.body.as_deref().ok_or_else(|| anyhow!("while without body="))?;
+        let cond = m.computation(cond_name)?;
+        let body = m.computation(body_name)?;
+        let n = ins.operands.len();
+        for (what, comp) in [("condition", cond), ("body", body)] {
+            if comp.params.len() != n {
+                bail!(
+                    "while {what} '%{}' has {} parameters but the loop carries {n} values",
+                    comp.name,
+                    comp.params.len()
+                );
+            }
+            // also rules out condition/body reference cycles, so the
+            // planner and evaluator can recurse into sub-computations
+            if comp.instrs.iter().any(|i| i.opcode == "while") {
+                bail!("nested while (inside {what} '%{}') is unsupported", comp.name);
+            }
+        }
+        for k in 0..n {
+            let s = osh(k)?;
+            for (what, comp) in [("condition", cond), ("body", body)] {
+                let p = comp.params[k];
+                let psh = comp.instrs[p].shape.as_ref().ok_or_else(|| {
+                    anyhow!("while {what} parameter #{k} is tuple-shaped")
+                })?;
+                if psh != s {
+                    bail!(
+                        "loop state #{k} is {} but {what} '%{}' parameter %{} is {}",
+                        s.to_text(),
+                        comp.name,
+                        comp.instrs[p].name,
+                        psh.to_text()
+                    );
+                }
+            }
+        }
+        match cond.instrs[cond.root].shape.as_ref() {
+            Some(sh) if sh.dims.is_empty() && sh.dtype == HDtype::Pred => {}
+            Some(sh) => bail!(
+                "while condition '%{cond_name}' root must be pred[], got {}",
+                sh.to_text()
+            ),
+            None => bail!("while condition '%{cond_name}' root is tuple-shaped"),
+        }
+        let broot = &body.instrs[body.root];
+        if broot.opcode != "tuple" {
+            bail!(
+                "while body '%{body_name}' root must be a tuple, got '{}'",
+                broot.opcode
+            );
+        }
+        if broot.operands.len() != n {
+            bail!(
+                "while body '%{body_name}' root tuple has {} elements but the loop carries {n} values",
+                broot.operands.len()
+            );
+        }
+        for (k, &op) in broot.operands.iter().enumerate() {
+            let s = osh(k)?;
+            match body.instrs[op].shape.as_ref() {
+                Some(sh) if sh == s => {}
+                Some(sh) => bail!(
+                    "while body '%{body_name}' root element #{k} is {} but loop state #{k} is {}",
+                    sh.to_text(),
+                    s.to_text()
+                ),
+                None => bail!("while body '%{body_name}' root element #{k} is tuple-shaped"),
+            }
+        }
         return Ok(None);
     }
     if BINARY_OPS.contains(&opcode) {
@@ -741,6 +817,192 @@ pub fn infer_shape(m: &HloModule, c: &Computation, idx: usize) -> Result<Option<
             }
             shaped(HDtype::F32, dims)
         }
+        "get-tuple-element" => {
+            arity(1)?;
+            let src = &c.instrs[ins.operands[0]];
+            if src.shape.is_some() {
+                bail!(
+                    "get-tuple-element operand %{} is not tuple-shaped",
+                    src.name
+                );
+            }
+            let k = ins
+                .tuple_index
+                .ok_or_else(|| anyhow!("get-tuple-element without index="))?;
+            // tuple-shaped values (while results, root tuples) carry their
+            // element shapes on their own operands
+            if k >= src.operands.len() {
+                bail!(
+                    "index={k} out of range for tuple %{} with {} elements",
+                    src.name,
+                    src.operands.len()
+                );
+            }
+            c.instrs[src.operands[k]]
+                .shape
+                .as_ref()
+                .ok_or_else(|| anyhow!("tuple element #{k} is itself tuple-shaped"))?
+                .clone()
+        }
+        "sort" => {
+            arity(1)?;
+            let a = osh(0)?;
+            if a.dtype != HDtype::F32 {
+                bail!("sort operand must be f32, got {}", a.dtype.name());
+            }
+            let axis = match ins.dims.as_slice() {
+                [d] => *d,
+                other => bail!("sort needs a single dimensions= axis, got {other:?}"),
+            };
+            if axis >= a.dims.len() {
+                bail!("sort axis {axis} out of range for {}", a.to_text());
+            }
+            let cmp = ins
+                .to_apply
+                .as_deref()
+                .ok_or_else(|| anyhow!("sort without to_apply= comparator"))?;
+            check_sort_comparator(m, cmp, a.dtype)?;
+            a.clone()
+        }
+        "scatter" => {
+            arity(3)?;
+            let (a, idxs, upd) = (osh(0)?, osh(1)?, osh(2)?);
+            if a.dtype != HDtype::F32 || upd.dtype != HDtype::F32 {
+                bail!(
+                    "scatter operand/updates must be f32, got {} and {}",
+                    a.dtype.name(),
+                    upd.dtype.name()
+                );
+            }
+            if idxs.dtype != HDtype::S32 {
+                bail!("scatter indices must be s32, got {}", idxs.dtype.name());
+            }
+            let sd = ins
+                .scatter
+                .as_ref()
+                .ok_or_else(|| anyhow!("scatter without dimension numbers"))?;
+            let comb = ins
+                .to_apply
+                .as_deref()
+                .ok_or_else(|| anyhow!("scatter without to_apply= combiner"))?;
+            check_reduce_body(m, comb, a.dtype)
+                .map_err(|e| anyhow!("scatter combiner: {e:#}"))?;
+            let orank = a.dims.len();
+            if sd.index_vector_dim > idxs.dims.len() {
+                bail!(
+                    "index_vector_dim={} out of range for indices {}",
+                    sd.index_vector_dim,
+                    idxs.to_text()
+                );
+            }
+            let mut batch_dims = idxs.dims.clone();
+            let ncomp = if sd.index_vector_dim < idxs.dims.len() {
+                batch_dims.remove(sd.index_vector_dim)
+            } else {
+                1
+            };
+            if ncomp != sd.scatter_dims_to_operand_dims.len() {
+                bail!(
+                    "{ncomp} index components != scatter_dims_to_operand_dims={:?}",
+                    sd.scatter_dims_to_operand_dims
+                );
+            }
+            for &d in &sd.scatter_dims_to_operand_dims {
+                if d >= orank {
+                    bail!(
+                        "scatter_dims_to_operand_dims={:?} out of range for rank {orank}",
+                        sd.scatter_dims_to_operand_dims
+                    );
+                }
+            }
+            for &d in &sd.inserted_window_dims {
+                if d >= orank {
+                    bail!(
+                        "inserted_window_dims={:?} out of range for rank {orank}",
+                        sd.inserted_window_dims
+                    );
+                }
+            }
+            let window_operand_dims: Vec<usize> =
+                (0..orank).filter(|i| !sd.inserted_window_dims.contains(i)).collect();
+            if sd.update_window_dims.len() != window_operand_dims.len() {
+                bail!(
+                    "update_window_dims={:?} must name one updates axis per non-inserted operand dim ({})",
+                    sd.update_window_dims,
+                    window_operand_dims.len()
+                );
+            }
+            let urank = upd.dims.len();
+            let mut is_window = vec![false; urank];
+            for &ax in &sd.update_window_dims {
+                if ax >= urank || is_window[ax] {
+                    bail!(
+                        "update_window_dims={:?} invalid for updates rank {urank}",
+                        sd.update_window_dims
+                    );
+                }
+                is_window[ax] = true;
+            }
+            for (k, &ax) in sd.update_window_dims.iter().enumerate() {
+                let od = window_operand_dims[k];
+                if upd.dims[ax] > a.dims[od] {
+                    bail!(
+                        "update window size {} exceeds operand axis {od} (size {})",
+                        upd.dims[ax],
+                        a.dims[od]
+                    );
+                }
+            }
+            let update_batch: Vec<usize> = (0..urank).filter(|i| !is_window[*i]).collect();
+            if update_batch.len() != batch_dims.len() {
+                bail!(
+                    "updates have {} batch axes but indices imply {}",
+                    update_batch.len(),
+                    batch_dims.len()
+                );
+            }
+            for (k, &ax) in update_batch.iter().enumerate() {
+                if upd.dims[ax] != batch_dims[k] {
+                    bail!(
+                        "updates batch axis {ax} (size {}) != indices batch dim #{k} (size {})",
+                        upd.dims[ax],
+                        batch_dims[k]
+                    );
+                }
+            }
+            a.clone()
+        }
+        "rng-bit-generator" => {
+            arity(1)?;
+            let a = osh(0)?;
+            if !a.dims.is_empty() || a.dtype != HDtype::U32 {
+                bail!("rng-bit-generator state must be scalar u32, got {}", a.to_text());
+            }
+            let out = declared
+                .ok_or_else(|| anyhow!("rng-bit-generator without declared shape"))?;
+            if out.dtype != HDtype::U32 {
+                bail!("rng-bit-generator output must be u32, got {}", out.dtype.name());
+            }
+            out.clone()
+        }
+        "rng" => {
+            arity(2)?;
+            for (what, k) in [("low", 0), ("high", 1)] {
+                let s = osh(k)?;
+                if !s.dims.is_empty() || s.dtype != HDtype::F32 {
+                    bail!("rng {what} bound must be f32[], got {}", s.to_text());
+                }
+            }
+            match ins.distribution.as_deref() {
+                Some("rng_uniform") => {}
+                other => bail!("rng distribution {other:?} unsupported (only rng_uniform)"),
+            }
+            let out = declared.ok_or_else(|| anyhow!("rng without declared shape"))?;
+            if out.dtype != HDtype::F32 {
+                bail!("rng output must be f32, got {}", out.dtype.name());
+            }
+            out.clone()
+        }
         other => {
             let gap = if DOCUMENTED_GAPS.contains(&other) {
                 " (documented op-set gap — see ROADMAP.md)"
@@ -807,6 +1069,49 @@ fn check_reduce_body(m: &HloModule, name: &str, dtype: HDtype) -> Result<()> {
     Ok(())
 }
 
+/// Validate a sort comparator: two scalar parameters of the key dtype and
+/// a root `compare` over exactly those parameters *in order*, with an
+/// ordering direction (GT/GE = descending, LT/LE = ascending — the
+/// evaluator keys its sort off the direction, so EQ/NE are rejected).
+fn check_sort_comparator(m: &HloModule, name: &str, dtype: HDtype) -> Result<()> {
+    use crate::runtime::hlo::parser::CmpDir;
+    let cmp = m.computation(name)?;
+    if cmp.params.len() != 2 {
+        bail!(
+            "sort comparator '%{name}' has {} parameters, expected 2",
+            cmp.params.len()
+        );
+    }
+    for &p in &cmp.params {
+        let sh = cmp.instrs[p]
+            .shape
+            .as_ref()
+            .ok_or_else(|| anyhow!("sort comparator '%{name}' parameter is tuple-shaped"))?;
+        if !sh.dims.is_empty() || sh.dtype != dtype {
+            bail!(
+                "sort comparator '%{name}' parameter %{} is {}, expected {}[]",
+                cmp.instrs[p].name,
+                sh.to_text(),
+                dtype.name()
+            );
+        }
+    }
+    let root = &cmp.instrs[cmp.root];
+    if root.opcode != "compare" {
+        bail!(
+            "sort comparator '%{name}' root op '{}' is not a compare",
+            root.opcode
+        );
+    }
+    if root.operands != cmp.params {
+        bail!("sort comparator '%{name}' root must compare the two parameters in order");
+    }
+    match root.direction {
+        Some(CmpDir::Gt | CmpDir::Ge | CmpDir::Lt | CmpDir::Le) => Ok(()),
+        other => bail!("sort comparator '%{name}' direction {other:?} is not an ordering"),
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Module-level verification
 // ---------------------------------------------------------------------------
@@ -817,12 +1122,19 @@ pub fn verify_module(m: &HloModule) -> Vec<Diagnostic> {
     let mut diags = Vec::new();
 
     // unreferenced non-entry computations (dead reduce bodies usually mean
-    // an emitter bug or a mangled to_apply= reference)
+    // an emitter bug or a mangled to_apply=/condition=/body= reference)
     let mut referenced = vec![false; m.computations.len()];
     referenced[m.entry] = true;
     for c in &m.computations {
         for ins in &c.instrs {
-            if let Some(name) = ins.to_apply.as_deref() {
+            for name in [
+                ins.to_apply.as_deref(),
+                ins.condition.as_deref(),
+                ins.body.as_deref(),
+            ]
+            .into_iter()
+            .flatten()
+            {
                 if let Some(k) = m.computations.iter().position(|cc| cc.name == name) {
                     referenced[k] = true;
                 }
@@ -953,6 +1265,8 @@ fn classify_error(opcode: &str, msg: &str) -> DiagKind {
     if msg.contains("unsupported opcode") {
         DiagKind::UnsupportedOp
     } else if msg.contains("reduce body")
+        || msg.contains("comparator")
+        || msg.contains("combiner")
         || (opcode == "reduce" && msg.contains("computation"))
     {
         DiagKind::BadReduce
@@ -1180,7 +1494,7 @@ ENTRY %m (x: f32[2,3]) -> (f32[2]) {
 
     #[test]
     fn documented_gaps_are_structured_diagnostics() {
-        for op in ["while", "sort", "scatter", "rng-bit-generator"] {
+        for op in ["conditional", "custom-call"] {
             let text = format!(
                 "ENTRY %m (x: f32[2]) -> (f32[2]) {{\n  %x = f32[2] parameter(0)\n  \
                  %w = f32[2] {op}(f32[2] %x)\n  ROOT %t = (f32[2]) tuple(f32[2] %w)\n}}\n"
@@ -1193,6 +1507,147 @@ ENTRY %m (x: f32[2,3]) -> (f32[2]) {
                 "{op}: {diags:?}"
             );
         }
+    }
+
+    const LOOP: &str = r#"%loop_cond (ci: s32[], cx: f32[4]) -> pred[] {
+  %ci = s32[] parameter(0)
+  %cx = f32[4] parameter(1)
+  %cl = s32[] constant(3)
+  ROOT %cp = pred[] compare(s32[] %ci, s32[] %cl), direction=LT
+}
+
+%loop_body (bi: s32[], bx: f32[4]) -> (s32[], f32[4]) {
+  %bi = s32[] parameter(0)
+  %bx = f32[4] parameter(1)
+  %b1 = s32[] constant(1)
+  %bn = s32[] add(s32[] %bi, s32[] %b1)
+  %bneg = f32[4] negate(f32[4] %bx)
+  ROOT %bt = (s32[], f32[4]) tuple(s32[] %bn, f32[4] %bneg)
+}
+
+ENTRY %m (i: s32[], x: f32[4]) -> (f32[4]) {
+  %i = s32[] parameter(0)
+  %x = f32[4] parameter(1)
+  %w = (s32[], f32[4]) while(s32[] %i, f32[4] %x), condition=%loop_cond, body=%loop_body
+  %out = f32[4] get-tuple-element((s32[], f32[4]) %w), index=1
+  ROOT %t = (f32[4]) tuple(f32[4] %out)
+}
+"#;
+
+    #[test]
+    fn while_loop_verifies_cleanly() {
+        let diags = verify_src(LOOP);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn while_state_shape_mismatch_flagged() {
+        // body returns f32[5] for a f32[4] loop slot
+        let text = LOOP
+            .replace("%bneg = f32[4] negate(f32[4] %bx)", "%bneg = f32[4] negate(f32[4] %bx)\n  %bz = f32[] constant(0)\n  %bpad = f32[5] pad(f32[4] %bneg, f32[] %bz), padding=0_1")
+            .replace(
+                "ROOT %bt = (s32[], f32[4]) tuple(s32[] %bn, f32[4] %bneg)",
+                "ROOT %bt = (s32[], f32[5]) tuple(s32[] %bn, f32[5] %bpad)",
+            );
+        let diags = verify_src(&text);
+        assert!(
+            diags
+                .iter()
+                .any(|d| d.opcode == "while" && d.message.contains("root element #1")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn gte_index_out_of_range_flagged() {
+        let text = LOOP.replace("index=1", "index=2");
+        let diags = verify_src(&text);
+        assert!(
+            diags.iter().any(|d| d.opcode == "get-tuple-element"
+                && d.message.contains("out of range")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn sort_scatter_rng_verify_cleanly() {
+        let text = r#"%sort_gt_f32 (sg_lhs: f32[], sg_rhs: f32[]) -> pred[] {
+  %sg_lhs = f32[] parameter(0)
+  %sg_rhs = f32[] parameter(1)
+  ROOT %sg_out = pred[] compare(f32[] %sg_lhs, f32[] %sg_rhs), direction=GT
+}
+
+%scatter_add_f32 (sa_lhs: f32[], sa_rhs: f32[]) -> f32[] {
+  %sa_lhs = f32[] parameter(0)
+  %sa_rhs = f32[] parameter(1)
+  ROOT %sa_out = f32[] add(f32[] %sa_lhs, f32[] %sa_rhs)
+}
+
+ENTRY %m (x: f32[2,4], tbl: f32[8,4], idx: s32[2], upd: f32[2,4], seed: u32[], lo: f32[], hi: f32[]) -> (f32[2,4], f32[8,4], u32[2,4], f32[3]) {
+  %x = f32[2,4] parameter(0)
+  %tbl = f32[8,4] parameter(1)
+  %idx = s32[2] parameter(2)
+  %upd = f32[2,4] parameter(3)
+  %seed = u32[] parameter(4)
+  %lo = f32[] parameter(5)
+  %hi = f32[] parameter(6)
+  %srt = f32[2,4] sort(f32[2,4] %x), dimensions={1}, to_apply=%sort_gt_f32
+  %sc = f32[8,4] scatter(f32[8,4] %tbl, s32[2] %idx, f32[2,4] %upd), update_window_dims={1}, inserted_window_dims={0}, scatter_dims_to_operand_dims={0}, index_vector_dim=1, to_apply=%scatter_add_f32
+  %bits = u32[2,4] rng-bit-generator(u32[] %seed), algorithm=rng_default
+  %u = f32[3] rng(f32[] %lo, f32[] %hi), distribution=rng_uniform
+  ROOT %t = (f32[2,4], f32[8,4], u32[2,4], f32[3]) tuple(f32[2,4] %srt, f32[8,4] %sc, u32[2,4] %bits, f32[3] %u)
+}
+"#;
+        let diags = verify_src(text);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn sort_comparator_must_be_an_ordering() {
+        let text = r#"%sort_eq (a: f32[], b: f32[]) -> pred[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = pred[] compare(f32[] %a, f32[] %b), direction=EQ
+}
+
+ENTRY %m (x: f32[4]) -> (f32[4]) {
+  %x = f32[4] parameter(0)
+  %s = f32[4] sort(f32[4] %x), dimensions={0}, to_apply=%sort_eq
+  ROOT %t = (f32[4]) tuple(f32[4] %s)
+}
+"#;
+        let diags = verify_src(text);
+        assert!(
+            diags.iter().any(|d| d.kind == DiagKind::BadReduce
+                && d.opcode == "sort"
+                && d.message.contains("not an ordering")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn scatter_batch_mismatch_flagged() {
+        let text = r#"%scatter_add_f32 (sa_lhs: f32[], sa_rhs: f32[]) -> f32[] {
+  %sa_lhs = f32[] parameter(0)
+  %sa_rhs = f32[] parameter(1)
+  ROOT %sa_out = f32[] add(f32[] %sa_lhs, f32[] %sa_rhs)
+}
+
+ENTRY %m (tbl: f32[8,4], idx: s32[3], upd: f32[2,4]) -> (f32[8,4]) {
+  %tbl = f32[8,4] parameter(0)
+  %idx = s32[3] parameter(1)
+  %upd = f32[2,4] parameter(2)
+  %sc = f32[8,4] scatter(f32[8,4] %tbl, s32[3] %idx, f32[2,4] %upd), update_window_dims={1}, inserted_window_dims={0}, scatter_dims_to_operand_dims={0}, index_vector_dim=1, to_apply=%scatter_add_f32
+  ROOT %t = (f32[8,4]) tuple(f32[8,4] %sc)
+}
+"#;
+        let diags = verify_src(text);
+        assert!(
+            diags
+                .iter()
+                .any(|d| d.opcode == "scatter" && d.message.contains("batch")),
+            "{diags:?}"
+        );
     }
 
     #[test]

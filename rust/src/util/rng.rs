@@ -25,6 +25,87 @@ pub struct RngState {
     pub spare_normal_bits: Option<u64>,
 }
 
+/// lowbias32-style u32 mixer — the counter-based hash the fixture
+/// artifacts' `rng-bit-generator` lowering draws from (mirrors
+/// `python/compile/fixturegen/modelgen.py::M.hash_u32` exactly; see
+/// `runtime/hlo/eval.rs` and the rollout sampler, which must stay
+/// bit-identical to the fused graph).
+pub fn hash_u32(mut z: u32) -> u32 {
+    for (mul, shift) in [(0xED5AD4BBu32, 17), (0xAC4C1B51, 11), (0x31848BAB, 15)] {
+        z = (z ^ (z >> shift)).wrapping_mul(mul);
+    }
+    z ^ (z >> 14)
+}
+
+/// Counter base for the rollout sampler's Gumbel stream: the same
+/// `seed · 0x9E3779B1` the fused `generate_rollout` graph computes from
+/// its scalar seed input.  Advance it by `batch · vocab` after every
+/// decoded position (all rows, finished or not — the graph does).
+pub fn sampler_base(seed32: u32) -> u32 {
+    seed32.wrapping_mul(0x9E3779B1)
+}
+
+/// One counter-based Gumbel-max draw — op-for-op the fused
+/// `generate_rollout` artifact's in-graph sampler (and
+/// `fixturegen/validate.py::_counter_sample`), so the stepwise and
+/// scheduler decode paths produce bit-identical tokens to the fused
+/// graph under the same seed:
+///
+/// * element `i` of `row` draws `hash_u32(base + row·V + i)`, mapped to
+///   `(0, 1)` via the fixture `(bits >> 8 + 0.5) / 2^24` ladder;
+/// * `score = logits / temperature + gumbel(u)`, with the top-k gate
+///   thresholded on the *raw* logits (k-th largest, ties kept);
+/// * first index wins score ties (the graph reduces max then min-index).
+///
+/// `temperature <= 0` is an explicit greedy request the stochastic graph
+/// cannot express; it keeps the legacy argmax (last index on ties, no
+/// counter consumed) so greedy decodes are unchanged.
+pub fn counter_sample_logits(
+    logits: &[f32],
+    temperature: f32,
+    top_k: usize,
+    base: u32,
+    row: usize,
+) -> usize {
+    assert!(!logits.is_empty());
+    let v = logits.len();
+    if temperature <= 0.0 {
+        let mut best = 0usize;
+        for (i, &x) in logits.iter().enumerate() {
+            if x >= logits[best] {
+                best = i;
+            }
+        }
+        return best;
+    }
+    let thresh = if top_k > 0 && top_k < v {
+        let mut tmp = logits.to_vec();
+        tmp.sort_unstable_by(f32::total_cmp);
+        Some(tmp[v - top_k])
+    } else {
+        None
+    };
+    let row_base = base.wrapping_add((row * v) as u32);
+    let mut best = 0usize;
+    let mut best_score = f32::NEG_INFINITY;
+    for (i, &logit) in logits.iter().enumerate() {
+        if let Some(t) = thresh {
+            if logit < t {
+                continue;
+            }
+        }
+        let bits = hash_u32(row_base.wrapping_add(i as u32));
+        let u = ((bits >> 8) as f32 + 0.5) * (1.0 / 16777216.0);
+        let gum = -(-u.ln()).ln();
+        let score = logit / temperature + gum;
+        if score > best_score {
+            best = i;
+            best_score = score;
+        }
+    }
+    best
+}
+
 fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E3779B97F4A7C15);
     let mut z = *state;
@@ -191,6 +272,66 @@ impl Rng {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn counter_sampler_greedy_keeps_last_max_tie() {
+        // temperature <= 0 is a pure argmax with the same last-index
+        // tie-break the old per-token sampler had; it must ignore the
+        // counter entirely (any base/row give the same pick)
+        let logits = [1.0, 3.0, 3.0, 0.5];
+        assert_eq!(counter_sample_logits(&logits, 0.0, 2, 123, 0), 2);
+        assert_eq!(counter_sample_logits(&logits, 0.0, 2, 999, 7), 2);
+    }
+
+    #[test]
+    fn counter_sampler_is_a_pure_function_of_base_and_row() {
+        let logits = [0.1, -0.4, 2.0, 0.3, 1.1];
+        let a = counter_sample_logits(&logits, 0.8, 3, sampler_base(20), 1);
+        let b = counter_sample_logits(&logits, 0.8, 3, sampler_base(20), 1);
+        assert_eq!(a, b);
+        // a different row of the same step reads a disjoint counter window
+        let c = counter_sample_logits(&logits, 0.8, 3, sampler_base(20), 2);
+        let d = counter_sample_logits(&logits, 0.8, 3, sampler_base(20), 2);
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn counter_sampler_top_k_masks_below_threshold() {
+        // with top_k=1 only the max logit survives the raw-logit
+        // threshold, so the pick is the argmax no matter the gumbel draw
+        let logits = [0.0, 5.0, 1.0, -2.0];
+        for row in 0..8 {
+            assert_eq!(counter_sample_logits(&logits, 1.0, 1, sampler_base(9), row), 1);
+        }
+        // top_k >= vocab disables the mask: every index must be reachable
+        // across enough rows
+        let flat = [0.0f32; 6];
+        let mut seen = [false; 6];
+        for row in 0..512 {
+            seen[counter_sample_logits(&flat, 1.0, 6, sampler_base(77), row)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "seen={seen:?}");
+    }
+
+    #[test]
+    fn counter_sampler_threshold_keeps_logit_ties() {
+        // the top_k threshold is >= on raw logits, so values tied with
+        // the k-th largest stay eligible (mirrors the in-graph compare GE)
+        let logits = [2.0, 2.0, 2.0, -1.0];
+        let mut seen = [false; 4];
+        for row in 0..512 {
+            seen[counter_sample_logits(&logits, 1.0, 2, sampler_base(5), row)] = true;
+        }
+        assert_eq!(seen, [true, true, true, false]);
+    }
+
+    #[test]
+    fn sampler_base_is_the_fixture_seed_mix() {
+        // fixturegen bakes base0 = seed * golden-ratio constant into the
+        // fused rollout graph; the host sampler must mix identically
+        assert_eq!(sampler_base(1), 0x9E3779B1);
+        assert_eq!(sampler_base(2), 0x9E3779B1u32.wrapping_mul(2));
+    }
 
     #[test]
     fn deterministic() {

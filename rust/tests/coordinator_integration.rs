@@ -38,7 +38,10 @@ fn tiny_cfg() -> RunConfig {
         group_size: 4,
         sft_steps: 4,
         temperature: 1.0,
-        top_k: 8,
+        // matches the sampler parameters baked into the fixture sets'
+        // generate_rollout artifact, so controller rollouts take the fused
+        // single-call path
+        top_k: 16,
         ..RunConfig::default()
     }
 }

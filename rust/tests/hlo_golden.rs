@@ -233,6 +233,54 @@ fn tiny_goldens_match_jax_references() {
     run_goldens("tiny");
 }
 
+/// `convert` edge cases pinned against jax semantics.  jax lowers float→int
+/// casts to the same saturating truncation Rust `as` performs: truncate
+/// toward zero, NaN → 0, out-of-range saturates to the integer type's
+/// min/max.  These goldens keep the interpreter from silently drifting to
+/// a wrapping or UB-replicating cast.
+#[test]
+fn convert_edge_cases_match_jax_semantics() {
+    use gcore::runtime::hlo::Program;
+
+    // f32 → u32: jax(np.uint32(...)) gives -1.5→0, NaN→0, 5e9→u32::MAX
+    let text = r#"ENTRY %m (x: f32[6]) -> (u32[6]) {
+  %x = f32[6] parameter(0)
+  %u = u32[6] convert(f32[6] %x)
+  ROOT %t = (u32[6]) tuple(u32[6] %u)
+}
+"#;
+    let p = Program::parse(text).unwrap();
+    let x = Tensor::f32(
+        vec![6],
+        vec![-1.5, f32::NAN, 5e9, 0.0, 42.9, -0.0],
+    );
+    let out = p.evaluate(&[x]).unwrap();
+    let want: [u32; 6] = [0, 0, 4294967295, 0, 42, 0];
+    let got: Vec<u32> = out[0]
+        .raw_bytes()
+        .chunks_exact(4)
+        .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    assert_eq!(got, want, "f32->u32 must saturate like jax (numpy cast)");
+
+    // f32 → s32: -1.5 truncates toward zero to -1, NaN→0, ±overflow
+    // saturates at i32::MIN/MAX
+    let text = r#"ENTRY %m (x: f32[7]) -> (s32[7]) {
+  %x = f32[7] parameter(0)
+  %s = s32[7] convert(f32[7] %x)
+  ROOT %t = (s32[7]) tuple(s32[7] %s)
+}
+"#;
+    let p = Program::parse(text).unwrap();
+    let x = Tensor::f32(
+        vec![7],
+        vec![-1.5, f32::NAN, 5e9, -5e9, 1.9, -0.0, f32::NEG_INFINITY],
+    );
+    let out = p.evaluate(&[x]).unwrap();
+    let want = [-1, 0, i32::MAX, i32::MIN, 1, 0, i32::MIN];
+    assert_eq!(out[0].as_i32().unwrap(), &want, "f32->s32 jax semantics");
+}
+
 /// Re-running an artifact must be bitwise deterministic — the property the
 /// SPMD launch and the greedy-eval tests rely on.
 #[test]

@@ -107,14 +107,14 @@ fn documented_gap_opcode_is_a_structured_unsupported_op() {
     let ds = diags(
         "ENTRY %m (x: f32[2]) -> (f32[2]) {\n  \
          %x = f32[2] parameter(0)\n  \
-         %w = f32[2] sort(f32[2] %x), dimensions={0}\n  \
+         %w = f32[2] conditional(f32[2] %x)\n  \
          ROOT %t = (f32[2]) tuple(f32[2] %w)\n}\n",
     );
     assert_golden(
         &ds,
         DiagKind::UnsupportedOp,
         "w",
-        &["'sort'", "documented op-set gap", "ROADMAP.md"],
+        &["'conditional'", "documented op-set gap", "ROADMAP.md"],
     );
 }
 

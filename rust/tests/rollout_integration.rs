@@ -88,13 +88,62 @@ fn scheduler_matches_stepwise_on_fixture_sets() {
                 );
             }
         }
-        // the public entry point routes through the scheduler on sets
-        // without a fused artifact — same bits as the reference
-        let via_generate =
-            generation::generate(&e, &params, &prompts, &cfg, &mut Rng::new(7)).unwrap();
-        assert_eq!(via_generate.rows, base.rows, "{set} generate()");
-        assert_eq!(via_generate.gen_lens, base.gen_lens, "{set} generate()");
-        assert_eq!(via_generate.masks, base.masks, "{set} generate()");
+        // both fixture sets now ship a fused generate_rollout artifact, so
+        // the public entry point refuses a sampler config that disagrees
+        // with the baked parameters (top_k=8 here vs baked 16) instead of
+        // silently decoding different bits
+        let err = generation::generate(&e, &params, &prompts, &cfg, &mut Rng::new(7))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not match"), "{set}: {err}");
+    }
+}
+
+#[test]
+fn fused_rollout_matches_stepwise_and_scheduler_bit_for_bit() {
+    // The acceptance bar for the fused generate_rollout artifact: one
+    // whole-rollout engine call must reproduce the stepwise
+    // prefill/decode_step reference — and the scheduler — bit for bit
+    // under a fixed rng seed.  All three paths draw exactly one seed word
+    // from the rng per call/wave and share the counter-based sampler.
+    for set in ["tiny", "synthetic"] {
+        let e = engine(set);
+        let baked = e.manifest().sampler.unwrap_or_else(|| {
+            panic!("{set}: regenerated fixture sets must carry a baked sampler block")
+        });
+        assert!(
+            e.manifest().artifacts.contains_key("generate_rollout"),
+            "{set}: fused generate_rollout artifact missing from the manifest"
+        );
+        let params = init_policy(&e, 5).unwrap();
+        let prompts = prompts_for(&e, 3);
+        let cfg = SamplerConfig {
+            temperature: 0.8,
+            top_k: baked.top_k,
+            stop_at_eos: baked.stop_at_eos,
+        };
+        let base =
+            generation::generate_stepwise(&e, &params, &prompts, &cfg, &mut Rng::new(41)).unwrap();
+        // sanity: the run generated something beyond a bare EOS somewhere,
+        // so the equality below is not vacuous
+        assert!(base.gen_lens.iter().any(|&g| g >= 1), "{set}: empty rollout");
+        let fused = generation::generate(&e, &params, &prompts, &cfg, &mut Rng::new(41)).unwrap();
+        assert_eq!(fused.rows, base.rows, "{set} fused vs stepwise rows");
+        assert_eq!(fused.gen_lens, base.gen_lens, "{set} fused vs stepwise gen_lens");
+        assert_eq!(fused.masks, base.masks, "{set} fused vs stepwise masks");
+        let run = rollout::run(
+            &e,
+            &params,
+            &requests(&prompts),
+            &cfg,
+            &mut Rng::new(41),
+            &RolloutOptions::default(),
+        )
+        .unwrap();
+        let sched = as_gen_output(run);
+        assert_eq!(sched.rows, base.rows, "{set} scheduler vs stepwise rows");
+        assert_eq!(sched.gen_lens, base.gen_lens, "{set} scheduler vs stepwise gen_lens");
+        assert_eq!(sched.masks, base.masks, "{set} scheduler vs stepwise masks");
     }
 }
 
